@@ -1,0 +1,113 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): the paper's headline workload —
+//! the **complete regularization path** on a Synthetic-10000-shaped problem
+//! — run through every layer of the system:
+//!
+//!   data substrate → standardization → λ/δ grid planning → warm-started
+//!   stochastic-FW path vs the Glmnet-style CD baseline → paper-style
+//!   metrics (time, iterations, dot products, active features) → CSV.
+//!
+//! ```bash
+//! cargo run --release --example regularization_path [scale]
+//! ```
+//!
+//! `scale` (default 1.0) shrinks the feature count; 1.0 = the paper's
+//! p = 10 000 problem with 100 relevant features.
+
+use sfw_lasso::coordinator::report;
+use sfw_lasso::data::{load, Named};
+use sfw_lasso::path::{run_path, PathConfig, SolverKind};
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::SolveOptions;
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0);
+
+    let ds = load(Named::Synth10k { relevant: 100 }, scale, 42);
+    println!("dataset: {}\n", ds.stats());
+
+    let cfg = PathConfig {
+        n_points: 100,
+        opts: SolveOptions { eps: 1e-3, max_iters: 20_000, ..Default::default() },
+        delta_max: None,
+        track: vec![],
+    };
+
+    // paper §5.1 sampling: confidence-based κ (99%, empirical sparsity est.)
+    let kappa_strategy = SamplingStrategy::Confidence { rho: 0.99, s_est: 124 };
+    println!(
+        "κ = {} (eq. 12, ρ = 0.99) over p = {}\n",
+        kappa_strategy.kappa(ds.cols()),
+        ds.cols()
+    );
+
+    println!("running CD (Glmnet-style) path…");
+    let cd = run_path(&ds, SolverKind::Cd, &cfg);
+    println!("running stochastic-FW path…");
+    let sfw = run_path(&ds, SolverKind::Sfw(kappa_strategy), &cfg);
+
+    // paper-style table
+    print!("\n{}", report::render_table(&ds.name, &[&cd, &sfw]));
+    print!("{}", report::render_speedup_row(cd.seconds, &[&sfw]));
+
+    // loss curves along the path (the paper's Fig-3-style check)
+    println!();
+    print!(
+        "{}",
+        report::ascii_series("CD   train MSE", &cd.points, |p| p.train_mse)
+    );
+    print!(
+        "{}",
+        report::ascii_series("SFW  train MSE", &sfw.points, |p| p.train_mse)
+    );
+    print!(
+        "{}",
+        report::ascii_series("CD   test MSE", &cd.points, |p| p
+            .test_mse
+            .unwrap_or(f64::NAN))
+    );
+    print!(
+        "{}",
+        report::ascii_series("SFW  test MSE", &sfw.points, |p| p
+            .test_mse
+            .unwrap_or(f64::NAN))
+    );
+    print!(
+        "{}",
+        report::ascii_series("CD   active", &cd.points, |p| p.active as f64)
+    );
+    print!(
+        "{}",
+        report::ascii_series("SFW  active", &sfw.points, |p| p.active as f64)
+    );
+
+    // the paper's key claims, checked numerically
+    let best = |pr: &sfw_lasso::path::PathResult| {
+        pr.points
+            .iter()
+            .filter_map(|p| p.test_mse)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let (bc, bs) = (best(&cd), best(&sfw));
+    println!("\nbest test MSE: CD {bc:.4}  SFW {bs:.4}  (ratio {:.3})", bs / bc);
+    println!(
+        "dot products:  CD {:.3e}  SFW {:.3e}  ({:.1}× fewer)",
+        cd.total_dots as f64,
+        sfw.total_dots as f64,
+        cd.total_dots as f64 / sfw.total_dots as f64
+    );
+    println!(
+        "avg active:    CD {:.1}  SFW {:.1}",
+        cd.avg_active(),
+        sfw.avg_active()
+    );
+
+    for (name, pr) in [("cd", &cd), ("sfw", &sfw)] {
+        let f = format!("e2e_path_{name}.csv");
+        if let Ok(p) = report::write_results_file(&f, &report::path_csv(pr, &[])) {
+            println!("wrote {}", p.display());
+        }
+    }
+}

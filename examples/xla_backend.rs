@@ -1,0 +1,96 @@
+//! The three-layer architecture end to end: the same stochastic-FW solve
+//! executed (a) natively in Rust and (b) through the AOT-compiled XLA
+//! artifact (Pallas kernel → JAX graph → HLO text → PJRT CPU), comparing
+//! numerics and per-iteration cost.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_backend
+//! ```
+
+use sfw_lasso::linalg::{ColumnCache, DenseMatrix, Design};
+use sfw_lasso::runtime::{XlaRuntime, XlaSfw};
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::StochasticFw;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // artifacts dir: allow running from the workspace root
+    let dir = ["artifacts", "../artifacts"]
+        .iter()
+        .map(std::path::PathBuf::from)
+        .find(|p| p.join("manifest.json").exists())
+        .expect("run `make artifacts` first");
+
+    let mut rt = XlaRuntime::from_dir(&dir)?;
+    println!("artifacts loaded from {}:", dir.display());
+    for a in &rt.manifest().artifacts {
+        println!("  {:<28} κ={:<6} m={}", a.name, a.kappa, a.m);
+    }
+
+    // dense problem matching the 128×512 artifact: m = 512, κ ≤ 128
+    let (m, p) = (512usize, 240usize);
+    let mut rng = Xoshiro256::seed_from_u64(11);
+    let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+    let mut beta = vec![0.0; p];
+    beta[5] = 2.0;
+    beta[100] = -1.0;
+    let mut y = vec![0.0; m];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.05 * rng.gaussian();
+    }
+    let x = Design::dense(x);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+
+    let delta = 2.5;
+    let strategy = SamplingStrategy::Fraction(0.5); // κ = 120 ≤ 128
+    let opts = SolveOptions { eps: 0.0, max_iters: 400, ..Default::default() };
+
+    // (a) native
+    let mut nat = StochasticFw::new(strategy, opts);
+    let mut st_nat = FwState::zero(p, m);
+    let t0 = std::time::Instant::now();
+    let res_nat = nat.run(&prob, &mut st_nat, delta);
+    let t_nat = t0.elapsed();
+
+    // (b) XLA artifact
+    let mut xla = XlaSfw::new(strategy, opts);
+    let mut st_xla = FwState::zero(p, m);
+    let t1 = std::time::Instant::now();
+    let res_xla = xla.run(&mut rt, &prob, &mut st_xla, delta)?;
+    let t_xla = t1.elapsed();
+
+    let f0 = 0.5 * cache.yty;
+    println!("\n{:<28} {:>14} {:>14}", "", "native", "xla-artifact");
+    println!("{:<28} {:>14} {:>14}", "iterations", res_nat.iters, res_xla.iters);
+    println!(
+        "{:<28} {:>14.6e} {:>14.6e}",
+        "objective", res_nat.objective, res_xla.objective
+    );
+    println!(
+        "{:<28} {:>13.2}% {:>13.2}%",
+        "descent (of f(0))",
+        100.0 * (f0 - res_nat.objective) / f0,
+        100.0 * (f0 - res_xla.objective) / f0
+    );
+    println!(
+        "{:<28} {:>14.2?} {:>14.2?}",
+        "wall-clock (400 iters)", t_nat, t_xla
+    );
+    println!(
+        "{:<28} {:>14} {:>14}",
+        "‖α‖₁",
+        format!("{:.4}", st_nat.l1_norm()),
+        format!("{:.4}", st_xla.l1_norm())
+    );
+    println!(
+        "\nper-XLA-step overhead ≈ {:.1} µs (gather + literal + PJRT dispatch)\n\
+         — the native backend is the production path; the artifact proves the\n\
+         L1/L2 stack end to end (same math, f32).",
+        t_xla.as_micros() as f64 / res_xla.iters as f64
+    );
+    Ok(())
+}

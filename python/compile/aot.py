@@ -1,0 +1,116 @@
+"""AOT entry point: lower the L2 FW-step graph to HLO TEXT artifacts.
+
+HLO *text* (never ``lowered.compile().serialize()`` / serialized protos) is
+the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the pinned xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/README.md.
+
+Usage (invoked once by ``make artifacts``; python never runs at request
+time):
+
+    python -m compile.aot --out-dir ../artifacts \
+        [--shapes 256x200,1024x200,128x512]
+
+Writes one ``fw_step_k{kappa}_m{m}.hlo.txt`` per shape variant plus
+``manifest.json`` describing the I/O contract for the Rust runtime.
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Default shape variants: (kappa, m).
+#  - k194/k372: the paper's section 4.5 / section 5.1 sampling sizes (synthetic sets,
+#    m = 200 training points),
+#  - k1616: synthetic-50000 confidence sampling,
+#  - k128_m512: integration-test shape.
+DEFAULT_SHAPES = [(194, 200), (372, 200), (1616, 200), (128, 512)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifacts(out_dir: str, shapes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for kappa, m in shapes:
+        lowered = model.lower_fw_step(kappa, m)
+        text = to_hlo_text(lowered)
+        name = f"fw_step_k{kappa}_m{m}.hlo.txt"
+        with open(os.path.join(out_dir, name), "w") as fh:
+            fh.write(text)
+        entries.append(
+            {
+                "name": name,
+                "kappa": kappa,
+                "m": m,
+                "inputs": [
+                    {"name": "xs", "shape": [kappa, m], "dtype": "f32"},
+                    {"name": "q", "shape": [m], "dtype": "f32"},
+                    {"name": "sigma_s", "shape": [kappa], "dtype": "f32"},
+                    {"name": "norms_s", "shape": [kappa], "dtype": "f32"},
+                    {"name": "scal", "shape": [3], "dtype": "f32",
+                     "packing": ["S", "F", "delta"]},
+                ],
+                "outputs": [
+                    {"name": "i_local", "dtype": "i32"},
+                    {"name": "g_i", "dtype": "f32"},
+                    {"name": "delta_signed", "dtype": "f32"},
+                    {"name": "lambda", "dtype": "f32"},
+                    {"name": "s_new", "dtype": "f32"},
+                    {"name": "f_new", "dtype": "f32"},
+                ],
+            }
+        )
+    manifest = {"version": 1, "kind": "sfw-lasso-fw-step", "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    return manifest
+
+
+def parse_shapes(text: str):
+    shapes = []
+    for part in text.split(","):
+        k, m = part.strip().split("x")
+        shapes.append((int(k), int(m)))
+    return shapes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="legacy single-artifact alias; implies the directory")
+    ap.add_argument("--shapes", default=None,
+                    help="comma list like 256x200,1024x200")
+    args = ap.parse_args()
+
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    shapes = parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+
+    manifest = build_artifacts(out_dir, shapes)
+    total = sum(
+        os.path.getsize(os.path.join(out_dir, e["name"]))
+        for e in manifest["artifacts"]
+    )
+    print(
+        f"wrote {len(manifest['artifacts'])} artifacts ({total} bytes) "
+        f"+ manifest.json to {out_dir}"
+    )
+
+
+if __name__ == "__main__":
+    main()

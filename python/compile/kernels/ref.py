@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels and the full FW step.
+
+These are the CORRECTNESS ground truth: pytest checks kernels and the L2
+graph against them (``python/tests/``), and the Rust native backend is
+cross-checked against the AOT artifact built from the same graph.
+"""
+
+import jax.numpy as jnp
+
+
+def sampled_corr_ref(xs, q, sigma):
+    """g[i] = z_{S[i]}^T q - sigma[i]  (gradient coordinates over the sample)."""
+    return xs @ q - sigma
+
+
+def abs_argmax_ref(g):
+    """(argmax_i |g_i|, |g|_max)."""
+    i = jnp.argmax(jnp.abs(g))
+    return i, jnp.abs(g)[i]
+
+
+def fw_step_ref(xs, q, sigma_s, norms_s, s, f, delta):
+    """One full stochastic-FW step (paper Algorithm 2 + eq. 8), pure jnp.
+
+    Arguments mirror the AOT artifact contract (see model.py).
+
+    Returns (i_local, g_i, delta_signed, lam, s_new, f_new).
+    """
+    g = sampled_corr_ref(xs, q, sigma_s)
+    i = jnp.argmax(jnp.abs(g))
+    g_i = g[i]
+    delta_signed = -delta * jnp.sign(g_i)
+    sigma_i = sigma_s[i]
+    znorm_i = norms_s[i]
+    g_corr = g_i + sigma_i  # G_i = z_i^T q
+    numer = s - delta_signed * g_i - f
+    denom = s - 2.0 * delta_signed * g_corr + delta_signed**2 * znorm_i
+    lam = jnp.where(denom > 0.0, jnp.clip(numer / denom, 0.0, 1.0), 0.0)
+    one_m = 1.0 - lam
+    s_new = (
+        one_m**2 * s
+        + 2.0 * delta_signed * lam * one_m * g_corr
+        + delta_signed**2 * lam**2 * znorm_i
+    )
+    f_new = one_m * f + delta_signed * lam * sigma_i
+    return i, g_i, delta_signed, lam, s_new, f_new

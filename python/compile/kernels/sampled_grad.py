@@ -1,0 +1,139 @@
+"""L1 Pallas kernels: the stochastic-FW compute hot-spot.
+
+The paper's per-iteration bottleneck is evaluating the sampled gradient
+coordinates and picking the Frank-Wolfe vertex:
+
+    g[i] = grad f(alpha)_{S[i]} = -sigma[S[i]] + z_{S[i]}^T q,
+    i*   = argmax_i |g[i]|                       (paper eq. 9)
+
+With the sampled columns gathered into a dense block ``Xs in R^{kappa x m}``
+this is a (kappa x m) @ (m,) matvec fused with an |.|-argmax reduction.
+
+HARDWARE ADAPTATION (DESIGN.md section 3): the paper targets a single CPU;
+there is no GPU kernel to port. We express the hot spot the TPU way
+instead:
+
+* ``corr_kernel`` streams HBM->VMEM in (BLK_K x BLK_M) tiles via
+  ``BlockSpec``; the inner ``jnp.dot`` maps onto the MXU on real TPUs and
+  accumulates over the m-grid axis into the revisited output block (the
+  canonical Pallas reduction pattern).
+* ``absargmax_kernel`` is a 1-D blocked reduction that keeps the running
+  (max, argmax) pair in the revisited output block, so the argmax costs a
+  single extra pass over VMEM-resident data and never materializes
+  intermediates in HBM.
+
+Both kernels run with ``interpret=True`` everywhere in this repo: the CPU
+PJRT plugin cannot execute Mosaic custom-calls; real-TPU efficiency is
+estimated structurally in DESIGN.md / EXPERIMENTS.md section Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-friendly defaults (multiples of the 128-lane register tiling; the
+# f32 VMEM footprint per grid step is BLK_K*BLK_M*4 + BLK_M*4 + BLK_K*4
+# bytes = 64 KiB + 0.5 KiB + 0.5 KiB with the defaults, far under the
+# ~16 MiB VMEM budget -- leaving room for double buffering).
+BLK_K = 128
+BLK_M = 128
+
+
+def _corr_kernel(xs_ref, q_ref, sigma_ref, o_ref):
+    """One (BLK_K x BLK_M) tile of g = Xs @ q - sigma.
+
+    Grid = (kappa/BLK_K, m/BLK_M); the output block depends only on the
+    first grid axis, so it is revisited along the m axis and used as the
+    accumulator.
+    """
+    mb = pl.program_id(1)
+
+    @pl.when(mb == 0)
+    def _init():
+        o_ref[...] = -sigma_ref[...]
+
+    # (BLK_K, BLK_M) @ (BLK_M,) -> (BLK_K,) partial correlation; MXU work.
+    o_ref[...] += xs_ref[...] @ q_ref[...]
+
+
+def sampled_corr(xs, q, sigma, *, blk_k=BLK_K, blk_m=BLK_M, interpret=True):
+    """g = Xs @ q - sigma via the tiled Pallas kernel.
+
+    Shapes: xs (kappa, m), q (m,), sigma (kappa,) -> g (kappa,).
+    kappa and m are padded to tile multiples (zero padding is exact:
+    padded rows produce g = 0, padded m-columns contribute 0).
+    """
+    kappa, m = xs.shape
+    kp = -(-kappa // blk_k) * blk_k
+    mp = -(-m // blk_m) * blk_m
+    if (kp, mp) != (kappa, m):
+        xs = jnp.pad(xs, ((0, kp - kappa), (0, mp - m)))
+        q = jnp.pad(q, (0, mp - m))
+        sigma = jnp.pad(sigma, (0, kp - kappa))
+
+    g = pl.pallas_call(
+        _corr_kernel,
+        grid=(kp // blk_k, mp // blk_m),
+        in_specs=[
+            pl.BlockSpec((blk_k, blk_m), lambda i, k: (i, k)),
+            pl.BlockSpec((blk_m,), lambda i, k: (k,)),
+            pl.BlockSpec((blk_k,), lambda i, k: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk_k,), lambda i, k: (i,)),
+        out_shape=jax.ShapeDtypeStruct((kp,), xs.dtype),
+        interpret=interpret,
+    )(xs, q, sigma)
+    return g[:kappa]
+
+
+def _absargmax_kernel(g_ref, mask_ref, val_ref, idx_ref, blk: int):
+    """Blocked |.|-argmax: running (max, argmax) kept in revisited outputs."""
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        val_ref[...] = jnp.full_like(val_ref, -1.0)
+        idx_ref[...] = jnp.zeros_like(idx_ref)
+
+    a = jnp.abs(g_ref[...]) * mask_ref[...]
+    local_idx = jnp.argmax(a)
+    local_val = a[local_idx]
+
+    @pl.when(local_val > val_ref[0])
+    def _update():
+        val_ref[0] = local_val
+        idx_ref[0] = (b * blk + local_idx).astype(jnp.int32)
+
+
+def abs_argmax(g, valid, *, blk=BLK_K, interpret=True):
+    """(i*, |g|_max) over the valid prefix, via the blocked Pallas reduction.
+
+    ``valid`` is the number of real (un-padded) entries.
+    Returns (idx int32 scalar, absmax f32 scalar).
+    """
+    n = g.shape[0]
+    np_ = -(-n // blk) * blk
+    mask = (jnp.arange(np_) < valid).astype(g.dtype)
+    if np_ != n:
+        g = jnp.pad(g, (0, np_ - n))
+
+    val, idx = pl.pallas_call(
+        functools.partial(_absargmax_kernel, blk=blk),
+        grid=(np_ // blk,),
+        in_specs=[
+            pl.BlockSpec((blk,), lambda b: (b,)),
+            pl.BlockSpec((blk,), lambda b: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda b: (0,)),
+            pl.BlockSpec((1,), lambda b: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), g.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(g, mask)
+    return idx[0], val[0]

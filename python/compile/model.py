@@ -1,0 +1,79 @@
+"""L2 jax model: one full stochastic-FW iteration as a single jitted graph.
+
+The graph composes the L1 Pallas kernels (sampled correlation + fused
+abs-argmax) with the closed-form line search (paper eq. 8) and the S/F
+recursions, so the whole iteration lowers into ONE HLO module that the
+Rust runtime executes per FW step.
+
+Artifact contract (all f32; shapes fixed per (kappa, m) variant):
+
+inputs:
+  xs      f32[kappa, m]  gathered sampled columns (row i = z_{S[i]})
+  q       f32[m]         current fitted values q = X alpha
+  sigma_s f32[kappa]     sigma over the sample  (z^T y)
+  norms_s f32[kappa]     squared column norms over the sample
+  scal    f32[3]         packed (S, F, delta)
+outputs (tuple):
+  i_local i32[]   argmax index within the sample
+  g_i     f32[]   gradient coordinate at i*
+  dsign   f32[]   delta_signed = -delta * sign(g_i)
+  lam     f32[]   clipped line-search step
+  s_new   f32[]   updated S = ||X alpha||^2
+  f_new   f32[]   updated F = (X alpha)^T y
+
+The Rust side then applies the O(nnz) rank-1 updates natively (alpha_hat,
+q_hat, c) — those touch solver state that lives in Rust.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sampled_grad
+
+
+def fw_step(xs, q, sigma_s, norms_s, scal, *, interpret=True):
+    """One stochastic-FW step. See module docstring for the contract."""
+    s, f, delta = scal[0], scal[1], scal[2]
+
+    # L1 kernels: tiled correlation + blocked abs-argmax
+    g = sampled_grad.sampled_corr(xs, q, sigma_s, interpret=interpret)
+    kappa = xs.shape[0]
+    i_local, _ = sampled_grad.abs_argmax(g, kappa, interpret=interpret)
+
+    g_i = g[i_local]
+    # sign(0) = 0 would zero the vertex; pick +1 arbitrarily (step is a
+    # no-op anyway when g_i == 0 because numer == S - F ... clipped).
+    sgn = jnp.where(g_i >= 0.0, 1.0, -1.0)
+    delta_signed = -delta * sgn
+    sigma_i = sigma_s[i_local]
+    znorm_i = norms_s[i_local]
+    g_corr = g_i + sigma_i  # G_i = z_i^T q
+
+    numer = s - delta_signed * g_i - f
+    denom = s - 2.0 * delta_signed * g_corr + delta_signed * delta_signed * znorm_i
+    lam = jnp.where(denom > 0.0, jnp.clip(numer / denom, 0.0, 1.0), 0.0)
+
+    one_m = 1.0 - lam
+    s_new = (
+        one_m * one_m * s
+        + 2.0 * delta_signed * lam * one_m * g_corr
+        + delta_signed * delta_signed * lam * lam * znorm_i
+    )
+    f_new = one_m * f + delta_signed * lam * sigma_i
+
+    return (
+        i_local.astype(jnp.int32),
+        g_i,
+        delta_signed,
+        lam,
+        s_new,
+        f_new,
+    )
+
+
+def lower_fw_step(kappa: int, m: int):
+    """Lower the jitted step for a concrete (kappa, m) shape variant."""
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)  # noqa: E731
+    return jax.jit(fw_step).lower(
+        spec((kappa, m)), spec((m,)), spec((kappa,)), spec((kappa,)), spec((3,))
+    )

@@ -1,0 +1,80 @@
+//! Criterion-less bench harness (the vendored crate set has no criterion):
+//! warmup + repeated timing with mean/stddev/min, and table/CSV emission.
+//! Used by the `rust/benches/*.rs` targets (all `harness = false`).
+
+use crate::util::timer::Stopwatch;
+
+/// Timing statistics over repeated runs.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub runs: usize,
+}
+
+impl Stats {
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            runs: samples.len(),
+        }
+    }
+
+    pub fn row(&self, label: &str) -> String {
+        format!(
+            "{label:<40} {:>12.6}s ±{:>10.6} (min {:.6}, n={})",
+            self.mean, self.std, self.min, self.runs
+        )
+    }
+}
+
+/// Time `f` with `warmup` unmeasured runs then `runs` measured ones.
+pub fn bench<T>(warmup: usize, runs: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        let sw = Stopwatch::started();
+        std::hint::black_box(f());
+        samples.push(sw.elapsed_secs());
+    }
+    Stats::from_samples(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_from_samples() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.mean, 2.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_measures_something() {
+        let s = bench(1, 3, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert_eq!(s.runs, 3);
+        assert!(s.mean >= 0.0);
+        assert!(s.row("work").contains("work"));
+    }
+}

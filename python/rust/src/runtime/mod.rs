@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and run them from the
+//! Rust hot path. Python never executes at request time — `make artifacts`
+//! runs `python/compile/aot.py` once; this module consumes the text files.
+//!
+//! * [`artifacts`] — `manifest.json` schema + artifact discovery.
+//! * [`engine`] — PJRT CPU client, compile-once executable cache, the
+//!   typed `fw_step` call.
+//! * [`fwstep`] — [`fwstep::XlaSfw`]: a stochastic-FW solver whose vertex
+//!   search *and* line search run inside the XLA executable (the L2 graph),
+//!   with only the rank-1 state updates native. Cross-checked against the
+//!   native solver in `rust/tests/`.
+
+pub mod artifacts;
+pub mod engine;
+pub mod fwstep;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use engine::{FwStepOut, XlaRuntime};
+pub use fwstep::XlaSfw;

@@ -1,0 +1,110 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (divisible and ragged vs the tile sizes) and value
+scales; this is the core correctness signal for the compute layer.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref, sampled_grad
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_case(rng, kappa, m, scale=1.0):
+    xs = rng.standard_normal((kappa, m), dtype=np.float32) * scale
+    q = rng.standard_normal((m,), dtype=np.float32)
+    sigma = rng.standard_normal((kappa,), dtype=np.float32)
+    return jnp.asarray(xs), jnp.asarray(q), jnp.asarray(sigma)
+
+
+@pytest.mark.parametrize(
+    "kappa,m",
+    [
+        (128, 128),  # exactly one tile
+        (256, 384),  # multiple tiles
+        (1, 1),      # degenerate
+        (7, 5),      # ragged, smaller than a tile
+        (130, 257),  # ragged, larger than a tile
+    ],
+)
+def test_sampled_corr_matches_ref(kappa, m):
+    rng = np.random.default_rng(42 + kappa * 1000 + m)
+    xs, q, sigma = make_case(rng, kappa, m)
+    got = sampled_grad.sampled_corr(xs, q, sigma)
+    want = ref.sampled_corr_ref(xs, q, sigma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.given(
+    kappa=st.integers(min_value=1, max_value=300),
+    m=st.integers(min_value=1, max_value=300),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_sampled_corr_hypothesis(kappa, m, seed, scale):
+    rng = np.random.default_rng(seed)
+    xs, q, sigma = make_case(rng, kappa, m, scale)
+    got = sampled_grad.sampled_corr(xs, q, sigma)
+    want = ref.sampled_corr_ref(xs, q, sigma)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4 * scale
+    )
+
+
+@pytest.mark.parametrize("n", [1, 5, 128, 200, 300])
+def test_abs_argmax_matches_ref(n):
+    rng = np.random.default_rng(n)
+    g = jnp.asarray(rng.standard_normal((n,), dtype=np.float32))
+    idx, val = sampled_grad.abs_argmax(g, n)
+    ridx, rval = ref.abs_argmax_ref(g)
+    assert int(idx) == int(ridx)
+    np.testing.assert_allclose(float(val), float(rval), rtol=1e-6)
+
+
+def test_abs_argmax_ignores_padding():
+    # a huge value hidden beyond `valid` must not win
+    g = jnp.asarray(np.array([1.0, -2.0, 100.0], dtype=np.float32))
+    idx, val = sampled_grad.abs_argmax(g, 2)
+    assert int(idx) == 1
+    np.testing.assert_allclose(float(val), 2.0)
+
+
+@hypothesis.given(
+    n=st.integers(min_value=1, max_value=400),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_abs_argmax_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((n,), dtype=np.float32))
+    idx, val = sampled_grad.abs_argmax(g, n)
+    ridx, rval = ref.abs_argmax_ref(g)
+    # ties: accept any index achieving the max
+    np.testing.assert_allclose(float(val), float(rval), rtol=1e-6)
+    np.testing.assert_allclose(
+        abs(float(g[int(idx)])), float(rval), rtol=1e-6
+    )
+    del ridx
+
+
+def test_corr_with_nonstandard_blocks():
+    rng = np.random.default_rng(3)
+    xs, q, sigma = make_case(rng, 96, 160)
+    got = sampled_grad.sampled_corr(xs, q, sigma, blk_k=32, blk_m=64)
+    want = ref.sampled_corr_ref(xs, q, sigma)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_corr_zero_inputs():
+    xs = jnp.zeros((16, 16), jnp.float32)
+    q = jnp.zeros((16,), jnp.float32)
+    sigma = jnp.ones((16,), jnp.float32)
+    g = sampled_grad.sampled_corr(xs, q, sigma)
+    np.testing.assert_allclose(np.asarray(g), -np.ones(16, np.float32))

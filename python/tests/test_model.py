@@ -1,0 +1,129 @@
+"""L2 graph correctness: the full FW step vs the jnp oracle and vs an
+explicit dense-numpy FW implementation (invariant checks)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def make_state(rng, kappa, m, delta=2.0):
+    """Random but *consistent* FW state: q = X alpha for some alpha over the
+    sampled columns, so S/F/sigma relate the way the algorithm maintains."""
+    xs = rng.standard_normal((kappa, m)).astype(np.float32)
+    y = rng.standard_normal((m,)).astype(np.float32)
+    alpha_s = (rng.standard_normal((kappa,)) * 0.1).astype(np.float32)
+    q = xs.T @ alpha_s  # fitted values using sampled columns as the design
+    sigma_s = xs @ y
+    norms_s = (xs * xs).sum(axis=1)
+    s = float(q @ q)
+    f = float(q @ y)
+    scal = np.array([s, f, delta], dtype=np.float32)
+    return (
+        jnp.asarray(xs),
+        jnp.asarray(q),
+        jnp.asarray(sigma_s),
+        jnp.asarray(norms_s),
+        jnp.asarray(scal),
+        y,
+    )
+
+
+@pytest.mark.parametrize("kappa,m", [(8, 16), (64, 200), (130, 50)])
+def test_fw_step_matches_ref(kappa, m):
+    rng = np.random.default_rng(kappa * 7 + m)
+    xs, q, sigma_s, norms_s, scal, _ = make_state(rng, kappa, m)
+    got = model.fw_step(xs, q, sigma_s, norms_s, scal)
+    want = ref.fw_step_ref(xs, q, sigma_s, norms_s, scal[0], scal[1], scal[2])
+    assert int(got[0]) == int(want[0]), "vertex choice differs"
+    for g, w, name in zip(got[1:], want[1:], ["g_i", "dsign", "lam", "s", "f"]):
+        np.testing.assert_allclose(
+            float(g), float(w), rtol=2e-4, atol=1e-5, err_msg=name
+        )
+
+
+@hypothesis.given(
+    kappa=st.integers(min_value=2, max_value=150),
+    m=st.integers(min_value=2, max_value=150),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    delta=st.sampled_from([0.1, 1.0, 10.0]),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_fw_step_invariants(kappa, m, seed, delta):
+    rng = np.random.default_rng(seed)
+    xs, q, sigma_s, norms_s, scal, y = make_state(rng, kappa, m, delta)
+    i_local, g_i, dsign, lam, s_new, f_new = model.fw_step(
+        xs, q, sigma_s, norms_s, scal
+    )
+    # 1. lambda in [0, 1]
+    assert 0.0 <= float(lam) <= 1.0
+    # 2. vertex sign opposes the gradient
+    assert float(dsign) * float(g_i) <= 1e-6
+    # 3. S/F recursions match a direct recomputation of q_new
+    lamf = float(lam)
+    q_new = (1.0 - lamf) * np.asarray(q) + lamf * float(dsign) * np.asarray(
+        xs[int(i_local)]
+    )
+    np.testing.assert_allclose(float(s_new), float(q_new @ q_new), rtol=5e-3, atol=1e-3)
+    np.testing.assert_allclose(float(f_new), float(q_new @ y), rtol=5e-3, atol=1e-3)
+    # 4. objective never increases: f(q) = 0.5*||q - y||^2
+    obj_old = 0.5 * float((np.asarray(q) - y) @ (np.asarray(q) - y))
+    obj_new = 0.5 * float((q_new - y) @ (q_new - y))
+    assert obj_new <= obj_old + 1e-4 * max(1.0, obj_old)
+
+
+def test_fw_step_from_zero_state():
+    # From alpha = 0 (q = 0, S = F = 0): lambda = |g|/(delta*||z||^2) clipped
+    rng = np.random.default_rng(0)
+    kappa, m = 32, 64
+    xs = rng.standard_normal((kappa, m)).astype(np.float32)
+    y = rng.standard_normal((m,)).astype(np.float32)
+    sigma_s = xs @ y
+    norms_s = (xs * xs).sum(axis=1)
+    delta = 0.5
+    scal = jnp.asarray(np.array([0.0, 0.0, delta], np.float32))
+    q = jnp.zeros((m,), jnp.float32)
+    i, g_i, dsign, lam, s_new, f_new = model.fw_step(
+        jnp.asarray(xs), q, jnp.asarray(sigma_s), jnp.asarray(norms_s), scal
+    )
+    i = int(i)
+    expected_i = int(np.argmax(np.abs(-sigma_s)))
+    assert i == expected_i
+    expected_lam = min(
+        1.0, abs(float(sigma_s[i])) / (delta * float(norms_s[i]))
+    )
+    np.testing.assert_allclose(float(lam), expected_lam, rtol=1e-4)
+
+
+def test_lowering_produces_hlo_text():
+    from compile.aot import to_hlo_text
+
+    lowered = model.lower_fw_step(16, 32)
+    text = to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[16,32]" in text
+
+
+def test_manifest_schema(tmp_path):
+    from compile import aot
+
+    manifest = aot.build_artifacts(str(tmp_path), [(8, 16)])
+    assert (tmp_path / "fw_step_k8_m16.hlo.txt").exists()
+    assert (tmp_path / "manifest.json").exists()
+    entry = manifest["artifacts"][0]
+    assert entry["kappa"] == 8 and entry["m"] == 16
+    assert [i["name"] for i in entry["inputs"]] == [
+        "xs",
+        "q",
+        "sigma_s",
+        "norms_s",
+        "scal",
+    ]
+    assert len(entry["outputs"]) == 6

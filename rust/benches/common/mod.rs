@@ -1,0 +1,75 @@
+//! Shared configuration for the paper-reproduction benches.
+//!
+//! Environment knobs (all optional):
+//! * `SFW_BENCH_SCALE` — dataset scale factor (default 0.1; 1.0 = the
+//!   paper's exact shapes; Table 1 sizes scale proportionally),
+//! * `SFW_BENCH_REPS`  — repetitions for stochastic solvers (default 3;
+//!   paper: 10),
+//! * `SFW_BENCH_POINTS` — grid points per path (default 100, as in §5).
+//!
+//! Every bench prints a paper-style table and writes CSV series under
+//! `results/` so the figures can be re-plotted.
+
+#![allow(dead_code)]
+
+use sfw_lasso::path::PathConfig;
+use sfw_lasso::solvers::SolveOptions;
+
+pub fn scale() -> f64 {
+    std::env::var("SFW_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.1)
+}
+
+pub fn reps() -> usize {
+    std::env::var("SFW_BENCH_REPS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3)
+}
+
+pub fn points() -> usize {
+    std::env::var("SFW_BENCH_POINTS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100)
+}
+
+pub fn seed() -> u64 {
+    std::env::var("SFW_BENCH_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(42)
+}
+
+/// The paper's solver options: ε = 1e-3 (scale-free form, DESIGN.md §7).
+/// `patience = 2` on path runs: the paper stops on the first sub-ε step
+/// (patience 1); warm starts across the 100-point grid make occasional
+/// premature stops self-healing, so near-paper patience is safe here
+/// (single-shot solves keep the library default of 10).
+pub fn path_config() -> PathConfig {
+    PathConfig {
+        n_points: points(),
+        opts: SolveOptions {
+            eps: 1e-3,
+            max_iters: 50_000,
+            seed: seed(),
+            patience: 2,
+        },
+        delta_max: None,
+        track: vec![],
+    }
+}
+
+pub fn banner(name: &str, what: &str) {
+    println!("================================================================");
+    println!("{name} — {what}");
+    println!(
+        "scale={} reps={} points={} (SFW_BENCH_SCALE=1.0 for paper-exact sizes)",
+        scale(),
+        reps(),
+        points()
+    );
+    println!("================================================================\n");
+}

@@ -1,0 +1,104 @@
+//! Figures 5 & 6: training and test error (‖α‖₁ vs MSE) along the path on
+//! E2006-tfidf (Fig 5) and E2006-log1p (Fig 6) — baselines (CD, SCD,
+//! SLEP-Reg, SLEP-Const) and stochastic FW at 1%/2%/3%.
+//!
+//! Paper claims: (a) training-error curves of all solvers coincide (the
+//! randomization does not hurt optimization accuracy), (b) test-error
+//! minima coincide (all identify the same best model), (c) the best model
+//! sits at small ‖α‖₁ (sparse models generalize best here).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::coordinator::report;
+use sfw_lasso::data::{load, Named};
+use sfw_lasso::path::{plan_delta_max, run_path, PathResult, SolverKind};
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+
+fn run_figure(fig: &str, named: Named) {
+    let ds = load(named, common::scale(), common::seed());
+    println!("── {fig}: {} ──", ds.stats());
+    let mut cfg = common::path_config();
+    let cache = sfw_lasso::linalg::ColumnCache::build(&ds.x, &ds.y);
+    cfg.delta_max = Some(plan_delta_max(&ds, &cache, cfg.n_points).0);
+
+    let kinds = [
+        SolverKind::Cd,
+        SolverKind::Scd,
+        SolverKind::FistaReg,
+        SolverKind::ApgConst,
+        SolverKind::Sfw(SamplingStrategy::Fraction(0.01)),
+        SolverKind::Sfw(SamplingStrategy::Fraction(0.02)),
+        SolverKind::Sfw(SamplingStrategy::Fraction(0.03)),
+    ];
+    let mut results: Vec<PathResult> = Vec::new();
+    for kind in kinds {
+        results.push(run_path(&ds, kind, &cfg));
+    }
+
+    println!("training error along the path:");
+    for pr in &results {
+        print!(
+            "{}",
+            report::ascii_series(&format!("{} train", pr.solver), &pr.points, |p| p
+                .train_mse)
+        );
+    }
+    println!("\ntest error along the path:");
+    for pr in &results {
+        print!(
+            "{}",
+            report::ascii_series(&format!("{} test", pr.solver), &pr.points, |p| p
+                .test_mse
+                .unwrap_or(f64::NAN))
+        );
+    }
+
+    // claim checks
+    println!("\nbest-model agreement (test-MSE minima):");
+    let cd_best = results[0]
+        .points
+        .iter()
+        .filter_map(|p| p.test_mse)
+        .fold(f64::INFINITY, f64::min);
+    let mut csv = String::from("solver,point,reg,l1_norm,train_mse,test_mse,active\n");
+    for pr in &results {
+        let best = pr
+            .points
+            .iter()
+            .filter_map(|p| p.test_mse)
+            .fold(f64::INFINITY, f64::min);
+        println!("  {:<14} best test MSE {:.6e}  (vs CD ratio {:.4})", pr.solver, best, best / cd_best);
+        for (i, pt) in pr.points.iter().enumerate() {
+            csv.push_str(&format!(
+                "{},{},{},{},{},{},{}\n",
+                pr.solver,
+                i,
+                pt.reg,
+                pt.l1_norm,
+                pt.train_mse,
+                pt.test_mse.unwrap_or(f64::NAN),
+                pt.active
+            ));
+        }
+    }
+    // final training error agreement
+    println!("\nend-of-path training MSE (should coincide across solvers):");
+    for pr in &results {
+        println!(
+            "  {:<14} {:.6e}",
+            pr.solver,
+            pr.points.last().unwrap().train_mse
+        );
+    }
+    let f = format!("{fig}_{}.csv", ds.name);
+    if let Ok(p) = report::write_results_file(&f, &csv) {
+        println!("\nwrote {}\n", p.display());
+    }
+}
+
+fn main() {
+    common::banner("Figures 5–6", "error curves on E2006-tfidf / E2006-log1p, all solvers");
+    run_figure("fig5", Named::E2006Tfidf);
+    run_figure("fig6", Named::E2006Log1p);
+}

@@ -1,0 +1,140 @@
+//! §Perf microbenches: the solver hot kernels in isolation — sampled
+//! gradient search (sparse + dense), rank-1 updates, subset sampling,
+//! ℓ1 projection, and the XLA-artifact step for comparison.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::bench::bench;
+use sfw_lasso::linalg::{ColumnCache, CscMatrix, DenseMatrix, Design};
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::proj::project_l1;
+use sfw_lasso::solvers::sfw::{FwBackend, NativeBackend};
+use sfw_lasso::solvers::Problem;
+use sfw_lasso::util::rng::Xoshiro256;
+
+fn main() {
+    common::banner("kernels", "hot-path microbenches (§Perf)");
+    let mut rng = Xoshiro256::seed_from_u64(1);
+
+    // ---- sparse gradient search: m = 16k docs, column nnz ~ 30
+    {
+        let m = 16_000;
+        let p = 50_000;
+        let x = Design::sparse(CscMatrix::random(m, p, 30.0 / m as f64, &mut rng));
+        let nnz = x.nnz();
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut state = FwState::zero(p, m);
+        // non-trivial state
+        for i in [5usize, 99, 1234] {
+            let g = state.grad_coord(&prob, i);
+            state.step(&prob, 2.0, i, g);
+        }
+        for kappa in [500usize, 1_500, 5_000] {
+            let mut sample = Vec::new();
+            let mut r2 = Xoshiro256::seed_from_u64(2);
+            let mut backend = NativeBackend::new();
+            let stats = bench(3, 20, || {
+                r2.subset(p, kappa, &mut sample);
+                backend.select_vertex(&prob, &state, &sample)
+            });
+            let per_dot = stats.mean / kappa as f64;
+            let nnz_col = nnz as f64 / p as f64;
+            println!(
+                "{}",
+                stats.row(&format!(
+                    "sparse vertex search κ={kappa} (~{nnz_col:.0} nnz/col, {:.1} ns/dot)",
+                    per_dot * 1e9
+                ))
+            );
+        }
+    }
+
+    // ---- dense gradient search: m = 200 (synthetic regime)
+    {
+        let m = 200;
+        let p = 50_000;
+        let x = Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()));
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let state = FwState::zero(p, m);
+        for kappa in [372usize, 1_616] {
+            let mut sample = Vec::new();
+            let mut r2 = Xoshiro256::seed_from_u64(3);
+            let mut backend = NativeBackend::new();
+            let stats = bench(3, 50, || {
+                r2.subset(p, kappa, &mut sample);
+                backend.select_vertex(&prob, &state, &sample)
+            });
+            let gb = (kappa * m * 4) as f64 / stats.mean / 1e9;
+            println!(
+                "{}",
+                stats.row(&format!("dense vertex search κ={kappa} m={m} ({gb:.1} GB/s)"))
+            );
+        }
+    }
+
+    // ---- rank-1 FW update (step) on sparse columns
+    {
+        let m = 16_000;
+        let p = 20_000;
+        let x = Design::sparse(CscMatrix::random(m, p, 30.0 / m as f64, &mut rng));
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut state = FwState::zero(p, m);
+        let mut i = 0usize;
+        let stats = bench(100, 10_000, || {
+            i = (i + 37) % p;
+            let g = state.grad_coord(&prob, i);
+            state.step(&prob, 5.0, i, g)
+        });
+        println!("{}", stats.row("FW step (grad_coord + rank-1 update), sparse"));
+    }
+
+    // ---- subset sampling: sorted-vec Floyd (before) vs epoch-stamped (after)
+    {
+        use sfw_lasso::util::rng::SubsetSampler;
+        let mut r2 = Xoshiro256::seed_from_u64(5);
+        let mut out = Vec::new();
+        for (p, k) in [(4_272_227usize, 42_723usize), (150_360, 1_504), (10_000, 372)] {
+            let stats = bench(3, 20, || r2.subset(p, k, &mut out));
+            println!(
+                "{}",
+                stats.row(&format!(
+                    "subset κ={k} of p={p} sorted-vec Floyd ({:.1} ns/draw)",
+                    stats.mean / k as f64 * 1e9
+                ))
+            );
+            let mut s = SubsetSampler::new(p);
+            let stats = bench(3, 20, || s.sample(&mut r2, k, &mut out));
+            println!(
+                "{}",
+                stats.row(&format!(
+                    "subset κ={k} of p={p} epoch-stamped   ({:.1} ns/draw)",
+                    stats.mean / k as f64 * 1e9
+                ))
+            );
+        }
+    }
+
+    // ---- l1 projection (APG kernel)
+    {
+        let mut r2 = Xoshiro256::seed_from_u64(7);
+        for p in [150_360usize, 1_000_000] {
+            let v: Vec<f64> = (0..p).map(|_| r2.gaussian()).collect();
+            let mut buf = v.clone();
+            let stats = bench(2, 20, || {
+                buf.copy_from_slice(&v);
+                project_l1(&mut buf, 10.0);
+            });
+            println!("{}", stats.row(&format!("l1 projection p={p}")));
+        }
+    }
+
+    println!("\nroofline notes: a sparse dot at ~30 nnz/col is latency-bound (gather);");
+    println!("the dense search should approach memory bandwidth (~10+ GB/s).");
+}

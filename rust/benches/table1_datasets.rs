@@ -1,0 +1,64 @@
+//! Table 1: the benchmark-dataset inventory — builds every problem at the
+//! configured scale and prints (m, t, p, nnz) plus generation time, so the
+//! table can be compared against the paper's line by line.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::data::{load, Named};
+use sfw_lasso::util::timer::Stopwatch;
+
+fn main() {
+    common::banner("Table 1", "benchmark datasets");
+    println!(
+        "{:<18} {:>8} {:>8} {:>10} {:>12} {:>10}",
+        "Dataset", "m", "t", "p", "nnz", "gen time"
+    );
+    // paper-exact reference values at scale 1.0
+    let paper: &[(&str, usize, usize, usize)] = &[
+        ("synth-10000-32", 200, 200, 10_000),
+        ("synth-10000-100", 200, 200, 10_000),
+        ("synth-50000-158", 200, 200, 50_000),
+        ("synth-50000-500", 200, 200, 50_000),
+        ("pyrim", 74, 0, 201_376),
+        ("triazines", 186, 0, 635_376),
+        ("e2006-tfidf", 16_087, 3_308, 150_360),
+        ("e2006-log1p", 16_087, 3_308, 4_272_227),
+    ];
+    let mut rows = String::from("dataset,m,t,p,nnz,gen_seconds\n");
+    for (i, name) in Named::all_names().iter().enumerate() {
+        let sw = Stopwatch::started();
+        let ds = load(Named::parse(name).unwrap(), common::scale(), common::seed());
+        let secs = sw.elapsed_secs();
+        let t = ds.y_test.as_ref().map(|v| v.len()).unwrap_or(0);
+        println!(
+            "{:<18} {:>8} {:>8} {:>10} {:>12} {:>9.2}s",
+            ds.name,
+            ds.rows(),
+            t,
+            ds.cols(),
+            ds.x.nnz(),
+            secs
+        );
+        rows.push_str(&format!(
+            "{},{},{},{},{},{}\n",
+            ds.name,
+            ds.rows(),
+            t,
+            ds.cols(),
+            ds.x.nnz(),
+            secs
+        ));
+        let (pn, pm, pt, pp) = (paper[i].0, paper[i].1, paper[i].2, paper[i].3);
+        let _ = (pn, pm, pt, pp);
+    }
+    println!("\npaper (scale 1.0):");
+    for &(n, m, t, p) in paper {
+        println!("{n:<18} {m:>8} {t:>8} {p:>10}");
+    }
+    if let Ok(p) =
+        sfw_lasso::coordinator::report::write_results_file("table1_datasets.csv", &rows)
+    {
+        println!("\nwrote {}", p.display());
+    }
+}

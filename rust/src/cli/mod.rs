@@ -1,0 +1,437 @@
+//! Command-line parsing substrate (no `clap` in the vendored crate set).
+//!
+//! Declarative-enough model: an [`App`] owns a list of [`Cmd`]s; each `Cmd`
+//! declares its flags/options/positionals, and parsing produces a
+//! [`Matches`] bag with typed accessors. `--help` is generated.
+//!
+//! ```no_run
+//! use sfw_lasso::cli::{App, Cmd, Arg};
+//! let app = App::new("sfw-lasso", "Stochastic Frank-Wolfe Lasso solver")
+//!     .cmd(Cmd::new("solve", "solve one Lasso instance")
+//!         .arg(Arg::opt("dataset", 'd', "DATASET", "dataset name").required())
+//!         .arg(Arg::opt("delta", 'D', "FLOAT", "l1 budget").default("1.0"))
+//!         .arg(Arg::flag("verbose", 'v', "verbose logging")));
+//! let m = app.parse(std::env::args().skip(1)).unwrap();
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Kind of argument.
+#[derive(Clone, Debug, PartialEq)]
+enum ArgKind {
+    /// boolean `--flag` / `-f`
+    Flag,
+    /// `--name VALUE` / `-n VALUE` / `--name=VALUE`
+    Opt { value_name: String, default: Option<String>, required: bool },
+    /// positional
+    Pos { value_name: String, required: bool },
+}
+
+/// One declared argument.
+#[derive(Clone, Debug)]
+pub struct Arg {
+    name: String,
+    short: Option<char>,
+    help: String,
+    kind: ArgKind,
+}
+
+impl Arg {
+    pub fn flag(name: &str, short: char, help: &str) -> Arg {
+        Arg {
+            name: name.into(),
+            short: (short != '\0').then_some(short),
+            help: help.into(),
+            kind: ArgKind::Flag,
+        }
+    }
+
+    pub fn opt(name: &str, short: char, value_name: &str, help: &str) -> Arg {
+        Arg {
+            name: name.into(),
+            short: (short != '\0').then_some(short),
+            help: help.into(),
+            kind: ArgKind::Opt {
+                value_name: value_name.into(),
+                default: None,
+                required: false,
+            },
+        }
+    }
+
+    pub fn pos(name: &str, help: &str) -> Arg {
+        Arg {
+            name: name.into(),
+            short: None,
+            help: help.into(),
+            kind: ArgKind::Pos { value_name: name.to_uppercase(), required: false },
+        }
+    }
+
+    pub fn required(mut self) -> Arg {
+        match &mut self.kind {
+            ArgKind::Opt { required, .. } | ArgKind::Pos { required, .. } => *required = true,
+            ArgKind::Flag => panic!("flags cannot be required"),
+        }
+        self
+    }
+
+    pub fn default(mut self, v: &str) -> Arg {
+        match &mut self.kind {
+            ArgKind::Opt { default, .. } => *default = Some(v.to_string()),
+            _ => panic!("only options take defaults"),
+        }
+        self
+    }
+}
+
+/// One subcommand.
+#[derive(Clone, Debug)]
+pub struct Cmd {
+    pub name: String,
+    pub about: String,
+    args: Vec<Arg>,
+}
+
+impl Cmd {
+    pub fn new(name: &str, about: &str) -> Cmd {
+        Cmd { name: name.into(), about: about.into(), args: Vec::new() }
+    }
+
+    pub fn arg(mut self, a: Arg) -> Cmd {
+        self.args.push(a);
+        self
+    }
+
+    fn usage(&self, app_name: &str) -> String {
+        let mut s = format!("{}\n\nUSAGE:\n  {} {}", self.about, app_name, self.name);
+        for a in &self.args {
+            match &a.kind {
+                ArgKind::Pos { value_name, required: true } => {
+                    s.push_str(&format!(" <{value_name}>"))
+                }
+                ArgKind::Pos { value_name, required: false } => {
+                    s.push_str(&format!(" [{value_name}]"))
+                }
+                _ => {}
+            }
+        }
+        s.push_str(" [OPTIONS]\n\nOPTIONS:\n");
+        for a in &self.args {
+            let lhs = match (&a.kind, a.short) {
+                (ArgKind::Flag, Some(c)) => format!("-{c}, --{}", a.name),
+                (ArgKind::Flag, None) => format!("    --{}", a.name),
+                (ArgKind::Opt { value_name, .. }, Some(c)) => {
+                    format!("-{c}, --{} <{value_name}>", a.name)
+                }
+                (ArgKind::Opt { value_name, .. }, None) => {
+                    format!("    --{} <{value_name}>", a.name)
+                }
+                (ArgKind::Pos { value_name, .. }, _) => format!("<{value_name}>"),
+            };
+            let extra = match &a.kind {
+                ArgKind::Opt { default: Some(d), .. } => format!(" [default: {d}]"),
+                ArgKind::Opt { required: true, .. } => " [required]".to_string(),
+                _ => String::new(),
+            };
+            s.push_str(&format!("  {lhs:<34} {}{extra}\n", a.help));
+        }
+        s
+    }
+}
+
+/// Parsed result for one subcommand.
+#[derive(Debug)]
+pub struct Matches {
+    pub cmd: String,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Matches {
+    pub fn flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str) -> &str {
+        self.get(name)
+            .unwrap_or_else(|| panic!("missing required arg --{name} (declare a default?)"))
+    }
+
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &str) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(name)
+            .ok_or_else(|| format!("missing value for --{name}"))?;
+        raw.parse::<T>()
+            .map_err(|e| format!("invalid value '{raw}' for --{name}: {e}"))
+    }
+
+    pub fn usize(&self, name: &str) -> Result<usize, String> {
+        self.parse_as(name)
+    }
+
+    pub fn f64(&self, name: &str) -> Result<f64, String> {
+        self.parse_as(name)
+    }
+
+    pub fn u64(&self, name: &str) -> Result<u64, String> {
+        self.parse_as(name)
+    }
+}
+
+/// Outcome of `App::parse`.
+#[derive(Debug)]
+pub enum Parsed {
+    /// A subcommand matched.
+    Run(Matches),
+    /// `--help`/`help` was requested; the string is the text to print.
+    Help(String),
+}
+
+/// The application: a set of subcommands.
+pub struct App {
+    name: String,
+    about: String,
+    cmds: Vec<Cmd>,
+}
+
+impl App {
+    pub fn new(name: &str, about: &str) -> App {
+        App { name: name.into(), about: about.into(), cmds: Vec::new() }
+    }
+
+    pub fn cmd(mut self, c: Cmd) -> App {
+        self.cmds.push(c);
+        self
+    }
+
+    fn top_help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} <COMMAND> [OPTIONS]\n\nCOMMANDS:\n",
+            self.name, self.about, self.name);
+        for c in &self.cmds {
+            s.push_str(&format!("  {:<24} {}\n", c.name, c.about));
+        }
+        s.push_str("\nRun '");
+        s.push_str(&self.name);
+        s.push_str(" <COMMAND> --help' for command options.\n");
+        s
+    }
+
+    /// Parse an iterator of args (NOT including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(&self, args: I) -> Result<Parsed, String> {
+        let mut it = args.into_iter().peekable();
+        let first = match it.next() {
+            None => return Ok(Parsed::Help(self.top_help())),
+            Some(f) => f,
+        };
+        if first == "--help" || first == "-h" || first == "help" {
+            return Ok(Parsed::Help(self.top_help()));
+        }
+        let cmd = self
+            .cmds
+            .iter()
+            .find(|c| c.name == first)
+            .ok_or_else(|| format!("unknown command '{first}'; try --help"))?;
+
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let positionals: Vec<&Arg> = cmd
+            .args
+            .iter()
+            .filter(|a| matches!(a.kind, ArgKind::Pos { .. }))
+            .collect();
+        let mut pos_idx = 0usize;
+
+        // seed defaults
+        for a in &cmd.args {
+            if let ArgKind::Opt { default: Some(d), .. } = &a.kind {
+                values.insert(a.name.clone(), d.clone());
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Ok(Parsed::Help(cmd.usage(&self.name)));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let arg = cmd
+                    .args
+                    .iter()
+                    .find(|a| a.name == name)
+                    .ok_or_else(|| format!("unknown option --{name} for '{}'", cmd.name))?;
+                match &arg.kind {
+                    ArgKind::Flag => {
+                        if inline.is_some() {
+                            return Err(format!("flag --{name} takes no value"));
+                        }
+                        flags.insert(name, true);
+                    }
+                    ArgKind::Opt { .. } => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| format!("option --{name} needs a value"))?,
+                        };
+                        values.insert(name, v);
+                    }
+                    ArgKind::Pos { .. } => {
+                        return Err(format!("--{name} is positional; pass it bare"))
+                    }
+                }
+            } else if let Some(short) = tok.strip_prefix('-').filter(|s| !s.is_empty()) {
+                let mut chars = short.chars();
+                let c = chars.next().unwrap();
+                let arg = cmd
+                    .args
+                    .iter()
+                    .find(|a| a.short == Some(c))
+                    .ok_or_else(|| format!("unknown option -{c} for '{}'", cmd.name))?;
+                match &arg.kind {
+                    ArgKind::Flag => {
+                        flags.insert(arg.name.clone(), true);
+                        // allow grouped flags like -vq
+                        for c2 in chars {
+                            let a2 = cmd
+                                .args
+                                .iter()
+                                .find(|a| a.short == Some(c2) && a.kind == ArgKind::Flag)
+                                .ok_or_else(|| format!("unknown grouped flag -{c2}"))?;
+                            flags.insert(a2.name.clone(), true);
+                        }
+                    }
+                    ArgKind::Opt { .. } => {
+                        let rest: String = chars.collect();
+                        let v = if !rest.is_empty() {
+                            rest
+                        } else {
+                            it.next().ok_or_else(|| format!("option -{c} needs a value"))?
+                        };
+                        values.insert(arg.name.clone(), v);
+                    }
+                    ArgKind::Pos { .. } => unreachable!("positionals have no short"),
+                }
+            } else {
+                // positional
+                let arg = positionals
+                    .get(pos_idx)
+                    .ok_or_else(|| format!("unexpected positional argument '{tok}'"))?;
+                values.insert(arg.name.clone(), tok);
+                pos_idx += 1;
+            }
+        }
+
+        // required check
+        for a in &cmd.args {
+            let req = matches!(
+                a.kind,
+                ArgKind::Opt { required: true, .. } | ArgKind::Pos { required: true, .. }
+            );
+            if req && !values.contains_key(&a.name) {
+                return Err(format!("missing required argument --{}", a.name));
+            }
+        }
+
+        Ok(Parsed::Run(Matches { cmd: cmd.name.clone(), values, flags }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_app() -> App {
+        App::new("demo", "demo app")
+            .cmd(
+                Cmd::new("solve", "solve something")
+                    .arg(Arg::opt("dataset", 'd', "NAME", "dataset").required())
+                    .arg(Arg::opt("delta", '\0', "FLOAT", "budget").default("2.5"))
+                    .arg(Arg::flag("verbose", 'v', "verbose"))
+                    .arg(Arg::flag("quiet", 'q', "quiet"))
+                    .arg(Arg::pos("out", "output file")),
+            )
+            .cmd(Cmd::new("list", "list things"))
+    }
+
+    fn run(args: &[&str]) -> Result<Parsed, String> {
+        demo_app().parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_long_and_short_options() {
+        let Parsed::Run(m) = run(&["solve", "--dataset", "synth", "-v"]).unwrap() else {
+            panic!("expected run");
+        };
+        assert_eq!(m.cmd, "solve");
+        assert_eq!(m.str("dataset"), "synth");
+        assert!(m.flag("verbose"));
+        assert!(!m.flag("quiet"));
+        assert_eq!(m.f64("delta").unwrap(), 2.5); // default applied
+    }
+
+    #[test]
+    fn parses_equals_and_inline_short() {
+        let Parsed::Run(m) = run(&["solve", "--dataset=e2006", "-dxyz"]).unwrap() else {
+            panic!()
+        };
+        // later value wins
+        assert_eq!(m.str("dataset"), "xyz");
+    }
+
+    #[test]
+    fn grouped_flags() {
+        let Parsed::Run(m) = run(&["solve", "--dataset", "s", "-vq"]).unwrap() else {
+            panic!()
+        };
+        assert!(m.flag("verbose") && m.flag("quiet"));
+    }
+
+    #[test]
+    fn positional_capture() {
+        let Parsed::Run(m) = run(&["solve", "--dataset", "s", "result.csv"]).unwrap() else {
+            panic!()
+        };
+        assert_eq!(m.str("out"), "result.csv");
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(run(&["solve"]).is_err());
+    }
+
+    #[test]
+    fn unknown_command_and_option_error() {
+        assert!(run(&["frobnicate"]).is_err());
+        assert!(run(&["solve", "--dataset", "s", "--nope"]).is_err());
+    }
+
+    #[test]
+    fn help_paths() {
+        assert!(matches!(run(&[]).unwrap(), Parsed::Help(_)));
+        assert!(matches!(run(&["--help"]).unwrap(), Parsed::Help(_)));
+        let Parsed::Help(h) = run(&["solve", "--help"]).unwrap() else { panic!() };
+        assert!(h.contains("--dataset"));
+        assert!(h.contains("[default: 2.5]"));
+    }
+
+    #[test]
+    fn typed_accessor_errors_are_descriptive() {
+        let Parsed::Run(m) = run(&["solve", "--dataset", "s", "--delta", "abc"]).unwrap()
+        else {
+            panic!()
+        };
+        let err = m.f64("delta").unwrap_err();
+        assert!(err.contains("abc"));
+    }
+}

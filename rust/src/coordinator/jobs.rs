@@ -1,0 +1,179 @@
+//! Experiment jobs: dataset × solver × repetition cells executed on a
+//! worker pool.
+//!
+//! Stochastic rows of Table 5 are averaged over `reps` runs (the paper
+//! averages 10); deterministic solvers run once. Each cell reuses the
+//! shared dataset (read-only) and runs on its own thread.
+
+use crate::data::Dataset;
+use crate::path::{run_path, PathConfig, PathResult, SolverKind};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One unit of work: a solver (with repetition index) on a dataset.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub dataset_idx: usize,
+    pub kind: SolverKind,
+    pub rep: usize,
+}
+
+/// A full experiment: shared datasets + the cells to run.
+pub struct Experiment {
+    pub datasets: Vec<Dataset>,
+    pub cells: Vec<Cell>,
+    pub config: PathConfig,
+    /// worker threads (cells run concurrently; each cell single-threaded)
+    pub threads: usize,
+}
+
+impl Experiment {
+    /// Cross product helper: every solver on every dataset, with `reps`
+    /// repetitions for stochastic solvers and 1 for deterministic ones.
+    pub fn cross(
+        datasets: Vec<Dataset>,
+        solvers: &[SolverKind],
+        reps: usize,
+        config: PathConfig,
+    ) -> Self {
+        let mut cells = Vec::new();
+        for d in 0..datasets.len() {
+            for &kind in solvers {
+                let r = if is_stochastic(kind) { reps.max(1) } else { 1 };
+                for rep in 0..r {
+                    cells.push(Cell { dataset_idx: d, kind, rep });
+                }
+            }
+        }
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self { datasets, cells, config, threads }
+    }
+}
+
+fn is_stochastic(kind: SolverKind) -> bool {
+    matches!(kind, SolverKind::Scd | SolverKind::Sfw(_))
+}
+
+/// Run all cells; results come back in cell order.
+pub fn run_experiment(exp: &Experiment) -> Vec<PathResult> {
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<PathResult>>> =
+        (0..exp.cells.len()).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..exp.threads.min(exp.cells.len()).max(1) {
+            scope.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= exp.cells.len() {
+                    break;
+                }
+                let cell = &exp.cells[idx];
+                let ds = &exp.datasets[cell.dataset_idx];
+                let mut cfg = exp.config.clone();
+                // decorrelate stochastic repetitions
+                cfg.opts.seed = cfg
+                    .opts
+                    .seed
+                    .wrapping_add(cell.rep as u64)
+                    .wrapping_mul(0x9E3779B97F4A7C15 | 1);
+                let res = run_path(ds, cell.kind, &cfg);
+                *results[idx].lock().unwrap() = Some(res);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell not executed"))
+        .collect()
+}
+
+/// Average the repeated runs of a stochastic solver into one summary
+/// (times/iters/dots averaged; per-point metrics from the first rep,
+/// which is what the paper's figures show).
+pub fn average_reps(mut runs: Vec<PathResult>) -> PathResult {
+    assert!(!runs.is_empty());
+    let n = runs.len() as f64;
+    let seconds = runs.iter().map(|r| r.seconds).sum::<f64>() / n;
+    let iters = (runs.iter().map(|r| r.total_iters).sum::<u64>() as f64 / n) as u64;
+    let dots = (runs.iter().map(|r| r.total_dots).sum::<u64>() as f64 / n) as u64;
+    // average per-point active counts too (Table 5 reports path averages)
+    let n_points = runs[0].points.len();
+    let mut first = runs.remove(0);
+    for pt_idx in 0..n_points {
+        let mut active_sum = first.points[pt_idx].active as f64;
+        for other in &runs {
+            active_sum += other.points[pt_idx].active as f64;
+        }
+        first.points[pt_idx].active = (active_sum / n).round() as usize;
+    }
+    first.seconds = seconds;
+    first.total_iters = iters;
+    first.total_dots = dots;
+    first
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{load, Named};
+    use crate::solvers::sampling::SamplingStrategy;
+    use crate::solvers::SolveOptions;
+
+    fn tiny_exp(solvers: &[SolverKind], reps: usize) -> Experiment {
+        let ds = load(Named::Synth10k { relevant: 32 }, 0.005, 1); // p = 50
+        Experiment::cross(
+            vec![ds],
+            solvers,
+            reps,
+            PathConfig {
+                n_points: 6,
+                opts: SolveOptions {
+                    eps: 1e-3,
+                    max_iters: 1_000,
+                    ..Default::default()
+                },
+                delta_max: None,
+                track: vec![],
+            },
+        )
+    }
+
+    #[test]
+    fn cross_expands_stochastic_reps_only() {
+        let exp = tiny_exp(
+            &[SolverKind::Cd, SolverKind::Sfw(SamplingStrategy::Fraction(0.5))],
+            3,
+        );
+        // 1 CD cell + 3 SFW cells
+        assert_eq!(exp.cells.len(), 4);
+    }
+
+    #[test]
+    fn run_experiment_returns_in_order() {
+        let exp = tiny_exp(
+            &[SolverKind::Cd, SolverKind::Sfw(SamplingStrategy::Fraction(0.5))],
+            2,
+        );
+        let results = run_experiment(&exp);
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].solver, "CD");
+        assert_eq!(results[1].solver, "FW 50%");
+        assert_eq!(results[2].solver, "FW 50%");
+        // reps used different seeds → (almost surely) different dot counts
+        // (they may coincide; just check both produced full paths)
+        assert_eq!(results[1].points.len(), 6);
+        assert_eq!(results[2].points.len(), 6);
+    }
+
+    #[test]
+    fn average_reps_combines() {
+        let exp = tiny_exp(&[SolverKind::Sfw(SamplingStrategy::Fraction(0.5))], 3);
+        let results = run_experiment(&exp);
+        let avg = average_reps(results);
+        assert_eq!(avg.points.len(), 6);
+        assert!(avg.seconds > 0.0);
+    }
+}

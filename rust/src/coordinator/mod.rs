@@ -1,0 +1,15 @@
+//! L3 coordinator: experiment jobs, a worker pool over path runs, and the
+//! report renderers that regenerate the paper's tables and figures.
+//!
+//! A bench invocation builds a [`jobs::Experiment`] (a set of
+//! dataset × solver × repetition cells), the coordinator fans the cells out
+//! over OS threads (each path run is single-threaded and self-contained,
+//! matching the paper's single-core timing discipline — parallelism is
+//! across cells only), and [`report`] renders the collected
+//! [`crate::path::PathResult`]s as paper-style text tables plus CSV series
+//! under `results/`.
+
+pub mod jobs;
+pub mod report;
+
+pub use jobs::{run_experiment, Cell, Experiment};

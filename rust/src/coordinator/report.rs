@@ -1,0 +1,230 @@
+//! Report renderers: paper-style text tables and CSV series.
+//!
+//! Every bench prints a table shaped like the paper's (so the comparison is
+//! eyeball-able) and writes the raw series to `results/*.csv` for plotting.
+
+use crate::path::{PathPoint, PathResult};
+use crate::util::json::Json;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render a Table-4/5-style block: one column per solver, the paper's four
+/// metrics as rows, one block per dataset.
+pub fn render_table(dataset: &str, results: &[&PathResult]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "── {dataset} ──");
+    let _ = write!(s, "{:<16}", "");
+    for r in results {
+        let _ = write!(s, "{:>14}", r.solver);
+    }
+    s.push('\n');
+    let _ = write!(s, "{:<16}", "Time (s)");
+    for r in results {
+        let _ = write!(s, "{:>14}", format!("{:.2e}", r.seconds));
+    }
+    s.push('\n');
+    let _ = write!(s, "{:<16}", "Iterations");
+    for r in results {
+        let _ = write!(s, "{:>14}", format!("{:.2e}", r.total_iters as f64));
+    }
+    s.push('\n');
+    let _ = write!(s, "{:<16}", "Dot products");
+    for r in results {
+        let _ = write!(s, "{:>14}", format!("{:.2e}", r.total_dots as f64));
+    }
+    s.push('\n');
+    let _ = write!(s, "{:<16}", "Active features");
+    for r in results {
+        let _ = write!(s, "{:>14}", format!("{:.1}", r.avg_active()));
+    }
+    s.push('\n');
+    s
+}
+
+/// Add the Table-5 speedup row (vs. a baseline time).
+pub fn render_speedup_row(baseline_seconds: f64, results: &[&PathResult]) -> String {
+    let mut s = String::new();
+    let _ = write!(s, "{:<16}", "Speed-up vs CD");
+    for r in results {
+        let _ = write!(
+            s,
+            "{:>14}",
+            format!("{:.1}x", baseline_seconds / r.seconds.max(1e-12))
+        );
+    }
+    s.push('\n');
+    s
+}
+
+/// CSV of per-point series: one row per grid point.
+/// Columns: reg, l1_norm, active, train_mse, test_mse, iters, dots[, tracked...]
+pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
+    let mut s = String::from("reg,l1_norm,active,train_mse,test_mse,iters,dots");
+    for name in tracked_names {
+        let _ = write!(s, ",{name}");
+    }
+    s.push('\n');
+    for pt in &r.points {
+        let _ = write!(
+            s,
+            "{},{},{},{},{},{},{}",
+            pt.reg,
+            pt.l1_norm,
+            pt.active,
+            pt.train_mse,
+            pt.test_mse.map(|v| v.to_string()).unwrap_or_default(),
+            pt.iters,
+            pt.dots
+        );
+        for c in &pt.tracked_coefs {
+            let _ = write!(s, ",{c}");
+        }
+        s.push('\n');
+    }
+    s
+}
+
+/// Machine-readable summary (JSON) of a set of results.
+pub fn summary_json(results: &[&PathResult]) -> Json {
+    Json::Arr(
+        results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("solver", Json::Str(r.solver.clone())),
+                    ("dataset", Json::Str(r.dataset.clone())),
+                    ("seconds", Json::Num(r.seconds)),
+                    ("iterations", Json::Num(r.total_iters as f64)),
+                    ("dot_products", Json::Num(r.total_dots as f64)),
+                    ("avg_active", Json::Num(r.avg_active())),
+                    ("n_points", Json::Num(r.points.len() as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Write a string to `results/<name>` (creating the directory).
+pub fn write_results_file(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// `results/` next to the workspace root (env override: `SFW_RESULTS_DIR`).
+pub fn results_dir() -> std::path::PathBuf {
+    std::env::var("SFW_RESULTS_DIR")
+        .map(Into::into)
+        .unwrap_or_else(|_| Path::new("results").to_path_buf())
+}
+
+/// Pretty-print a ‖α‖₁-indexed sparsity/error series as an ASCII sparkline
+/// block (quick eyeballing of Figs 3–6 without plotting tools).
+pub fn ascii_series(label: &str, points: &[PathPoint], f: impl Fn(&PathPoint) -> f64) -> String {
+    const BARS: &[char] = &['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let vals: Vec<f64> = points.iter().map(f).collect();
+    let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &v in &vals {
+        if v.is_finite() {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+    }
+    let mut s = format!("{label:<24} ");
+    if !lo.is_finite() || hi <= lo {
+        s.push_str("(flat)");
+        s.push('\n');
+        return s;
+    }
+    for &v in &vals {
+        let t = ((v - lo) / (hi - lo) * (BARS.len() - 1) as f64).round() as usize;
+        s.push(BARS[t.min(BARS.len() - 1)]);
+    }
+    let _ = write!(s, "  [{lo:.3e} … {hi:.3e}]");
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_result(solver: &str, secs: f64) -> PathResult {
+        PathResult {
+            solver: solver.into(),
+            dataset: "ds".into(),
+            points: (0..5)
+                .map(|k| PathPoint {
+                    reg: k as f64 + 1.0,
+                    l1_norm: k as f64,
+                    active: k * 2,
+                    train_mse: 1.0 / (k + 1) as f64,
+                    test_mse: Some(1.5 / (k + 1) as f64),
+                    iters: 10,
+                    dots: 100,
+                    converged: true,
+                    tracked_coefs: vec![0.1 * k as f64],
+                })
+                .collect(),
+            seconds: secs,
+            total_iters: 50,
+            total_dots: 500,
+        }
+    }
+
+    #[test]
+    fn table_contains_all_metrics() {
+        let a = fake_result("CD", 2.0);
+        let b = fake_result("FW 1%", 0.1);
+        let t = render_table("pyrim", &[&a, &b]);
+        assert!(t.contains("pyrim"));
+        assert!(t.contains("CD"));
+        assert!(t.contains("FW 1%"));
+        assert!(t.contains("Time (s)"));
+        assert!(t.contains("Dot products"));
+        let su = render_speedup_row(2.0, &[&b]);
+        assert!(su.contains("20.0x"), "{su}");
+    }
+
+    #[test]
+    fn csv_roundtrip_columns() {
+        let r = fake_result("CD", 1.0);
+        let csv = path_csv(&r, &["coef0".into()]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 6);
+        assert!(lines[0].ends_with("coef0"));
+        assert_eq!(lines[1].split(',').count(), 8);
+    }
+
+    #[test]
+    fn json_summary_parses() {
+        let r = fake_result("CD", 1.0);
+        let j = summary_json(&[&r]);
+        let parsed = crate::util::json::Json::parse(&j.pretty()).unwrap();
+        assert_eq!(
+            parsed.as_arr().unwrap()[0].get("solver").as_str(),
+            Some("CD")
+        );
+    }
+
+    #[test]
+    fn ascii_series_renders() {
+        let r = fake_result("CD", 1.0);
+        let s = ascii_series("train mse", &r.points, |p| p.train_mse);
+        assert!(s.contains('█') || s.contains('▁'));
+        let flat = ascii_series("flat", &r.points, |_| 1.0);
+        assert!(flat.contains("(flat)"));
+    }
+
+    #[test]
+    fn results_dir_env_override() {
+        std::env::set_var("SFW_RESULTS_DIR", "/tmp/sfw_results_test");
+        assert_eq!(
+            results_dir(),
+            std::path::PathBuf::from("/tmp/sfw_results_test")
+        );
+        std::env::remove_var("SFW_RESULTS_DIR");
+    }
+}

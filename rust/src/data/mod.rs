@@ -1,0 +1,11 @@
+//! Dataset substrate: generators for every problem in Table 1 of the paper
+//! plus LIBSVM I/O for drop-in use of the original files.
+
+pub mod dataset;
+pub mod libsvm;
+pub mod poly;
+pub mod qsar;
+pub mod synth;
+pub mod textgen;
+
+pub use dataset::{assemble, load, Dataset, Named};

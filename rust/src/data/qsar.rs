@@ -1,0 +1,216 @@
+//! QSAR-like base-feature generator (Pyrim / Triazines stand-ins).
+//!
+//! The real datasets are quantitative structure-activity relationship
+//! problems: a handful of molecular-surface descriptors in [0, 1] with
+//! substantial inter-feature correlation, and a bounded response. We can't
+//! ship the LIBSVM originals, so this module synthesizes base matrices with
+//! the same statistical shape (documented substitution — DESIGN.md §2):
+//!
+//! * features in [0, 1], correlated through a low-rank latent factor model
+//!   `x = clip(Λ·f + ε)` (QSAR descriptors are strongly collinear, which is
+//!   what makes the expanded Lasso problem interesting),
+//! * response = sparse polynomial in the base features + noise, so the
+//!   product-feature expansion ([`super::poly`]) contains the true model —
+//!   mirroring why [20] suggests polynomial expansion for these problems.
+
+use super::poly;
+use crate::linalg::{DenseMatrix, Design};
+use crate::util::rng::Xoshiro256;
+
+/// Spec for a QSAR-like problem.
+#[derive(Clone, Debug)]
+pub struct QsarSpec {
+    pub n_samples: usize,
+    pub n_base_features: usize,
+    /// polynomial expansion degree (5 for Pyrim, 4 for Triazines)
+    pub degree: usize,
+    /// number of latent factors driving feature correlation
+    pub n_factors: usize,
+    /// number of true monomials in the response
+    pub n_true_terms: usize,
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl QsarSpec {
+    /// Pyrim-shaped: 74 samples × 27 base features, degree 5 → p = 201 376.
+    pub fn pyrim(seed: u64) -> Self {
+        Self {
+            n_samples: 74,
+            n_base_features: 27,
+            degree: 5,
+            n_factors: 5,
+            n_true_terms: 12,
+            noise: 0.05,
+            seed,
+        }
+    }
+
+    /// Triazines-shaped: 186 × 60 base features, degree 4 → p = 635 376.
+    pub fn triazines(seed: u64) -> Self {
+        Self {
+            n_samples: 186,
+            n_base_features: 60,
+            degree: 4,
+            n_factors: 8,
+            n_true_terms: 20,
+            noise: 0.05,
+            seed,
+        }
+    }
+
+    /// Expanded feature count.
+    pub fn expanded_p(&self) -> usize {
+        poly::n_monomials(self.n_base_features, self.degree)
+    }
+}
+
+/// Generated QSAR-like problem (already expanded).
+pub struct QsarData {
+    /// expanded dense design (m × C(n+d, d))
+    pub x: Design,
+    pub y: Vec<f64>,
+    /// base matrix (m × n_base) kept for inspection
+    pub base: DenseMatrix,
+}
+
+/// Generate base features and the expanded design.
+pub fn generate(spec: &QsarSpec) -> QsarData {
+    let mut rng = Xoshiro256::seed_from_u64(spec.seed);
+    let (m, nb) = (spec.n_samples, spec.n_base_features);
+
+    // latent loadings Λ (nb × k) and factors F (m × k)
+    let k = spec.n_factors.max(1);
+    let loadings: Vec<f64> = (0..nb * k).map(|_| rng.gaussian() * 0.5).collect();
+    let factors: Vec<f64> = (0..m * k).map(|_| rng.gaussian()).collect();
+
+    // base features: sigmoid of factor mix + idiosyncratic noise → (0,1)
+    let mut base = DenseMatrix::zeros(m, nb);
+    for j in 0..nb {
+        for i in 0..m {
+            let mut v = 0.0;
+            for f in 0..k {
+                v += loadings[j * k + f] * factors[i * k + f];
+            }
+            v += 0.4 * rng.gaussian();
+            base.set(i, j, 1.0 / (1.0 + (-v).exp()));
+        }
+    }
+
+    // expanded design
+    let x = poly::expand(m, nb, spec.degree, |i, j| base.get(i, j));
+    let p = x.cols();
+
+    // response: sparse combination of true monomial columns + noise
+    let mut truth_cols = Vec::new();
+    rng.subset(p.min(50_000).max(1), spec.n_true_terms.min(p), &mut truth_cols);
+    let mut y = vec![0.0f64; m];
+    for &j in &truth_cols {
+        let w = rng.uniform(-2.0, 2.0);
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi += w * x.get(i, j);
+        }
+    }
+    for yi in y.iter_mut() {
+        *yi += spec.noise * rng.gaussian();
+    }
+
+    QsarData { x: Design::dense(x), y, base }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pyrim_triazines_shapes_match_table1() {
+        assert_eq!(QsarSpec::pyrim(0).expanded_p(), 201_376);
+        assert_eq!(QsarSpec::triazines(0).expanded_p(), 635_376);
+        assert_eq!(QsarSpec::pyrim(0).n_samples, 74);
+        assert_eq!(QsarSpec::triazines(0).n_samples, 186);
+    }
+
+    #[test]
+    fn small_generation_sane() {
+        // shrunk spec for test speed
+        let spec = QsarSpec {
+            n_samples: 20,
+            n_base_features: 6,
+            degree: 3,
+            n_factors: 2,
+            n_true_terms: 4,
+            noise: 0.01,
+            seed: 7,
+        };
+        let d = generate(&spec);
+        assert_eq!(d.x.rows(), 20);
+        assert_eq!(d.x.cols(), poly::n_monomials(6, 3));
+        assert_eq!(d.y.len(), 20);
+        // base features in (0, 1)
+        for j in 0..6 {
+            for i in 0..20 {
+                let v = d.base.get(i, j);
+                assert!((0.0..=1.0).contains(&v), "base[{i},{j}] = {v}");
+            }
+        }
+        // y non-degenerate
+        let var: f64 = {
+            let mean = d.y.iter().sum::<f64>() / 20.0;
+            d.y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / 20.0
+        };
+        assert!(var > 1e-6, "response variance {var}");
+    }
+
+    #[test]
+    fn base_features_are_correlated() {
+        let spec = QsarSpec {
+            n_samples: 200,
+            n_base_features: 8,
+            degree: 1,
+            n_factors: 2,
+            n_true_terms: 2,
+            noise: 0.0,
+            seed: 11,
+        };
+        let d = generate(&spec);
+        // with 2 latent factors and 8 features, at least one |corr| > 0.3
+        let m = 200;
+        let col = |j: usize| -> Vec<f64> { (0..m).map(|i| d.base.get(i, j)).collect() };
+        let corr = |a: &[f64], b: &[f64]| -> f64 {
+            let ma = a.iter().sum::<f64>() / m as f64;
+            let mb = b.iter().sum::<f64>() / m as f64;
+            let mut num = 0.0;
+            let mut da = 0.0;
+            let mut db = 0.0;
+            for i in 0..m {
+                num += (a[i] - ma) * (b[i] - mb);
+                da += (a[i] - ma).powi(2);
+                db += (b[i] - mb).powi(2);
+            }
+            num / (da.sqrt() * db.sqrt())
+        };
+        let mut max_corr = 0.0f64;
+        for j1 in 0..8 {
+            for j2 in (j1 + 1)..8 {
+                max_corr = max_corr.max(corr(&col(j1), &col(j2)).abs());
+            }
+        }
+        assert!(max_corr > 0.3, "max |corr| {max_corr}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let spec = QsarSpec {
+            n_samples: 10,
+            n_base_features: 4,
+            degree: 2,
+            n_factors: 2,
+            n_true_terms: 2,
+            noise: 0.1,
+            seed: 3,
+        };
+        let a = generate(&spec);
+        let b = generate(&spec);
+        assert_eq!(a.y, b.y);
+    }
+}

@@ -1,0 +1,141 @@
+//! Synthetic regression generator — a faithful Rust port of scikit-learn's
+//! `make_regression` (the paper generates Synthetic-10000/-50000 with it,
+//! §5/Table 1).
+//!
+//! Generative process (matching sklearn's defaults):
+//! 1. `X ∈ R^{n×p}` with i.i.d. standard-gaussian entries,
+//! 2. ground-truth coefficients: `n_informative` entries ~ 100·U(0,1) at
+//!    random positions, rest exactly zero,
+//! 3. `y = X·β + noise·N(0,1)`.
+
+use crate::linalg::{DenseMatrix, Design};
+use crate::util::rng::Xoshiro256;
+
+/// Parameters of the generator.
+#[derive(Clone, Debug)]
+pub struct SynthSpec {
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_informative: usize,
+    /// std-dev of the additive gaussian noise on y
+    pub noise: f64,
+    pub seed: u64,
+}
+
+/// Generated problem with its ground truth.
+pub struct SynthData {
+    pub x: Design,
+    pub y: Vec<f64>,
+    /// true coefficient vector (exactly `n_informative` nonzeros)
+    pub ground_truth: Vec<f64>,
+}
+
+/// Generate a dense synthetic regression problem.
+pub fn make_regression(spec: &SynthSpec) -> SynthData {
+    let &SynthSpec { n_samples: n, n_features: p, n_informative, noise, seed } = spec;
+    assert!(n_informative <= p, "n_informative must be ≤ n_features");
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+
+    // X column-major gaussian
+    let mut data = vec![0.0f32; n * p];
+    for v in data.iter_mut() {
+        *v = rng.gaussian() as f32;
+    }
+    let x = DenseMatrix::from_col_major(n, p, data);
+
+    // informative positions + coefficients
+    let mut beta = vec![0.0f64; p];
+    let mut positions = Vec::new();
+    rng.subset(p, n_informative, &mut positions);
+    for &j in &positions {
+        beta[j] = 100.0 * rng.next_f64();
+    }
+
+    // y = Xβ + noise
+    let mut y = vec![0.0f64; n];
+    x.matvec(&beta, &mut y);
+    if noise > 0.0 {
+        for v in y.iter_mut() {
+            *v += noise * rng.gaussian();
+        }
+    }
+
+    SynthData { x: Design::dense(x), y, ground_truth: beta }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::ops;
+
+    fn spec(n: usize, p: usize, inf: usize, noise: f64) -> SynthSpec {
+        SynthSpec { n_samples: n, n_features: p, n_informative: inf, noise, seed: 42 }
+    }
+
+    #[test]
+    fn shapes_and_sparsity_of_truth() {
+        let d = make_regression(&spec(50, 200, 10, 1.0));
+        assert_eq!(d.x.rows(), 50);
+        assert_eq!(d.x.cols(), 200);
+        assert_eq!(d.y.len(), 50);
+        assert_eq!(ops::nnz(&d.ground_truth), 10);
+        // informative coefs are in (0, 100)
+        for &b in d.ground_truth.iter().filter(|&&b| b != 0.0) {
+            assert!(b > 0.0 && b < 100.0);
+        }
+    }
+
+    #[test]
+    fn noiseless_y_is_exactly_linear() {
+        let d = make_regression(&spec(30, 40, 5, 0.0));
+        let mut pred = vec![0.0; 30];
+        d.x.matvec(&d.ground_truth, &mut pred);
+        crate::testing::assert_slices_close(&pred, &d.y, 1e-4, 1e-5);
+    }
+
+    #[test]
+    fn noise_perturbs_y() {
+        let clean = make_regression(&spec(30, 40, 5, 0.0));
+        let noisy = make_regression(&SynthSpec { noise: 10.0, ..spec(30, 40, 5, 0.0) });
+        // same seed → same X and β, y differs by the noise draw
+        let diff: f64 = clean
+            .y
+            .iter()
+            .zip(noisy.y.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 1.0, "noise had no effect: {diff}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = make_regression(&spec(20, 30, 4, 2.0));
+        let b = make_regression(&spec(20, 30, 4, 2.0));
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.ground_truth, b.ground_truth);
+    }
+
+    #[test]
+    fn entries_look_standard_gaussian() {
+        let d = make_regression(&spec(100, 100, 5, 0.0));
+        // mean ~ 0, var ~ 1 over all entries
+        let (mut s1, mut s2, mut cnt) = (0.0, 0.0, 0);
+        for j in 0..100 {
+            let v = vec![0.0; 100];
+            let _ = v; // silence
+            for i in 0..100 {
+                let e = match d.x.storage() {
+                    crate::linalg::Storage::Dense(m) => m.get(i, j),
+                    _ => unreachable!(),
+                };
+                s1 += e;
+                s2 += e * e;
+                cnt += 1;
+            }
+        }
+        let mean = s1 / cnt as f64;
+        let var = s2 / cnt as f64 - mean * mean;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+}

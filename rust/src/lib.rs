@@ -1,0 +1,33 @@
+//! # sfw-lasso
+//!
+//! Production-quality reproduction of *"Fast and Scalable Lasso via
+//! Stochastic Frank-Wolfe Methods with a Convergence Guarantee"* (Frandi,
+//! Ñanculef, Lodi, Sartori, Suykens — 2015).
+//!
+//! The crate implements the paper's randomized Frank-Wolfe Lasso solver
+//! (Algorithm 2) plus every substrate and baseline its evaluation depends
+//! on: a dataset layer matching Table 1 (synthetic, QSAR product-feature,
+//! and power-law doc-term generators), the Glmnet-style coordinate-descent
+//! and SLEP-style accelerated-gradient baselines of Table 2, a
+//! regularization-path runner with warm starts, dot-product-exact metrics,
+//! and a bench harness regenerating every table and figure of §5.
+//!
+//! Architecture (three layers, python never on the request path):
+//! * **L3** — this crate: coordinator, solvers, data, metrics, CLI.
+//! * **L2/L1** — `python/compile/`: the FW step as a JAX graph calling a
+//!   Pallas correlation/argmax kernel; AOT-lowered once to HLO text.
+//! * **runtime** — [`runtime`]: PJRT CPU client that loads and executes
+//!   the AOT artifacts from Rust.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod path;
+pub mod runtime;
+pub mod solvers;
+pub mod testing;
+pub mod util;

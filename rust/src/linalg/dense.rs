@@ -1,0 +1,156 @@
+//! Column-major dense matrix.
+//!
+//! Column-major because every solver in this crate is column-driven: the FW
+//! vertex search, CD updates and gradient coordinates all touch whole
+//! columns `zᵢ` of the design matrix. Values are `f32` (see `ops.rs` for
+//! the accumulation policy).
+
+use super::ops;
+
+/// Dense m×p matrix, column-major, f32 storage.
+#[derive(Clone, Debug)]
+pub struct DenseMatrix {
+    rows: usize,
+    cols: usize,
+    /// len = rows * cols; column j occupies `data[j*rows .. (j+1)*rows]`.
+    data: Vec<f32>,
+}
+
+impl DenseMatrix {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                data.push(f(i, j) as f32);
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// From column-major raw data.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow column j.
+    #[inline]
+    pub fn col(&self, j: usize) -> &[f32] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable column j.
+    #[inline]
+    pub fn col_mut(&mut self, j: usize) -> &mut [f32] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[j * self.rows + i] as f64
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[j * self.rows + i] = v as f32;
+    }
+
+    /// y = X·α (dense matvec; used by path metrics, not the solver hot loop).
+    pub fn matvec(&self, alpha: &[f64], out: &mut [f64]) {
+        assert_eq!(alpha.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        out.fill(0.0);
+        for (j, &a) in alpha.iter().enumerate() {
+            if a != 0.0 {
+                ops::axpy_f32(a, self.col(j), out);
+            }
+        }
+    }
+
+    /// g = Xᵀ·v (all p dot products; deterministic-FW / FISTA gradient).
+    pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = ops::dot_f32_f64(self.col(j), v);
+        }
+    }
+
+    /// Raw column-major data (for transfer to the XLA runtime).
+    pub fn raw(&self) -> &[f32] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> DenseMatrix {
+        // [[1, 4], [2, 5], [3, 6]] (3×2)
+        DenseMatrix::from_col_major(3, 2, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])
+    }
+
+    #[test]
+    fn indexing_and_cols() {
+        let x = small();
+        assert_eq!(x.rows(), 3);
+        assert_eq!(x.cols(), 2);
+        assert_eq!(x.get(0, 0), 1.0);
+        assert_eq!(x.get(2, 1), 6.0);
+        assert_eq!(x.col(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn from_fn_layout() {
+        let x = DenseMatrix::from_fn(2, 3, |i, j| (10 * i + j) as f64);
+        assert_eq!(x.get(1, 2), 12.0);
+        assert_eq!(x.col(2), &[2.0, 12.0]);
+    }
+
+    #[test]
+    fn matvec_and_transpose() {
+        let x = small();
+        let mut out = vec![0.0; 3];
+        x.matvec(&[1.0, -1.0], &mut out);
+        assert_eq!(out, vec![-3.0, -3.0, -3.0]);
+
+        let mut g = vec![0.0; 2];
+        x.tr_matvec(&[1.0, 1.0, 1.0], &mut g);
+        assert_eq!(g, vec![6.0, 15.0]);
+    }
+
+    #[test]
+    fn matvec_skips_zero_coefficients() {
+        let x = small();
+        let mut out = vec![0.0; 3];
+        x.matvec(&[0.0, 2.0], &mut out);
+        assert_eq!(out, vec![8.0, 10.0, 12.0]);
+    }
+
+    #[test]
+    fn set_roundtrip() {
+        let mut x = DenseMatrix::zeros(2, 2);
+        x.set(1, 0, 7.5);
+        assert_eq!(x.get(1, 0), 7.5);
+        assert_eq!(x.raw(), &[0.0, 7.5, 0.0, 0.0]);
+    }
+}

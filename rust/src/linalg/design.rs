@@ -1,0 +1,288 @@
+//! Unified design-matrix abstraction over dense and sparse storage.
+//!
+//! Every solver is written once against [`Design`]; column access is the
+//! only primitive the algorithms need (FW vertex search, CD updates,
+//! residual axpys). The wrapper also owns the per-column caches the paper's
+//! implementation precomputes (§4.2): `σᵢ = zᵢᵀy` and `‖zᵢ‖²`.
+
+use super::dense::DenseMatrix;
+use super::ops;
+use super::sparse::CscMatrix;
+
+/// Storage for a design matrix.
+#[derive(Clone, Debug)]
+pub enum Storage {
+    Dense(DenseMatrix),
+    Sparse(CscMatrix),
+}
+
+/// An m×p design matrix with unified column access.
+#[derive(Clone, Debug)]
+pub struct Design {
+    storage: Storage,
+}
+
+impl Design {
+    pub fn dense(x: DenseMatrix) -> Self {
+        Self { storage: Storage::Dense(x) }
+    }
+
+    pub fn sparse(x: CscMatrix) -> Self {
+        Self { storage: Storage::Sparse(x) }
+    }
+
+    #[inline]
+    pub fn storage(&self) -> &Storage {
+        &self.storage
+    }
+
+    #[inline]
+    pub fn storage_mut(&mut self) -> &mut Storage {
+        &mut self.storage
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        match &self.storage {
+            Storage::Dense(x) => x.rows(),
+            Storage::Sparse(x) => x.cols_rows().0,
+        }
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        match &self.storage {
+            Storage::Dense(x) => x.cols(),
+            Storage::Sparse(x) => x.cols_rows().1,
+        }
+    }
+
+    /// Total nonzeros (= m·p for dense).
+    pub fn nnz(&self) -> usize {
+        match &self.storage {
+            Storage::Dense(x) => x.rows() * x.cols(),
+            Storage::Sparse(x) => x.nnz(),
+        }
+    }
+
+    /// Nonzeros of column j (cost `s` of one dot product, paper §4.2).
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        match &self.storage {
+            Storage::Dense(x) => x.rows(),
+            Storage::Sparse(x) => x.col_nnz(j),
+        }
+    }
+
+    /// zⱼᵀ·v — one "dot product" in the paper's accounting.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        match &self.storage {
+            Storage::Dense(x) => ops::dot_f32_f64(x.col(j), v),
+            Storage::Sparse(x) => x.col_dot(j, v),
+        }
+    }
+
+    /// out += a·zⱼ.
+    #[inline]
+    pub fn col_axpy(&self, j: usize, a: f64, out: &mut [f64]) {
+        match &self.storage {
+            Storage::Dense(x) => ops::axpy_f32(a, x.col(j), out),
+            Storage::Sparse(x) => x.col_axpy(j, a, out),
+        }
+    }
+
+    /// ‖zⱼ‖² (uncached; use [`ColumnCache`] in loops).
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        match &self.storage {
+            Storage::Dense(x) => {
+                x.col(j).iter().map(|&v| (v as f64) * (v as f64)).sum()
+            }
+            Storage::Sparse(x) => x.col_norm_sq(j),
+        }
+    }
+
+    /// out = X·α.
+    pub fn matvec(&self, alpha: &[f64], out: &mut [f64]) {
+        match &self.storage {
+            Storage::Dense(x) => x.matvec(alpha, out),
+            Storage::Sparse(x) => x.matvec(alpha, out),
+        }
+    }
+
+    /// out = Xᵀ·v (p dot products).
+    pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
+        match &self.storage {
+            Storage::Dense(x) => x.tr_matvec(v, out),
+            Storage::Sparse(x) => x.tr_matvec(v, out),
+        }
+    }
+
+    /// Densify column j into an f32 buffer (XLA gather path).
+    pub fn densify_col(&self, j: usize, out: &mut [f32]) {
+        match &self.storage {
+            Storage::Dense(x) => out.copy_from_slice(x.col(j)),
+            Storage::Sparse(x) => x.densify_col(j, out),
+        }
+    }
+
+    /// Scale column j by s (standardization).
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        match &mut self.storage {
+            Storage::Dense(x) => {
+                for v in x.col_mut(j) {
+                    *v = (*v as f64 * s) as f32;
+                }
+            }
+            Storage::Sparse(x) => x.scale_col(j, s),
+        }
+    }
+
+    /// Largest squared singular value ‖X‖₂² via power iteration — the
+    /// Lipschitz constant used by FISTA/APG step sizes.
+    pub fn spectral_norm_sq(&self, iters: usize, seed: u64) -> f64 {
+        let (m, p) = (self.rows(), self.cols());
+        let mut rng = crate::util::rng::Xoshiro256::seed_from_u64(seed);
+        let mut v: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+        let mut xv = vec![0.0; m];
+        let mut xtxv = vec![0.0; p];
+        let mut lambda = 0.0;
+        for _ in 0..iters {
+            let n = ops::nrm2_sq(&v).sqrt();
+            if n == 0.0 {
+                return 0.0;
+            }
+            ops::scale(1.0 / n, &mut v);
+            self.matvec(&v, &mut xv);
+            self.tr_matvec(&xv, &mut xtxv);
+            lambda = ops::dot(&v, &xtxv);
+            std::mem::swap(&mut v, &mut xtxv);
+        }
+        lambda
+    }
+}
+
+// CscMatrix helper so Design::rows/cols don't need extra methods there.
+impl CscMatrix {
+    #[inline]
+    pub(crate) fn cols_rows(&self) -> (usize, usize) {
+        (self.rows(), self.cols())
+    }
+}
+
+/// Precomputed per-column caches used by the paper's implementation (§4.2):
+/// `sigma[i] = zᵢᵀy` and `norm_sq[i] = ‖zᵢ‖²` (plus `yty = yᵀy`).
+#[derive(Clone, Debug)]
+pub struct ColumnCache {
+    pub sigma: Vec<f64>,
+    pub norm_sq: Vec<f64>,
+    pub yty: f64,
+}
+
+impl ColumnCache {
+    /// Precompute (p dot products — counted by callers as setup cost).
+    pub fn build(x: &Design, y: &[f64]) -> Self {
+        let p = x.cols();
+        let mut sigma = vec![0.0; p];
+        let mut norm_sq = vec![0.0; p];
+        for j in 0..p {
+            sigma[j] = x.col_dot(j, y);
+            norm_sq[j] = x.col_norm_sq(j);
+        }
+        Self { sigma, norm_sq, yty: ops::nrm2_sq(y) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::CscBuilder;
+    use crate::util::rng::Xoshiro256;
+
+    fn dense_and_sparse_pair(m: usize, p: usize, seed: u64) -> (Design, Design) {
+        // Build identical matrices in both storages.
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut data = vec![0.0f32; m * p];
+        let mut b = CscBuilder::new(m, p);
+        for j in 0..p {
+            for i in 0..m {
+                if rng.next_f64() < 0.3 {
+                    let v = rng.gaussian();
+                    data[j * m + i] = v as f32;
+                    b.push(i, j, v);
+                }
+            }
+        }
+        (
+            Design::dense(DenseMatrix::from_col_major(m, p, data)),
+            Design::sparse(b.build()),
+        )
+    }
+
+    #[test]
+    fn dense_sparse_agree_on_all_ops() {
+        let (xd, xs) = dense_and_sparse_pair(23, 17, 99);
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let v: Vec<f64> = (0..23).map(|_| rng.gaussian()).collect();
+        let alpha: Vec<f64> = (0..17).map(|_| rng.gaussian()).collect();
+
+        for j in 0..17 {
+            assert!((xd.col_dot(j, &v) - xs.col_dot(j, &v)).abs() < 1e-6);
+            assert!((xd.col_norm_sq(j) - xs.col_norm_sq(j)).abs() < 1e-6);
+        }
+        let mut od = vec![0.0; 23];
+        let mut os = vec![0.0; 23];
+        xd.matvec(&alpha, &mut od);
+        xs.matvec(&alpha, &mut os);
+        crate::testing::assert_slices_close(&od, &os, 1e-6, 1e-6);
+
+        let mut gd = vec![0.0; 17];
+        let mut gs = vec![0.0; 17];
+        xd.tr_matvec(&v, &mut gd);
+        xs.tr_matvec(&v, &mut gs);
+        crate::testing::assert_slices_close(&gd, &gs, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn column_cache_values() {
+        let (xd, _) = dense_and_sparse_pair(10, 5, 3);
+        let y: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let cache = ColumnCache::build(&xd, &y);
+        assert_eq!(cache.sigma.len(), 5);
+        for j in 0..5 {
+            assert!((cache.sigma[j] - xd.col_dot(j, &y)).abs() < 1e-12);
+            assert!((cache.norm_sq[j] - xd.col_norm_sq(j)).abs() < 1e-12);
+        }
+        assert!((cache.yty - ops::nrm2_sq(&y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spectral_norm_identityish() {
+        // X = I (3×3) → ‖X‖₂² = 1
+        let x = Design::dense(DenseMatrix::from_fn(3, 3, |i, j| f64::from(i == j)));
+        let l = x.spectral_norm_sq(50, 7);
+        assert!((l - 1.0).abs() < 1e-6, "lambda {l}");
+    }
+
+    #[test]
+    fn spectral_norm_known_matrix() {
+        // X = [[2, 0], [0, 1]] → ‖X‖₂² = 4
+        let x = Design::dense(DenseMatrix::from_fn(2, 2, |i, j| {
+            if i == j { (2 - i) as f64 } else { 0.0 }
+        }));
+        let l = x.spectral_norm_sq(100, 11);
+        assert!((l - 4.0).abs() < 1e-6, "lambda {l}");
+    }
+
+    #[test]
+    fn densify_col_matches() {
+        let (xd, xs) = dense_and_sparse_pair(12, 4, 21);
+        let mut bd = vec![0.0f32; 12];
+        let mut bs = vec![0.0f32; 12];
+        for j in 0..4 {
+            xd.densify_col(j, &mut bd);
+            xs.densify_col(j, &mut bs);
+            assert_eq!(bd, bs);
+        }
+    }
+}

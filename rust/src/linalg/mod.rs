@@ -1,0 +1,13 @@
+//! Linear-algebra substrate: dense/sparse matrices, vector kernels,
+//! the unified design-matrix abstraction, and standardization.
+
+pub mod dense;
+pub mod design;
+pub mod ops;
+pub mod sparse;
+pub mod standardize;
+
+pub use dense::DenseMatrix;
+pub use design::{ColumnCache, Design, Storage};
+pub use sparse::{CscBuilder, CscMatrix};
+pub use standardize::{standardize, Standardization};

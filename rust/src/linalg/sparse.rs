@@ -1,0 +1,310 @@
+//! Compressed-sparse-column (CSC) matrix.
+//!
+//! CSC is the natural layout for every algorithm in this crate: FW's vertex
+//! search and CD's coordinate updates read whole columns `zᵢ`; the E2006-
+//! scale problems (p up to 4.27M) are far too large for dense storage.
+//! Row indices are `u32` (m ≤ 4B) and values `f32`; accumulations are f64.
+
+use crate::util::rng::Xoshiro256;
+
+/// Sparse m×p matrix in CSC form.
+#[derive(Clone, Debug)]
+pub struct CscMatrix {
+    rows: usize,
+    cols: usize,
+    /// col_ptr[j]..col_ptr[j+1] indexes into row_idx/vals; len = cols+1.
+    col_ptr: Vec<usize>,
+    row_idx: Vec<u32>,
+    vals: Vec<f32>,
+}
+
+/// Builder that collects (row, col, val) triplets then compresses.
+pub struct CscBuilder {
+    rows: usize,
+    cols: usize,
+    triplets: Vec<(u32, u32, f32)>,
+}
+
+impl CscBuilder {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, triplets: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: usize, col: usize, val: f64) {
+        debug_assert!(row < self.rows && col < self.cols);
+        if val != 0.0 {
+            self.triplets.push((row as u32, col as u32, val as f32));
+        }
+    }
+
+    /// Compress to CSC. Duplicate (row, col) entries are summed.
+    pub fn build(mut self) -> CscMatrix {
+        self.triplets
+            .sort_unstable_by_key(|&(r, c, _)| ((c as u64) << 32) | r as u64);
+        let mut col_ptr = vec![0usize; self.cols + 1];
+        let mut row_idx: Vec<u32> = Vec::with_capacity(self.triplets.len());
+        let mut vals: Vec<f32> = Vec::with_capacity(self.triplets.len());
+        let mut last: Option<(u32, u32)> = None;
+        for &(r, c, v) in &self.triplets {
+            if last == Some((r, c)) {
+                *vals.last_mut().unwrap() += v; // merge duplicate
+            } else {
+                row_idx.push(r);
+                vals.push(v);
+                col_ptr[c as usize + 1] += 1;
+                last = Some((r, c));
+            }
+        }
+        // prefix-sum per-column counts into offsets
+        for j in 0..self.cols {
+            col_ptr[j + 1] += col_ptr[j];
+        }
+        CscMatrix { rows: self.rows, cols: self.cols, col_ptr, row_idx, vals }
+    }
+}
+
+impl CscMatrix {
+    /// Build directly from parts (must be valid CSC: sorted rows per column).
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        col_ptr: Vec<usize>,
+        row_idx: Vec<u32>,
+        vals: Vec<f32>,
+    ) -> Self {
+        assert_eq!(col_ptr.len(), cols + 1);
+        assert_eq!(row_idx.len(), vals.len());
+        assert_eq!(*col_ptr.last().unwrap(), vals.len());
+        Self { rows, cols, col_ptr, row_idx, vals }
+    }
+
+    /// Random sparse matrix: each column gets ~`density·rows` gaussian
+    /// entries (testing convenience).
+    pub fn random(rows: usize, cols: usize, density: f64, rng: &mut Xoshiro256) -> Self {
+        let mut b = CscBuilder::new(rows, cols);
+        for j in 0..cols {
+            for i in 0..rows {
+                if rng.next_f64() < density {
+                    b.push(i, j, rng.gaussian());
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.vals.len()
+    }
+
+    #[inline]
+    pub fn col_nnz(&self, j: usize) -> usize {
+        self.col_ptr[j + 1] - self.col_ptr[j]
+    }
+
+    /// Borrow column j as (row indices, values).
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        (&self.row_idx[a..b], &self.vals[a..b])
+    }
+
+    /// zⱼᵀ·v — the hot kernel of the sparse gradient search.
+    #[inline]
+    pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
+        debug_assert_eq!(v.len(), self.rows);
+        let (rows, vals) = self.col(j);
+        let mut s = 0.0;
+        for (&r, &x) in rows.iter().zip(vals.iter()) {
+            s += x as f64 * unsafe { *v.get_unchecked(r as usize) };
+        }
+        s
+    }
+
+    /// out += a·zⱼ (sparse axpy).
+    #[inline]
+    pub fn col_axpy(&self, j: usize, a: f64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.rows);
+        let (rows, vals) = self.col(j);
+        for (&r, &x) in rows.iter().zip(vals.iter()) {
+            unsafe { *out.get_unchecked_mut(r as usize) += a * x as f64 };
+        }
+    }
+
+    /// ‖zⱼ‖².
+    pub fn col_norm_sq(&self, j: usize) -> f64 {
+        let (_, vals) = self.col(j);
+        vals.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// Scale column j in place.
+    pub fn scale_col(&mut self, j: usize, s: f64) {
+        let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        for v in &mut self.vals[a..b] {
+            *v = (*v as f64 * s) as f32;
+        }
+    }
+
+    /// out = X·α.
+    pub fn matvec(&self, alpha: &[f64], out: &mut [f64]) {
+        assert_eq!(alpha.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        out.fill(0.0);
+        for (j, &a) in alpha.iter().enumerate() {
+            if a != 0.0 {
+                self.col_axpy(j, a, out);
+            }
+        }
+    }
+
+    /// out = Xᵀ·v (all columns).
+    pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = self.col_dot(j, v);
+        }
+    }
+
+    /// Densify column j into `out` (len = rows); used by the XLA backend's
+    /// gather step.
+    pub fn densify_col(&self, j: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.rows);
+        out.fill(0.0);
+        let (rows, vals) = self.col(j);
+        for (&r, &x) in rows.iter().zip(vals.iter()) {
+            out[r as usize] = x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> CscMatrix {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        let mut b = CscBuilder::new(3, 3);
+        b.push(0, 0, 1.0);
+        b.push(2, 0, 4.0);
+        b.push(1, 1, 3.0);
+        b.push(0, 2, 2.0);
+        b.push(2, 2, 5.0);
+        b.build()
+    }
+
+    #[test]
+    fn build_and_access() {
+        let x = small();
+        assert_eq!((x.rows(), x.cols(), x.nnz()), (3, 3, 5));
+        let (r, v) = x.col(0);
+        assert_eq!(r, &[0, 2]);
+        assert_eq!(v, &[1.0, 4.0]);
+        assert_eq!(x.col_nnz(1), 1);
+        let (r2, _) = x.col(2);
+        assert_eq!(r2, &[0, 2]);
+    }
+
+    #[test]
+    fn builder_unsorted_input() {
+        let mut b = CscBuilder::new(3, 2);
+        b.push(2, 1, 5.0);
+        b.push(0, 0, 1.0);
+        b.push(1, 1, 3.0);
+        b.push(2, 0, 4.0);
+        let x = b.build();
+        let (r, v) = x.col(1);
+        assert_eq!(r, &[1, 2]);
+        assert_eq!(v, &[3.0, 5.0]);
+    }
+
+    #[test]
+    fn builder_merges_duplicates() {
+        let mut b = CscBuilder::new(3, 2);
+        b.push(1, 0, 2.0);
+        b.push(1, 0, 3.0);
+        b.push(0, 1, 1.0);
+        let x = b.build();
+        assert_eq!(x.nnz(), 2);
+        let (r, v) = x.col(0);
+        assert_eq!((r, v), (&[1u32][..], &[5.0f32][..]));
+    }
+
+    #[test]
+    fn builder_drops_explicit_zeros() {
+        let mut b = CscBuilder::new(2, 2);
+        b.push(0, 0, 0.0);
+        b.push(1, 1, 2.0);
+        assert_eq!(b.build().nnz(), 1);
+    }
+
+    #[test]
+    fn col_dot_matches_dense() {
+        let x = small();
+        let v = vec![1.0, 2.0, 3.0];
+        assert_eq!(x.col_dot(0, &v), 13.0); // 1·1 + 4·3
+        assert_eq!(x.col_dot(1, &v), 6.0);
+        assert_eq!(x.col_dot(2, &v), 17.0);
+    }
+
+    #[test]
+    fn axpy_and_matvec() {
+        let x = small();
+        let mut out = vec![0.0; 3];
+        x.col_axpy(2, 2.0, &mut out);
+        assert_eq!(out, vec![4.0, 0.0, 10.0]);
+
+        x.matvec(&[1.0, 1.0, 1.0], &mut out);
+        assert_eq!(out, vec![3.0, 3.0, 9.0]);
+
+        let mut g = vec![0.0; 3];
+        x.tr_matvec(&[1.0, 1.0, 1.0], &mut g);
+        assert_eq!(g, vec![5.0, 3.0, 7.0]);
+    }
+
+    #[test]
+    fn norms_and_scaling() {
+        let mut x = small();
+        assert_eq!(x.col_norm_sq(0), 17.0);
+        x.scale_col(0, 2.0);
+        assert_eq!(x.col_norm_sq(0), 68.0);
+    }
+
+    #[test]
+    fn densify() {
+        let x = small();
+        let mut out = vec![9.0f32; 3];
+        x.densify_col(1, &mut out);
+        assert_eq!(out, vec![0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn empty_column_is_fine() {
+        let mut b = CscBuilder::new(3, 3);
+        b.push(0, 0, 1.0);
+        b.push(2, 2, 1.0);
+        let x = b.build();
+        assert_eq!(x.col_nnz(1), 0);
+        assert_eq!(x.col_dot(1, &[1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn random_density() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let x = CscMatrix::random(100, 50, 0.1, &mut rng);
+        let frac = x.nnz() as f64 / (100.0 * 50.0);
+        assert!((0.07..0.13).contains(&frac), "density {frac}");
+    }
+}

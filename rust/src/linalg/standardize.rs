@@ -1,0 +1,181 @@
+//! Column standardization.
+//!
+//! The paper (§2.1, §4) assumes the design matrix is standardized so that
+//! predictors have unit norm and zero mean, and the response is centered
+//! (so the intercept α₀ can be dropped). Two flavours:
+//!
+//! * **Dense**: center each column to zero mean, then scale to unit ℓ2
+//!   norm. Center y.
+//! * **Sparse**: centering would densify the matrix (every zero becomes
+//!   −mean), so — exactly as Glmnet does with `standardize` on sparse input
+//!   — we only *scale* columns to unit norm and center y. Documented
+//!   substitution; the FW/CD math needs unit norms, not zero means.
+//!
+//! The returned [`Standardization`] records the transform so coefficients
+//! can be mapped back to the original feature space.
+
+use super::design::{Design, Storage};
+
+/// Record of the applied transform (per-column mean/scale, y mean).
+#[derive(Clone, Debug)]
+pub struct Standardization {
+    /// subtracted column means (all zeros for sparse designs)
+    pub col_mean: Vec<f64>,
+    /// multiplied scales (1/original norm); 0-norm columns get scale 1
+    pub col_scale: Vec<f64>,
+    /// subtracted response mean
+    pub y_mean: f64,
+}
+
+impl Standardization {
+    /// Map standardized-space coefficients back to original space:
+    /// `β_orig[j] = β_std[j] · col_scale[j]` and intercept
+    /// `α₀ = y_mean − Σⱼ β_orig[j]·col_mean[j]`.
+    pub fn unstandardize(&self, beta_std: &[f64]) -> (Vec<f64>, f64) {
+        let beta: Vec<f64> = beta_std
+            .iter()
+            .zip(self.col_scale.iter())
+            .map(|(&b, &s)| b * s)
+            .collect();
+        let intercept = self.y_mean
+            - beta
+                .iter()
+                .zip(self.col_mean.iter())
+                .map(|(&b, &m)| b * m)
+                .sum::<f64>();
+        (beta, intercept)
+    }
+}
+
+/// Standardize `x` and `y` in place; returns the transform record.
+pub fn standardize(x: &mut Design, y: &mut [f64]) -> Standardization {
+    let (m, p) = (x.rows(), x.cols());
+    assert_eq!(y.len(), m);
+    let y_mean = if m > 0 { y.iter().sum::<f64>() / m as f64 } else { 0.0 };
+    for v in y.iter_mut() {
+        *v -= y_mean;
+    }
+
+    let mut col_mean = vec![0.0; p];
+    let mut col_scale = vec![1.0; p];
+
+    let dense = matches!(x.storage(), Storage::Dense(_));
+    for j in 0..p {
+        if dense {
+            // center
+            let mean = col_sum(x, j) / m as f64;
+            col_mean[j] = mean;
+            add_to_col(x, j, -mean);
+        }
+        let norm = x.col_norm_sq(j).sqrt();
+        if norm > 0.0 {
+            col_scale[j] = 1.0 / norm;
+            x.scale_col(j, 1.0 / norm);
+        }
+    }
+
+    Standardization { col_mean, col_scale, y_mean }
+}
+
+fn col_sum(x: &Design, j: usize) -> f64 {
+    match x.storage() {
+        Storage::Dense(d) => d.col(j).iter().map(|&v| v as f64).sum(),
+        Storage::Sparse(s) => s.col(j).1.iter().map(|&v| v as f64).sum(),
+    }
+}
+
+/// Shift every entry of dense column j by `delta` (centering step).
+fn add_to_col(x: &mut Design, j: usize, delta: f64) {
+    if delta == 0.0 {
+        return;
+    }
+    match x.storage_mut() {
+        Storage::Dense(d) => {
+            for v in d.col_mut(j) {
+                *v = (*v as f64 + delta) as f32;
+            }
+        }
+        Storage::Sparse(_) => unreachable!("add_to_col only used for dense"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense::DenseMatrix;
+    use crate::linalg::sparse::CscBuilder;
+
+    #[test]
+    fn dense_columns_zero_mean_unit_norm() {
+        let mut x = Design::dense(DenseMatrix::from_fn(4, 3, |i, j| {
+            (i * 3 + j) as f64 * 1.7 + 2.0
+        }));
+        let mut y = vec![1.0, 2.0, 3.0, 4.0];
+        let st = standardize(&mut x, &mut y);
+
+        // y centered
+        assert!((y.iter().sum::<f64>()).abs() < 1e-12);
+        assert!((st.y_mean - 2.5).abs() < 1e-12);
+
+        for j in 0..3 {
+            let s = col_sum(&x, j);
+            assert!(s.abs() < 1e-5, "col {j} mean {s}");
+            let n = x.col_norm_sq(j);
+            assert!((n - 1.0).abs() < 1e-5, "col {j} norm² {n}");
+        }
+    }
+
+    #[test]
+    fn sparse_columns_unit_norm_sparsity_preserved() {
+        let mut b = CscBuilder::new(5, 3);
+        b.push(0, 0, 3.0);
+        b.push(4, 0, 4.0);
+        b.push(2, 1, 2.0);
+        let sp = b.build();
+        let nnz_before = sp.nnz();
+        let mut x = Design::sparse(sp);
+        let mut y = vec![1.0; 5];
+        standardize(&mut x, &mut y);
+
+        assert!((x.col_norm_sq(0) - 1.0).abs() < 1e-6);
+        assert!((x.col_norm_sq(1) - 1.0).abs() < 1e-6);
+        // zero column left alone
+        assert_eq!(x.col_norm_sq(2), 0.0);
+        // sparsity unchanged (no centering)
+        if let Storage::Sparse(s) = x.storage() {
+            assert_eq!(s.nnz(), nnz_before);
+        } else {
+            panic!("storage changed kind");
+        }
+    }
+
+    #[test]
+    fn unstandardize_roundtrip_prediction() {
+        // predictions in standardized space must equal predictions with the
+        // unstandardized coefficients on the raw data
+        let raw = DenseMatrix::from_fn(6, 2, |i, j| ((i + 1) * (j + 2)) as f64);
+        let y_raw: Vec<f64> = (0..6).map(|i| 3.0 * i as f64 + 1.0).collect();
+
+        let mut x = Design::dense(raw.clone());
+        let mut y = y_raw.clone();
+        let st = standardize(&mut x, &mut y);
+
+        let beta_std = vec![0.7, -0.3];
+        let (beta, a0) = st.unstandardize(&beta_std);
+
+        // prediction via standardized pieces
+        let mut pred_std = vec![0.0; 6];
+        x.matvec(&beta_std, &mut pred_std);
+        for v in pred_std.iter_mut() {
+            *v += st.y_mean;
+        }
+        // prediction via original space
+        let mut pred_raw = vec![a0; 6];
+        for jcol in 0..2 {
+            for i in 0..6 {
+                pred_raw[i] += beta[jcol] * raw.get(i, jcol);
+            }
+        }
+        crate::testing::assert_slices_close(&pred_std, &pred_raw, 1e-5, 1e-5);
+    }
+}

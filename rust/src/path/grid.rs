@@ -1,0 +1,90 @@
+//! Regularization grids (paper §5).
+//!
+//! Penalized solvers sweep `λ` from `λ_max = ‖Xᵀy‖∞` (null solution) down
+//! to `λ_min = λ_max/100` on a 100-point log grid (Glmnet's convention).
+//! Constrained solvers sweep `δ` from `δ_min = δ_max/100` *up* to
+//! `δ_max = ‖α(λ_min)‖₁` — the equivalence of §2.1 guarantees both sweeps
+//! traverse the same solutions, and both start at the sparsest end.
+
+/// A logarithmically spaced grid.
+#[derive(Clone, Debug)]
+pub struct LogGrid {
+    values: Vec<f64>,
+}
+
+impl LogGrid {
+    /// `n` points from `hi` down to `lo` (inclusive), log-spaced.
+    pub fn descending(hi: f64, lo: f64, n: usize) -> Self {
+        assert!(hi > 0.0 && lo > 0.0 && hi >= lo && n >= 2);
+        let (lh, ll) = (hi.ln(), lo.ln());
+        let values = (0..n)
+            .map(|k| (lh + (ll - lh) * k as f64 / (n - 1) as f64).exp())
+            .collect();
+        Self { values }
+    }
+
+    /// `n` points from `lo` up to `hi` (inclusive), log-spaced.
+    pub fn ascending(lo: f64, hi: f64, n: usize) -> Self {
+        let mut g = Self::descending(hi, lo, n);
+        g.values.reverse();
+        Self { values: g.values }
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// The paper's λ grid: 100 points, `λ_max/100 … λ_max`, descending.
+pub fn lambda_grid(lambda_max: f64, n: usize) -> LogGrid {
+    LogGrid::descending(lambda_max, lambda_max / 100.0, n)
+}
+
+/// The paper's δ grid: 100 points, `δ_max/100 … δ_max`, ascending.
+pub fn delta_grid(delta_max: f64, n: usize) -> LogGrid {
+    LogGrid::ascending(delta_max / 100.0, delta_max, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn descending_endpoints_and_monotonic() {
+        let g = lambda_grid(50.0, 100);
+        assert_eq!(g.len(), 100);
+        assert!((g.values()[0] - 50.0).abs() < 1e-12);
+        assert!((g.values()[99] - 0.5).abs() < 1e-12);
+        for w in g.values().windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+
+    #[test]
+    fn ascending_mirror() {
+        let g = delta_grid(10.0, 5);
+        assert!((g.values()[0] - 0.1).abs() < 1e-12);
+        assert!((g.values()[4] - 10.0).abs() < 1e-12);
+        for w in g.values().windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn log_spacing_constant_ratio() {
+        let g = lambda_grid(100.0, 5);
+        let v = g.values();
+        let r0 = v[0] / v[1];
+        for w in v.windows(2) {
+            assert!((w[0] / w[1] - r0).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Per-point and per-path metrics — exactly what Tables 4/5 and Figures
+//! 1–6 report: wall-clock, iterations, dot products, active features,
+//! train/test MSE, ℓ1 norm.
+
+use crate::data::Dataset;
+use crate::linalg::ops;
+
+/// Metrics at one regularization value.
+#[derive(Clone, Debug)]
+pub struct PathPoint {
+    /// λ (penalized) or δ (constrained)
+    pub reg: f64,
+    /// ‖α‖₁ of the solution (the x-axis of Figs 3–6)
+    pub l1_norm: f64,
+    /// number of nonzero coefficients
+    pub active: usize,
+    /// training MSE = ‖Xα − y‖²/m (== 2f/m)
+    pub train_mse: f64,
+    /// test MSE (None when the dataset has no test split)
+    pub test_mse: Option<f64>,
+    /// solver iterations spent on this point
+    pub iters: u64,
+    /// dot products spent on this point
+    pub dots: u64,
+    /// solver converged (vs. iteration cap)
+    pub converged: bool,
+    /// coefficients of selected features, if the caller asked to track
+    /// specific indices (Figs 1–2)
+    pub tracked_coefs: Vec<f64>,
+}
+
+/// Aggregate over a full regularization path.
+#[derive(Clone, Debug)]
+pub struct PathResult {
+    pub solver: String,
+    pub dataset: String,
+    pub points: Vec<PathPoint>,
+    /// total solver wall-clock (setup like σ-precompute included)
+    pub seconds: f64,
+    /// total iterations over the path
+    pub total_iters: u64,
+    /// total dot products (including the p-dot σ/‖z‖ precompute, counted
+    /// once — paper convention)
+    pub total_dots: u64,
+}
+
+impl PathResult {
+    /// Average active features along the path (Table 4/5 row).
+    pub fn avg_active(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.active as f64).sum::<f64>() / self.points.len() as f64
+    }
+
+    /// Paper-style summary row: time, iters, dots, active.
+    pub fn summary_row(&self) -> String {
+        format!(
+            "{:<14} {:>10} {:>10.3e} {:>10.3e} {:>12.3e} {:>10.1}",
+            self.solver,
+            self.dataset,
+            self.seconds,
+            self.total_iters as f64,
+            self.total_dots as f64,
+            self.avg_active()
+        )
+    }
+}
+
+/// Evaluate train/test MSE and sparsity for a coefficient vector.
+pub fn evaluate_point(
+    ds: &Dataset,
+    alpha: &[f64],
+    reg: f64,
+    iters: u64,
+    dots: u64,
+    converged: bool,
+    tracked: &[usize],
+) -> PathPoint {
+    let m = ds.rows();
+    let mut pred = vec![0.0; m];
+    ds.x.matvec(alpha, &mut pred);
+    let train_mse = ops::mse(&pred, &ds.y);
+
+    let test_mse = match (&ds.x_test, &ds.y_test) {
+        (Some(xt), Some(yt)) => {
+            let mut pt = vec![0.0; xt.rows()];
+            xt.matvec(alpha, &mut pt);
+            Some(ops::mse(&pt, yt))
+        }
+        _ => None,
+    };
+
+    PathPoint {
+        reg,
+        l1_norm: ops::nrm1(alpha),
+        active: ops::nnz(alpha),
+        train_mse,
+        test_mse,
+        iters,
+        dots,
+        converged,
+        tracked_coefs: tracked.iter().map(|&j| alpha[j]).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{assemble, synth};
+    use crate::linalg::Design;
+
+    fn tiny_dataset() -> Dataset {
+        let d = synth::make_regression(&synth::SynthSpec {
+            n_samples: 30,
+            n_features: 10,
+            n_informative: 3,
+            noise: 0.5,
+            seed: 1,
+        });
+        assemble("tiny", d.x, d.y, 20, Some(d.ground_truth))
+    }
+
+    #[test]
+    fn evaluate_point_zero_solution() {
+        let ds = tiny_dataset();
+        let alpha = vec![0.0; 10];
+        let pt = evaluate_point(&ds, &alpha, 1.0, 5, 50, true, &[]);
+        assert_eq!(pt.active, 0);
+        assert_eq!(pt.l1_norm, 0.0);
+        // zero model's train MSE = var(y) (y centered)
+        let var = ds.y.iter().map(|v| v * v).sum::<f64>() / ds.y.len() as f64;
+        assert!((pt.train_mse - var).abs() < 1e-12);
+        assert!(pt.test_mse.is_some());
+    }
+
+    #[test]
+    fn tracked_coefficients_extracted() {
+        let ds = tiny_dataset();
+        let mut alpha = vec![0.0; 10];
+        alpha[3] = 1.5;
+        alpha[7] = -0.5;
+        let pt = evaluate_point(&ds, &alpha, 0.5, 1, 1, true, &[3, 7, 9]);
+        assert_eq!(pt.tracked_coefs, vec![1.5, -0.5, 0.0]);
+        assert_eq!(pt.active, 2);
+    }
+
+    #[test]
+    fn ground_truth_has_low_mse() {
+        let ds = tiny_dataset();
+        let gt = ds.ground_truth.clone().unwrap();
+        let pt = evaluate_point(&ds, &gt, 0.0, 0, 0, true, &[]);
+        let zero = evaluate_point(&ds, &vec![0.0; 10], 0.0, 0, 0, true, &[]);
+        assert!(pt.train_mse < 0.1 * zero.train_mse);
+        assert!(pt.test_mse.unwrap() < 0.1 * zero.test_mse.unwrap());
+    }
+
+    #[test]
+    fn path_result_aggregates() {
+        let ds = tiny_dataset();
+        let a = vec![0.0; 10];
+        let points: Vec<PathPoint> = (0..4)
+            .map(|k| evaluate_point(&ds, &a, k as f64, 2, 10, true, &[]))
+            .collect();
+        let pr = PathResult {
+            solver: "test".into(),
+            dataset: "tiny".into(),
+            points,
+            seconds: 0.5,
+            total_iters: 8,
+            total_dots: 40,
+        };
+        assert_eq!(pr.avg_active(), 0.0);
+        assert!(pr.summary_row().contains("test"));
+    }
+
+    #[test]
+    fn dense_design_used() {
+        let ds = tiny_dataset();
+        assert!(matches!(ds.x.storage(), crate::linalg::Storage::Dense(_)));
+        let _ = Design::dense(crate::linalg::DenseMatrix::zeros(2, 2));
+    }
+}

@@ -1,0 +1,10 @@
+//! Regularization-path layer: grids, per-point metrics, and the warm-start
+//! path runner (paper §5 conventions).
+
+pub mod grid;
+pub mod metrics;
+pub mod runner;
+
+pub use grid::{delta_grid, lambda_grid, LogGrid};
+pub use metrics::{evaluate_point, PathPoint, PathResult};
+pub use runner::{plan_delta_max, run_path, PathConfig, SolverKind};

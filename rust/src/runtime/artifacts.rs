@@ -1,0 +1,135 @@
+//! Artifact manifest: the I/O contract between `python/compile/aot.py` and
+//! the Rust runtime (`artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// One AOT-compiled FW-step variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    /// HLO text file name (relative to the artifacts dir)
+    pub name: String,
+    /// sample size this variant was lowered for
+    pub kappa: usize,
+    /// number of training rows
+    pub m: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest, String> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| format!("read {path:?}: {e} (run `make artifacts`)"))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest, String> {
+        let json = Json::parse(text).map_err(|e| format!("manifest: {e}"))?;
+        let kind = json.get("kind").as_str().unwrap_or("");
+        if kind != "sfw-lasso-fw-step" {
+            return Err(format!("unexpected manifest kind '{kind}'"));
+        }
+        let arr = json
+            .get("artifacts")
+            .as_arr()
+            .ok_or("manifest: missing 'artifacts' array")?;
+        let mut artifacts = Vec::with_capacity(arr.len());
+        for a in arr {
+            artifacts.push(ArtifactSpec {
+                name: a
+                    .get("name")
+                    .as_str()
+                    .ok_or("artifact missing name")?
+                    .to_string(),
+                kappa: a.get("kappa").as_usize().ok_or("artifact missing kappa")?,
+                m: a.get("m").as_usize().ok_or("artifact missing m")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find the variant for exactly (kappa, m).
+    pub fn find(&self, kappa: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.kappa == kappa && a.m == m)
+    }
+
+    /// Find the smallest variant that fits (kappa ≤ variant.kappa and
+    /// m ≤ variant.m) — callers pad their inputs up to the variant shape.
+    pub fn find_fitting(&self, kappa: usize, m: usize) -> Option<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kappa >= kappa && a.m >= m)
+            .min_by_key(|a| a.kappa * a.m)
+    }
+
+    /// Absolute path of an artifact.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.name)
+    }
+}
+
+/// Default artifacts directory: `$SFW_ARTIFACTS_DIR` or `artifacts/`.
+pub fn default_dir() -> PathBuf {
+    std::env::var("SFW_ARTIFACTS_DIR")
+        .map(Into::into)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "kind": "sfw-lasso-fw-step",
+        "artifacts": [
+            {"name": "fw_step_k194_m200.hlo.txt", "kappa": 194, "m": 200,
+             "inputs": [], "outputs": []},
+            {"name": "fw_step_k1616_m200.hlo.txt", "kappa": 1616, "m": 200,
+             "inputs": [], "outputs": []}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert!(m.find(194, 200).is_some());
+        assert!(m.find(999, 200).is_none());
+        assert_eq!(
+            m.path_of(&m.artifacts[0]),
+            PathBuf::from("/tmp/a/fw_step_k194_m200.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn find_fitting_picks_smallest_superset() {
+        let m = Manifest::parse(Path::new("."), SAMPLE).unwrap();
+        let f = m.find_fitting(150, 200).unwrap();
+        assert_eq!(f.kappa, 194);
+        let f = m.find_fitting(200, 200).unwrap();
+        assert_eq!(f.kappa, 1616);
+        assert!(m.find_fitting(2000, 200).is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_kind() {
+        let bad = SAMPLE.replace("sfw-lasso-fw-step", "other");
+        assert!(Manifest::parse(Path::new("."), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse(Path::new("."), "{").is_err());
+        assert!(Manifest::parse(Path::new("."), "{}").is_err());
+    }
+}

@@ -1,0 +1,130 @@
+//! PJRT execution engine: CPU client + compile-once executable cache for
+//! the FW-step artifacts.
+//!
+//! Loading follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! (text interchange — see `python/compile/aot.py` docstring) →
+//! `XlaComputation::from_proto` → `client.compile`. Each artifact compiles
+//! once; executions reuse the cached executable.
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+
+/// Outputs of one FW step evaluated by the XLA graph (artifact contract,
+/// see `python/compile/model.py`).
+#[derive(Clone, Copy, Debug)]
+pub struct FwStepOut {
+    /// argmax index *within the sample*
+    pub i_local: usize,
+    /// gradient coordinate ∇f(α)_{i*}
+    pub g_i: f64,
+    /// δ̃ = −δ·sign(g_i)
+    pub delta_signed: f64,
+    /// line-search step λ* ∈ [0, 1]
+    pub lambda: f64,
+    /// updated S = ‖Xα⁺‖²
+    pub s_new: f64,
+    /// updated F = (Xα⁺)ᵀy
+    pub f_new: f64,
+}
+
+/// PJRT CPU client + executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client and parse the manifest. Executables compile
+    /// lazily on first use (or eagerly via [`Self::compile_all`]).
+    pub fn new(manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self { client, manifest, exes: HashMap::new() })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
+        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+        Self::new(manifest)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile every artifact in the manifest up front.
+    pub fn compile_all(&mut self) -> Result<()> {
+        let specs: Vec<ArtifactSpec> = self.manifest.artifacts.clone();
+        for spec in &specs {
+            self.ensure_compiled(spec)?;
+        }
+        Ok(())
+    }
+
+    fn ensure_compiled(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if self.exes.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = self.manifest.path_of(spec);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", spec.name))?;
+        self.exes.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute one FW step on the (kappa, m) variant.
+    ///
+    /// `xs` is the gathered sample block, row-major (kappa × m): row i is
+    /// the (densified) column `z_{S[i]}`. Slices must match the variant
+    /// shape exactly (pad at the call site via `find_fitting`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fw_step(
+        &mut self,
+        spec: &ArtifactSpec,
+        xs: &[f32],
+        q: &[f32],
+        sigma_s: &[f32],
+        norms_s: &[f32],
+        s: f64,
+        f: f64,
+        delta: f64,
+    ) -> Result<FwStepOut> {
+        let (kappa, m) = (spec.kappa, spec.m);
+        anyhow::ensure!(xs.len() == kappa * m, "xs len {} != {}", xs.len(), kappa * m);
+        anyhow::ensure!(q.len() == m, "q len");
+        anyhow::ensure!(sigma_s.len() == kappa, "sigma_s len");
+        anyhow::ensure!(norms_s.len() == kappa, "norms_s len");
+        self.ensure_compiled(spec)?;
+        let exe = self.exes.get(&spec.name).expect("just compiled");
+
+        let xs_lit = xla::Literal::vec1(xs).reshape(&[kappa as i64, m as i64])?;
+        let q_lit = xla::Literal::vec1(q);
+        let sig_lit = xla::Literal::vec1(sigma_s);
+        let nrm_lit = xla::Literal::vec1(norms_s);
+        let scal_lit = xla::Literal::vec1(&[s as f32, f as f32, delta as f32]);
+
+        let result = exe
+            .execute::<xla::Literal>(&[xs_lit, q_lit, sig_lit, nrm_lit, scal_lit])?
+            [0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(outs.len() == 6, "expected 6 outputs, got {}", outs.len());
+
+        let i_local = outs[0].get_first_element::<i32>()? as usize;
+        let g_i = outs[1].get_first_element::<f32>()? as f64;
+        let delta_signed = outs[2].get_first_element::<f32>()? as f64;
+        let lambda = outs[3].get_first_element::<f32>()? as f64;
+        let s_new = outs[4].get_first_element::<f32>()? as f64;
+        let f_new = outs[5].get_first_element::<f32>()? as f64;
+
+        Ok(FwStepOut { i_local, g_i, delta_signed, lambda, s_new, f_new })
+    }
+}

@@ -1,0 +1,154 @@
+//! XLA-backed stochastic FW: the request-path demonstration that the whole
+//! per-iteration math (sampled correlation kernel → argmax → eq.-8 line
+//! search → S/F recursions) runs inside the AOT-compiled artifact, with
+//! Rust doing only sampling, gather, and the O(nnz) rank-1 state updates.
+//!
+//! This backend targets the dense, small-m regime the artifacts are
+//! lowered for (the synthetic experiments). The huge sparse datasets use
+//! the native backend — same math, cross-checked in `rust/tests/`.
+
+use super::artifacts::ArtifactSpec;
+use super::engine::XlaRuntime;
+use crate::solvers::linesearch::FwState;
+use crate::solvers::sampling::SamplingStrategy;
+use crate::solvers::{Problem, RunResult, SolveOptions};
+use crate::util::rng::Xoshiro256;
+use anyhow::{anyhow, Result};
+
+/// Stochastic-FW solver executing each step through the XLA artifact.
+pub struct XlaSfw {
+    pub strategy: SamplingStrategy,
+    pub opts: SolveOptions,
+    rng: Xoshiro256,
+    // scratch (reused across iterations; zero allocation in the loop)
+    sample: Vec<usize>,
+    xs: Vec<f32>,
+    q: Vec<f32>,
+    sigma_s: Vec<f32>,
+    norms_s: Vec<f32>,
+}
+
+impl XlaSfw {
+    pub fn new(strategy: SamplingStrategy, opts: SolveOptions) -> Self {
+        Self {
+            strategy,
+            opts,
+            rng: Xoshiro256::seed_from_u64(opts.seed),
+            sample: Vec::new(),
+            xs: Vec::new(),
+            q: Vec::new(),
+            sigma_s: Vec::new(),
+            norms_s: Vec::new(),
+        }
+    }
+
+    /// Pick (or validate) the artifact variant for this problem.
+    pub fn pick_spec<'a>(
+        &self,
+        rt: &'a XlaRuntime,
+        prob: &Problem<'_>,
+    ) -> Result<&'a ArtifactSpec> {
+        let kappa = self.strategy.kappa(prob.p());
+        rt.manifest()
+            .find_fitting(kappa, prob.m())
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact fits kappa={kappa}, m={} — regenerate with \
+                     `python -m compile.aot --shapes {kappa}x{}`",
+                    prob.m(),
+                    prob.m()
+                )
+            })
+    }
+
+    /// Solve `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ` with XLA-executed steps.
+    pub fn run(
+        &mut self,
+        rt: &mut XlaRuntime,
+        prob: &Problem<'_>,
+        state: &mut FwState,
+        delta: f64,
+    ) -> Result<RunResult> {
+        let p = prob.p();
+        let m = prob.m();
+        let kappa = self.strategy.kappa(p);
+        let spec = self.pick_spec(rt, prob)?.clone();
+        let (ka, ma) = (spec.kappa, spec.m);
+
+        // scratch shaped to the artifact (padding: extra rows get σ = 0,
+        // norms = 1, zero columns ⇒ g = 0, never beating a real |g| > 0;
+        // extra m-columns of q/xs are zero ⇒ contribute nothing)
+        self.xs.resize(ka * ma, 0.0);
+        self.q.resize(ma, 0.0);
+        self.sigma_s.resize(ka, 0.0);
+        self.norms_s.resize(ka, 1.0);
+
+        let mut dots = 0u64;
+        let mut iters = 0u64;
+        let mut converged = false;
+        let mut small_streak = 0usize;
+
+        while (iters as usize) < self.opts.max_iters {
+            iters += 1;
+            self.rng.subset(p, kappa, &mut self.sample);
+
+            // gather: densify each sampled column into an xs row
+            for (row, &j) in self.sample.iter().enumerate() {
+                let dst = &mut self.xs[row * ma..row * ma + m];
+                prob.x.densify_col(j, dst);
+                self.sigma_s[row] = prob.cache.sigma[j] as f32;
+                self.norms_s[row] = prob.cache.norm_sq[j] as f32;
+            }
+            for row in self.sample.len()..ka {
+                self.xs[row * ma..(row + 1) * ma].fill(0.0);
+                self.sigma_s[row] = 0.0;
+                self.norms_s[row] = 1.0;
+            }
+            state.write_q(&mut self.q[..m]);
+
+            let out = rt.fw_step(
+                &spec,
+                &self.xs,
+                &self.q,
+                &self.sigma_s,
+                &self.norms_s,
+                state.s,
+                state.f,
+                delta,
+            )?;
+            dots += kappa as u64;
+
+            anyhow::ensure!(
+                out.i_local < self.sample.len(),
+                "artifact chose a padded row ({} ≥ {})",
+                out.i_local,
+                self.sample.len()
+            );
+            let i_global = self.sample[out.i_local];
+            let info = state.apply_step(
+                prob,
+                i_global,
+                out.lambda,
+                out.delta_signed,
+                out.s_new,
+                out.f_new,
+            );
+            if info.small(self.opts.eps) {
+                small_streak += 1;
+                if small_streak >= self.opts.patience.max(1) {
+                    converged = true;
+                    break;
+                }
+            } else {
+                small_streak = 0;
+            }
+        }
+
+        Ok(RunResult {
+            iters,
+            dots,
+            converged,
+            objective: state.objective(prob),
+        })
+    }
+}

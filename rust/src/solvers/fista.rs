@@ -1,0 +1,197 @@
+//! FISTA — accelerated proximal gradient for the *penalized* Lasso
+//! (Beck & Teboulle 2009), the SLEP-Regularized baseline of Tables 2/4
+//! ("Accelerated Gradient + Reg. Proj.", O(1/√ε) iterations).
+//!
+//! Step: `α⁺ = S_{λ/L}(w − ∇f(w)/L)` with Nesterov momentum on `w`, step
+//! `1/L`, `L = ‖X‖₂²` (power iteration, computed once per dataset and
+//! shared across the path). Adaptive restart on objective increase keeps
+//! momentum healthy across warm starts.
+
+use super::{Problem, RunResult, SolveOptions};
+use crate::linalg::ops::{self, soft_threshold};
+
+/// FISTA solver; scratch buffers persist across path points.
+pub struct Fista {
+    pub opts: SolveOptions,
+    /// Lipschitz constant ‖X‖₂² (caller provides; see
+    /// [`crate::linalg::Design::spectral_norm_sq`])
+    pub lipschitz: f64,
+    w: Vec<f64>,
+    grad: Vec<f64>,
+    q: Vec<f64>,
+    alpha_prev: Vec<f64>,
+}
+
+impl Fista {
+    pub fn new(opts: SolveOptions, lipschitz: f64) -> Self {
+        Self {
+            opts,
+            lipschitz,
+            w: Vec::new(),
+            grad: Vec::new(),
+            q: Vec::new(),
+            alpha_prev: Vec::new(),
+        }
+    }
+
+    /// Solve at penalty `lambda`, warm-starting from `alpha` (in place).
+    ///
+    /// Accounting: each iteration evaluates one full gradient
+    /// `Xᵀ(Xw − y)` = p dot products + ‖w‖₀ axpys; we count p + ‖w‖₀
+    /// (matching the paper's O(mp) per-iteration entry for SLEP).
+    pub fn run(&mut self, prob: &Problem<'_>, alpha: &mut [f64], lambda: f64) -> RunResult {
+        let (m, p) = (prob.m(), prob.p());
+        let l = self.lipschitz.max(1e-12);
+        self.w.clear();
+        self.w.extend_from_slice(alpha);
+        self.grad.resize(p, 0.0);
+        self.q.resize(m, 0.0);
+        self.alpha_prev.clear();
+        self.alpha_prev.extend_from_slice(alpha);
+
+        let mut t = 1.0f64;
+        let mut dots = 0u64;
+        let mut iters = 0u64;
+        let mut converged = false;
+        let mut f_prev = f64::INFINITY;
+
+        while (iters as usize) < self.opts.max_iters {
+            iters += 1;
+            // ∇f(w) = Xᵀ(Xw − y)
+            prob.x.matvec(&self.w, &mut self.q);
+            dots += ops::nnz(&self.w) as u64;
+            for (qi, yi) in self.q.iter_mut().zip(prob.y.iter()) {
+                *qi -= yi;
+            }
+            prob.x.tr_matvec(&self.q, &mut self.grad);
+            dots += p as u64;
+
+            // proximal step from w
+            let mut max_delta = 0.0f64;
+            for j in 0..p {
+                let cand = soft_threshold(self.w[j] - self.grad[j] / l, lambda / l);
+                let d = (cand - self.alpha_prev[j]).abs();
+                max_delta = max_delta.max(d);
+                alpha[j] = cand;
+            }
+
+            // objective for restart test (reuses q = Xw − y? need Xα − y;
+            // cheap approximation: restart on momentum-direction test)
+            let f_curr = {
+                // exact objective every iteration would double the cost;
+                // use the gradient-mapping restart criterion instead:
+                // restart if (w − α⁺)ᵀ(α⁺ − α_prev) > 0 (O(p), no dots)
+                let mut s = 0.0;
+                for j in 0..p {
+                    s += (self.w[j] - alpha[j]) * (alpha[j] - self.alpha_prev[j]);
+                }
+                s
+            };
+            let restart = f_curr > 0.0;
+
+            // momentum
+            let t_next = if restart { 1.0 } else { 0.5 * (1.0 + (1.0 + 4.0 * t * t).sqrt()) };
+            let coef = if restart { 0.0 } else { (t - 1.0) / t_next };
+            for j in 0..p {
+                self.w[j] = alpha[j] + coef * (alpha[j] - self.alpha_prev[j]);
+            }
+            t = t_next;
+            self.alpha_prev.copy_from_slice(alpha);
+
+            // scale-free criterion (see linesearch::StepInfo::small)
+            let alpha_inf = crate::linalg::ops::nrm_inf(alpha);
+            if max_delta <= self.opts.eps * alpha_inf.max(1.0) {
+                converged = true;
+                break;
+            }
+            f_prev = f_prev.min(f_curr);
+        }
+
+        RunResult {
+            iters,
+            dots,
+            converged,
+            objective: prob.objective(alpha)
+                + lambda * alpha.iter().map(|a| a.abs()).sum::<f64>(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ColumnCache, DenseMatrix, Design};
+    use crate::solvers::cd::CoordinateDescent;
+    use crate::util::rng::Xoshiro256;
+
+    fn make_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+        (Design::dense(x), y)
+    }
+
+    #[test]
+    fn matches_cd_solution() {
+        let (x, y) = make_problem(8, 30, 20);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let lambda = 1.5;
+        let l = x.spectral_norm_sq(100, 1);
+
+        let mut cd = CoordinateDescent::new(SolveOptions { 
+            eps: 1e-10,
+            max_iters: 100_000,
+            seed: 0, ..Default::default() });
+        let mut a1 = vec![0.0; 20];
+        cd.reset_residual(&prob, &a1);
+        let r1 = cd.run(&prob, &mut a1, lambda);
+
+        let mut fista = Fista::new(
+            SolveOptions {  eps: 1e-9, max_iters: 100_000, seed: 0, ..Default::default() },
+            l,
+        );
+        let mut a2 = vec![0.0; 20];
+        let r2 = fista.run(&prob, &mut a2, lambda);
+
+        assert!(r2.converged);
+        assert!(
+            (r1.objective - r2.objective).abs() < 1e-5 * (1.0 + r1.objective),
+            "cd {} vs fista {}",
+            r1.objective,
+            r2.objective
+        );
+        crate::testing::assert_slices_close(&a1, &a2, 2e-4, 2e-4);
+    }
+
+    #[test]
+    fn converges_from_warm_start() {
+        let (x, y) = make_problem(9, 25, 15);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let l = x.spectral_norm_sq(100, 2);
+        let mut fista = Fista::new(
+            SolveOptions {  eps: 1e-8, max_iters: 50_000, seed: 0, ..Default::default() },
+            l,
+        );
+        let mut alpha = vec![0.0; 15];
+        let r1 = fista.run(&prob, &mut alpha, 2.0);
+        let r2 = fista.run(&prob, &mut alpha, 1.0); // warm from λ=2 solution
+        assert!(r1.converged && r2.converged);
+        // warm start from a nearby solution should converge reasonably fast
+        assert!(r2.iters < 20_000);
+    }
+
+    #[test]
+    fn zero_solution_at_lambda_max() {
+        let (x, y) = make_problem(10, 20, 25);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let lmax = crate::solvers::cd::lambda_max(&prob);
+        let l = x.spectral_norm_sq(100, 3);
+        let mut fista = Fista::new(SolveOptions::default(), l);
+        let mut alpha = vec![0.0; 25];
+        fista.run(&prob, &mut alpha, lmax * 1.01);
+        assert!(alpha.iter().all(|&a| a == 0.0));
+    }
+}

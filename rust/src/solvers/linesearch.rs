@@ -1,0 +1,499 @@
+//! Frank-Wolfe state with the paper's closed-form line search (eq. 8) and
+//! `S`/`F` recursions — plus the scaled-representation trick that makes the
+//! FW iteration truly O(κ·s):
+//!
+//! A FW update is `α ← (1−λ)α + λδ̃ e_i`. Applied literally, the `(1−λ)`
+//! rescale costs O(p) per iteration (4.3M multiplications on E2006-log1p).
+//! Both `α` and the fitted values `q = Xα` scale by the *same* `(1−λ)`,
+//! so we store `α = c·α̂`, `q = c·q̂` with a shared scalar `c` and update
+//!
+//! ```text
+//! c ← (1−λ)c;   α̂ᵢ += λδ̃/c;   q̂ += (λδ̃/c)·zᵢ
+//! ```
+//!
+//! making the iteration cost one sparse axpy + O(1) scalars. `c` shrinks
+//! monotonically; when it underflows toward 1e-150 the representation is
+//! renormalized (exact, just refactoring the product).
+//!
+//! Quantities tracked (paper §4):
+//! `S = ‖Xα‖²`, `F = (Xα)ᵀy`, objective `f = ½yᵀy + ½S − F`,
+//! gradient coordinate `∇ᵢ = −σᵢ + zᵢᵀq`, and
+//! `λ* = (S − δ̃∇ᵢ − F) / (S − 2δ̃Gᵢ + δ̃²‖zᵢ‖²)` with `Gᵢ = ∇ᵢ + σᵢ = zᵢᵀq`.
+
+use super::Problem;
+use crate::linalg::ops;
+
+/// Mutable Frank-Wolfe iterate with scaled representation.
+pub struct FwState {
+    /// scaled coefficients: α = c · α̂
+    alpha_hat: Vec<f64>,
+    /// scaled fitted values: q = Xα = c · q̂
+    q_hat: Vec<f64>,
+    /// shared scale factor
+    c: f64,
+    /// S = ‖Xα‖²
+    pub s: f64,
+    /// F = (Xα)ᵀy
+    pub f: f64,
+    /// indices j with α̂ⱼ ≠ 0 (insertion order)
+    active: Vec<usize>,
+}
+
+/// Everything the caller needs to know about one FW step.
+#[derive(Clone, Copy, Debug)]
+pub struct StepInfo {
+    /// chosen step size λ* ∈ [0, 1]
+    pub lambda: f64,
+    /// ‖α_new − α_old‖∞ (the Glmnet-style stopping metric)
+    pub linf_change: f64,
+    /// signed vertex weight δ̃ = −δ·sign(∇ᵢ)
+    pub delta_signed: f64,
+    /// ‖α_new‖∞ (scale reference for the relative stopping rule)
+    pub alpha_inf: f64,
+}
+
+impl StepInfo {
+    /// Scale-free convergence test: `‖Δα‖∞ ≤ ε·max(1, ‖α‖∞)`.
+    ///
+    /// The paper compares `‖Δα‖∞` against an absolute ε = 1e-3, which is
+    /// meaningful on its O(1)-scale standardized benchmarks but degenerates
+    /// when coefficients are O(10³) (λ would need to reach 1e-7). All our
+    /// solvers use this relative form — identical behaviour on O(1)-scale
+    /// data, sane behaviour elsewhere (DESIGN.md §7).
+    #[inline]
+    pub fn small(&self, eps: f64) -> bool {
+        self.linf_change <= eps * self.alpha_inf.max(1.0)
+    }
+}
+
+impl FwState {
+    /// Start from α = 0.
+    pub fn zero(p: usize, m: usize) -> Self {
+        Self {
+            alpha_hat: vec![0.0; p],
+            q_hat: vec![0.0; m],
+            c: 1.0,
+            s: 0.0,
+            f: 0.0,
+            active: Vec::new(),
+        }
+    }
+
+    /// Warm start from a concrete coefficient vector. Costs `‖α‖₀` column
+    /// axpys (recorded by the caller) to rebuild `q = Xα`.
+    pub fn from_alpha(prob: &Problem<'_>, alpha: &[f64]) -> Self {
+        let (m, p) = (prob.m(), prob.p());
+        assert_eq!(alpha.len(), p);
+        let mut st = Self::zero(p, m);
+        for (j, &a) in alpha.iter().enumerate() {
+            if a != 0.0 {
+                st.alpha_hat[j] = a;
+                st.active.push(j);
+                prob.x.col_axpy(j, a, &mut st.q_hat);
+            }
+        }
+        st.s = ops::nrm2_sq(&st.q_hat);
+        st.f = ops::dot(&st.q_hat, prob.y);
+        st
+    }
+
+    /// Number of warm-start axpys (for dot-product accounting).
+    pub fn nnz(&self) -> usize {
+        self.active
+            .iter()
+            .filter(|&&j| self.alpha_hat[j] != 0.0)
+            .count()
+    }
+
+    /// ℓ1 norm of the current iterate.
+    pub fn l1_norm(&self) -> f64 {
+        self.c.abs() * self.active.iter().map(|&j| self.alpha_hat[j].abs()).sum::<f64>()
+    }
+
+    /// Rescale the iterate so ‖α‖₁ = δ (the path warm-start heuristic of
+    /// §5: the constrained solution lies on the boundary when δ < ‖αᴿ‖₁).
+    /// Exact on S and F: α → rα ⇒ S → r²S, F → rF.
+    pub fn rescale_to_radius(&mut self, delta: f64) {
+        let l1 = self.l1_norm();
+        if l1 <= 0.0 {
+            return;
+        }
+        let r = delta / l1;
+        self.c *= r;
+        self.s *= r * r;
+        self.f *= r;
+    }
+
+    /// Gradient coordinate `∇f(α)ᵢ = −σᵢ + zᵢᵀq` — exactly one dot product
+    /// (the caller counts it).
+    #[inline]
+    pub fn grad_coord(&self, prob: &Problem<'_>, i: usize) -> f64 {
+        -prob.cache.sigma[i] + self.c * prob.x.col_dot(i, &self.q_hat)
+    }
+
+    /// Objective `½‖Xα − y‖² = ½yᵀy + ½S − F`.
+    #[inline]
+    pub fn objective(&self, prob: &Problem<'_>) -> f64 {
+        0.5 * prob.cache.yty + 0.5 * self.s - self.f
+    }
+
+    /// Materialize α (dense copy).
+    pub fn alpha(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.alpha_hat.len()];
+        for &j in &self.active {
+            out[j] = self.c * self.alpha_hat[j];
+        }
+        out
+    }
+
+    /// Materialize α into a caller buffer.
+    pub fn write_alpha(&self, out: &mut [f64]) {
+        out.fill(0.0);
+        for &j in &self.active {
+            out[j] = self.c * self.alpha_hat[j];
+        }
+    }
+
+    /// Active coordinates (insertion order; may include exact-zero entries
+    /// if a step landed exactly on a facet — callers use [`Self::nnz`] for
+    /// counts).
+    pub fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Current value of one coefficient.
+    #[inline]
+    pub fn alpha_coord(&self, j: usize) -> f64 {
+        self.c * self.alpha_hat[j]
+    }
+
+    /// Perform one FW step toward vertex `δ̃·eᵢ` where `δ̃ = −δ·sign(∇ᵢ)`,
+    /// with the eq.-8 exact line search. `grad_i` must be `∇f(α)ᵢ` (already
+    /// computed by the vertex search — no extra dot product needed).
+    pub fn step(&mut self, prob: &Problem<'_>, delta: f64, i: usize, grad_i: f64) -> StepInfo {
+        let sigma_i = prob.cache.sigma[i];
+        let znorm_sq = prob.cache.norm_sq[i];
+        let delta_signed = -delta * grad_i.signum();
+        // G_i = ∇ᵢ + σᵢ = zᵢᵀq
+        let g_i = grad_i + sigma_i;
+
+        let numer = self.s - delta_signed * grad_i - self.f;
+        let denom = self.s - 2.0 * delta_signed * g_i + delta_signed * delta_signed * znorm_sq;
+
+        let lambda = if denom <= 0.0 {
+            // Degenerate direction (q == δ̃z): any λ gives the same point.
+            0.0
+        } else {
+            (numer / denom).clamp(0.0, 1.0)
+        };
+
+        // ‖Δα‖∞ = λ·max( maxⱼ≠ᵢ |αⱼ| , |δ̃ − αᵢ| )
+        let alpha_i_old = self.alpha_coord(i);
+        let mut max_other = 0.0f64;
+        for &j in &self.active {
+            if j != i {
+                max_other = max_other.max((self.c * self.alpha_hat[j]).abs());
+            }
+        }
+        let linf_change = lambda * max_other.max((delta_signed - alpha_i_old).abs());
+        let alpha_i_new = alpha_i_old * (1.0 - lambda) + lambda * delta_signed;
+        let alpha_inf = (max_other * (1.0 - lambda)).max(alpha_i_new.abs());
+
+        if lambda >= 1.0 - 1e-15 {
+            // Full step: land exactly on the vertex. Reset the scaled
+            // representation (c would otherwise hit 0). Clear only the
+            // active entries — O(|active|), not O(p).
+            for &j in &self.active {
+                self.alpha_hat[j] = 0.0;
+            }
+            self.active.clear();
+            self.alpha_hat[i] = delta_signed;
+            self.active.push(i);
+            self.c = 1.0;
+            self.q_hat.fill(0.0);
+            prob.x.col_axpy(i, delta_signed, &mut self.q_hat);
+            self.s = delta_signed * delta_signed * znorm_sq;
+            self.f = delta_signed * sigma_i;
+            return StepInfo { lambda: 1.0, linf_change, delta_signed, alpha_inf: delta_signed.abs() };
+        }
+
+        if lambda > 0.0 {
+            // S/F recursions (paper §4)
+            let one_m = 1.0 - lambda;
+            self.s = one_m * one_m * self.s
+                + 2.0 * delta_signed * lambda * one_m * g_i
+                + delta_signed * delta_signed * lambda * lambda * znorm_sq;
+            self.f = one_m * self.f + delta_signed * lambda * sigma_i;
+
+            // scaled update
+            self.c *= one_m;
+            if self.c.abs() < 1e-150 {
+                self.renormalize();
+            }
+            let add = lambda * delta_signed / self.c;
+            if self.alpha_hat[i] == 0.0 {
+                self.active.push(i);
+            }
+            self.alpha_hat[i] += add;
+            prob.x.col_axpy(i, add, &mut self.q_hat);
+        }
+
+        StepInfo { lambda, linf_change, delta_signed, alpha_inf }
+    }
+
+    /// Materialize `q = Xα` into an f32 buffer (the XLA artifact's input
+    /// layout). O(m).
+    pub fn write_q(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.q_hat.len());
+        for (o, &v) in out.iter_mut().zip(self.q_hat.iter()) {
+            *o = (self.c * v) as f32;
+        }
+    }
+
+    /// Apply a step whose line search was computed *externally* (by the
+    /// AOT XLA artifact): given (i, λ, δ̃, S', F') perform the same rank-1
+    /// state update as [`Self::step`] and return the same [`StepInfo`].
+    pub fn apply_step(
+        &mut self,
+        prob: &Problem<'_>,
+        i: usize,
+        lambda: f64,
+        delta_signed: f64,
+        s_new: f64,
+        f_new: f64,
+    ) -> StepInfo {
+        let alpha_i_old = self.alpha_coord(i);
+        let mut max_other = 0.0f64;
+        for &j in &self.active {
+            if j != i {
+                max_other = max_other.max((self.c * self.alpha_hat[j]).abs());
+            }
+        }
+        let linf_change = lambda * max_other.max((delta_signed - alpha_i_old).abs());
+        let alpha_i_new = alpha_i_old * (1.0 - lambda) + lambda * delta_signed;
+        let alpha_inf = (max_other * (1.0 - lambda)).max(alpha_i_new.abs());
+
+        if lambda >= 1.0 - 1e-15 {
+            for &j in &self.active {
+                self.alpha_hat[j] = 0.0;
+            }
+            self.active.clear();
+            self.alpha_hat[i] = delta_signed;
+            self.active.push(i);
+            self.c = 1.0;
+            self.q_hat.fill(0.0);
+            prob.x.col_axpy(i, delta_signed, &mut self.q_hat);
+            self.s = s_new;
+            self.f = f_new;
+            return StepInfo { lambda: 1.0, linf_change, delta_signed, alpha_inf: delta_signed.abs() };
+        }
+        if lambda > 0.0 {
+            self.s = s_new;
+            self.f = f_new;
+            self.c *= 1.0 - lambda;
+            if self.c.abs() < 1e-150 {
+                self.renormalize();
+            }
+            let add = lambda * delta_signed / self.c;
+            if self.alpha_hat[i] == 0.0 {
+                self.active.push(i);
+            }
+            self.alpha_hat[i] += add;
+            prob.x.col_axpy(i, add, &mut self.q_hat);
+        }
+        StepInfo { lambda, linf_change, delta_signed, alpha_inf }
+    }
+
+    /// Fold the scalar `c` back into the stored vectors (called when `c`
+    /// underflows; exact refactoring).
+    fn renormalize(&mut self) {
+        for &j in &self.active {
+            self.alpha_hat[j] *= self.c;
+        }
+        for v in self.q_hat.iter_mut() {
+            *v *= self.c;
+        }
+        self.c = 1.0;
+    }
+
+    /// Exact duality gap `g(α) = αᵀ∇f(α) + δ‖∇f(α)‖∞` given a full
+    /// gradient vector (costs p dots to obtain — used by diagnostics and
+    /// the deterministic solver, not the stochastic hot loop).
+    pub fn duality_gap(&self, delta: f64, grad: &[f64]) -> f64 {
+        let mut dot_ag = 0.0;
+        for &j in &self.active {
+            dot_ag += self.alpha_coord(j) * grad[j];
+        }
+        dot_ag + delta * ops::nrm_inf(grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ColumnCache, DenseMatrix, Design};
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+        (Design::dense(x), y)
+    }
+
+    #[test]
+    fn objective_matches_direct_evaluation() {
+        let (x, y) = tiny_problem(1, 8, 5);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::zero(5, 8);
+        let delta = 1.5;
+        for _ in 0..10 {
+            // pick the best coordinate deterministically
+            let (mut best, mut best_val) = (0, 0.0f64);
+            for i in 0..5 {
+                let g = st.grad_coord(&prob, i);
+                if g.abs() > best_val {
+                    best_val = g.abs();
+                    best = i;
+                }
+            }
+            let g = st.grad_coord(&prob, best);
+            st.step(&prob, delta, best, g);
+            let direct = prob.objective(&st.alpha());
+            let tracked = st.objective(&prob);
+            assert!(
+                (direct - tracked).abs() < 1e-6 * (1.0 + direct.abs()),
+                "direct {direct} vs tracked {tracked}"
+            );
+        }
+    }
+
+    #[test]
+    fn linesearch_is_argmin_along_segment() {
+        let (x, y) = tiny_problem(2, 10, 6);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::zero(6, 10);
+        let delta = 2.0;
+
+        // take a couple of steps to get a nontrivial iterate
+        for i in [1usize, 3] {
+            let g = st.grad_coord(&prob, i);
+            st.step(&prob, delta, i, g);
+        }
+        // now verify the next step's λ minimizes f along the segment
+        let i = 4;
+        let g = st.grad_coord(&prob, i);
+        let alpha0 = st.alpha();
+        let ds = -delta * g.signum();
+        let mut st2 = FwState::from_alpha(&prob, &alpha0);
+        let info = st2.step(&prob, delta, i, g);
+
+        let f_along = |lam: f64| {
+            let mut a = alpha0.clone();
+            for v in a.iter_mut() {
+                *v *= 1.0 - lam;
+            }
+            a[i] += lam * ds;
+            prob.objective(&a)
+        };
+        let f_star = f_along(info.lambda);
+        for probe in [0.0, 0.05, 0.2, 0.5, 0.8, 1.0] {
+            assert!(
+                f_star <= f_along(probe) + 1e-9,
+                "λ*={} beaten by λ={probe}",
+                info.lambda
+            );
+        }
+    }
+
+    #[test]
+    fn full_step_resets_to_vertex() {
+        let (x, y) = tiny_problem(3, 6, 4);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::zero(4, 6);
+        // huge delta forces λ = 1 on the first step? Actually from zero,
+        // λ = |g|/(δ‖z‖²); use small δ to force λ = 1.
+        let delta = 1e-6;
+        let g = st.grad_coord(&prob, 0);
+        let info = st.step(&prob, delta, 0, g);
+        assert_eq!(info.lambda, 1.0);
+        let a = st.alpha();
+        assert_eq!(a.iter().filter(|&&v| v != 0.0).count(), 1);
+        assert!((a[0].abs() - delta).abs() < 1e-18);
+        // tracked invariants still consistent
+        let direct = prob.objective(&a);
+        assert!((direct - st.objective(&prob)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_start_matches_fresh_state() {
+        let (x, y) = tiny_problem(4, 7, 5);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let alpha = vec![0.5, 0.0, -0.25, 0.0, 1.0];
+        let st = FwState::from_alpha(&prob, &alpha);
+        assert_eq!(st.nnz(), 3);
+        assert!((st.l1_norm() - 1.75).abs() < 1e-12);
+        assert!((st.objective(&prob) - prob.objective(&alpha)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rescale_to_radius_scales_invariants() {
+        let (x, y) = tiny_problem(5, 7, 5);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let alpha = vec![1.0, -1.0, 0.0, 0.5, 0.0];
+        let mut st = FwState::from_alpha(&prob, &alpha);
+        st.rescale_to_radius(5.0);
+        assert!((st.l1_norm() - 5.0).abs() < 1e-9);
+        let direct = prob.objective(&st.alpha());
+        assert!((direct - st.objective(&prob)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn renormalization_is_transparent() {
+        let (x, y) = tiny_problem(6, 6, 4);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::from_alpha(&prob, &[0.3, -0.2, 0.1, 0.0]);
+        let before_alpha = st.alpha();
+        let before_s = st.s;
+        // force many tiny steps to shrink c, then check consistency
+        for _ in 0..200 {
+            st.c *= 0.1;
+            st.s *= 0.01;
+            st.f *= 0.1;
+            if st.c.abs() < 1e-150 {
+                st.renormalize();
+            }
+        }
+        // after shrinking by 10^-200 the state is ~0; invariant: alpha()
+        // remains finite and consistent with s/f
+        let a = st.alpha();
+        assert!(a.iter().all(|v| v.is_finite()));
+        let _ = (before_alpha, before_s);
+        let direct = prob.objective(&a);
+        assert!((direct - st.objective(&prob)).abs() < 1e-8);
+    }
+
+    #[test]
+    fn gradient_coordinate_matches_definition() {
+        let (x, y) = tiny_problem(7, 9, 6);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let alpha = vec![0.2, 0.0, -0.7, 0.0, 0.1, 0.0];
+        let st = FwState::from_alpha(&prob, &alpha);
+        // ∇f = Xᵀ(Xα − y)
+        let mut q = vec![0.0; 9];
+        x.matvec(&alpha, &mut q);
+        let resid: Vec<f64> = q.iter().zip(y.iter()).map(|(a, b)| a - b).collect();
+        for i in 0..6 {
+            let expected = x.col_dot(i, &resid);
+            let got = st.grad_coord(&prob, i);
+            assert!((expected - got).abs() < 1e-8, "coord {i}: {expected} vs {got}");
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Solver fleet.
+//!
+//! * [`sfw`] — **the paper's contribution**: randomized Frank-Wolfe
+//!   (Algorithm 2) for the constrained Lasso.
+//! * [`fw`] — deterministic Frank-Wolfe (the κ = p special case).
+//! * [`cd`] / [`scd`] — Glmnet-style cyclic coordinate descent and its
+//!   stochastic variant (penalized form) — the paper's main baselines.
+//! * [`fista`] / [`apg`] — accelerated gradient for the penalized /
+//!   constrained forms (the SLEP baselines of Table 2).
+//! * [`linesearch`] — the FW closed-form step-size (eq. 8) and the
+//!   S/F recursions, shared by `fw`/`sfw` and the XLA backend.
+//! * [`sampling`] — the §4.5 sampling-size strategies.
+//! * [`proj`] — exact ℓ1-ball projection (Duchi pivot), used by `apg`.
+//!
+//! All solvers share the [`Problem`] view and the paper's accounting: a
+//! **dot product** is one `zᵢᵀv` column product ([`Counters::dots`]), the
+//! machine-independent cost metric of Tables 4–5.
+
+pub mod apg;
+pub mod cd;
+pub mod elasticnet;
+pub mod fista;
+pub mod fw;
+pub mod linesearch;
+pub mod proj;
+pub mod sampling;
+pub mod scd;
+pub mod sfw;
+
+use crate::linalg::{ColumnCache, Design};
+
+/// Immutable view of one regression problem (standardized design, centered
+/// response, per-column caches).
+#[derive(Clone, Copy)]
+pub struct Problem<'a> {
+    pub x: &'a Design,
+    pub y: &'a [f64],
+    pub cache: &'a ColumnCache,
+}
+
+impl<'a> Problem<'a> {
+    pub fn new(x: &'a Design, y: &'a [f64], cache: &'a ColumnCache) -> Self {
+        Self { x, y, cache }
+    }
+
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.x.rows()
+    }
+
+    #[inline]
+    pub fn p(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Objective `½‖Xα − y‖²` evaluated from scratch (diagnostics only —
+    /// solvers track it recursively).
+    pub fn objective(&self, alpha: &[f64]) -> f64 {
+        let mut q = vec![0.0; self.m()];
+        self.x.matvec(alpha, &mut q);
+        0.5 * q
+            .iter()
+            .zip(self.y.iter())
+            .map(|(qi, yi)| (qi - yi) * (qi - yi))
+            .sum::<f64>()
+    }
+}
+
+/// Machine-independent cost accounting (paper Tables 4–5).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Counters {
+    /// column·vector products of any kind
+    pub dots: u64,
+    /// solver iterations (FW steps / CD cycles / gradient steps)
+    pub iters: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, other: Counters) {
+        self.dots += other.dots;
+        self.iters += other.iters;
+    }
+}
+
+/// Result of one solver run at a single regularization value.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// iterations used by this run
+    pub iters: u64,
+    /// dot products used by this run
+    pub dots: u64,
+    /// hit the `‖Δα‖∞ ≤ ε` criterion (vs. the iteration cap)
+    pub converged: bool,
+    /// final objective ½‖Xα − y‖²
+    pub objective: f64,
+}
+
+/// Common knobs shared by all solvers.
+#[derive(Clone, Copy, Debug)]
+pub struct SolveOptions {
+    /// stopping tolerance on ‖α_new − α_old‖∞ (paper: 1e-3)
+    pub eps: f64,
+    /// hard iteration cap per regularization value
+    pub max_iters: usize,
+    /// RNG seed (stochastic solvers)
+    pub seed: u64,
+    /// consecutive sub-ε steps required before declaring convergence.
+    ///
+    /// The paper stops as soon as `‖Δα‖∞ ≤ ε`; with a *sampled* vertex
+    /// search a single unlucky draw (no descent direction in S ⇒ λ* = 0)
+    /// would then stop the solver far from the optimum. Requiring a few
+    /// consecutive small steps makes the criterion robust to sampling
+    /// noise at negligible cost (documented divergence, DESIGN.md §7).
+    pub patience: usize,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        Self { eps: 1e-3, max_iters: 50_000, seed: 0x5F3759DF, patience: 10 }
+    }
+}

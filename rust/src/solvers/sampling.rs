@@ -1,0 +1,132 @@
+//! Sampling-size strategies for the randomized FW iteration (paper §4.5).
+//!
+//! Three ways to pick `κ = |S|`:
+//! * [`SamplingStrategy::Fraction`] — a fixed fraction of p (Table 3: the
+//!   1%/2%/3% used for the large-scale experiments).
+//! * [`SamplingStrategy::Confidence`] — eq. (12): smallest κ with
+//!   `P(S ∩ S* ≠ ∅) ≥ ρ` given an estimated sparsity level s
+//!   (used for the synthetic experiments, §5.1).
+//! * [`SamplingStrategy::TopQuantile`] — Theorem 1 (Schölkopf & Smola
+//!   6.33): p-independent κ with `P(best-of-S in top q̃ fraction) ≥ ρ`
+//!   (the famous κ = 194 ⇒ top-2% at 98%).
+
+/// How to choose the per-iteration sample size κ.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplingStrategy {
+    /// κ = ceil(fraction · p), clamped to [1, p]
+    Fraction(f64),
+    /// eq. (12): κ = ln(1−ρ)/ln(1−s/p) for sparsity estimate `s_est`
+    Confidence { rho: f64, s_est: usize },
+    /// Theorem 1: κ = ln(1−ρ)/ln(1−q̃) — independent of p
+    TopQuantile { rho: f64, quantile: f64 },
+    /// deterministic: κ = p (recovers standard FW)
+    Full,
+}
+
+impl SamplingStrategy {
+    /// Resolve to a concrete κ for a p-dimensional problem.
+    pub fn kappa(&self, p: usize) -> usize {
+        let k = match *self {
+            SamplingStrategy::Fraction(f) => {
+                assert!(f > 0.0 && f <= 1.0, "fraction must be in (0,1], got {f}");
+                (f * p as f64).ceil() as usize
+            }
+            SamplingStrategy::Confidence { rho, s_est } => {
+                assert!((0.0..1.0).contains(&rho), "rho must be in [0,1)");
+                let s = s_est.max(1).min(p) as f64;
+                let frac = s / p as f64;
+                if frac >= 1.0 {
+                    p
+                } else {
+                    // κ ≥ ln(1−ρ)/ln(1−s/p)
+                    ((1.0 - rho).ln() / (1.0 - frac).ln()).ceil() as usize
+                }
+            }
+            SamplingStrategy::TopQuantile { rho, quantile } => {
+                assert!((0.0..1.0).contains(&rho));
+                assert!(quantile > 0.0 && quantile < 1.0);
+                ((1.0 - rho).ln() / (1.0 - quantile).ln()).ceil() as usize
+            }
+            SamplingStrategy::Full => p,
+        };
+        k.clamp(1, p)
+    }
+
+    /// Human-readable label for reports.
+    pub fn label(&self) -> String {
+        match *self {
+            SamplingStrategy::Fraction(f) => format!("FW {:.0}%", f * 100.0),
+            SamplingStrategy::Confidence { rho, s_est } => {
+                format!("FW conf(ρ={rho}, s={s_est})")
+            }
+            SamplingStrategy::TopQuantile { rho, quantile } => {
+                format!("FW topq(ρ={rho}, q={quantile})")
+            }
+            SamplingStrategy::Full => "FW full".to_string(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_matches_table3() {
+        // Table 3 of the paper (1%/2%/3% of p)
+        assert_eq!(SamplingStrategy::Fraction(0.01).kappa(201_376), 2_014);
+        assert_eq!(SamplingStrategy::Fraction(0.02).kappa(635_376), 12_708);
+        assert_eq!(SamplingStrategy::Fraction(0.01).kappa(150_360), 1_504);
+        assert_eq!(SamplingStrategy::Fraction(0.03).kappa(4_272_227), 128_167);
+    }
+
+    #[test]
+    fn top_quantile_reproduces_194() {
+        // §4.5: κ ≈ 194 for top-2% at 98% confidence, independent of p
+        let s = SamplingStrategy::TopQuantile { rho: 0.98, quantile: 0.02 };
+        assert_eq!(s.kappa(1_000_000), 194);
+        assert_eq!(s.kappa(10_000_000), 194);
+    }
+
+    #[test]
+    fn confidence_matches_paper_examples() {
+        // §5.1: "sampling sizes of 372 and 324 points for the two problems
+        // of size 10000, and of 1616 and 1572 for those of size 50000"
+        // at 99% confidence with the empirical sparsity estimate s.
+        // κ = ln(0.01)/ln(1−s/p). Invert to recover the s the paper used:
+        // p=10000, κ=372 → s ≈ 123; κ=324 → s ≈ 142 — just check the
+        // formula's behaviour rather than the unstated s values:
+        let k = SamplingStrategy::Confidence { rho: 0.99, s_est: 124 }.kappa(10_000);
+        assert!((350..400).contains(&k), "κ = {k}");
+        let k = SamplingStrategy::Confidence { rho: 0.99, s_est: 143 }.kappa(50_000);
+        assert!((1500..1700).contains(&k), "κ = {k}");
+    }
+
+    #[test]
+    fn confidence_worst_cases() {
+        // s/p → 1 saturates at p
+        assert_eq!(
+            SamplingStrategy::Confidence { rho: 0.5, s_est: 100 }.kappa(100),
+            100
+        );
+        // s = 0 treated as 1 (never divide by zero)
+        let k = SamplingStrategy::Confidence { rho: 0.9, s_est: 0 }.kappa(1_000);
+        assert!(k >= 1 && k <= 1_000);
+    }
+
+    #[test]
+    fn clamped_to_valid_range() {
+        assert_eq!(SamplingStrategy::Fraction(1.0).kappa(10), 10);
+        assert_eq!(SamplingStrategy::Fraction(0.001).kappa(10), 1);
+        assert_eq!(SamplingStrategy::Full.kappa(7), 7);
+        // κ from Theorem 1 may exceed small p → clamp
+        let s = SamplingStrategy::TopQuantile { rho: 0.98, quantile: 0.02 };
+        assert_eq!(s.kappa(50), 50);
+    }
+
+    #[test]
+    fn labels() {
+        assert_eq!(SamplingStrategy::Fraction(0.02).label(), "FW 2%");
+        assert_eq!(SamplingStrategy::Full.label(), "FW full");
+    }
+}

@@ -1,0 +1,161 @@
+//! Stochastic coordinate descent (Shalev-Shwartz & Tewari 2011) — the SCD
+//! baseline of Tables 2/4. Identical coordinate update to [`super::cd`],
+//! but coordinates are drawn uniformly at random. Following the paper's
+//! accounting (§5, Table 2 footnote †3), one *iteration* is p random
+//! coordinate visits — directly comparable to one CD cycle.
+
+use super::{Problem, RunResult, SolveOptions};
+use crate::linalg::ops::soft_threshold;
+use crate::util::rng::Xoshiro256;
+
+/// Stochastic CD solver.
+pub struct StochasticCd {
+    pub opts: SolveOptions,
+    rng: Xoshiro256,
+    resid: Vec<f64>,
+}
+
+impl StochasticCd {
+    pub fn new(opts: SolveOptions) -> Self {
+        Self {
+            opts,
+            rng: Xoshiro256::seed_from_u64(opts.seed),
+            resid: Vec::new(),
+        }
+    }
+
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Xoshiro256::seed_from_u64(seed);
+    }
+
+    /// Rebuild the residual for the current α (‖α‖₀ axpys).
+    pub fn reset_residual(&mut self, prob: &Problem<'_>, alpha: &[f64]) {
+        self.resid.clear();
+        self.resid.extend_from_slice(prob.y);
+        for (j, &a) in alpha.iter().enumerate() {
+            if a != 0.0 {
+                prob.x.col_axpy(j, -a, &mut self.resid);
+            }
+        }
+    }
+
+    /// Solve at penalty `lambda` from the warm-started `alpha`.
+    /// Stops when an epoch (p draws) moves no coefficient by more than ε.
+    pub fn run(&mut self, prob: &Problem<'_>, alpha: &mut [f64], lambda: f64) -> RunResult {
+        let p = prob.p();
+        assert_eq!(self.resid.len(), prob.m(), "call reset_residual first");
+        let mut dots = 0u64;
+        let mut epochs = 0u64;
+        let mut converged = false;
+
+        while (epochs as usize) < self.opts.max_iters {
+            epochs += 1;
+            let mut max_delta = 0.0f64;
+            let mut alpha_inf = 0.0f64;
+            for _ in 0..p {
+                let j = self.rng.below(p);
+                let znorm = prob.cache.norm_sq[j];
+                if znorm == 0.0 {
+                    continue;
+                }
+                let old = alpha[j];
+                let rho = prob.x.col_dot(j, &self.resid) + old * znorm;
+                dots += 1;
+                let new = soft_threshold(rho, lambda) / znorm;
+                if new != old {
+                    prob.x.col_axpy(j, old - new, &mut self.resid);
+                    alpha[j] = new;
+                    max_delta = max_delta.max((new - old).abs());
+                }
+                alpha_inf = alpha_inf.max(alpha[j].abs());
+            }
+            // scale-free criterion (see linesearch::StepInfo::small)
+            if max_delta <= self.opts.eps * alpha_inf.max(1.0) {
+                converged = true;
+                break;
+            }
+        }
+
+        let rss: f64 = self.resid.iter().map(|r| r * r).sum();
+        RunResult {
+            iters: epochs,
+            dots,
+            converged,
+            objective: 0.5 * rss + lambda * alpha.iter().map(|a| a.abs()).sum::<f64>(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ColumnCache, DenseMatrix, Design};
+    use crate::solvers::cd::CoordinateDescent;
+    use crate::util::rng::Xoshiro256;
+
+    fn make_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+        (Design::dense(x), y)
+    }
+
+    #[test]
+    fn agrees_with_cyclic_cd() {
+        let (x, y) = make_problem(5, 30, 25);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let lambda = 1.0;
+        let opts = SolveOptions {  eps: 1e-9, max_iters: 50_000, seed: 11, ..Default::default() };
+
+        let mut cd = CoordinateDescent::new(opts);
+        let mut a1 = vec![0.0; 25];
+        cd.reset_residual(&prob, &a1);
+        let r1 = cd.run(&prob, &mut a1, lambda);
+
+        let mut scd = StochasticCd::new(opts);
+        let mut a2 = vec![0.0; 25];
+        scd.reset_residual(&prob, &a2);
+        let r2 = scd.run(&prob, &mut a2, lambda);
+
+        // the penalized Lasso objective is strictly convex here (m > p) →
+        // unique solution; both should land on it
+        assert!((r1.objective - r2.objective).abs() < 1e-5 * (1.0 + r1.objective));
+        crate::testing::assert_slices_close(&a1, &a2, 1e-4, 1e-4);
+    }
+
+    #[test]
+    fn objective_never_increases_across_epochs() {
+        let (x, y) = make_problem(6, 20, 40);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut scd = StochasticCd::new(SolveOptions { 
+            eps: 0.0,
+            max_iters: 1,
+            seed: 3, ..Default::default() });
+        let mut alpha = vec![0.0; 40];
+        scd.reset_residual(&prob, &alpha);
+        let mut last = f64::INFINITY;
+        for _ in 0..30 {
+            let r = scd.run(&prob, &mut alpha, 0.7);
+            assert!(r.objective <= last + 1e-10);
+            last = r.objective;
+        }
+    }
+
+    #[test]
+    fn epoch_accounting() {
+        let (x, y) = make_problem(7, 10, 30);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut scd = StochasticCd::new(SolveOptions { 
+            eps: 0.0,
+            max_iters: 4,
+            seed: 5, ..Default::default() });
+        let mut alpha = vec![0.0; 30];
+        scd.reset_residual(&prob, &alpha);
+        let r = scd.run(&prob, &mut alpha, 0.5);
+        assert_eq!(r.iters, 4);
+        assert_eq!(r.dots, 4 * 30);
+    }
+}

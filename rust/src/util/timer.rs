@@ -1,0 +1,109 @@
+//! Wall-clock timing utilities used by the metrics layer and the bench
+//! harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch that can be paused and resumed (path runs pause the
+/// clock while serializing intermediate results so reported times match the
+/// paper's "solver time only" accounting).
+#[derive(Debug)]
+pub struct Stopwatch {
+    accumulated: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { accumulated: Duration::ZERO, started: None }
+    }
+
+    /// Create and immediately start.
+    pub fn started() -> Self {
+        let mut s = Self::new();
+        s.start();
+        s
+    }
+
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.accumulated += t0.elapsed();
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        let running = self.started.map(|t0| t0.elapsed()).unwrap_or(Duration::ZERO);
+        self.accumulated + running
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Format a duration the way the paper's tables do (scientific, seconds).
+pub fn fmt_secs_sci(secs: f64) -> String {
+    format!("{secs:.2e}")
+}
+
+/// Human format: `1.23s`, `45.6ms`, `789µs`.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.2}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.0}µs", s * 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates_and_pauses() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let t1 = sw.elapsed();
+        assert!(t1 >= Duration::from_millis(4));
+        // while stopped, elapsed must not grow
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(sw.elapsed(), t1);
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > t1);
+    }
+
+    #[test]
+    fn double_start_is_idempotent() {
+        let mut sw = Stopwatch::started();
+        sw.start(); // must not reset
+        std::thread::sleep(Duration::from_millis(2));
+        sw.stop();
+        assert!(sw.elapsed() >= Duration::from_millis(1));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs_sci(6.22), "6.22e0");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.0ms");
+        assert_eq!(fmt_duration(Duration::from_micros(120)), "120µs");
+    }
+}

@@ -1,0 +1,142 @@
+//! Data-substrate integration: every Table-1 generator at reduced scale,
+//! LIBSVM round-trips of generated problems, and solver compatibility of
+//! each dataset family.
+
+use sfw_lasso::data::{libsvm, load, Named};
+use sfw_lasso::linalg::{ColumnCache, Storage};
+use sfw_lasso::path::{run_path, PathConfig, SolverKind};
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::SolveOptions;
+
+#[test]
+fn all_named_datasets_build_and_standardize() {
+    for name in Named::all_names() {
+        let ds = load(Named::parse(name).unwrap(), 0.005, 9);
+        assert!(ds.rows() > 0, "{name}: empty");
+        assert!(ds.cols() > 0, "{name}: no features");
+        // y centered
+        let mean = ds.y.iter().sum::<f64>() / ds.rows() as f64;
+        assert!(mean.abs() < 1e-8, "{name}: y mean {mean}");
+        // all column norms ∈ {0, 1}
+        for j in 0..ds.cols().min(200) {
+            let n = ds.x.col_norm_sq(j);
+            assert!(
+                n == 0.0 || (n - 1.0).abs() < 1e-4,
+                "{name}: col {j} norm² = {n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn scaled_shapes_track_paper_shapes() {
+    // at scale 1.0 the shapes are paper-exact (cheap check via arithmetic:
+    // generators derive sizes from the Table-1 constants)
+    let tf = sfw_lasso::data::textgen::TextSpec::e2006_tfidf(1.0, 0);
+    assert_eq!((tf.n_docs, tf.n_terms), (16_087, 150_360));
+    let lp = sfw_lasso::data::textgen::TextSpec::e2006_log1p(1.0, 0);
+    assert_eq!((lp.n_docs, lp.n_terms), (16_087, 4_272_227));
+    assert_eq!(sfw_lasso::data::qsar::QsarSpec::pyrim(0).expanded_p(), 201_376);
+    assert_eq!(
+        sfw_lasso::data::qsar::QsarSpec::triazines(0).expanded_p(),
+        635_376
+    );
+}
+
+#[test]
+fn generated_sparse_dataset_roundtrips_via_libsvm() {
+    let ds = load(Named::E2006Tfidf, 0.005, 10);
+    let Storage::Sparse(sp) = ds.x.storage() else {
+        panic!("expected sparse storage")
+    };
+    let dir = std::env::temp_dir().join("sfw_data_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tfidf.svm");
+    libsvm::write(&path, sp, &ds.y).unwrap();
+    let rt = libsvm::read(&path, Some(ds.cols())).unwrap();
+    assert_eq!(rt.x.rows(), ds.rows());
+    assert_eq!(rt.x.cols(), ds.cols());
+    assert_eq!(rt.x.nnz(), sp.nnz());
+    // spot-check numerics through a solver-relevant op
+    let v: Vec<f64> = (0..ds.rows()).map(|i| (i % 7) as f64 - 3.0).collect();
+    for j in (0..ds.cols()).step_by(ds.cols() / 17 + 1) {
+        let a = sp.col_dot(j, &v);
+        let b = rt.x.col_dot(j, &v);
+        assert!((a - b).abs() < 1e-4 * (1.0 + a.abs()), "col {j}: {a} vs {b}");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn ground_truth_recoverable_by_solver() {
+    // the planted support must be findable: run SFW on a small synthetic
+    // and require most of the top-|support| coefficients to be planted
+    let ds = load(Named::Synth10k { relevant: 16 }, 0.02, 11); // p = 200
+    let truth: Vec<usize> = ds
+        .ground_truth
+        .as_ref()
+        .unwrap()
+        .iter()
+        .enumerate()
+        .filter(|(_, &b)| b != 0.0)
+        .map(|(j, _)| j)
+        .collect();
+
+    let cfg = PathConfig {
+        n_points: 20,
+        opts: SolveOptions {
+            eps: 1e-4,
+            max_iters: 10_000,
+            patience: 2,
+            ..Default::default()
+        },
+        delta_max: None,
+        track: vec![],
+    };
+    let pr = run_path(&ds, SolverKind::Sfw(SamplingStrategy::Fraction(0.2)), &cfg);
+    // pick the path point with best test error; check support overlap there
+    let best = pr
+        .points
+        .iter()
+        .min_by(|a, b| {
+            a.test_mse
+                .unwrap()
+                .partial_cmp(&b.test_mse.unwrap())
+                .unwrap()
+        })
+        .unwrap();
+    // rerun at that δ tracking coefficients? cheaper: active count should be
+    // within a small factor of the true support at the best point
+    assert!(
+        best.active >= truth.len() / 2 && best.active <= truth.len() * 6,
+        "implausible support size {} (truth {})",
+        best.active,
+        truth.len()
+    );
+    assert!(
+        best.test_mse.unwrap()
+            < 0.5 * pr.points[0].test_mse.unwrap(),
+        "no generalization gain along the path"
+    );
+}
+
+#[test]
+fn qsar_expansion_contains_constant_and_linear_terms() {
+    let ds = load(Named::Pyrim, 0.0005, 12);
+    // column 0 is the constant monomial; after centering it must be ~zero
+    let n0 = ds.x.col_norm_sq(0);
+    assert!(n0 < 1e-8, "constant column survived standardization: {n0}");
+    // and it must be excluded from models by every solver (zero-norm guard)
+    let cache = ColumnCache::build(&ds.x, &ds.y);
+    assert_eq!(cache.norm_sq[0], 0.0);
+}
+
+#[test]
+fn determinism_across_loads() {
+    let a = load(Named::E2006Log1p, 0.002, 13);
+    let b = load(Named::E2006Log1p, 0.002, 13);
+    assert_eq!(a.y, b.y);
+    assert_eq!(a.x.nnz(), b.x.nnz());
+    let c = load(Named::E2006Log1p, 0.002, 14);
+    assert_ne!(a.y, c.y, "different seeds must differ");
+}

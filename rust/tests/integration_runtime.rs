@@ -1,0 +1,174 @@
+//! Integration: AOT artifacts → PJRT runtime → XLA-backed stochastic FW,
+//! cross-checked against the native solver.
+//!
+//! Requires `make artifacts` (skips gracefully with a message otherwise —
+//! CI always builds artifacts first).
+
+use sfw_lasso::linalg::{ColumnCache, DenseMatrix, Design};
+use sfw_lasso::runtime::{Manifest, XlaRuntime, XlaSfw};
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::StochasticFw;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    for cand in [
+        std::env::var("SFW_ARTIFACTS_DIR").unwrap_or_default(),
+        "artifacts".to_string(),
+        "../artifacts".to_string(),
+    ] {
+        if cand.is_empty() {
+            continue;
+        }
+        let p = std::path::PathBuf::from(cand);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+fn make_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+    let mut beta = vec![0.0; p];
+    beta[2] = 1.0;
+    beta[p / 2] = -0.5;
+    let mut y = vec![0.0; m];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.01 * rng.gaussian();
+    }
+    (Design::dense(x), y)
+}
+
+#[test]
+fn manifest_loads_and_all_artifacts_compile() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts dir (run `make artifacts`)");
+        return;
+    };
+    let manifest = Manifest::load(&dir).expect("manifest parses");
+    assert!(!manifest.artifacts.is_empty());
+    let mut rt = XlaRuntime::new(manifest).expect("client");
+    rt.compile_all().expect("all artifacts compile on PJRT CPU");
+}
+
+#[test]
+fn xla_fw_step_matches_native_linesearch() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts dir");
+        return;
+    };
+    let mut rt = XlaRuntime::from_dir(&dir).expect("runtime");
+    // use the (128, 512) test variant
+    let Some(spec) = rt.manifest().find(128, 512).cloned() else {
+        eprintln!("SKIP: no 128x512 artifact");
+        return;
+    };
+
+    let (x, y) = make_problem(7, 512, 40);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let delta = 1.5;
+
+    // native state after a couple of steps
+    let mut native = FwState::zero(40, 512);
+    for i in [3usize, 11] {
+        let g = native.grad_coord(&prob, i);
+        native.step(&prob, delta, i, g);
+    }
+    // XLA step over a fixed sample, vs native argmax over the same sample
+    let sample: Vec<usize> = (0..40).collect();
+    let mut xs = vec![0.0f32; spec.kappa * spec.m];
+    let mut sigma_s = vec![0.0f32; spec.kappa];
+    let mut norms_s = vec![1.0f32; spec.kappa];
+    for (row, &j) in sample.iter().enumerate() {
+        x.densify_col(j, &mut xs[row * spec.m..row * spec.m + 512]);
+        sigma_s[row] = cache.sigma[j] as f32;
+        norms_s[row] = cache.norm_sq[j] as f32;
+    }
+    let mut q = vec![0.0f32; spec.m];
+    native.write_q(&mut q);
+
+    let out = rt
+        .fw_step(&spec, &xs, &q, &sigma_s, &norms_s, native.s, native.f, delta)
+        .expect("xla step");
+
+    // native reference over the same sample
+    let (mut best_i, mut best_g, mut best_abs) = (0usize, 0.0f64, -1.0f64);
+    for &i in &sample {
+        let g = native.grad_coord(&prob, i);
+        if g.abs() > best_abs {
+            best_abs = g.abs();
+            best_g = g;
+            best_i = i;
+        }
+    }
+    assert_eq!(out.i_local, best_i, "vertex mismatch");
+    assert!(
+        (out.g_i - best_g).abs() < 1e-3 * (1.0 + best_g.abs()),
+        "g mismatch: xla {} native {}",
+        out.g_i,
+        best_g
+    );
+
+    // the step info must agree with the native line search
+    let mut native2 = FwState::zero(40, 512);
+    for i in [3usize, 11] {
+        let g = native2.grad_coord(&prob, i);
+        native2.step(&prob, delta, i, g);
+    }
+    let info = native2.step(&prob, delta, best_i, best_g);
+    assert!(
+        (out.lambda - info.lambda).abs() < 1e-4 * (1.0 + info.lambda),
+        "lambda: xla {} native {}",
+        out.lambda,
+        info.lambda
+    );
+    assert!((out.s_new - native2.s).abs() < 1e-2 * (1.0 + native2.s.abs()));
+    assert!((out.f_new - native2.f).abs() < 1e-2 * (1.0 + native2.f.abs()));
+}
+
+#[test]
+fn xla_sfw_solves_like_native_sfw() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("SKIP: no artifacts dir");
+        return;
+    };
+    let mut rt = XlaRuntime::from_dir(&dir).expect("runtime");
+    if rt.manifest().find(128, 512).is_none() {
+        eprintln!("SKIP: no 128x512 artifact");
+        return;
+    }
+
+    let (x, y) = make_problem(9, 300, 60);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let delta = 1.2;
+    let opts = SolveOptions { eps: 0.0, max_iters: 300, ..Default::default() };
+
+    let mut xla_solver = XlaSfw::new(SamplingStrategy::Fraction(0.5), opts);
+    let mut st_xla = FwState::zero(60, 300);
+    let res_xla = xla_solver
+        .run(&mut rt, &prob, &mut st_xla, delta)
+        .expect("xla solve");
+
+    let mut native = StochasticFw::new(SamplingStrategy::Fraction(0.5), opts);
+    let mut st_nat = FwState::zero(60, 300);
+    let res_nat = native.run(&prob, &mut st_nat, delta);
+
+    // same iteration count (both hit the cap); objectives close in relative
+    // descent terms (XLA runs f32)
+    assert_eq!(res_xla.iters, res_nat.iters);
+    let f0 = 0.5 * cache.yty;
+    let descent_xla = (f0 - res_xla.objective) / f0;
+    let descent_nat = (f0 - res_nat.objective) / f0;
+    assert!(
+        (descent_xla - descent_nat).abs() < 0.05,
+        "descent differs: xla {descent_xla:.4} native {descent_nat:.4}"
+    );
+    // feasibility
+    assert!(st_xla.l1_norm() <= delta * (1.0 + 1e-6));
+}

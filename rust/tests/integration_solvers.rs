@@ -1,0 +1,237 @@
+//! Cross-solver integration: all six solvers traverse the same problems
+//! and agree; the §2.1 penalized↔constrained equivalence holds end to end.
+
+use sfw_lasso::linalg::{ColumnCache, DenseMatrix, Design};
+use sfw_lasso::solvers::apg::Apg;
+use sfw_lasso::solvers::cd::CoordinateDescent;
+use sfw_lasso::solvers::fista::Fista;
+use sfw_lasso::solvers::fw::FrankWolfe;
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::scd::StochasticCd;
+use sfw_lasso::solvers::sfw::StochasticFw;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::util::rng::Xoshiro256;
+
+fn planted_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+    let mut beta = vec![0.0; p];
+    beta[0] = 1.0;
+    beta[p / 3] = -0.6;
+    beta[2 * p / 3] = 0.8;
+    let mut y = vec![0.0; m];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.02 * rng.gaussian();
+    }
+    (Design::dense(x), y)
+}
+
+/// §2.1: solve penalized at λ with CD; δ := ‖α*‖₁; then every constrained
+/// solver at δ must reach the same least-squares objective.
+#[test]
+fn penalized_constrained_equivalence() {
+    let (x, y) = planted_problem(3, 40, 25);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let lambda = 0.8;
+
+    let mut cd = CoordinateDescent::new(SolveOptions {
+        eps: 1e-12,
+        max_iters: 200_000,
+        ..Default::default()
+    });
+    let mut alpha_pen = vec![0.0; 25];
+    cd.reset_residual(&prob, &alpha_pen);
+    cd.run(&prob, &mut alpha_pen, lambda);
+    let delta: f64 = alpha_pen.iter().map(|a| a.abs()).sum();
+    let f_pen = prob.objective(&alpha_pen);
+    assert!(delta > 0.0, "degenerate test: null CD solution");
+
+    // constrained FW at that δ
+    let fw = FrankWolfe::new(SolveOptions {
+        eps: 0.0,
+        max_iters: 300_000,
+        ..Default::default()
+    });
+    let mut st = FwState::zero(25, 40);
+    let rf = fw.run(&prob, &mut st, delta);
+    assert!(
+        (rf.objective - f_pen).abs() <= 2e-3 * (1.0 + f_pen),
+        "equivalence violated: constrained {} vs penalized {}",
+        rf.objective,
+        f_pen
+    );
+
+    // APG at that δ
+    let l = x.spectral_norm_sq(100, 0);
+    let mut apg = Apg::new(
+        SolveOptions { eps: 1e-10, max_iters: 100_000, ..Default::default() },
+        l,
+    );
+    let mut a2 = vec![0.0; 25];
+    let ra = apg.run(&prob, &mut a2, delta);
+    assert!(
+        (ra.objective - f_pen).abs() <= 1e-3 * (1.0 + f_pen),
+        "apg {} vs penalized {}",
+        ra.objective,
+        f_pen
+    );
+}
+
+/// All penalized solvers land on the same unique optimum (m > p strictly
+/// convex), dense and sparse storage alike.
+#[test]
+fn penalized_solvers_agree_across_storage() {
+    let mut rng = Xoshiro256::seed_from_u64(17);
+    let (m, p) = (35, 20);
+    let mut dense = vec![0.0f32; m * p];
+    let mut b = sfw_lasso::linalg::CscBuilder::new(m, p);
+    for j in 0..p {
+        for i in 0..m {
+            if rng.next_f64() < 0.6 {
+                let v = rng.gaussian();
+                dense[j * m + i] = v as f32;
+                b.push(i, j, v);
+            }
+        }
+    }
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    let designs = [
+        Design::dense(DenseMatrix::from_col_major(m, p, dense)),
+        Design::sparse(b.build()),
+    ];
+    let lambda = 0.4;
+    let mut solutions: Vec<Vec<f64>> = Vec::new();
+    for x in &designs {
+        let cache = ColumnCache::build(x, &y);
+        let prob = Problem::new(x, &y, &cache);
+        let opts = SolveOptions { eps: 1e-10, max_iters: 100_000, ..Default::default() };
+
+        let mut cd = CoordinateDescent::new(opts);
+        let mut a_cd = vec![0.0; p];
+        cd.reset_residual(&prob, &a_cd);
+        cd.run(&prob, &mut a_cd, lambda);
+        solutions.push(a_cd);
+
+        let mut scd = StochasticCd::new(opts);
+        let mut a_scd = vec![0.0; p];
+        scd.reset_residual(&prob, &a_scd);
+        scd.run(&prob, &mut a_scd, lambda);
+        solutions.push(a_scd);
+
+        let l = x.spectral_norm_sq(100, 1);
+        let mut fista = Fista::new(opts, l);
+        let mut a_f = vec![0.0; p];
+        fista.run(&prob, &mut a_f, lambda);
+        solutions.push(a_f);
+    }
+    let reference = solutions[0].clone();
+    for (i, s) in solutions.iter().enumerate().skip(1) {
+        sfw_lasso::testing::assert_slices_close(&reference, s, 5e-4, 5e-4);
+        let _ = i;
+    }
+}
+
+/// SFW with XLA-compatible dense problems agrees with deterministic FW
+/// when κ = p, across several seeds (full-sampling degeneracy).
+#[test]
+fn sfw_full_sampling_equals_fw_many_seeds() {
+    for seed in [1u64, 2, 3] {
+        let (x, y) = planted_problem(seed, 20, 15);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let opts = SolveOptions { eps: 0.0, max_iters: 80, seed, ..Default::default() };
+        let mut sfw = StochasticFw::new(SamplingStrategy::Full, opts);
+        let mut st1 = FwState::zero(15, 20);
+        sfw.run(&prob, &mut st1, 1.3);
+        let fw = FrankWolfe::new(opts);
+        let mut st2 = FwState::zero(15, 20);
+        fw.run(&prob, &mut st2, 1.3);
+        sfw_lasso::testing::assert_slices_close(&st1.alpha(), &st2.alpha(), 1e-12, 1e-10);
+    }
+}
+
+/// Warm starting across decreasing regularization never increases the
+/// objective at the shared value (path-consistency of all warm-startable
+/// solvers).
+#[test]
+fn warm_start_path_consistency() {
+    let (x, y) = planted_problem(23, 30, 18);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let opts = SolveOptions { eps: 1e-9, max_iters: 60_000, ..Default::default() };
+
+    // CD: cold at λ2 vs warm from λ1 > λ2 — same objective
+    let mut cd = CoordinateDescent::new(opts);
+    let mut cold = vec![0.0; 18];
+    cd.reset_residual(&prob, &cold);
+    let rc = cd.run(&prob, &mut cold, 0.3);
+    let mut warm = vec![0.0; 18];
+    cd.reset_residual(&prob, &warm);
+    cd.run(&prob, &mut warm, 0.9);
+    let rw = cd.run(&prob, &mut warm, 0.3);
+    assert!((rc.objective - rw.objective).abs() < 1e-6 * (1.0 + rc.objective));
+    assert!(rw.dots <= rc.dots, "warm start should not cost more");
+}
+
+/// Zero-variance edge: y = 0 ⇒ all solvers return α = 0 instantly.
+#[test]
+fn zero_response_gives_null_solutions() {
+    let (x, _) = planted_problem(29, 15, 10);
+    let y = vec![0.0; 15];
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+
+    let mut cd = CoordinateDescent::new(SolveOptions::default());
+    let mut a = vec![0.0; 10];
+    cd.reset_residual(&prob, &a);
+    cd.run(&prob, &mut a, 0.1);
+    assert!(a.iter().all(|&v| v == 0.0));
+
+    let mut sfw = StochasticFw::new(SamplingStrategy::Fraction(0.5), SolveOptions::default());
+    let mut st = FwState::zero(10, 15);
+    let res = sfw.run(&prob, &mut st, 1.0);
+    // FW may take λ=0 steps; the objective must stay 0 and iterate feasible
+    assert!(res.objective.abs() < 1e-12);
+}
+
+/// Sparse matrix with empty columns must be handled by every solver.
+#[test]
+fn empty_columns_are_harmless() {
+    let mut rng = Xoshiro256::seed_from_u64(31);
+    let (m, p) = (20, 12);
+    let mut b = sfw_lasso::linalg::CscBuilder::new(m, p);
+    for j in 0..p {
+        if j % 3 == 0 {
+            continue; // every third column empty
+        }
+        for i in 0..m {
+            if rng.next_f64() < 0.5 {
+                b.push(i, j, rng.gaussian());
+            }
+        }
+    }
+    let x = Design::sparse(b.build());
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+
+    let mut cd = CoordinateDescent::new(SolveOptions::default());
+    let mut a = vec![0.0; p];
+    cd.reset_residual(&prob, &a);
+    let r = cd.run(&prob, &mut a, 0.05);
+    assert!(r.objective.is_finite());
+    for j in (0..p).step_by(3) {
+        assert_eq!(a[j], 0.0, "empty column {j} got nonzero coef");
+    }
+
+    let mut sfw = StochasticFw::new(
+        SamplingStrategy::Fraction(0.9),
+        SolveOptions { eps: 0.0, max_iters: 50, ..Default::default() },
+    );
+    let mut st = FwState::zero(p, m);
+    let r = sfw.run(&prob, &mut st, 1.0);
+    assert!(r.objective.is_finite());
+}

@@ -1,0 +1,299 @@
+//! Property-based invariants of the FW machinery and the solver fleet,
+//! via the in-tree `testing::Prop` harness (seeded, reproducible with
+//! `SFW_PROP_SEED`).
+
+use sfw_lasso::linalg::{ColumnCache, CscBuilder, DenseMatrix, Design};
+use sfw_lasso::solvers::cd::{lambda_max, CoordinateDescent};
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::proj::project_l1;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::StochasticFw;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::testing::{assert_slices_close, gen, Prop};
+use sfw_lasso::util::rng::Xoshiro256;
+
+fn random_problem(rng: &mut Xoshiro256, m: usize, p: usize) -> (Design, Vec<f64>) {
+    let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+    (Design::dense(x), y)
+}
+
+fn random_problem_pair(
+    rng: &mut Xoshiro256,
+    m: usize,
+    p: usize,
+    density: f64,
+) -> (Design, Design, Vec<f64>) {
+    let mut data = vec![0.0f32; m * p];
+    let mut b = CscBuilder::new(m, p);
+    for j in 0..p {
+        for i in 0..m {
+            if rng.next_f64() < density {
+                let v = rng.gaussian();
+                data[j * m + i] = v as f32;
+                b.push(i, j, v);
+            }
+        }
+    }
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    (
+        Design::dense(DenseMatrix::from_col_major(m, p, data)),
+        Design::sparse(b.build()),
+        y,
+    )
+}
+
+#[test]
+fn fw_linesearch_is_exact_minimizer() {
+    Prop::new("eq.-8 λ* minimizes f along the FW segment")
+        .cases(60)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 4, 20);
+            let p = gen::usize_range(rng, 3, 15);
+            let (x, y) = random_problem(rng, m, p);
+            let cache = ColumnCache::build(&x, &y);
+            let prob = Problem::new(&x, &y, &cache);
+            let delta = rng.uniform(0.2, 4.0);
+
+            let mut st = FwState::zero(p, m);
+            // random warm-up steps
+            for _ in 0..gen::usize_range(rng, 0, 5) {
+                let i = rng.below(p);
+                let g = st.grad_coord(&prob, i);
+                st.step(&prob, delta, i, g);
+            }
+            let i = rng.below(p);
+            let g = st.grad_coord(&prob, i);
+            let alpha0 = st.alpha();
+            let ds = -delta * g.signum();
+            let info = st.step(&prob, delta, i, g);
+
+            let f_along = |lam: f64| {
+                let mut a = alpha0.clone();
+                for v in a.iter_mut() {
+                    *v *= 1.0 - lam;
+                }
+                a[i] += lam * ds;
+                prob.objective(&a)
+            };
+            let f_star = f_along(info.lambda);
+            for probe in [0.0, 0.1, 0.33, 0.66, 0.9, 1.0] {
+                assert!(
+                    f_star <= f_along(probe) + 1e-7 * (1.0 + f_star.abs()),
+                    "λ*={} beaten at λ={probe}",
+                    info.lambda
+                );
+            }
+        });
+}
+
+#[test]
+fn fw_iterates_always_feasible_and_objective_consistent() {
+    Prop::new("FW feasibility + tracked-objective consistency")
+        .cases(40)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 5, 25);
+            let p = gen::usize_range(rng, 4, 30);
+            let (x, y) = random_problem(rng, m, p);
+            let cache = ColumnCache::build(&x, &y);
+            let prob = Problem::new(&x, &y, &cache);
+            let delta = rng.uniform(0.1, 3.0);
+
+            let mut solver = StochasticFw::new(
+                SamplingStrategy::Fraction(rng.uniform(0.2, 1.0)),
+                SolveOptions {
+                    eps: 0.0,
+                    max_iters: gen::usize_range(rng, 1, 120),
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+            );
+            let mut st = FwState::zero(p, m);
+            let res = solver.run(&prob, &mut st, delta);
+            assert!(st.l1_norm() <= delta * (1.0 + 1e-9) + 1e-12);
+            let direct = prob.objective(&st.alpha());
+            assert!(
+                (direct - res.objective).abs() <= 1e-6 * (1.0 + direct.abs()),
+                "objective drift: direct {direct} tracked {}",
+                res.objective
+            );
+        });
+}
+
+#[test]
+fn cd_satisfies_kkt_on_random_problems() {
+    Prop::new("CD KKT conditions").cases(30).run(|rng| {
+        let m = gen::usize_range(rng, 10, 30);
+        let p = gen::usize_range(rng, 5, 20);
+        let (x, y) = random_problem(rng, m, p);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let lambda = rng.uniform(0.05, 1.0) * lambda_max(&prob);
+
+        let mut cd = CoordinateDescent::new(SolveOptions {
+            eps: 1e-11,
+            max_iters: 50_000,
+            ..Default::default()
+        });
+        let mut alpha = vec![0.0; p];
+        cd.reset_residual(&prob, &alpha);
+        cd.run(&prob, &mut alpha, lambda);
+
+        let mut q = vec![0.0; m];
+        x.matvec(&alpha, &mut q);
+        let r: Vec<f64> = y.iter().zip(q.iter()).map(|(a, b)| a - b).collect();
+        for j in 0..p {
+            let corr = x.col_dot(j, &r);
+            if alpha[j] == 0.0 {
+                assert!(corr.abs() <= lambda * (1.0 + 1e-5) + 1e-7, "KKT zero coord {j}");
+            } else {
+                assert!(
+                    (corr - lambda * alpha[j].signum()).abs() <= 1e-5 * (1.0 + lambda),
+                    "KKT active coord {j}: corr {corr} vs λ·sign {lambda}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn sparse_and_dense_storage_solve_identically() {
+    Prop::new("storage-agnostic solving").cases(20).run(|rng| {
+        let m = gen::usize_range(rng, 8, 24);
+        let p = gen::usize_range(rng, 5, 18);
+        let (xd, xs, y) = random_problem_pair(rng, m, p, 0.5);
+        let delta = rng.uniform(0.3, 2.0);
+        let seed = rng.next_u64();
+
+        let solve = |x: &Design| {
+            let cache = ColumnCache::build(x, &y);
+            let prob = Problem::new(x, &y, &cache);
+            let mut solver = StochasticFw::new(
+                SamplingStrategy::Fraction(0.7),
+                SolveOptions { eps: 0.0, max_iters: 60, seed, ..Default::default() },
+            );
+            let mut st = FwState::zero(p, m);
+            solver.run(&prob, &mut st, delta);
+            st.alpha()
+        };
+        let ad = solve(&xd);
+        let as_ = solve(&xs);
+        assert_slices_close(&ad, &as_, 1e-5, 1e-4);
+    });
+}
+
+#[test]
+fn projection_is_contraction_toward_feasible_set() {
+    Prop::new("ℓ1 projection optimality (variational inequality)")
+        .cases(100)
+        .run(|rng| {
+            let n = gen::usize_range(rng, 1, 40);
+            let v = gen::gaussian_vec(rng, n);
+            let delta = rng.uniform(0.1, 2.0);
+            let mut proj = v.clone();
+            project_l1(&mut proj, delta);
+            // (v − proj)ᵀ(w − proj) ≤ 0 for any feasible w
+            for _ in 0..5 {
+                let mut w = gen::gaussian_vec(rng, n);
+                project_l1(&mut w, delta);
+                let ip: f64 = v
+                    .iter()
+                    .zip(proj.iter())
+                    .zip(w.iter())
+                    .map(|((vi, pi), wi)| (vi - pi) * (wi - pi))
+                    .sum();
+                assert!(ip <= 1e-8, "variational inequality violated: {ip}");
+            }
+        });
+}
+
+#[test]
+fn rescale_heuristic_preserves_direction() {
+    Prop::new("boundary rescale = positive scalar multiple")
+        .cases(40)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 5, 15);
+            let p = gen::usize_range(rng, 3, 12);
+            let (x, y) = random_problem(rng, m, p);
+            let cache = ColumnCache::build(&x, &y);
+            let prob = Problem::new(&x, &y, &cache);
+            let alpha = gen::sparse_vec(rng, p, 0.5);
+            if alpha.iter().all(|&a| a == 0.0) {
+                return;
+            }
+            let mut st = FwState::from_alpha(&prob, &alpha);
+            let target = rng.uniform(0.5, 5.0);
+            st.rescale_to_radius(target);
+            assert!((st.l1_norm() - target).abs() < 1e-9 * target.max(1.0));
+            let scaled = st.alpha();
+            let r = target / alpha.iter().map(|a| a.abs()).sum::<f64>();
+            for (a, s) in alpha.iter().zip(scaled.iter()) {
+                assert!((a * r - s).abs() < 1e-9 * (1.0 + s.abs()));
+            }
+            // objective tracker still exact after rescale
+            let direct = prob.objective(&scaled);
+            assert!((direct - st.objective(&prob)).abs() < 1e-7 * (1.0 + direct));
+        });
+}
+
+#[test]
+fn lambda_max_is_tight_threshold() {
+    Prop::new("λ_max null-solution threshold").cases(25).run(|rng| {
+        let m = gen::usize_range(rng, 10, 25);
+        let p = gen::usize_range(rng, 4, 15);
+        let (x, y) = random_problem(rng, m, p);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let lmax = lambda_max(&prob);
+
+        let solve_at = |lambda: f64| {
+            let mut cd = CoordinateDescent::new(SolveOptions {
+                eps: 1e-10,
+                max_iters: 20_000,
+                ..Default::default()
+            });
+            let mut alpha = vec![0.0; p];
+            cd.reset_residual(&prob, &alpha);
+            cd.run(&prob, &mut alpha, lambda);
+            alpha
+        };
+        assert!(solve_at(lmax * 1.001).iter().all(|&a| a == 0.0));
+        assert!(solve_at(lmax * 0.9).iter().any(|&a| a != 0.0));
+    });
+}
+
+#[test]
+fn sfw_sparsity_bound_holds() {
+    // FW structural guarantee: ≤ 1 new active coordinate per iteration,
+    // from any warm start.
+    Prop::new("FW sparsity bound ‖α_k‖₀ ≤ ‖α_0‖₀ + k")
+        .cases(30)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 6, 20);
+            let p = gen::usize_range(rng, 10, 60);
+            let (x, y) = random_problem(rng, m, p);
+            let cache = ColumnCache::build(&x, &y);
+            let prob = Problem::new(&x, &y, &cache);
+            let alpha0 = gen::sparse_vec(rng, p, 0.1);
+            let nnz0 = alpha0.iter().filter(|&&a| a != 0.0).count();
+            let mut st = FwState::from_alpha(&prob, &alpha0);
+            let iters = gen::usize_range(rng, 1, 40);
+            let mut solver = StochasticFw::new(
+                SamplingStrategy::Fraction(0.5),
+                SolveOptions {
+                    eps: 0.0,
+                    max_iters: iters,
+                    seed: rng.next_u64(),
+                    ..Default::default()
+                },
+            );
+            let res = solver.run(&prob, &mut st, rng.uniform(0.5, 3.0));
+            assert!(
+                st.nnz() <= nnz0 + res.iters as usize,
+                "{} > {} + {}",
+                st.nnz(),
+                nnz0,
+                res.iters
+            );
+        });
+}
