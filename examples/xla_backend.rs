@@ -8,14 +8,14 @@
 //! ```
 
 use sfw_lasso::linalg::{ColumnCache, DenseMatrix, Design};
-use sfw_lasso::runtime::{XlaRuntime, XlaSfw};
+use sfw_lasso::runtime::{RuntimeError, XlaRuntime, XlaSfw};
 use sfw_lasso::solvers::linesearch::FwState;
 use sfw_lasso::solvers::sampling::SamplingStrategy;
 use sfw_lasso::solvers::sfw::StochasticFw;
 use sfw_lasso::solvers::{Problem, SolveOptions};
 use sfw_lasso::util::rng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), RuntimeError> {
     // artifacts dir: allow running from the workspace root
     let dir = ["artifacts", "../artifacts"]
         .iter()

@@ -1,0 +1,100 @@
+//! Parallel-subsystem scaling: path-runner wall-clock and sampled
+//! vertex-search throughput at 1/2/4/8 worker threads on the Table-1
+//! synthetic dataset (the acceptance benchmark for `--threads`).
+//!
+//! ```bash
+//! SFW_BENCH_SCALE=1.0 cargo bench --bench parallel_scaling
+//! ```
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::bench::{bench, Stats};
+use sfw_lasso::data::{load, Named};
+use sfw_lasso::linalg::ColumnCache;
+use sfw_lasso::parallel::ParallelBackend;
+use sfw_lasso::path::{plan_delta_max, run_path_parallel, SolverKind};
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::{FwBackend, NativeBackend};
+use sfw_lasso::solvers::Problem;
+use sfw_lasso::util::rng::Xoshiro256;
+
+const THREADS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    common::banner("parallel", "path-runner and vertex-search scaling vs threads");
+    println!(
+        "hardware threads available: {}\n",
+        sfw_lasso::parallel::available_threads()
+    );
+    let mut csv = String::from("section,threads,seconds,speedup_vs_1\n");
+
+    // ---- path runner on the Table-1 synthetic (Synthetic-10000, 100 rel.)
+    {
+        let ds = load(Named::Synth10k { relevant: 100 }, common::scale(), common::seed());
+        println!("path runner on {}:", ds.stats());
+        let cache = ColumnCache::build(&ds.x, &ds.y);
+        let mut cfg = common::path_config();
+        cfg.delta_max = Some(plan_delta_max(&ds, &cache, cfg.n_points).0);
+        let kind = SolverKind::Sfw(SamplingStrategy::Fraction(0.02));
+
+        let mut baseline: Option<Stats> = None;
+        for t in THREADS {
+            let stats = bench(1, 3, || run_path_parallel(&ds, kind, &cfg, t));
+            let speedup = baseline.as_ref().map(|b| stats.speedup_over(b)).unwrap_or(1.0);
+            println!(
+                "{}",
+                stats.row(&format!("SFW 2% path, {t} thread(s) ({speedup:.2}x vs 1)"))
+            );
+            csv.push_str(&format!("path,{t},{},{speedup}\n", stats.mean));
+            if baseline.is_none() {
+                baseline = Some(stats);
+            }
+        }
+        println!();
+    }
+
+    // ---- sampled vertex search (the per-iteration LMO) in isolation
+    {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let m = 200;
+        let p = 100_000;
+        let x = sfw_lasso::linalg::Design::dense(
+            sfw_lasso::linalg::DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()),
+        );
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let state = FwState::zero(p, m);
+        let kappa = p / 10; // κ = 10 000 sampled columns
+        println!("dense sampled vertex search, κ = {kappa}, m = {m}, p = {p}:");
+
+        let mut sample = Vec::new();
+        let mut r2 = Xoshiro256::seed_from_u64(4);
+        r2.subset(p, kappa, &mut sample);
+
+        let mut native = NativeBackend::new();
+        let base = bench(2, 20, || native.select_vertex(&prob, &state, &sample));
+        println!("{}", base.row("NativeBackend (serial reference)"));
+        csv.push_str(&format!("vertex,1,{},1.0\n", base.mean));
+        for t in THREADS {
+            let mut backend = ParallelBackend::new(t);
+            let stats = bench(2, 20, || backend.select_vertex(&prob, &state, &sample));
+            let speedup = stats.speedup_over(&base);
+            println!(
+                "{}",
+                stats.row(&format!("ParallelBackend {t} thread(s) ({speedup:.2}x vs native)"))
+            );
+            csv.push_str(&format!("vertex,{t},{},{speedup}\n", stats.mean));
+        }
+        println!("\n(ParallelBackend is bit-identical to NativeBackend for any");
+        println!(" thread count — enforced by rust/tests/prop_parallel.rs)");
+    }
+
+    if let Ok(p) =
+        sfw_lasso::coordinator::report::write_results_file("parallel_scaling.csv", &csv)
+    {
+        println!("\nwrote {}", p.display());
+    }
+}

@@ -36,6 +36,12 @@ impl Stats {
             self.mean, self.std, self.min, self.runs
         )
     }
+
+    /// Speed-up of `self` relative to `baseline` (mean-over-mean;
+    /// > 1 ⇒ `self` is faster). Used by the parallel-scaling bench.
+    pub fn speedup_over(&self, baseline: &Stats) -> f64 {
+        baseline.mean / self.mean.max(1e-12)
+    }
 }
 
 /// Time `f` with `warmup` unmeasured runs then `runs` measured ones.
@@ -63,6 +69,14 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 3.0);
         assert!((s.std - (2.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_is_ratio_of_means() {
+        let fast = Stats::from_samples(&[1.0, 1.0]);
+        let slow = Stats::from_samples(&[4.0, 4.0]);
+        assert!((fast.speedup_over(&slow) - 4.0).abs() < 1e-12);
+        assert!((slow.speedup_over(&fast) - 0.25).abs() < 1e-12);
     }
 
     #[test]

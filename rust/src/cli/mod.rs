@@ -186,6 +186,16 @@ impl Matches {
     }
 }
 
+/// Parse a `--threads` value: a positive worker count, or `0` meaning
+/// "all available cores" (resolved via [`crate::parallel`]).
+pub fn parse_thread_count(s: &str) -> Result<usize, String> {
+    let n: usize = s
+        .trim()
+        .parse()
+        .map_err(|e| format!("invalid thread count '{s}': {e}"))?;
+    Ok(if n == 0 { crate::parallel::available_threads() } else { n })
+}
+
 /// Outcome of `App::parse`.
 #[derive(Debug)]
 pub enum Parsed {
@@ -423,6 +433,15 @@ mod tests {
         let Parsed::Help(h) = run(&["solve", "--help"]).unwrap() else { panic!() };
         assert!(h.contains("--dataset"));
         assert!(h.contains("[default: 2.5]"));
+    }
+
+    #[test]
+    fn thread_count_parsing() {
+        assert_eq!(parse_thread_count("4").unwrap(), 4);
+        assert_eq!(parse_thread_count(" 2 ").unwrap(), 2);
+        assert!(parse_thread_count("0").unwrap() >= 1); // all cores
+        assert!(parse_thread_count("abc").is_err());
+        assert!(parse_thread_count("-1").is_err());
     }
 
     #[test]

@@ -1,14 +1,13 @@
-//! Experiment jobs: dataset × solver × repetition cells executed on a
-//! worker pool.
+//! Experiment jobs: dataset × solver × repetition cells executed on the
+//! [`crate::parallel`] worker pool.
 //!
 //! Stochastic rows of Table 5 are averaged over `reps` runs (the paper
 //! averages 10); deterministic solvers run once. Each cell reuses the
-//! shared dataset (read-only) and runs on its own thread.
+//! shared dataset (read-only) and runs on its own worker; results come
+//! back in cell order.
 
 use crate::data::Dataset;
 use crate::path::{run_path, PathConfig, PathResult, SolverKind};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// One unit of work: a solver (with repetition index) on a dataset.
 #[derive(Clone, Debug)]
@@ -45,10 +44,18 @@ impl Experiment {
                 }
             }
         }
-        let threads = std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4);
+        let threads = crate::parallel::available_threads();
         Self { datasets, cells, config, threads }
+    }
+
+    /// Override the worker-pool width (0 ⇒ all available cores).
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = if threads == 0 {
+            crate::parallel::available_threads()
+        } else {
+            threads
+        };
+        self
     }
 }
 
@@ -58,36 +65,18 @@ fn is_stochastic(kind: SolverKind) -> bool {
 
 /// Run all cells; results come back in cell order.
 pub fn run_experiment(exp: &Experiment) -> Vec<PathResult> {
-    let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<PathResult>>> =
-        (0..exp.cells.len()).map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..exp.threads.min(exp.cells.len()).max(1) {
-            scope.spawn(|| loop {
-                let idx = next.fetch_add(1, Ordering::Relaxed);
-                if idx >= exp.cells.len() {
-                    break;
-                }
-                let cell = &exp.cells[idx];
-                let ds = &exp.datasets[cell.dataset_idx];
-                let mut cfg = exp.config.clone();
-                // decorrelate stochastic repetitions
-                cfg.opts.seed = cfg
-                    .opts
-                    .seed
-                    .wrapping_add(cell.rep as u64)
-                    .wrapping_mul(0x9E3779B97F4A7C15 | 1);
-                let res = run_path(ds, cell.kind, &cfg);
-                *results[idx].lock().unwrap() = Some(res);
-            });
-        }
-    });
-
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("cell not executed"))
-        .collect()
+    crate::parallel::run_tasks(exp.threads.max(1), exp.cells.len(), |idx| {
+        let cell = &exp.cells[idx];
+        let ds = &exp.datasets[cell.dataset_idx];
+        let mut cfg = exp.config.clone();
+        // decorrelate stochastic repetitions
+        cfg.opts.seed = cfg
+            .opts
+            .seed
+            .wrapping_add(cell.rep as u64)
+            .wrapping_mul(0x9E3779B97F4A7C15 | 1);
+        run_path(ds, cell.kind, &cfg)
+    })
 }
 
 /// Average the repeated runs of a stochastic solver into one summary
@@ -175,5 +164,15 @@ mod tests {
         let avg = average_reps(results);
         assert_eq!(avg.points.len(), 6);
         assert!(avg.seconds > 0.0);
+    }
+
+    #[test]
+    fn with_threads_overrides_pool_width() {
+        let exp = tiny_exp(&[SolverKind::Cd], 1).with_threads(2);
+        assert_eq!(exp.threads, 2);
+        let results = run_experiment(&exp);
+        assert_eq!(results.len(), 1);
+        let auto = tiny_exp(&[SolverKind::Cd], 1).with_threads(0);
+        assert!(auto.threads >= 1);
     }
 }

@@ -3,9 +3,11 @@
 //!
 //! A bench invocation builds a [`jobs::Experiment`] (a set of
 //! dataset × solver × repetition cells), the coordinator fans the cells out
-//! over OS threads (each path run is single-threaded and self-contained,
-//! matching the paper's single-core timing discipline — parallelism is
-//! across cells only), and [`report`] renders the collected
+//! over the [`crate::parallel`] worker pool (each path run is
+//! single-threaded and self-contained, matching the paper's single-core
+//! timing discipline — parallelism is across cells only; see
+//! `path::run_path_parallel` and `parallel::ParallelBackend` for the
+//! within-path options), and [`report`] renders the collected
 //! [`crate::path::PathResult`]s as paper-style text tables plus CSV series
 //! under `results/`.
 

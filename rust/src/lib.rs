@@ -16,8 +16,13 @@
 //! * **L3** — this crate: coordinator, solvers, data, metrics, CLI.
 //! * **L2/L1** — `python/compile/`: the FW step as a JAX graph calling a
 //!   Pallas correlation/argmax kernel; AOT-lowered once to HLO text.
-//! * **runtime** — [`runtime`]: PJRT CPU client that loads and executes
-//!   the AOT artifacts from Rust.
+//! * **runtime** — [`runtime`]: loads and executes the AOT artifact
+//!   contract from Rust (native interpreter in the default build).
+//!
+//! Multicore execution lives in [`parallel`]: a scoped worker pool plus a
+//! deterministic shard-reduce backend for the sampled vertex search, used
+//! by `path::run_path_parallel`, `coordinator::jobs`, and the `--threads`
+//! CLI flag.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index.
 
@@ -26,6 +31,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod parallel;
 pub mod path;
 pub mod runtime;
 pub mod solvers;

@@ -1,0 +1,275 @@
+//! Multicore execution subsystem (DESIGN.md §6): a scoped worker pool over
+//! `std::thread` plus a deterministic shard-reduce, with zero external
+//! dependencies. Two hot paths use it:
+//!
+//! * [`ParallelBackend`] — an [`FwBackend`] that shards the κ-sample
+//!   |∇ᵢ|-argmax scan (the per-iteration bottleneck of stochastic FW — the
+//!   LMO step, cf. Kerdreux et al. 2018) across cores. The reduction is
+//!   performed in shard order with strict-inequality comparisons, so the
+//!   selected vertex and its gradient are **bit-identical** to
+//!   [`NativeBackend`] for any thread count (the per-element work is a pure
+//!   function; sharding only re-partitions an order-preserving first-max).
+//! * [`run_tasks`] — the generic fan-out used by `path::run_path_parallel`
+//!   (grid-block chunks with intra-block warm starts) and
+//!   `coordinator::jobs::run_experiment` (dataset × solver × rep cells).
+//!
+//! Threads are scoped (`std::thread::scope`), so tasks may borrow caller
+//! state; a panicking task propagates to the caller, and results always
+//! come back in task order.
+
+use crate::linalg::Storage;
+use crate::solvers::linesearch::FwState;
+use crate::solvers::sfw::{FwBackend, NativeBackend};
+use crate::solvers::Problem;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of hardware threads (≥ 1; falls back to 1 when unknown).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `n_tasks` independent tasks on up to `threads` workers and return
+/// the results in task order. `threads <= 1` (or a single task) runs inline
+/// on the caller thread with no spawn overhead — identical results either
+/// way, since tasks are independent.
+pub fn run_tasks<T, F>(threads: usize, n_tasks: usize, task: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n_tasks.max(1));
+    if threads <= 1 {
+        return (0..n_tasks).map(&task).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<T>>> = (0..n_tasks).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let idx = next.fetch_add(1, Ordering::Relaxed);
+                if idx >= n_tasks {
+                    break;
+                }
+                let out = task(idx);
+                *slots[idx].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("task not executed"))
+        .collect()
+}
+
+/// Split `0..n` into at most `shards` contiguous, near-equal `(start, end)`
+/// ranges, in order. Every range is non-empty when `n > 0`.
+pub fn shard_bounds(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.max(1).min(n.max(1));
+    let base = n / shards;
+    let rem = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// Below this many sampled columns the scan runs serially — thread-scope
+/// setup (~tens of µs) would dominate the κ dot products themselves.
+const DEFAULT_GRAIN: usize = 2048;
+
+/// Parallel [`FwBackend`]: shards the sampled vertex search across cores
+/// with a fixed-order reduction.
+///
+/// Determinism contract: for any `threads` value (including 1) the returned
+/// `(i*, ∇f(α)_{i*})` is bit-identical to [`NativeBackend`] on the same
+/// inputs. Per-element gradients are pure functions of `(prob, state, i)`,
+/// each shard keeps its *first* maximum (strict `>`), and the in-order
+/// cross-shard reduction again keeps the first maximum — so the winner is
+/// the first occurrence of the global maximum in sample order, exactly the
+/// serial scan's choice. Enforced by `rust/tests/prop_parallel.rs`.
+pub struct ParallelBackend {
+    threads: usize,
+    grain: usize,
+    qf: Vec<f32>,
+    /// serial fallback for sub-grain samples (owns its scratch so the hot
+    /// LMO loop stays allocation-free across iterations)
+    native: NativeBackend,
+}
+
+impl ParallelBackend {
+    /// Backend with `threads` workers (0 ⇒ all available cores).
+    pub fn new(threads: usize) -> Self {
+        let threads = if threads == 0 { available_threads() } else { threads };
+        Self {
+            threads,
+            grain: DEFAULT_GRAIN,
+            qf: Vec::new(),
+            native: NativeBackend::new(),
+        }
+    }
+
+    /// Override the minimum per-shard sample count (testing / tuning).
+    pub fn with_grain(mut self, grain: usize) -> Self {
+        self.grain = grain.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Shard count for a sample of `len` columns.
+    fn shards_for(&self, len: usize) -> usize {
+        self.threads.min((len / self.grain).max(1))
+    }
+}
+
+impl FwBackend for ParallelBackend {
+    fn select_vertex(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        sample: &[usize],
+    ) -> (usize, f64) {
+        let n_shards = self.shards_for(sample.len());
+        if n_shards <= 1 {
+            // serial fallback: delegate to the reference implementation
+            return self.native.select_vertex(prob, state, sample);
+        }
+        let shards = shard_bounds(sample.len(), n_shards);
+
+        // Dense sub-sampled fast path (mirrors NativeBackend §Perf): f32
+        // scan, f64 re-evaluation of the winner.
+        if sample.len() < prob.p() {
+            if let Storage::Dense(xd) = prob.x.storage() {
+                self.qf.resize(prob.m(), 0.0);
+                state.write_q(&mut self.qf);
+                let qf: &[f32] = &self.qf;
+                let partials: Vec<(f32, usize)> =
+                    run_tasks(self.threads, shards.len(), |s| {
+                        let (lo, hi) = shards[s];
+                        let mut best_abs = -1.0f32;
+                        let mut best_k = lo;
+                        for (k, &i) in sample[lo..hi].iter().enumerate() {
+                            let g = -(prob.cache.sigma[i] as f32)
+                                + crate::linalg::ops::dot_f32(xd.col(i), qf);
+                            let a = g.abs();
+                            if a > best_abs {
+                                best_abs = a;
+                                best_k = lo + k;
+                            }
+                        }
+                        (best_abs, best_k)
+                    });
+                let mut best_abs = -1.0f32;
+                let mut best_k = 0usize;
+                for (a, k) in partials {
+                    if a > best_abs {
+                        best_abs = a;
+                        best_k = k;
+                    }
+                }
+                let best_i = sample[best_k];
+                return (best_i, state.grad_coord(prob, best_i));
+            }
+        }
+
+        // All-f64 scan (sparse designs and the κ = p deterministic sweep).
+        let partials: Vec<(f64, f64, usize)> = run_tasks(self.threads, shards.len(), |s| {
+            let (lo, hi) = shards[s];
+            let mut best_abs = -1.0f64;
+            let mut best_g = 0.0f64;
+            let mut best_k = lo;
+            for (k, &i) in sample[lo..hi].iter().enumerate() {
+                let g = state.grad_coord(prob, i);
+                let a = g.abs();
+                if a > best_abs {
+                    best_abs = a;
+                    best_g = g;
+                    best_k = lo + k;
+                }
+            }
+            (best_abs, best_g, best_k)
+        });
+        let mut best_abs = -1.0f64;
+        let mut best_g = 0.0f64;
+        let mut best_k = 0usize;
+        for (a, g, k) in partials {
+            if a > best_abs {
+                best_abs = a;
+                best_g = g;
+                best_k = k;
+            }
+        }
+        (sample[best_k], best_g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_bounds_partition_exactly() {
+        for &(n, s) in &[(10usize, 3usize), (1, 8), (0, 4), (7, 7), (100, 1), (5, 9)] {
+            let b = shard_bounds(n, s);
+            assert!(!b.is_empty());
+            assert_eq!(b.first().unwrap().0, 0);
+            assert_eq!(b.last().unwrap().1, n);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "gap/overlap in {b:?}");
+            }
+            if n > 0 {
+                for &(lo, hi) in &b {
+                    assert!(hi > lo, "empty shard in {b:?}");
+                }
+                // near-equal: sizes differ by at most 1
+                let sizes: Vec<usize> = b.iter().map(|&(lo, hi)| hi - lo).collect();
+                let (mn, mx) = (
+                    sizes.iter().copied().min().unwrap(),
+                    sizes.iter().copied().max().unwrap(),
+                );
+                assert!(mx - mn <= 1, "uneven shards {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_returns_in_task_order() {
+        for threads in [1usize, 2, 4, 8] {
+            let out = run_tasks(threads, 37, |i| i * i);
+            assert_eq!(out.len(), 37);
+            for (i, v) in out.iter().enumerate() {
+                assert_eq!(*v, i * i, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn run_tasks_zero_tasks() {
+        let out: Vec<usize> = run_tasks(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn run_tasks_runs_every_task_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        let counters: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+        let _ = run_tasks(6, 50, |i| counters[i].fetch_add(1, Ordering::Relaxed));
+        for (i, c) in counters.iter().enumerate() {
+            assert_eq!(c.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn available_threads_positive() {
+        assert!(available_threads() >= 1);
+    }
+}

@@ -7,4 +7,4 @@ pub mod runner;
 
 pub use grid::{delta_grid, lambda_grid, LogGrid};
 pub use metrics::{evaluate_point, PathPoint, PathResult};
-pub use runner::{plan_delta_max, run_path, PathConfig, SolverKind};
+pub use runner::{plan_delta_max, run_path, run_path_parallel, PathConfig, SolverKind};

@@ -11,6 +11,14 @@
 //!   problems* (the paper's "same sparsity budget"),
 //! * FW warm starts are rescaled onto the boundary `‖α‖₁ = δ` (§5's
 //!   heuristic), implemented exactly in `FwState::rescale_to_radius`.
+//!
+//! The sweep itself is factored into [`run_segment`] — one contiguous
+//! block of grid points with warm starts inside the block — which is the
+//! unit of parallelism: [`run_path`] runs a single whole-grid segment;
+//! [`run_path_parallel`] fans `threads` contiguous blocks out over the
+//! [`crate::parallel`] worker pool (warm-start-respecting chunking: every
+//! block starts cold at its sparsest end, exactly like the head of a
+//! sequential path, and warm-starts within the block).
 
 use super::grid::{delta_grid, lambda_grid, LogGrid};
 use super::metrics::{evaluate_point, PathPoint, PathResult};
@@ -119,141 +127,251 @@ pub fn plan_delta_max(ds: &Dataset, cache: &ColumnCache, n_points: usize) -> (f6
     (delta_max.max(1e-12), dots)
 }
 
-/// Run one full regularization path. See module docs for conventions.
-pub fn run_path(ds: &Dataset, kind: SolverKind, cfg: &PathConfig) -> PathResult {
-    let mut sw = Stopwatch::started();
-    let cache = ColumnCache::build(&ds.x, &ds.y);
-    let prob = Problem::new(&ds.x, &ds.y, &cache);
-    let p = prob.p();
-    // setup cost: σ = Xᵀy is p dot products (paper counts it once per path)
-    let mut total_dots = p as u64;
-    let mut total_iters = 0u64;
-    let mut points: Vec<PathPoint> = Vec::with_capacity(cfg.n_points);
+/// Output of one contiguous grid segment.
+struct Segment {
+    points: Vec<PathPoint>,
+    iters: u64,
+    dots: u64,
+    /// solver wall-clock (metric evaluation excluded, setup included)
+    seconds: f64,
+}
 
+/// Plan the full grid for `(ds, kind, cfg)`. Grid planning (the paper's
+/// "δ_max = ‖α(λ_min)‖₁ from a Glmnet reference run") is shared
+/// experimental setup, not solver work: it is excluded from time and dot
+/// accounting, exactly as Table 5 does — `sw` is paused around it. Benches
+/// plan once per dataset and pass `delta_max` explicitly.
+fn plan_grid(
+    ds: &Dataset,
+    cache: &ColumnCache,
+    kind: SolverKind,
+    cfg: &PathConfig,
+    sw: &mut Stopwatch,
+) -> LogGrid {
     if kind.is_constrained() {
         let delta_max = match cfg.delta_max {
             Some(d) => d,
             None => {
-                // Grid planning (the paper's "δ_max = ‖α(λ_min)‖₁ from a
-                // Glmnet reference run") is shared experimental setup, not
-                // solver work: exclude it from time and dot accounting,
-                // exactly as Table 5 does. Benches plan once per dataset
-                // and pass `delta_max` explicitly.
                 sw.stop();
-                let (d, _plan_dots) = plan_delta_max(ds, &cache, cfg.n_points);
+                let (d, _plan_dots) = plan_delta_max(ds, cache, cfg.n_points);
                 sw.start();
                 d
             }
         };
-        let grid = delta_grid(delta_max, cfg.n_points);
-
-        match kind {
-            SolverKind::ApgConst => {
-                let l = ds.x.spectral_norm_sq(30, cfg.opts.seed);
-                total_dots += 60 * p as u64; // 30 power iters × (matvec + trmatvec)
-                let mut apg = Apg::new(cfg.opts, l);
-                let mut alpha = vec![0.0; p];
-                for &delta in grid.values() {
-                    let res = apg.run(&prob, &mut alpha, delta);
-                    total_iters += res.iters;
-                    total_dots += res.dots;
-                    sw.stop();
-                    points.push(evaluate_point(
-                        ds, &alpha, delta, res.iters, res.dots, res.converged, &cfg.track,
-                    ));
-                    sw.start();
-                }
-            }
-            SolverKind::FwDet | SolverKind::Sfw(_) => {
-                let mut state = FwState::zero(p, prob.m());
-                let mut alpha_buf = vec![0.0; p];
-                let mut sfw = match kind {
-                    SolverKind::Sfw(strategy) => {
-                        Some(StochasticFw::new(strategy, cfg.opts))
-                    }
-                    _ => None,
-                };
-                let fw = FrankWolfe::new(cfg.opts);
-                for &delta in grid.values() {
-                    // §5 warm-start heuristic: scale the previous solution
-                    // onto the new boundary
-                    state.rescale_to_radius(delta);
-                    let res = match sfw.as_mut() {
-                        Some(s) => s.run(&prob, &mut state, delta),
-                        None => fw.run(&prob, &mut state, delta),
-                    };
-                    total_iters += res.iters;
-                    total_dots += res.dots;
-                    sw.stop();
-                    state.write_alpha(&mut alpha_buf);
-                    points.push(evaluate_point(
-                        ds, &alpha_buf, delta, res.iters, res.dots, res.converged,
-                        &cfg.track,
-                    ));
-                    sw.start();
-                }
-            }
-            _ => unreachable!(),
-        }
+        delta_grid(delta_max, cfg.n_points)
     } else {
-        let lmax = lambda_max(&prob);
-        let grid = lambda_grid(lmax, cfg.n_points);
-        let mut alpha = vec![0.0; p];
+        let prob = Problem::new(&ds.x, &ds.y, cache);
+        lambda_grid(lambda_max(&prob), cfg.n_points)
+    }
+}
 
-        match kind {
-            SolverKind::Cd => {
-                let mut cd = CoordinateDescent::new(cfg.opts);
-                cd.reset_residual(&prob, &alpha);
-                for &lam in grid.values() {
-                    let res = cd.run(&prob, &mut alpha, lam);
-                    total_iters += res.iters;
-                    total_dots += res.dots;
-                    sw.stop();
-                    points.push(evaluate_point(
-                        ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
-                    ));
-                    sw.start();
+/// Run one contiguous block of grid values with warm starts inside the
+/// block. `grid` must carry λ values for penalized kinds and δ values for
+/// constrained kinds (as produced by [`plan_grid`]). `lipschitz` is an
+/// optional precomputed ‖X‖₂² for the accelerated-gradient kinds: `None`
+/// computes (and dot-counts) it inside the segment, exactly like the
+/// sequential sweep; the parallel runner computes it once and shares it so
+/// per-block setup is neither repeated nor double-counted.
+fn run_segment(
+    ds: &Dataset,
+    cache: &ColumnCache,
+    kind: SolverKind,
+    cfg: &PathConfig,
+    grid: &[f64],
+    lipschitz: Option<f64>,
+) -> Segment {
+    let prob = Problem::new(&ds.x, &ds.y, cache);
+    let p = prob.p();
+    let mut sw = Stopwatch::started();
+    let mut iters = 0u64;
+    let mut dots = 0u64;
+    let mut points: Vec<PathPoint> = Vec::with_capacity(grid.len());
+
+    match kind {
+        SolverKind::ApgConst => {
+            let l = match lipschitz {
+                Some(l) => l,
+                None => {
+                    dots += 60 * p as u64; // 30 power iters × (matvec + trmatvec)
+                    ds.x.spectral_norm_sq(30, cfg.opts.seed)
                 }
+            };
+            let mut apg = Apg::new(cfg.opts, l);
+            let mut alpha = vec![0.0; p];
+            for &delta in grid {
+                let res = apg.run(&prob, &mut alpha, delta);
+                iters += res.iters;
+                dots += res.dots;
+                sw.stop();
+                points.push(evaluate_point(
+                    ds, &alpha, delta, res.iters, res.dots, res.converged, &cfg.track,
+                ));
+                sw.start();
             }
-            SolverKind::Scd => {
-                let mut scd = StochasticCd::new(cfg.opts);
-                scd.reset_residual(&prob, &alpha);
-                for &lam in grid.values() {
-                    let res = scd.run(&prob, &mut alpha, lam);
-                    total_iters += res.iters;
-                    total_dots += res.dots;
-                    sw.stop();
-                    points.push(evaluate_point(
-                        ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
-                    ));
-                    sw.start();
+        }
+        SolverKind::FwDet | SolverKind::Sfw(_) => {
+            let mut state = FwState::zero(p, prob.m());
+            let mut alpha_buf = vec![0.0; p];
+            let mut sfw = match kind {
+                SolverKind::Sfw(strategy) => Some(StochasticFw::new(strategy, cfg.opts)),
+                _ => None,
+            };
+            let fw = FrankWolfe::new(cfg.opts);
+            for &delta in grid {
+                // §5 warm-start heuristic: scale the previous solution
+                // onto the new boundary
+                state.rescale_to_radius(delta);
+                let res = match sfw.as_mut() {
+                    Some(s) => s.run(&prob, &mut state, delta),
+                    None => fw.run(&prob, &mut state, delta),
+                };
+                iters += res.iters;
+                dots += res.dots;
+                sw.stop();
+                state.write_alpha(&mut alpha_buf);
+                points.push(evaluate_point(
+                    ds, &alpha_buf, delta, res.iters, res.dots, res.converged, &cfg.track,
+                ));
+                sw.start();
+            }
+        }
+        SolverKind::Cd => {
+            let mut cd = CoordinateDescent::new(cfg.opts);
+            let mut alpha = vec![0.0; p];
+            cd.reset_residual(&prob, &alpha);
+            for &lam in grid {
+                let res = cd.run(&prob, &mut alpha, lam);
+                iters += res.iters;
+                dots += res.dots;
+                sw.stop();
+                points.push(evaluate_point(
+                    ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
+                ));
+                sw.start();
+            }
+        }
+        SolverKind::Scd => {
+            let mut scd = StochasticCd::new(cfg.opts);
+            let mut alpha = vec![0.0; p];
+            scd.reset_residual(&prob, &alpha);
+            for &lam in grid {
+                let res = scd.run(&prob, &mut alpha, lam);
+                iters += res.iters;
+                dots += res.dots;
+                sw.stop();
+                points.push(evaluate_point(
+                    ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
+                ));
+                sw.start();
+            }
+        }
+        SolverKind::FistaReg => {
+            let l = match lipschitz {
+                Some(l) => l,
+                None => {
+                    dots += 60 * p as u64;
+                    ds.x.spectral_norm_sq(30, cfg.opts.seed)
                 }
+            };
+            let mut fista = Fista::new(cfg.opts, l);
+            let mut alpha = vec![0.0; p];
+            for &lam in grid {
+                let res = fista.run(&prob, &mut alpha, lam);
+                iters += res.iters;
+                dots += res.dots;
+                sw.stop();
+                points.push(evaluate_point(
+                    ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
+                ));
+                sw.start();
             }
-            SolverKind::FistaReg => {
-                let l = ds.x.spectral_norm_sq(30, cfg.opts.seed);
-                total_dots += 60 * p as u64;
-                let mut fista = Fista::new(cfg.opts, l);
-                for &lam in grid.values() {
-                    let res = fista.run(&prob, &mut alpha, lam);
-                    total_iters += res.iters;
-                    total_dots += res.dots;
-                    sw.stop();
-                    points.push(evaluate_point(
-                        ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
-                    ));
-                    sw.start();
-                }
-            }
-            _ => unreachable!(),
         }
     }
 
     sw.stop();
+    Segment { points, iters, dots, seconds: sw.elapsed_secs() }
+}
+
+/// Run one full regularization path. See module docs for conventions.
+pub fn run_path(ds: &Dataset, kind: SolverKind, cfg: &PathConfig) -> PathResult {
+    let mut sw = Stopwatch::started();
+    let cache = ColumnCache::build(&ds.x, &ds.y);
+    let grid = plan_grid(ds, &cache, kind, cfg, &mut sw);
+    sw.stop();
+    let seg = run_segment(ds, &cache, kind, cfg, grid.values(), None);
+    // setup cost: σ = Xᵀy is p dot products (paper counts it once per path)
+    let p = ds.cols() as u64;
+    PathResult {
+        solver: kind.label(),
+        dataset: ds.name.clone(),
+        points: seg.points,
+        seconds: sw.elapsed_secs() + seg.seconds,
+        total_iters: seg.iters,
+        total_dots: seg.dots + p,
+    }
+}
+
+/// Multi-threaded path runner: splits the grid into `threads` contiguous
+/// blocks and fans them out over the [`crate::parallel`] pool. Warm starts
+/// are respected *within* each block (each block starts cold at its
+/// sparsest end, exactly like the head of a sequential sweep), so every
+/// grid point still solves the same problem as in [`run_path`].
+///
+/// Determinism: a fixed `(seed, threads)` pair always produces the same
+/// result. Different thread counts change the warm-start chunking, so
+/// per-point iteration counts may differ from the sequential sweep (the
+/// *per-iteration* parallelism of [`crate::parallel::ParallelBackend`], in
+/// contrast, is bit-identical for any thread count).
+///
+/// `threads <= 1` falls back to [`run_path`]. Reported `seconds` follows
+/// the same accounting as [`run_path`] — solver time with per-point metric
+/// evaluation excluded — taken as shared setup plus the *critical path*
+/// (slowest block), so sequential and parallel numbers compare
+/// apples-to-apples. The ‖X‖₂² setup of the accelerated-gradient kinds is
+/// computed once and shared across blocks (and dot-counted once).
+pub fn run_path_parallel(
+    ds: &Dataset,
+    kind: SolverKind,
+    cfg: &PathConfig,
+    threads: usize,
+) -> PathResult {
+    let threads = threads.max(1);
+    if threads == 1 || cfg.n_points < 2 {
+        return run_path(ds, kind, cfg);
+    }
+    let mut sw = Stopwatch::started();
+    let cache = ColumnCache::build(&ds.x, &ds.y);
+    let grid = plan_grid(ds, &cache, kind, cfg, &mut sw);
+    let mut total_dots = ds.cols() as u64; // σ setup, counted once
+    let lipschitz = match kind {
+        SolverKind::ApgConst | SolverKind::FistaReg => {
+            total_dots += 60 * ds.cols() as u64;
+            Some(ds.x.spectral_norm_sq(30, cfg.opts.seed))
+        }
+        _ => None,
+    };
+    sw.stop();
+    let values = grid.values();
+    let blocks = crate::parallel::shard_bounds(values.len(), threads);
+    let segs = crate::parallel::run_tasks(threads, blocks.len(), |b| {
+        let (lo, hi) = blocks[b];
+        run_segment(ds, &cache, kind, cfg, &values[lo..hi], lipschitz)
+    });
+
+    let mut points: Vec<PathPoint> = Vec::with_capacity(values.len());
+    let mut total_iters = 0u64;
+    let mut critical_path = 0.0f64;
+    for seg in segs {
+        points.extend(seg.points);
+        total_iters += seg.iters;
+        total_dots += seg.dots;
+        critical_path = critical_path.max(seg.seconds);
+    }
     PathResult {
         solver: kind.label(),
         dataset: ds.name.clone(),
         points,
-        seconds: sw.elapsed_secs(),
+        seconds: sw.elapsed_secs() + critical_path,
         total_iters,
         total_dots,
     }
@@ -376,5 +494,60 @@ mod tests {
         // total includes the σ setup (p = 100 here)
         assert_eq!(pr.total_dots, sum_dots + 100);
         assert!(pr.seconds > 0.0);
+    }
+
+    #[test]
+    fn parallel_path_same_grid_and_full_cover() {
+        let ds = small_ds();
+        let mut cfg = fast_cfg(12);
+        cfg.delta_max = Some(3.0);
+        for kind in [
+            SolverKind::Cd,
+            SolverKind::FwDet,
+            SolverKind::Sfw(SamplingStrategy::Fraction(0.3)),
+        ] {
+            let seq = run_path(&ds, kind, &cfg);
+            let par = run_path_parallel(&ds, kind, &cfg, 4);
+            assert_eq!(par.points.len(), seq.points.len(), "{}", kind.label());
+            // identical grid, in order
+            for (a, b) in par.points.iter().zip(seq.points.iter()) {
+                assert_eq!(a.reg, b.reg);
+                assert!(a.train_mse.is_finite());
+            }
+            assert!(par.total_dots > 0);
+            assert!(par.seconds > 0.0);
+        }
+    }
+
+    #[test]
+    fn parallel_path_threads_one_equals_sequential() {
+        let ds = small_ds();
+        let mut cfg = fast_cfg(6);
+        cfg.delta_max = Some(2.0);
+        let seq = run_path(&ds, SolverKind::FwDet, &cfg);
+        let par = run_path_parallel(&ds, SolverKind::FwDet, &cfg, 1);
+        assert_eq!(seq.points.len(), par.points.len());
+        for (a, b) in seq.points.iter().zip(par.points.iter()) {
+            assert_eq!(a.reg, b.reg);
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits());
+        }
+        assert_eq!(seq.total_dots, par.total_dots);
+    }
+
+    #[test]
+    fn parallel_path_deterministic_for_fixed_thread_count() {
+        let ds = small_ds();
+        let mut cfg = fast_cfg(9);
+        cfg.delta_max = Some(2.5);
+        let kind = SolverKind::Sfw(SamplingStrategy::Fraction(0.2));
+        let a = run_path_parallel(&ds, kind, &cfg, 3);
+        let b = run_path_parallel(&ds, kind, &cfg, 3);
+        assert_eq!(a.total_iters, b.total_iters);
+        assert_eq!(a.total_dots, b.total_dots);
+        for (x, y) in a.points.iter().zip(b.points.iter()) {
+            assert_eq!(x.train_mse.to_bits(), y.train_mse.to_bits());
+            assert_eq!(x.active, y.active);
+        }
     }
 }

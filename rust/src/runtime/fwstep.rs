@@ -1,6 +1,6 @@
 //! XLA-backed stochastic FW: the request-path demonstration that the whole
 //! per-iteration math (sampled correlation kernel → argmax → eq.-8 line
-//! search → S/F recursions) runs inside the AOT-compiled artifact, with
+//! search → S/F recursions) runs inside the AOT artifact contract, with
 //! Rust doing only sampling, gather, and the O(nnz) rank-1 state updates.
 //!
 //! This backend targets the dense, small-m regime the artifacts are
@@ -8,12 +8,11 @@
 //! the native backend — same math, cross-checked in `rust/tests/`.
 
 use super::artifacts::ArtifactSpec;
-use super::engine::XlaRuntime;
+use super::engine::{RtResult, RuntimeError, XlaRuntime};
 use crate::solvers::linesearch::FwState;
 use crate::solvers::sampling::SamplingStrategy;
 use crate::solvers::{Problem, RunResult, SolveOptions};
 use crate::util::rng::Xoshiro256;
-use anyhow::{anyhow, Result};
 
 /// Stochastic-FW solver executing each step through the XLA artifact.
 pub struct XlaSfw {
@@ -47,18 +46,16 @@ impl XlaSfw {
         &self,
         rt: &'a XlaRuntime,
         prob: &Problem<'_>,
-    ) -> Result<&'a ArtifactSpec> {
+    ) -> RtResult<&'a ArtifactSpec> {
         let kappa = self.strategy.kappa(prob.p());
-        rt.manifest()
-            .find_fitting(kappa, prob.m())
-            .ok_or_else(|| {
-                anyhow!(
-                    "no artifact fits kappa={kappa}, m={} — regenerate with \
-                     `python -m compile.aot --shapes {kappa}x{}`",
-                    prob.m(),
-                    prob.m()
-                )
-            })
+        rt.manifest().find_fitting(kappa, prob.m()).ok_or_else(|| {
+            RuntimeError(format!(
+                "no artifact fits kappa={kappa}, m={} — regenerate with \
+                 `python -m compile.aot --shapes {kappa}x{}`",
+                prob.m(),
+                prob.m()
+            ))
+        })
     }
 
     /// Solve `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ` with XLA-executed steps.
@@ -68,7 +65,7 @@ impl XlaSfw {
         prob: &Problem<'_>,
         state: &mut FwState,
         delta: f64,
-    ) -> Result<RunResult> {
+    ) -> RtResult<RunResult> {
         let p = prob.p();
         let m = prob.m();
         let kappa = self.strategy.kappa(p);
@@ -118,12 +115,13 @@ impl XlaSfw {
             )?;
             dots += kappa as u64;
 
-            anyhow::ensure!(
-                out.i_local < self.sample.len(),
-                "artifact chose a padded row ({} ≥ {})",
-                out.i_local,
-                self.sample.len()
-            );
+            if out.i_local >= self.sample.len() {
+                return Err(RuntimeError(format!(
+                    "artifact chose a padded row ({} ≥ {})",
+                    out.i_local,
+                    self.sample.len()
+                )));
+            }
             let i_global = self.sample[out.i_local];
             let info = state.apply_step(
                 prob,

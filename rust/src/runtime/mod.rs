@@ -1,19 +1,23 @@
-//! PJRT runtime: load the AOT-compiled HLO artifacts and run them from the
-//! Rust hot path. Python never executes at request time — `make artifacts`
-//! runs `python/compile/aot.py` once; this module consumes the text files.
+//! Artifact runtime: load the AOT-compiled HLO artifacts and run the
+//! FW-step contract from the Rust hot path. Python never executes at
+//! request time — `make artifacts` runs `python/compile/aot.py` once; this
+//! module consumes the produced files.
 //!
 //! * [`artifacts`] — `manifest.json` schema + artifact discovery.
-//! * [`engine`] — PJRT CPU client, compile-once executable cache, the
-//!   typed `fw_step` call.
+//! * [`engine`] — the FW-step executor. The default build evaluates the
+//!   artifact contract with a native f32 interpreter (this environment
+//!   vendors no `xla` binding crate — see the module docs for the drop-in
+//!   PJRT path), behind a compile-once validation cache and the typed
+//!   `fw_step` call.
 //! * [`fwstep`] — [`fwstep::XlaSfw`]: a stochastic-FW solver whose vertex
-//!   search *and* line search run inside the XLA executable (the L2 graph),
-//!   with only the rank-1 state updates native. Cross-checked against the
-//!   native solver in `rust/tests/`.
+//!   search *and* line search run through the artifact contract (the L2
+//!   graph), with only the rank-1 state updates native. Cross-checked
+//!   against the native solver in `rust/tests/`.
 
 pub mod artifacts;
 pub mod engine;
 pub mod fwstep;
 
 pub use artifacts::{ArtifactSpec, Manifest};
-pub use engine::{FwStepOut, XlaRuntime};
+pub use engine::{FwStepOut, RtResult, RuntimeError, XlaRuntime};
 pub use fwstep::XlaSfw;

@@ -1,0 +1,98 @@
+//! Solver conformance: the stochastic solver with κ = p must reproduce the
+//! deterministic Frank-Wolfe trajectory bit-for-bit along a warm-started
+//! path, and all six `SolverKind`s must reach comparable objectives on a
+//! small synthetic path.
+
+use sfw_lasso::data::{load, Named};
+use sfw_lasso::path::{run_path, PathConfig, SolverKind};
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::SolveOptions;
+
+#[test]
+fn sfw_full_sampling_matches_fwdet_trajectories_bit_for_bit() {
+    let ds = load(Named::Synth10k { relevant: 32 }, 0.01, 7); // p = 100
+    let cfg = PathConfig {
+        n_points: 10,
+        opts: SolveOptions {
+            eps: 1e-3,
+            max_iters: 2_000,
+            patience: 2,
+            ..Default::default()
+        },
+        delta_max: Some(3.0),
+        track: (0..ds.cols()).collect(),
+    };
+    let fw = run_path(&ds, SolverKind::FwDet, &cfg);
+    let sfw = run_path(&ds, SolverKind::Sfw(SamplingStrategy::Full), &cfg);
+    assert_eq!(fw.points.len(), sfw.points.len());
+    assert_eq!(fw.total_iters, sfw.total_iters);
+    // κ = p ⇒ the sampled sweep degenerates to the full sweep: both count
+    // p dots per iteration, pick the same vertex, take the same step.
+    assert_eq!(fw.total_dots, sfw.total_dots);
+    for (a, b) in fw.points.iter().zip(sfw.points.iter()) {
+        assert_eq!(a.reg.to_bits(), b.reg.to_bits());
+        assert_eq!(a.iters, b.iters, "iteration count diverged at δ = {}", a.reg);
+        assert_eq!(a.dots, b.dots);
+        assert_eq!(a.active, b.active);
+        assert_eq!(a.converged, b.converged);
+        assert_eq!(a.l1_norm.to_bits(), b.l1_norm.to_bits());
+        assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits());
+        assert_eq!(
+            a.tracked_coefs.len(),
+            b.tracked_coefs.len(),
+            "tracking length mismatch"
+        );
+        for (j, (x, y)) in a.tracked_coefs.iter().zip(b.tracked_coefs.iter()).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "coefficient {j} diverged at δ = {}: {x} vs {y}",
+                a.reg
+            );
+        }
+    }
+}
+
+#[test]
+fn all_six_solver_kinds_reach_comparable_objective() {
+    // Few relevant features keep δ_max modest so the FW O(1/k) tail fits a
+    // unit-test budget (same rationale as the path-runner tests).
+    let ds = load(Named::Synth10k { relevant: 8 }, 0.01, 3); // p = 100
+    let cfg = PathConfig {
+        n_points: 10,
+        opts: SolveOptions {
+            eps: 1e-3,
+            max_iters: 20_000,
+            patience: 2,
+            ..Default::default()
+        },
+        delta_max: None,
+        track: vec![],
+    };
+    let kinds = [
+        SolverKind::Cd,
+        SolverKind::Scd,
+        SolverKind::FistaReg,
+        SolverKind::ApgConst,
+        SolverKind::FwDet,
+        SolverKind::Sfw(SamplingStrategy::Fraction(0.3)),
+    ];
+    let best_mse = |kind: SolverKind| -> f64 {
+        let pr = run_path(&ds, kind, &cfg);
+        assert_eq!(pr.points.len(), 10, "{}", kind.label());
+        pr.points
+            .iter()
+            .map(|p| p.train_mse)
+            .fold(f64::INFINITY, f64::min)
+    };
+    let reference = best_mse(SolverKind::Cd);
+    assert!(reference.is_finite() && reference >= 0.0);
+    for kind in kinds {
+        let b = best_mse(kind);
+        assert!(
+            b <= 2.0 * reference + 1e-6,
+            "{} best train MSE {b} vs CD {reference}",
+            kind.label()
+        );
+    }
+}

@@ -1,0 +1,135 @@
+//! Data-loader edge cases: LIBSVM parsing quirks (blank lines, unsorted or
+//! duplicate indices, 1-based enforcement, trailing whitespace / CRLF) and
+//! generator seed determinism.
+
+use sfw_lasso::data::libsvm;
+use sfw_lasso::data::synth::{make_regression, SynthSpec};
+use sfw_lasso::linalg::Storage;
+
+#[test]
+fn libsvm_skips_blank_and_whitespace_only_lines() {
+    let txt = "\n\n1.5 1:1\n   \n\t\n-0.5 2:2\n\n";
+    let d = libsvm::parse(txt, None).unwrap();
+    assert_eq!(d.y, vec![1.5, -0.5]);
+    assert_eq!(d.x.rows(), 2);
+    assert_eq!(d.x.cols(), 2);
+}
+
+#[test]
+fn libsvm_accepts_unsorted_indices_within_a_row() {
+    // indices out of order within the line must land in the right columns
+    let d = libsvm::parse("1 3:30 1:10 2:20\n", None).unwrap();
+    assert_eq!(d.x.cols(), 3);
+    let v = vec![1.0];
+    assert_eq!(d.x.col_dot(0, &v), 10.0);
+    assert_eq!(d.x.col_dot(1, &v), 20.0);
+    assert_eq!(d.x.col_dot(2, &v), 30.0);
+}
+
+#[test]
+fn libsvm_sums_duplicate_indices_within_a_row() {
+    // LIBSVM files should not contain duplicates, but real-world exports
+    // do; the CSC builder merges them additively.
+    let d = libsvm::parse("1 2:1.5 2:2.5\n", None).unwrap();
+    assert_eq!(d.x.nnz(), 1);
+    assert!((d.x.col_dot(1, &[1.0]) - 4.0).abs() < 1e-6);
+}
+
+#[test]
+fn libsvm_rejects_zero_based_indices() {
+    let err = libsvm::parse("1 0:5\n", None).unwrap_err();
+    assert!(err.contains("1-based"), "unexpected error: {err}");
+    // and reports the offending line number
+    let err = libsvm::parse("1 1:1\n2 0:5\n", None).unwrap_err();
+    assert!(err.contains("line 2"), "unexpected error: {err}");
+}
+
+#[test]
+fn libsvm_handles_trailing_whitespace_and_crlf() {
+    let txt = "1 1:2 \r\n-1 2:1\t\r\n";
+    let d = libsvm::parse(txt, None).unwrap();
+    assert_eq!(d.y, vec![1.0, -1.0]);
+    assert_eq!(d.x.cols(), 2);
+    assert_eq!(d.x.col_dot(0, &[1.0, 0.0]), 2.0);
+    assert_eq!(d.x.col_dot(1, &[0.0, 1.0]), 1.0);
+}
+
+#[test]
+fn libsvm_label_only_rows_are_valid() {
+    // a document with no features still contributes a response row
+    let d = libsvm::parse("5\n1 1:1\n", None).unwrap();
+    assert_eq!(d.y, vec![5.0, 1.0]);
+    assert_eq!(d.x.rows(), 2);
+    assert_eq!(d.x.cols(), 1);
+    assert_eq!(d.x.col_nnz(0), 1);
+}
+
+#[test]
+fn libsvm_fixed_p_validates_and_pads() {
+    assert_eq!(libsvm::parse("1 1:1\n", Some(10)).unwrap().x.cols(), 10);
+    let err = libsvm::parse("1 7:1\n", Some(3)).unwrap_err();
+    assert!(err.contains("exceeds"), "unexpected error: {err}");
+}
+
+#[test]
+fn libsvm_roundtrip_preserves_label_only_rows() {
+    let txt = "5\n1 1:1 3:2\n";
+    let d = libsvm::parse(txt, None).unwrap();
+    let dir = std::env::temp_dir().join("sfw_loader_edge");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("edge.svm");
+    libsvm::write(&path, &d.x, &d.y).unwrap();
+    let rt = libsvm::read(&path, Some(d.x.cols())).unwrap();
+    assert_eq!(rt.y, d.y);
+    assert_eq!(rt.x.nnz(), d.x.nnz());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn synth_is_deterministic_per_seed_including_design_entries() {
+    let spec = SynthSpec {
+        n_samples: 25,
+        n_features: 40,
+        n_informative: 6,
+        noise: 3.0,
+        seed: 123,
+    };
+    let a = make_regression(&spec);
+    let b = make_regression(&spec);
+    assert_eq!(a.y, b.y);
+    assert_eq!(a.ground_truth, b.ground_truth);
+    let (Storage::Dense(xa), Storage::Dense(xb)) = (a.x.storage(), b.x.storage()) else {
+        panic!("synth must be dense");
+    };
+    assert_eq!(xa.raw(), xb.raw(), "design entries differ for equal seeds");
+
+    // a different seed must change both the design and the response
+    let c = make_regression(&SynthSpec { seed: 124, ..spec });
+    let Storage::Dense(xc) = c.x.storage() else { panic!() };
+    assert_ne!(xa.raw(), xc.raw());
+    assert_ne!(a.y, c.y);
+}
+
+#[test]
+fn synth_informative_support_is_exact_and_reproducible() {
+    let spec = SynthSpec {
+        n_samples: 10,
+        n_features: 200,
+        n_informative: 17,
+        noise: 0.0,
+        seed: 9,
+    };
+    let support = |d: &sfw_lasso::data::synth::SynthData| -> Vec<usize> {
+        d.ground_truth
+            .iter()
+            .enumerate()
+            .filter(|(_, &b)| b != 0.0)
+            .map(|(j, _)| j)
+            .collect()
+    };
+    let a = make_regression(&spec);
+    let b = make_regression(&spec);
+    let (sa, sb) = (support(&a), support(&b));
+    assert_eq!(sa.len(), 17);
+    assert_eq!(sa, sb, "planted support not reproducible");
+}

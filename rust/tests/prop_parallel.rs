@@ -1,0 +1,168 @@
+//! Parallel-subsystem properties: the sharded vertex search is
+//! bit-identical to the serial reference for any thread count, across
+//! random shapes, storages, sample sizes, and warm states; and a full
+//! solver run through [`ParallelBackend`] is thread-count invariant.
+
+use sfw_lasso::linalg::{ColumnCache, CscMatrix, DenseMatrix, Design};
+use sfw_lasso::parallel::ParallelBackend;
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::{FwBackend, NativeBackend, StochasticFw};
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::testing::{gen, Prop};
+use sfw_lasso::util::rng::Xoshiro256;
+
+#[test]
+fn parallel_backend_matches_native_vertex_selection() {
+    Prop::new("ParallelBackend ≡ NativeBackend on the sampled argmax")
+        .cases(60)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 3, 40);
+            let p = gen::usize_range(rng, 2, 120);
+            let dense = rng.next_f64() < 0.5;
+            let x = if dense {
+                Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()))
+            } else {
+                Design::sparse(CscMatrix::random(m, p, 0.4, rng))
+            };
+            let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let cache = ColumnCache::build(&x, &y);
+            let prob = Problem::new(&x, &y, &cache);
+
+            // random warm state (a few FW steps)
+            let mut st = FwState::zero(p, m);
+            for _ in 0..gen::usize_range(rng, 0, 6) {
+                let i = rng.below(p);
+                let g = st.grad_coord(&prob, i);
+                st.step(&prob, 1.5, i, g);
+            }
+
+            // random κ-sample, κ ∈ [1, p]
+            let k = gen::usize_range(rng, 1, p + 1);
+            let mut sample = Vec::new();
+            rng.subset(p, k, &mut sample);
+
+            let mut native = NativeBackend::new();
+            let (ni, ng) = native.select_vertex(&prob, &st, &sample);
+            for threads in [1usize, 2, 4, 8] {
+                // grain 1 forces the sharded code path even on tiny samples
+                let mut par = ParallelBackend::new(threads).with_grain(1);
+                let (pi, pg) = par.select_vertex(&prob, &st, &sample);
+                assert_eq!(
+                    ni, pi,
+                    "vertex differs at {threads} threads (m={m}, p={p}, κ={k}, dense={dense})"
+                );
+                assert_eq!(
+                    ng.to_bits(),
+                    pg.to_bits(),
+                    "gradient differs at {threads} threads: {ng} vs {pg}"
+                );
+            }
+        });
+}
+
+#[test]
+fn parallel_backend_default_grain_matches_native_too() {
+    // Exercises the serial-fallback branch (small samples at default grain).
+    Prop::new("ParallelBackend default grain ≡ NativeBackend")
+        .cases(20)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 4, 20);
+            let p = gen::usize_range(rng, 4, 60);
+            let x = Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()));
+            let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let cache = ColumnCache::build(&x, &y);
+            let prob = Problem::new(&x, &y, &cache);
+            let st = FwState::zero(p, m);
+            let k = gen::usize_range(rng, 1, p + 1);
+            let mut sample = Vec::new();
+            rng.subset(p, k, &mut sample);
+            let mut native = NativeBackend::new();
+            let mut par = ParallelBackend::new(4);
+            let (ni, ng) = native.select_vertex(&prob, &st, &sample);
+            let (pi, pg) = par.select_vertex(&prob, &st, &sample);
+            assert_eq!(ni, pi);
+            assert_eq!(ng.to_bits(), pg.to_bits());
+        });
+}
+
+fn solve_with_threads(
+    prob: &Problem<'_>,
+    p: usize,
+    m: usize,
+    threads: usize,
+) -> (u64, u64, bool, f64, Vec<f64>) {
+    let opts = SolveOptions { eps: 0.0, max_iters: 150, seed: 42, ..Default::default() };
+    let mut solver = StochasticFw::with_backend(
+        SamplingStrategy::Fraction(0.25),
+        opts,
+        ParallelBackend::new(threads).with_grain(1),
+    );
+    let mut st = FwState::zero(p, m);
+    let res = solver.run(prob, &mut st, 2.0);
+    (res.iters, res.dots, res.converged, res.objective, st.alpha())
+}
+
+/// Acceptance criterion: same seed ⇒ identical `RunResult` (and iterate)
+/// for any `--threads` value.
+#[test]
+fn parallel_solver_run_is_thread_count_invariant() {
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    let (m, p) = (60, 400);
+    let x = Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()));
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+
+    // serial reference through the native backend
+    let reference = {
+        let opts = SolveOptions { eps: 0.0, max_iters: 150, seed: 42, ..Default::default() };
+        let mut solver = StochasticFw::new(SamplingStrategy::Fraction(0.25), opts);
+        let mut st = FwState::zero(p, m);
+        let res = solver.run(&prob, &mut st, 2.0);
+        (res.iters, res.dots, res.converged, res.objective, st.alpha())
+    };
+
+    for threads in [1usize, 2, 4, 8] {
+        let got = solve_with_threads(&prob, p, m, threads);
+        assert_eq!(got.0, reference.0, "iters differ at {threads} threads");
+        assert_eq!(got.1, reference.1, "dots differ at {threads} threads");
+        assert_eq!(got.2, reference.2, "converged differs at {threads} threads");
+        assert_eq!(
+            got.3.to_bits(),
+            reference.3.to_bits(),
+            "objective differs at {threads} threads: {} vs {}",
+            got.3,
+            reference.3
+        );
+        assert_eq!(got.4.len(), reference.4.len());
+        for (j, (a, b)) in got.4.iter().zip(reference.4.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "α[{j}] differs at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn parallel_backend_sparse_full_sample() {
+    // κ = p on sparse storage exercises the all-f64 sharded scan.
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let (m, p) = (30, 90);
+    let x = Design::sparse(CscMatrix::random(m, p, 0.3, &mut rng));
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let mut st = FwState::zero(p, m);
+    for i in [1usize, 7, 13] {
+        let g = st.grad_coord(&prob, i);
+        st.step(&prob, 1.0, i, g);
+    }
+    let sample: Vec<usize> = (0..p).collect();
+    let mut native = NativeBackend::new();
+    let (ni, ng) = native.select_vertex(&prob, &st, &sample);
+    for threads in [2usize, 3, 8] {
+        let mut par = ParallelBackend::new(threads).with_grain(1);
+        let (pi, pg) = par.select_vertex(&prob, &st, &sample);
+        assert_eq!(ni, pi);
+        assert_eq!(ng.to_bits(), pg.to_bits());
+    }
+}
