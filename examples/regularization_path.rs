@@ -33,6 +33,7 @@ fn main() {
         opts: SolveOptions { eps: 1e-3, max_iters: 20_000, ..Default::default() },
         delta_max: None,
         track: vec![],
+        ..Default::default()
     };
 
     // paper §5.1 sampling: confidence-based κ (99%, empirical sparsity est.)

@@ -59,6 +59,7 @@ pub fn path_config() -> PathConfig {
         },
         delta_max: None,
         track: vec![],
+        ..Default::default()
     }
 }
 

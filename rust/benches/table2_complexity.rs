@@ -62,6 +62,7 @@ fn empirical() {
                 },
                 delta_max: Some(delta_max),
                 track: vec![],
+                ..Default::default()
             };
             let s = bench(0, 3, || run_path(&ds, kind, &cfg));
             let pr = run_path(&ds, kind, &cfg);

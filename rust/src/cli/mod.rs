@@ -196,6 +196,12 @@ pub fn parse_thread_count(s: &str) -> Result<usize, String> {
     Ok(if n == 0 { crate::parallel::available_threads() } else { n })
 }
 
+/// Parse a `--screen` value into a [`crate::screening::ScreenMode`].
+pub fn parse_screen_mode(s: &str) -> Result<crate::screening::ScreenMode, String> {
+    crate::screening::ScreenMode::parse(s)
+        .ok_or_else(|| format!("invalid screen mode '{s}' (off | gap | aggressive)"))
+}
+
 /// Outcome of `App::parse`.
 #[derive(Debug)]
 pub enum Parsed {
@@ -442,6 +448,18 @@ mod tests {
         assert!(parse_thread_count("0").unwrap() >= 1); // all cores
         assert!(parse_thread_count("abc").is_err());
         assert!(parse_thread_count("-1").is_err());
+    }
+
+    #[test]
+    fn screen_mode_parsing() {
+        use crate::screening::ScreenMode;
+        assert_eq!(parse_screen_mode("off").unwrap(), ScreenMode::Off);
+        assert_eq!(parse_screen_mode("gap").unwrap(), ScreenMode::Gap);
+        assert_eq!(
+            parse_screen_mode("aggressive").unwrap(),
+            ScreenMode::Aggressive
+        );
+        assert!(parse_screen_mode("strong").is_err());
     }
 
     #[test]

@@ -88,6 +88,10 @@ pub fn average_reps(mut runs: Vec<PathResult>) -> PathResult {
     let seconds = runs.iter().map(|r| r.seconds).sum::<f64>() / n;
     let iters = (runs.iter().map(|r| r.total_iters).sum::<u64>() as f64 / n) as u64;
     let dots = (runs.iter().map(|r| r.total_dots).sum::<u64>() as f64 / n) as u64;
+    let spasses = (runs.iter().map(|r| r.screen_passes).sum::<u64>() as f64 / n) as u64;
+    let sdots = (runs.iter().map(|r| r.screen_dots).sum::<u64>() as f64 / n) as u64;
+    let ssaved =
+        (runs.iter().map(|r| r.screen_saved_dots).sum::<u64>() as f64 / n) as u64;
     // average per-point active counts too (Table 5 reports path averages)
     let n_points = runs[0].points.len();
     let mut first = runs.remove(0);
@@ -101,6 +105,9 @@ pub fn average_reps(mut runs: Vec<PathResult>) -> PathResult {
     first.seconds = seconds;
     first.total_iters = iters;
     first.total_dots = dots;
+    first.screen_passes = spasses;
+    first.screen_dots = sdots;
+    first.screen_saved_dots = ssaved;
     first
 }
 
@@ -126,6 +133,7 @@ mod tests {
                 },
                 delta_max: None,
                 track: vec![],
+                ..Default::default()
             },
         )
     }

@@ -38,6 +38,23 @@ pub fn render_table(dataset: &str, results: &[&PathResult]) -> String {
         let _ = write!(s, "{:>14}", format!("{:.1}", r.avg_active()));
     }
     s.push('\n');
+    // gap-safe screening rows, only when some run actually screened
+    if results.iter().any(|r| r.screen_passes > 0) {
+        let _ = write!(s, "{:<16}", "Screened (avg)");
+        for r in results {
+            let _ = write!(
+                s,
+                "{:>14}",
+                format!("{:.1}%", 100.0 * r.avg_screened_frac())
+            );
+        }
+        s.push('\n');
+        let _ = write!(s, "{:<16}", "Dots saved");
+        for r in results {
+            let _ = write!(s, "{:>14}", format!("{:.2e}", r.screen_saved_dots as f64));
+        }
+        s.push('\n');
+    }
     s
 }
 
@@ -57,9 +74,11 @@ pub fn render_speedup_row(baseline_seconds: f64, results: &[&PathResult]) -> Str
 }
 
 /// CSV of per-point series: one row per grid point.
-/// Columns: reg, l1_norm, active, train_mse, test_mse, iters, dots[, tracked...]
+/// Columns: reg, l1_norm, active, train_mse, test_mse, iters, dots,
+/// screened_frac[, tracked...]
 pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
-    let mut s = String::from("reg,l1_norm,active,train_mse,test_mse,iters,dots");
+    let mut s =
+        String::from("reg,l1_norm,active,train_mse,test_mse,iters,dots,screened_frac");
     for name in tracked_names {
         let _ = write!(s, ",{name}");
     }
@@ -67,14 +86,15 @@ pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
     for pt in &r.points {
         let _ = write!(
             s,
-            "{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{}",
             pt.reg,
             pt.l1_norm,
             pt.active,
             pt.train_mse,
             pt.test_mse.map(|v| v.to_string()).unwrap_or_default(),
             pt.iters,
-            pt.dots
+            pt.dots,
+            pt.screened_frac
         );
         for c in &pt.tracked_coefs {
             let _ = write!(s, ",{c}");
@@ -98,6 +118,10 @@ pub fn summary_json(results: &[&PathResult]) -> Json {
                     ("dot_products", Json::Num(r.total_dots as f64)),
                     ("avg_active", Json::Num(r.avg_active())),
                     ("n_points", Json::Num(r.points.len() as f64)),
+                    ("screen_passes", Json::Num(r.screen_passes as f64)),
+                    ("screen_dots", Json::Num(r.screen_dots as f64)),
+                    ("screen_saved_dots", Json::Num(r.screen_saved_dots as f64)),
+                    ("avg_screened_frac", Json::Num(r.avg_screened_frac())),
                 ])
             })
             .collect(),
@@ -165,12 +189,16 @@ mod tests {
                     iters: 10,
                     dots: 100,
                     converged: true,
+                    screened_frac: 0.0,
                     tracked_coefs: vec![0.1 * k as f64],
                 })
                 .collect(),
             seconds: secs,
             total_iters: 50,
             total_dots: 500,
+            screen_passes: 0,
+            screen_dots: 0,
+            screen_saved_dots: 0,
         }
     }
 
@@ -195,7 +223,24 @@ mod tests {
         let lines: Vec<&str> = csv.lines().collect();
         assert_eq!(lines.len(), 6);
         assert!(lines[0].ends_with("coef0"));
-        assert_eq!(lines[1].split(',').count(), 8);
+        assert!(lines[0].contains("screened_frac"));
+        assert_eq!(lines[1].split(',').count(), 9);
+    }
+
+    #[test]
+    fn screening_rows_only_when_screened() {
+        let plain = fake_result("CD", 1.0);
+        assert!(!render_table("ds", &[&plain]).contains("Screened"));
+        let mut screened = fake_result("FW 1%", 1.0);
+        screened.screen_passes = 3;
+        screened.screen_saved_dots = 1234;
+        for pt in screened.points.iter_mut() {
+            pt.screened_frac = 0.5;
+        }
+        let t = render_table("ds", &[&screened]);
+        assert!(t.contains("Screened (avg)"));
+        assert!(t.contains("50.0%"));
+        assert!(t.contains("Dots saved"));
     }
 
     #[test]

@@ -24,16 +24,34 @@
 //! by `path::run_path_parallel`, `coordinator::jobs`, and the `--threads`
 //! CLI flag.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! Dimension reduction lives in [`screening`]: gap-safe (provably safe)
+//! feature elimination driven by the FW duality gap, with a persistent
+//! surviving-column set that the path runner re-arms at every grid point.
+//! All six solver kinds accept an optional [`screening::Screener`] and the
+//! CLI exposes it as `--screen {off,gap,aggressive}`.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index, and
+//! `docs/adr/ADR-001-gap-safe-screening.md` for why gap-safe spheres were
+//! chosen over strong-rule-style heuristics.
+#![warn(missing_docs)]
 
+#[allow(missing_docs)]
 pub mod bench;
+#[allow(missing_docs)]
 pub mod cli;
+#[allow(missing_docs)]
 pub mod coordinator;
+#[allow(missing_docs)]
 pub mod data;
+#[allow(missing_docs)]
 pub mod linalg;
 pub mod parallel;
 pub mod path;
+#[allow(missing_docs)]
 pub mod runtime;
+pub mod screening;
 pub mod solvers;
+#[allow(missing_docs)]
 pub mod testing;
+#[allow(missing_docs)]
 pub mod util;

@@ -94,6 +94,11 @@ const DEFAULT_GRAIN: usize = 2048;
 /// cross-shard reduction again keeps the first maximum — so the winner is
 /// the first occurrence of the global maximum in sample order, exactly the
 /// serial scan's choice. Enforced by `rust/tests/prop_parallel.rs`.
+///
+/// The contract is over *whatever sample it is handed*: when gap-safe
+/// screening ([`crate::screening`]) excises columns upstream, the sample
+/// contains only surviving indices and the shard-reduce stays bit-identical
+/// over that surviving set for any thread count (tested below).
 pub struct ParallelBackend {
     threads: usize,
     grain: usize,
@@ -121,6 +126,7 @@ impl ParallelBackend {
         self
     }
 
+    /// Worker-thread count this backend shards over.
     pub fn threads(&self) -> usize {
         self.threads
     }
@@ -271,5 +277,31 @@ mod tests {
     #[test]
     fn available_threads_positive() {
         assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn bit_identical_over_screened_sample() {
+        // A screened sample (strided survivor subset) must reduce to the
+        // same vertex as the serial reference for every thread count.
+        use crate::linalg::{ColumnCache, DenseMatrix, Design};
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let (m, p) = (17, 400);
+        let x = Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()));
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let state = FwState::zero(p, m);
+        // "surviving" columns: every third index, as screening would hand us
+        let sample: Vec<usize> = (0..p).step_by(3).collect();
+
+        let mut native = NativeBackend::new();
+        let (ri, rg) = native.select_vertex(&prob, &state, &sample);
+        for threads in [1usize, 2, 4, 8] {
+            let mut par = ParallelBackend::new(threads).with_grain(8);
+            let (i, g) = par.select_vertex(&prob, &state, &sample);
+            assert_eq!(i, ri, "threads={threads}");
+            assert_eq!(g.to_bits(), rg.to_bits(), "threads={threads}");
+        }
     }
 }

@@ -30,14 +30,17 @@ impl LogGrid {
         Self { values: g.values }
     }
 
+    /// The grid values, in sweep order.
     pub fn values(&self) -> &[f64] {
         &self.values
     }
 
+    /// Number of grid points.
     pub fn len(&self) -> usize {
         self.values.len()
     }
 
+    /// Whether the grid is empty (never true for constructed grids).
     pub fn is_empty(&self) -> bool {
         self.values.is_empty()
     }

@@ -24,6 +24,9 @@ pub struct PathPoint {
     pub dots: u64,
     /// solver converged (vs. iteration cap)
     pub converged: bool,
+    /// fraction of columns gap-safe screening had eliminated when this
+    /// point finished (0.0 when screening is off)
+    pub screened_frac: f64,
     /// coefficients of selected features, if the caller asked to track
     /// specific indices (Figs 1–2)
     pub tracked_coefs: Vec<f64>,
@@ -32,16 +35,25 @@ pub struct PathPoint {
 /// Aggregate over a full regularization path.
 #[derive(Clone, Debug)]
 pub struct PathResult {
+    /// solver label (see `SolverKind::label`)
     pub solver: String,
+    /// dataset name
     pub dataset: String,
+    /// per-grid-point metrics, in sweep order
     pub points: Vec<PathPoint>,
     /// total solver wall-clock (setup like σ-precompute included)
     pub seconds: f64,
     /// total iterations over the path
     pub total_iters: u64,
     /// total dot products (including the p-dot σ/‖z‖ precompute, counted
-    /// once — paper convention)
+    /// once, and any gap-safe screening passes — paper convention)
     pub total_dots: u64,
+    /// gap-safe sphere-test passes executed over the path (0 = off)
+    pub screen_passes: u64,
+    /// dot products spent by screening passes (subset of `total_dots`)
+    pub screen_dots: u64,
+    /// dot products the solvers avoided thanks to screened-out columns
+    pub screen_saved_dots: u64,
 }
 
 impl PathResult {
@@ -51,6 +63,16 @@ impl PathResult {
             return 0.0;
         }
         self.points.iter().map(|p| p.active as f64).sum::<f64>() / self.points.len() as f64
+    }
+
+    /// Average screened-out column fraction along the path (0.0 when
+    /// screening was off).
+    pub fn avg_screened_frac(&self) -> f64 {
+        if self.points.is_empty() {
+            return 0.0;
+        }
+        self.points.iter().map(|p| p.screened_frac).sum::<f64>()
+            / self.points.len() as f64
     }
 
     /// Paper-style summary row: time, iters, dots, active.
@@ -100,6 +122,7 @@ pub fn evaluate_point(
         iters,
         dots,
         converged,
+        screened_frac: 0.0,
         tracked_coefs: tracked.iter().map(|&j| alpha[j]).collect(),
     }
 }
@@ -169,8 +192,12 @@ mod tests {
             seconds: 0.5,
             total_iters: 8,
             total_dots: 40,
+            screen_passes: 0,
+            screen_dots: 0,
+            screen_saved_dots: 0,
         };
         assert_eq!(pr.avg_active(), 0.0);
+        assert_eq!(pr.avg_screened_frac(), 0.0);
         assert!(pr.summary_row().contains("test"));
     }
 

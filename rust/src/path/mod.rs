@@ -1,5 +1,6 @@
 //! Regularization-path layer: grids, per-point metrics, and the warm-start
-//! path runner (paper §5 conventions).
+//! path runner (paper §5 conventions), with optional gap-safe screening
+//! ([`crate::screening`]) re-armed at every grid point.
 
 pub mod grid;
 pub mod metrics;

@@ -24,6 +24,7 @@ use super::grid::{delta_grid, lambda_grid, LogGrid};
 use super::metrics::{evaluate_point, PathPoint, PathResult};
 use crate::data::Dataset;
 use crate::linalg::ColumnCache;
+use crate::screening::{ScreenMode, ScreenStats, Screener};
 use crate::solvers::apg::Apg;
 use crate::solvers::cd::{lambda_max, CoordinateDescent};
 use crate::solvers::fista::Fista;
@@ -32,7 +33,7 @@ use crate::solvers::linesearch::FwState;
 use crate::solvers::sampling::SamplingStrategy;
 use crate::solvers::scd::StochasticCd;
 use crate::solvers::sfw::StochasticFw;
-use crate::solvers::{Problem, SolveOptions};
+use crate::solvers::{Problem, RunResult, SolveOptions};
 use crate::util::timer::Stopwatch;
 
 /// Which solver drives the path.
@@ -53,6 +54,7 @@ pub enum SolverKind {
 }
 
 impl SolverKind {
+    /// Human-readable label (report column headers).
     pub fn label(&self) -> String {
         match self {
             SolverKind::Cd => "CD".to_string(),
@@ -64,6 +66,8 @@ impl SolverKind {
         }
     }
 
+    /// Whether this kind sweeps the constrained (δ) form rather than the
+    /// penalized (λ) form.
     pub fn is_constrained(&self) -> bool {
         matches!(
             self,
@@ -84,6 +88,11 @@ pub struct PathConfig {
     pub delta_max: Option<f64>,
     /// coefficient indices to record at each point (Figs 1–2)
     pub track: Vec<usize>,
+    /// gap-safe screening policy (CLI `--screen`; default off). The
+    /// screener is re-armed at every grid point — a regularization change
+    /// invalidates the safety certificate — and its surviving set persists
+    /// across the warm-started points of a segment otherwise.
+    pub screen: ScreenMode,
 }
 
 impl Default for PathConfig {
@@ -93,6 +102,7 @@ impl Default for PathConfig {
             opts: SolveOptions::default(),
             delta_max: None,
             track: Vec::new(),
+            screen: ScreenMode::Off,
         }
     }
 }
@@ -134,6 +144,8 @@ struct Segment {
     dots: u64,
     /// solver wall-clock (metric evaluation excluded, setup included)
     seconds: f64,
+    /// cumulative gap-safe screening counters (zero when off)
+    screen: ScreenStats,
 }
 
 /// Plan the full grid for `(ds, kind, cfg)`. Grid planning (the paper's
@@ -165,6 +177,33 @@ fn plan_grid(
     }
 }
 
+/// Record one finished grid point: pause the solver clock, evaluate the
+/// metrics (entry-pass screening dots folded into the point's dot count),
+/// attach the current screened fraction, and resume the clock. Shared by
+/// every solver arm of [`run_segment`].
+#[allow(clippy::too_many_arguments)]
+fn push_point(
+    points: &mut Vec<PathPoint>,
+    ds: &Dataset,
+    sw: &mut Stopwatch,
+    alpha: &[f64],
+    reg: f64,
+    res: &RunResult,
+    entry: u64,
+    screener: &Option<Screener>,
+    track: &[usize],
+) {
+    sw.stop();
+    let mut pt = evaluate_point(
+        ds, alpha, reg, res.iters, res.dots + entry, res.converged, track,
+    );
+    if let Some(s) = screener {
+        pt.screened_frac = s.screened_fraction();
+    }
+    points.push(pt);
+    sw.start();
+}
+
 /// Run one contiguous block of grid values with warm starts inside the
 /// block. `grid` must carry λ values for penalized kinds and δ values for
 /// constrained kinds (as produced by [`plan_grid`]). `lipschitz` is an
@@ -186,6 +225,9 @@ fn run_segment(
     let mut iters = 0u64;
     let mut dots = 0u64;
     let mut points: Vec<PathPoint> = Vec::with_capacity(grid.len());
+    // One screener per segment: buffers persist across the warm-started
+    // grid points; `reset_full` re-arms the certificate at each point.
+    let mut screener: Option<Screener> = cfg.screen.screener(p);
 
     match kind {
         SolverKind::ApgConst => {
@@ -199,14 +241,19 @@ fn run_segment(
             let mut apg = Apg::new(cfg.opts, l);
             let mut alpha = vec![0.0; p];
             for &delta in grid {
-                let res = apg.run(&prob, &mut alpha, delta);
+                let mut entry = 0u64;
+                if let Some(s) = screener.as_mut() {
+                    // δ is ascending, so the warm start is feasible here
+                    s.reset_full();
+                    entry = s.screen_with_alpha(&prob, &alpha, delta);
+                }
+                let res = apg.run_with_screen(&prob, &mut alpha, delta, screener.as_mut());
                 iters += res.iters;
-                dots += res.dots;
-                sw.stop();
-                points.push(evaluate_point(
-                    ds, &alpha, delta, res.iters, res.dots, res.converged, &cfg.track,
-                ));
-                sw.start();
+                dots += res.dots + entry;
+                push_point(
+                    &mut points, ds, &mut sw, &alpha, delta, &res, entry, &screener,
+                    &cfg.track,
+                );
             }
         }
         SolverKind::FwDet | SolverKind::Sfw(_) => {
@@ -221,18 +268,24 @@ fn run_segment(
                 // §5 warm-start heuristic: scale the previous solution
                 // onto the new boundary
                 state.rescale_to_radius(delta);
+                let mut entry = 0u64;
+                if let Some(s) = screener.as_mut() {
+                    s.reset_full();
+                    entry = s.screen_with_state(&prob, &state, delta);
+                }
                 let res = match sfw.as_mut() {
-                    Some(s) => s.run(&prob, &mut state, delta),
-                    None => fw.run(&prob, &mut state, delta),
+                    Some(s) => s.run_with_screen(&prob, &mut state, delta, screener.as_mut()),
+                    None => fw.run_with_screen(&prob, &mut state, delta, screener.as_mut()),
                 };
                 iters += res.iters;
-                dots += res.dots;
+                dots += res.dots + entry;
                 sw.stop();
                 state.write_alpha(&mut alpha_buf);
-                points.push(evaluate_point(
-                    ds, &alpha_buf, delta, res.iters, res.dots, res.converged, &cfg.track,
-                ));
                 sw.start();
+                push_point(
+                    &mut points, ds, &mut sw, &alpha_buf, delta, &res, entry, &screener,
+                    &cfg.track,
+                );
             }
         }
         SolverKind::Cd => {
@@ -240,14 +293,18 @@ fn run_segment(
             let mut alpha = vec![0.0; p];
             cd.reset_residual(&prob, &alpha);
             for &lam in grid {
-                let res = cd.run(&prob, &mut alpha, lam);
+                let mut entry = 0u64;
+                if let Some(s) = screener.as_mut() {
+                    s.reset_full();
+                    entry = s.screen_penalized(&prob, &alpha, cd.residual(), lam);
+                }
+                let res = cd.run_with_screen(&prob, &mut alpha, lam, screener.as_mut());
                 iters += res.iters;
-                dots += res.dots;
-                sw.stop();
-                points.push(evaluate_point(
-                    ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
-                ));
-                sw.start();
+                dots += res.dots + entry;
+                push_point(
+                    &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
+                    &cfg.track,
+                );
             }
         }
         SolverKind::Scd => {
@@ -255,14 +312,18 @@ fn run_segment(
             let mut alpha = vec![0.0; p];
             scd.reset_residual(&prob, &alpha);
             for &lam in grid {
-                let res = scd.run(&prob, &mut alpha, lam);
+                let mut entry = 0u64;
+                if let Some(s) = screener.as_mut() {
+                    s.reset_full();
+                    entry = s.screen_penalized(&prob, &alpha, scd.residual(), lam);
+                }
+                let res = scd.run_with_screen(&prob, &mut alpha, lam, screener.as_mut());
                 iters += res.iters;
-                dots += res.dots;
-                sw.stop();
-                points.push(evaluate_point(
-                    ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
-                ));
-                sw.start();
+                dots += res.dots + entry;
+                push_point(
+                    &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
+                    &cfg.track,
+                );
             }
         }
         SolverKind::FistaReg => {
@@ -275,21 +336,34 @@ fn run_segment(
             };
             let mut fista = Fista::new(cfg.opts, l);
             let mut alpha = vec![0.0; p];
+            let mut rbuf = vec![0.0; prob.m()];
             for &lam in grid {
-                let res = fista.run(&prob, &mut alpha, lam);
+                let mut entry = 0u64;
+                if let Some(s) = screener.as_mut() {
+                    // FISTA keeps no residual between runs: rebuild y − Xα
+                    s.reset_full();
+                    prob.x.matvec(&alpha, &mut rbuf);
+                    for (r, yv) in rbuf.iter_mut().zip(prob.y.iter()) {
+                        *r = yv - *r;
+                    }
+                    let rebuild = crate::linalg::ops::nnz(&alpha) as u64;
+                    entry = s.screen_penalized(&prob, &alpha, &rbuf, lam) + rebuild;
+                    s.charge_screen_dots(rebuild);
+                }
+                let res = fista.run_with_screen(&prob, &mut alpha, lam, screener.as_mut());
                 iters += res.iters;
-                dots += res.dots;
-                sw.stop();
-                points.push(evaluate_point(
-                    ds, &alpha, lam, res.iters, res.dots, res.converged, &cfg.track,
-                ));
-                sw.start();
+                dots += res.dots + entry;
+                push_point(
+                    &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
+                    &cfg.track,
+                );
             }
         }
     }
 
     sw.stop();
-    Segment { points, iters, dots, seconds: sw.elapsed_secs() }
+    let screen = screener.map(|s| s.stats()).unwrap_or_default();
+    Segment { points, iters, dots, seconds: sw.elapsed_secs(), screen }
 }
 
 /// Run one full regularization path. See module docs for conventions.
@@ -308,6 +382,9 @@ pub fn run_path(ds: &Dataset, kind: SolverKind, cfg: &PathConfig) -> PathResult 
         seconds: sw.elapsed_secs() + seg.seconds,
         total_iters: seg.iters,
         total_dots: seg.dots + p,
+        screen_passes: seg.screen.passes,
+        screen_dots: seg.screen.screen_dots,
+        screen_saved_dots: seg.screen.saved_dots,
     }
 }
 
@@ -361,11 +438,13 @@ pub fn run_path_parallel(
     let mut points: Vec<PathPoint> = Vec::with_capacity(values.len());
     let mut total_iters = 0u64;
     let mut critical_path = 0.0f64;
+    let mut screen = ScreenStats::default();
     for seg in segs {
         points.extend(seg.points);
         total_iters += seg.iters;
         total_dots += seg.dots;
         critical_path = critical_path.max(seg.seconds);
+        screen.add(seg.screen);
     }
     PathResult {
         solver: kind.label(),
@@ -374,6 +453,9 @@ pub fn run_path_parallel(
         seconds: sw.elapsed_secs() + critical_path,
         total_iters,
         total_dots,
+        screen_passes: screen.passes,
+        screen_dots: screen.screen_dots,
+        screen_saved_dots: screen.saved_dots,
     }
 }
 
@@ -394,8 +476,7 @@ mod tests {
                 max_iters: 3_000,
                 ..Default::default()
             },
-            delta_max: None,
-            track: vec![],
+            ..Default::default()
         }
     }
 
@@ -533,6 +614,35 @@ mod tests {
             assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits());
         }
         assert_eq!(seq.total_dots, par.total_dots);
+    }
+
+    #[test]
+    fn screened_cd_path_matches_unscreened() {
+        let ds = small_ds();
+        let mut cfg = fast_cfg(8);
+        cfg.opts.eps = 1e-6;
+        let base = run_path(&ds, SolverKind::Cd, &cfg);
+        let mut scfg = cfg.clone();
+        scfg.screen = crate::screening::ScreenMode::Gap;
+        let scr = run_path(&ds, SolverKind::Cd, &scfg);
+        assert_eq!(base.points.len(), scr.points.len());
+        for (a, b) in base.points.iter().zip(scr.points.iter()) {
+            assert_eq!(a.reg, b.reg);
+            assert!(
+                (a.train_mse - b.train_mse).abs() <= 1e-6 * (1.0 + a.train_mse),
+                "λ={}: {} vs {}",
+                a.reg,
+                a.train_mse,
+                b.train_mse
+            );
+        }
+        // counters are wired through
+        assert!(scr.screen_passes > 0);
+        assert!(scr.screen_dots > 0);
+        assert_eq!(base.screen_passes, 0);
+        for pt in &scr.points {
+            assert!((0.0..=1.0).contains(&pt.screened_frac));
+        }
     }
 
     #[test]

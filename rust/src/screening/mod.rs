@@ -1,0 +1,600 @@
+//! Gap-safe feature screening + persistent active-set (DESIGN.md §8).
+//!
+//! Safe screening shrinks the *effective* dimension of a Lasso problem by
+//! certifying, from any feasible iterate, that certain columns carry a zero
+//! coefficient in **every** optimal solution. Those columns can then be
+//! excised from the hot loops — the κ-sample vertex search of stochastic FW
+//! (`solvers::sfw`), the full sweep of deterministic FW (`solvers::fw`),
+//! the CD/SCD coordinate cycles, and the restricted gradients of
+//! FISTA/APG — without changing the optimum. The certificate is the
+//! **gap-safe sphere** (Fercoq, Gramfort & Salmon 2015; Ndiaye et al.
+//! 2017), driven here by the Frank-Wolfe duality gap the solvers already
+//! track.
+//!
+//! ## The two sphere tests
+//!
+//! **Constrained form** `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ` (FW/SFW/APG). With
+//! `q = Xα` and the unique optimal fit `q*`, strong convexity of the loss
+//! *in the fitted values* gives `‖q − q*‖ ≤ √(2·g(α))` where
+//! `g(α) = αᵀ∇f(α) + δ‖∇f(α)‖∞` is the FW duality gap. KKT at the optimum
+//! makes every nonzero coordinate attain `|∇ᵢf(α*)| = ‖∇f(α*)‖∞`, so with
+//! `r = √(2·g(α))`:
+//!
+//! ```text
+//! UBᵢ = |∇ᵢf(α)| + ‖zᵢ‖·r          (upper bound on |∇ᵢf(α*)|)
+//! LB  = maxⱼ (|∇ⱼf(α)| − ‖zⱼ‖·r)   (lower bound on ‖∇f(α*)‖∞)
+//! UBᵢ < LB  ⇒  α*ᵢ = 0 in every optimum  ⇒  column i is screened.
+//! ```
+//!
+//! **Penalized form** `min ½‖Xα−y‖² + λ‖α‖₁` (CD/SCD/FISTA). The classic
+//! gap-safe sphere: with residual `r = y − Xα`, the rescaled dual point
+//! `θ = r / max(λ, ‖Xᵀr‖∞)` and duality gap `G = P(α) − D(θ)`, the dual
+//! optimum lies within `√(2G)/λ` of `θ`, so
+//! `|zᵢᵀθ| + ‖zᵢ‖·√(2G)/λ < 1 ⇒ α*ᵢ = 0`.
+//!
+//! Both tests are *safe*: they only ever remove coordinates that are zero
+//! at every optimum, so screened and unscreened runs converge to the same
+//! solution (property-tested in `rust/tests/prop_screening.rs`, including
+//! exact hand-computable orthogonal designs).
+//!
+//! ## Restriction is self-consistent
+//!
+//! After a safe pass, the problem restricted to the surviving columns has
+//! the same optimum as the full problem. All later gaps, gradients and
+//! dual points may therefore be computed **over the surviving set only**
+//! (that is what makes dynamic screening cheap), and later passes remain
+//! safe by induction. Changing the regularization value invalidates the
+//! certificate, so [`Screener::reset_full`] re-activates every column at
+//! each grid point of a path; the warm-started iterate is near-optimal
+//! there, its gap is small, and the entry pass immediately re-prunes.
+//!
+//! ## Cost model and cadence
+//!
+//! One pass over `a` surviving columns costs exactly `a` dot products
+//! (paper accounting), charged to [`ScreenStats::screen_dots`] and included
+//! in the solver's reported totals. Savings (the dot products the excised
+//! columns would have cost) accrue in [`ScreenStats::saved_dots`].
+//! Stochastic solvers re-screen on a dot-product budget: after
+//! `factor × alive` solver dots since the last pass (`factor` = 8 for
+//! [`ScreenMode::Gap`], 2 for [`ScreenMode::Aggressive`], i.e. ≤ 12.5% /
+//! ≤ 50% overhead). Deterministic FW computes the full surviving gradient
+//! every iteration anyway, so there screening is *free* and runs every
+//! iteration in both modes.
+//!
+//! All per-column quantities (σᵢ = zᵢᵀy, ‖zᵢ‖²) are read **view-indexed**
+//! from the shared [`crate::linalg::ColumnCache`] through
+//! [`crate::solvers::Problem`] — the screener stores surviving *indices*,
+//! never copies of column data or caches.
+
+use crate::linalg::ops;
+use crate::solvers::linesearch::FwState;
+use crate::solvers::Problem;
+
+/// Screening policy for a solve or a path run (CLI: `--screen`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScreenMode {
+    /// No screening: every solver sees all p columns (the default).
+    Off,
+    /// Gap-safe screening on a conservative refresh cadence (a pass after
+    /// every `8 × alive` solver dot products; ≤ 12.5% overhead).
+    Gap,
+    /// Gap-safe screening on an eager cadence (a pass after every
+    /// `2 × alive` solver dots; ≤ 50% overhead, prunes earlier). The test
+    /// itself is identical to [`ScreenMode::Gap`] — still provably safe.
+    Aggressive,
+}
+
+impl ScreenMode {
+    /// Parse a CLI value: `off` | `gap` | `aggressive`.
+    pub fn parse(s: &str) -> Option<ScreenMode> {
+        match s.trim() {
+            "off" => Some(ScreenMode::Off),
+            "gap" => Some(ScreenMode::Gap),
+            "aggressive" => Some(ScreenMode::Aggressive),
+            _ => None,
+        }
+    }
+
+    /// Human-readable label (CLI/report rows).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScreenMode::Off => "off",
+            ScreenMode::Gap => "gap",
+            ScreenMode::Aggressive => "aggressive",
+        }
+    }
+
+    /// Whether this mode performs any screening.
+    pub fn is_on(&self) -> bool {
+        !matches!(self, ScreenMode::Off)
+    }
+
+    /// Refresh cadence: re-screen after `factor × alive` solver dots.
+    fn refresh_factor(&self) -> u64 {
+        match self {
+            ScreenMode::Off => u64::MAX,
+            ScreenMode::Gap => 8,
+            ScreenMode::Aggressive => 2,
+        }
+    }
+
+    /// Build a screener for a p-column problem, or `None` for
+    /// [`ScreenMode::Off`] (callers pass the option straight through to
+    /// the solvers' `run_with_screen`).
+    pub fn screener(&self, p: usize) -> Option<Screener> {
+        self.is_on().then(|| Screener::new(*self, p))
+    }
+}
+
+/// Cumulative screening counters for one solve or path segment
+/// (surfaced in `path::PathResult` and `coordinator::report`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ScreenStats {
+    /// sphere-test passes executed
+    pub passes: u64,
+    /// dot products spent *by* screening passes (already included in the
+    /// solver's reported dot totals — honest accounting)
+    pub screen_dots: u64,
+    /// dot products the excised columns would have cost the solver
+    pub saved_dots: u64,
+}
+
+impl ScreenStats {
+    /// Accumulate another segment's counters (parallel path reduce).
+    pub fn add(&mut self, other: ScreenStats) {
+        self.passes += other.passes;
+        self.screen_dots += other.screen_dots;
+        self.saved_dots += other.saved_dots;
+    }
+}
+
+/// Persistent screening state: the surviving (alive) column set, the
+/// sphere-test scratch, and the cost counters. One `Screener` lives for a
+/// whole path segment and is re-armed with [`Screener::reset_full`] at
+/// each grid point, so its buffers are allocated once per path.
+pub struct Screener {
+    mode: ScreenMode,
+    /// surviving column indices, ascending (the view the solvers iterate)
+    alive: Vec<usize>,
+    /// O(1) membership mirror of `alive`
+    is_alive: Vec<bool>,
+    /// view-indexed gradient/correlation scratch (global column index)
+    grad: Vec<f64>,
+    /// fitted-value scratch for the α-based constrained test
+    q: Vec<f64>,
+    /// solver dots since the last pass (drives [`Screener::due`])
+    dots_since: u64,
+    stats: ScreenStats,
+}
+
+impl Screener {
+    /// New screener over `p` columns, all alive.
+    pub fn new(mode: ScreenMode, p: usize) -> Self {
+        Self {
+            mode,
+            alive: (0..p).collect(),
+            is_alive: vec![true; p],
+            grad: vec![0.0; p],
+            q: Vec::new(),
+            dots_since: 0,
+            stats: ScreenStats::default(),
+        }
+    }
+
+    /// The policy this screener was built with.
+    pub fn mode(&self) -> ScreenMode {
+        self.mode
+    }
+
+    /// Ambient dimension p.
+    pub fn p(&self) -> usize {
+        self.is_alive.len()
+    }
+
+    /// Surviving column indices, ascending.
+    pub fn alive(&self) -> &[usize] {
+        &self.alive
+    }
+
+    /// Number of surviving columns (the effective dimension).
+    pub fn alive_len(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Whether column `j` is still alive.
+    pub fn is_alive(&self, j: usize) -> bool {
+        self.is_alive[j]
+    }
+
+    /// Fraction of columns screened out: `1 − alive/p`.
+    pub fn screened_fraction(&self) -> f64 {
+        let p = self.p();
+        if p == 0 {
+            return 0.0;
+        }
+        1.0 - self.alive.len() as f64 / p as f64
+    }
+
+    /// Snapshot of the cumulative counters.
+    pub fn stats(&self) -> ScreenStats {
+        self.stats
+    }
+
+    /// Re-activate every column. Must be called whenever the
+    /// regularization value changes (new grid point): the safety
+    /// certificate is specific to one (λ or δ) problem.
+    pub fn reset_full(&mut self) {
+        self.alive.clear();
+        self.alive.extend(0..self.is_alive.len());
+        self.is_alive.fill(true);
+        self.dots_since = 0;
+    }
+
+    /// Record one solver iteration: `spent` dot products drawn on the
+    /// surviving set and `saved` dot products avoided thanks to screening.
+    pub fn note_iteration(&mut self, spent: u64, saved: u64) {
+        self.dots_since += spent;
+        self.stats.saved_dots += saved;
+    }
+
+    /// Charge extra dot products to the screening-overhead counter —
+    /// work done solely to enable a pass (e.g. FISTA rebuilding `y − Xα`,
+    /// which CD/SCD get for free from their maintained residual).
+    pub fn charge_screen_dots(&mut self, dots: u64) {
+        self.stats.screen_dots += dots;
+    }
+
+    /// Whether the refresh budget since the last pass is exhausted
+    /// (`mode`-dependent; see module docs on cadence).
+    pub fn due(&self) -> bool {
+        self.dots_since
+            >= self
+                .mode
+                .refresh_factor()
+                .saturating_mul((self.alive.len() as u64).max(1))
+    }
+
+    /// Gap-safe pass for the **constrained** problem at radius `delta`,
+    /// reading the iterate from a Frank-Wolfe [`FwState`]. Costs (and
+    /// returns) exactly `alive` dot products; the caller adds them to its
+    /// own totals. Safe for any feasible `state` (`‖α‖₁ ≤ δ`).
+    pub fn screen_with_state(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        delta: f64,
+    ) -> u64 {
+        let mut gmax = 0.0f64;
+        for k in 0..self.alive.len() {
+            let j = self.alive[k];
+            let g = state.grad_coord(prob, j);
+            self.grad[j] = g;
+            gmax = gmax.max(g.abs());
+        }
+        let dots = self.alive.len() as u64;
+        // αᵀ∇ over the support (support ⊆ alive: solvers only ever
+        // activate surviving columns, and reset_full precedes warm starts)
+        let mut at_g = 0.0f64;
+        for &j in state.active() {
+            let aj = state.alpha_coord(j);
+            if aj != 0.0 {
+                at_g += aj * self.grad[j];
+            }
+        }
+        let gap = (at_g + delta * gmax).max(0.0);
+        self.retain_constrained(prob, gap, |j| state.alpha_coord(j) != 0.0);
+        self.stats.passes += 1;
+        self.stats.screen_dots += dots;
+        self.dots_since = 0;
+        dots
+    }
+
+    /// Constrained-form pass reusing a gradient the caller has **already
+    /// computed** over the surviving set (deterministic FW computes it
+    /// every iteration, making this pass free of dot products).
+    /// `grad[j]` must hold `∇ⱼf(α)` for every alive `j`.
+    pub fn screen_with_grad(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        delta: f64,
+        grad: &[f64],
+    ) {
+        let mut gmax = 0.0f64;
+        for &j in &self.alive {
+            self.grad[j] = grad[j];
+            gmax = gmax.max(grad[j].abs());
+        }
+        let mut at_g = 0.0f64;
+        for &j in state.active() {
+            let aj = state.alpha_coord(j);
+            if aj != 0.0 {
+                at_g += aj * grad[j];
+            }
+        }
+        let gap = (at_g + delta * gmax).max(0.0);
+        self.retain_constrained(prob, gap, |j| state.alpha_coord(j) != 0.0);
+        self.stats.passes += 1;
+        self.dots_since = 0;
+    }
+
+    /// Constrained-form pass from a plain coefficient vector (APG and the
+    /// path runner's grid-entry pass). Rebuilds `q = Xα` (‖α‖₀ axpy dot
+    /// products) then runs the sphere test (`alive` dots). Returns the
+    /// total dot products spent. `alpha` must be feasible (`‖α‖₁ ≤ δ`).
+    pub fn screen_with_alpha(
+        &mut self,
+        prob: &Problem<'_>,
+        alpha: &[f64],
+        delta: f64,
+    ) -> u64 {
+        self.q.resize(prob.m(), 0.0);
+        prob.x.matvec(alpha, &mut self.q);
+        let mut dots = ops::nnz(alpha) as u64;
+        let mut gmax = 0.0f64;
+        for k in 0..self.alive.len() {
+            let j = self.alive[k];
+            // ∇ⱼ = zⱼᵀ(Xα − y) = zⱼᵀq − σⱼ (view-indexed cache access)
+            let g = prob.x.col_dot(j, &self.q) - prob.cache.sigma[j];
+            self.grad[j] = g;
+            gmax = gmax.max(g.abs());
+        }
+        dots += self.alive.len() as u64;
+        let mut at_g = 0.0f64;
+        for &j in &self.alive {
+            if alpha[j] != 0.0 {
+                at_g += alpha[j] * self.grad[j];
+            }
+        }
+        let gap = (at_g + delta * gmax).max(0.0);
+        self.retain_constrained(prob, gap, |j| alpha[j] != 0.0);
+        self.stats.passes += 1;
+        self.stats.screen_dots += dots;
+        self.dots_since = 0;
+        dots
+    }
+
+    /// Gap-safe pass for the **penalized** problem at penalty `lambda`
+    /// (CD/SCD/FISTA). `resid` must be the up-to-date residual `y − Xα`
+    /// (CD and SCD maintain it; FISTA rebuilds it before calling). Costs
+    /// (and returns) exactly `alive` dot products.
+    pub fn screen_penalized(
+        &mut self,
+        prob: &Problem<'_>,
+        alpha: &[f64],
+        resid: &[f64],
+        lambda: f64,
+    ) -> u64 {
+        let mut cmax = 0.0f64;
+        for k in 0..self.alive.len() {
+            let j = self.alive[k];
+            let c = prob.x.col_dot(j, resid);
+            self.grad[j] = c;
+            cmax = cmax.max(c.abs());
+        }
+        let dots = self.alive.len() as u64;
+        let scale = lambda.max(cmax);
+        if scale <= 0.0 {
+            // degenerate (λ = 0 and a perfect fit): nothing to certify
+            self.stats.passes += 1;
+            self.stats.screen_dots += dots;
+            self.dots_since = 0;
+            return dots;
+        }
+        // primal P(α) = ½‖r‖² + λ‖α‖₁ (support ⊆ alive)
+        let rss = ops::nrm2_sq(resid);
+        let l1: f64 = self.alive.iter().map(|&j| alpha[j].abs()).sum();
+        let primal = 0.5 * rss + lambda * l1;
+        // dual at θ = r/scale: D(θ) = ½‖y‖² − ½‖y − λθ‖²
+        let t = lambda / scale;
+        let mut ymt = 0.0f64;
+        for (yi, ri) in prob.y.iter().zip(resid.iter()) {
+            let v = yi - t * ri;
+            ymt += v * v;
+        }
+        let dual = 0.5 * prob.cache.yty - 0.5 * ymt;
+        let gap = (primal - dual).max(0.0);
+        let radius = (2.0 * gap).sqrt() / lambda;
+
+        // eliminate j when |zⱼᵀθ| + ‖zⱼ‖·radius < 1 (support always kept)
+        let norm_sq = &prob.cache.norm_sq;
+        let grad = &self.grad;
+        let is_alive = &mut self.is_alive;
+        self.alive.retain(|&j| {
+            let keep = alpha[j] != 0.0
+                || grad[j].abs() / scale + norm_sq[j].sqrt() * radius >= 1.0;
+            if !keep {
+                is_alive[j] = false;
+            }
+            keep
+        });
+        self.stats.passes += 1;
+        self.stats.screen_dots += dots;
+        self.dots_since = 0;
+        dots
+    }
+
+    /// Shared constrained-form elimination: given the duality gap and the
+    /// gradient stored in `self.grad` (valid for every alive column), drop
+    /// every column whose optimal-gradient upper bound stays below the
+    /// sup-norm lower bound. `keep(j)` force-retains the support.
+    fn retain_constrained(
+        &mut self,
+        prob: &Problem<'_>,
+        gap: f64,
+        keep: impl Fn(usize) -> bool,
+    ) {
+        let radius = (2.0 * gap).sqrt();
+        let norm_sq = &prob.cache.norm_sq;
+        let mut lb = f64::NEG_INFINITY;
+        for &j in &self.alive {
+            lb = lb.max(self.grad[j].abs() - norm_sq[j].sqrt() * radius);
+        }
+        let grad = &self.grad;
+        let is_alive = &mut self.is_alive;
+        self.alive.retain(|&j| {
+            let keep_j =
+                keep(j) || grad[j].abs() + norm_sq[j].sqrt() * radius >= lb;
+            if !keep_j {
+                is_alive[j] = false;
+            }
+            keep_j
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ColumnCache, DenseMatrix, Design};
+
+    /// X = I₄, y = (10, 1, 0.1, 0): every quantity below is exact in
+    /// floating point, so the assertions are bit-deterministic.
+    fn identity_problem() -> (Design, Vec<f64>) {
+        let x = DenseMatrix::from_fn(4, 4, |i, j| f64::from(i == j));
+        let y = vec![10.0, 1.0, 0.1, 0.0];
+        (Design::dense(x), y)
+    }
+
+    #[test]
+    fn parse_and_labels() {
+        assert_eq!(ScreenMode::parse("off"), Some(ScreenMode::Off));
+        assert_eq!(ScreenMode::parse("gap"), Some(ScreenMode::Gap));
+        assert_eq!(ScreenMode::parse("aggressive"), Some(ScreenMode::Aggressive));
+        assert_eq!(ScreenMode::parse("nope"), None);
+        assert_eq!(ScreenMode::Gap.label(), "gap");
+        assert!(!ScreenMode::Off.is_on());
+        assert!(ScreenMode::Off.screener(10).is_none());
+        assert!(ScreenMode::Gap.screener(10).is_some());
+    }
+
+    #[test]
+    fn constrained_sphere_exact_on_orthogonal_design() {
+        // δ = 5 < ‖y‖₁: the optimum is α* = (5, 0, 0, 0) and one FW full
+        // step from zero lands on it exactly, with duality gap exactly 0.
+        let (x, y) = identity_problem();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 5.0;
+        let mut st = FwState::zero(4, 4);
+        let g0 = st.grad_coord(&prob, 0); // −σ₀ = −10
+        assert_eq!(g0, -10.0);
+        let info = st.step(&prob, delta, 0, g0);
+        assert_eq!(info.lambda, 1.0); // full step onto the vertex
+
+        let mut scr = Screener::new(ScreenMode::Gap, 4);
+        let dots = scr.screen_with_state(&prob, &st, delta);
+        assert_eq!(dots, 4);
+        // gap = αᵀ∇ + δ‖∇‖∞ = 5·(−5) + 5·5 = 0 ⇒ radius 0 ⇒ only the
+        // support (and the sup-norm attainer, here the same column) lives.
+        assert_eq!(scr.alive(), &[0]);
+        assert!(!scr.is_alive(1) && !scr.is_alive(2) && !scr.is_alive(3));
+        assert!((scr.screened_fraction() - 0.75).abs() < 1e-15);
+        assert_eq!(scr.stats().passes, 1);
+        assert_eq!(scr.stats().screen_dots, 4);
+    }
+
+    #[test]
+    fn penalized_sphere_exact_on_orthogonal_design() {
+        // λ = 2: α* = soft(y, 2) = (8, 0, 0, 0), residual (2, 1, 0.1, 0),
+        // duality gap 0 up to one ulp ⇒ radius ≈ 0 and the test reduces to
+        // |zⱼᵀθ| ≥ 1, which only the support satisfies.
+        let (x, y) = identity_problem();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let alpha = vec![8.0, 0.0, 0.0, 0.0];
+        let resid = vec![2.0, 1.0, 0.1, 0.0];
+        let mut scr = Screener::new(ScreenMode::Aggressive, 4);
+        let dots = scr.screen_penalized(&prob, &alpha, &resid, 2.0);
+        assert_eq!(dots, 4);
+        assert_eq!(scr.alive(), &[0]);
+    }
+
+    #[test]
+    fn zero_iterate_large_gap_screens_nothing() {
+        // At α = 0 the gap is δ‖σ‖∞ — a huge radius, so every column's
+        // upper bound clears the lower bound and nothing is eliminated.
+        let (x, y) = identity_problem();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let st = FwState::zero(4, 4);
+        let mut scr = Screener::new(ScreenMode::Gap, 4);
+        scr.screen_with_state(&prob, &st, 5.0);
+        assert_eq!(scr.alive_len(), 4);
+        assert_eq!(scr.screened_fraction(), 0.0);
+    }
+
+    #[test]
+    fn alpha_variant_matches_state_variant() {
+        let (x, y) = identity_problem();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 5.0;
+        let mut st = FwState::zero(4, 4);
+        let g0 = st.grad_coord(&prob, 0);
+        st.step(&prob, delta, 0, g0);
+
+        let mut a = Screener::new(ScreenMode::Gap, 4);
+        a.screen_with_state(&prob, &st, delta);
+        let mut b = Screener::new(ScreenMode::Gap, 4);
+        b.screen_with_alpha(&prob, &st.alpha(), delta);
+        assert_eq!(a.alive(), b.alive());
+    }
+
+    #[test]
+    fn reset_full_reactivates_everything() {
+        let (x, y) = identity_problem();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::zero(4, 4);
+        let g0 = st.grad_coord(&prob, 0);
+        st.step(&prob, 5.0, 0, g0);
+        let mut scr = Screener::new(ScreenMode::Gap, 4);
+        scr.screen_with_state(&prob, &st, 5.0);
+        assert_eq!(scr.alive_len(), 1);
+        scr.reset_full();
+        assert_eq!(scr.alive(), &[0, 1, 2, 3]);
+        assert!(scr.is_alive(3));
+    }
+
+    #[test]
+    fn refresh_cadence_tracks_dot_budget() {
+        let mut scr = Screener::new(ScreenMode::Aggressive, 10);
+        assert!(!scr.due());
+        scr.note_iteration(19, 0); // budget = 2 × 10 = 20
+        assert!(!scr.due());
+        scr.note_iteration(1, 5);
+        assert!(scr.due());
+        assert_eq!(scr.stats().saved_dots, 5);
+        // a pass clears the budget
+        let (x, y) = identity_problem();
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let st = FwState::zero(4, 4);
+        let mut scr = Screener::new(ScreenMode::Aggressive, 4);
+        scr.note_iteration(1000, 0);
+        assert!(scr.due());
+        scr.screen_with_state(&prob, &st, 5.0);
+        assert!(!scr.due());
+    }
+
+    #[test]
+    fn gap_cadence_is_lazier_than_aggressive() {
+        let mut gap = Screener::new(ScreenMode::Gap, 10);
+        let mut agg = Screener::new(ScreenMode::Aggressive, 10);
+        gap.note_iteration(25, 0);
+        agg.note_iteration(25, 0);
+        assert!(!gap.due()); // 25 < 8 × 10
+        assert!(agg.due()); // 25 ≥ 2 × 10
+    }
+
+    #[test]
+    fn stats_add_accumulates() {
+        let mut a = ScreenStats { passes: 1, screen_dots: 10, saved_dots: 5 };
+        let b = ScreenStats { passes: 2, screen_dots: 20, saved_dots: 7 };
+        a.add(b);
+        assert_eq!(a.passes, 3);
+        assert_eq!(a.screen_dots, 30);
+        assert_eq!(a.saved_dots, 12);
+    }
+}

@@ -9,9 +9,11 @@
 use super::proj::project_l1;
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops;
+use crate::screening::Screener;
 
 /// Accelerated projected-gradient solver.
 pub struct Apg {
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     /// Lipschitz constant ‖X‖₂²
     pub lipschitz: f64,
@@ -22,6 +24,7 @@ pub struct Apg {
 }
 
 impl Apg {
+    /// Solver with a precomputed Lipschitz constant ‖X‖₂².
     pub fn new(opts: SolveOptions, lipschitz: f64) -> Self {
         Self {
             opts,
@@ -35,6 +38,22 @@ impl Apg {
 
     /// Solve `min ½‖Xα − y‖² s.t. ‖α‖₁ ≤ δ`, warm-starting from `alpha`.
     pub fn run(&mut self, prob: &Problem<'_>, alpha: &mut [f64], delta: f64) -> RunResult {
+        self.run_with_screen(prob, alpha, delta, None)
+    }
+
+    /// [`Self::run`] with optional gap-safe screening: the gradient is
+    /// computed per surviving column (`alive` dots instead of the p-dot
+    /// `tr_matvec`) — screened columns keep ∇ⱼ = 0 and stay exactly zero
+    /// through step and projection — and the constrained sphere test
+    /// re-runs on its dot-product cadence (cost included in
+    /// [`RunResult::dots`]).
+    pub fn run_with_screen(
+        &mut self,
+        prob: &Problem<'_>,
+        alpha: &mut [f64],
+        delta: f64,
+        mut screen: Option<&mut Screener>,
+    ) -> RunResult {
         let (m, p) = (prob.m(), prob.p());
         let l = self.lipschitz.max(1e-12);
         // make the warm start feasible
@@ -53,14 +72,27 @@ impl Apg {
 
         while (iters as usize) < self.opts.max_iters {
             iters += 1;
+            let dots_at_start = dots;
             // ∇f(w) = Xᵀ(Xw − y)
             prob.x.matvec(&self.w, &mut self.q);
             dots += ops::nnz(&self.w) as u64;
             for (qi, yi) in self.q.iter_mut().zip(prob.y.iter()) {
                 *qi -= yi;
             }
-            prob.x.tr_matvec(&self.q, &mut self.grad);
-            dots += p as u64;
+            match &screen {
+                None => {
+                    prob.x.tr_matvec(&self.q, &mut self.grad);
+                    dots += p as u64;
+                }
+                Some(s) => {
+                    self.grad.fill(0.0);
+                    for k in 0..s.alive_len() {
+                        let j = s.alive()[k];
+                        self.grad[j] = prob.x.col_dot(j, &self.q);
+                    }
+                    dots += s.alive_len() as u64;
+                }
+            }
 
             // projected step from w
             for j in 0..p {
@@ -82,6 +114,23 @@ impl Apg {
             }
             t = t_next;
             self.alpha_prev.copy_from_slice(alpha);
+
+            // gap-safe refresh on the dot budget (α is feasible here)
+            if let Some(s) = screen.as_deref_mut() {
+                s.note_iteration(dots - dots_at_start, (p - s.alive_len()) as u64);
+                if s.due() {
+                    dots += s.screen_with_alpha(prob, alpha, delta);
+                    // kill the momentum of newly eliminated columns: w[j]
+                    // can still be nonzero from the pre-elimination step,
+                    // and with ∇ⱼ pinned to 0 it would resurrect αⱼ and
+                    // break the support ⊆ alive invariant
+                    for j in 0..p {
+                        if !s.is_alive(j) {
+                            self.w[j] = 0.0;
+                        }
+                    }
+                }
+            }
 
             // scale-free criterion (see linesearch::StepInfo::small)
             let alpha_inf = ops::nrm_inf(alpha);

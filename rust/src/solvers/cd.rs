@@ -15,17 +15,26 @@
 
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops::soft_threshold;
+use crate::screening::Screener;
 
 /// Cyclic CD solver. Holds scratch (residual buffer) across path points.
 pub struct CoordinateDescent {
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     /// residual R = y − Xα, kept in sync with the caller's α between runs
     resid: Vec<f64>,
 }
 
 impl CoordinateDescent {
+    /// Fresh solver (residual initialized by [`Self::reset_residual`]).
     pub fn new(opts: SolveOptions) -> Self {
         Self { opts, resid: Vec::new() }
+    }
+
+    /// The maintained residual `R = y − Xα` (valid after a run or a
+    /// [`Self::reset_residual`] — used by the gap-safe screening pass).
+    pub fn residual(&self) -> &[f64] {
+        &self.resid
     }
 
     /// Initialize the residual for a fresh/warm α. Costs ‖α‖₀ axpys.
@@ -64,6 +73,22 @@ impl CoordinateDescent {
     /// equates one CD "iteration" with a cycle through the features);
     /// `dots` counts coordinate visits.
     pub fn run(&mut self, prob: &Problem<'_>, alpha: &mut [f64], lambda: f64) -> RunResult {
+        self.run_with_screen(prob, alpha, lambda, None)
+    }
+
+    /// [`Self::run`] with optional gap-safe screening: full sweeps visit
+    /// only the surviving columns, and the penalized sphere test re-runs
+    /// on its dot-product cadence using the maintained residual (its cost
+    /// is included in the returned [`RunResult::dots`]). The inner
+    /// active-set sweeps are untouched (the active set is always a subset
+    /// of the surviving columns).
+    pub fn run_with_screen(
+        &mut self,
+        prob: &Problem<'_>,
+        alpha: &mut [f64],
+        lambda: f64,
+        mut screen: Option<&mut Screener>,
+    ) -> RunResult {
         let p = prob.p();
         assert_eq!(alpha.len(), p);
         assert_eq!(self.resid.len(), prob.m(), "call reset_residual first");
@@ -79,12 +104,20 @@ impl CoordinateDescent {
             .collect();
 
         'outer: while (sweeps as usize) < self.opts.max_iters {
-            // ---- full sweep
+            // ---- full sweep (over the surviving columns when screening)
             sweeps += 1;
             let mut max_delta = 0.0f64;
             let mut alpha_inf = 0.0f64;
             let mut active_changed = false;
-            for j in 0..p {
+            let pool_len = match &screen {
+                Some(s) => s.alive_len(),
+                None => p,
+            };
+            for k in 0..pool_len {
+                let j = match &screen {
+                    Some(s) => s.alive()[k],
+                    None => k,
+                };
                 let was_zero = alpha[j] == 0.0;
                 let d = self.update_coord(prob, alpha, j, lambda);
                 dots += 1;
@@ -93,6 +126,12 @@ impl CoordinateDescent {
                 if was_zero && alpha[j] != 0.0 {
                     active.push(j);
                     active_changed = true;
+                }
+            }
+            if let Some(s) = screen.as_deref_mut() {
+                s.note_iteration(pool_len as u64, (p - pool_len) as u64);
+                if s.due() {
+                    dots += s.screen_penalized(prob, alpha, &self.resid, lambda);
                 }
             }
             // scale-free criterion (see linesearch::StepInfo::small)

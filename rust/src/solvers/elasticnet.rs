@@ -33,21 +33,26 @@ use crate::util::rng::{SubsetSampler, Xoshiro256};
 /// form carries (δ, λ₂).
 #[derive(Clone, Copy, Debug)]
 pub struct ElasticNetPenalty {
+    /// ℓ1 weight λ₁
     pub l1: f64,
+    /// ridge weight λ₂
     pub l2: f64,
 }
 
 /// Coordinate descent for the penalized ElasticNet.
 pub struct ElasticNetCd {
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     resid: Vec<f64>,
 }
 
 impl ElasticNetCd {
+    /// Fresh solver (residual initialized by [`Self::reset_residual`]).
     pub fn new(opts: SolveOptions) -> Self {
         Self { opts, resid: Vec::new() }
     }
 
+    /// Rebuild the residual for the current α (‖α‖₀ axpys).
     pub fn reset_residual(&mut self, prob: &Problem<'_>, alpha: &[f64]) {
         self.resid.clear();
         self.resid.extend_from_slice(prob.y);
@@ -112,7 +117,9 @@ impl ElasticNetCd {
 /// Stochastic FW for the ℓ1-constrained ElasticNet (ridge-regularized
 /// least squares over the ℓ1 ball).
 pub struct ElasticNetSfw {
+    /// how κ = |S| is chosen each iteration (paper §4.5)
     pub strategy: SamplingStrategy,
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     /// ridge weight λ₂ ≥ 0 (λ₂ = 0 recovers the plain Lasso solver)
     pub l2: f64,
@@ -124,6 +131,7 @@ pub struct ElasticNetSfw {
 }
 
 impl ElasticNetSfw {
+    /// Fresh solver seeded from `opts.seed`.
     pub fn new(strategy: SamplingStrategy, opts: SolveOptions, l2: f64) -> Self {
         assert!(l2 >= 0.0);
         Self {

@@ -9,9 +9,11 @@
 
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops::{self, soft_threshold};
+use crate::screening::Screener;
 
 /// FISTA solver; scratch buffers persist across path points.
 pub struct Fista {
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     /// Lipschitz constant ‖X‖₂² (caller provides; see
     /// [`crate::linalg::Design::spectral_norm_sq`])
@@ -23,6 +25,7 @@ pub struct Fista {
 }
 
 impl Fista {
+    /// Solver with a precomputed Lipschitz constant ‖X‖₂².
     pub fn new(opts: SolveOptions, lipschitz: f64) -> Self {
         Self {
             opts,
@@ -40,6 +43,22 @@ impl Fista {
     /// `Xᵀ(Xw − y)` = p dot products + ‖w‖₀ axpys; we count p + ‖w‖₀
     /// (matching the paper's O(mp) per-iteration entry for SLEP).
     pub fn run(&mut self, prob: &Problem<'_>, alpha: &mut [f64], lambda: f64) -> RunResult {
+        self.run_with_screen(prob, alpha, lambda, None)
+    }
+
+    /// [`Self::run`] with optional gap-safe screening: the gradient is
+    /// computed per surviving column (`alive` dots instead of the p-dot
+    /// `tr_matvec`), screened columns stay exactly zero through the prox
+    /// step, and the penalized sphere test re-runs on its dot-product
+    /// cadence (it rebuilds the residual `y − Xα`, ‖α‖₀ extra dots; all
+    /// included in [`RunResult::dots`]).
+    pub fn run_with_screen(
+        &mut self,
+        prob: &Problem<'_>,
+        alpha: &mut [f64],
+        lambda: f64,
+        mut screen: Option<&mut Screener>,
+    ) -> RunResult {
         let (m, p) = (prob.m(), prob.p());
         let l = self.lipschitz.max(1e-12);
         self.w.clear();
@@ -57,14 +76,29 @@ impl Fista {
 
         while (iters as usize) < self.opts.max_iters {
             iters += 1;
+            let dots_at_start = dots;
             // ∇f(w) = Xᵀ(Xw − y)
             prob.x.matvec(&self.w, &mut self.q);
             dots += ops::nnz(&self.w) as u64;
             for (qi, yi) in self.q.iter_mut().zip(prob.y.iter()) {
                 *qi -= yi;
             }
-            prob.x.tr_matvec(&self.q, &mut self.grad);
-            dots += p as u64;
+            match &screen {
+                None => {
+                    prob.x.tr_matvec(&self.q, &mut self.grad);
+                    dots += p as u64;
+                }
+                Some(s) => {
+                    // restricted gradient: screened columns keep ∇ⱼ = 0 so
+                    // their (zero) coefficients never move
+                    self.grad.fill(0.0);
+                    for k in 0..s.alive_len() {
+                        let j = s.alive()[k];
+                        self.grad[j] = prob.x.col_dot(j, &self.q);
+                    }
+                    dots += s.alive_len() as u64;
+                }
+            }
 
             // proximal step from w
             let mut max_delta = 0.0f64;
@@ -97,6 +131,31 @@ impl Fista {
             }
             t = t_next;
             self.alpha_prev.copy_from_slice(alpha);
+
+            // gap-safe refresh on the dot budget (residual rebuilt at α)
+            if let Some(s) = screen.as_deref_mut() {
+                s.note_iteration(dots - dots_at_start, (p - s.alive_len()) as u64);
+                if s.due() {
+                    prob.x.matvec(alpha, &mut self.q);
+                    let rebuild = ops::nnz(alpha) as u64;
+                    for (qi, yi) in self.q.iter_mut().zip(prob.y.iter()) {
+                        *qi = yi - *qi; // q ← y − Xα (overwritten next iter)
+                    }
+                    dots += rebuild + s.screen_penalized(prob, alpha, &self.q, lambda);
+                    // the rebuild was done solely for screening — charge it
+                    // to the screening-overhead counter too
+                    s.charge_screen_dots(rebuild);
+                    // kill the momentum of newly eliminated columns: w[j]
+                    // can still be nonzero from the pre-elimination step,
+                    // and with ∇ⱼ pinned to 0 the prox would resurrect αⱼ
+                    // and break the support ⊆ alive invariant
+                    for j in 0..p {
+                        if !s.is_alive(j) {
+                            self.w[j] = 0.0;
+                        }
+                    }
+                }
+            }
 
             // scale-free criterion (see linesearch::StepInfo::small)
             let alpha_inf = crate::linalg::ops::nrm_inf(alpha);

@@ -6,9 +6,11 @@
 
 use super::linesearch::FwState;
 use super::{Problem, RunResult, SolveOptions};
+use crate::screening::Screener;
 
 /// Deterministic FW solver for `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ`.
 pub struct FrankWolfe {
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     /// optional duality-gap threshold (Jaggi-style certificate); `None`
     /// uses the paper's ‖Δα‖∞ criterion only.
@@ -16,31 +18,65 @@ pub struct FrankWolfe {
 }
 
 impl FrankWolfe {
+    /// Solver stopping on the paper's ‖Δα‖∞ criterion.
     pub fn new(opts: SolveOptions) -> Self {
         Self { opts, gap_tol: None }
     }
 
+    /// Solver that additionally stops once the duality gap `g(α)` (free
+    /// with the full vertex search) drops below `gap_tol`.
     pub fn with_gap_tol(opts: SolveOptions, gap_tol: f64) -> Self {
         Self { opts, gap_tol: Some(gap_tol) }
     }
 
     /// Run from `state`. Each iteration costs exactly p dot products.
     pub fn run(&self, prob: &Problem<'_>, state: &mut FwState, delta: f64) -> RunResult {
+        self.run_with_screen(prob, state, delta, None)
+    }
+
+    /// [`Self::run`] with optional gap-safe screening. The full vertex
+    /// search already produces the exact gradient and duality gap, so the
+    /// sphere test costs **zero extra dot products** here and runs every
+    /// iteration (in both `gap` and `aggressive` modes); each iteration
+    /// then sweeps only the surviving columns (`alive` dots instead of p).
+    pub fn run_with_screen(
+        &self,
+        prob: &Problem<'_>,
+        state: &mut FwState,
+        delta: f64,
+        mut screen: Option<&mut Screener>,
+    ) -> RunResult {
         let p = prob.p();
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
         let mut small_streak = 0usize;
+        // gradient buffer for the screener (only when screening is on)
+        let mut grad_buf = match &screen {
+            Some(_) => vec![0.0; p],
+            None => Vec::new(),
+        };
 
         while (iters as usize) < self.opts.max_iters {
             iters += 1;
-            // full vertex search
+            // vertex search over the surviving columns (all p when off)
+            let pool_len = match &screen {
+                Some(s) => s.alive_len(),
+                None => p,
+            };
             let mut best_i = 0usize;
             let mut best_g = 0.0f64;
             let mut best_abs = -1.0f64;
             let mut gap_acc = 0.0f64; // αᵀ∇f accumulates over active coords
-            for i in 0..p {
+            for k in 0..pool_len {
+                let i = match &screen {
+                    Some(s) => s.alive()[k],
+                    None => k,
+                };
                 let g = state.grad_coord(prob, i);
+                if !grad_buf.is_empty() {
+                    grad_buf[i] = g;
+                }
                 let a = g.abs();
                 if a > best_abs {
                     best_abs = a;
@@ -52,7 +88,7 @@ impl FrankWolfe {
                     gap_acc += ai * g;
                 }
             }
-            dots += p as u64;
+            dots += pool_len as u64;
 
             // duality gap g(α) = αᵀ∇f + δ‖∇f‖∞ — free with the full sweep
             let gap = gap_acc + delta * best_abs;
@@ -61,6 +97,14 @@ impl FrankWolfe {
                     converged = true;
                     break;
                 }
+            }
+
+            // free sphere test: the surviving gradient is already in hand
+            // (run before the step so gradient, gap and iterate agree; the
+            // selected vertex always survives the test)
+            if let Some(s) = screen.as_deref_mut() {
+                s.note_iteration(pool_len as u64, (p - pool_len) as u64);
+                s.screen_with_grad(prob, state, delta, &grad_buf);
             }
 
             let info = state.step(prob, delta, best_i, best_g);

@@ -15,6 +15,11 @@
 //! All solvers share the [`Problem`] view and the paper's accounting: a
 //! **dot product** is one `zᵢᵀv` column product ([`Counters::dots`]), the
 //! machine-independent cost metric of Tables 4–5.
+//!
+//! Every solver kind also exposes a `run_with_screen` variant taking an
+//! optional [`crate::screening::Screener`] — gap-safe feature elimination
+//! that shrinks the effective dimension without changing the optimum
+//! (DESIGN.md §8).
 
 pub mod apg;
 pub mod cd;
@@ -30,24 +35,33 @@ pub mod sfw;
 use crate::linalg::{ColumnCache, Design};
 
 /// Immutable view of one regression problem (standardized design, centered
-/// response, per-column caches).
+/// response, per-column caches). `Copy`: solvers, backends and the
+/// screening subsystem all share the same borrowed view — per-column
+/// quantities are accessed **view-indexed** through [`ColumnCache`]
+/// (global column index), never copied or compacted.
 #[derive(Clone, Copy)]
 pub struct Problem<'a> {
+    /// the m×p design matrix
     pub x: &'a Design,
+    /// the centered response (length m)
     pub y: &'a [f64],
+    /// per-column σᵢ = zᵢᵀy and ‖zᵢ‖² caches (paper §4.2)
     pub cache: &'a ColumnCache,
 }
 
 impl<'a> Problem<'a> {
+    /// Bundle a design, response, and prebuilt column cache into a view.
     pub fn new(x: &'a Design, y: &'a [f64], cache: &'a ColumnCache) -> Self {
         Self { x, y, cache }
     }
 
+    /// Number of samples m.
     #[inline]
     pub fn m(&self) -> usize {
         self.x.rows()
     }
 
+    /// Number of features p.
     #[inline]
     pub fn p(&self) -> usize {
         self.x.cols()
@@ -76,6 +90,7 @@ pub struct Counters {
 }
 
 impl Counters {
+    /// Accumulate another run's counters.
     pub fn add(&mut self, other: Counters) {
         self.dots += other.dots;
         self.iters += other.iters;

@@ -6,16 +6,19 @@
 
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops::soft_threshold;
+use crate::screening::Screener;
 use crate::util::rng::Xoshiro256;
 
 /// Stochastic CD solver.
 pub struct StochasticCd {
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     rng: Xoshiro256,
     resid: Vec<f64>,
 }
 
 impl StochasticCd {
+    /// Fresh solver seeded from `opts.seed`.
     pub fn new(opts: SolveOptions) -> Self {
         Self {
             opts,
@@ -24,8 +27,15 @@ impl StochasticCd {
         }
     }
 
+    /// Reseed the coordinate-drawing RNG (per-repetition runs).
     pub fn reseed(&mut self, seed: u64) {
         self.rng = Xoshiro256::seed_from_u64(seed);
+    }
+
+    /// The maintained residual `R = y − Xα` (valid after a run or a
+    /// [`Self::reset_residual`] — used by the gap-safe screening pass).
+    pub fn residual(&self) -> &[f64] {
+        &self.resid
     }
 
     /// Rebuild the residual for the current α (‖α‖₀ axpys).
@@ -42,6 +52,21 @@ impl StochasticCd {
     /// Solve at penalty `lambda` from the warm-started `alpha`.
     /// Stops when an epoch (p draws) moves no coefficient by more than ε.
     pub fn run(&mut self, prob: &Problem<'_>, alpha: &mut [f64], lambda: f64) -> RunResult {
+        self.run_with_screen(prob, alpha, lambda, None)
+    }
+
+    /// [`Self::run`] with optional gap-safe screening: coordinates are
+    /// drawn uniformly from the surviving set (an epoch becomes `alive`
+    /// draws — the restricted problem's dimension), and the penalized
+    /// sphere test re-runs on its dot-product cadence using the maintained
+    /// residual (cost included in [`RunResult::dots`]).
+    pub fn run_with_screen(
+        &mut self,
+        prob: &Problem<'_>,
+        alpha: &mut [f64],
+        lambda: f64,
+        mut screen: Option<&mut Screener>,
+    ) -> RunResult {
         let p = prob.p();
         assert_eq!(self.resid.len(), prob.m(), "call reset_residual first");
         let mut dots = 0u64;
@@ -52,8 +77,16 @@ impl StochasticCd {
             epochs += 1;
             let mut max_delta = 0.0f64;
             let mut alpha_inf = 0.0f64;
-            for _ in 0..p {
-                let j = self.rng.below(p);
+            let pool_len = match &screen {
+                Some(s) => s.alive_len(),
+                None => p,
+            };
+            for _ in 0..pool_len {
+                let t = self.rng.below(pool_len);
+                let j = match &screen {
+                    Some(s) => s.alive()[t],
+                    None => t,
+                };
                 let znorm = prob.cache.norm_sq[j];
                 if znorm == 0.0 {
                     continue;
@@ -68,6 +101,12 @@ impl StochasticCd {
                     max_delta = max_delta.max((new - old).abs());
                 }
                 alpha_inf = alpha_inf.max(alpha[j].abs());
+            }
+            if let Some(s) = screen.as_deref_mut() {
+                s.note_iteration(pool_len as u64, (p - pool_len) as u64);
+                if s.due() {
+                    dots += s.screen_penalized(prob, alpha, &self.resid, lambda);
+                }
             }
             // scale-free criterion (see linesearch::StepInfo::small)
             if max_delta <= self.opts.eps * alpha_inf.max(1.0) {

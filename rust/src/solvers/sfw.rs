@@ -18,6 +18,7 @@
 use super::linesearch::FwState;
 use super::sampling::SamplingStrategy;
 use super::{Problem, RunResult, SolveOptions};
+use crate::screening::Screener;
 use crate::util::rng::Xoshiro256;
 
 /// Pluggable execution backend for the sampled vertex search + step.
@@ -47,6 +48,7 @@ pub struct NativeBackend {
 }
 
 impl NativeBackend {
+    /// Fresh backend (scratch buffers grow on first use).
     pub fn new() -> Self {
         Self::default()
     }
@@ -97,7 +99,9 @@ impl FwBackend for NativeBackend {
 /// Stochastic FW solver (holds RNG + scratch so path runs don't allocate
 /// per regularization value).
 pub struct StochasticFw<B: FwBackend = NativeBackend> {
+    /// how κ = |S| is chosen each iteration (paper §4.5)
     pub strategy: SamplingStrategy,
+    /// shared solver knobs (tolerance, cap, seed, patience)
     pub opts: SolveOptions,
     rng: Xoshiro256,
     sample: Vec<usize>,
@@ -106,12 +110,15 @@ pub struct StochasticFw<B: FwBackend = NativeBackend> {
 }
 
 impl StochasticFw<NativeBackend> {
+    /// Solver with the default native (pure-Rust) backend.
     pub fn new(strategy: SamplingStrategy, opts: SolveOptions) -> Self {
         Self::with_backend(strategy, opts, NativeBackend::new())
     }
 }
 
 impl<B: FwBackend> StochasticFw<B> {
+    /// Solver with an explicit backend (e.g.
+    /// [`crate::parallel::ParallelBackend`] or the XLA-artifact executor).
     pub fn with_backend(strategy: SamplingStrategy, opts: SolveOptions, backend: B) -> Self {
         Self {
             strategy,
@@ -132,8 +139,25 @@ impl<B: FwBackend> StochasticFw<B> {
     /// (already warm-started/rescaled by the caller). Stops when
     /// `‖α_new − α_old‖∞ ≤ eps` (paper §5) or at `max_iters`.
     pub fn run(&mut self, prob: &Problem<'_>, state: &mut FwState, delta: f64) -> RunResult {
+        self.run_with_screen(prob, state, delta, None)
+    }
+
+    /// [`Self::run`] with optional gap-safe screening: the κ-subset is
+    /// drawn from the screener's surviving columns only (so both
+    /// [`NativeBackend`] and [`crate::parallel::ParallelBackend`] scan an
+    /// excised sample), κ is re-derived from the surviving count, and the
+    /// screener re-runs its sphere test on its dot-product cadence
+    /// (`Screener::due`). Screening-pass dots are included in the returned
+    /// [`RunResult::dots`].
+    pub fn run_with_screen(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &mut FwState,
+        delta: f64,
+        mut screen: Option<&mut Screener>,
+    ) -> RunResult {
         let p = prob.p();
-        let kappa = self.strategy.kappa(p);
+        let kappa_full = self.strategy.kappa(p);
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
@@ -141,22 +165,55 @@ impl<B: FwBackend> StochasticFw<B> {
 
         while (iters as usize) < self.opts.max_iters {
             iters += 1;
+            // 0. gap-safe refresh on the dot-product budget
+            if let Some(s) = screen.as_deref_mut() {
+                if s.due() {
+                    dots += s.screen_with_state(prob, state, delta);
+                }
+            }
+            // effective dimension and sample size on the surviving set
+            let pool_len = match &screen {
+                Some(s) => s.alive_len(),
+                None => p,
+            };
+            let kappa = match &screen {
+                Some(_) => self.strategy.kappa(pool_len),
+                None => kappa_full,
+            };
             // 1. sample S — O(κ) epoch-stamped Floyd sampler
-            if kappa == p {
+            if kappa == pool_len {
                 // deterministic sweep (avoid shuffling cost)
-                if self.sample.len() != p {
-                    self.sample = (0..p).collect();
+                match &screen {
+                    Some(s) => {
+                        self.sample.clear();
+                        self.sample.extend_from_slice(s.alive());
+                    }
+                    None => {
+                        if self.sample.len() != p {
+                            self.sample = (0..p).collect();
+                        }
+                    }
                 }
             } else {
-                if self.sampler.as_ref().map(|s| s.len()) != Some(p) {
-                    self.sampler = Some(crate::util::rng::SubsetSampler::new(p));
+                if self.sampler.as_ref().map(|s| s.len()) != Some(pool_len) {
+                    self.sampler = Some(crate::util::rng::SubsetSampler::new(pool_len));
                 }
                 let sampler = self.sampler.as_mut().unwrap();
                 sampler.sample(&mut self.rng, kappa, &mut self.sample);
+                if let Some(s) = &screen {
+                    // map positions in the surviving set to column indices
+                    let alive = s.alive();
+                    for v in self.sample.iter_mut() {
+                        *v = alive[*v];
+                    }
+                }
             }
             // 2. vertex search (κ dot products)
             let (i_star, g_i) = self.backend.select_vertex(prob, state, &self.sample);
             dots += kappa as u64;
+            if let Some(s) = screen.as_deref_mut() {
+                s.note_iteration(kappa as u64, kappa_full.saturating_sub(kappa) as u64);
+            }
             // 3–4. line search + rank-1 update
             let info = state.step(prob, delta, i_star, g_i);
             if info.small(self.opts.eps) {

@@ -21,6 +21,7 @@ fn sfw_full_sampling_matches_fwdet_trajectories_bit_for_bit() {
         },
         delta_max: Some(3.0),
         track: (0..ds.cols()).collect(),
+        ..Default::default()
     };
     let fw = run_path(&ds, SolverKind::FwDet, &cfg);
     let sfw = run_path(&ds, SolverKind::Sfw(SamplingStrategy::Full), &cfg);
@@ -68,6 +69,7 @@ fn all_six_solver_kinds_reach_comparable_objective() {
         },
         delta_max: None,
         track: vec![],
+        ..Default::default()
     };
     let kinds = [
         SolverKind::Cd,

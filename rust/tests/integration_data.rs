@@ -92,6 +92,7 @@ fn ground_truth_recoverable_by_solver() {
         },
         delta_max: None,
         track: vec![],
+        ..Default::default()
     };
     let pr = run_path(&ds, SolverKind::Sfw(SamplingStrategy::Fraction(0.2)), &cfg);
     // pick the path point with best test error; check support overlap there

@@ -19,6 +19,7 @@ fn cfg(points: usize) -> PathConfig {
         },
         delta_max: None,
         track: vec![],
+        ..Default::default()
     }
 }
 

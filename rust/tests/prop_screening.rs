@@ -1,0 +1,310 @@
+//! Safety properties of gap-safe screening (`sfw_lasso::screening`).
+//!
+//! The contract under test: screening may only ever eliminate columns that
+//! are zero in **every** optimal solution, so for every solver kind and
+//! every screen mode the screened run must land on the same solution as
+//! the unscreened run — same objective (up to the solvers' own stopping
+//! slack) and same support (no coordinate that is significant in one run
+//! may be essentially absent in the other). The deterministic solvers are
+//! additionally checked at high precision, and the sphere test itself is
+//! checked against an independently computed reference optimum.
+
+use sfw_lasso::data::{load, Dataset, Named};
+use sfw_lasso::linalg::ColumnCache;
+use sfw_lasso::path::{run_path, run_path_parallel, PathConfig, PathResult, SolverKind};
+use sfw_lasso::screening::{ScreenMode, Screener};
+use sfw_lasso::solvers::cd::CoordinateDescent;
+use sfw_lasso::solvers::fw::FrankWolfe;
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::proj::project_l1;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+
+fn small_ds() -> Dataset {
+    // p = 100, m = 200 train (m > p ⇒ strictly convex ⇒ unique optimum,
+    // which makes the support comparison below well-posed)
+    load(Named::Synth10k { relevant: 8 }, 0.01, 3)
+}
+
+fn base_cfg(eps: f64, max_iters: usize, n_points: usize, p: usize) -> PathConfig {
+    PathConfig {
+        n_points,
+        opts: SolveOptions { eps, max_iters, patience: 3, ..Default::default() },
+        delta_max: None,
+        track: (0..p).collect(),
+        screen: ScreenMode::Off,
+    }
+}
+
+/// Per-point objective agreement within `rtol`, identical grids.
+fn assert_objectives_agree(base: &PathResult, scr: &PathResult, rtol: f64, label: &str) {
+    assert_eq!(base.points.len(), scr.points.len(), "{label}: point count");
+    for (a, b) in base.points.iter().zip(scr.points.iter()) {
+        assert_eq!(a.reg, b.reg, "{label}: grid mismatch");
+        assert!(
+            (a.train_mse - b.train_mse).abs() <= rtol * (1.0 + a.train_mse.abs()),
+            "{label} at reg={}: unscreened mse {} vs screened mse {}",
+            a.reg,
+            a.train_mse,
+            b.train_mse
+        );
+    }
+}
+
+/// Support agreement via a magnitude gap: no coefficient may be large
+/// (> `big`·‖α‖∞) in one run while essentially zero (< `tiny`·‖α‖∞) in the
+/// other — the signature of an unsafely eliminated feature. Transient
+/// small FW vertex visits between the thresholds are tolerated.
+fn assert_supports_agree(base: &PathResult, scr: &PathResult, big: f64, tiny: f64, label: &str) {
+    for (a, b) in base.points.iter().zip(scr.points.iter()) {
+        let amax = a
+            .tracked_coefs
+            .iter()
+            .chain(b.tracked_coefs.iter())
+            .fold(0.0f64, |acc, v| acc.max(v.abs()));
+        if amax == 0.0 {
+            continue;
+        }
+        for (j, (&va, &vb)) in
+            a.tracked_coefs.iter().zip(b.tracked_coefs.iter()).enumerate()
+        {
+            let gap_ab = va.abs() > big * amax && vb.abs() < tiny * amax;
+            let gap_ba = vb.abs() > big * amax && va.abs() < tiny * amax;
+            assert!(
+                !gap_ab && !gap_ba,
+                "{label} at reg={}: coef {j} is {va} unscreened vs {vb} screened",
+                a.reg
+            );
+        }
+    }
+}
+
+fn screened(cfg: &PathConfig, mode: ScreenMode) -> PathConfig {
+    let mut c = cfg.clone();
+    c.screen = mode;
+    c
+}
+
+#[test]
+fn screened_cd_matches_unscreened_at_high_precision() {
+    // CD converges linearly, so at ε = 1e-8 both runs sit on the optimum:
+    // f32-level objective agreement and matching supports.
+    let ds = small_ds();
+    let cfg = base_cfg(1e-8, 50_000, 8, ds.cols());
+    let base = run_path(&ds, SolverKind::Cd, &cfg);
+    for mode in [ScreenMode::Gap, ScreenMode::Aggressive] {
+        let scr = run_path(&ds, SolverKind::Cd, &screened(&cfg, mode));
+        assert_objectives_agree(&base, &scr, 1e-6, &format!("cd/{}", mode.label()));
+        assert_supports_agree(&base, &scr, 1e-2, 1e-5, &format!("cd/{}", mode.label()));
+        assert!(scr.screen_passes > 0, "cd/{} never screened", mode.label());
+        assert!(scr.screen_dots > 0);
+        for pt in &scr.points {
+            assert!((0.0..=1.0).contains(&pt.screened_frac));
+        }
+    }
+}
+
+#[test]
+fn screened_fista_matches_unscreened() {
+    let ds = small_ds();
+    let cfg = base_cfg(1e-6, 20_000, 6, ds.cols());
+    let base = run_path(&ds, SolverKind::FistaReg, &cfg);
+    for mode in [ScreenMode::Gap, ScreenMode::Aggressive] {
+        let scr = run_path(&ds, SolverKind::FistaReg, &screened(&cfg, mode));
+        assert_objectives_agree(&base, &scr, 1e-4, &format!("fista/{}", mode.label()));
+        assert_supports_agree(&base, &scr, 5e-2, 1e-4, &format!("fista/{}", mode.label()));
+        assert!(scr.screen_passes > 0);
+    }
+}
+
+#[test]
+fn screened_scd_matches_unscreened() {
+    // SCD draws coordinates from the surviving pool, so the RNG streams
+    // (hence trajectories) differ — compare at solver accuracy.
+    let ds = small_ds();
+    let cfg = base_cfg(1e-5, 10_000, 6, ds.cols());
+    let base = run_path(&ds, SolverKind::Scd, &cfg);
+    for mode in [ScreenMode::Gap, ScreenMode::Aggressive] {
+        let scr = run_path(&ds, SolverKind::Scd, &screened(&cfg, mode));
+        assert_objectives_agree(&base, &scr, 1e-2, &format!("scd/{}", mode.label()));
+        assert_supports_agree(&base, &scr, 1e-1, 1e-4, &format!("scd/{}", mode.label()));
+    }
+}
+
+#[test]
+fn screened_constrained_kinds_match_unscreened() {
+    // FW-family solvers stop on ‖Δα‖∞ with an O(1/k) tail, so both runs
+    // carry stopping slack; agreement is asserted at solver accuracy while
+    // the exactness of the sphere test itself is covered by the reference
+    // test below and the unit tests in `screening::tests`.
+    let ds = small_ds();
+    let mut cfg = base_cfg(1e-3, 4_000, 6, ds.cols());
+    cfg.delta_max = Some(3.0);
+    for kind in [
+        SolverKind::FwDet,
+        SolverKind::ApgConst,
+        SolverKind::Sfw(SamplingStrategy::Fraction(0.3)),
+    ] {
+        let base = run_path(&ds, kind, &cfg);
+        for mode in [ScreenMode::Gap, ScreenMode::Aggressive] {
+            let scr = run_path(&ds, kind, &screened(&cfg, mode));
+            let label = format!("{}/{}", kind.label(), mode.label());
+            assert_objectives_agree(&base, &scr, 1e-1, &label);
+            assert_supports_agree(&base, &scr, 1e-1, 1e-4, &label);
+            assert!(scr.screen_passes > 0, "{label}: never screened");
+        }
+    }
+}
+
+#[test]
+fn screened_parallel_paths_agree_across_thread_counts() {
+    // The ISSUE contract: screened paths stay correct (and deterministic)
+    // under --threads 1/2/4/8. Each thread count is compared against the
+    // unscreened run at the same thread count (warm-start chunking is
+    // thread-count-dependent, so that is the apples-to-apples pairing).
+    let ds = small_ds();
+    let mut cfg = base_cfg(1e-3, 4_000, 8, ds.cols());
+    cfg.delta_max = Some(3.0);
+    let kind = SolverKind::Sfw(SamplingStrategy::Fraction(0.3));
+    let gap = screened(&cfg, ScreenMode::Gap);
+    for threads in [1usize, 2, 4, 8] {
+        let base = run_path_parallel(&ds, kind, &cfg, threads);
+        let scr = run_path_parallel(&ds, kind, &gap, threads);
+        let label = format!("sfw/gap/threads={threads}");
+        assert_objectives_agree(&base, &scr, 1e-1, &label);
+        assert_supports_agree(&base, &scr, 1e-1, 1e-4, &label);
+
+        // determinism: same (seed, threads, screen) ⇒ bit-identical result
+        let again = run_path_parallel(&ds, kind, &gap, threads);
+        assert_eq!(scr.total_dots, again.total_dots, "{label}: dots");
+        assert_eq!(scr.screen_passes, again.screen_passes, "{label}: passes");
+        for (x, y) in scr.points.iter().zip(again.points.iter()) {
+            assert_eq!(x.train_mse.to_bits(), y.train_mse.to_bits(), "{label}");
+            assert_eq!(x.active, y.active, "{label}");
+        }
+    }
+}
+
+/// High-precision projected-gradient reference for the constrained
+/// problem (m > p ⇒ unique optimum; PGD converges linearly here).
+fn pgd_reference(prob: &Problem<'_>, delta: f64, iters: usize) -> Vec<f64> {
+    let l = prob.x.spectral_norm_sq(100, 42).max(1e-12);
+    let (m, p) = (prob.m(), prob.p());
+    let mut alpha = vec![0.0; p];
+    let mut q = vec![0.0; m];
+    let mut grad = vec![0.0; p];
+    for _ in 0..iters {
+        prob.x.matvec(&alpha, &mut q);
+        let resid: Vec<f64> = q.iter().zip(prob.y.iter()).map(|(a, b)| a - b).collect();
+        prob.x.tr_matvec(&resid, &mut grad);
+        for j in 0..p {
+            alpha[j] -= grad[j] / l;
+        }
+        project_l1(&mut alpha, delta);
+    }
+    alpha
+}
+
+#[test]
+fn sphere_test_never_eliminates_reference_support() {
+    // The provable safety property, checked against an independently
+    // computed optimum: no coordinate that is significantly active at the
+    // reference solution may ever be screened out, at any point of the
+    // screened run.
+    use sfw_lasso::linalg::{DenseMatrix, Design};
+    use sfw_lasso::util::rng::Xoshiro256;
+    let mut rng = Xoshiro256::seed_from_u64(123);
+    let (m, p) = (60, 40);
+    let x = Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()));
+    let mut beta = vec![0.0; p];
+    beta[3] = 2.0;
+    beta[17] = -1.5;
+    beta[31] = 0.7;
+    let mut y = vec![0.0; m];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.02 * rng.gaussian();
+    }
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let delta = 2.5;
+
+    let reference = pgd_reference(&prob, delta, 4_000);
+    let f_ref = prob.objective(&reference);
+    let ref_max = reference.iter().fold(0.0f64, |a, v| a.max(v.abs()));
+
+    let fw = FrankWolfe::new(SolveOptions {
+        eps: 1e-6,
+        max_iters: 30_000,
+        seed: 1,
+        ..Default::default()
+    });
+    let mut st = FwState::zero(p, m);
+    let mut scr = Screener::new(ScreenMode::Aggressive, p);
+    let res = fw.run_with_screen(&prob, &mut st, delta, Some(&mut scr));
+
+    // safety: the reference support survived every sphere pass
+    for (j, &v) in reference.iter().enumerate() {
+        if v.abs() > 1e-3 * ref_max {
+            assert!(
+                scr.is_alive(j),
+                "coordinate {j} (reference value {v}) was screened out"
+            );
+        }
+    }
+    assert!(scr.stats().passes > 0);
+    // sanity: the screened run still descends essentially to the optimum
+    let f0 = 0.5 * cache.yty;
+    let shortfall = (res.objective - f_ref) / (f0 - f_ref).max(1e-12);
+    assert!(
+        shortfall <= 0.05,
+        "screened FW objective {} vs reference {f_ref} (shortfall {shortfall:.4})",
+        res.objective
+    );
+}
+
+#[test]
+fn penalized_sphere_keeps_kkt_support_and_objective() {
+    // Penalized analogue: solve to ε = 1e-10 without screening, then run
+    // one sphere pass at that (KKT-exact) point — it must keep the whole
+    // support. A cold screened run must reach the same objective.
+    let ds = small_ds();
+    let cache = ColumnCache::build(&ds.x, &ds.y);
+    let prob = Problem::new(&ds.x, &ds.y, &cache);
+    let lambda = {
+        // a mid-path penalty with a nontrivial support
+        sfw_lasso::solvers::cd::lambda_max(&prob) / 10.0
+    };
+    let opts = SolveOptions { eps: 1e-10, max_iters: 100_000, ..Default::default() };
+    let mut cd = CoordinateDescent::new(opts);
+    let mut alpha = vec![0.0; prob.p()];
+    cd.reset_residual(&prob, &alpha);
+    let base = cd.run(&prob, &mut alpha, lambda);
+
+    let mut scr = Screener::new(ScreenMode::Gap, prob.p());
+    scr.screen_penalized(&prob, &alpha, cd.residual(), lambda);
+    for (j, &v) in alpha.iter().enumerate() {
+        if v != 0.0 {
+            assert!(scr.is_alive(j), "active coordinate {j} ({v}) screened out");
+        }
+    }
+    // the gap at an ε = 1e-10 solution is ~0: screening must be massive
+    assert!(
+        scr.screened_fraction() > 0.5,
+        "only {:.2} screened at the optimum",
+        scr.screened_fraction()
+    );
+
+    let mut cd2 = CoordinateDescent::new(opts);
+    let mut alpha2 = vec![0.0; prob.p()];
+    cd2.reset_residual(&prob, &alpha2);
+    let mut scr2 = Screener::new(ScreenMode::Aggressive, prob.p());
+    scr2.screen_penalized(&prob, &alpha2, cd2.residual(), lambda);
+    let scr_run = cd2.run_with_screen(&prob, &mut alpha2, lambda, Some(&mut scr2));
+    assert!(
+        (base.objective - scr_run.objective).abs() <= 1e-6 * (1.0 + base.objective),
+        "unscreened {} vs screened {}",
+        base.objective,
+        scr_run.objective
+    );
+}
