@@ -30,6 +30,13 @@
 //! All six solver kinds accept an optional [`screening::Screener`] and the
 //! CLI exposes it as `--screen {off,gap,aggressive}`.
 //!
+//! The arithmetic floor is [`linalg::kernel`]: explicit-SIMD micro-kernels
+//! (AVX2+FMA / NEON / unrolled scalar, selected once per process at
+//! runtime — `SFW_FORCE_SCALAR=1` pins the fallback) plus a cache-blocked
+//! multi-column scan that every vertex search, full sweep, screening pass
+//! and `Xᵀv` product runs through (DESIGN.md §9,
+//! `docs/adr/ADR-002-simd-runtime-dispatch.md`).
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `docs/adr/ADR-001-gap-safe-screening.md` for why gap-safe spheres were
 //! chosen over strong-rule-style heuristics.

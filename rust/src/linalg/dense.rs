@@ -85,13 +85,18 @@ impl DenseMatrix {
         }
     }
 
-    /// g = Xᵀ·v (all p dot products; deterministic-FW / FISTA gradient).
+    /// g = Xᵀ·v (all p dot products; deterministic-FW / FISTA gradient),
+    /// through the row-tiled multi-column engine: `v` is streamed once
+    /// per scan instead of once per column.
     pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
         assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
-        for (j, o) in out.iter_mut().enumerate() {
-            *o = ops::dot_f32_f64(self.col(j), v);
-        }
+        super::kernel::scan::multi_dot_dense(
+            self,
+            super::kernel::scan::Cols::All(self.cols),
+            v,
+            out,
+        );
     }
 
     /// Raw column-major data (for transfer to the XLA runtime).

@@ -6,6 +6,8 @@
 //! implementation precomputes (§4.2): `σᵢ = zᵢᵀy` and `‖zᵢ‖²`.
 
 use super::dense::DenseMatrix;
+use super::kernel::scan::{multi_dot_dense, multi_dot_sparse, Cols};
+use super::kernel::KernelScratch;
 use super::ops;
 use super::sparse::CscMatrix;
 
@@ -110,11 +112,38 @@ impl Design {
         }
     }
 
-    /// out = Xᵀ·v (p dot products).
+    /// out = Xᵀ·v (p dot products, row-tiled multi-column engine).
     pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
         match &self.storage {
             Storage::Dense(x) => x.tr_matvec(v, out),
             Storage::Sparse(x) => x.tr_matvec(v, out),
+        }
+    }
+
+    /// [`Self::tr_matvec`] with a caller-owned scratch arena — the
+    /// allocation-free form used by loops (power iteration, benches).
+    pub fn tr_matvec_with(&self, v: &[f64], out: &mut [f64], scratch: &mut KernelScratch) {
+        match &self.storage {
+            Storage::Dense(x) => x.tr_matvec(v, out),
+            Storage::Sparse(x) => x.tr_matvec_with(v, out, scratch),
+        }
+    }
+
+    /// `out[k] = z_{cols[k]} · v` for an arbitrary column subset — the
+    /// cache-blocked multi-column scan (DESIGN.md §9) shared by the
+    /// stochastic vertex search, the deterministic-FW full sweep and the
+    /// screening passes. Exactly `cols.len()` dot products in the paper's
+    /// accounting.
+    pub fn multi_col_dot(
+        &self,
+        cols: &[usize],
+        v: &[f64],
+        out: &mut [f64],
+        scratch: &mut KernelScratch,
+    ) {
+        match &self.storage {
+            Storage::Dense(x) => multi_dot_dense(x, Cols::Idx(cols), v, out),
+            Storage::Sparse(x) => multi_dot_sparse(x, Cols::Idx(cols), v, out, scratch),
         }
     }
 
@@ -126,10 +155,15 @@ impl Design {
         }
     }
 
-    /// Scale column j by s (standardization).
+    /// Scale column j by s (standardization). Same precision contract as
+    /// [`CscMatrix::scale_col`]: widen to f64 exactly, one f64 multiply,
+    /// one rounding back to f32.
     pub fn scale_col(&mut self, j: usize, s: f64) {
         match &mut self.storage {
             Storage::Dense(x) => {
+                if s == 1.0 {
+                    return;
+                }
                 for v in x.col_mut(j) {
                     *v = (*v as f64 * s) as f32;
                 }
@@ -146,6 +180,7 @@ impl Design {
         let mut v: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
         let mut xv = vec![0.0; m];
         let mut xtxv = vec![0.0; p];
+        let mut scratch = KernelScratch::new();
         let mut lambda = 0.0;
         for _ in 0..iters {
             let n = ops::nrm2_sq(&v).sqrt();
@@ -154,7 +189,7 @@ impl Design {
             }
             ops::scale(1.0 / n, &mut v);
             self.matvec(&v, &mut xv);
-            self.tr_matvec(&xv, &mut xtxv);
+            self.tr_matvec_with(&xv, &mut xtxv, &mut scratch);
             lambda = ops::dot(&v, &xtxv);
             std::mem::swap(&mut v, &mut xtxv);
         }
@@ -181,13 +216,15 @@ pub struct ColumnCache {
 
 impl ColumnCache {
     /// Precompute (p dot products — counted by callers as setup cost).
+    /// `σ = Xᵀy` runs through the blocked multi-column engine (one pass
+    /// over `y` for all p columns instead of p passes).
     pub fn build(x: &Design, y: &[f64]) -> Self {
         let p = x.cols();
         let mut sigma = vec![0.0; p];
         let mut norm_sq = vec![0.0; p];
-        for j in 0..p {
-            sigma[j] = x.col_dot(j, y);
-            norm_sq[j] = x.col_norm_sq(j);
+        x.tr_matvec(y, &mut sigma);
+        for (j, n) in norm_sq.iter_mut().enumerate() {
+            *n = x.col_norm_sq(j);
         }
         Self { sigma, norm_sq, yty: ops::nrm2_sq(y) }
     }

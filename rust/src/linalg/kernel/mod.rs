@@ -1,0 +1,180 @@
+//! SIMD kernel engine with runtime dispatch (DESIGN.md §9).
+//!
+//! Every solver in this crate bottoms out in five micro-kernels — `dot`,
+//! `dot_f32`, `dot_f32_f64`, `axpy_f32` and the sparse gather-dot — plus
+//! one macro-kernel: the multi-column |∇ᵢ|-scan of the Frank-Wolfe vertex
+//! search (the paper's unit of cost, §4.2). This module provides:
+//!
+//! * **explicit SIMD backends** — AVX2+FMA on `x86_64` (runtime-detected
+//!   via `is_x86_feature_detected!`), NEON on `aarch64` (architecturally
+//!   guaranteed), and the unrolled scalar code as the portable fallback.
+//!   One binary runs optimally everywhere; no `-C target-cpu=native`
+//!   needed (see `docs/adr/ADR-002-simd-runtime-dispatch.md` for why
+//!   runtime detection beats compile-time tuning for distributed
+//!   binaries). `SFW_FORCE_SCALAR=1` is the escape hatch that pins the
+//!   scalar table — CI runs the whole test suite under both.
+//! * **a cache-blocked multi-column scan** ([`scan`]) that tiles the
+//!   residual vector into [`ROW_TILE`]-row blocks and scans all κ sampled
+//!   columns per tile, so `q` is streamed from DRAM once per scan instead
+//!   of once per column — multiplying arithmetic intensity instead of
+//!   re-paying memory latency κ times.
+//! * **a scratch arena** ([`KernelScratch`]) owned by long-lived solver
+//!   state (backends, `FwState`, the screener) so steady-state path runs
+//!   perform no per-iteration allocation.
+//!
+//! ## Equivalence contracts
+//!
+//! The f32 scan kernels (`dot_f32`, `dot_f32_x4`) are **bit-identical**
+//! across all backends: they share a fixed 16-lane accumulation layout and
+//! reduction tree, with unfused multiplies (see [`scalar`]). The f64
+//! kernels use FMA where available and agree with scalar to tight
+//! tolerance. Both properties are enforced by `rust/tests/prop_kernels.rs`
+//! under the default dispatch *and* `SFW_FORCE_SCALAR=1`.
+
+pub mod scalar;
+pub mod scan;
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::OnceLock;
+
+/// A table of kernel entry points for one instruction-set backend.
+///
+/// All fields are plain `fn` pointers so a table can live in a `static`
+/// and dispatch is a single indirect call — negligible against kernels
+/// that stream whole columns (and the sparse gather at ~30 nnz is still
+/// dominated by its cache misses).
+#[derive(Clone, Copy)]
+pub struct KernelOps {
+    /// backend name, e.g. `"avx2+fma"` (surfaced in bench artifacts)
+    pub name: &'static str,
+    /// whether this table uses explicit SIMD intrinsics
+    pub simd: bool,
+    /// f64·f64 dot product
+    pub dot: fn(&[f64], &[f64]) -> f64,
+    /// f32·f32 dot product, f32 accumulation (fixed lane order — bit-exact
+    /// across backends)
+    pub dot_f32: fn(&[f32], &[f32]) -> f32,
+    /// four `dot_f32` against a shared right-hand side (register-blocked
+    /// tall-skinny GEMV micro-kernel); lane `i` bit-equals
+    /// `dot_f32(cols[i], v)`
+    pub dot_f32_x4: fn([&[f32]; 4], &[f32]) -> [f32; 4],
+    /// f32 column · f64 vector, f64 accumulation
+    pub dot_f32_f64: fn(&[f32], &[f64]) -> f64,
+    /// `out += a·col` (f32 column into f64 vector)
+    pub axpy_f32: fn(f64, &[f32], &mut [f64]),
+    /// sparse gather-dot `Σ vals[k]·v[rows[k]]`
+    pub gather_dot: fn(&[u32], &[f32], &[f64]) -> f64,
+}
+
+static ACTIVE: OnceLock<&'static KernelOps> = OnceLock::new();
+
+/// Whether `SFW_FORCE_SCALAR=1` is set (the dispatch escape hatch).
+pub fn force_scalar() -> bool {
+    std::env::var_os("SFW_FORCE_SCALAR").map_or(false, |v| v == "1")
+}
+
+/// The best kernel table the running CPU supports, ignoring the
+/// `SFW_FORCE_SCALAR` override (used by the property tests to exercise
+/// the SIMD backend even when the override is active).
+#[allow(unreachable_code)] // the scalar tail is dead on aarch64
+pub fn best_available() -> &'static KernelOps {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return &x86::OPS;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        return &neon::OPS;
+    }
+    &scalar::OPS
+}
+
+/// The active kernel table: selected once per process (first call), then
+/// cached. `SFW_FORCE_SCALAR=1` pins the scalar table; otherwise the best
+/// runtime-detected backend wins.
+#[inline]
+pub fn ops() -> &'static KernelOps {
+    *ACTIVE.get_or_init(|| {
+        if force_scalar() {
+            &scalar::OPS
+        } else {
+            best_available()
+        }
+    })
+}
+
+/// Row-tile height of the blocked multi-column scan.
+///
+/// 8192 rows ⇒ a 32 KiB f32 / 64 KiB f64 slice of the residual vector —
+/// small enough to stay resident in L1/L2 while the κ sampled column
+/// tiles stream past it, large enough that the per-tile loop overhead
+/// (cursor bookkeeping, remainder handling) is amortized over thousands
+/// of FLOPs per column. With m ≤ ROW_TILE the blocked scan degenerates to
+/// the plain per-column scan (identical arithmetic, no extra work), which
+/// also keeps small unit-test problems bit-compatible with the unblocked
+/// kernels. See DESIGN.md §9 for the measurement-driven rationale.
+pub const ROW_TILE: usize = 8192;
+
+/// Reusable buffers for the blocked scans — owned by long-lived solver
+/// state (`FwState`, the FW backends, `Screener`) so the per-iteration
+/// hot path never allocates after warm-up.
+#[derive(Default)]
+pub struct KernelScratch {
+    /// per-column f32 partial sums of the blocked f32 scan
+    pub(crate) accf: Vec<f32>,
+    /// per-column nnz cursors of the blocked sparse scan
+    pub(crate) cursors: Vec<usize>,
+    /// tile-walk order (sample positions sorted by column index)
+    pub(crate) order: Vec<u32>,
+    /// f32 materialization of the fitted values `q` (dense f32 scan input)
+    pub(crate) qf: Vec<f32>,
+    /// f64 gradient/dot output buffer (vertex search, screening passes)
+    pub(crate) grad: Vec<f64>,
+}
+
+impl KernelScratch {
+    /// Empty arena; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dispatch_is_stable_and_honors_override() {
+        let a = ops();
+        let b = ops();
+        assert!(std::ptr::eq(a, b), "dispatch must be cached");
+        if force_scalar() {
+            assert_eq!(a.name, "scalar");
+            assert!(!a.simd);
+        } else {
+            assert_eq!(a.name, best_available().name);
+        }
+    }
+
+    #[test]
+    fn best_available_is_usable() {
+        let k = best_available();
+        let x = vec![1.0f64, 2.0, 3.0];
+        assert_eq!((k.dot)(&x, &x), 14.0);
+        let xf = vec![1.0f32, 2.0, 3.0];
+        assert_eq!((k.dot_f32)(&xf, &xf), 14.0);
+        assert_eq!((k.dot_f32_f64)(&xf, &x), 14.0);
+        let mut out = vec![0.0f64; 3];
+        (k.axpy_f32)(2.0, &xf, &mut out);
+        assert_eq!(out, vec![2.0, 4.0, 6.0]);
+        assert_eq!((k.gather_dot)(&[0, 2], &[1.0, 1.0], &x), 4.0);
+        let r = (k.dot_f32_x4)([&xf[..], &xf[..], &xf[..], &xf[..]], &xf);
+        assert_eq!(r, [14.0f32; 4]);
+    }
+}

@@ -1,0 +1,187 @@
+//! NEON kernels (`aarch64`). NEON is architecturally mandatory on
+//! aarch64, so no feature detection is needed — the dispatcher installs
+//! this table unconditionally (unless `SFW_FORCE_SCALAR=1`).
+//!
+//! Numerics policy mirrors the AVX2 backend (see `kernel/scalar.rs`):
+//! * `dot_f32` / `dot_f32_x4`: unfused `vmulq`+`vaddq` with the scalar
+//!   16-lane layout (lanes 0–3 = acc0, … 12–15 = acc3; `t[j] = s[j]+s[j+8]`
+//!   ⇒ `t0..4 = acc0+acc2`, `t4..8 = acc1+acc3`) and the fixed reduction
+//!   tree ⇒ bit-identical to scalar.
+//! * f64 kernels use `vfmaq_f64` (fused) ⇒ tight tolerance vs scalar.
+//! * `gather_dot` stays scalar: aarch64 has no gather instruction and the
+//!   ~30 nnz/col sparse dots are latency-bound loads either way.
+
+#![allow(unsafe_code)]
+
+use core::arch::aarch64::*;
+
+#[inline]
+unsafe fn hsum_f64(acc0: float64x2_t, acc1: float64x2_t) -> f64 {
+    let s = vaddq_f64(acc0, acc1);
+    vgetq_lane_f64::<0>(s) + vgetq_lane_f64::<1>(s)
+}
+
+unsafe fn dot_impl(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 4;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = vdupq_n_f64(0.0);
+    let mut acc1 = vdupq_n_f64(0.0);
+    for i in 0..chunks {
+        let k = i * 4;
+        acc0 = vfmaq_f64(acc0, vld1q_f64(ap.add(k)), vld1q_f64(bp.add(k)));
+        acc1 = vfmaq_f64(acc1, vld1q_f64(ap.add(k + 2)), vld1q_f64(bp.add(k + 2)));
+    }
+    let mut s = hsum_f64(acc0, acc1);
+    for k in chunks * 4..n {
+        s += *ap.add(k) * *bp.add(k);
+    }
+    s
+}
+
+unsafe fn dot_f32_f64_impl(col: &[f32], v: &[f64]) -> f64 {
+    let n = col.len();
+    let chunks = n / 4;
+    let (cp, vp) = (col.as_ptr(), v.as_ptr());
+    let mut acc0 = vdupq_n_f64(0.0);
+    let mut acc1 = vdupq_n_f64(0.0);
+    for i in 0..chunks {
+        let k = i * 4;
+        let c = vld1q_f32(cp.add(k));
+        let lo = vcvt_f64_f32(vget_low_f32(c));
+        let hi = vcvt_f64_f32(vget_high_f32(c));
+        acc0 = vfmaq_f64(acc0, lo, vld1q_f64(vp.add(k)));
+        acc1 = vfmaq_f64(acc1, hi, vld1q_f64(vp.add(k + 2)));
+    }
+    let mut s = hsum_f64(acc0, acc1);
+    for k in chunks * 4..n {
+        s += *cp.add(k) as f64 * *vp.add(k);
+    }
+    s
+}
+
+/// Reduce four 4-lane f32 accumulators with the scalar tree, then add the
+/// sequential tail.
+#[inline]
+unsafe fn reduce_f32_quad(
+    acc: [float32x4_t; 4],
+    a: &[f32],
+    b: &[f32],
+    done: usize,
+) -> f32 {
+    // t[0..4] = s[j] + s[j+8] for j in 0..4; t[4..8] for j in 4..8
+    let t0 = vaddq_f32(acc[0], acc[2]);
+    let t1 = vaddq_f32(acc[1], acc[3]);
+    let mut l0 = [0.0f32; 4];
+    let mut l1 = [0.0f32; 4];
+    vst1q_f32(l0.as_mut_ptr(), t0);
+    vst1q_f32(l1.as_mut_ptr(), t1);
+    let mut acc = ((l0[0] + l0[1]) + (l0[2] + l0[3])) + ((l1[0] + l1[1]) + (l1[2] + l1[3]));
+    for k in done..a.len() {
+        acc += *a.get_unchecked(k) * *b.get_unchecked(k);
+    }
+    acc
+}
+
+unsafe fn dot_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 16;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc = [vdupq_n_f32(0.0); 4];
+    for i in 0..chunks {
+        let k = i * 16;
+        for (j, av) in acc.iter_mut().enumerate() {
+            let o = k + j * 4;
+            // unfused on purpose: bit parity with the scalar lane contract
+            *av = vaddq_f32(*av, vmulq_f32(vld1q_f32(ap.add(o)), vld1q_f32(bp.add(o))));
+        }
+    }
+    reduce_f32_quad(acc, a, b, chunks * 16)
+}
+
+unsafe fn dot_f32_x4_impl(cols: [&[f32]; 4], v: &[f32]) -> [f32; 4] {
+    let n = v.len();
+    let chunks = n / 16;
+    let vp = v.as_ptr();
+    let cp = [
+        cols[0].as_ptr(),
+        cols[1].as_ptr(),
+        cols[2].as_ptr(),
+        cols[3].as_ptr(),
+    ];
+    let mut acc = [[vdupq_n_f32(0.0); 4]; 4];
+    for i in 0..chunks {
+        let k = i * 16;
+        for j in 0..4 {
+            let o = k + j * 4;
+            // v loaded once per 4 lanes, reused by all 4 columns
+            let vv = vld1q_f32(vp.add(o));
+            for c in 0..4 {
+                acc[c][j] = vaddq_f32(acc[c][j], vmulq_f32(vld1q_f32(cp[c].add(o)), vv));
+            }
+        }
+    }
+    let mut out = [0.0f32; 4];
+    for c in 0..4 {
+        out[c] = reduce_f32_quad(acc[c], cols[c], v, chunks * 16);
+    }
+    out
+}
+
+unsafe fn axpy_f32_impl(a: f64, col: &[f32], out: &mut [f64]) {
+    let n = col.len();
+    let chunks = n / 4;
+    let cp = col.as_ptr();
+    let op = out.as_mut_ptr();
+    let av = vdupq_n_f64(a);
+    for i in 0..chunks {
+        let k = i * 4;
+        let c = vld1q_f32(cp.add(k));
+        let lo = vcvt_f64_f32(vget_low_f32(c));
+        let hi = vcvt_f64_f32(vget_high_f32(c));
+        vst1q_f64(op.add(k), vfmaq_f64(vld1q_f64(op.add(k)), av, lo));
+        vst1q_f64(op.add(k + 2), vfmaq_f64(vld1q_f64(op.add(k + 2)), av, hi));
+    }
+    for k in chunks * 4..n {
+        *op.add(k) += a * *cp.add(k) as f64;
+    }
+}
+
+// ---- safe wrappers
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_impl(a, b) }
+}
+
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_f32_impl(a, b) }
+}
+
+fn dot_f32_x4(cols: [&[f32]; 4], v: &[f32]) -> [f32; 4] {
+    debug_assert!(cols.iter().all(|c| c.len() == v.len()));
+    unsafe { dot_f32_x4_impl(cols, v) }
+}
+
+fn dot_f32_f64(col: &[f32], v: &[f64]) -> f64 {
+    debug_assert_eq!(col.len(), v.len());
+    unsafe { dot_f32_f64_impl(col, v) }
+}
+
+fn axpy_f32(a: f64, col: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(col.len(), out.len());
+    unsafe { axpy_f32_impl(a, col, out) }
+}
+
+/// The NEON kernel table.
+pub static OPS: super::KernelOps = super::KernelOps {
+    name: "neon",
+    simd: true,
+    dot,
+    dot_f32,
+    dot_f32_x4,
+    dot_f32_f64,
+    axpy_f32,
+    gather_dot: super::scalar::gather_dot,
+};

@@ -1,0 +1,167 @@
+//! Portable scalar kernels — the reference semantics of the engine.
+//!
+//! Every SIMD backend is specified *against this file*: the f32 scan
+//! kernels ([`dot_f32`], [`dot_f32_x4`]) fix a 16-lane accumulation layout
+//! and a fixed reduction tree that AVX2 and NEON reproduce exactly, so the
+//! dispatched f32 scan is **bit-identical** to the scalar fallback on every
+//! input (property-tested in `rust/tests/prop_kernels.rs`). The f64
+//! kernels use FMA on SIMD targets (one rounding instead of two), so they
+//! agree with the scalar versions to a tight tolerance rather than
+//! bit-for-bit — the accuracy only goes *up*.
+//!
+//! The unrolled accumulator style (4 f64 / 16 f32 independent partial
+//! sums) is what lets LLVM auto-vectorize these loops on targets where the
+//! explicit backends don't apply; it is the same code the crate used
+//! before the engine existed, widened from 8 to 16 f32 lanes so the lane
+//! layout matches a two-register AVX2 accumulation.
+
+/// f64·f64 dot product with 4 independent accumulators.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += a[k] * b[k];
+        s1 += a[k + 1] * b[k + 1];
+        s2 += a[k + 2] * b[k + 2];
+        s3 += a[k + 3] * b[k + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in chunks * 4..n {
+        s += a[k] * b[k];
+    }
+    s
+}
+
+/// f32 column · f64 vector with f64 accumulation (4 accumulators).
+pub fn dot_f32_f64(col: &[f32], v: &[f64]) -> f64 {
+    debug_assert_eq!(col.len(), v.len());
+    let n = col.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += col[k] as f64 * v[k];
+        s1 += col[k + 1] as f64 * v[k + 1];
+        s2 += col[k + 2] as f64 * v[k + 2];
+        s3 += col[k + 3] as f64 * v[k + 3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in chunks * 4..n {
+        s += col[k] as f64 * v[k];
+    }
+    s
+}
+
+/// f32·f32 dot product, f32 accumulation, 16 lanes.
+///
+/// Lane-layout contract (shared bit-for-bit by AVX2 and NEON):
+/// `s[j] = Σ_i a[16i+j]·b[16i+j]` for `j ∈ 0..16`, reduced as
+/// `t[j] = s[j] + s[j+8]`, then
+/// `((t0+t1)+(t2+t3)) + ((t4+t5)+(t6+t7))`, then the `n % 16` tail added
+/// sequentially. Multiplies and adds stay *unfused* on every backend so
+/// the rounding sequence is identical everywhere.
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 16;
+    let mut s = [0.0f32; 16];
+    for i in 0..chunks {
+        let k = i * 16;
+        for j in 0..16 {
+            s[j] += a[k + j] * b[k + j];
+        }
+    }
+    let mut t = [0.0f32; 8];
+    for j in 0..8 {
+        t[j] = s[j] + s[j + 8];
+    }
+    let mut acc = ((t[0] + t[1]) + (t[2] + t[3])) + ((t[4] + t[5]) + (t[6] + t[7]));
+    for k in chunks * 16..n {
+        acc += a[k] * b[k];
+    }
+    acc
+}
+
+/// Four simultaneous [`dot_f32`] products against a shared right-hand side
+/// — the register-blocked micro-kernel of the tall-skinny scan (`v` is
+/// loaded once per 4 columns). Each output lane is **bit-identical** to
+/// `dot_f32(cols[i], v)`, so the blocked scan may group columns freely
+/// (and the parallel backend may split a group across shards) without
+/// changing any per-column value.
+pub fn dot_f32_x4(cols: [&[f32]; 4], v: &[f32]) -> [f32; 4] {
+    [
+        dot_f32(cols[0], v),
+        dot_f32(cols[1], v),
+        dot_f32(cols[2], v),
+        dot_f32(cols[3], v),
+    ]
+}
+
+/// out += a · col (f32 column into an f64 vector).
+pub fn axpy_f32(a: f64, col: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(col.len(), out.len());
+    for (o, &c) in out.iter_mut().zip(col.iter()) {
+        *o += a * c as f64;
+    }
+}
+
+/// Sparse gather-dot `Σ vals[k]·v[rows[k]]` with a single sequential
+/// accumulator — exactly the historical `CscMatrix::col_dot` semantics
+/// (sparse accumulation order is part of the crate's determinism story;
+/// see `parallel::ParallelBackend`).
+///
+/// # Safety contract
+/// `rows` must index inside `v` (CSC validity); checked in debug builds.
+pub fn gather_dot(rows: &[u32], vals: &[f32], v: &[f64]) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    let mut s = 0.0;
+    for (&r, &x) in rows.iter().zip(vals.iter()) {
+        debug_assert!((r as usize) < v.len());
+        s += x as f64 * unsafe { *v.get_unchecked(r as usize) };
+    }
+    s
+}
+
+/// The scalar kernel table (portable fallback and `SFW_FORCE_SCALAR=1`).
+pub static OPS: super::KernelOps = super::KernelOps {
+    name: "scalar",
+    simd: false,
+    dot,
+    dot_f32,
+    dot_f32_x4,
+    dot_f32_f64,
+    axpy_f32,
+    gather_dot,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn x4_lanes_equal_single_kernel_bitwise() {
+        let v: Vec<f32> = (0..67).map(|i| (i as f32 * 0.37).sin()).collect();
+        let cols: Vec<Vec<f32>> = (0..4)
+            .map(|c| (0..67).map(|i| ((i + c * 13) as f32 * 0.21).cos()).collect())
+            .collect();
+        let r = dot_f32_x4(
+            [&cols[0][..], &cols[1][..], &cols[2][..], &cols[3][..]],
+            &v,
+        );
+        for c in 0..4 {
+            assert_eq!(r[c].to_bits(), dot_f32(&cols[c], &v).to_bits(), "lane {c}");
+        }
+    }
+
+    #[test]
+    fn gather_dot_matches_dense_expansion() {
+        let rows = [1u32, 3, 4];
+        let vals = [2.0f32, -1.0, 0.5];
+        let v = [10.0f64, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(gather_dot(&rows, &vals, &v), 2.0 * 20.0 - 40.0 + 0.5 * 50.0);
+        assert_eq!(gather_dot(&[], &[], &v), 0.0);
+    }
+}

@@ -1,0 +1,377 @@
+//! Cache-blocked multi-column scans — the macro-kernel of the vertex
+//! search and of every "dot every (surviving) column against one vector"
+//! pass (deterministic FW sweep, screening passes, `tr_matvec`,
+//! `ColumnCache::build`).
+//!
+//! The per-column scan streams the full vector `v` once per column; for
+//! κ sampled columns that is κ·m·8 bytes of `v` traffic on top of the
+//! irreducible column traffic. Tiling `v` into [`ROW_TILE`]-row blocks and
+//! scanning *all* κ columns per tile keeps the active `v` slice resident
+//! in L1/L2 across the whole group — `v` is read from memory once per
+//! scan, roughly halving the bandwidth demand of the dense f32 scan and
+//! removing the latency-bound re-walk of `v` in the sparse one. Dense
+//! tiles additionally go through the register-blocked `dot_f32_x4`
+//! micro-kernel (4 columns share each `v` load).
+//!
+//! ## Determinism
+//!
+//! Per-column results are **independent of grouping and sharding**: the
+//! x4 micro-kernel is lane-wise bit-identical to the single-column kernel,
+//! tile boundaries depend only on `m`, and tile partials accumulate in
+//! tile order. Hence `parallel::ParallelBackend` may split a sample
+//! across shards at any position and still reproduce
+//! `solvers::sfw::NativeBackend` bit-for-bit. With `m ≤ ROW_TILE`
+//! (every unit-test-sized problem) the blocked scan degenerates to the
+//! plain per-column kernel call.
+
+use super::{KernelOps, KernelScratch, ROW_TILE};
+use crate::linalg::dense::DenseMatrix;
+use crate::linalg::sparse::CscMatrix;
+
+/// Column selector for a multi-column scan: the identity (all `p`
+/// columns, e.g. `tr_matvec`) or an explicit index set (κ-sample,
+/// screening survivors) — without materializing the identity.
+#[derive(Clone, Copy)]
+pub enum Cols<'a> {
+    /// all columns `0..p`
+    All(usize),
+    /// an explicit list of column indices
+    Idx(&'a [usize]),
+}
+
+impl Cols<'_> {
+    /// Number of selected columns.
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            Cols::All(p) => *p,
+            Cols::Idx(s) => s.len(),
+        }
+    }
+
+    /// Whether the selection is empty.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The k-th selected column index.
+    #[inline]
+    pub fn get(&self, k: usize) -> usize {
+        match self {
+            Cols::All(_) => k,
+            Cols::Idx(s) => s[k],
+        }
+    }
+}
+
+#[inline]
+fn tiles(m: usize) -> impl Iterator<Item = (usize, usize)> {
+    (0..m).step_by(ROW_TILE).map(move |lo| (lo, (lo + ROW_TILE).min(m)))
+}
+
+/// Dense multi-dot: `out[k] = colsₖ · v` (f64 accumulation), row-tiled.
+/// Explicit-ops variant for benchmarking; solvers use [`multi_dot_dense`].
+pub fn multi_dot_dense_with(
+    kops: &KernelOps,
+    x: &DenseMatrix,
+    cols: Cols<'_>,
+    v: &[f64],
+    out: &mut [f64],
+) {
+    let (m, n) = (x.rows(), cols.len());
+    debug_assert_eq!(v.len(), m);
+    debug_assert_eq!(out.len(), n);
+    if m <= ROW_TILE {
+        for (k, o) in out.iter_mut().enumerate() {
+            *o = (kops.dot_f32_f64)(x.col(cols.get(k)), v);
+        }
+        return;
+    }
+    out.fill(0.0);
+    for (lo, hi) in tiles(m) {
+        let vt = &v[lo..hi];
+        for (k, o) in out.iter_mut().enumerate() {
+            *o += (kops.dot_f32_f64)(&x.col(cols.get(k))[lo..hi], vt);
+        }
+    }
+}
+
+/// [`multi_dot_dense_with`] on the active dispatch table.
+pub fn multi_dot_dense(x: &DenseMatrix, cols: Cols<'_>, v: &[f64], out: &mut [f64]) {
+    multi_dot_dense_with(super::ops(), x, cols, v, out)
+}
+
+/// Sparse multi-dot: `out[k] = colsₖ · v`, row-tiled with per-column nnz
+/// cursors. The tile walk visits columns in ascending column-index order
+/// (`scratch.order`) for `col_ptr` locality; results are independent of
+/// that order (each column only touches its own cursor/accumulator).
+pub fn multi_dot_sparse_with(
+    kops: &KernelOps,
+    x: &CscMatrix,
+    cols: Cols<'_>,
+    v: &[f64],
+    out: &mut [f64],
+    scratch: &mut KernelScratch,
+) {
+    let (m, n) = (x.rows(), cols.len());
+    debug_assert_eq!(v.len(), m);
+    debug_assert_eq!(out.len(), n);
+    if m <= ROW_TILE {
+        for (k, o) in out.iter_mut().enumerate() {
+            let (rows, vals) = x.col(cols.get(k));
+            *o = (kops.gather_dot)(rows, vals, v);
+        }
+        return;
+    }
+    debug_assert!(n <= u32::MAX as usize);
+    out.fill(0.0);
+    scratch.cursors.clear();
+    scratch.cursors.resize(n, 0);
+    let mut order = std::mem::take(&mut scratch.order);
+    order.clear();
+    order.extend(0..n as u32);
+    if let Cols::Idx(idx) = cols {
+        order.sort_unstable_by_key(|&k| idx[k as usize]);
+    }
+    for (_lo, hi) in tiles(m) {
+        for &k32 in &order {
+            let k = k32 as usize;
+            let (rows, vals) = x.col(cols.get(k));
+            let cur = scratch.cursors[k];
+            if cur >= rows.len() {
+                continue;
+            }
+            // rows are sorted within a column: binary-search the tile end
+            let seg = rows[cur..].partition_point(|&r| (r as usize) < hi);
+            if seg > 0 {
+                out[k] += (kops.gather_dot)(&rows[cur..cur + seg], &vals[cur..cur + seg], v);
+                scratch.cursors[k] = cur + seg;
+            }
+        }
+    }
+    scratch.order = order;
+}
+
+/// [`multi_dot_sparse_with`] on the active dispatch table.
+pub fn multi_dot_sparse(
+    x: &CscMatrix,
+    cols: Cols<'_>,
+    v: &[f64],
+    out: &mut [f64],
+    scratch: &mut KernelScratch,
+) {
+    multi_dot_sparse_with(super::ops(), x, cols, v, out, scratch)
+}
+
+/// Blocked f32 |∇ᵢ|-argmax scan over sampled dense columns — the §Perf
+/// fast path of the stochastic vertex search. Computes
+/// `gₖ = −σ[colsₖ] + colsₖ · qf` for every sampled column (row-tiled,
+/// register-blocked 4 columns at a time) and returns
+/// `(position of the first maximum |gₖ|, that gₖ)`. The winner's gradient
+/// is re-evaluated in f64 by the caller, so solver numerics are
+/// unaffected by the f32 accumulation.
+pub fn scan_abs_argmax_f32_with(
+    kops: &KernelOps,
+    x: &DenseMatrix,
+    cols: &[usize],
+    qf: &[f32],
+    sigma: &[f64],
+    scratch: &mut KernelScratch,
+) -> (usize, f32) {
+    debug_assert!(!cols.is_empty());
+    let (m, n) = (x.rows(), cols.len());
+    debug_assert_eq!(qf.len(), m);
+    let accf = &mut scratch.accf;
+    accf.clear();
+    accf.resize(n, 0.0);
+    for (lo, hi) in tiles(m) {
+        let vt = &qf[lo..hi];
+        let mut k = 0;
+        while k + 4 <= n {
+            let r = (kops.dot_f32_x4)(
+                [
+                    &x.col(cols[k])[lo..hi],
+                    &x.col(cols[k + 1])[lo..hi],
+                    &x.col(cols[k + 2])[lo..hi],
+                    &x.col(cols[k + 3])[lo..hi],
+                ],
+                vt,
+            );
+            accf[k] += r[0];
+            accf[k + 1] += r[1];
+            accf[k + 2] += r[2];
+            accf[k + 3] += r[3];
+            k += 4;
+        }
+        while k < n {
+            accf[k] += (kops.dot_f32)(&x.col(cols[k])[lo..hi], vt);
+            k += 1;
+        }
+    }
+    let mut best_k = 0usize;
+    let mut best_g = 0.0f32;
+    let mut best_abs = -1.0f32;
+    for (k, &d) in accf.iter().enumerate() {
+        let g = -(sigma[cols[k]] as f32) + d;
+        let a = g.abs();
+        if a > best_abs {
+            best_abs = a;
+            best_g = g;
+            best_k = k;
+        }
+    }
+    (best_k, best_g)
+}
+
+/// [`scan_abs_argmax_f32_with`] on the active dispatch table.
+pub fn scan_abs_argmax_f32(
+    x: &DenseMatrix,
+    cols: &[usize],
+    qf: &[f32],
+    sigma: &[f64],
+    scratch: &mut KernelScratch,
+) -> (usize, f32) {
+    scan_abs_argmax_f32_with(super::ops(), x, cols, qf, sigma, scratch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kernel::scalar;
+    use crate::linalg::sparse::CscBuilder;
+    use crate::util::rng::Xoshiro256;
+
+    fn dense_case(m: usize, p: usize, seed: u64) -> (DenseMatrix, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+        let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        (x, v)
+    }
+
+    #[test]
+    fn dense_blocked_matches_per_column_across_tile_boundary() {
+        for m in [5usize, 100, ROW_TILE, ROW_TILE + 17, 2 * ROW_TILE + 3] {
+            let (x, v) = dense_case(m, 6, 42);
+            let cols = [0usize, 3, 5, 1];
+            let mut out = vec![0.0; cols.len()];
+            multi_dot_dense(&x, Cols::Idx(&cols), &v, &mut out);
+            for (k, &j) in cols.iter().enumerate() {
+                let naive = scalar::dot_f32_f64(x.col(j), &v);
+                let tol = 1e-9 * (1.0 + naive.abs());
+                assert!(
+                    (out[k] - naive).abs() < tol,
+                    "m={m} col {j}: {} vs {naive}",
+                    out[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dense_all_equals_idx_identity() {
+        let (x, v) = dense_case(300, 9, 7);
+        let idx: Vec<usize> = (0..9).collect();
+        let mut a = vec![0.0; 9];
+        let mut b = vec![0.0; 9];
+        multi_dot_dense(&x, Cols::All(9), &v, &mut a);
+        multi_dot_dense(&x, Cols::Idx(&idx), &v, &mut b);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sparse_blocked_matches_col_dot() {
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        for m in [50usize, ROW_TILE + 101] {
+            let p = 12;
+            let mut b = CscBuilder::new(m, p);
+            for j in 0..p {
+                for i in 0..m {
+                    if rng.next_f64() < 0.01 || (i + j) % 997 == 0 {
+                        b.push(i, j, rng.gaussian());
+                    }
+                }
+            }
+            let x = b.build();
+            let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            // unsorted sample with a duplicate-free scattered order
+            let cols = [7usize, 0, 11, 3, 2];
+            let mut out = vec![0.0; cols.len()];
+            let mut scratch = KernelScratch::new();
+            multi_dot_sparse(&x, Cols::Idx(&cols), &v, &mut out, &mut scratch);
+            for (k, &j) in cols.iter().enumerate() {
+                let naive = x.col_dot(j, &v);
+                let tol = 1e-10 * (1.0 + naive.abs());
+                assert!(
+                    (out[k] - naive).abs() < tol,
+                    "m={m} col {j}: {} vs {naive}",
+                    out[k]
+                );
+            }
+            // scratch reuse across calls gives identical results
+            let mut out2 = vec![0.0; cols.len()];
+            multi_dot_sparse(&x, Cols::Idx(&cols), &v, &mut out2, &mut scratch);
+            for (a, b) in out.iter().zip(out2.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_handles_empty_columns_and_empty_tiles() {
+        let mut b = CscBuilder::new(2 * ROW_TILE, 3);
+        b.push(0, 0, 1.0); // only in the first tile
+        b.push(2 * ROW_TILE - 1, 2, 3.0); // only in the last tile
+        let x = b.build();
+        let mut v = vec![0.0; 2 * ROW_TILE];
+        v[0] = 5.0;
+        v[2 * ROW_TILE - 1] = 7.0;
+        let cols = [0usize, 1, 2];
+        let mut out = vec![9.0; 3];
+        let mut scratch = KernelScratch::new();
+        multi_dot_sparse(&x, Cols::Idx(&cols), &v, &mut out, &mut scratch);
+        assert_eq!(out, vec![5.0, 0.0, 21.0]);
+    }
+
+    #[test]
+    fn f32_scan_matches_naive_and_is_grouping_independent() {
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        for (m, p) in [(64usize, 13usize), (ROW_TILE + 33, 9)] {
+            let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+            let qf: Vec<f32> = (0..m).map(|_| rng.gaussian() as f32).collect();
+            let sigma: Vec<f64> = (0..p).map(|_| rng.gaussian()).collect();
+            let cols: Vec<usize> = (0..p).rev().collect();
+            let mut scratch = KernelScratch::new();
+            let (k, g) = scan_abs_argmax_f32(&x, &cols, &qf, &sigma, &mut scratch);
+            // winner's |g| must be within f32 noise of the naive maximum
+            let mut naive_max = -1.0f64;
+            for &j in &cols {
+                let gj = -(sigma[j] as f32) + scalar::dot_f32(x.col(j), &qf);
+                naive_max = naive_max.max(gj.abs() as f64);
+            }
+            let tol = 1e-4 * (1.0 + naive_max);
+            assert!(
+                (g.abs() as f64 - naive_max).abs() < tol,
+                "m={m}: winner |g|={} vs naive max {naive_max}",
+                g.abs()
+            );
+            // splitting the sample at any point and taking the in-order
+            // first-max over the two halves reproduces the same winner
+            for split in [1usize, 3, cols.len() - 1] {
+                let (ka, ga) =
+                    scan_abs_argmax_f32(&x, &cols[..split], &qf, &sigma, &mut scratch);
+                let (kb, gb) =
+                    scan_abs_argmax_f32(&x, &cols[split..], &qf, &sigma, &mut scratch);
+                let (kk, gg) = if gb.abs() > ga.abs() {
+                    (split + kb, gb)
+                } else {
+                    (ka, ga)
+                };
+                assert_eq!(kk, k, "split={split}");
+                assert_eq!(gg.to_bits(), g.to_bits(), "split={split}");
+            }
+        }
+    }
+}

@@ -1,0 +1,231 @@
+//! AVX2+FMA kernels (`x86_64`), selected at runtime by
+//! [`super::ops`] when `is_x86_feature_detected!("avx2")` and `"fma"` both
+//! hold. Safe wrappers around `#[target_feature]` functions: the wrappers
+//! are sound because this table is only ever installed after detection
+//! succeeds (see the dispatch in `kernel/mod.rs`).
+//!
+//! Numerics policy (see `kernel/scalar.rs` for the contracts):
+//! * `dot_f32` / `dot_f32_x4` use *unfused* multiply+add with the scalar
+//!   16-lane layout and reduction tree ⇒ bit-identical to scalar.
+//! * f64 kernels (`dot`, `dot_f32_f64`, `axpy_f32`, `gather_dot`) use FMA
+//!   (one rounding per multiply-add, strictly more accurate) ⇒ tight
+//!   tolerance, not bit equality, versus scalar.
+
+#![allow(unsafe_code)]
+
+use core::arch::x86_64::*;
+
+#[inline]
+unsafe fn hsum_pd(x: __m256d) -> f64 {
+    // ((l0 + l1) + (l2 + l3)) — fixed tree, matching the 4-accumulator
+    // scalar reduce shape.
+    let mut l = [0.0f64; 4];
+    _mm256_storeu_pd(l.as_mut_ptr(), x);
+    (l[0] + l[1]) + (l[2] + l[3])
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_impl(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len();
+    let chunks = n / 8;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let k = i * 8;
+        acc0 = _mm256_fmadd_pd(_mm256_loadu_pd(ap.add(k)), _mm256_loadu_pd(bp.add(k)), acc0);
+        acc1 = _mm256_fmadd_pd(
+            _mm256_loadu_pd(ap.add(k + 4)),
+            _mm256_loadu_pd(bp.add(k + 4)),
+            acc1,
+        );
+    }
+    let mut s = hsum_pd(_mm256_add_pd(acc0, acc1));
+    for k in chunks * 8..n {
+        s += *ap.add(k) * *bp.add(k);
+    }
+    s
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_f32_f64_impl(col: &[f32], v: &[f64]) -> f64 {
+    let n = col.len();
+    let chunks = n / 8;
+    let (cp, vp) = (col.as_ptr(), v.as_ptr());
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let k = i * 8;
+        let c = _mm256_loadu_ps(cp.add(k));
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(c));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(c));
+        acc0 = _mm256_fmadd_pd(lo, _mm256_loadu_pd(vp.add(k)), acc0);
+        acc1 = _mm256_fmadd_pd(hi, _mm256_loadu_pd(vp.add(k + 4)), acc1);
+    }
+    let mut s = hsum_pd(_mm256_add_pd(acc0, acc1));
+    for k in chunks * 8..n {
+        s += *cp.add(k) as f64 * *vp.add(k);
+    }
+    s
+}
+
+/// Shared tail + reduce for the f32 kernels: reproduces the scalar
+/// `t[j] = s[j] + s[j+8]` pairing and the fixed tree exactly.
+#[inline]
+unsafe fn reduce_f32_pair(acc0: __m256, acc1: __m256, a: &[f32], b: &[f32], done: usize) -> f32 {
+    let t = _mm256_add_ps(acc0, acc1);
+    let mut l = [0.0f32; 8];
+    _mm256_storeu_ps(l.as_mut_ptr(), t);
+    let mut acc = ((l[0] + l[1]) + (l[2] + l[3])) + ((l[4] + l[5]) + (l[6] + l[7]));
+    for k in done..a.len() {
+        acc += *a.get_unchecked(k) * *b.get_unchecked(k);
+    }
+    acc
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_f32_impl(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len();
+    let chunks = n / 16;
+    let (ap, bp) = (a.as_ptr(), b.as_ptr());
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    for i in 0..chunks {
+        let k = i * 16;
+        // unfused on purpose: bit parity with the scalar lane contract
+        acc0 = _mm256_add_ps(
+            acc0,
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(k)), _mm256_loadu_ps(bp.add(k))),
+        );
+        acc1 = _mm256_add_ps(
+            acc1,
+            _mm256_mul_ps(_mm256_loadu_ps(ap.add(k + 8)), _mm256_loadu_ps(bp.add(k + 8))),
+        );
+    }
+    reduce_f32_pair(acc0, acc1, a, b, chunks * 16)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_f32_x4_impl(cols: [&[f32]; 4], v: &[f32]) -> [f32; 4] {
+    let n = v.len();
+    let chunks = n / 16;
+    let vp = v.as_ptr();
+    let cp = [
+        cols[0].as_ptr(),
+        cols[1].as_ptr(),
+        cols[2].as_ptr(),
+        cols[3].as_ptr(),
+    ];
+    let mut acc0 = [_mm256_setzero_ps(); 4];
+    let mut acc1 = [_mm256_setzero_ps(); 4];
+    for i in 0..chunks {
+        let k = i * 16;
+        // v loaded once per 16 elements, reused by all 4 columns
+        let v0 = _mm256_loadu_ps(vp.add(k));
+        let v1 = _mm256_loadu_ps(vp.add(k + 8));
+        for c in 0..4 {
+            acc0[c] = _mm256_add_ps(acc0[c], _mm256_mul_ps(_mm256_loadu_ps(cp[c].add(k)), v0));
+            acc1[c] =
+                _mm256_add_ps(acc1[c], _mm256_mul_ps(_mm256_loadu_ps(cp[c].add(k + 8)), v1));
+        }
+    }
+    let mut out = [0.0f32; 4];
+    for c in 0..4 {
+        out[c] = reduce_f32_pair(acc0[c], acc1[c], cols[c], v, chunks * 16);
+    }
+    out
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_f32_impl(a: f64, col: &[f32], out: &mut [f64]) {
+    let n = col.len();
+    let chunks = n / 8;
+    let cp = col.as_ptr();
+    let op = out.as_mut_ptr();
+    let av = _mm256_set1_pd(a);
+    for i in 0..chunks {
+        let k = i * 8;
+        let c = _mm256_loadu_ps(cp.add(k));
+        let lo = _mm256_cvtps_pd(_mm256_castps256_ps128(c));
+        let hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(c));
+        let o0 = _mm256_fmadd_pd(av, lo, _mm256_loadu_pd(op.add(k)));
+        let o1 = _mm256_fmadd_pd(av, hi, _mm256_loadu_pd(op.add(k + 4)));
+        _mm256_storeu_pd(op.add(k), o0);
+        _mm256_storeu_pd(op.add(k + 4), o1);
+    }
+    for k in chunks * 8..n {
+        *op.add(k) += a * *cp.add(k) as f64;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gather_dot_impl(rows: &[u32], vals: &[f32], v: &[f64]) -> f64 {
+    let n = rows.len();
+    let chunks = n / 4;
+    let (rp, xp) = (rows.as_ptr(), vals.as_ptr());
+    let mut acc = _mm256_setzero_pd();
+    for i in 0..chunks {
+        let k = i * 4;
+        // u32 row indices < v.len() ≤ i32::MAX (checked by the wrapper),
+        // so the i32 reinterpretation is value-preserving.
+        let idx = _mm_loadu_si128(rp.add(k) as *const __m128i);
+        let g = _mm256_i32gather_pd::<8>(v.as_ptr(), idx);
+        let x = _mm256_cvtps_pd(_mm_loadu_ps(xp.add(k)));
+        acc = _mm256_fmadd_pd(x, g, acc);
+    }
+    let mut s = hsum_pd(acc);
+    for k in chunks * 4..n {
+        s += *xp.add(k) as f64 * *v.get_unchecked(*rp.add(k) as usize);
+    }
+    s
+}
+
+// ---- safe wrappers (sound: this table is installed only after feature
+// ---- detection succeeds)
+
+fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_impl(a, b) }
+}
+
+fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    unsafe { dot_f32_impl(a, b) }
+}
+
+fn dot_f32_x4(cols: [&[f32]; 4], v: &[f32]) -> [f32; 4] {
+    debug_assert!(cols.iter().all(|c| c.len() == v.len()));
+    unsafe { dot_f32_x4_impl(cols, v) }
+}
+
+fn dot_f32_f64(col: &[f32], v: &[f64]) -> f64 {
+    debug_assert_eq!(col.len(), v.len());
+    unsafe { dot_f32_f64_impl(col, v) }
+}
+
+fn axpy_f32(a: f64, col: &[f32], out: &mut [f64]) {
+    debug_assert_eq!(col.len(), out.len());
+    unsafe { axpy_f32_impl(a, col, out) }
+}
+
+fn gather_dot(rows: &[u32], vals: &[f32], v: &[f64]) -> f64 {
+    debug_assert_eq!(rows.len(), vals.len());
+    if v.len() > i32::MAX as usize {
+        // vpgatherdq sign-extends 32-bit indices; beyond 2³¹ rows fall
+        // back to the scalar gather (no dataset in this crate gets close).
+        return super::scalar::gather_dot(rows, vals, v);
+    }
+    unsafe { gather_dot_impl(rows, vals, v) }
+}
+
+/// The AVX2+FMA kernel table.
+pub static OPS: super::KernelOps = super::KernelOps {
+    name: "avx2+fma",
+    simd: true,
+    dot,
+    dot_f32,
+    dot_f32_x4,
+    dot_f32_f64,
+    axpy_f32,
+    gather_dot,
+};

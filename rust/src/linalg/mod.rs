@@ -3,11 +3,13 @@
 
 pub mod dense;
 pub mod design;
+pub mod kernel;
 pub mod ops;
 pub mod sparse;
 pub mod standardize;
 
 pub use dense::DenseMatrix;
 pub use design::{ColumnCache, Design, Storage};
+pub use kernel::{KernelOps, KernelScratch};
 pub use sparse::{CscBuilder, CscMatrix};
 pub use standardize::{standardize, Standardization};

@@ -4,81 +4,43 @@
 //! problems and doubles SIMD width); *all accumulations are f64* so solver
 //! numerics stay comparable to a pure-f64 implementation. Model vectors
 //! (coefficients, residuals, responses) are `f64`.
+//!
+//! The hot kernels (`dot`, `dot_f32`, `dot_f32_f64`, `axpy_f32`) delegate
+//! to the runtime-dispatched SIMD engine in [`super::kernel`] — existing
+//! callers pick up AVX2/NEON automatically through this module. The
+//! portable reference implementations live in `kernel/scalar.rs`
+//! (`SFW_FORCE_SCALAR=1` pins them at runtime).
 
-/// f64·f64 dot product with 4-way unrolled f64 accumulators (helps LLVM
-/// vectorize without `-ffast-math`-style reassociation).
+use super::kernel;
+
+/// f64·f64 dot product (dispatched; see [`kernel::scalar::dot`] for the
+/// reference semantics).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let k = i * 4;
-        s0 += a[k] * b[k];
-        s1 += a[k + 1] * b[k + 1];
-        s2 += a[k + 2] * b[k + 2];
-        s3 += a[k + 3] * b[k + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for k in chunks * 4..n {
-        s += a[k] * b[k];
-    }
-    s
+    (kernel::ops().dot)(a, b)
 }
 
-/// f32 column · f64 vector, f64 accumulation. This is the innermost kernel
-/// of the dense gradient search.
+/// f32 column · f64 vector, f64 accumulation — the innermost kernel of
+/// the dense gradient search (dispatched).
 #[inline]
 pub fn dot_f32_f64(col: &[f32], v: &[f64]) -> f64 {
-    debug_assert_eq!(col.len(), v.len());
-    let n = col.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let k = i * 4;
-        s0 += col[k] as f64 * v[k];
-        s1 += col[k + 1] as f64 * v[k + 1];
-        s2 += col[k + 2] as f64 * v[k + 2];
-        s3 += col[k + 3] as f64 * v[k + 3];
-    }
-    let mut s = (s0 + s1) + (s2 + s3);
-    for k in chunks * 4..n {
-        s += col[k] as f64 * v[k];
-    }
-    s
+    (kernel::ops().dot_f32_f64)(col, v)
 }
 
-/// f32·f32 dot product, f32 accumulation, 8-way unrolled — the widest-SIMD
-/// scan used by the dense vertex-search fast path (§Perf): the argmax scan
-/// runs in f32 (2× SIMD width vs the f64 path) and the winner's gradient is
-/// re-evaluated in f64, so solver numerics are unaffected.
+/// f32·f32 dot product, f32 accumulation — the widest-SIMD scan used by
+/// the dense vertex-search fast path (§Perf): the argmax scan runs in f32
+/// (2× SIMD width vs the f64 path) and the winner's gradient is
+/// re-evaluated in f64, so solver numerics are unaffected. Dispatched;
+/// bit-identical across backends (fixed lane order, see `kernel`).
 #[inline]
 pub fn dot_f32(col: &[f32], v: &[f32]) -> f32 {
-    debug_assert_eq!(col.len(), v.len());
-    let n = col.len();
-    let chunks = n / 8;
-    let mut s = [0.0f32; 8];
-    for i in 0..chunks {
-        let k = i * 8;
-        for j in 0..8 {
-            s[j] += col[k + j] * v[k + j];
-        }
-    }
-    let mut acc = (s[0] + s[1]) + (s[2] + s[3]) + ((s[4] + s[5]) + (s[6] + s[7]));
-    for k in chunks * 8..n {
-        acc += col[k] * v[k];
-    }
-    acc
+    (kernel::ops().dot_f32)(col, v)
 }
 
-/// out += a * col (f32 column into f64 vector).
+/// out += a * col (f32 column into f64 vector; dispatched).
 #[inline]
 pub fn axpy_f32(a: f64, col: &[f32], out: &mut [f64]) {
-    debug_assert_eq!(col.len(), out.len());
-    for (o, &c) in out.iter_mut().zip(col.iter()) {
-        *o += a * c as f64;
-    }
+    (kernel::ops().axpy_f32)(a, col, out)
 }
 
 /// out += a * v.

@@ -38,14 +38,29 @@ impl CscBuilder {
     }
 
     /// Compress to CSC. Duplicate (row, col) entries are summed.
-    pub fn build(mut self) -> CscMatrix {
-        self.triplets
-            .sort_unstable_by_key(|&(r, c, _)| ((c as u64) << 32) | r as u64);
-        let mut col_ptr = vec![0usize; self.cols + 1];
-        let mut row_idx: Vec<u32> = Vec::with_capacity(self.triplets.len());
-        let mut vals: Vec<f32> = Vec::with_capacity(self.triplets.len());
+    pub fn build(self) -> CscMatrix {
+        CscMatrix::from_triplets(self.rows, self.cols, self.triplets)
+    }
+}
+
+impl CscMatrix {
+    /// Compress a raw `(row, col, val)` triplet list (any order) into CSC,
+    /// consuming the list in place — the allocation-lean entry point used
+    /// by the byte-slice LIBSVM parser, where triplets are 12 bytes each
+    /// instead of the 24-byte `(usize, usize, f64)` tuples a naive parser
+    /// accumulates. Duplicate `(row, col)` entries are summed; callers
+    /// filter explicit zeros (as [`CscBuilder::push`] does).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        mut triplets: Vec<(u32, u32, f32)>,
+    ) -> CscMatrix {
+        triplets.sort_unstable_by_key(|&(r, c, _)| ((c as u64) << 32) | r as u64);
+        let mut col_ptr = vec![0usize; cols + 1];
+        let mut row_idx: Vec<u32> = Vec::with_capacity(triplets.len());
+        let mut vals: Vec<f32> = Vec::with_capacity(triplets.len());
         let mut last: Option<(u32, u32)> = None;
-        for &(r, c, v) in &self.triplets {
+        for &(r, c, v) in &triplets {
             if last == Some((r, c)) {
                 *vals.last_mut().unwrap() += v; // merge duplicate
             } else {
@@ -56,14 +71,12 @@ impl CscBuilder {
             }
         }
         // prefix-sum per-column counts into offsets
-        for j in 0..self.cols {
+        for j in 0..cols {
             col_ptr[j + 1] += col_ptr[j];
         }
-        CscMatrix { rows: self.rows, cols: self.cols, col_ptr, row_idx, vals }
+        CscMatrix { rows, cols, col_ptr, row_idx, vals }
     }
-}
 
-impl CscMatrix {
     /// Build directly from parts (must be valid CSC: sorted rows per column).
     pub fn from_parts(
         rows: usize,
@@ -119,16 +132,14 @@ impl CscMatrix {
         (&self.row_idx[a..b], &self.vals[a..b])
     }
 
-    /// zⱼᵀ·v — the hot kernel of the sparse gradient search.
+    /// zⱼᵀ·v — the hot kernel of the sparse gradient search (dispatched
+    /// gather-dot; the scalar backend reproduces the historical sequential
+    /// accumulation exactly).
     #[inline]
     pub fn col_dot(&self, j: usize, v: &[f64]) -> f64 {
         debug_assert_eq!(v.len(), self.rows);
         let (rows, vals) = self.col(j);
-        let mut s = 0.0;
-        for (&r, &x) in rows.iter().zip(vals.iter()) {
-            s += x as f64 * unsafe { *v.get_unchecked(r as usize) };
-        }
-        s
+        (super::kernel::ops().gather_dot)(rows, vals, v)
     }
 
     /// out += a·zⱼ (sparse axpy).
@@ -148,7 +159,17 @@ impl CscMatrix {
     }
 
     /// Scale column j in place.
+    ///
+    /// Precision contract (pinned by `scale_col_round_trip_precision`
+    /// below): the f32 value is widened exactly, multiplied by `s` in f64
+    /// (one rounding), and rounded back to f32 **once** — never
+    /// `(v * s as f32)`, whose f32 product would round twice. Repeated
+    /// standardization therefore drifts by at most 1 ulp per pass, and a
+    /// scale/unscale round trip stays within 1 ulp of the original.
     pub fn scale_col(&mut self, j: usize, s: f64) {
+        if s == 1.0 {
+            return; // exact no-op (common after a re-standardization pass)
+        }
         let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
         for v in &mut self.vals[a..b] {
             *v = (*v as f64 * s) as f32;
@@ -167,13 +188,31 @@ impl CscMatrix {
         }
     }
 
-    /// out = Xᵀ·v (all columns).
+    /// out = Xᵀ·v (all columns), through the row-tiled multi-column
+    /// engine. Allocates cursor scratch for multi-tile problems; hot
+    /// loops pass a persistent arena via [`Self::tr_matvec_with`].
     pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
+        let mut scratch = super::kernel::KernelScratch::new();
+        self.tr_matvec_with(v, out, &mut scratch);
+    }
+
+    /// [`Self::tr_matvec`] with a caller-owned scratch arena
+    /// (allocation-free after warm-up).
+    pub fn tr_matvec_with(
+        &self,
+        v: &[f64],
+        out: &mut [f64],
+        scratch: &mut super::kernel::KernelScratch,
+    ) {
         assert_eq!(v.len(), self.rows);
         assert_eq!(out.len(), self.cols);
-        for (j, o) in out.iter_mut().enumerate() {
-            *o = self.col_dot(j, v);
-        }
+        super::kernel::scan::multi_dot_sparse(
+            self,
+            super::kernel::scan::Cols::All(self.cols),
+            v,
+            out,
+            scratch,
+        );
     }
 
     /// Densify column j into `out` (len = rows); used by the XLA backend's
@@ -298,6 +337,50 @@ mod tests {
         let x = b.build();
         assert_eq!(x.col_nnz(1), 0);
         assert_eq!(x.col_dot(1, &[1.0, 1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn scale_col_round_trip_precision() {
+        // Pin the single-rounding contract: scaling by s then 1/s must
+        // return every value to within 1 ulp (each step: exact f32→f64
+        // widen, one f64 multiply, one f64→f32 round).
+        let mut rng = Xoshiro256::seed_from_u64(123);
+        let mut b = CscBuilder::new(64, 1);
+        for i in 0..64 {
+            b.push(i, 0, rng.gaussian() * 1e3);
+        }
+        let mut x = b.build();
+        let before: Vec<f32> = x.col(0).1.to_vec();
+        let s = 1.0 / 3.7; // not representable: exercises both roundings
+        x.scale_col(0, s);
+        x.scale_col(0, 1.0 / s);
+        for (a, b) in x.col(0).1.iter().zip(before.iter()) {
+            let ulp = (b.abs() * f32::EPSILON).max(f32::MIN_POSITIVE);
+            assert!(
+                (a - b).abs() <= ulp,
+                "round trip drifted beyond 1 ulp: {a} vs {b}"
+            );
+        }
+        // s = 1 is an exact no-op (bitwise)
+        let snap: Vec<f32> = x.col(0).1.to_vec();
+        x.scale_col(0, 1.0);
+        assert_eq!(x.col(0).1, &snap[..]);
+    }
+
+    #[test]
+    fn from_triplets_matches_builder() {
+        let trips = vec![(2u32, 1u32, 5.0f32), (0, 0, 1.0), (1, 1, 3.0), (2, 0, 4.0)];
+        let x = CscMatrix::from_triplets(3, 2, trips);
+        let mut b = CscBuilder::new(3, 2);
+        b.push(2, 1, 5.0);
+        b.push(0, 0, 1.0);
+        b.push(1, 1, 3.0);
+        b.push(2, 0, 4.0);
+        let y = b.build();
+        assert_eq!(x.nnz(), y.nnz());
+        for j in 0..2 {
+            assert_eq!(x.col(j), y.col(j));
+        }
     }
 
     #[test]

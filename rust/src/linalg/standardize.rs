@@ -150,6 +150,38 @@ mod tests {
     }
 
     #[test]
+    fn repeated_standardization_does_not_drift() {
+        // scale_col rounds once per pass (f64 multiply, single f64→f32
+        // round), so re-standardizing an already-standardized design must
+        // leave norms within f32 epsilon of 1 and scales within f32
+        // epsilon of identity — pins the single-rounding contract at the
+        // standardize() level (the CscMatrix round-trip test pins it at
+        // the kernel level).
+        let mut b = CscBuilder::new(200, 4);
+        let mut v = 0.37f64;
+        for j in 0..4 {
+            for i in (j..200).step_by(3) {
+                v = (v * 1.3 + 0.11).fract() + 0.01;
+                b.push(i, j, v * 1e2);
+            }
+        }
+        let mut x = Design::sparse(b.build());
+        let mut y = vec![1.0; 200];
+        standardize(&mut x, &mut y);
+        let mut y2 = vec![0.0; 200];
+        let st2 = standardize(&mut x, &mut y2);
+        for j in 0..4 {
+            let n = x.col_norm_sq(j).sqrt();
+            assert!((n - 1.0).abs() < 32.0 * f32::EPSILON as f64, "col {j} norm {n}");
+            assert!(
+                (st2.col_scale[j] - 1.0).abs() < 32.0 * f32::EPSILON as f64,
+                "col {j} rescaled by {}",
+                st2.col_scale[j]
+            );
+        }
+    }
+
+    #[test]
     fn unstandardize_roundtrip_prediction() {
         // predictions in standardized space must equal predictions with the
         // unstandardized coefficients on the raw data

@@ -17,7 +17,8 @@
 //! state; a panicking task propagates to the caller, and results always
 //! come back in task order.
 
-use crate::linalg::Storage;
+use crate::linalg::kernel::scan::scan_abs_argmax_f32;
+use crate::linalg::{KernelScratch, Storage};
 use crate::solvers::linesearch::FwState;
 use crate::solvers::sfw::{FwBackend, NativeBackend};
 use crate::solvers::Problem;
@@ -106,6 +107,10 @@ pub struct ParallelBackend {
     /// serial fallback for sub-grain samples (owns its scratch so the hot
     /// LMO loop stays allocation-free across iterations)
     native: NativeBackend,
+    /// one kernel-engine arena per shard slot (`Mutex` only for `Sync`:
+    /// each shard index runs exactly once per vertex search, so the locks
+    /// are never contended)
+    shard_scratch: Vec<Mutex<KernelScratch>>,
 }
 
 impl ParallelBackend {
@@ -117,6 +122,7 @@ impl ParallelBackend {
             grain: DEFAULT_GRAIN,
             qf: Vec::new(),
             native: NativeBackend::new(),
+            shard_scratch: Vec::new(),
         }
     }
 
@@ -150,9 +156,17 @@ impl FwBackend for ParallelBackend {
             return self.native.select_vertex(prob, state, sample);
         }
         let shards = shard_bounds(sample.len(), n_shards);
+        if self.shard_scratch.len() < shards.len() {
+            self.shard_scratch
+                .resize_with(shards.len(), || Mutex::new(KernelScratch::new()));
+        }
+        let shard_scratch = &self.shard_scratch;
 
-        // Dense sub-sampled fast path (mirrors NativeBackend §Perf): f32
-        // scan, f64 re-evaluation of the winner.
+        // Dense sub-sampled fast path (mirrors NativeBackend §Perf): each
+        // shard runs the blocked f32 scan on its contiguous sub-sample;
+        // per-column values are grouping-independent (see kernel::scan),
+        // so the in-order first-max reduce is bit-identical to the serial
+        // scan. The winner is re-evaluated in f64.
         if sample.len() < prob.p() {
             if let Storage::Dense(xd) = prob.x.storage() {
                 self.qf.resize(prob.m(), 0.0);
@@ -161,18 +175,15 @@ impl FwBackend for ParallelBackend {
                 let partials: Vec<(f32, usize)> =
                     run_tasks(self.threads, shards.len(), |s| {
                         let (lo, hi) = shards[s];
-                        let mut best_abs = -1.0f32;
-                        let mut best_k = lo;
-                        for (k, &i) in sample[lo..hi].iter().enumerate() {
-                            let g = -(prob.cache.sigma[i] as f32)
-                                + crate::linalg::ops::dot_f32(xd.col(i), qf);
-                            let a = g.abs();
-                            if a > best_abs {
-                                best_abs = a;
-                                best_k = lo + k;
-                            }
-                        }
-                        (best_abs, best_k)
+                        let mut scratch = shard_scratch[s].lock().unwrap();
+                        let (k, g) = scan_abs_argmax_f32(
+                            xd,
+                            &sample[lo..hi],
+                            qf,
+                            &prob.cache.sigma,
+                            &mut scratch,
+                        );
+                        (g.abs(), lo + k)
                     });
                 let mut best_abs = -1.0f32;
                 let mut best_k = 0usize;
@@ -187,21 +198,28 @@ impl FwBackend for ParallelBackend {
             }
         }
 
-        // All-f64 scan (sparse designs and the κ = p deterministic sweep).
+        // All-f64 blocked scan (sparse designs, κ = p deterministic sweep):
+        // each shard computes its sub-sample's gradients through the same
+        // FwState::grad_multi path as NativeBackend.
         let partials: Vec<(f64, f64, usize)> = run_tasks(self.threads, shards.len(), |s| {
             let (lo, hi) = shards[s];
+            let mut guard = shard_scratch[s].lock().unwrap();
+            let scratch = &mut *guard;
+            let mut g = std::mem::take(&mut scratch.grad);
+            g.resize(hi - lo, 0.0);
+            state.grad_multi(prob, &sample[lo..hi], &mut g, scratch);
             let mut best_abs = -1.0f64;
             let mut best_g = 0.0f64;
             let mut best_k = lo;
-            for (k, &i) in sample[lo..hi].iter().enumerate() {
-                let g = state.grad_coord(prob, i);
-                let a = g.abs();
+            for (k, &gi) in g.iter().enumerate() {
+                let a = gi.abs();
                 if a > best_abs {
                     best_abs = a;
-                    best_g = g;
+                    best_g = gi;
                     best_k = lo + k;
                 }
             }
+            scratch.grad = g;
             (best_abs, best_g, best_k)
         });
         let mut best_abs = -1.0f64;

@@ -19,6 +19,13 @@
 //! [`crate::parallel`] worker pool (warm-start-respecting chunking: every
 //! block starts cold at its sparsest end, exactly like the head of a
 //! sequential path, and warm-starts within the block).
+//!
+//! Allocation discipline: each segment constructs its solver, screener
+//! and [`FwState`] **once** and reuses them across the block's grid
+//! points, so the kernel-engine scratch arenas they own
+//! ([`crate::linalg::KernelScratch`], DESIGN.md §9) are warmed at the
+//! first grid point and the steady-state sweep performs no per-iteration
+//! allocation.
 
 use super::grid::{delta_grid, lambda_grid, LogGrid};
 use super::metrics::{evaluate_point, PathPoint, PathResult};

@@ -66,7 +66,7 @@
 //! [`crate::solvers::Problem`] — the screener stores surviving *indices*,
 //! never copies of column data or caches.
 
-use crate::linalg::ops;
+use crate::linalg::{ops, KernelScratch};
 use crate::solvers::linesearch::FwState;
 use crate::solvers::Problem;
 
@@ -160,6 +160,11 @@ pub struct Screener {
     is_alive: Vec<bool>,
     /// view-indexed gradient/correlation scratch (global column index)
     grad: Vec<f64>,
+    /// positional multi-dot output (aligned with `alive`) for the
+    /// blocked screening sweep
+    gbuf: Vec<f64>,
+    /// kernel-engine arena for the blocked multi-column passes
+    scratch: KernelScratch,
     /// fitted-value scratch for the α-based constrained test
     q: Vec<f64>,
     /// solver dots since the last pass (drives [`Screener::due`])
@@ -175,6 +180,8 @@ impl Screener {
             alive: (0..p).collect(),
             is_alive: vec![true; p],
             grad: vec![0.0; p],
+            gbuf: Vec::new(),
+            scratch: KernelScratch::new(),
             q: Vec::new(),
             dots_since: 0,
             stats: ScreenStats::default(),
@@ -264,10 +271,13 @@ impl Screener {
         state: &FwState,
         delta: f64,
     ) -> u64 {
+        // one blocked multi-column scan over the surviving set (same
+        // arithmetic path as the solvers' vertex searches)
+        self.gbuf.resize(self.alive.len(), 0.0);
+        state.grad_multi(prob, &self.alive, &mut self.gbuf, &mut self.scratch);
         let mut gmax = 0.0f64;
-        for k in 0..self.alive.len() {
-            let j = self.alive[k];
-            let g = state.grad_coord(prob, j);
+        for (k, &j) in self.alive.iter().enumerate() {
+            let g = self.gbuf[k];
             self.grad[j] = g;
             gmax = gmax.max(g.abs());
         }
@@ -292,7 +302,8 @@ impl Screener {
     /// Constrained-form pass reusing a gradient the caller has **already
     /// computed** over the surviving set (deterministic FW computes it
     /// every iteration, making this pass free of dot products).
-    /// `grad[j]` must hold `∇ⱼf(α)` for every alive `j`.
+    /// `grad` is *positional*: `grad[k]` must hold `∇f(α)_{alive()[k]}`
+    /// — exactly the buffer the blocked multi-column sweep produces.
     pub fn screen_with_grad(
         &mut self,
         prob: &Problem<'_>,
@@ -300,16 +311,17 @@ impl Screener {
         delta: f64,
         grad: &[f64],
     ) {
+        debug_assert_eq!(grad.len(), self.alive.len());
         let mut gmax = 0.0f64;
-        for &j in &self.alive {
-            self.grad[j] = grad[j];
-            gmax = gmax.max(grad[j].abs());
+        for (k, &j) in self.alive.iter().enumerate() {
+            self.grad[j] = grad[k];
+            gmax = gmax.max(grad[k].abs());
         }
         let mut at_g = 0.0f64;
         for &j in state.active() {
             let aj = state.alpha_coord(j);
             if aj != 0.0 {
-                at_g += aj * grad[j];
+                at_g += aj * self.grad[j];
             }
         }
         let gap = (at_g + delta * gmax).max(0.0);
@@ -331,11 +343,13 @@ impl Screener {
         self.q.resize(prob.m(), 0.0);
         prob.x.matvec(alpha, &mut self.q);
         let mut dots = ops::nnz(alpha) as u64;
+        // blocked multi-column sweep: ∇ⱼ = zⱼᵀ(Xα − y) = zⱼᵀq − σⱼ
+        self.gbuf.resize(self.alive.len(), 0.0);
+        prob.x
+            .multi_col_dot(&self.alive, &self.q, &mut self.gbuf, &mut self.scratch);
         let mut gmax = 0.0f64;
-        for k in 0..self.alive.len() {
-            let j = self.alive[k];
-            // ∇ⱼ = zⱼᵀ(Xα − y) = zⱼᵀq − σⱼ (view-indexed cache access)
-            let g = prob.x.col_dot(j, &self.q) - prob.cache.sigma[j];
+        for (k, &j) in self.alive.iter().enumerate() {
+            let g = self.gbuf[k] - prob.cache.sigma[j];
             self.grad[j] = g;
             gmax = gmax.max(g.abs());
         }
@@ -365,10 +379,13 @@ impl Screener {
         resid: &[f64],
         lambda: f64,
     ) -> u64 {
+        // blocked multi-column correlation sweep over the surviving set
+        self.gbuf.resize(self.alive.len(), 0.0);
+        prob.x
+            .multi_col_dot(&self.alive, resid, &mut self.gbuf, &mut self.scratch);
         let mut cmax = 0.0f64;
-        for k in 0..self.alive.len() {
-            let j = self.alive[k];
-            let c = prob.x.col_dot(j, resid);
+        for (k, &j) in self.alive.iter().enumerate() {
+            let c = self.gbuf[k];
             self.grad[j] = c;
             cmax = cmax.max(c.abs());
         }

@@ -9,6 +9,7 @@
 use super::proj::project_l1;
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops;
+use crate::linalg::KernelScratch;
 use crate::screening::Screener;
 
 /// Accelerated projected-gradient solver.
@@ -21,6 +22,11 @@ pub struct Apg {
     grad: Vec<f64>,
     q: Vec<f64>,
     alpha_prev: Vec<f64>,
+    /// kernel-engine arena for the per-iteration gradient sweep
+    /// (allocation-free after the first iteration of a path segment)
+    scratch: KernelScratch,
+    /// positional multi-dot output for the screened (alive-only) sweep
+    gbuf: Vec<f64>,
 }
 
 impl Apg {
@@ -33,6 +39,8 @@ impl Apg {
             grad: Vec::new(),
             q: Vec::new(),
             alpha_prev: Vec::new(),
+            scratch: KernelScratch::new(),
+            gbuf: Vec::new(),
         }
     }
 
@@ -81,14 +89,18 @@ impl Apg {
             }
             match &screen {
                 None => {
-                    prob.x.tr_matvec(&self.q, &mut self.grad);
+                    prob.x.tr_matvec_with(&self.q, &mut self.grad, &mut self.scratch);
                     dots += p as u64;
                 }
                 Some(s) => {
+                    // blocked multi-column sweep over the surviving set,
+                    // scattered back by global index (screened ∇ⱼ stay 0)
                     self.grad.fill(0.0);
-                    for k in 0..s.alive_len() {
-                        let j = s.alive()[k];
-                        self.grad[j] = prob.x.col_dot(j, &self.q);
+                    self.gbuf.resize(s.alive_len(), 0.0);
+                    prob.x
+                        .multi_col_dot(s.alive(), &self.q, &mut self.gbuf, &mut self.scratch);
+                    for (k, &j) in s.alive().iter().enumerate() {
+                        self.grad[j] = self.gbuf[k];
                     }
                     dots += s.alive_len() as u64;
                 }

@@ -9,6 +9,7 @@
 
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops::{self, soft_threshold};
+use crate::linalg::KernelScratch;
 use crate::screening::Screener;
 
 /// FISTA solver; scratch buffers persist across path points.
@@ -22,6 +23,11 @@ pub struct Fista {
     grad: Vec<f64>,
     q: Vec<f64>,
     alpha_prev: Vec<f64>,
+    /// kernel-engine arena for the per-iteration gradient sweep
+    /// (allocation-free after the first iteration of a path segment)
+    scratch: KernelScratch,
+    /// positional multi-dot output for the screened (alive-only) sweep
+    gbuf: Vec<f64>,
 }
 
 impl Fista {
@@ -34,6 +40,8 @@ impl Fista {
             grad: Vec::new(),
             q: Vec::new(),
             alpha_prev: Vec::new(),
+            scratch: KernelScratch::new(),
+            gbuf: Vec::new(),
         }
     }
 
@@ -85,16 +93,19 @@ impl Fista {
             }
             match &screen {
                 None => {
-                    prob.x.tr_matvec(&self.q, &mut self.grad);
+                    prob.x.tr_matvec_with(&self.q, &mut self.grad, &mut self.scratch);
                     dots += p as u64;
                 }
                 Some(s) => {
                     // restricted gradient: screened columns keep ∇ⱼ = 0 so
-                    // their (zero) coefficients never move
+                    // their (zero) coefficients never move (blocked
+                    // multi-column sweep, scattered back by global index)
                     self.grad.fill(0.0);
-                    for k in 0..s.alive_len() {
-                        let j = s.alive()[k];
-                        self.grad[j] = prob.x.col_dot(j, &self.q);
+                    self.gbuf.resize(s.alive_len(), 0.0);
+                    prob.x
+                        .multi_col_dot(s.alive(), &self.q, &mut self.gbuf, &mut self.scratch);
+                    for (k, &j) in s.alive().iter().enumerate() {
+                        self.grad[j] = self.gbuf[k];
                     }
                     dots += s.alive_len() as u64;
                 }

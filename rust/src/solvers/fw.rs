@@ -39,6 +39,13 @@ impl FrankWolfe {
     /// sphere test costs **zero extra dot products** here and runs every
     /// iteration (in both `gap` and `aggressive` modes); each iteration
     /// then sweeps only the surviving columns (`alive` dots instead of p).
+    ///
+    /// The sweep itself runs through the cache-blocked multi-column
+    /// engine ([`FwState::grad_multi`], DESIGN.md §9) — the same
+    /// arithmetic path as the stochastic backends, which is what keeps
+    /// the Sfw(κ = p) ≡ FwDet conformance contract bit-exact. Scan
+    /// buffers live in the [`FwState`] scratch arena, so warm-started
+    /// path sweeps allocate nothing per grid point.
     pub fn run_with_screen(
         &self,
         prob: &Problem<'_>,
@@ -51,32 +58,33 @@ impl FrankWolfe {
         let mut iters = 0u64;
         let mut converged = false;
         let mut small_streak = 0usize;
-        // gradient buffer for the screener (only when screening is on)
-        let mut grad_buf = match &screen {
-            Some(_) => vec![0.0; p],
-            None => Vec::new(),
-        };
+        // take the arena so it can be used alongside `&state` borrows;
+        // restored before every return
+        let mut scratch = state.take_scratch();
+        let mut grad = std::mem::take(&mut scratch.grad);
 
         while (iters as usize) < self.opts.max_iters {
             iters += 1;
-            // vertex search over the surviving columns (all p when off)
+            // vertex search over the surviving columns (all p when off):
+            // one blocked multi-column scan, then a scalar argmax+gap pass
             let pool_len = match &screen {
                 Some(s) => s.alive_len(),
                 None => p,
             };
+            grad.resize(pool_len, 0.0);
+            match screen.as_deref() {
+                Some(s) => state.grad_multi(prob, s.alive(), &mut grad, &mut scratch),
+                None => state.grad_multi_all(prob, &mut grad, &mut scratch),
+            }
             let mut best_i = 0usize;
             let mut best_g = 0.0f64;
             let mut best_abs = -1.0f64;
             let mut gap_acc = 0.0f64; // αᵀ∇f accumulates over active coords
-            for k in 0..pool_len {
-                let i = match &screen {
+            for (k, &g) in grad.iter().enumerate() {
+                let i = match screen.as_deref() {
                     Some(s) => s.alive()[k],
                     None => k,
                 };
-                let g = state.grad_coord(prob, i);
-                if !grad_buf.is_empty() {
-                    grad_buf[i] = g;
-                }
                 let a = g.abs();
                 if a > best_abs {
                     best_abs = a;
@@ -104,7 +112,7 @@ impl FrankWolfe {
             // selected vertex always survives the test)
             if let Some(s) = screen.as_deref_mut() {
                 s.note_iteration(pool_len as u64, (p - pool_len) as u64);
-                s.screen_with_grad(prob, state, delta, &grad_buf);
+                s.screen_with_grad(prob, state, delta, &grad);
             }
 
             let info = state.step(prob, delta, best_i, best_g);
@@ -119,6 +127,8 @@ impl FrankWolfe {
             }
         }
 
+        scratch.grad = grad;
+        state.put_scratch(scratch);
         RunResult {
             iters,
             dots,

@@ -21,7 +21,9 @@
 //! `λ* = (S − δ̃∇ᵢ − F) / (S − 2δ̃Gᵢ + δ̃²‖zᵢ‖²)` with `Gᵢ = ∇ᵢ + σᵢ = zᵢᵀq`.
 
 use super::Problem;
+use crate::linalg::kernel::scan::{multi_dot_dense, multi_dot_sparse, Cols};
 use crate::linalg::ops;
+use crate::linalg::{KernelScratch, Storage};
 
 /// Mutable Frank-Wolfe iterate with scaled representation.
 pub struct FwState {
@@ -37,6 +39,10 @@ pub struct FwState {
     pub f: f64,
     /// indices j with α̂ⱼ ≠ 0 (insertion order)
     active: Vec<usize>,
+    /// kernel-engine arena: lives with the iterate so a warm-started path
+    /// run allocates scan buffers once per segment, not per grid point
+    /// (taken/restored by `solvers::fw` around its sweep)
+    scratch: KernelScratch,
 }
 
 /// Everything the caller needs to know about one FW step.
@@ -76,7 +82,20 @@ impl FwState {
             s: 0.0,
             f: 0.0,
             active: Vec::new(),
+            scratch: KernelScratch::new(),
         }
+    }
+
+    /// Detach the kernel scratch arena (callers that need the arena and
+    /// `&self` simultaneously take it, use it, and put it back).
+    pub fn take_scratch(&mut self) -> KernelScratch {
+        std::mem::take(&mut self.scratch)
+    }
+
+    /// Return a previously taken scratch arena so its buffers are reused
+    /// by the next sweep.
+    pub fn put_scratch(&mut self, scratch: KernelScratch) {
+        self.scratch = scratch;
     }
 
     /// Warm start from a concrete coefficient vector. Costs `‖α‖₀` column
@@ -129,6 +148,47 @@ impl FwState {
     #[inline]
     pub fn grad_coord(&self, prob: &Problem<'_>, i: usize) -> f64 {
         -prob.cache.sigma[i] + self.c * prob.x.col_dot(i, &self.q_hat)
+    }
+
+    /// Gradient over an explicit column subset through the cache-blocked
+    /// multi-column engine: `out[k] = ∇f(α)_{cols[k]}` — `cols.len()` dot
+    /// products. This is the **single arithmetic path** shared by the
+    /// native and parallel sampled vertex searches, the deterministic-FW
+    /// sweep and the screening passes, so their per-column gradients are
+    /// bit-identical to each other (the Sfw-Full ≡ FwDet and
+    /// Native ≡ Parallel conformance contracts ride on this).
+    pub fn grad_multi(
+        &self,
+        prob: &Problem<'_>,
+        cols: &[usize],
+        out: &mut [f64],
+        scratch: &mut KernelScratch,
+    ) {
+        prob.x.multi_col_dot(cols, &self.q_hat, out, scratch);
+        for (k, &j) in cols.iter().enumerate() {
+            out[k] = -prob.cache.sigma[j] + self.c * out[k];
+        }
+    }
+
+    /// [`Self::grad_multi`] over **all** p columns without materializing
+    /// the identity index set (deterministic FW without screening).
+    /// Arithmetic is identical to `grad_multi` with `cols = [0, 1, …, p)`.
+    pub fn grad_multi_all(
+        &self,
+        prob: &Problem<'_>,
+        out: &mut [f64],
+        scratch: &mut KernelScratch,
+    ) {
+        let p = prob.p();
+        match prob.x.storage() {
+            Storage::Dense(x) => multi_dot_dense(x, Cols::All(p), &self.q_hat, out),
+            Storage::Sparse(x) => {
+                multi_dot_sparse(x, Cols::All(p), &self.q_hat, out, scratch)
+            }
+        }
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = -prob.cache.sigma[j] + self.c * *o;
+        }
     }
 
     /// Objective `½‖Xα − y‖² = ½yᵀy + ½S − F`.

@@ -33,18 +33,21 @@ pub trait FwBackend {
     ) -> (usize, f64);
 }
 
-/// Native (pure-Rust) backend: κ column dot products + scan.
+/// Native (pure-Rust) backend: κ column dot products + scan, both through
+/// the cache-blocked kernel engine (`linalg::kernel`, DESIGN.md §9).
 ///
 /// Dense designs use a §Perf fast path when κ < p: the |∇ᵢ|-argmax scan
-/// runs in f32 (8-way unrolled, 2× SIMD width — measured 1.5–1.7× on the
-/// synthetic shapes), then the winning coordinate's gradient is recomputed
-/// in f64 so the line search sees exact values. The κ = p (deterministic)
-/// case and sparse designs keep the all-f64 scan: κ = p must match
-/// [`crate::solvers::fw::FrankWolfe`] bit-for-bit, and sparse dots gain
-/// nothing from f32 accumulation (latency-bound gathers).
+/// runs in f32 (2× SIMD width vs f64, register-blocked 4 columns per `q`
+/// load, row-tiled so `q` streams once per scan), then the winning
+/// coordinate's gradient is recomputed in f64 so the line search sees
+/// exact values. The κ = p (deterministic) case and sparse designs use the
+/// all-f64 blocked scan: κ = p must match
+/// [`crate::solvers::fw::FrankWolfe`] bit-for-bit (both call
+/// [`FwState::grad_multi`], the shared arithmetic path), and sparse dots
+/// gain nothing from f32 accumulation (latency-bound gathers).
 #[derive(Default)]
 pub struct NativeBackend {
-    qf: Vec<f32>,
+    scratch: crate::linalg::KernelScratch,
 }
 
 impl NativeBackend {
@@ -61,38 +64,42 @@ impl FwBackend for NativeBackend {
         state: &FwState,
         sample: &[usize],
     ) -> (usize, f64) {
+        debug_assert!(!sample.is_empty());
         if sample.len() < prob.p() {
             if let crate::linalg::Storage::Dense(xd) = prob.x.storage() {
-                // f32 fast scan + f64 winner re-evaluation
-                self.qf.resize(prob.m(), 0.0);
-                state.write_q(&mut self.qf);
-                let mut best_i = sample[0];
-                let mut best_abs = -1.0f32;
-                for &i in sample {
-                    let g = -(prob.cache.sigma[i] as f32)
-                        + crate::linalg::ops::dot_f32(xd.col(i), &self.qf);
-                    let a = g.abs();
-                    if a > best_abs {
-                        best_abs = a;
-                        best_i = i;
-                    }
-                }
+                // blocked f32 scan + f64 winner re-evaluation
+                let mut qf = std::mem::take(&mut self.scratch.qf);
+                qf.resize(prob.m(), 0.0);
+                state.write_q(&mut qf);
+                let (best_k, _g) = crate::linalg::kernel::scan::scan_abs_argmax_f32(
+                    xd,
+                    sample,
+                    &qf,
+                    &prob.cache.sigma,
+                    &mut self.scratch,
+                );
+                self.scratch.qf = qf;
+                let best_i = sample[best_k];
                 return (best_i, state.grad_coord(prob, best_i));
             }
         }
-        let mut best_i = sample[0];
+        // all-f64 blocked scan (sparse designs, κ = p deterministic sweep)
+        let mut g = std::mem::take(&mut self.scratch.grad);
+        g.resize(sample.len(), 0.0);
+        state.grad_multi(prob, sample, &mut g, &mut self.scratch);
+        let mut best_k = 0usize;
         let mut best_g = 0.0f64;
         let mut best_abs = -1.0f64;
-        for &i in sample {
-            let g = state.grad_coord(prob, i);
-            let a = g.abs();
+        for (k, &gi) in g.iter().enumerate() {
+            let a = gi.abs();
             if a > best_abs {
                 best_abs = a;
-                best_g = g;
-                best_i = i;
+                best_g = gi;
+                best_k = k;
             }
         }
-        (best_i, best_g)
+        self.scratch.grad = g;
+        (sample[best_k], best_g)
     }
 }
 

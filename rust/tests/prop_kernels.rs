@@ -1,0 +1,311 @@
+//! Kernel-engine conformance: every dispatched kernel must agree with the
+//! scalar fallback — **bit-exactly** for the f32 scan kernels (whose lane
+//! layout and reduction tree are fixed across backends) and to tight
+//! tolerance for the f64/FMA kernels — across all lengths 0..=67 (every
+//! remainder case of the 4/8/16-wide unrolls). The blocked multi-column
+//! scan must match the naive per-column loop for dense and sparse
+//! designs, for κ ∈ {1, 7, p}, and the parallel backend must reproduce
+//! the native one bit-for-bit over the same scans for 1 and 4 threads.
+//!
+//! CI runs this suite twice: under the default dispatch and under
+//! `SFW_FORCE_SCALAR=1`. The SIMD-vs-scalar comparisons below use
+//! `kernel::best_available()` directly, so they exercise the SIMD
+//! backend even in the forced-scalar run (where `ops()` is pinned).
+
+use sfw_lasso::linalg::kernel::{self, scalar, KernelScratch};
+use sfw_lasso::linalg::{ColumnCache, CscBuilder, DenseMatrix, Design};
+use sfw_lasso::parallel::ParallelBackend;
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sfw::{FwBackend, NativeBackend};
+use sfw_lasso::solvers::Problem;
+use sfw_lasso::util::rng::Xoshiro256;
+
+fn f32_data(n: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let a = (0..n).map(|_| rng.gaussian() as f32).collect();
+    let b = (0..n).map(|_| rng.gaussian() as f32).collect();
+    (a, b)
+}
+
+fn f64_data(n: usize, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let a = (0..n).map(|_| rng.gaussian()).collect();
+    let b = (0..n).map(|_| rng.gaussian()).collect();
+    (a, b)
+}
+
+#[test]
+fn dispatch_honors_force_scalar_env() {
+    let forced = kernel::force_scalar();
+    let active = kernel::ops();
+    if forced {
+        assert_eq!(active.name, "scalar");
+        assert!(!active.simd);
+    } else {
+        assert_eq!(active.name, kernel::best_available().name);
+    }
+}
+
+#[test]
+fn dot_f32_dispatched_is_bit_exact_vs_scalar() {
+    let best = kernel::best_available();
+    for n in 0..=67usize {
+        let (a, b) = f32_data(n, 100 + n as u64);
+        let d = (best.dot_f32)(&a, &b);
+        let s = scalar::dot_f32(&a, &b);
+        assert_eq!(
+            d.to_bits(),
+            s.to_bits(),
+            "n={n} ({}): {d} vs {s}",
+            best.name
+        );
+    }
+}
+
+#[test]
+fn dot_f32_x4_dispatched_is_bit_exact_vs_single() {
+    let best = kernel::best_available();
+    for n in 0..=67usize {
+        let (v, _) = f32_data(n, 200 + n as u64);
+        let cols: Vec<Vec<f32>> = (0..4)
+            .map(|c| f32_data(n, 300 + n as u64 + c).0)
+            .collect();
+        let r = (best.dot_f32_x4)(
+            [&cols[0][..], &cols[1][..], &cols[2][..], &cols[3][..]],
+            &v,
+        );
+        for c in 0..4 {
+            let want = scalar::dot_f32(&cols[c], &v);
+            assert_eq!(
+                r[c].to_bits(),
+                want.to_bits(),
+                "n={n} lane {c} ({}): {} vs {want}",
+                best.name,
+                r[c]
+            );
+        }
+    }
+}
+
+#[test]
+fn f64_kernels_dispatched_match_scalar_to_tight_tolerance() {
+    let best = kernel::best_available();
+    for n in 0..=67usize {
+        let (a, b) = f64_data(n, 400 + n as u64);
+        let tol = 1e-12 * (n as f64 + 1.0);
+        let (d, s) = ((best.dot)(&a, &b), scalar::dot(&a, &b));
+        assert!((d - s).abs() <= tol, "dot n={n}: {d} vs {s}");
+
+        let (cf, v) = f32_data(n, 500 + n as u64);
+        let _ = v;
+        let (d, s) = ((best.dot_f32_f64)(&cf, &a), scalar::dot_f32_f64(&cf, &a));
+        assert!((d - s).abs() <= tol, "dot_f32_f64 n={n}: {d} vs {s}");
+
+        let mut out_d = b.clone();
+        let mut out_s = b.clone();
+        (best.axpy_f32)(0.7311, &cf, &mut out_d);
+        scalar::axpy_f32(0.7311, &cf, &mut out_s);
+        for (x, y) in out_d.iter().zip(out_s.iter()) {
+            assert!((x - y).abs() <= 1e-12, "axpy_f32 n={n}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn gather_dot_dispatched_matches_scalar() {
+    let best = kernel::best_available();
+    let mut rng = Xoshiro256::seed_from_u64(77);
+    let m = 512usize;
+    let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    for n in 0..=67usize {
+        // strictly increasing row indices, CSC-style
+        let mut rows: Vec<u32> = Vec::with_capacity(n);
+        let mut r = 0u32;
+        for _ in 0..n {
+            r += 1 + (rng.next_f64() * 6.0) as u32;
+            rows.push(r.min(m as u32 - 1));
+        }
+        rows.dedup();
+        let vals: Vec<f32> = rows.iter().map(|_| rng.gaussian() as f32).collect();
+        let d = (best.gather_dot)(&rows, &vals, &v);
+        let s = scalar::gather_dot(&rows, &vals, &v);
+        let tol = 1e-12 * (rows.len() as f64 + 1.0);
+        assert!((d - s).abs() <= tol, "gather n={n}: {d} vs {s}");
+    }
+}
+
+// ---- blocked multi-column scan vs naive per-column loops ------------------
+
+fn dense_problem(m: usize, p: usize, seed: u64) -> (Design, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    (Design::dense(x), y)
+}
+
+fn sparse_problem(m: usize, p: usize, seed: u64) -> (Design, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut b = CscBuilder::new(m, p);
+    for j in 0..p {
+        for i in 0..m {
+            if rng.next_f64() < 0.05 {
+                b.push(i, j, rng.gaussian());
+            }
+        }
+    }
+    let y: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    (Design::sparse(b.build()), y)
+}
+
+fn kappa_sample(p: usize, kappa: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::new();
+    rng.subset(p, kappa, &mut out);
+    out
+}
+
+type MakeProblem = fn(usize, usize, u64) -> (Design, Vec<f64>);
+
+const CASES: [(MakeProblem, &str); 2] =
+    [(dense_problem, "dense"), (sparse_problem, "sparse")];
+
+#[test]
+fn multi_col_dot_matches_naive_per_column_loop() {
+    for (make, label) in CASES {
+        let (m, p) = (97usize, 40usize);
+        let (x, v) = make(m, p, 9001);
+        for kappa in [1usize, 7, p] {
+            let cols = kappa_sample(p, kappa, 17 + kappa as u64);
+            let mut out = vec![0.0; cols.len()];
+            let mut scratch = KernelScratch::new();
+            x.multi_col_dot(&cols, &v, &mut out, &mut scratch);
+            for (k, &j) in cols.iter().enumerate() {
+                let naive = x.col_dot(j, &v);
+                let tol = 1e-10 * (1.0 + naive.abs());
+                assert!(
+                    (out[k] - naive).abs() <= tol,
+                    "{label} κ={kappa} col {j}: {} vs {naive}",
+                    out[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn grad_multi_matches_grad_coord() {
+    for (make, label) in CASES {
+        let (m, p) = (61usize, 33usize);
+        let (x, y) = make(m, p, 4242);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut state = FwState::zero(p, m);
+        for i in [0usize, 5, 20] {
+            let g = state.grad_coord(&prob, i);
+            state.step(&prob, 2.0, i, g);
+        }
+        let cols = kappa_sample(p, 7, 5);
+        let mut out = vec![0.0; cols.len()];
+        let mut scratch = KernelScratch::new();
+        state.grad_multi(&prob, &cols, &mut out, &mut scratch);
+        for (k, &j) in cols.iter().enumerate() {
+            let naive = state.grad_coord(&prob, j);
+            let tol = 1e-9 * (1.0 + naive.abs());
+            assert!(
+                (out[k] - naive).abs() <= tol,
+                "{label} col {j}: {} vs {naive}",
+                out[k]
+            );
+        }
+        // grad_multi_all ≡ grad_multi over the identity (bitwise)
+        let idx: Vec<usize> = (0..p).collect();
+        let mut all = vec![0.0; p];
+        let mut by_idx = vec![0.0; p];
+        state.grad_multi_all(&prob, &mut all, &mut scratch);
+        state.grad_multi(&prob, &idx, &mut by_idx, &mut scratch);
+        for (a, b) in all.iter().zip(by_idx.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{label}: All vs Idx identity");
+        }
+    }
+}
+
+#[test]
+fn vertex_search_native_equals_parallel_for_all_kinds() {
+    for (make, label) in CASES {
+        let (m, p) = (53usize, 200usize);
+        let (x, y) = make(m, p, 31337);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut state = FwState::zero(p, m);
+        for i in [3usize, 77] {
+            let g = state.grad_coord(&prob, i);
+            state.step(&prob, 1.5, i, g);
+        }
+        for kappa in [1usize, 7, p] {
+            let sample = kappa_sample(p, kappa, 1000 + kappa as u64);
+            let mut native = NativeBackend::new();
+            let (ri, rg) = native.select_vertex(&prob, &state, &sample);
+            // winner must carry the (within-f32-noise) maximal |∇|
+            let naive_max = sample
+                .iter()
+                .map(|&j| state.grad_coord(&prob, j).abs())
+                .fold(f64::NEG_INFINITY, f64::max);
+            let tol = 1e-4 * (1.0 + naive_max);
+            assert!(
+                (state.grad_coord(&prob, ri).abs() - naive_max).abs() <= tol,
+                "{label} κ={kappa}: winner |∇|={} vs max {naive_max}",
+                state.grad_coord(&prob, ri).abs()
+            );
+            for threads in [1usize, 4] {
+                let mut par = ParallelBackend::new(threads).with_grain(8);
+                let (i, g) = par.select_vertex(&prob, &state, &sample);
+                assert_eq!(i, ri, "{label} κ={kappa} threads={threads}");
+                assert_eq!(
+                    g.to_bits(),
+                    rg.to_bits(),
+                    "{label} κ={kappa} threads={threads}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_scan_crosses_tile_boundaries_correctly() {
+    // m > ROW_TILE exercises the tiled accumulation + sparse cursors.
+    let m = kernel::ROW_TILE + 257;
+    let p = 9usize;
+    let mut rng = Xoshiro256::seed_from_u64(555);
+    let mut b = CscBuilder::new(m, p);
+    for j in 0..p {
+        for i in (j..m).step_by(13 + j) {
+            b.push(i, j, rng.gaussian());
+        }
+    }
+    let xs = Design::sparse(b.build());
+    let xd = {
+        let mut data = vec![0.0f32; m * p];
+        if let sfw_lasso::linalg::Storage::Sparse(s) = xs.storage() {
+            for j in 0..p {
+                let (rows, vals) = s.col(j);
+                for (&r, &v) in rows.iter().zip(vals.iter()) {
+                    data[j * m + r as usize] = v;
+                }
+            }
+        }
+        Design::dense(DenseMatrix::from_col_major(m, p, data))
+    };
+    let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    let cols: Vec<usize> = (0..p).collect();
+    let mut scratch = KernelScratch::new();
+    let mut out_s = vec![0.0; p];
+    let mut out_d = vec![0.0; p];
+    xs.multi_col_dot(&cols, &v, &mut out_s, &mut scratch);
+    xd.multi_col_dot(&cols, &v, &mut out_d, &mut scratch);
+    for j in 0..p {
+        let naive = xs.col_dot(j, &v);
+        let tol = 1e-8 * (1.0 + naive.abs());
+        assert!((out_s[j] - naive).abs() <= tol, "sparse col {j}");
+        assert!((out_d[j] - naive).abs() <= tol, "dense col {j}");
+    }
+}
