@@ -1,0 +1,251 @@
+//! §Perf: gather-path vs. CSR-mirror sparse vertex-search scan
+//! (DESIGN.md §10, `docs/adr/ADR-003-csr-mirror-scan.md`).
+//!
+//! Workload: an **E2006-log1p-faithful** shape — the real train split's
+//! document count (m = 16 087 → rounded to a 3-tile 16 400), a column
+//! count that dwarfs it (p = 4 272 227 at scale 1.0), Zipf-skewed column
+//! densities with a light tail (the log1p n-gram space averages ~2.6
+//! nonzeros per column), and a uniform κ = 2% column sample — exactly
+//! what the stochastic FW vertex search draws each iteration. The gather
+//! path pays a dependent cache-miss chain per sampled column (`col_ptr` →
+//! row/value lines, re-walked once per row tile) plus the per-scan sample
+//! sort; the mirror streams every nonzero once, prefetch-friendly,
+//! loading `q[i]` once per row. A second pair of rows times the **full
+//! sweep** (κ = p: deterministic FW, screening passes, `Xᵀv`), where the
+//! mirror's single stream replaces p column walks.
+//!
+//! Samples are pre-drawn outside the timed region (their cost is common
+//! to both paths); the gather path's internal sample sort and cursor
+//! bookkeeping stay inside, because they are part of that path.
+//!
+//! Emits machine-readable `BENCH_sparse_scan.json` (override with
+//! `SFW_BENCH_JSON`) with the headline `speedup_mirror_vs_gather` and the
+//! 4-thread row-tile-sharded `speedup_mirror_4t_vs_1t` — the acceptance
+//! artifact uploaded by the CI `bench-artifacts` job.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::bench::bench;
+use sfw_lasso::linalg::csr::CsrMirror;
+use sfw_lasso::linalg::kernel::scan::{mirror_multi_dot, multi_dot_sparse, Cols};
+use sfw_lasso::linalg::kernel::{KernelScratch, ROW_TILE};
+use sfw_lasso::linalg::{CscMatrix, Design};
+use sfw_lasso::parallel::{mirror_multi_dot_sharded, MirrorShardScratch};
+use sfw_lasso::util::json::Json;
+use sfw_lasso::util::rng::{SubsetSampler, Xoshiro256};
+use sfw_lasso::util::timer::Stopwatch;
+
+/// E2006-log1p-shaped sparse design, built directly in CSC order (no
+/// dense m×p sweep): a small dense head (stop-word-like terms present in
+/// a big slice of documents) and a long tail of rare n-grams with 1–4
+/// nonzeros each — overall ~2.6 nnz/col, the real log1p geometry.
+fn e2006_shaped(m: usize, p: usize, seed: u64) -> CscMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut col_ptr = Vec::with_capacity(p + 1);
+    let mut row_idx: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    col_ptr.push(0usize);
+    let head = (p / 1000).max(1);
+    let mut rows_buf: Vec<u32> = Vec::new();
+    for j in 0..p {
+        let k = if j < head { m / 50 } else { 1 + (rng.next_u64() % 4) as usize };
+        rows_buf.clear();
+        for _ in 0..k {
+            rows_buf.push(rng.below(m) as u32);
+        }
+        rows_buf.sort_unstable();
+        rows_buf.dedup();
+        for &r in rows_buf.iter() {
+            row_idx.push(r);
+            vals.push((1.0 + rng.next_f64() * 4.0).ln() as f32);
+        }
+        col_ptr.push(row_idx.len());
+    }
+    CscMatrix::from_parts(m, p, col_ptr, row_idx, vals)
+}
+
+fn main() {
+    common::banner(
+        "sparse_scan",
+        "gather-path vs CSR-mirror sparse κ-scan (DESIGN.md §10)",
+    );
+    let mut rng = Xoshiro256::seed_from_u64(common::seed());
+
+    // E2006-train document count rounded up to a 3-tile m; p scaled by
+    // SFW_BENCH_SCALE against the real 4 272 227-column log1p shape.
+    let m = 2 * ROW_TILE + 16; // 16 400 rows, 3 row tiles
+    let p = ((4_272_227.0 * common::scale()) as usize).clamp(60_000, 4_272_227);
+    let kappa = p / 50; // κ = 2%
+    let x = e2006_shaped(m, p, 42);
+    let nnz = x.nnz();
+    let design = Design::sparse(x.clone());
+    println!(
+        "m={m} p={p} nnz={nnz} (~{:.2} nnz/col) κ={kappa} (2%)  \
+         mirror_profitable={}",
+        nnz as f64 / p as f64,
+        design.mirror_profitable(kappa)
+    );
+
+    // one-off mirror build cost (amortized over a whole path run)
+    let sw = Stopwatch::started();
+    let mirror = CsrMirror::build(&x);
+    let build_secs = sw.elapsed_secs();
+    println!(
+        "mirror build: {build_secs:.4}s ({} entries, 2× nnz memory)\n",
+        mirror.nnz()
+    );
+
+    // the fitted-values vector of a warm iterate: dense gaussian
+    let q: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+
+    // pre-draw rotating samples (the vertex search draws a fresh κ-subset
+    // each iteration; drawing itself is common to both paths, so it stays
+    // outside the timed region)
+    let n_samples = 8usize;
+    let samples: Vec<Vec<usize>> = {
+        let mut s = SubsetSampler::new(p);
+        let mut out = Vec::new();
+        (0..n_samples)
+            .map(|_| {
+                s.sample(&mut rng, kappa, &mut out);
+                out.clone()
+            })
+            .collect()
+    };
+
+    let (w, r) = (3usize, 24usize);
+    let mut out = vec![0.0; kappa];
+    let mut scratch = KernelScratch::new();
+
+    // --- κ = 2% sampled scan: gather vs mirror ---
+    let mut i = 0usize;
+    let gather = bench(w, r, || {
+        i += 1;
+        let s = &samples[i % n_samples];
+        multi_dot_sparse(&x, Cols::Idx(s), &q, &mut out, &mut scratch);
+        out[0]
+    });
+    println!("{}", gather.row("κ=2% per-column gather path (SFW_NO_MIRROR route)"));
+
+    let mirror_1t = bench(w, r, || {
+        i += 1;
+        let s = &samples[i % n_samples];
+        mirror_multi_dot(&mirror, Cols::Idx(s), &q, &mut out, &mut scratch);
+        out[0]
+    });
+    let gbps = (mirror.nnz() * 8) as f64 / mirror_1t.mean / 1e9;
+    println!(
+        "{}",
+        mirror_1t.row(&format!("κ=2% mirror stream, 1 thread ({gbps:.1} GB/s entries)"))
+    );
+
+    let mut shard_stats = Vec::new();
+    for threads in [2usize, 4] {
+        // a tile is the contract's smallest reducible unit, so effective
+        // parallelism caps at n_tiles (3 on this E2006-faithful m)
+        let shards = threads.min(mirror.n_tiles());
+        let mut ms = MirrorShardScratch::new();
+        let s = bench(w, r, || {
+            i += 1;
+            let smp = &samples[i % n_samples];
+            mirror_multi_dot_sharded(threads, &mirror, smp, &q, &mut out, &mut ms);
+            out[0]
+        });
+        println!(
+            "{}",
+            s.row(&format!(
+                "κ=2% mirror stream, {threads} threads ({shards} row-tile shards, \
+                 {:.2}× vs 1t)",
+                s.speedup_over(&mirror_1t)
+            ))
+        );
+        shard_stats.push((threads, s));
+    }
+
+    // --- full sweep (κ = p): deterministic FW / screening / Xᵀv ---
+    let mut full = vec![0.0; p];
+    let full_gather = bench(1, 6, || {
+        multi_dot_sparse(&x, Cols::All(p), &q, &mut full, &mut scratch);
+        full[0]
+    });
+    println!("\n{}", full_gather.row("full sweep (κ=p), per-column gather path"));
+    let full_mirror = bench(1, 6, || {
+        mirror_multi_dot(&mirror, Cols::All(p), &q, &mut full, &mut scratch);
+        full[0]
+    });
+    println!(
+        "{}",
+        full_mirror.row(&format!(
+            "full sweep (κ=p), mirror stream ({:.2}× vs gather)",
+            full_mirror.speedup_over(&full_gather)
+        ))
+    );
+
+    let headline = mirror_1t.speedup_over(&gather);
+    let speedup_4t = shard_stats
+        .iter()
+        .find(|(t, _)| *t == 4)
+        .map(|(_, s)| s.speedup_over(&mirror_1t))
+        .unwrap_or(1.0);
+    println!(
+        "\nspeedups: κ=2% mirror-1t vs gather {headline:.2}×; mirror-4t vs mirror-1t \
+         {speedup_4t:.2}×; full-sweep mirror vs gather {:.2}×",
+        full_mirror.speedup_over(&full_gather)
+    );
+
+    // correctness spot-check (bit-identical paths)
+    {
+        let s = &samples[0];
+        let mut a = vec![0.0; kappa];
+        let mut b = vec![0.0; kappa];
+        multi_dot_sparse(&x, Cols::Idx(s), &q, &mut a, &mut scratch);
+        mirror_multi_dot(&mirror, Cols::Idx(s), &q, &mut b, &mut scratch);
+        assert!(
+            a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "gather and mirror paths diverged"
+        );
+        println!("paths bit-identical on the spot-check sample ✓");
+    }
+
+    let mut obj = vec![
+        ("m", Json::Num(m as f64)),
+        ("p", Json::Num(p as f64)),
+        ("nnz", Json::Num(nnz as f64)),
+        ("kappa", Json::Num(kappa as f64)),
+        ("row_tile", Json::Num(ROW_TILE as f64)),
+        (
+            "mirror_profitable_at_kappa",
+            Json::Bool(design.mirror_profitable(kappa)),
+        ),
+        ("mirror_build_secs", Json::Num(build_secs)),
+        ("gather_secs", Json::Num(gather.mean)),
+        ("mirror_1t_secs", Json::Num(mirror_1t.mean)),
+        ("n_tiles", Json::Num(mirror.n_tiles() as f64)),
+        ("shards_at_4t", Json::Num(4usize.min(mirror.n_tiles()) as f64)),
+        ("speedup_mirror_vs_gather", Json::Num(headline)),
+        ("speedup_mirror_4t_vs_1t", Json::Num(speedup_4t)),
+        ("full_sweep_gather_secs", Json::Num(full_gather.mean)),
+        ("full_sweep_mirror_secs", Json::Num(full_mirror.mean)),
+        (
+            "speedup_full_sweep_mirror_vs_gather",
+            Json::Num(full_mirror.speedup_over(&full_gather)),
+        ),
+    ];
+    for (threads, s) in &shard_stats {
+        obj.push((
+            match threads {
+                2 => "mirror_2t_secs",
+                _ => "mirror_4t_secs",
+            },
+            Json::Num(s.mean),
+        ));
+    }
+    let report = Json::obj(obj);
+    let path =
+        std::env::var("SFW_BENCH_JSON").unwrap_or_else(|_| "BENCH_sparse_scan.json".into());
+    match std::fs::write(&path, report.pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,344 @@
+//! Binary dataset snapshots (`.sfwbin`) — O(bytes) reloads of parsed
+//! LIBSVM files.
+//!
+//! Text parsing is the wall-clock floor of repeated experiments on
+//! E2006-scale files: every `solve`/`path` invocation re-tokenizes
+//! hundreds of megabytes that compress losslessly into the exact arrays
+//! [`CscMatrix`] already holds. With `--cache`, the CLI writes a
+//! versioned, magic-headered snapshot next to the source file after the
+//! first parse; subsequent runs `read()` the whole file once and slice it
+//! straight into [`CscMatrix::from_parts`] — no tokenizing, no triplet
+//! sort, no per-entry branching.
+//!
+//! ## Format (version 1, little-endian)
+//!
+//! ```text
+//! [ 0.. 8)  magic  b"SFWBIN" + u16 version
+//! [ 8..40)  u64 rows, u64 cols, u64 nnz, u64 y_len
+//! [40.. )   col_ptr  (cols+1) × u64        (8-aligned)
+//!           row_idx  nnz × u32, padded to 8 bytes
+//!           vals     nnz × f32, padded to 8 bytes
+//!           y        y_len × f64
+//! ```
+//!
+//! Every section starts 8-byte-aligned, so a future zero-copy (mmap)
+//! loader can cast sections in place; the current loader copies into
+//! owned `Vec`s in one pass. Snapshots are invalidated by a version bump
+//! or by a source file newer than the snapshot (mtime) — both fall back
+//! to re-parsing and rewriting, never to an error.
+
+use super::libsvm::{self, LibsvmData};
+use crate::linalg::CscMatrix;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Magic prefix of a snapshot file.
+pub const MAGIC: &[u8; 6] = b"SFWBIN";
+
+/// Current snapshot format version (bump on any layout change).
+pub const VERSION: u16 = 1;
+
+const HEADER_LEN: usize = 40;
+
+/// Conventional snapshot location: the source path with `.sfwbin`
+/// appended (`data/e2006.svm` → `data/e2006.svm.sfwbin`).
+pub fn snapshot_path(source: &Path) -> PathBuf {
+    let mut os = source.as_os_str().to_os_string();
+    os.push(".sfwbin");
+    PathBuf::from(os)
+}
+
+fn pad8(n: usize) -> usize {
+    (8 - n % 8) % 8
+}
+
+/// Serialize a parsed dataset to `path`. The bytes go to a sibling
+/// temporary file first and are renamed into place, so a crashed or
+/// concurrent writer can never leave a right-length-but-corrupt snapshot
+/// at the final path (rename is atomic on POSIX).
+pub fn write_snapshot(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), String> {
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(&format!(".tmp.{}", std::process::id()));
+        PathBuf::from(os)
+    };
+    let result = write_snapshot_to(&tmp, x, y).and_then(|()| {
+        std::fs::rename(&tmp, path).map_err(|e| format!("rename {tmp:?} → {path:?}: {e}"))
+    });
+    if result.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    result
+}
+
+fn write_snapshot_to(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), String> {
+    let (col_ptr, row_idx, vals) = x.parts();
+    let f = std::fs::File::create(path).map_err(|e| format!("create {path:?}: {e}"))?;
+    let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
+    let mut put = |bytes: &[u8]| {
+        w.write_all(bytes).map_err(|e| format!("write {path:?}: {e}"))
+    };
+    put(MAGIC)?;
+    put(&VERSION.to_le_bytes())?;
+    for dim in [x.rows(), x.cols(), x.nnz(), y.len()] {
+        put(&(dim as u64).to_le_bytes())?;
+    }
+    for &o in col_ptr {
+        put(&(o as u64).to_le_bytes())?;
+    }
+    for &r in row_idx {
+        put(&r.to_le_bytes())?;
+    }
+    put(&[0u8; 8][..pad8(row_idx.len() * 4)])?;
+    for &v in vals {
+        put(&v.to_le_bytes())?;
+    }
+    put(&[0u8; 8][..pad8(vals.len() * 4)])?;
+    for &v in y {
+        put(&v.to_le_bytes())?;
+    }
+    w.flush().map_err(|e| format!("flush {path:?}: {e}"))
+}
+
+/// Fixed-width little-endian section reader over the snapshot bytes.
+struct Sections<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Sections<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| "snapshot truncated".to_string())?;
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u64s(&mut self, n: usize) -> Result<Vec<u64>, String> {
+        let raw = self.take(n.checked_mul(8).ok_or("snapshot header overflow")?)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Load a snapshot written by [`write_snapshot`]. One `fs::read` plus one
+/// linear conversion pass per section, then [`CscMatrix::from_parts`].
+pub fn read_snapshot(path: &Path) -> Result<LibsvmData, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {path:?}: {e}"))?;
+    if bytes.len() < HEADER_LEN {
+        return Err(format!("{path:?}: snapshot shorter than header"));
+    }
+    if &bytes[..6] != MAGIC {
+        return Err(format!("{path:?}: not an .sfwbin snapshot (bad magic)"));
+    }
+    let version = u16::from_le_bytes([bytes[6], bytes[7]]);
+    if version != VERSION {
+        return Err(format!(
+            "{path:?}: snapshot version {version} (expected {VERSION})"
+        ));
+    }
+    let mut s = Sections { bytes: &bytes, pos: 8 };
+    let dims = s.u64s(4)?;
+    // every stored element is ≥ 4 bytes, so any legitimate count is
+    // bounded by the file size — reject before any multiplication can
+    // overflow on a corrupt header
+    if dims.iter().any(|&d| d > bytes.len() as u64) {
+        return Err(format!("{path:?}: snapshot header dimensions exceed file size"));
+    }
+    let (rows, cols, nnz, y_len) =
+        (dims[0] as usize, dims[1] as usize, dims[2] as usize, dims[3] as usize);
+    // section sizes must reproduce the file length exactly
+    let expect = HEADER_LEN
+        + (cols + 1) * 8
+        + nnz * 4
+        + pad8(nnz * 4)
+        + nnz * 4
+        + pad8(nnz * 4)
+        + y_len * 8;
+    if bytes.len() != expect {
+        return Err(format!(
+            "{path:?}: snapshot length {} does not match header (expected {expect})",
+            bytes.len()
+        ));
+    }
+    let col_ptr: Vec<usize> = s.u64s(cols + 1)?.into_iter().map(|v| v as usize).collect();
+    if col_ptr.first().copied() != Some(0)
+        || col_ptr.last().copied() != Some(nnz)
+        || col_ptr.windows(2).any(|w| w[0] > w[1])
+    {
+        return Err(format!("{path:?}: col_ptr not a monotone 0..nnz prefix sum"));
+    }
+    let row_idx: Vec<u32> = s
+        .take(nnz * 4)?
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let _ = s.take(pad8(nnz * 4))?;
+    let vals: Vec<f32> = s
+        .take(nnz * 4)?
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    let _ = s.take(pad8(nnz * 4))?;
+    let y: Vec<f64> = s
+        .take(y_len * 8)?
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    if row_idx.iter().any(|&r| r as usize >= rows) {
+        return Err(format!("{path:?}: row index out of range"));
+    }
+    // CSC validity the scan engine depends on (`partition_point` tile
+    // splits, the mirror build): rows strictly ascending within a column.
+    for j in 0..cols {
+        let seg = &row_idx[col_ptr[j]..col_ptr[j + 1]];
+        if seg.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(format!("{path:?}: column {j} rows not strictly ascending"));
+        }
+    }
+    Ok(LibsvmData { x: CscMatrix::from_parts(rows, cols, col_ptr, row_idx, vals), y })
+}
+
+/// Load a LIBSVM text file, optionally through the snapshot cache.
+///
+/// With `use_cache`: a fresh snapshot (same-or-newer mtime than the
+/// source) is loaded in O(bytes); otherwise the text is parsed and the
+/// snapshot (re)written best-effort. Returns the data plus whether the
+/// snapshot served the load. Snapshot read/write failures degrade to a
+/// plain parse with a warning on stderr — the cache can never make a run
+/// fail.
+pub fn load_libsvm(path: &Path, use_cache: bool) -> Result<(LibsvmData, bool), String> {
+    let snap = snapshot_path(path);
+    if use_cache && snapshot_fresh(path, &snap) {
+        match read_snapshot(&snap) {
+            Ok(d) => return Ok((d, true)),
+            Err(e) => eprintln!("warning: ignoring stale cache: {e}"),
+        }
+    }
+    let data = libsvm::read(path, None)?;
+    if use_cache {
+        if let Err(e) = write_snapshot(&snap, &data.x, &data.y) {
+            eprintln!("warning: could not write cache: {e}");
+        }
+    }
+    Ok((data, false))
+}
+
+/// Whether the snapshot exists and is at least as new as the source
+/// (any metadata error counts as stale).
+fn snapshot_fresh(source: &Path, snap: &Path) -> bool {
+    let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+    match (mtime(source), mtime(snap)) {
+        (Some(src), Some(cached)) => cached >= src,
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sfw_cache_test").join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn sample_data() -> LibsvmData {
+        libsvm::parse("1.5 1:2.0 3:4.0\n-0.5 2:1.0\n2.25 1:-3.5 2:0.125 3:7\n", None)
+            .unwrap()
+    }
+
+    #[test]
+    fn snapshot_round_trip_is_exact() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("a.svm.sfwbin");
+        let d = sample_data();
+        write_snapshot(&path, &d.x, &d.y).unwrap();
+        let r = read_snapshot(&path).unwrap();
+        assert_eq!(r.y, d.y);
+        assert_eq!((r.x.rows(), r.x.cols(), r.x.nnz()), (d.x.rows(), d.x.cols(), d.x.nnz()));
+        let (cp_a, ri_a, va_a) = d.x.parts();
+        let (cp_b, ri_b, va_b) = r.x.parts();
+        assert_eq!(cp_a, cp_b);
+        assert_eq!(ri_a, ri_b);
+        // bit-exact values (f32 bits survive the snapshot untouched)
+        for (a, b) in va_a.iter().zip(va_b.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_rejects_corruption() {
+        let dir = tmpdir("reject");
+        let path = dir.join("b.sfwbin");
+        let d = sample_data();
+        write_snapshot(&path, &d.x, &d.y).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_snapshot(&path).unwrap_err().contains("magic"));
+        // wrong version
+        let mut bad = good.clone();
+        bad[6] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_snapshot(&path).unwrap_err().contains("version"));
+        // truncation
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        assert!(read_snapshot(&path).is_err());
+        // same-length payload corruption: col_ptr loses monotonicity
+        let mut bad = good.clone();
+        bad[HEADER_LEN + 8] = 0xFF; // col_ptr[1] low byte → 255 > nnz
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_snapshot(&path).unwrap_err().contains("monotone"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_libsvm_caches_and_reuses() {
+        let dir = tmpdir("load");
+        let src = dir.join("c.svm");
+        std::fs::write(&src, "1 1:0.5 4:2\n2 2:-1\n3 1:3 2:4 3:5 4:6\n").unwrap();
+        let snap = snapshot_path(&src);
+        std::fs::remove_file(&snap).ok();
+
+        // first load parses and writes the snapshot
+        let (a, from_cache) = load_libsvm(&src, true).unwrap();
+        assert!(!from_cache);
+        assert!(snap.exists());
+        // second load comes from the snapshot, identical content
+        let (b, from_cache) = load_libsvm(&src, true).unwrap();
+        assert!(from_cache);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.nnz(), b.x.nnz());
+        for j in 0..a.x.cols() {
+            assert_eq!(a.x.col(j), b.x.col(j));
+        }
+        // without the flag the snapshot is ignored
+        let (_, from_cache) = load_libsvm(&src, false).unwrap();
+        assert!(!from_cache);
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&snap).ok();
+    }
+
+    #[test]
+    fn empty_dataset_round_trips() {
+        let dir = tmpdir("empty");
+        let path = dir.join("d.sfwbin");
+        let d = libsvm::parse("# nothing but a comment\n", None).unwrap();
+        write_snapshot(&path, &d.x, &d.y).unwrap();
+        let r = read_snapshot(&path).unwrap();
+        assert_eq!(r.x.nnz(), 0);
+        assert!(r.y.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+}

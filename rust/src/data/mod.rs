@@ -1,6 +1,7 @@
 //! Dataset substrate: generators for every problem in Table 1 of the paper
 //! plus LIBSVM I/O for drop-in use of the original files.
 
+pub mod cache;
 pub mod dataset;
 pub mod libsvm;
 pub mod poly;

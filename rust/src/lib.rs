@@ -35,7 +35,13 @@
 //! runtime — `SFW_FORCE_SCALAR=1` pins the fallback) plus a cache-blocked
 //! multi-column scan that every vertex search, full sweep, screening pass
 //! and `Xᵀv` product runs through (DESIGN.md §9,
-//! `docs/adr/ADR-002-simd-runtime-dispatch.md`).
+//! `docs/adr/ADR-002-simd-runtime-dispatch.md`). Sparse designs
+//! additionally carry a gather-free row-major mirror ([`linalg::csr`],
+//! DESIGN.md §10, ADR-003): scans past a κ-crossover stream the whole
+//! matrix once — `q` loaded once per row, hits scattered into a dense
+//! κ-slot table — bit-identical to the per-column gather path
+//! (`SFW_NO_MIRROR=1` opts out) and row-tile-sharded by the parallel
+//! backend.
 //!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `docs/adr/ADR-001-gap-safe-screening.md` for why gap-safe spheres were

@@ -1,0 +1,225 @@
+//! Row-major (CSR) mirror of a sparse design — the storage side of the
+//! gather-free scan engine (DESIGN.md §10,
+//! `docs/adr/ADR-003-csr-mirror-scan.md`).
+//!
+//! [`crate::linalg::CscMatrix`] is the right layout for *per-column* work
+//! (CD updates, rank-1 axpys), but the multi-column scans — the sampled
+//! vertex search, the deterministic-FW full sweep, the screening passes,
+//! `Xᵀv` — read κ columns against **one** vector `q`. Walked column-wise
+//! that is κ random walks over `q` plus κ random hops through `col_ptr`
+//! and the column segments: on E2006-log1p-shaped designs (millions of
+//! columns averaging a handful of nonzeros each) the scan is dominated by
+//! dependent cache-miss chains, not arithmetic. The mirror stores the same
+//! nonzeros **row-major** as interleaved `(u32 col, f32 val)` pairs so the
+//! scan can walk rows in order, load `q[i]` once per row, and
+//! scatter-accumulate into a dense κ-slot table (`kernel::scan::
+//! mirror_multi_dot`) — every byte is streamed and prefetchable.
+//!
+//! The mirror costs one extra copy of the nonzeros (2× nnz memory total);
+//! see the ADR for why that trade is right in the 4M-feature regime and
+//! [`crate::linalg::Design::mirror_profitable`] for the κ-crossover that
+//! keeps tiny samples on the classic gather path.
+//!
+//! Entry offsets at every [`ROW_TILE`] row boundary are precomputed
+//! (`tile_ptr`) so the kernel engine and the parallel backend can slice
+//! tile ranges — the unit of both the deterministic per-tile partial-sum
+//! reduction and row-tile sharding — without touching `row_ptr`.
+
+use super::kernel::ROW_TILE;
+use super::sparse::CscMatrix;
+
+/// Row-major mirror of a sparse m×p design: per-row interleaved
+/// `(u32 col, f32 val)` pairs with row and row-tile offsets.
+///
+/// Within each row, entries are sorted by ascending column index (a direct
+/// consequence of building column-by-column from CSC), which makes the
+/// slot-map membership walk of the scan ascending and prefetch-friendly.
+#[derive(Clone, Debug)]
+pub struct CsrMirror {
+    rows: usize,
+    cols: usize,
+    /// `row_ptr[i]..row_ptr[i+1]` indexes `entries`; len = rows + 1.
+    row_ptr: Vec<usize>,
+    /// interleaved `(column, value)` pairs, row-major.
+    entries: Vec<(u32, f32)>,
+    /// entry offset of each [`ROW_TILE`] row block:
+    /// `tile_ptr[t] = row_ptr[min(t·ROW_TILE, rows)]`; len = n_tiles + 1.
+    tile_ptr: Vec<usize>,
+}
+
+impl CsrMirror {
+    /// Build the mirror from a CSC matrix (one counting pass + one fill
+    /// pass, O(nnz)). The CSC original stays authoritative for per-column
+    /// access; the mirror is read-only and rebuilt when the design is
+    /// mutated (see [`crate::linalg::Design::scale_col`]).
+    pub fn build(x: &CscMatrix) -> CsrMirror {
+        let (rows, cols) = (x.rows(), x.cols());
+        let mut row_ptr = vec![0usize; rows + 1];
+        for j in 0..cols {
+            for &r in x.col(j).0 {
+                row_ptr[r as usize + 1] += 1;
+            }
+        }
+        for i in 0..rows {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let nnz = *row_ptr.last().unwrap_or(&0);
+        debug_assert_eq!(nnz, x.nnz());
+        let mut entries = vec![(0u32, 0.0f32); nnz];
+        // next write slot per row (the filled prefix restores row_ptr)
+        let mut cursor = row_ptr.clone();
+        for j in 0..cols {
+            let (ridx, vals) = x.col(j);
+            for (&r, &v) in ridx.iter().zip(vals.iter()) {
+                let c = &mut cursor[r as usize];
+                entries[*c] = (j as u32, v);
+                *c += 1;
+            }
+        }
+        let n_tiles = if rows == 0 { 0 } else { (rows + ROW_TILE - 1) / ROW_TILE };
+        let mut tile_ptr = Vec::with_capacity(n_tiles + 1);
+        for t in 0..=n_tiles {
+            tile_ptr.push(row_ptr[(t * ROW_TILE).min(rows)]);
+        }
+        CsrMirror { rows, cols, row_ptr, entries, tile_ptr }
+    }
+
+    /// Number of rows m.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns p.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Number of [`ROW_TILE`] row blocks (0 for an empty matrix).
+    #[inline]
+    pub fn n_tiles(&self) -> usize {
+        self.tile_ptr.len().saturating_sub(1)
+    }
+
+    /// Row range `[lo, hi)` of tile `t`.
+    #[inline]
+    pub fn tile_rows(&self, t: usize) -> (usize, usize) {
+        (t * ROW_TILE, ((t + 1) * ROW_TILE).min(self.rows))
+    }
+
+    /// Number of nonzeros inside tile `t` (scan-cost accounting).
+    #[inline]
+    pub fn tile_nnz(&self, t: usize) -> usize {
+        self.tile_ptr[t + 1] - self.tile_ptr[t]
+    }
+
+    /// Row offsets (len = rows + 1) — the scan kernel's index.
+    #[inline]
+    pub(crate) fn row_ptr(&self) -> &[usize] {
+        &self.row_ptr
+    }
+
+    /// Interleaved `(col, val)` pairs, row-major.
+    #[inline]
+    pub(crate) fn entries(&self) -> &[(u32, f32)] {
+        &self.entries
+    }
+}
+
+/// Whether `SFW_NO_MIRROR=1` is set — the opt-out that pins every sparse
+/// scan to the classic per-column gather path (read once per [`Design`]
+/// at first scan; numerics are unaffected either way, see the module docs
+/// of [`crate::linalg::kernel::scan`]).
+///
+/// [`Design`]: crate::linalg::Design
+pub fn mirror_disabled() -> bool {
+    std::env::var_os("SFW_NO_MIRROR").map_or(false, |v| v == "1")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::CscBuilder;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn build_small_roundtrip() {
+        // [[1, 0, 2],
+        //  [0, 3, 0],
+        //  [4, 0, 5]]
+        let mut b = CscBuilder::new(3, 3);
+        b.push(0, 0, 1.0);
+        b.push(2, 0, 4.0);
+        b.push(1, 1, 3.0);
+        b.push(0, 2, 2.0);
+        b.push(2, 2, 5.0);
+        let x = b.build();
+        let m = CsrMirror::build(&x);
+        assert_eq!((m.rows(), m.cols(), m.nnz()), (3, 3, 5));
+        assert_eq!(m.n_tiles(), 1);
+        assert_eq!(m.row_ptr(), &[0, 2, 3, 5]);
+        // rows hold ascending columns
+        assert_eq!(m.entries()[0], (0, 1.0));
+        assert_eq!(m.entries()[1], (2, 2.0));
+        assert_eq!(m.entries()[2], (1, 3.0));
+        assert_eq!(m.entries()[3], (0, 4.0));
+        assert_eq!(m.entries()[4], (2, 5.0));
+    }
+
+    #[test]
+    fn mirror_matches_csc_entrywise() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let x = CscMatrix::random(97, 53, 0.07, &mut rng);
+        let m = CsrMirror::build(&x);
+        assert_eq!(m.nnz(), x.nnz());
+        // reconstruct each column from the mirror and compare
+        let mut cols: Vec<Vec<(u32, f32)>> = vec![Vec::new(); 53];
+        for i in 0..97 {
+            let (a, b) = (m.row_ptr()[i], m.row_ptr()[i + 1]);
+            for &(c, v) in &m.entries()[a..b] {
+                cols[c as usize].push((i as u32, v));
+            }
+        }
+        for j in 0..53 {
+            let (ridx, vals) = x.col(j);
+            let got: Vec<(u32, f32)> =
+                ridx.iter().zip(vals.iter()).map(|(&r, &v)| (r, v)).collect();
+            assert_eq!(cols[j], got, "column {j}");
+        }
+    }
+
+    #[test]
+    fn tile_offsets_cross_boundaries() {
+        let mut b = CscBuilder::new(2 * ROW_TILE + 3, 2);
+        b.push(0, 0, 1.0);
+        b.push(ROW_TILE - 1, 0, 2.0);
+        b.push(ROW_TILE, 1, 3.0);
+        b.push(2 * ROW_TILE + 2, 1, 4.0);
+        let x = b.build();
+        let m = CsrMirror::build(&x);
+        assert_eq!(m.n_tiles(), 3);
+        assert_eq!(m.tile_nnz(0), 2);
+        assert_eq!(m.tile_nnz(1), 1);
+        assert_eq!(m.tile_nnz(2), 1);
+        assert_eq!(m.tile_rows(2), (2 * ROW_TILE, 2 * ROW_TILE + 3));
+    }
+
+    #[test]
+    fn empty_rows_and_matrix() {
+        let x = CscBuilder::new(5, 4).build();
+        let m = CsrMirror::build(&x);
+        assert_eq!(m.nnz(), 0);
+        assert_eq!(m.n_tiles(), 1);
+        assert_eq!(m.row_ptr(), &[0, 0, 0, 0, 0, 0]);
+        let empty = CscBuilder::new(0, 0).build();
+        let m0 = CsrMirror::build(&empty);
+        assert_eq!(m0.n_tiles(), 0);
+    }
+}

@@ -5,11 +5,13 @@
 //! residual axpys). The wrapper also owns the per-column caches the paper's
 //! implementation precomputes (§4.2): `σᵢ = zᵢᵀy` and `‖zᵢ‖²`.
 
+use super::csr::{mirror_disabled, CsrMirror};
 use super::dense::DenseMatrix;
-use super::kernel::scan::{multi_dot_dense, multi_dot_sparse, Cols};
+use super::kernel::scan::{mirror_multi_dot, multi_dot_dense, multi_dot_sparse, Cols};
 use super::kernel::KernelScratch;
 use super::ops;
 use super::sparse::CscMatrix;
+use std::sync::OnceLock;
 
 /// Storage for a design matrix.
 #[derive(Clone, Debug)]
@@ -19,18 +21,52 @@ pub enum Storage {
 }
 
 /// An m×p design matrix with unified column access.
-#[derive(Clone, Debug)]
+///
+/// Sparse designs additionally carry a lazily-built row-major mirror
+/// ([`CsrMirror`], DESIGN.md §10) that the multi-column scans stream
+/// instead of gathering, whenever the sampled-column count clears the
+/// [`Self::mirror_profitable`] crossover. The mirror is built once per
+/// design on first profitable scan (`SFW_NO_MIRROR=1` opts out) and
+/// invalidated by any mutation ([`Self::scale_col`] /
+/// [`Self::storage_mut`]); numerics are identical either way (the sparse
+/// scan contract in [`crate::linalg::kernel::scan`]).
+#[derive(Debug)]
 pub struct Design {
     storage: Storage,
+    /// `None` inside = mirror unavailable (dense storage, empty matrix,
+    /// or `SFW_NO_MIRROR=1`); unset = not yet requested.
+    mirror: OnceLock<Option<CsrMirror>>,
 }
+
+impl Clone for Design {
+    /// Clones the storage only; the clone rebuilds its mirror lazily on
+    /// first use (keeps a clone at 1× nnz until it actually scans).
+    fn clone(&self) -> Self {
+        Self { storage: self.storage.clone(), mirror: OnceLock::new() }
+    }
+}
+
+/// Crossover cost model of [`Design::mirror_profitable`], in units of one
+/// streamed mirror entry (≈ a prefetched 8-byte load + slot check):
+/// fixed per-sampled-column overhead of the gather path — the dependent
+/// cold-cache chain through `col_ptr` and the column's row/value lines
+/// plus cursor + sample-sort bookkeeping, which dominates on
+/// multi-million-column designs averaging a handful of nonzeros per
+/// column. See `docs/adr/ADR-003-csr-mirror-scan.md` for the calibration
+/// reasoning.
+pub const GATHER_COL_COST: f64 = 160.0;
+
+/// Per-gathered-nonzero cost of the gather path in streamed-entry units
+/// (a random `q[row]` access vs. a prefetched stream load).
+pub const GATHER_NNZ_COST: f64 = 3.0;
 
 impl Design {
     pub fn dense(x: DenseMatrix) -> Self {
-        Self { storage: Storage::Dense(x) }
+        Self { storage: Storage::Dense(x), mirror: OnceLock::new() }
     }
 
     pub fn sparse(x: CscMatrix) -> Self {
-        Self { storage: Storage::Sparse(x) }
+        Self { storage: Storage::Sparse(x), mirror: OnceLock::new() }
     }
 
     #[inline]
@@ -38,9 +74,50 @@ impl Design {
         &self.storage
     }
 
+    /// Mutable storage access. Drops the CSR mirror (if built): the
+    /// mirror is a read-only derivative of the nonzeros and is rebuilt
+    /// lazily after any mutation.
     #[inline]
     pub fn storage_mut(&mut self) -> &mut Storage {
+        let _ = self.mirror.take();
         &mut self.storage
+    }
+
+    /// The row-major mirror of a sparse design, built on first call
+    /// (O(nnz), one counting + one fill pass). `None` for dense storage,
+    /// empty matrices, and under `SFW_NO_MIRROR=1`.
+    pub fn mirror(&self) -> Option<&CsrMirror> {
+        self.mirror
+            .get_or_init(|| match &self.storage {
+                Storage::Sparse(x) if x.nnz() > 0 && !mirror_disabled() => {
+                    Some(CsrMirror::build(x))
+                }
+                _ => None,
+            })
+            .as_ref()
+    }
+
+    /// κ-crossover of the sparse scan engine: whether streaming the whole
+    /// mirror beats gathering `kappa` columns. The gather path pays
+    /// [`GATHER_COL_COST`] per sampled column plus [`GATHER_NNZ_COST`]
+    /// per gathered nonzero (`s̄ = nnz/p` on average); the mirror streams
+    /// all `nnz` entries at unit cost **plus one per-slot add per row
+    /// tile** (the tile-order partial merge, `n_tiles · κ`). A 10-column
+    /// sample on an E2006-scale design therefore stays on the gather
+    /// path, while κ = 2% samples of few-nonzeros-per-column text designs
+    /// — and every full sweep (κ = p) on designs up to hundreds of row
+    /// tiles — stream the mirror; on extremely tall designs the merge
+    /// term correctly pushes small samples back to the gather path.
+    /// Always `false` for dense storage. The choice never affects
+    /// results, only speed.
+    pub fn mirror_profitable(&self, kappa: usize) -> bool {
+        let Storage::Sparse(x) = &self.storage else { return false };
+        let (nnz, p) = (x.nnz() as f64, x.cols().max(1) as f64);
+        let tiles = ((x.rows() + super::kernel::ROW_TILE - 1) / super::kernel::ROW_TILE)
+            .max(1) as f64;
+        nnz > 0.0
+            && kappa as f64 * (GATHER_COL_COST + GATHER_NNZ_COST * (nnz / p) - tiles)
+                >= nnz
     }
 
     #[inline]
@@ -112,28 +189,30 @@ impl Design {
         }
     }
 
-    /// out = Xᵀ·v (p dot products, row-tiled multi-column engine).
+    /// out = Xᵀ·v (p dot products, row-tiled multi-column engine; sparse
+    /// designs stream the CSR mirror — κ = p always clears the
+    /// crossover).
     pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
-        match &self.storage {
-            Storage::Dense(x) => x.tr_matvec(v, out),
-            Storage::Sparse(x) => x.tr_matvec(v, out),
-        }
+        let mut scratch = KernelScratch::new();
+        self.tr_matvec_with(v, out, &mut scratch);
     }
 
     /// [`Self::tr_matvec`] with a caller-owned scratch arena — the
     /// allocation-free form used by loops (power iteration, benches).
     pub fn tr_matvec_with(&self, v: &[f64], out: &mut [f64], scratch: &mut KernelScratch) {
-        match &self.storage {
-            Storage::Dense(x) => x.tr_matvec(v, out),
-            Storage::Sparse(x) => x.tr_matvec_with(v, out, scratch),
-        }
+        self.multi_col_dot_all(v, out, scratch);
     }
 
-    /// `out[k] = z_{cols[k]} · v` for an arbitrary column subset — the
-    /// cache-blocked multi-column scan (DESIGN.md §9) shared by the
-    /// stochastic vertex search, the deterministic-FW full sweep and the
-    /// screening passes. Exactly `cols.len()` dot products in the paper's
-    /// accounting.
+    /// `out[k] = z_{cols[k]} · v` for an arbitrary **duplicate-free**
+    /// column subset — the cache-blocked multi-column scan (DESIGN.md §9)
+    /// shared by the stochastic vertex search, the deterministic-FW full
+    /// sweep and the screening passes. Exactly `cols.len()` dot products
+    /// in the paper's accounting. Sparse designs route through the
+    /// gather-free CSR mirror when the sample clears
+    /// [`Self::mirror_profitable`] (bit-identical either way —
+    /// DESIGN.md §10). Duplicate indices are a caller error: the mirror's
+    /// slot map can hold one slot per column (debug-asserted; every
+    /// in-crate caller passes a sample or survivor set, which are sets).
     pub fn multi_col_dot(
         &self,
         cols: &[usize],
@@ -143,7 +222,33 @@ impl Design {
     ) {
         match &self.storage {
             Storage::Dense(x) => multi_dot_dense(x, Cols::Idx(cols), v, out),
-            Storage::Sparse(x) => multi_dot_sparse(x, Cols::Idx(cols), v, out, scratch),
+            Storage::Sparse(x) => {
+                if self.mirror_profitable(cols.len()) {
+                    if let Some(m) = self.mirror() {
+                        return mirror_multi_dot(m, Cols::Idx(cols), v, out, scratch);
+                    }
+                }
+                multi_dot_sparse(x, Cols::Idx(cols), v, out, scratch)
+            }
+        }
+    }
+
+    /// [`Self::multi_col_dot`] over **all** p columns without
+    /// materializing the identity index set (`tr_matvec`, the
+    /// deterministic-FW unscreened sweep). Arithmetic is identical to
+    /// `multi_col_dot` with `cols = [0, 1, …, p)`.
+    pub fn multi_col_dot_all(&self, v: &[f64], out: &mut [f64], scratch: &mut KernelScratch) {
+        match &self.storage {
+            Storage::Dense(x) => multi_dot_dense(x, Cols::All(x.cols()), v, out),
+            Storage::Sparse(x) => {
+                let p = x.cols();
+                if self.mirror_profitable(p) {
+                    if let Some(m) = self.mirror() {
+                        return mirror_multi_dot(m, Cols::All(p), v, out, scratch);
+                    }
+                }
+                multi_dot_sparse(x, Cols::All(p), v, out, scratch)
+            }
         }
     }
 
@@ -157,8 +262,11 @@ impl Design {
 
     /// Scale column j by s (standardization). Same precision contract as
     /// [`CscMatrix::scale_col`]: widen to f64 exactly, one f64 multiply,
-    /// one rounding back to f32.
+    /// one rounding back to f32. Invalidates the CSR mirror (rebuilt
+    /// lazily — standardization runs before any scan, so in practice the
+    /// mirror is built exactly once, after the last scale pass).
     pub fn scale_col(&mut self, j: usize, s: f64) {
+        let _ = self.mirror.take();
         match &mut self.storage {
             Storage::Dense(x) => {
                 if s == 1.0 {
@@ -309,6 +417,67 @@ mod tests {
         }));
         let l = x.spectral_norm_sq(100, 11);
         assert!((l - 4.0).abs() < 1e-6, "lambda {l}");
+    }
+
+    #[test]
+    fn mirror_lifecycle_and_equivalence() {
+        let (_, xs) = dense_and_sparse_pair(40, 30, 7);
+        // dense designs never mirror
+        let (xd, _) = dense_and_sparse_pair(40, 30, 7);
+        assert!(xd.mirror().is_none());
+        assert!(!xd.mirror_profitable(30));
+        // full sweeps always clear the crossover on sparse designs
+        assert!(xs.mirror_profitable(30));
+        if crate::linalg::csr::mirror_disabled() {
+            assert!(xs.mirror().is_none());
+            return; // equivalence is vacuous (both calls take the gather path)
+        }
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let v: Vec<f64> = (0..40).map(|_| rng.gaussian()).collect();
+        let cols: Vec<usize> = (0..30).step_by(2).collect();
+        let mut scratch = KernelScratch::new();
+        let mut via_design = vec![0.0; cols.len()];
+        xs.multi_col_dot(&cols, &v, &mut via_design, &mut scratch);
+        assert!(xs.mirror().is_some(), "profitable scan must build the mirror");
+        // bit-identical to the explicit gather path
+        let Storage::Sparse(csc) = xs.storage() else { panic!() };
+        let mut gather = vec![0.0; cols.len()];
+        multi_dot_sparse(csc, Cols::Idx(&cols), &v, &mut gather, &mut scratch);
+        for (a, b) in via_design.iter().zip(gather.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // mutation invalidates; results stay consistent after rescale
+        let mut xs = xs;
+        xs.scale_col(0, 2.0);
+        let mut after = vec![0.0; cols.len()];
+        xs.multi_col_dot(&cols, &v, &mut after, &mut scratch);
+        assert!((after[0] - 2.0 * via_design[0]).abs() < 1e-9 * (1.0 + after[0].abs()));
+        // clones drop the built mirror and rebuild on demand
+        let xc = xs.clone();
+        let mut cloned = vec![0.0; cols.len()];
+        xc.multi_col_dot(&cols, &v, &mut cloned, &mut scratch);
+        for (a, b) in cloned.iter().zip(after.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn crossover_rejects_tiny_samples() {
+        // ~30 nnz/col over 4000 columns (dense-ish columns, where the
+        // gather path amortizes its per-column overhead): a 10-column
+        // sample must gather, the full sweep must stream, and the
+        // crossover sits exactly where the cost model says.
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let x = Design::sparse(CscMatrix::random(600, 4000, 0.05, &mut rng));
+        assert!(!x.mirror_profitable(10));
+        assert!(x.mirror_profitable(4000));
+        let nnz = x.nnz() as f64;
+        let s_bar = nnz / 4000.0;
+        let tiles = 1.0; // 600 rows = one ROW_TILE block
+        let threshold = (nnz / (GATHER_COL_COST + GATHER_NNZ_COST * s_bar - tiles))
+            .ceil() as usize;
+        assert!(!x.mirror_profitable(threshold.saturating_sub(1)));
+        assert!(x.mirror_profitable(threshold + 1));
     }
 
     #[test]

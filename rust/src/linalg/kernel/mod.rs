@@ -136,6 +136,18 @@ pub struct KernelScratch {
     pub(crate) qf: Vec<f32>,
     /// f64 gradient/dot output buffer (vertex search, screening passes)
     pub(crate) grad: Vec<f64>,
+    /// column → sample-slot map of the mirror scan (`u32::MAX` = not
+    /// sampled); sized p, reset by-sample after each scan so it stays warm
+    pub(crate) slot_map: Vec<u32>,
+    /// 1-bit-per-column membership mirror of `slot_map` — the dense
+    /// pre-check the mirror scan's inner loop reads (64× less cache
+    /// pressure than the map on the ~98% of entries that miss)
+    pub(crate) slot_bits: Vec<u64>,
+    /// per-slot partial sums of the current row tile (mirror scan)
+    pub(crate) tile_acc: Vec<f64>,
+    /// per-(tile, slot) partial table of one shard of the row-tile-sharded
+    /// mirror scan (`parallel::mirror_multi_dot_sharded`)
+    pub(crate) tile_partials: Vec<f64>,
 }
 
 impl KernelScratch {

@@ -23,8 +23,37 @@
 //! `solvers::sfw::NativeBackend` bit-for-bit. With `m ≤ ROW_TILE`
 //! (every unit-test-sized problem) the blocked scan degenerates to the
 //! plain per-column kernel call.
+//!
+//! ## The sparse scan contract (gather path ≡ mirror path, bit-for-bit)
+//!
+//! Every sparse multi-column scan in this crate — the per-column CSC
+//! gather walk ([`multi_dot_sparse`]) and the gather-free CSR-mirror
+//! stream ([`mirror_multi_dot`], `parallel::mirror_multi_dot_sharded`) —
+//! computes, for each selected column `j`,
+//!
+//! ```text
+//! out[k] = (((partial₀ + partial₁) + partial₂) + …)          (tile order)
+//! partialₜ = Σ over column-j nonzeros in rows [t·ROW_TILE, (t+1)·ROW_TILE)
+//!            of (val as f64)·v[row], summed sequentially in row order
+//! ```
+//!
+//! with one f64 rounding per multiply and per add, no FMA. The gather
+//! path realizes the inner sum with [`scalar::gather_dot`] (pinned — the
+//! dispatched FMA gather would fuse roundings and break the equality);
+//! the mirror path realizes it by walking rows in order and
+//! scatter-accumulating into per-slot tile partials, which visits each
+//! column's nonzeros in exactly the same ascending-row order. Because
+//! both paths perform the identical sequence of floating-point
+//! operations, results are **bit-identical** across storage walks
+//! (`SFW_NO_MIRROR=1` is numerically a no-op), across SIMD backends, and
+//! across any row-tile or sample sharding that reduces per-tile partials
+//! in tile order — the property `rust/tests/prop_csr_scan.rs` enforces
+//! and the Native ≡ Parallel / Sfw(κ=p) ≡ FwDet conformance contracts
+//! ride on. (The single-column [`CscMatrix::col_dot`] keeps the
+//! dispatched FMA gather: it feeds tolerance-level consumers only.)
 
-use super::{KernelOps, KernelScratch, ROW_TILE};
+use super::{scalar, KernelOps, KernelScratch, ROW_TILE};
+use crate::linalg::csr::CsrMirror;
 use crate::linalg::dense::DenseMatrix;
 use crate::linalg::sparse::CscMatrix;
 
@@ -103,11 +132,16 @@ pub fn multi_dot_dense(x: &DenseMatrix, cols: Cols<'_>, v: &[f64], out: &mut [f6
 }
 
 /// Sparse multi-dot: `out[k] = colsₖ · v`, row-tiled with per-column nnz
-/// cursors. The tile walk visits columns in ascending column-index order
-/// (`scratch.order`) for `col_ptr` locality; results are independent of
-/// that order (each column only touches its own cursor/accumulator).
-pub fn multi_dot_sparse_with(
-    kops: &KernelOps,
+/// cursors — the per-column **gather path** (and the `SFW_NO_MIRROR=1` /
+/// tiny-κ fallback of the mirror engine). The tile walk visits columns in
+/// ascending column-index order (`scratch.order`) for `col_ptr` locality;
+/// results are independent of that order (each column only touches its
+/// own cursor/accumulator).
+///
+/// Per-tile segments accumulate through the *sequential* scalar gather —
+/// see the module-level sparse scan contract for why this is pinned
+/// rather than dispatched.
+pub fn multi_dot_sparse(
     x: &CscMatrix,
     cols: Cols<'_>,
     v: &[f64],
@@ -120,7 +154,7 @@ pub fn multi_dot_sparse_with(
     if m <= ROW_TILE {
         for (k, o) in out.iter_mut().enumerate() {
             let (rows, vals) = x.col(cols.get(k));
-            *o = (kops.gather_dot)(rows, vals, v);
+            *o = scalar::gather_dot(rows, vals, v);
         }
         return;
     }
@@ -145,7 +179,7 @@ pub fn multi_dot_sparse_with(
             // rows are sorted within a column: binary-search the tile end
             let seg = rows[cur..].partition_point(|&r| (r as usize) < hi);
             if seg > 0 {
-                out[k] += (kops.gather_dot)(&rows[cur..cur + seg], &vals[cur..cur + seg], v);
+                out[k] += scalar::gather_dot(&rows[cur..cur + seg], &vals[cur..cur + seg], v);
                 scratch.cursors[k] = cur + seg;
             }
         }
@@ -153,15 +187,176 @@ pub fn multi_dot_sparse_with(
     scratch.order = order;
 }
 
-/// [`multi_dot_sparse_with`] on the active dispatch table.
-pub fn multi_dot_sparse(
-    x: &CscMatrix,
+// ---- gather-free CSR-mirror scan (DESIGN.md §10) --------------------------
+
+/// Sentinel of the column → sample-slot map: "column not sampled".
+pub const SLOT_NONE: u32 = u32::MAX;
+
+/// Slot lookup of the mirror scan: either the identity (a `Cols::All`
+/// sweep — every column is its own slot, no map needed) or the
+/// bitmap-checked `u32` slot map prepared by [`mirror_prepare_slots`].
+#[derive(Clone, Copy)]
+pub enum Slots<'a> {
+    /// slot k = column k (full sweep)
+    Identity,
+    /// sampled subset: 1-bit membership + column → slot map
+    Map {
+        /// `map[j]` = slot of column j, or [`SLOT_NONE`]
+        map: &'a [u32],
+        /// bit j set ⇔ column j sampled (the cheap inner-loop pre-check)
+        bits: &'a [u64],
+    },
+}
+
+/// Stamp the sampled columns into the scratch slot map + bitmap (grown to
+/// `p` on first use, then reused warm). `cols` must be duplicate-free —
+/// every vertex-search sample and screening survivor set is. Pair with
+/// [`mirror_clear_slots`] after the scan so the arena stays clean at O(κ)
+/// cost instead of an O(p) wipe.
+pub fn mirror_prepare_slots(cols: &[usize], p: usize, scratch: &mut KernelScratch) {
+    debug_assert!(cols.len() <= SLOT_NONE as usize);
+    if scratch.slot_map.len() < p {
+        scratch.slot_map.resize(p, SLOT_NONE);
+    }
+    let words = (p + 63) / 64;
+    if scratch.slot_bits.len() < words {
+        scratch.slot_bits.resize(words, 0);
+    }
+    for (k, &j) in cols.iter().enumerate() {
+        debug_assert!(j < p);
+        debug_assert_eq!(scratch.slot_map[j], SLOT_NONE, "duplicate sampled column {j}");
+        scratch.slot_map[j] = k as u32;
+        scratch.slot_bits[j >> 6] |= 1u64 << (j & 63);
+    }
+}
+
+/// Reset the slots stamped by [`mirror_prepare_slots`] (same `cols`).
+pub fn mirror_clear_slots(cols: &[usize], scratch: &mut KernelScratch) {
+    for &j in cols {
+        scratch.slot_map[j] = SLOT_NONE;
+        // zeroing the whole word also clears neighbours — idempotent,
+        // since every sampled bit gets its word zeroed here
+        scratch.slot_bits[j >> 6] = 0;
+    }
+}
+
+/// Add tile `t`'s per-slot partial sums into `acc` (one streaming pass
+/// over the tile's rows: `q[i]` loaded once per row, entries
+/// scatter-accumulated into the dense slot table). `acc` must be zeroed
+/// by the caller when a *partial* (rather than a running sum) is wanted;
+/// the sharded scan relies on that to materialize per-(tile, slot)
+/// partials. Rows with `q[i] == 0` contribute only exact zeros and are
+/// skipped (bit-safe: a `±0.0` add never changes a running sum that
+/// starts at `+0.0`).
+pub fn mirror_scan_tile(
+    mirror: &CsrMirror,
+    slots: Slots<'_>,
+    v: &[f64],
+    t: usize,
+    acc: &mut [f64],
+) {
+    let (lo, hi) = mirror.tile_rows(t);
+    let row_ptr = mirror.row_ptr();
+    let entries = mirror.entries();
+    match slots {
+        Slots::Identity => {
+            debug_assert_eq!(acc.len(), mirror.cols());
+            for i in lo..hi {
+                let (a, b) = (row_ptr[i], row_ptr[i + 1]);
+                if a == b {
+                    continue;
+                }
+                let qi = v[i];
+                if qi == 0.0 {
+                    continue;
+                }
+                for &(c, x) in &entries[a..b] {
+                    // safety: c < cols == acc.len() by CSC validity
+                    unsafe {
+                        *acc.get_unchecked_mut(c as usize) += x as f64 * qi;
+                    }
+                }
+            }
+        }
+        Slots::Map { map, bits } => {
+            for i in lo..hi {
+                let (a, b) = (row_ptr[i], row_ptr[i + 1]);
+                if a == b {
+                    continue;
+                }
+                let qi = v[i];
+                if qi == 0.0 {
+                    continue;
+                }
+                for &(c, x) in &entries[a..b] {
+                    let c = c as usize;
+                    // safety: c < cols ≤ 64·bits.len() == map.len() bound
+                    // (prepare_slots sizes both to p)
+                    let w = unsafe { *bits.get_unchecked(c >> 6) };
+                    if (w >> (c & 63)) & 1 != 0 {
+                        let s = unsafe { *map.get_unchecked(c) } as usize;
+                        unsafe {
+                            *acc.get_unchecked_mut(s) += x as f64 * qi;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Gather-free sparse multi-dot through the row-major mirror:
+/// `out[k] = colsₖ · v` for **all** selected columns in one streaming
+/// pass over the mirror's nonzeros. Bit-identical to
+/// [`multi_dot_sparse`] on the same inputs (see the module-level sparse
+/// scan contract): per-slot tile partials are materialized in
+/// `scratch.tile_acc` and reduced into `out` in tile order, exactly the
+/// gather path's accumulation sequence — which is also what makes the
+/// result independent of row-tile sharding
+/// (`parallel::mirror_multi_dot_sharded` reduces the same partials in
+/// the same order).
+pub fn mirror_multi_dot(
+    mirror: &CsrMirror,
     cols: Cols<'_>,
     v: &[f64],
     out: &mut [f64],
     scratch: &mut KernelScratch,
 ) {
-    multi_dot_sparse_with(super::ops(), x, cols, v, out, scratch)
+    let n = cols.len();
+    debug_assert_eq!(out.len(), n);
+    debug_assert_eq!(v.len(), mirror.rows());
+    out.fill(0.0);
+    if n == 0 || mirror.nnz() == 0 {
+        return;
+    }
+    let idx: Option<&[usize]> = match cols {
+        Cols::All(p) => {
+            debug_assert_eq!(p, mirror.cols());
+            None
+        }
+        Cols::Idx(s) => Some(s),
+    };
+    if let Some(s) = idx {
+        mirror_prepare_slots(s, mirror.cols(), scratch);
+    }
+    let mut tile_acc = std::mem::take(&mut scratch.tile_acc);
+    tile_acc.clear();
+    tile_acc.resize(n, 0.0);
+    for t in 0..mirror.n_tiles() {
+        let slots = match idx {
+            None => Slots::Identity,
+            Some(_) => Slots::Map { map: &scratch.slot_map, bits: &scratch.slot_bits },
+        };
+        mirror_scan_tile(mirror, slots, v, t, &mut tile_acc);
+        for (o, a) in out.iter_mut().zip(tile_acc.iter_mut()) {
+            *o += *a;
+            *a = 0.0;
+        }
+    }
+    scratch.tile_acc = tile_acc;
+    if let Some(s) = idx {
+        mirror_clear_slots(s, scratch);
+    }
 }
 
 /// Blocked f32 |∇ᵢ|-argmax scan over sampled dense columns — the §Perf
@@ -333,6 +528,78 @@ mod tests {
         let mut scratch = KernelScratch::new();
         multi_dot_sparse(&x, Cols::Idx(&cols), &v, &mut out, &mut scratch);
         assert_eq!(out, vec![5.0, 0.0, 21.0]);
+    }
+
+    #[test]
+    fn mirror_scan_is_bit_identical_to_gather_path() {
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        for m in [1usize, 60, ROW_TILE, ROW_TILE + 101, 2 * ROW_TILE + 3] {
+            let p = 17;
+            let mut b = CscBuilder::new(m, p);
+            for j in 0..p {
+                for i in 0..m {
+                    if rng.next_f64() < 0.02 || (i + 3 * j) % 1013 == 0 {
+                        b.push(i, j, rng.gaussian());
+                    }
+                }
+            }
+            let x = b.build();
+            let mirror = crate::linalg::csr::CsrMirror::build(&x);
+            let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let mut scratch = KernelScratch::new();
+            for cols in [&[4usize][..], &[9, 0, 16, 2][..]] {
+                let mut gather = vec![0.0; cols.len()];
+                let mut stream = vec![0.0; cols.len()];
+                multi_dot_sparse(&x, Cols::Idx(cols), &v, &mut gather, &mut scratch);
+                mirror_multi_dot(&mirror, Cols::Idx(cols), &v, &mut stream, &mut scratch);
+                for (k, (a, b)) in gather.iter().zip(stream.iter()).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "m={m} col {}: gather {a} vs mirror {b}",
+                        cols[k]
+                    );
+                }
+            }
+            // full sweep: All ≡ Idx-identity ≡ gather, all bitwise
+            let idx: Vec<usize> = (0..p).collect();
+            let mut gather = vec![0.0; p];
+            let mut all = vec![0.0; p];
+            let mut by_idx = vec![0.0; p];
+            multi_dot_sparse(&x, Cols::All(p), &v, &mut gather, &mut scratch);
+            mirror_multi_dot(&mirror, Cols::All(p), &v, &mut all, &mut scratch);
+            mirror_multi_dot(&mirror, Cols::Idx(&idx), &v, &mut by_idx, &mut scratch);
+            for j in 0..p {
+                assert_eq!(gather[j].to_bits(), all[j].to_bits(), "m={m} All col {j}");
+                assert_eq!(all[j].to_bits(), by_idx[j].to_bits(), "m={m} Idx col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_scan_handles_empty_rows_columns_and_scratch_reuse() {
+        let mut b = CscBuilder::new(2 * ROW_TILE, 5);
+        b.push(0, 0, 1.0);
+        b.push(2 * ROW_TILE - 1, 3, 3.0);
+        let x = b.build();
+        let mirror = crate::linalg::csr::CsrMirror::build(&x);
+        let mut v = vec![0.0; 2 * ROW_TILE];
+        v[0] = 5.0;
+        v[2 * ROW_TILE - 1] = 7.0;
+        let cols = [0usize, 1, 3, 4];
+        let mut out = vec![9.0; 4];
+        let mut scratch = KernelScratch::new();
+        mirror_multi_dot(&mirror, Cols::Idx(&cols), &v, &mut out, &mut scratch);
+        assert_eq!(out, vec![5.0, 0.0, 21.0, 0.0]);
+        // slot arena was cleared: a disjoint sample sees no stale slots
+        let cols2 = [2usize, 1];
+        let mut out2 = vec![1.0; 2];
+        mirror_multi_dot(&mirror, Cols::Idx(&cols2), &v, &mut out2, &mut scratch);
+        assert_eq!(out2, vec![0.0, 0.0]);
+        // and re-running the first sample reproduces it bitwise
+        let mut out3 = vec![0.0; 4];
+        mirror_multi_dot(&mirror, Cols::Idx(&cols), &v, &mut out3, &mut scratch);
+        assert_eq!(out, out3);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Linear-algebra substrate: dense/sparse matrices, vector kernels,
 //! the unified design-matrix abstraction, and standardization.
 
+pub mod csr;
 pub mod dense;
 pub mod design;
 pub mod kernel;
@@ -8,6 +9,7 @@ pub mod ops;
 pub mod sparse;
 pub mod standardize;
 
+pub use csr::CsrMirror;
 pub use dense::DenseMatrix;
 pub use design::{ColumnCache, Design, Storage};
 pub use kernel::{KernelOps, KernelScratch};

@@ -132,6 +132,14 @@ impl CscMatrix {
         (&self.row_idx[a..b], &self.vals[a..b])
     }
 
+    /// Borrow the raw CSC arrays `(col_ptr, row_idx, vals)` — the
+    /// serialization view used by the `.sfwbin` binary snapshot
+    /// ([`crate::data::cache`]); [`Self::from_parts`] is the inverse.
+    #[inline]
+    pub fn parts(&self) -> (&[usize], &[u32], &[f32]) {
+        (&self.col_ptr, &self.row_idx, &self.vals)
+    }
+
     /// zⱼᵀ·v — the hot kernel of the sparse gradient search (dispatched
     /// gather-dot; the scalar backend reproduces the historical sequential
     /// accumulation exactly).
@@ -188,9 +196,12 @@ impl CscMatrix {
         }
     }
 
-    /// out = Xᵀ·v (all columns), through the row-tiled multi-column
-    /// engine. Allocates cursor scratch for multi-tile problems; hot
-    /// loops pass a persistent arena via [`Self::tr_matvec_with`].
+    /// out = Xᵀ·v (all columns), through the row-tiled per-column gather
+    /// walk. Allocates cursor scratch for multi-tile problems; hot loops
+    /// pass a persistent arena via [`Self::tr_matvec_with`].
+    /// [`crate::linalg::Design::tr_matvec`] is the preferred entry point:
+    /// it streams the CSR mirror instead (bit-identical, gather-free —
+    /// DESIGN.md §10); this CSC walk remains as the mirror-less fallback.
     pub fn tr_matvec(&self, v: &[f64], out: &mut [f64]) {
         let mut scratch = super::kernel::KernelScratch::new();
         self.tr_matvec_with(v, out, &mut scratch);

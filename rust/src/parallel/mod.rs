@@ -9,6 +9,15 @@
 //!   selected vertex and its gradient are **bit-identical** to
 //!   [`NativeBackend`] for any thread count (the per-element work is a pure
 //!   function; sharding only re-partitions an order-preserving first-max).
+//!   Dense designs shard the *sample*; sparse designs that clear the
+//!   mirror crossover shard **row tiles** instead
+//!   ([`mirror_multi_dot_sharded`]): each shard streams a contiguous range
+//!   of the CSR mirror's `ROW_TILE` blocks and materializes per-(tile,
+//!   slot) partial sums, which the caller reduces **in tile order** — the
+//!   exact accumulation sequence of the single-threaded mirror scan and of
+//!   the per-column gather path (the sparse scan contract,
+//!   `linalg::kernel::scan`), so the result is bit-identical for any
+//!   thread count and either scan path.
 //! * [`run_tasks`] — the generic fan-out used by `path::run_path_parallel`
 //!   (grid-block chunks with intra-block warm starts) and
 //!   `coordinator::jobs::run_experiment` (dataset × solver × rep cells).
@@ -17,7 +26,12 @@
 //! state; a panicking task propagates to the caller, and results always
 //! come back in task order.
 
-use crate::linalg::kernel::scan::scan_abs_argmax_f32;
+use crate::linalg::csr::CsrMirror;
+use crate::linalg::kernel::scan::{
+    mirror_clear_slots, mirror_prepare_slots, mirror_scan_tile, scan_abs_argmax_f32, Cols,
+    Slots,
+};
+use crate::linalg::kernel::scan::mirror_multi_dot;
 use crate::linalg::{KernelScratch, Storage};
 use crate::solvers::linesearch::FwState;
 use crate::solvers::sfw::{FwBackend, NativeBackend};
@@ -85,6 +99,101 @@ pub fn shard_bounds(n: usize, shards: usize) -> Vec<(usize, usize)> {
 /// setup (~tens of µs) would dominate the κ dot products themselves.
 const DEFAULT_GRAIN: usize = 2048;
 
+/// Scratch of the row-tile-sharded mirror scan
+/// ([`mirror_multi_dot_sharded`]): one arena holding the shared
+/// column→slot map plus per-shard arenas for the tile-partial tables.
+/// Owned by long-lived callers ([`ParallelBackend`], benches) so
+/// steady-state scans allocate nothing.
+#[derive(Default)]
+pub struct MirrorShardScratch {
+    /// slot map + bitmap, prepared once per scan and read by every shard
+    slots: KernelScratch,
+    /// one arena per shard slot (`Mutex` only for `Sync`: each shard index
+    /// runs exactly once per scan, so the locks are never contended)
+    shards: Vec<Mutex<KernelScratch>>,
+}
+
+impl MirrorShardScratch {
+    /// Empty scratch; buffers grow on first scan and are then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Row-tile-sharded gather-free multi-dot: `out[k] = z_{cols[k]} · v`
+/// through the CSR mirror, with the tile range split into `threads`
+/// contiguous shards.
+///
+/// Each shard streams its tiles and materializes **per-(tile, slot)**
+/// partial sums; the reduction then adds those partials into `out` in
+/// global tile order — exactly the accumulation sequence of the
+/// single-threaded [`mirror_multi_dot`] and of the per-column gather path
+/// (the sparse scan contract in [`crate::linalg::kernel::scan`]). The
+/// result is therefore **bit-identical** for any thread count, any shard
+/// boundaries, and either scan path. `cols` must be duplicate-free.
+///
+/// Parallelism ceiling: shards = `min(threads, n_tiles)` — a tile is the
+/// contract's smallest reducible unit, so an m-row design scales to at
+/// most `⌈m / ROW_TILE⌉` ways (3 on the 16.4k-row E2006 shape). Splitting
+/// *inside* a tile would need sub-tile partials, i.e. a different pinned
+/// reduction order — see ADR-003's consequences before changing it.
+pub fn mirror_multi_dot_sharded(
+    threads: usize,
+    mirror: &CsrMirror,
+    cols: &[usize],
+    v: &[f64],
+    out: &mut [f64],
+    scratch: &mut MirrorShardScratch,
+) {
+    let n = cols.len();
+    debug_assert_eq!(out.len(), n);
+    let n_tiles = mirror.n_tiles();
+    let n_shards = threads.max(1).min(n_tiles.max(1));
+    if n_shards <= 1 || n == 0 || mirror.nnz() == 0 {
+        return mirror_multi_dot(mirror, Cols::Idx(cols), v, out, &mut scratch.slots);
+    }
+    mirror_prepare_slots(cols, mirror.cols(), &mut scratch.slots);
+    if scratch.shards.len() < n_shards {
+        scratch
+            .shards
+            .resize_with(n_shards, || Mutex::new(KernelScratch::new()));
+    }
+    let tile_shards = shard_bounds(n_tiles, n_shards);
+    let slots = &scratch.slots;
+    let shard_arenas = &scratch.shards;
+    run_tasks(threads, tile_shards.len(), |s| {
+        let (t_lo, t_hi) = tile_shards[s];
+        let mut guard = shard_arenas[s].lock().unwrap();
+        let arena = &mut *guard;
+        let mut partials = std::mem::take(&mut arena.tile_partials);
+        partials.clear();
+        partials.resize((t_hi - t_lo) * n, 0.0);
+        for (ti, t) in (t_lo..t_hi).enumerate() {
+            mirror_scan_tile(
+                mirror,
+                Slots::Map { map: &slots.slot_map, bits: &slots.slot_bits },
+                v,
+                t,
+                &mut partials[ti * n..(ti + 1) * n],
+            );
+        }
+        arena.tile_partials = partials;
+    });
+    // reduce the per-(tile, slot) partials in global tile order — the
+    // fixed reduction order the determinism contract requires
+    out.fill(0.0);
+    for (s, &(t_lo, t_hi)) in tile_shards.iter().enumerate() {
+        let guard = shard_arenas[s].lock().unwrap();
+        for ti in 0..(t_hi - t_lo) {
+            let part = &guard.tile_partials[ti * n..(ti + 1) * n];
+            for (o, a) in out.iter_mut().zip(part.iter()) {
+                *o += *a;
+            }
+        }
+    }
+    mirror_clear_slots(cols, &mut scratch.slots);
+}
+
 /// Parallel [`FwBackend`]: shards the sampled vertex search across cores
 /// with a fixed-order reduction.
 ///
@@ -111,6 +220,8 @@ pub struct ParallelBackend {
     /// each shard index runs exactly once per vertex search, so the locks
     /// are never contended)
     shard_scratch: Vec<Mutex<KernelScratch>>,
+    /// arena of the row-tile-sharded sparse mirror scan
+    mirror_scratch: MirrorShardScratch,
 }
 
 impl ParallelBackend {
@@ -123,7 +234,37 @@ impl ParallelBackend {
             qf: Vec::new(),
             native: NativeBackend::new(),
             shard_scratch: Vec::new(),
+            mirror_scratch: MirrorShardScratch::new(),
         }
+    }
+
+    /// Row-tile-sharded sparse vertex search through the CSR mirror: raw
+    /// sampled dots via [`mirror_multi_dot_sharded`], then the same
+    /// `∇ᵢ = −σᵢ + c·(zᵢ·q̂)` transform and in-order first-max as
+    /// [`NativeBackend`] — bit-identical to it for any thread count.
+    fn select_vertex_mirror(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        sample: &[usize],
+        mirror: &CsrMirror,
+    ) -> (usize, f64) {
+        let mut g = std::mem::take(&mut self.mirror_scratch.slots.grad);
+        g.resize(sample.len(), 0.0);
+        mirror_multi_dot_sharded(
+            self.threads,
+            mirror,
+            sample,
+            state.q_hat_raw(),
+            &mut g,
+            &mut self.mirror_scratch,
+        );
+        // same transform + reduce definitions as NativeBackend — shared
+        // code, not a lockstep copy
+        state.apply_grad_transform(prob, sample, &mut g);
+        let (best_k, best_g) = crate::solvers::sfw::first_max_abs(&g);
+        self.mirror_scratch.slots.grad = g;
+        (sample[best_k], best_g)
     }
 
     /// Override the minimum per-shard sample count (testing / tuning).
@@ -150,6 +291,21 @@ impl FwBackend for ParallelBackend {
         state: &FwState,
         sample: &[usize],
     ) -> (usize, f64) {
+        // Sparse designs past the mirror crossover shard row tiles, not
+        // the sample: the scan streams the whole mirror once regardless of
+        // κ, so column-sharding it would multiply the stream per shard.
+        if matches!(prob.x.storage(), Storage::Sparse(_))
+            && prob.x.mirror_profitable(sample.len())
+        {
+            if let Some(mirror) = prob.x.mirror() {
+                if self.threads > 1 && mirror.n_tiles() > 1 {
+                    return self.select_vertex_mirror(prob, state, sample, mirror);
+                }
+                // one row tile (m ≤ ROW_TILE): nothing to shard — run the
+                // serial mirror scan (still bit-identical)
+                return self.native.select_vertex(prob, state, sample);
+            }
+        }
         let n_shards = self.shards_for(sample.len());
         if n_shards <= 1 {
             // serial fallback: delegate to the reference implementation
@@ -208,19 +364,9 @@ impl FwBackend for ParallelBackend {
             let mut g = std::mem::take(&mut scratch.grad);
             g.resize(hi - lo, 0.0);
             state.grad_multi(prob, &sample[lo..hi], &mut g, scratch);
-            let mut best_abs = -1.0f64;
-            let mut best_g = 0.0f64;
-            let mut best_k = lo;
-            for (k, &gi) in g.iter().enumerate() {
-                let a = gi.abs();
-                if a > best_abs {
-                    best_abs = a;
-                    best_g = gi;
-                    best_k = lo + k;
-                }
-            }
+            let (k, gv) = crate::solvers::sfw::first_max_abs(&g);
             scratch.grad = g;
-            (best_abs, best_g, best_k)
+            (gv.abs(), gv, lo + k)
         });
         let mut best_abs = -1.0f64;
         let mut best_g = 0.0f64;
@@ -295,6 +441,65 @@ mod tests {
     #[test]
     fn available_threads_positive() {
         assert!(available_threads() >= 1);
+    }
+
+    #[test]
+    fn sharded_mirror_scan_is_bit_identical_for_any_thread_count() {
+        use crate::linalg::kernel::ROW_TILE;
+        use crate::linalg::CscBuilder;
+        use crate::util::rng::Xoshiro256;
+        // multi-tile sparse matrix with uneven tile populations
+        let (m, p) = (2 * ROW_TILE + 37, 300usize);
+        let mut rng = Xoshiro256::seed_from_u64(99);
+        let mut b = CscBuilder::new(m, p);
+        for j in 0..p {
+            let step = 401 + (j % 13) * 97;
+            for i in (j % step..m).step_by(step) {
+                b.push(i, j, rng.gaussian());
+            }
+        }
+        let x = b.build();
+        let mirror = crate::linalg::csr::CsrMirror::build(&x);
+        let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cols: Vec<usize> = (0..p).step_by(3).collect();
+        let mut serial = vec![0.0; cols.len()];
+        let mut scratch = KernelScratch::new();
+        crate::linalg::kernel::scan::mirror_multi_dot(
+            &mirror,
+            crate::linalg::kernel::scan::Cols::Idx(&cols),
+            &v,
+            &mut serial,
+            &mut scratch,
+        );
+        for threads in [1usize, 2, 3, 4, 8] {
+            let mut sharded = vec![0.0; cols.len()];
+            let mut ms = MirrorShardScratch::new();
+            mirror_multi_dot_sharded(threads, &mirror, &cols, &v, &mut sharded, &mut ms);
+            for (k, (a, b)) in serial.iter().zip(sharded.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "threads={threads} col {}: {a} vs {b}",
+                    cols[k]
+                );
+            }
+            // scratch reuse: a second scan reproduces the first bitwise
+            let mut again = vec![0.0; cols.len()];
+            mirror_multi_dot_sharded(threads, &mirror, &cols, &v, &mut again, &mut ms);
+            assert_eq!(sharded, again, "threads={threads} scratch reuse");
+        }
+        // the gather fallback agrees bit-for-bit too (the scan contract)
+        let mut gather = vec![0.0; cols.len()];
+        crate::linalg::kernel::scan::multi_dot_sparse(
+            &x,
+            crate::linalg::kernel::scan::Cols::Idx(&cols),
+            &v,
+            &mut gather,
+            &mut scratch,
+        );
+        for (a, b) in serial.iter().zip(gather.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "mirror vs gather");
+        }
     }
 
     #[test]

@@ -21,9 +21,8 @@
 //! `λ* = (S − δ̃∇ᵢ − F) / (S − 2δ̃Gᵢ + δ̃²‖zᵢ‖²)` with `Gᵢ = ∇ᵢ + σᵢ = zᵢᵀq`.
 
 use super::Problem;
-use crate::linalg::kernel::scan::{multi_dot_dense, multi_dot_sparse, Cols};
 use crate::linalg::ops;
-use crate::linalg::{KernelScratch, Storage};
+use crate::linalg::KernelScratch;
 
 /// Mutable Frank-Wolfe iterate with scaled representation.
 pub struct FwState {
@@ -165,30 +164,49 @@ impl FwState {
         scratch: &mut KernelScratch,
     ) {
         prob.x.multi_col_dot(cols, &self.q_hat, out, scratch);
+        self.apply_grad_transform(prob, cols, out);
+    }
+
+    /// Turn raw q̂-dots into gradients in place:
+    /// `dots[k] ← −σ_{cols[k]} + c·dots[k]`. The **single definition** of
+    /// the gradient transform — [`Self::grad_multi`] and the parallel
+    /// row-tile-sharded mirror search both call it, so the
+    /// Native ≡ Parallel bit-identity contract cannot drift through a
+    /// divergent copy of this arithmetic.
+    pub(crate) fn apply_grad_transform(
+        &self,
+        prob: &Problem<'_>,
+        cols: &[usize],
+        dots: &mut [f64],
+    ) {
         for (k, &j) in cols.iter().enumerate() {
-            out[k] = -prob.cache.sigma[j] + self.c * out[k];
+            dots[k] = -prob.cache.sigma[j] + self.c * dots[k];
         }
     }
 
     /// [`Self::grad_multi`] over **all** p columns without materializing
     /// the identity index set (deterministic FW without screening).
-    /// Arithmetic is identical to `grad_multi` with `cols = [0, 1, …, p)`.
+    /// Arithmetic is identical to `grad_multi` with `cols = [0, 1, …, p)`
+    /// (both route through the same [`crate::linalg::Design`] scan
+    /// engine, CSR mirror included).
     pub fn grad_multi_all(
         &self,
         prob: &Problem<'_>,
         out: &mut [f64],
         scratch: &mut KernelScratch,
     ) {
-        let p = prob.p();
-        match prob.x.storage() {
-            Storage::Dense(x) => multi_dot_dense(x, Cols::All(p), &self.q_hat, out),
-            Storage::Sparse(x) => {
-                multi_dot_sparse(x, Cols::All(p), &self.q_hat, out, scratch)
-            }
-        }
+        prob.x.multi_col_dot_all(&self.q_hat, out, scratch);
         for (j, o) in out.iter_mut().enumerate() {
             *o = -prob.cache.sigma[j] + self.c * *o;
         }
+    }
+
+    /// Scaled fitted values `q̂` (so `q = c·q̂`) — the raw input of the
+    /// row-tile-sharded mirror scan in [`crate::parallel`] (the `c`
+    /// factor is applied afterwards by [`Self::apply_grad_transform`]).
+    #[inline]
+    pub(crate) fn q_hat_raw(&self) -> &[f64] {
+        &self.q_hat
     }
 
     /// Objective `½‖Xα − y‖² = ½yᵀy + ½S − F`.

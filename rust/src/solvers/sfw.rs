@@ -21,6 +21,27 @@ use super::{Problem, RunResult, SolveOptions};
 use crate::screening::Screener;
 use crate::util::rng::Xoshiro256;
 
+/// First maximum of `|g[k]|` in slot order (strict `>` keeps the first
+/// occurrence), returning `(k, g[k])` — the **single definition** of the
+/// vertex-search reduce shared by [`NativeBackend`], the parallel
+/// backends' reductions and the mirror path, so tie-breaking can never
+/// drift between copies (the Native ≡ Parallel contract depends on every
+/// path agreeing on it).
+pub(crate) fn first_max_abs(g: &[f64]) -> (usize, f64) {
+    let mut best_k = 0usize;
+    let mut best_g = 0.0f64;
+    let mut best_abs = -1.0f64;
+    for (k, &gi) in g.iter().enumerate() {
+        let a = gi.abs();
+        if a > best_abs {
+            best_abs = a;
+            best_g = gi;
+            best_k = k;
+        }
+    }
+    (best_k, best_g)
+}
+
 /// Pluggable execution backend for the sampled vertex search + step.
 pub trait FwBackend {
     /// Given the sampled index set, return `(i*, ∇f(α)_{i*})`.
@@ -43,8 +64,10 @@ pub trait FwBackend {
 /// exact values. The κ = p (deterministic) case and sparse designs use the
 /// all-f64 blocked scan: κ = p must match
 /// [`crate::solvers::fw::FrankWolfe`] bit-for-bit (both call
-/// [`FwState::grad_multi`], the shared arithmetic path), and sparse dots
-/// gain nothing from f32 accumulation (latency-bound gathers).
+/// [`FwState::grad_multi`], the shared arithmetic path). Sparse samples
+/// past the [`crate::linalg::Design::mirror_profitable`] crossover stream
+/// the gather-free CSR mirror inside that path (DESIGN.md §10) — same
+/// bits, stream-bound instead of gather-bound.
 #[derive(Default)]
 pub struct NativeBackend {
     scratch: crate::linalg::KernelScratch,
@@ -87,17 +110,7 @@ impl FwBackend for NativeBackend {
         let mut g = std::mem::take(&mut self.scratch.grad);
         g.resize(sample.len(), 0.0);
         state.grad_multi(prob, sample, &mut g, &mut self.scratch);
-        let mut best_k = 0usize;
-        let mut best_g = 0.0f64;
-        let mut best_abs = -1.0f64;
-        for (k, &gi) in g.iter().enumerate() {
-            let a = gi.abs();
-            if a > best_abs {
-                best_abs = a;
-                best_g = gi;
-                best_k = k;
-            }
-        }
+        let (best_k, best_g) = first_max_abs(&g);
         self.scratch.grad = g;
         (sample[best_k], best_g)
     }
@@ -202,10 +215,16 @@ impl<B: FwBackend> StochasticFw<B> {
                     }
                 }
             } else {
-                if self.sampler.as_ref().map(|s| s.len()) != Some(pool_len) {
+                // keep one sampler for the whole run and resize it in
+                // place when screening shrinks the pool — no per-pass
+                // reallocation of the p-sized mark array
+                if self.sampler.is_none() {
                     self.sampler = Some(crate::util::rng::SubsetSampler::new(pool_len));
                 }
                 let sampler = self.sampler.as_mut().unwrap();
+                if sampler.len() != pool_len {
+                    sampler.resize(pool_len);
+                }
                 sampler.sample(&mut self.rng, kappa, &mut self.sample);
                 if let Some(s) = &screen {
                     // map positions in the surviving set to column indices

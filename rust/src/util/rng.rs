@@ -198,27 +198,44 @@ impl Xoshiro256 {
 /// epoch). Memory: 4 bytes × p, reused across all iterations.
 pub struct SubsetSampler {
     stamps: Vec<u32>,
+    /// current population size n (≤ `stamps.len()`, which only grows)
+    len: usize,
     epoch: u32,
 }
 
 impl SubsetSampler {
     pub fn new(n: usize) -> Self {
-        Self { stamps: vec![0; n], epoch: 0 }
+        Self { stamps: vec![0; n], len: n, epoch: 0 }
     }
 
-    /// The population size this sampler was built for.
+    /// The current population size.
     pub fn len(&self) -> usize {
-        self.stamps.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.stamps.is_empty()
+        self.len == 0
+    }
+
+    /// Change the population size **in place** — the screening hot path
+    /// (`StochasticFw::run_with_screen`) shrinks the pool every time a
+    /// gap-safe pass prunes columns, and rebuilding the sampler each time
+    /// would allocate a fresh p-sized mark array per pass. Shrinking is
+    /// free (stale out-of-range marks belong to dead epochs); growing
+    /// reuses the existing capacity where possible (new slots start at
+    /// epoch 0 = unmarked). Draw-for-draw identical to a freshly built
+    /// `SubsetSampler::new(n)` given the same RNG stream.
+    pub fn resize(&mut self, n: usize) {
+        if n > self.stamps.len() {
+            self.stamps.resize(n, 0);
+        }
+        self.len = n;
     }
 
     /// Sample a κ-subset of {0..n-1} without replacement into `out`
     /// (unsorted). Floyd's algorithm with O(1) membership.
     pub fn sample(&mut self, rng: &mut Xoshiro256, k: usize, out: &mut Vec<usize>) {
-        let n = self.stamps.len();
+        let n = self.len;
         assert!(k <= n, "subset: k={k} > n={n}");
         out.clear();
         if k == 0 {
@@ -429,6 +446,35 @@ mod tests {
         s.sample(&mut rng, 0, &mut out);
         assert!(out.is_empty());
         assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn subset_sampler_resize_in_place_matches_fresh() {
+        // Resizing must be draw-for-draw identical to building a fresh
+        // sampler with the same RNG stream (screened SFW relies on this
+        // for thread-count-invariant sampling), and shrinking must never
+        // leak indices ≥ n from an earlier, larger epoch.
+        let mut r1 = Xoshiro256::seed_from_u64(41);
+        let mut r2 = Xoshiro256::seed_from_u64(41);
+        let mut live = SubsetSampler::new(100);
+        let mut out1 = Vec::new();
+        let mut out2 = Vec::new();
+        live.sample(&mut r1, 20, &mut out1);
+        SubsetSampler::new(100).sample(&mut r2, 20, &mut out2);
+        assert_eq!(out1, out2);
+        for &n in &[60usize, 17, 80, 100, 3] {
+            live.resize(n);
+            assert_eq!(live.len(), n);
+            live.sample(&mut r1, n.min(9), &mut out1);
+            SubsetSampler::new(n).sample(&mut r2, n.min(9), &mut out2);
+            assert_eq!(out1, out2, "n={n}");
+            assert!(out1.iter().all(|&i| i < n), "n={n}: {out1:?}");
+        }
+        // growth past the original capacity still works
+        live.resize(250);
+        live.sample(&mut r1, 40, &mut out1);
+        SubsetSampler::new(250).sample(&mut r2, 40, &mut out2);
+        assert_eq!(out1, out2);
     }
 
     #[test]

@@ -1,0 +1,313 @@
+//! Gather-free CSR-mirror scan conformance (DESIGN.md §10).
+//!
+//! The sparse scan contract (`linalg::kernel::scan` module docs) pins one
+//! accumulation sequence — per column, per `ROW_TILE` tile, sequential
+//! f64 sums in row order, tile partials reduced in tile order — for every
+//! sparse multi-column walk in the crate. These tests enforce that the
+//! contract holds **bit-for-bit** across:
+//!
+//! * the mirror stream vs. an independently-coded naive reference,
+//! * the mirror stream vs. the per-column CSC gather path (which is also
+//!   exactly what `SFW_NO_MIRROR=1` runs, so the opt-out is proven to be
+//!   numerically a no-op),
+//! * row-tile sharding over 1/2/4/8 threads,
+//! * whole solver runs: `NativeBackend` ≡ `ParallelBackend` and
+//!   Sfw(κ = p) ≡ deterministic FW on multi-tile sparse problems.
+//!
+//! CI runs this suite under the default dispatch, `SFW_FORCE_SCALAR=1`,
+//! and `SFW_NO_MIRROR=1`; every assertion is written to hold in all three
+//! environments (the env-sensitive expectations branch on the env).
+
+use sfw_lasso::linalg::csr::{mirror_disabled, CsrMirror};
+use sfw_lasso::linalg::kernel::scan::{mirror_multi_dot, multi_dot_sparse, Cols};
+use sfw_lasso::linalg::kernel::{KernelScratch, ROW_TILE};
+use sfw_lasso::linalg::{ColumnCache, CscBuilder, CscMatrix, Design, Storage};
+use sfw_lasso::parallel::{mirror_multi_dot_sharded, MirrorShardScratch, ParallelBackend};
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::{FwBackend, NativeBackend, StochasticFw};
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::util::rng::Xoshiro256;
+
+/// Sparse test matrix with scattered density, deliberate empty columns
+/// (every 7th) and an empty leading row block.
+fn test_matrix(m: usize, p: usize, seed: u64) -> CscMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut b = CscBuilder::new(m, p);
+    for j in 0..p {
+        if j % 7 == 3 {
+            continue; // empty column
+        }
+        let step = 211 + (j % 17) * 53;
+        for i in ((j * 13) % step..m).step_by(step) {
+            if i >= 64 {
+                // rows 0..64 stay empty
+                b.push(i, j, rng.gaussian());
+            }
+        }
+    }
+    b.build()
+}
+
+/// Independent oracle of the sparse scan contract: per column, per
+/// `ROW_TILE` tile, sequential f64 accumulation in ascending row order;
+/// tile partials reduced left-to-right.
+fn reference_dots(x: &CscMatrix, cols: &[usize], v: &[f64]) -> Vec<f64> {
+    let m = x.rows();
+    cols.iter()
+        .map(|&j| {
+            let (rows, vals) = x.col(j);
+            let mut out = 0.0f64;
+            let mut k = 0usize;
+            let mut lo = 0usize;
+            while lo < m {
+                let hi = (lo + ROW_TILE).min(m);
+                let mut part = 0.0f64;
+                while k < rows.len() && (rows[k] as usize) < hi {
+                    part += vals[k] as f64 * v[rows[k] as usize];
+                    k += 1;
+                }
+                out += part;
+                lo = hi;
+            }
+            out
+        })
+        .collect()
+}
+
+fn sample(p: usize, kappa: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::new();
+    rng.subset(p, kappa, &mut out);
+    out
+}
+
+#[test]
+fn mirror_equals_per_column_csc_dots_bit_for_bit() {
+    for m in [5usize, 300, ROW_TILE, ROW_TILE + 17, 2 * ROW_TILE + 3] {
+        let p = 41usize;
+        let x = test_matrix(m, p, 1000 + m as u64);
+        let mirror = CsrMirror::build(&x);
+        let mut rng = Xoshiro256::seed_from_u64(m as u64);
+        let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let mut scratch = KernelScratch::new();
+        for kappa in [1usize, 7, p] {
+            let cols = sample(p, kappa, 9 + kappa as u64);
+            let reference = reference_dots(&x, &cols, &v);
+            let mut stream = vec![0.0; kappa];
+            mirror_multi_dot(&mirror, Cols::Idx(&cols), &v, &mut stream, &mut scratch);
+            let mut gather = vec![0.0; kappa];
+            multi_dot_sparse(&x, Cols::Idx(&cols), &v, &mut gather, &mut scratch);
+            for k in 0..kappa {
+                assert_eq!(
+                    stream[k].to_bits(),
+                    reference[k].to_bits(),
+                    "m={m} κ={kappa} col {}: mirror {} vs reference {}",
+                    cols[k],
+                    stream[k],
+                    reference[k]
+                );
+                assert_eq!(
+                    gather[k].to_bits(),
+                    reference[k].to_bits(),
+                    "m={m} κ={kappa} col {}: gather path diverged",
+                    cols[k]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_mirror_matches_serial_for_all_thread_counts() {
+    let (m, p) = (3 * ROW_TILE + 129, 120usize);
+    let x = test_matrix(m, p, 77);
+    let mirror = CsrMirror::build(&x);
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    let cols = sample(p, 60, 3);
+    let reference = reference_dots(&x, &cols, &v);
+    for threads in [1usize, 2, 4, 8] {
+        let mut out = vec![0.0; cols.len()];
+        let mut scratch = MirrorShardScratch::new();
+        mirror_multi_dot_sharded(threads, &mirror, &cols, &v, &mut out, &mut scratch);
+        for (k, (a, b)) in out.iter().zip(reference.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "threads={threads} col {}: {a} vs {b}",
+                cols[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn design_scan_routing_is_env_invariant() {
+    // Whatever SFW_NO_MIRROR says, Design::multi_col_dot must produce the
+    // gather path's bits — so flipping the env between runs can never
+    // change a result, only the speed.
+    let (m, p) = (ROW_TILE + 501, 64usize);
+    let x = test_matrix(m, p, 31);
+    let design = Design::sparse(x);
+    let mut rng = Xoshiro256::seed_from_u64(8);
+    let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    let cols: Vec<usize> = (0..p).step_by(2).collect();
+    let mut scratch = KernelScratch::new();
+    let mut routed = vec![0.0; cols.len()];
+    design.multi_col_dot(&cols, &v, &mut routed, &mut scratch);
+    if mirror_disabled() {
+        assert!(design.mirror().is_none(), "SFW_NO_MIRROR=1 must disable the mirror");
+    } else {
+        assert!(
+            design.mirror().is_some(),
+            "a profitable scan must have built the mirror"
+        );
+    }
+    let Storage::Sparse(csc) = design.storage() else { panic!() };
+    let reference = reference_dots(csc, &cols, &v);
+    for (k, (a, b)) in routed.iter().zip(reference.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "col {}: routed {a} vs reference {b}", cols[k]);
+    }
+    // tr_matvec / ColumnCache::build take the same route
+    let mut g = vec![0.0; p];
+    design.tr_matvec(&v, &mut g);
+    let idx: Vec<usize> = (0..p).collect();
+    let full = reference_dots(csc, &idx, &v);
+    for j in 0..p {
+        assert_eq!(g[j].to_bits(), full[j].to_bits(), "tr_matvec col {j}");
+    }
+    let cache = ColumnCache::build(&design, &v);
+    for j in 0..p {
+        assert_eq!(cache.sigma[j].to_bits(), full[j].to_bits(), "sigma col {j}");
+    }
+}
+
+/// Multi-tile sparse regression problem for the solver-level contracts.
+fn sparse_problem(seed: u64) -> (Design, Vec<f64>) {
+    let (m, p) = (2 * ROW_TILE + 5, 240usize);
+    let x = test_matrix(m, p, seed);
+    let mut rng = Xoshiro256::seed_from_u64(seed ^ 0xABCD);
+    let mut beta = vec![0.0; p];
+    for j in (0..p).step_by(11) {
+        beta[j] = rng.uniform(-2.0, 2.0);
+    }
+    let mut y = vec![0.0; m];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.01 * rng.gaussian();
+    }
+    (Design::sparse(x), y)
+}
+
+#[test]
+fn native_equals_parallel_vertex_search_on_multi_tile_sparse() {
+    let (x, y) = sparse_problem(2024);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let p = prob.p();
+    let mut state = FwState::zero(p, prob.m());
+    for i in [4usize, 111, 203] {
+        let g = state.grad_coord(&prob, i);
+        state.step(&prob, 3.0, i, g);
+    }
+    for kappa in [p / 2, p] {
+        let s = sample(p, kappa, 60 + kappa as u64);
+        let mut native = NativeBackend::new();
+        let (ri, rg) = native.select_vertex(&prob, &state, &s);
+        for threads in [1usize, 2, 4, 8] {
+            let mut par = ParallelBackend::new(threads).with_grain(8);
+            let (i, g) = par.select_vertex(&prob, &state, &s);
+            assert_eq!(i, ri, "κ={kappa} threads={threads}");
+            assert_eq!(g.to_bits(), rg.to_bits(), "κ={kappa} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn full_sfw_run_is_thread_count_invariant_on_sparse() {
+    let (x, y) = sparse_problem(4048);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let opts = SolveOptions { eps: 0.0, max_iters: 25, seed: 13, ..Default::default() };
+    let strategy = SamplingStrategy::Fraction(0.5);
+
+    let mut reference = StochasticFw::new(strategy, opts);
+    let mut st_ref = FwState::zero(prob.p(), prob.m());
+    let res_ref = reference.run(&prob, &mut st_ref, 2.5);
+    let alpha_ref = st_ref.alpha();
+
+    for threads in [2usize, 4, 8] {
+        let backend = ParallelBackend::new(threads);
+        let mut solver = StochasticFw::with_backend(strategy, opts, backend);
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let res = solver.run(&prob, &mut st, 2.5);
+        assert_eq!(res.iters, res_ref.iters, "threads={threads}");
+        assert_eq!(res.dots, res_ref.dots, "threads={threads}");
+        let alpha = st.alpha();
+        for (j, (a, b)) in alpha.iter().zip(alpha_ref.iter()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "threads={threads} α[{j}]: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn sfw_full_sampling_equals_deterministic_fw_on_sparse() {
+    let (x, y) = sparse_problem(777);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let opts = SolveOptions { eps: 1e-9, max_iters: 60, seed: 21, ..Default::default() };
+
+    let mut sfw = StochasticFw::new(SamplingStrategy::Full, opts);
+    let mut st1 = FwState::zero(prob.p(), prob.m());
+    let r1 = sfw.run(&prob, &mut st1, 2.0);
+
+    let fw = sfw_lasso::solvers::fw::FrankWolfe::new(opts);
+    let mut st2 = FwState::zero(prob.p(), prob.m());
+    let r2 = fw.run(&prob, &mut st2, 2.0);
+
+    assert_eq!(r1.iters, r2.iters);
+    let (a1, a2) = (st1.alpha(), st2.alpha());
+    for (j, (a, b)) in a1.iter().zip(a2.iter()).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "α[{j}]: {a} vs {b}");
+    }
+}
+
+#[test]
+fn screened_sfw_stays_thread_count_invariant_on_sparse() {
+    // Screening shrinks the pool mid-run (exercising the in-place sampler
+    // resize) while both backends keep scanning the excised sample —
+    // the whole pipeline must stay bit-identical across thread counts.
+    use sfw_lasso::screening::ScreenMode;
+    let (x, y) = sparse_problem(9192);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let opts = SolveOptions { eps: 0.0, max_iters: 40, seed: 5, ..Default::default() };
+    let strategy = SamplingStrategy::Fraction(0.4);
+
+    let mut reference = StochasticFw::new(strategy, opts);
+    let mut st_ref = FwState::zero(prob.p(), prob.m());
+    let mut scr_ref = ScreenMode::Aggressive.screener(prob.p()).unwrap();
+    let res_ref =
+        reference.run_with_screen(&prob, &mut st_ref, 1.5, Some(&mut scr_ref));
+    let alpha_ref = st_ref.alpha();
+
+    for threads in [2usize, 4] {
+        let backend = ParallelBackend::new(threads);
+        let mut solver = StochasticFw::with_backend(strategy, opts, backend);
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let mut scr = ScreenMode::Aggressive.screener(prob.p()).unwrap();
+        let res = solver.run_with_screen(&prob, &mut st, 1.5, Some(&mut scr));
+        assert_eq!(res.iters, res_ref.iters, "threads={threads}");
+        assert_eq!(res.dots, res_ref.dots, "threads={threads}");
+        assert_eq!(scr.alive(), scr_ref.alive(), "threads={threads}");
+        let alpha = st.alpha();
+        for (j, (a, b)) in alpha.iter().zip(alpha_ref.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads} α[{j}]");
+        }
+    }
+}
