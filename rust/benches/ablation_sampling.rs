@@ -1,22 +1,33 @@
-//! Ablation (DESIGN.md §5): the design choices behind the stochastic FW
-//! iteration, isolated one at a time on the E2006-tfidf sim:
+//! Ablation (DESIGN.md §5/§11): the design choices behind the stochastic
+//! FW iteration, isolated one at a time on the E2006-tfidf sim:
 //!
 //! 1. **sampling-size strategy** (§4.5): fixed fractions vs the
 //!    p-independent Theorem-1 κ vs the eq.-12 confidence κ vs full;
 //! 2. **warm-start boundary rescale** (§5 heuristic) on vs off;
-//! 3. **patience** (our robustified stopping rule) 1 (paper) / 2 / 10.
+//! 3. **patience** (our robustified stopping rule) 1 (paper) / 2 / 10;
+//! 4. **solver variants + adaptive κ** (§11) on a correlated latent-factor
+//!    design (the zig-zag workload): SFW vs ASFW vs PFW certified gaps at
+//!    an equal dot budget, and fixed-κ vs adaptive-κ dots-to-certified-gap.
+//!
+//! Emits machine-readable `BENCH_ablation.json` (override with
+//! `SFW_BENCH_JSON`): `gap_ratio_asfw`/`gap_ratio_pfw` (certified gap vs
+//! plain SFW at ≤ the same dots) and `dots_ratio_adaptive_vs_fixed` — the
+//! acceptance artifact uploaded by the CI `bench-artifacts` job.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use sfw_lasso::coordinator::report;
+use sfw_lasso::data::synth::{make_correlated_regression, SynthSpec};
 use sfw_lasso::data::{load, Named};
 use sfw_lasso::linalg::ColumnCache;
 use sfw_lasso::path::{delta_grid, plan_delta_max, run_path, PathResult, SolverKind};
 use sfw_lasso::solvers::linesearch::FwState;
 use sfw_lasso::solvers::sampling::SamplingStrategy;
-use sfw_lasso::solvers::sfw::StochasticFw;
-use sfw_lasso::solvers::Problem;
+use sfw_lasso::solvers::sfw::NativeBackend;
+use sfw_lasso::solvers::variants::{FwVariant, StochasticFw};
+use sfw_lasso::solvers::{Problem, RunResult, SolveOptions};
+use sfw_lasso::util::json::Json;
 use sfw_lasso::util::timer::Stopwatch;
 
 fn main() {
@@ -98,9 +109,158 @@ fn main() {
     }
     println!("  (paper uses 1; higher values trade time for robustness to unlucky samples)");
 
+    // ---------------- 4. solver variants + adaptive κ (DESIGN.md §11)
+    println!("\n4. away-step / pairwise variants + adaptive κ (correlated design):");
+    let (m, p) = (
+        (400.0 * common::scale().max(0.02)) as usize + 100,
+        (2000.0 * common::scale().max(0.02)) as usize + 200,
+    );
+    let corr = make_correlated_regression(
+        &SynthSpec {
+            n_samples: m,
+            n_features: p,
+            n_informative: 8,
+            noise: 0.5,
+            seed: common::seed(),
+        },
+        0.85,
+        8,
+    );
+    let cache2 = ColumnCache::build(&corr.x, &corr.y);
+    let prob2 = Problem::new(&corr.x, &corr.y, &cache2);
+    let delta = 3.0;
+    let budget_iters = 4_000usize;
+    // gap_tol = −∞ keeps the certificate passes running without EVER
+    // stopping the run (a gap of exactly 0.0 would reach a 0.0 tolerance
+    // — the envelope clamps float noise to 0): every variant spends the
+    // same iteration budget
+    let opts = SolveOptions {
+        eps: 0.0,
+        max_iters: budget_iters,
+        seed: common::seed(),
+        gap_tol: Some(f64::NEG_INFINITY),
+        ..Default::default()
+    };
+    let run_variant = |variant: FwVariant, max_iters: usize| -> RunResult {
+        let mut solver = StochasticFw::with_variant(
+            variant,
+            SamplingStrategy::Fraction(0.05),
+            SolveOptions { max_iters, ..opts },
+            NativeBackend::new(),
+        );
+        let mut st = FwState::zero(prob2.p(), prob2.m());
+        solver.run(&prob2, &mut st, delta)
+    };
+    let sfw_run = run_variant(FwVariant::Standard, budget_iters);
+    // the acceptance criterion is an EQUAL DOT budget: ASFW/PFW spend
+    // extra away-search (+ pairwise cross-term) dots per iteration, so
+    // shrink their iteration caps until their dot totals fit under SFW's
+    // (deterministic prefix: rerunning with a smaller cap replays the
+    // same trajectory, and dots/iteration only grows with the support,
+    // so one proportional correction suffices)
+    let capped = |variant: FwVariant| -> RunResult {
+        let mut run = run_variant(variant, budget_iters);
+        let mut iters = budget_iters;
+        while run.dots > sfw_run.dots && iters > 1 {
+            iters = ((iters as u128 * sfw_run.dots as u128 / run.dots.max(1) as u128)
+                as usize)
+                .max(1);
+            run = run_variant(variant, iters);
+        }
+        run
+    };
+    let asfw_run = capped(FwVariant::Away);
+    let pfw_run = capped(FwVariant::Pairwise);
+    let gap_of = |r: &RunResult| r.certified_gap.unwrap_or(f64::INFINITY);
+    for (name, r) in [("SFW", &sfw_run), ("ASFW", &asfw_run), ("PFW", &pfw_run)] {
+        println!(
+            "  {name:<5} dots {:>10.3e}  objective {:>12.6e}  certified gap {:>10.3e}",
+            r.dots as f64,
+            r.objective,
+            gap_of(r)
+        );
+    }
+    let gap_ratio_asfw = gap_of(&asfw_run) / gap_of(&sfw_run).max(1e-300);
+    let gap_ratio_pfw = gap_of(&pfw_run) / gap_of(&sfw_run).max(1e-300);
+    let dots_ratio_asfw = asfw_run.dots as f64 / sfw_run.dots as f64;
+    let dots_ratio_pfw = pfw_run.dots as f64 / sfw_run.dots as f64;
+    println!(
+        "  gap ratio vs SFW at ≤ its dot budget:  ASFW {gap_ratio_asfw:.3e} \
+         (dots ×{dots_ratio_asfw:.2})  PFW {gap_ratio_pfw:.3e} (dots ×{dots_ratio_pfw:.2})"
+    );
+    println!("  (acceptance: gap ratios ≤ 1 at dot ratios ≤ 1 — the variants kill the zig-zag)");
+
+    // fixed κ vs adaptive κ: dots to reach a fixed certified gap
+    let target_gap = (gap_of(&sfw_run) * 4.0).max(1e-8);
+    let run_to_gap = |strategy: SamplingStrategy| -> RunResult {
+        let mut solver = StochasticFw::new(
+            strategy,
+            SolveOptions {
+                eps: 0.0,
+                max_iters: 10 * budget_iters,
+                seed: common::seed(),
+                gap_tol: Some(target_gap),
+                ..Default::default()
+            },
+        );
+        let mut st = FwState::zero(prob2.p(), prob2.m());
+        solver.run(&prob2, &mut st, delta)
+    };
+    let fixed = run_to_gap(SamplingStrategy::Fraction(0.05));
+    let kappa0 = SamplingStrategy::Fraction(0.05).kappa(prob2.p());
+    let adaptive = run_to_gap(SamplingStrategy::Adaptive {
+        kappa0,
+        growth: 2.0,
+        stall_tol: 32,
+    });
+    let dots_ratio_adaptive = adaptive.dots as f64 / fixed.dots.max(1) as f64;
+    println!(
+        "  to gap ≤ {target_gap:.2e}:  fixed κ={kappa0} {:>10.3e} dots  \
+         adaptive κ₀={kappa0}→{} {:>10.3e} dots  (ratio {dots_ratio_adaptive:.2})",
+        fixed.dots as f64,
+        adaptive
+            .kappa_final
+            .map(|k| k.to_string())
+            .unwrap_or_else(|| "—".into()),
+        adaptive.dots as f64,
+    );
+
     let refs: Vec<&PathResult> = rows.iter().collect();
     let json = report::summary_json(&refs);
-    if let Ok(p) = report::write_results_file("ablation_sampling.json", &json.pretty()) {
-        println!("\nwrote {}", p.display());
+    if let Ok(path) = report::write_results_file("ablation_sampling.json", &json.pretty()) {
+        println!("\nwrote {}", path.display());
+    }
+
+    // machine-readable acceptance artifact
+    let bench_json = Json::obj(vec![
+        ("workload", Json::Str(format!("correlated synth m={m} p={p} rho=0.85"))),
+        ("budget_iters", Json::Num(budget_iters as f64)),
+        ("sfw_certified_gap", Json::Num(gap_of(&sfw_run))),
+        ("asfw_certified_gap", Json::Num(gap_of(&asfw_run))),
+        ("pfw_certified_gap", Json::Num(gap_of(&pfw_run))),
+        ("sfw_dots", Json::Num(sfw_run.dots as f64)),
+        ("asfw_dots", Json::Num(asfw_run.dots as f64)),
+        ("pfw_dots", Json::Num(pfw_run.dots as f64)),
+        ("gap_ratio_asfw", Json::Num(gap_ratio_asfw)),
+        ("gap_ratio_pfw", Json::Num(gap_ratio_pfw)),
+        ("dots_ratio_asfw", Json::Num(dots_ratio_asfw)),
+        ("dots_ratio_pfw", Json::Num(dots_ratio_pfw)),
+        ("adaptive_target_gap", Json::Num(target_gap)),
+        ("fixed_kappa_dots_to_gap", Json::Num(fixed.dots as f64)),
+        ("adaptive_kappa_dots_to_gap", Json::Num(adaptive.dots as f64)),
+        ("dots_ratio_adaptive_vs_fixed", Json::Num(dots_ratio_adaptive)),
+        (
+            "adaptive_kappa_final",
+            match adaptive.kappa_final {
+                Some(k) => Json::Num(k as f64),
+                None => Json::Null,
+            },
+        ),
+    ]);
+    let out =
+        std::env::var("SFW_BENCH_JSON").unwrap_or_else(|_| "BENCH_ablation.json".into());
+    match std::fs::write(&out, bench_json.pretty()) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => eprintln!("WARNING: could not write {out}: {e}"),
     }
 }

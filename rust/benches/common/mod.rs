@@ -56,6 +56,7 @@ pub fn path_config() -> PathConfig {
             max_iters: 50_000,
             seed: seed(),
             patience: 2,
+            ..Default::default()
         },
         delta_max: None,
         track: vec![],

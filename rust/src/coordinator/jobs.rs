@@ -60,7 +60,10 @@ impl Experiment {
 }
 
 fn is_stochastic(kind: SolverKind) -> bool {
-    matches!(kind, SolverKind::Scd | SolverKind::Sfw(_))
+    matches!(
+        kind,
+        SolverKind::Scd | SolverKind::Sfw(_) | SolverKind::Asfw(_) | SolverKind::Pfw(_)
+    )
 }
 
 /// Run all cells; results come back in cell order.

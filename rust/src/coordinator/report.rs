@@ -38,6 +38,21 @@ pub fn render_table(dataset: &str, results: &[&PathResult]) -> String {
         let _ = write!(s, "{:>14}", format!("{:.1}", r.avg_active()));
     }
     s.push('\n');
+    // certified-gap row, only when some run actually certified
+    if results
+        .iter()
+        .any(|r| r.points.iter().any(|p| p.certified_gap.is_some()))
+    {
+        let _ = write!(s, "{:<16}", "Cert. gap (end)");
+        for r in results {
+            let cell = match r.points.last().and_then(|p| p.certified_gap) {
+                Some(g) => format!("{g:.2e}"),
+                None => "—".to_string(),
+            };
+            let _ = write!(s, "{cell:>14}");
+        }
+        s.push('\n');
+    }
     // gap-safe screening rows, only when some run actually screened
     if results.iter().any(|r| r.screen_passes > 0) {
         let _ = write!(s, "{:<16}", "Screened (avg)");
@@ -75,10 +90,13 @@ pub fn render_speedup_row(baseline_seconds: f64, results: &[&PathResult]) -> Str
 
 /// CSV of per-point series: one row per grid point.
 /// Columns: reg, l1_norm, active, train_mse, test_mse, iters, dots,
-/// screened_frac[, tracked...]
+/// screened_frac, certified_gap, kappa_final[, tracked...]
+/// (`certified_gap`/`kappa_final` cells are empty when the solver
+/// recorded none — non-certified runs, non-stochastic solvers.)
 pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
-    let mut s =
-        String::from("reg,l1_norm,active,train_mse,test_mse,iters,dots,screened_frac");
+    let mut s = String::from(
+        "reg,l1_norm,active,train_mse,test_mse,iters,dots,screened_frac,certified_gap,kappa_final",
+    );
     for name in tracked_names {
         let _ = write!(s, ",{name}");
     }
@@ -86,7 +104,7 @@ pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
     for pt in &r.points {
         let _ = write!(
             s,
-            "{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{}",
             pt.reg,
             pt.l1_norm,
             pt.active,
@@ -94,7 +112,9 @@ pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
             pt.test_mse.map(|v| v.to_string()).unwrap_or_default(),
             pt.iters,
             pt.dots,
-            pt.screened_frac
+            pt.screened_frac,
+            pt.certified_gap.map(|v| v.to_string()).unwrap_or_default(),
+            pt.kappa_final.map(|v| v.to_string()).unwrap_or_default()
         );
         for c in &pt.tracked_coefs {
             let _ = write!(s, ",{c}");
@@ -122,6 +142,20 @@ pub fn summary_json(results: &[&PathResult]) -> Json {
                     ("screen_dots", Json::Num(r.screen_dots as f64)),
                     ("screen_saved_dots", Json::Num(r.screen_saved_dots as f64)),
                     ("avg_screened_frac", Json::Num(r.avg_screened_frac())),
+                    (
+                        "certified_gap_end",
+                        match r.points.last().and_then(|p| p.certified_gap) {
+                            Some(g) => Json::Num(g),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "kappa_final",
+                        match r.points.last().and_then(|p| p.kappa_final) {
+                            Some(k) => Json::Num(k as f64),
+                            None => Json::Null,
+                        },
+                    ),
                 ])
             })
             .collect(),
@@ -190,6 +224,8 @@ mod tests {
                     dots: 100,
                     converged: true,
                     screened_frac: 0.0,
+                    certified_gap: None,
+                    kappa_final: None,
                     tracked_coefs: vec![0.1 * k as f64],
                 })
                 .collect(),
@@ -224,7 +260,36 @@ mod tests {
         assert_eq!(lines.len(), 6);
         assert!(lines[0].ends_with("coef0"));
         assert!(lines[0].contains("screened_frac"));
-        assert_eq!(lines[1].split(',').count(), 9);
+        assert!(lines[0].contains("certified_gap"));
+        assert!(lines[0].contains("kappa_final"));
+        assert_eq!(lines[1].split(',').count(), 11);
+        // empty cells for un-certified, non-stochastic runs
+        assert!(lines[1].contains(",,"));
+    }
+
+    #[test]
+    fn certified_gap_row_and_csv_cells() {
+        let mut r = fake_result("ASFW 2%", 1.0);
+        for (k, pt) in r.points.iter_mut().enumerate() {
+            pt.certified_gap = Some(1e-4 / (k + 1) as f64);
+            pt.kappa_final = Some(64 * (k + 1));
+            pt.tracked_coefs.clear(); // kappa_final is the row's last cell
+        }
+        let t = render_table("ds", &[&r]);
+        assert!(t.contains("Cert. gap (end)"), "{t}");
+        assert!(t.contains("2.00e-5"), "{t}");
+        let csv = path_csv(&r, &[]);
+        let last = csv.lines().last().unwrap();
+        assert!(last.ends_with(",320"), "{last}");
+        // JSON carries the final certificate
+        let j = summary_json(&[&r]);
+        let parsed = crate::util::json::Json::parse(&j.pretty()).unwrap();
+        let obj = &parsed.as_arr().unwrap()[0];
+        assert!(obj.get("certified_gap_end").as_f64().is_some());
+        assert_eq!(obj.get("kappa_final").as_f64(), Some(320.0));
+        // and the plain run renders no certificate row
+        let plain = fake_result("CD", 1.0);
+        assert!(!render_table("ds", &[&plain]).contains("Cert. gap"));
     }
 
     #[test]

@@ -30,6 +30,16 @@ pub struct LibsvmData {
     pub y: Vec<f64>,
 }
 
+/// Largest accepted 1-based feature index / row count (exclusive upper
+/// bound `u32::MAX`). [`CscMatrix`] stores rows and columns as `u32`, so
+/// anything larger would silently truncate — and a corrupt multi-digit
+/// index would otherwise make `finish()` size a `(p+1)`-entry
+/// column-pointer array by the garbage value. The guard turns every
+/// ≥ 2³²-scale token into a hard error before any allocation
+/// (`rust/tests/data_robustness.rs`); sub-2³² allocations are bounded by
+/// the index space itself.
+pub const MAX_DIMENSION: usize = u32::MAX as usize - 1;
+
 /// Incremental line-oriented parser state shared by [`parse_bytes`]
 /// (in-memory slice) and [`read`] (streaming file).
 #[derive(Default)]
@@ -88,6 +98,11 @@ impl Parser {
         let mut pos = 0usize;
         let mut first = true;
         let row = self.y.len();
+        if row >= MAX_DIMENSION {
+            return Err(format!(
+                "line {lineno}: row count exceeds the supported maximum {MAX_DIMENSION}"
+            ));
+        }
         while pos < line.len() {
             // skip the whitespace run, then take the token
             while pos < line.len() && line[pos].is_ascii_whitespace() {
@@ -119,6 +134,11 @@ impl Parser {
             })?;
             if idx == 0 {
                 return Err(format!("line {lineno}: LIBSVM indices are 1-based"));
+            }
+            if idx > MAX_DIMENSION {
+                return Err(format!(
+                    "line {lineno}: feature index {idx} exceeds the supported maximum {MAX_DIMENSION}"
+                ));
             }
             let val = parse_f64(val_b).map_err(|e| {
                 format!("line {lineno}: bad value '{}': {e}", lossy(val_b))
@@ -263,6 +283,18 @@ mod tests {
         assert!(parse("1 1:z", None).is_err()); // bad value
         assert!(parse("1 1", None).is_err()); // missing colon
         assert!(parse("1 5:1", Some(3)).is_err()); // index out of declared range
+    }
+
+    #[test]
+    fn parse_rejects_oversized_indices_without_allocating() {
+        // one corrupt index must be a hard error, not a u32 truncation or
+        // a p ≈ 10¹⁹-sized allocation in finish()
+        let err = parse("1 99999999999999999999:1", None).unwrap_err();
+        assert!(err.contains("line 1"), "unexpected: {err}");
+        for idx in [u32::MAX as u64, u32::MAX as u64 + 1] {
+            let err = parse(&format!("1 {idx}:1"), None).unwrap_err();
+            assert!(err.contains("maximum"), "idx {idx}: {err}");
+        }
     }
 
     #[test]

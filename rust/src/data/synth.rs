@@ -63,6 +63,61 @@ pub fn make_regression(spec: &SynthSpec) -> SynthData {
     SynthData { x: Design::dense(x), y, ground_truth: beta }
 }
 
+/// Generate a **correlated** synthetic regression problem: columns are
+/// mixtures of `n_factors` shared latent gaussian factors plus idiosyncratic
+/// noise, so `corr(zᵢ, zⱼ) ≈ rho` for columns sharing a factor. This is the
+/// design on which plain FW zig-zags — the benchmark workload of the
+/// away-step/pairwise variants (DESIGN.md §11, `benches/ablation_sampling`).
+///
+/// `rho ∈ [0, 1)` controls the factor loading (`rho = 0` recovers an
+/// i.i.d. gaussian design); everything else matches [`make_regression`].
+pub fn make_correlated_regression(
+    spec: &SynthSpec,
+    rho: f64,
+    n_factors: usize,
+) -> SynthData {
+    let &SynthSpec { n_samples: n, n_features: p, n_informative, noise, seed } = spec;
+    assert!(n_informative <= p, "n_informative must be ≤ n_features");
+    assert!((0.0..1.0).contains(&rho), "rho must be in [0, 1), got {rho}");
+    let n_factors = n_factors.max(1);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+
+    // latent factors, one gaussian vector each
+    let mut factors = vec![0.0f64; n * n_factors];
+    for v in factors.iter_mut() {
+        *v = rng.gaussian();
+    }
+    // column j loads factor j mod n_factors with weight √rho; unit total
+    // variance keeps the standardization story identical to make_regression
+    let load = rho.sqrt();
+    let idio = (1.0 - rho).sqrt();
+    let mut data = vec![0.0f32; n * p];
+    for j in 0..p {
+        let f = &factors[(j % n_factors) * n..(j % n_factors + 1) * n];
+        for i in 0..n {
+            data[j * n + i] = (load * f[i] + idio * rng.gaussian()) as f32;
+        }
+    }
+    let x = DenseMatrix::from_col_major(n, p, data);
+
+    let mut beta = vec![0.0f64; p];
+    let mut positions = Vec::new();
+    rng.subset(p, n_informative, &mut positions);
+    for &j in &positions {
+        beta[j] = 100.0 * rng.next_f64();
+    }
+
+    let mut y = vec![0.0f64; n];
+    x.matvec(&beta, &mut y);
+    if noise > 0.0 {
+        for v in y.iter_mut() {
+            *v += noise * rng.gaussian();
+        }
+    }
+
+    SynthData { x: Design::dense(x), y, ground_truth: beta }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +168,45 @@ mod tests {
         let b = make_regression(&spec(20, 30, 4, 2.0));
         assert_eq!(a.y, b.y);
         assert_eq!(a.ground_truth, b.ground_truth);
+    }
+
+    #[test]
+    fn correlated_design_has_correlated_columns() {
+        let d = make_correlated_regression(&spec(400, 8, 2, 0.0), 0.8, 2);
+        let col = |j: usize| -> Vec<f64> {
+            (0..400)
+                .map(|i| match d.x.storage() {
+                    crate::linalg::Storage::Dense(m) => m.get(i, j),
+                    _ => unreachable!(),
+                })
+                .collect()
+        };
+        let corr = |a: &[f64], b: &[f64]| -> f64 {
+            let n = a.len() as f64;
+            let (ma, mb) = (
+                a.iter().sum::<f64>() / n,
+                b.iter().sum::<f64>() / n,
+            );
+            let mut num = 0.0;
+            let mut va = 0.0;
+            let mut vb = 0.0;
+            for (x, y) in a.iter().zip(b.iter()) {
+                num += (x - ma) * (y - mb);
+                va += (x - ma) * (x - ma);
+                vb += (y - mb) * (y - mb);
+            }
+            num / (va.sqrt() * vb.sqrt())
+        };
+        // columns 0 and 2 share factor 0: strongly correlated
+        let c_same = corr(&col(0), &col(2));
+        assert!(c_same > 0.6, "same-factor corr {c_same}");
+        // columns 0 and 1 load different factors: weakly correlated
+        let c_diff = corr(&col(0), &col(1)).abs();
+        assert!(c_diff < 0.3, "cross-factor corr {c_diff}");
+        // ground truth still n_informative-sparse, rho=0 recovers iid
+        assert_eq!(ops::nnz(&d.ground_truth), 2);
+        let iid = make_correlated_regression(&spec(50, 10, 2, 0.0), 0.0, 2);
+        assert_eq!(iid.x.rows(), 50);
     }
 
     #[test]

@@ -171,6 +171,42 @@ impl Design {
         }
     }
 
+    /// zᵢᵀ·zⱼ — the column–column product the pairwise-FW line search
+    /// needs for its `‖X(v − a)‖²` denominator (DESIGN.md §11). One dot
+    /// product in the paper's accounting. Dense columns run a sequential
+    /// f64 loop; sparse columns merge-join their ascending row lists —
+    /// both deterministic (fixed accumulation order, no dispatch).
+    pub fn col_dot_col(&self, i: usize, j: usize) -> f64 {
+        match &self.storage {
+            Storage::Dense(x) => {
+                let (a, b) = (x.col(i), x.col(j));
+                let mut acc = 0.0f64;
+                for (va, vb) in a.iter().zip(b.iter()) {
+                    acc += *va as f64 * *vb as f64;
+                }
+                acc
+            }
+            Storage::Sparse(x) => {
+                let (ra, va) = x.col(i);
+                let (rb, vb) = x.col(j);
+                let mut acc = 0.0f64;
+                let (mut ka, mut kb) = (0usize, 0usize);
+                while ka < ra.len() && kb < rb.len() {
+                    match ra[ka].cmp(&rb[kb]) {
+                        std::cmp::Ordering::Less => ka += 1,
+                        std::cmp::Ordering::Greater => kb += 1,
+                        std::cmp::Ordering::Equal => {
+                            acc += va[ka] as f64 * vb[kb] as f64;
+                            ka += 1;
+                            kb += 1;
+                        }
+                    }
+                }
+                acc
+            }
+        }
+    }
+
     /// ‖zⱼ‖² (uncached; use [`ColumnCache`] in loops).
     pub fn col_norm_sq(&self, j: usize) -> f64 {
         match &self.storage {

@@ -27,6 +27,13 @@ pub struct PathPoint {
     /// fraction of columns gap-safe screening had eliminated when this
     /// point finished (0.0 when screening is off)
     pub screened_frac: f64,
+    /// best certified duality gap of the solve at this point
+    /// ([`crate::solvers::RunResult::certified_gap`]; `None` when the
+    /// solver ran no certificate pass)
+    pub certified_gap: Option<f64>,
+    /// final per-iteration sample size κ (stochastic FW family; the
+    /// adaptive schedule can grow it past the initial κ)
+    pub kappa_final: Option<usize>,
     /// coefficients of selected features, if the caller asked to track
     /// specific indices (Figs 1–2)
     pub tracked_coefs: Vec<f64>,
@@ -123,6 +130,8 @@ pub fn evaluate_point(
         dots,
         converged,
         screened_frac: 0.0,
+        certified_gap: None,
+        kappa_final: None,
         tracked_coefs: tracked.iter().map(|&j| alpha[j]).collect(),
     }
 }

@@ -58,6 +58,10 @@ pub enum SolverKind {
     FwDet,
     /// stochastic Frank-Wolfe (the paper's method), constrained
     Sfw(SamplingStrategy),
+    /// away-step stochastic Frank-Wolfe (DESIGN.md §11), constrained
+    Asfw(SamplingStrategy),
+    /// pairwise stochastic Frank-Wolfe (DESIGN.md §11), constrained
+    Pfw(SamplingStrategy),
 }
 
 impl SolverKind {
@@ -70,6 +74,8 @@ impl SolverKind {
             SolverKind::ApgConst => "SLEP-Const".to_string(),
             SolverKind::FwDet => "FW-det".to_string(),
             SolverKind::Sfw(s) => s.label(),
+            SolverKind::Asfw(s) => s.label_with("ASFW"),
+            SolverKind::Pfw(s) => s.label_with("PFW"),
         }
     }
 
@@ -78,8 +84,24 @@ impl SolverKind {
     pub fn is_constrained(&self) -> bool {
         matches!(
             self,
-            SolverKind::ApgConst | SolverKind::FwDet | SolverKind::Sfw(_)
+            SolverKind::ApgConst
+                | SolverKind::FwDet
+                | SolverKind::Sfw(_)
+                | SolverKind::Asfw(_)
+                | SolverKind::Pfw(_)
         )
+    }
+
+    /// The stochastic-FW variant behind this kind, if any (shared engine
+    /// dispatch: all three run through [`StochasticFw`]).
+    pub fn fw_variant(&self) -> Option<(crate::solvers::variants::FwVariant, SamplingStrategy)> {
+        use crate::solvers::variants::FwVariant;
+        match *self {
+            SolverKind::Sfw(s) => Some((FwVariant::Standard, s)),
+            SolverKind::Asfw(s) => Some((FwVariant::Away, s)),
+            SolverKind::Pfw(s) => Some((FwVariant::Pairwise, s)),
+            _ => None,
+        }
     }
 }
 
@@ -204,6 +226,8 @@ fn push_point(
     let mut pt = evaluate_point(
         ds, alpha, reg, res.iters, res.dots + entry, res.converged, track,
     );
+    pt.certified_gap = res.certified_gap;
+    pt.kappa_final = res.kappa_final;
     if let Some(s) = screener {
         pt.screened_frac = s.screened_fraction();
     }
@@ -263,13 +287,17 @@ fn run_segment(
                 );
             }
         }
-        SolverKind::FwDet | SolverKind::Sfw(_) => {
+        SolverKind::FwDet | SolverKind::Sfw(_) | SolverKind::Asfw(_) | SolverKind::Pfw(_) => {
             let mut state = FwState::zero(p, prob.m());
             let mut alpha_buf = vec![0.0; p];
-            let mut sfw = match kind {
-                SolverKind::Sfw(strategy) => Some(StochasticFw::new(strategy, cfg.opts)),
-                _ => None,
-            };
+            let mut sfw = kind.fw_variant().map(|(variant, strategy)| {
+                StochasticFw::with_variant(
+                    variant,
+                    strategy,
+                    cfg.opts,
+                    crate::solvers::sfw::NativeBackend::new(),
+                )
+            });
             let fw = FrankWolfe::new(cfg.opts);
             for &delta in grid {
                 // §5 warm-start heuristic: scale the previous solution

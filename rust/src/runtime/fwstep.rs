@@ -147,6 +147,8 @@ impl XlaSfw {
             dots,
             converged,
             objective: state.objective(prob),
+            certified_gap: None,
+            kappa_final: None,
         })
     }
 }

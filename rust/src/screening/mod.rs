@@ -169,6 +169,12 @@ pub struct Screener {
     q: Vec<f64>,
     /// solver dots since the last pass (drives [`Screener::due`])
     dots_since: u64,
+    /// the exact duality gap the most recent sphere pass computed
+    /// (constrained FW gap or penalized `P − D`; NaN before any pass /
+    /// after `reset_full`). Reused by the certificate engine
+    /// (`solvers::certify`, DESIGN.md §11) — a screening pass doubles as
+    /// a free certificate pass.
+    last_gap: f64,
     stats: ScreenStats,
 }
 
@@ -184,6 +190,7 @@ impl Screener {
             scratch: KernelScratch::new(),
             q: Vec::new(),
             dots_since: 0,
+            last_gap: f64::NAN,
             stats: ScreenStats::default(),
         }
     }
@@ -227,6 +234,15 @@ impl Screener {
         self.stats
     }
 
+    /// The exact duality gap computed by the most recent sphere pass
+    /// (`None` before any pass or after [`Self::reset_full`]). Constrained
+    /// passes store the FW gap `αᵀ∇ + δ‖∇‖∞` over the surviving set —
+    /// a valid certificate for the **full** problem, since safe screening
+    /// preserves the optimum; penalized passes store `P(α) − D(θ)`.
+    pub fn last_gap(&self) -> Option<f64> {
+        (!self.last_gap.is_nan()).then_some(self.last_gap)
+    }
+
     /// Re-activate every column. Must be called whenever the
     /// regularization value changes (new grid point): the safety
     /// certificate is specific to one (λ or δ) problem.
@@ -235,6 +251,7 @@ impl Screener {
         self.alive.extend(0..self.is_alive.len());
         self.is_alive.fill(true);
         self.dots_since = 0;
+        self.last_gap = f64::NAN;
     }
 
     /// Record one solver iteration: `spent` dot products drawn on the
@@ -292,6 +309,7 @@ impl Screener {
             }
         }
         let gap = (at_g + delta * gmax).max(0.0);
+        self.last_gap = gap;
         self.retain_constrained(prob, gap, |j| state.alpha_coord(j) != 0.0);
         self.stats.passes += 1;
         self.stats.screen_dots += dots;
@@ -325,6 +343,7 @@ impl Screener {
             }
         }
         let gap = (at_g + delta * gmax).max(0.0);
+        self.last_gap = gap;
         self.retain_constrained(prob, gap, |j| state.alpha_coord(j) != 0.0);
         self.stats.passes += 1;
         self.dots_since = 0;
@@ -361,6 +380,7 @@ impl Screener {
             }
         }
         let gap = (at_g + delta * gmax).max(0.0);
+        self.last_gap = gap;
         self.retain_constrained(prob, gap, |j| alpha[j] != 0.0);
         self.stats.passes += 1;
         self.stats.screen_dots += dots;
@@ -393,6 +413,7 @@ impl Screener {
         let scale = lambda.max(cmax);
         if scale <= 0.0 {
             // degenerate (λ = 0 and a perfect fit): nothing to certify
+            self.last_gap = 0.0;
             self.stats.passes += 1;
             self.stats.screen_dots += dots;
             self.dots_since = 0;
@@ -411,6 +432,7 @@ impl Screener {
         }
         let dual = 0.5 * prob.cache.yty - 0.5 * ymt;
         let gap = (primal - dual).max(0.0);
+        self.last_gap = gap;
         let radius = (2.0 * gap).sqrt() / lambda;
 
         // eliminate j when |zⱼᵀθ| + ‖zⱼ‖·radius < 1 (support always kept)
@@ -509,6 +531,11 @@ mod tests {
         assert!((scr.screened_fraction() - 0.75).abs() < 1e-15);
         assert_eq!(scr.stats().passes, 1);
         assert_eq!(scr.stats().screen_dots, 4);
+        // the pass's exact gap is exposed as a certificate (0 here), and
+        // re-arming the screener invalidates it
+        assert_eq!(scr.last_gap(), Some(0.0));
+        scr.reset_full();
+        assert_eq!(scr.last_gap(), None);
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! by [`super::proj::project_l1`] onto `‖α‖₁ ≤ δ`, plus gradient-mapping
 //! adaptive restart.
 
+use super::certify::GapEnvelope;
 use super::proj::project_l1;
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops;
@@ -77,6 +78,9 @@ impl Apg {
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
+        // momentum makes APG non-monotone in f, so the certificate
+        // reported is the *last* screening pass's gap (solvers::certify)
+        let mut envelope = GapEnvelope::new();
 
         while (iters as usize) < self.opts.max_iters {
             iters += 1;
@@ -132,6 +136,18 @@ impl Apg {
                 s.note_iteration(dots - dots_at_start, (p - s.alive_len()) as u64);
                 if s.due() {
                     dots += s.screen_with_alpha(prob, alpha, delta);
+                    if let Some(g) = s.last_gap() {
+                        envelope.record(g);
+                        // the gap was computed at the current α, so
+                        // stopping on it is certified even without
+                        // monotonicity
+                        if let Some(tol) = self.opts.gap_tol {
+                            if g <= tol {
+                                converged = true;
+                                break;
+                            }
+                        }
+                    }
                     // kill the momentum of newly eliminated columns: w[j]
                     // can still be nonzero from the pre-elimination step,
                     // and with ∇ⱼ pinned to 0 it would resurrect αⱼ and
@@ -157,6 +173,8 @@ impl Apg {
             dots,
             converged,
             objective: prob.objective(alpha),
+            certified_gap: envelope.last(),
+            kappa_final: None,
         }
     }
 }

@@ -13,6 +13,7 @@
 //! Coordinate update with unit-norm columns simplifies to
 //! `αⱼ ← S_λ(αⱼ‖zⱼ‖² + zⱼᵀR)/‖zⱼ‖²`.
 
+use super::certify::GapEnvelope;
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops::soft_threshold;
 use crate::screening::Screener;
@@ -96,6 +97,10 @@ impl CoordinateDescent {
         let mut dots = 0u64;
         let mut sweeps = 0u64;
         let mut converged = false;
+        // CD descends monotonically (exact coordinate minimization), so
+        // the screening passes' P − D gaps form a valid monotone
+        // certificate envelope (solvers::certify, DESIGN.md §11)
+        let mut envelope = GapEnvelope::new();
         let mut active: Vec<usize> = alpha
             .iter()
             .enumerate()
@@ -132,6 +137,13 @@ impl CoordinateDescent {
                 s.note_iteration(pool_len as u64, (p - pool_len) as u64);
                 if s.due() {
                     dots += s.screen_penalized(prob, alpha, &self.resid, lambda);
+                    if let Some(g) = s.last_gap() {
+                        envelope.record(g);
+                    }
+                    if envelope.reached(self.opts.gap_tol) {
+                        converged = true;
+                        break 'outer;
+                    }
                 }
             }
             // scale-free criterion (see linesearch::StepInfo::small)
@@ -163,6 +175,8 @@ impl CoordinateDescent {
             dots,
             converged,
             objective: self.objective(prob, alpha, lambda),
+            certified_gap: envelope.best(),
+            kappa_final: None,
         }
     }
 

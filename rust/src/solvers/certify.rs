@@ -1,0 +1,190 @@
+//! Duality-gap certificate engine (DESIGN.md §11).
+//!
+//! A *certificate* is an exactly computed duality gap: for the constrained
+//! form `g(α) = αᵀ∇f(α) + δ‖∇f(α)‖∞ ≥ f(α) − f*`, for the penalized form
+//! the gap-safe `P(α) − D(θ)` the screening pass already evaluates. Both
+//! upper-bound the primal suboptimality of the iterate they were computed
+//! at, so a solver that only ever descends (every FW-family step is an
+//! exact line search clamped at λ ≥ 0; every CD update is an exact
+//! coordinate minimization) can carry the **minimum** gap seen so far as a
+//! valid certificate for its *current* iterate:
+//!
+//! ```text
+//! f monotone ⇒ f(α_now) − f* ≤ f(α_t) − f* ≤ g(α_t)   for every past t.
+//! ```
+//!
+//! [`GapEnvelope`] records that minimum — a monotone nonincreasing
+//! envelope by construction — and powers the certified early-termination
+//! of [`super::SolveOptions::gap_tol`]. The momentum solvers (FISTA/APG)
+//! are *not* monotone in `f`; for them callers report
+//! [`GapEnvelope::last`] (the gap at the most recent certificate pass)
+//! instead of the envelope minimum.
+//!
+//! Where certificates come from:
+//! * **deterministic FW** — the full vertex search produces the exact
+//!   gradient every iteration, so the gap is free (`fw.rs` has always
+//!   exploited this; the envelope now records it).
+//! * **stochastic FW family** (SFW / ASFW / PFW) — the sampled gap
+//!   `αᵀ∇ + δ·maxᵢ∈S|∇ᵢ|` is only a *lower* bound on the true gap (the
+//!   max runs over a subset), so it can never certify. When
+//!   `gap_tol` is set, a dedicated full-gradient pass over the surviving
+//!   pool runs on the dot budget of [`CertSchedule`]; when gap-safe
+//!   screening is active its sphere pass already computes the exact
+//!   restricted gap, which is reused at zero extra cost. The restricted
+//!   gap is a valid certificate for the *full* problem: safe screening
+//!   preserves the optimum, so the restricted problem's gap bounds
+//!   `f(α) − f*` for the same `f*`.
+//! * **penalized solvers** (CD/SCD/FISTA) — the screening pass's
+//!   `P(α) − D(θ)` gap is recorded whenever screening runs.
+//!
+//! `αᵀ∇f(α)` is free for the FW family: with `∇f = Xᵀ(Xα − y)`,
+//! `αᵀ∇f = ‖Xα‖² − (Xα)ᵀy = S − F` — both tracked by the S/F recursions.
+
+/// Monotone best-gap envelope: the minimum certified gap seen so far.
+#[derive(Clone, Copy, Debug)]
+pub struct GapEnvelope {
+    best: f64,
+    last: f64,
+    passes: u64,
+}
+
+impl Default for GapEnvelope {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GapEnvelope {
+    /// Empty envelope (no certificate recorded yet).
+    pub fn new() -> Self {
+        Self { best: f64::INFINITY, last: f64::INFINITY, passes: 0 }
+    }
+
+    /// Record one certificate. Negative inputs (floating-point noise at an
+    /// exact optimum) clamp to 0 — a gap is nonnegative by definition.
+    /// Returns the updated envelope value.
+    pub fn record(&mut self, gap: f64) -> f64 {
+        let g = gap.max(0.0);
+        self.last = g;
+        if g < self.best {
+            self.best = g;
+        }
+        self.passes += 1;
+        g
+    }
+
+    /// The envelope value: minimum gap recorded so far (`None` before the
+    /// first certificate). Valid for the current iterate of any
+    /// monotone-descent solver (see module docs).
+    pub fn best(&self) -> Option<f64> {
+        (self.passes > 0).then_some(self.best)
+    }
+
+    /// The most recent certificate (`None` before the first). What the
+    /// non-monotone momentum solvers report.
+    pub fn last(&self) -> Option<f64> {
+        (self.passes > 0).then_some(self.last)
+    }
+
+    /// Number of certificates recorded.
+    pub fn passes(&self) -> u64 {
+        self.passes
+    }
+
+    /// Whether the envelope has dropped to `tol` (certified termination).
+    pub fn reached(&self, tol: Option<f64>) -> bool {
+        matches!(tol, Some(t) if self.passes > 0 && self.best <= t)
+    }
+}
+
+/// Dot-product budget between dedicated certificate passes of the
+/// stochastic FW family, mirroring the gap-safe screening cadence: a pass
+/// after every `CERT_FACTOR × pool` solver dots costs `pool` dots, i.e.
+/// ≤ 12.5% overhead. Screening passes (which certify for free) reset the
+/// budget too, so screening + `gap_tol` never double-pays.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CertSchedule {
+    dots_since: u64,
+}
+
+/// A dedicated certificate pass runs after `8 × pool` solver dots.
+pub const CERT_FACTOR: u64 = 8;
+
+impl CertSchedule {
+    /// Fresh schedule (first pass due after one full budget).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `spent` solver dot products.
+    pub fn note(&mut self, spent: u64) {
+        self.dots_since += spent;
+    }
+
+    /// Whether the budget for a `pool`-column pass is exhausted.
+    pub fn due(&self, pool: usize) -> bool {
+        self.dots_since >= CERT_FACTOR.saturating_mul((pool as u64).max(1))
+    }
+
+    /// Reset after a pass (dedicated or piggybacked on screening).
+    pub fn reset(&mut self) {
+        self.dots_since = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_is_monotone_nonincreasing() {
+        let mut e = GapEnvelope::new();
+        assert_eq!(e.best(), None);
+        assert_eq!(e.last(), None);
+        assert!(!e.reached(Some(1.0)));
+        let gaps = [5.0, 7.0, 3.0, 3.5, 1.0, 2.0];
+        let mut prev = f64::INFINITY;
+        for &g in &gaps {
+            e.record(g);
+            let b = e.best().unwrap();
+            assert!(b <= prev, "envelope increased: {prev} → {b}");
+            assert!(b <= g, "envelope above the recorded gap");
+            prev = b;
+        }
+        assert_eq!(e.best().unwrap(), 1.0);
+        assert_eq!(e.last().unwrap(), 2.0);
+        assert_eq!(e.passes(), 6);
+    }
+
+    #[test]
+    fn envelope_clamps_negative_noise() {
+        let mut e = GapEnvelope::new();
+        e.record(-1e-18);
+        assert_eq!(e.best().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn reached_requires_a_pass_and_a_tolerance() {
+        let mut e = GapEnvelope::new();
+        assert!(!e.reached(Some(f64::INFINITY)));
+        e.record(0.5);
+        assert!(e.reached(Some(0.5)));
+        assert!(!e.reached(Some(0.4)));
+        assert!(!e.reached(None));
+    }
+
+    #[test]
+    fn schedule_follows_dot_budget() {
+        let mut s = CertSchedule::new();
+        assert!(!s.due(10));
+        s.note(79);
+        assert!(!s.due(10)); // budget = 8 × 10
+        s.note(1);
+        assert!(s.due(10));
+        s.reset();
+        assert!(!s.due(10));
+        // empty pool never divides by zero
+        s.note(8);
+        assert!(s.due(0));
+    }
+}

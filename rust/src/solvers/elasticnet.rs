@@ -110,6 +110,8 @@ impl ElasticNetCd {
             dots,
             converged,
             objective: 0.5 * rss + pen.l1 * l1 + 0.5 * pen.l2 * l2sq,
+            certified_gap: None,
+            kappa_final: None,
         }
     }
 }
@@ -245,6 +247,8 @@ impl ElasticNetSfw {
             dots,
             converged,
             objective: self.objective(prob, state),
+            certified_gap: None,
+            kappa_final: None,
         }
     }
 }

@@ -7,6 +7,7 @@
 //! shared across the path). Adaptive restart on objective increase keeps
 //! momentum healthy across warm starts.
 
+use super::certify::GapEnvelope;
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops::{self, soft_threshold};
 use crate::linalg::KernelScratch;
@@ -81,6 +82,10 @@ impl Fista {
         let mut iters = 0u64;
         let mut converged = false;
         let mut f_prev = f64::INFINITY;
+        // momentum makes FISTA non-monotone in f, so the certificate
+        // reported is the *last* screening pass's gap, not the envelope
+        // minimum (solvers::certify module docs)
+        let mut envelope = GapEnvelope::new();
 
         while (iters as usize) < self.opts.max_iters {
             iters += 1;
@@ -156,6 +161,18 @@ impl Fista {
                     // the rebuild was done solely for screening — charge it
                     // to the screening-overhead counter too
                     s.charge_screen_dots(rebuild);
+                    if let Some(g) = s.last_gap() {
+                        envelope.record(g);
+                        // the gap was computed at the *current* iterate, so
+                        // stopping on it is certified even without
+                        // monotonicity
+                        if let Some(tol) = self.opts.gap_tol {
+                            if g <= tol {
+                                converged = true;
+                                break;
+                            }
+                        }
+                    }
                     // kill the momentum of newly eliminated columns: w[j]
                     // can still be nonzero from the pre-elimination step,
                     // and with ∇ⱼ pinned to 0 the prox would resurrect αⱼ
@@ -183,6 +200,8 @@ impl Fista {
             converged,
             objective: prob.objective(alpha)
                 + lambda * alpha.iter().map(|a| a.abs()).sum::<f64>(),
+            certified_gap: envelope.last(),
+            kappa_final: None,
         }
     }
 }

@@ -4,21 +4,27 @@
 //! (b) it exposes the duality-gap stopping criterion that the stochastic
 //! variant cannot compute cheaply.
 
+use super::certify::GapEnvelope;
 use super::linesearch::FwState;
 use super::{Problem, RunResult, SolveOptions};
 use crate::screening::Screener;
 
 /// Deterministic FW solver for `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ`.
 pub struct FrankWolfe {
-    /// shared solver knobs (tolerance, cap, seed, patience)
+    /// shared solver knobs (tolerance, cap, seed, patience, gap_tol)
     pub opts: SolveOptions,
     /// optional duality-gap threshold (Jaggi-style certificate); `None`
-    /// uses the paper's ‖Δα‖∞ criterion only.
+    /// falls back to [`SolveOptions::gap_tol`], and with both unset the
+    /// paper's ‖Δα‖∞ criterion alone stops the run. The gap is recorded
+    /// into a monotone [`GapEnvelope`] either way, so
+    /// [`RunResult::certified_gap`] is always populated here (the full
+    /// vertex search makes the certificate free).
     pub gap_tol: Option<f64>,
 }
 
 impl FrankWolfe {
-    /// Solver stopping on the paper's ‖Δα‖∞ criterion.
+    /// Solver stopping on the paper's ‖Δα‖∞ criterion (plus
+    /// [`SolveOptions::gap_tol`] when set).
     pub fn new(opts: SolveOptions) -> Self {
         Self { opts, gap_tol: None }
     }
@@ -54,6 +60,8 @@ impl FrankWolfe {
         mut screen: Option<&mut Screener>,
     ) -> RunResult {
         let p = prob.p();
+        let gap_tol = self.gap_tol.or(self.opts.gap_tol);
+        let mut envelope = GapEnvelope::new();
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
@@ -98,13 +106,13 @@ impl FrankWolfe {
             }
             dots += pool_len as u64;
 
-            // duality gap g(α) = αᵀ∇f + δ‖∇f‖∞ — free with the full sweep
+            // duality gap g(α) = αᵀ∇f + δ‖∇f‖∞ — free with the full
+            // sweep; recorded into the monotone certificate envelope
             let gap = gap_acc + delta * best_abs;
-            if let Some(tol) = self.gap_tol {
-                if gap <= tol {
-                    converged = true;
-                    break;
-                }
+            envelope.record(gap);
+            if envelope.reached(gap_tol) {
+                converged = true;
+                break;
             }
 
             // free sphere test: the surviving gradient is already in hand
@@ -134,6 +142,8 @@ impl FrankWolfe {
             dots,
             converged,
             objective: state.objective(prob),
+            certified_gap: envelope.best(),
+            kappa_final: None,
         }
     }
 }

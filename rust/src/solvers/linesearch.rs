@@ -44,6 +44,27 @@ pub struct FwState {
     scratch: KernelScratch,
 }
 
+/// The atom selected by the away-vertex search of the FW variants
+/// (DESIGN.md §11). The ℓ1-ball iterate has a *unique* minimal atomic
+/// decomposition — signed support atoms `δ·sign(αⱼ)·eⱼ` with weight
+/// `|αⱼ|/δ` plus, strictly inside the ball, the origin pseudo-atom with
+/// the slack weight `1 − ‖α‖₁/δ` — so no explicit active-set bookkeeping
+/// is needed beyond [`FwState::active`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum AwayAtom {
+    /// coordinate atom `δ·sign(αⱼ)·eⱼ`, with the iterate's gradient
+    /// coordinate `∇f(α)ⱼ` from the away search (no extra dot products)
+    Coord {
+        /// the support coordinate
+        j: usize,
+        /// `∇f(α)ⱼ` at the current iterate
+        grad_j: f64,
+    },
+    /// the origin pseudo-atom (slack weight of an interior iterate);
+    /// moving away from it scales the iterate up toward the boundary
+    Origin,
+}
+
 /// Everything the caller needs to know about one FW step.
 #[derive(Clone, Copy, Debug)]
 pub struct StepInfo {
@@ -403,6 +424,283 @@ impl FwState {
             dot_ag += self.alpha_coord(j) * grad[j];
         }
         dot_ag + delta * ops::nrm_inf(grad)
+    }
+
+    /// `αᵀ∇f(α)` for free from the tracked invariants: with
+    /// `∇f = Xᵀ(Xα − y)`, `αᵀ∇f = ‖Xα‖² − (Xα)ᵀy = S − F`. This is what
+    /// makes the *sampled* FW gap `αᵀ∇ + δ·maxᵢ∈S|∇ᵢ|` — the adaptive-κ
+    /// stall signal — and the certificate gap `αᵀ∇ + δ·gmax` O(1) given a
+    /// max-gradient value (DESIGN.md §11).
+    #[inline]
+    pub fn alpha_grad_dot(&self) -> f64 {
+        self.s - self.f
+    }
+
+    /// Push `j` onto the active list unless it is already tracked.
+    /// (The variant steps re-activate coordinates that a drop step removed
+    /// earlier; a plain push could then double-count `j` in the
+    /// insertion-ordered sums.)
+    fn activate(&mut self, j: usize) {
+        if !self.active.contains(&j) {
+            self.active.push(j);
+        }
+    }
+
+    /// Remove `j` from the active list preserving insertion order (the
+    /// order fixes the accumulation sequence of `l1_norm`/`alpha` — a
+    /// `swap_remove` would reshuffle it and change bits downstream).
+    fn deactivate(&mut self, j: usize) {
+        if let Some(pos) = self.active.iter().position(|&k| k == j) {
+            self.active.remove(pos);
+        }
+    }
+
+    /// One **away step** `α ← α + γ(α − a)` for the atom `a` of the
+    /// iterate's signed-support decomposition (DESIGN.md §11): weight is
+    /// pushed *off* the worst active atom, with the exact line search
+    /// clipped to `γ_max` (the ratio that drives the atom's weight to 0 —
+    /// hitting it is a **drop step**: the coordinate leaves the support
+    /// exactly). In the scaled representation the update is
+    /// `c ← (1+γ)c; α̂ⱼ −= γδsⱼ/c; q̂ −= (γδsⱼ/c)zⱼ` — one sparse axpy,
+    /// exactly like the forward step.
+    ///
+    /// `atom` carries the away coordinate and its current gradient (from
+    /// the support-restricted away search — no extra dot products here);
+    /// `gamma_max` is the caller-computed `λ_a/(1−λ_a)`.
+    pub fn step_away(
+        &mut self,
+        prob: &Problem<'_>,
+        delta: f64,
+        atom: AwayAtom,
+        gamma_max: f64,
+    ) -> StepInfo {
+        debug_assert!(gamma_max >= 0.0);
+        let alpha_grad = self.alpha_grad_dot();
+        // the atom's signed weight, captured BEFORE any update (a drop
+        // zeroes αⱼ, and signum(+0.0) = 1 would misreport the sign below)
+        let atom_weight = match atom {
+            AwayAtom::Coord { j, .. } => delta * self.alpha_coord(j).signum(),
+            AwayAtom::Origin => 0.0,
+        };
+        // direction d = α − a: g_away = ⟨∇, a − α⟩, denom = ‖Xd‖²
+        let (g_away, denom) = match atom {
+            AwayAtom::Coord { j, grad_j } => {
+                let aj = atom_weight;
+                let g_j = grad_j + prob.cache.sigma[j]; // zⱼᵀq
+                (
+                    aj * grad_j - alpha_grad,
+                    self.s - 2.0 * aj * g_j + aj * aj * prob.cache.norm_sq[j],
+                )
+            }
+            AwayAtom::Origin => (-alpha_grad, self.s),
+        };
+        let gamma = if denom <= 0.0 {
+            // f is affine along d: walk to the boundary when it descends
+            // (g_away > 0), stay put otherwise
+            if g_away > 0.0 { gamma_max } else { 0.0 }
+        } else {
+            (g_away / denom).clamp(0.0, gamma_max)
+        };
+        let dropped = gamma >= gamma_max && gamma_max > 0.0 && gamma > 0.0;
+
+        // ‖Δα‖∞ and the post-step ‖α‖∞ over the (small) active set
+        let scale = 1.0 + gamma;
+        let (linf_change, alpha_inf) = match atom {
+            AwayAtom::Coord { j, .. } => {
+                let aj_abs = self.alpha_coord(j).abs();
+                let mut max_other = 0.0f64;
+                for &k in &self.active {
+                    if k != j {
+                        max_other = max_other.max(self.alpha_coord(k).abs());
+                    }
+                }
+                let new_j = if dropped { 0.0 } else { scale * aj_abs - gamma * delta };
+                (
+                    gamma * max_other.max(delta - aj_abs),
+                    (scale * max_other).max(new_j.abs()),
+                )
+            }
+            AwayAtom::Origin => {
+                let mut amax = 0.0f64;
+                for &k in &self.active {
+                    amax = amax.max(self.alpha_coord(k).abs());
+                }
+                (gamma * amax, scale * amax)
+            }
+        };
+
+        if gamma > 0.0 {
+            // S/F recursions for α' = (1+γ)α − γa, q' = (1+γ)q − γ·aⱼzⱼ
+            match atom {
+                AwayAtom::Coord { j, grad_j } => {
+                    let aj = atom_weight;
+                    let g_j = grad_j + prob.cache.sigma[j];
+                    self.s = scale * scale * self.s
+                        - 2.0 * gamma * scale * aj * g_j
+                        + gamma * gamma * aj * aj * prob.cache.norm_sq[j];
+                    self.f = scale * self.f - gamma * aj * prob.cache.sigma[j];
+                    self.c *= scale;
+                    if self.c.abs() > 1e150 || self.c.abs() < 1e-150 {
+                        self.renormalize();
+                    }
+                    let sub = gamma * aj / self.c;
+                    if dropped {
+                        // exact drop: the atom's weight hits 0
+                        self.alpha_hat[j] = 0.0;
+                        self.deactivate(j);
+                    } else {
+                        self.alpha_hat[j] -= sub;
+                    }
+                    prob.x.col_axpy(j, -sub, &mut self.q_hat);
+                }
+                AwayAtom::Origin => {
+                    // pure upscale: α' = (1+γ)α (no axpy, no dots)
+                    self.s = scale * scale * self.s;
+                    self.f = scale * self.f;
+                    self.c *= scale;
+                    if self.c.abs() > 1e150 {
+                        self.renormalize();
+                    }
+                }
+            }
+        }
+
+        // moving away from atom aⱼ = δsⱼ: report the opposite signed
+        // weight (pre-update sign — a drop already zeroed αⱼ)
+        StepInfo { lambda: gamma, linf_change, delta_signed: -atom_weight, alpha_inf }
+    }
+
+    /// One **pairwise step** `α ← α + γ(v − a)`: weight `γ` moves directly
+    /// from the away atom `a` onto the FW vertex `v = δ̃eᵢ`
+    /// (`δ̃ = −δ·sign(∇ᵢ)`), leaving every other coordinate — and the
+    /// scale factor `c` — untouched. Two sparse axpys. `gamma_max` is the
+    /// away atom's current weight `λ_a`; hitting it is a drop step.
+    /// `zij` must be `zᵢᵀzⱼ` for a coordinate away atom with `j ≠ i`
+    /// (one dot product, charged by the caller); it is ignored for the
+    /// origin atom and for `j == i` (where `‖zᵢ‖²` is cached).
+    pub fn step_pairwise(
+        &mut self,
+        prob: &Problem<'_>,
+        delta: f64,
+        i: usize,
+        grad_i: f64,
+        atom: AwayAtom,
+        gamma_max: f64,
+        zij: f64,
+    ) -> StepInfo {
+        debug_assert!(gamma_max >= 0.0);
+        let ai = -delta * grad_i.signum(); // δ̃: signed FW vertex weight
+        let g_i = grad_i + prob.cache.sigma[i]; // zᵢᵀq
+        let (numer, denom, sf_cross, f_cross) = match atom {
+            AwayAtom::Coord { j, grad_j } => {
+                let aj = delta * self.alpha_coord(j).signum();
+                let g_j = grad_j + prob.cache.sigma[j];
+                let cross = if j == i { prob.cache.norm_sq[i] } else { zij };
+                (
+                    -ai * grad_i + aj * grad_j,
+                    ai * ai * prob.cache.norm_sq[i] + aj * aj * prob.cache.norm_sq[j]
+                        - 2.0 * ai * aj * cross,
+                    ai * g_i - aj * g_j,
+                    ai * prob.cache.sigma[i] - aj * prob.cache.sigma[j],
+                )
+            }
+            AwayAtom::Origin => (
+                -ai * grad_i,
+                ai * ai * prob.cache.norm_sq[i],
+                ai * g_i,
+                ai * prob.cache.sigma[i],
+            ),
+        };
+        let gamma = if denom <= 0.0 {
+            // f is affine along d: descend to the boundary or stay put
+            if numer > 0.0 { gamma_max } else { 0.0 }
+        } else {
+            (numer / denom).clamp(0.0, gamma_max)
+        };
+        let dropped = gamma >= gamma_max && gamma_max > 0.0 && gamma > 0.0;
+
+        // Δα touches exactly the two endpoint coordinates
+        let mut max_other = 0.0f64;
+        for &k in &self.active {
+            let skip = k == i
+                || matches!(atom, AwayAtom::Coord { j, .. } if k == j);
+            if !skip {
+                max_other = max_other.max(self.alpha_coord(k).abs());
+            }
+        }
+        let linf_change;
+        let alpha_inf;
+        match atom {
+            AwayAtom::Coord { j, .. } if j != i => {
+                let aj = delta * self.alpha_coord(j).signum();
+                let alpha_i_new = self.alpha_coord(i) + gamma * ai;
+                let alpha_j_new =
+                    if dropped { 0.0 } else { self.alpha_coord(j) - gamma * aj };
+                linf_change = gamma * delta; // |Δαᵢ| = |Δαⱼ| = γδ
+                alpha_inf = max_other.max(alpha_i_new.abs()).max(alpha_j_new.abs());
+            }
+            AwayAtom::Coord { .. } => {
+                // i == j: the two endpoints collapse onto one coordinate,
+                // Δαᵢ = γ(aᵢ − aⱼ) — zero when the atoms coincide, 2γδ
+                // when the swap flips the sign
+                let aj = delta * self.alpha_coord(i).signum();
+                let alpha_i_new = self.alpha_coord(i) + gamma * (ai - aj);
+                linf_change = gamma * (ai - aj).abs();
+                alpha_inf = max_other.max(alpha_i_new.abs());
+            }
+            AwayAtom::Origin => {
+                let alpha_i_new = self.alpha_coord(i) + gamma * ai;
+                linf_change = gamma * delta; // |Δαᵢ| = γδ
+                alpha_inf = max_other.max(alpha_i_new.abs());
+            }
+        }
+
+        if gamma > 0.0 {
+            self.s = self.s + 2.0 * gamma * sf_cross + gamma * gamma * denom;
+            self.f += gamma * f_cross;
+            match atom {
+                AwayAtom::Coord { j, .. } if j != i => {
+                    let aj = delta * self.alpha_coord(j).signum();
+                    let add_i = gamma * ai / self.c;
+                    if self.alpha_hat[i] == 0.0 {
+                        self.activate(i);
+                    }
+                    self.alpha_hat[i] += add_i;
+                    prob.x.col_axpy(i, add_i, &mut self.q_hat);
+                    let sub_j = gamma * aj / self.c;
+                    if dropped {
+                        self.alpha_hat[j] = 0.0;
+                        self.deactivate(j);
+                    } else {
+                        self.alpha_hat[j] -= sub_j;
+                    }
+                    prob.x.col_axpy(j, -sub_j, &mut self.q_hat);
+                }
+                AwayAtom::Coord { .. } => {
+                    // i == j: the two axpys collapse into one on zᵢ
+                    let aj = delta * self.alpha_coord(i).signum();
+                    let add = gamma * (ai - aj) / self.c;
+                    if self.alpha_hat[i] == 0.0 && add != 0.0 {
+                        self.activate(i);
+                    }
+                    self.alpha_hat[i] += add;
+                    if self.alpha_hat[i] == 0.0 {
+                        self.deactivate(i);
+                    }
+                    prob.x.col_axpy(i, add, &mut self.q_hat);
+                }
+                AwayAtom::Origin => {
+                    let add_i = gamma * ai / self.c;
+                    if self.alpha_hat[i] == 0.0 {
+                        self.activate(i);
+                    }
+                    self.alpha_hat[i] += add_i;
+                    prob.x.col_axpy(i, add_i, &mut self.q_hat);
+                }
+            }
+        }
+
+        StepInfo { lambda: gamma, linf_change, delta_signed: ai, alpha_inf }
     }
 }
 

@@ -7,9 +7,16 @@
 //!   stochastic variant (penalized form) — the paper's main baselines.
 //! * [`fista`] / [`apg`] — accelerated gradient for the penalized /
 //!   constrained forms (the SLEP baselines of Table 2).
+//! * [`variants`] — away-step and pairwise corrections to the stochastic
+//!   FW iteration (DESIGN.md §11): same sampled vertex search, extra
+//!   support-restricted away search, zig-zag-free steps.
+//! * [`certify`] — the duality-gap certificate engine: monotone best-gap
+//!   envelopes and the certificate-pass cadence behind
+//!   [`SolveOptions::gap_tol`].
 //! * [`linesearch`] — the FW closed-form step-size (eq. 8) and the
 //!   S/F recursions, shared by `fw`/`sfw` and the XLA backend.
-//! * [`sampling`] — the §4.5 sampling-size strategies.
+//! * [`sampling`] — the §4.5 sampling-size strategies (including the
+//!   adaptive κ schedule of `SamplingStrategy::Adaptive`).
 //! * [`proj`] — exact ℓ1-ball projection (Duchi pivot), used by `apg`.
 //!
 //! All solvers share the [`Problem`] view and the paper's accounting: a
@@ -23,6 +30,7 @@
 
 pub mod apg;
 pub mod cd;
+pub mod certify;
 pub mod elasticnet;
 pub mod fista;
 pub mod fw;
@@ -31,6 +39,7 @@ pub mod proj;
 pub mod sampling;
 pub mod scd;
 pub mod sfw;
+pub mod variants;
 
 use crate::linalg::{ColumnCache, Design};
 
@@ -108,6 +117,13 @@ pub struct RunResult {
     pub converged: bool,
     /// final objective ½‖Xα − y‖²
     pub objective: f64,
+    /// best certified duality gap recorded during the run (the monotone
+    /// envelope of [`certify::GapEnvelope`]); `None` when no certificate
+    /// pass ran (e.g. stochastic solvers without `gap_tol` or screening)
+    pub certified_gap: Option<f64>,
+    /// last per-iteration sample size κ (stochastic FW family only — the
+    /// adaptive κ schedule makes this differ from the initial κ)
+    pub kappa_final: Option<usize>,
 }
 
 /// Common knobs shared by all solvers.
@@ -127,10 +143,24 @@ pub struct SolveOptions {
     /// consecutive small steps makes the criterion robust to sampling
     /// noise at negligible cost (documented divergence, DESIGN.md §7).
     pub patience: usize,
+    /// certified-gap stopping tolerance: terminate as soon as an *exact*
+    /// duality-gap certificate drops to ≤ `gap_tol` (DESIGN.md §11).
+    /// Deterministic FW certifies for free every iteration; the stochastic
+    /// FW family runs dedicated full-gradient certificate passes on a dot
+    /// budget (reusing the screening pass's gap when screening is on);
+    /// the penalized solvers certify through their screening passes.
+    /// `None` (the default) keeps the paper's ‖Δα‖∞-only stopping rule.
+    pub gap_tol: Option<f64>,
 }
 
 impl Default for SolveOptions {
     fn default() -> Self {
-        Self { eps: 1e-3, max_iters: 50_000, seed: 0x5F3759DF, patience: 10 }
+        Self {
+            eps: 1e-3,
+            max_iters: 50_000,
+            seed: 0x5F3759DF,
+            patience: 10,
+            gap_tol: None,
+        }
     }
 }

@@ -21,6 +21,96 @@ pub enum SamplingStrategy {
     TopQuantile { rho: f64, quantile: f64 },
     /// deterministic: κ = p (recovers standard FW)
     Full,
+    /// Variance-aware adaptive schedule (DESIGN.md §11): start at
+    /// `κ = kappa0` and **grow** κ by `growth` (×, ceil) whenever the
+    /// sampled FW gap fails to set a new minimum for `stall_tol`
+    /// consecutive iterations, saturating at the pool size. Saturation
+    /// makes the iteration the deterministic full sweep, so the tail is
+    /// bit-identical to [`crate::solvers::fw::FrankWolfe`] (property-
+    /// tested). [`SamplingStrategy::kappa`] resolves to the *initial* κ;
+    /// the growth itself is driven per-iteration by the solver through
+    /// [`AdaptiveKappa`].
+    Adaptive {
+        /// initial sample size (clamped to [1, p])
+        kappa0: usize,
+        /// multiplicative growth factor on stall (> 1; the paper-style
+        /// default is 2.0 — doubling)
+        growth: f64,
+        /// consecutive non-improving iterations before growing
+        stall_tol: usize,
+    },
+}
+
+/// Default adaptive schedule: double κ after 32 stalled iterations.
+pub const ADAPTIVE_GROWTH_DEFAULT: f64 = 2.0;
+/// Default stall tolerance of [`SamplingStrategy::adaptive_default`].
+pub const ADAPTIVE_STALL_DEFAULT: usize = 32;
+
+impl SamplingStrategy {
+    /// Adaptive schedule with the default growth (×2) and stall tolerance.
+    pub fn adaptive_default(kappa0: usize) -> SamplingStrategy {
+        SamplingStrategy::Adaptive {
+            kappa0,
+            growth: ADAPTIVE_GROWTH_DEFAULT,
+            stall_tol: ADAPTIVE_STALL_DEFAULT,
+        }
+    }
+}
+
+/// Per-run state of the [`SamplingStrategy::Adaptive`] schedule: current
+/// κ, the running minimum of the *sampled* FW gap, and the stall counter.
+/// κ only ever grows (monotone), saturating at the pool size.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveKappa {
+    kappa: usize,
+    growth: f64,
+    stall_tol: usize,
+    best_sampled_gap: f64,
+    stalled: usize,
+}
+
+impl AdaptiveKappa {
+    /// Fresh schedule for one solver run.
+    pub fn new(kappa0: usize, growth: f64, stall_tol: usize) -> Self {
+        assert!(growth > 1.0, "adaptive growth must be > 1, got {growth}");
+        Self {
+            kappa: kappa0.max(1),
+            growth,
+            stall_tol: stall_tol.max(1),
+            best_sampled_gap: f64::INFINITY,
+            stalled: 0,
+        }
+    }
+
+    /// Current κ for a pool of `pool` surviving columns.
+    pub fn kappa(&self, pool: usize) -> usize {
+        self.kappa.clamp(1, pool.max(1))
+    }
+
+    /// Whether κ has reached the pool size (the deterministic-sweep tail).
+    pub fn saturated(&self, pool: usize) -> bool {
+        self.kappa >= pool
+    }
+
+    /// Feed one iteration's sampled FW gap `ĝ = αᵀ∇ + δ·maxᵢ∈S|∇ᵢ|`.
+    /// A new minimum resets the stall counter; `stall_tol` consecutive
+    /// non-improving iterations grow κ by `growth` (ceil, monotone,
+    /// saturating at `pool`). Returns `true` when κ grew.
+    pub fn observe(&mut self, sampled_gap: f64, pool: usize) -> bool {
+        if sampled_gap < self.best_sampled_gap {
+            self.best_sampled_gap = sampled_gap;
+            self.stalled = 0;
+            return false;
+        }
+        self.stalled += 1;
+        if self.stalled >= self.stall_tol && self.kappa < pool {
+            let grown = (self.kappa as f64 * self.growth).ceil() as usize;
+            self.kappa = grown.max(self.kappa + 1).min(pool.max(1));
+            self.stalled = 0;
+            return true;
+        }
+        false
+    }
 }
 
 impl SamplingStrategy {
@@ -48,21 +138,35 @@ impl SamplingStrategy {
                 ((1.0 - rho).ln() / (1.0 - quantile).ln()).ceil() as usize
             }
             SamplingStrategy::Full => p,
+            SamplingStrategy::Adaptive { kappa0, growth, stall_tol } => {
+                assert!(growth > 1.0, "adaptive growth must be > 1, got {growth}");
+                assert!(stall_tol >= 1, "adaptive stall_tol must be ≥ 1");
+                kappa0
+            }
         };
         k.clamp(1, p)
     }
 
-    /// Human-readable label for reports.
+    /// Human-readable label for reports (the standard-SFW `FW` tag).
     pub fn label(&self) -> String {
+        self.label_with("FW")
+    }
+
+    /// [`Self::label`] with an explicit solver tag — the away-step and
+    /// pairwise variants report as `ASFW …` / `PFW …`.
+    pub fn label_with(&self, tag: &str) -> String {
         match *self {
-            SamplingStrategy::Fraction(f) => format!("FW {:.0}%", f * 100.0),
+            SamplingStrategy::Fraction(f) => format!("{tag} {:.0}%", f * 100.0),
             SamplingStrategy::Confidence { rho, s_est } => {
-                format!("FW conf(ρ={rho}, s={s_est})")
+                format!("{tag} conf(ρ={rho}, s={s_est})")
             }
             SamplingStrategy::TopQuantile { rho, quantile } => {
-                format!("FW topq(ρ={rho}, q={quantile})")
+                format!("{tag} topq(ρ={rho}, q={quantile})")
             }
-            SamplingStrategy::Full => "FW full".to_string(),
+            SamplingStrategy::Full => format!("{tag} full"),
+            SamplingStrategy::Adaptive { kappa0, growth, stall_tol } => {
+                format!("{tag} adapt(κ₀={kappa0}, ×{growth}, stall={stall_tol})")
+            }
         }
     }
 }
@@ -128,5 +232,58 @@ mod tests {
     fn labels() {
         assert_eq!(SamplingStrategy::Fraction(0.02).label(), "FW 2%");
         assert_eq!(SamplingStrategy::Full.label(), "FW full");
+        assert_eq!(
+            SamplingStrategy::Fraction(0.02).label_with("ASFW"),
+            "ASFW 2%"
+        );
+        assert_eq!(SamplingStrategy::Full.label_with("PFW"), "PFW full");
+    }
+
+    #[test]
+    fn adaptive_resolves_to_clamped_kappa0() {
+        let s = SamplingStrategy::adaptive_default(194);
+        assert_eq!(s.kappa(1_000_000), 194);
+        assert_eq!(s.kappa(50), 50); // clamp to p
+        assert_eq!(SamplingStrategy::adaptive_default(0).kappa(10), 1);
+    }
+
+    #[test]
+    fn adaptive_kappa_grows_on_stall_and_saturates() {
+        let mut a = AdaptiveKappa::new(4, 2.0, 3);
+        let pool = 100;
+        assert_eq!(a.kappa(pool), 4);
+        // improving gaps never grow κ
+        for g in [10.0, 9.0, 8.0, 7.0] {
+            assert!(!a.observe(g, pool));
+        }
+        assert_eq!(a.kappa(pool), 4);
+        // 3 consecutive stalls double κ
+        assert!(!a.observe(7.0, pool));
+        assert!(!a.observe(7.5, pool));
+        assert!(a.observe(7.2, pool));
+        assert_eq!(a.kappa(pool), 8);
+        // κ is monotone and saturates at the pool
+        let mut last = 8;
+        for _ in 0..200 {
+            a.observe(100.0, pool);
+            let k = a.kappa(pool);
+            assert!(k >= last, "κ shrank: {last} → {k}");
+            last = k;
+        }
+        assert_eq!(last, pool);
+        assert!(a.saturated(pool));
+        // a shrinking pool (screening) clamps without losing saturation
+        assert_eq!(a.kappa(40), 40);
+        assert!(a.saturated(40));
+    }
+
+    #[test]
+    fn adaptive_kappa_growth_always_moves() {
+        // ceil(1 × 1.5) = 2 even though ceil(1·1.5)=2; pathological small
+        // growth still advances by ≥ 1 per growth event
+        let mut a = AdaptiveKappa::new(1, 1.0001, 1);
+        assert!(!a.observe(1.0, 10)); // first observation improves
+        assert!(a.observe(1.0, 10)); // stall → grow
+        assert!(a.kappa(10) >= 2);
     }
 }

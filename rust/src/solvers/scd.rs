@@ -4,6 +4,7 @@
 //! accounting (§5, Table 2 footnote †3), one *iteration* is p random
 //! coordinate visits — directly comparable to one CD cycle.
 
+use super::certify::GapEnvelope;
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::ops::soft_threshold;
 use crate::screening::Screener;
@@ -72,6 +73,9 @@ impl StochasticCd {
         let mut dots = 0u64;
         let mut epochs = 0u64;
         let mut converged = false;
+        // SCD descends monotonically (exact coordinate minimization), so
+        // the screening passes' gaps form a valid monotone envelope
+        let mut envelope = GapEnvelope::new();
 
         while (epochs as usize) < self.opts.max_iters {
             epochs += 1;
@@ -106,6 +110,13 @@ impl StochasticCd {
                 s.note_iteration(pool_len as u64, (p - pool_len) as u64);
                 if s.due() {
                     dots += s.screen_penalized(prob, alpha, &self.resid, lambda);
+                    if let Some(g) = s.last_gap() {
+                        envelope.record(g);
+                    }
+                    if envelope.reached(self.opts.gap_tol) {
+                        converged = true;
+                        break;
+                    }
                 }
             }
             // scale-free criterion (see linesearch::StepInfo::small)
@@ -121,6 +132,8 @@ impl StochasticCd {
             dots,
             converged,
             objective: 0.5 * rss + lambda * alpha.iter().map(|a| a.abs()).sum::<f64>(),
+            certified_gap: envelope.best(),
+            kappa_final: None,
         }
     }
 }

@@ -11,15 +11,21 @@
 //! Convergence: `E[f(α_k)] − f* ≤ 4C̃_f/(k+2)` (Proposition 2) — validated
 //! empirically in `rust/tests/prop_convergence.rs`.
 //!
+//! This module holds the **vertex-search backends** ([`FwBackend`],
+//! [`NativeBackend`], the shared [`first_max_abs`] reduce). The solver
+//! itself — [`StochasticFw`], whose single iteration body also drives the
+//! away-step and pairwise variants — lives in
+//! [`crate::solvers::variants`] and is re-exported here, so existing
+//! `solvers::sfw::StochasticFw` imports keep working.
+//!
 //! An optional [`FwBackend`] lets step 2–3 run through the AOT-compiled
 //! XLA artifact instead of native Rust (see `runtime::fwstep`); numerics
 //! agree to f32 tolerance (integration-tested).
 
 use super::linesearch::FwState;
-use super::sampling::SamplingStrategy;
-use super::{Problem, RunResult, SolveOptions};
-use crate::screening::Screener;
-use crate::util::rng::Xoshiro256;
+use super::Problem;
+
+pub use super::variants::{FwVariant, StochasticFw};
 
 /// First maximum of `|g[k]|` in slot order (strict `>` keeps the first
 /// occurrence), returning `(k, g[k])` — the **single definition** of the
@@ -116,157 +122,13 @@ impl FwBackend for NativeBackend {
     }
 }
 
-/// Stochastic FW solver (holds RNG + scratch so path runs don't allocate
-/// per regularization value).
-pub struct StochasticFw<B: FwBackend = NativeBackend> {
-    /// how κ = |S| is chosen each iteration (paper §4.5)
-    pub strategy: SamplingStrategy,
-    /// shared solver knobs (tolerance, cap, seed, patience)
-    pub opts: SolveOptions,
-    rng: Xoshiro256,
-    sample: Vec<usize>,
-    sampler: Option<crate::util::rng::SubsetSampler>,
-    backend: B,
-}
-
-impl StochasticFw<NativeBackend> {
-    /// Solver with the default native (pure-Rust) backend.
-    pub fn new(strategy: SamplingStrategy, opts: SolveOptions) -> Self {
-        Self::with_backend(strategy, opts, NativeBackend::new())
-    }
-}
-
-impl<B: FwBackend> StochasticFw<B> {
-    /// Solver with an explicit backend (e.g.
-    /// [`crate::parallel::ParallelBackend`] or the XLA-artifact executor).
-    pub fn with_backend(strategy: SamplingStrategy, opts: SolveOptions, backend: B) -> Self {
-        Self {
-            strategy,
-            opts,
-            rng: Xoshiro256::seed_from_u64(opts.seed),
-            sample: Vec::new(),
-            sampler: None,
-            backend,
-        }
-    }
-
-    /// Reseed (per path-point averaging runs).
-    pub fn reseed(&mut self, seed: u64) {
-        self.rng = Xoshiro256::seed_from_u64(seed);
-    }
-
-    /// Solve `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ` starting from `state`
-    /// (already warm-started/rescaled by the caller). Stops when
-    /// `‖α_new − α_old‖∞ ≤ eps` (paper §5) or at `max_iters`.
-    pub fn run(&mut self, prob: &Problem<'_>, state: &mut FwState, delta: f64) -> RunResult {
-        self.run_with_screen(prob, state, delta, None)
-    }
-
-    /// [`Self::run`] with optional gap-safe screening: the κ-subset is
-    /// drawn from the screener's surviving columns only (so both
-    /// [`NativeBackend`] and [`crate::parallel::ParallelBackend`] scan an
-    /// excised sample), κ is re-derived from the surviving count, and the
-    /// screener re-runs its sphere test on its dot-product cadence
-    /// (`Screener::due`). Screening-pass dots are included in the returned
-    /// [`RunResult::dots`].
-    pub fn run_with_screen(
-        &mut self,
-        prob: &Problem<'_>,
-        state: &mut FwState,
-        delta: f64,
-        mut screen: Option<&mut Screener>,
-    ) -> RunResult {
-        let p = prob.p();
-        let kappa_full = self.strategy.kappa(p);
-        let mut dots = 0u64;
-        let mut iters = 0u64;
-        let mut converged = false;
-        let mut small_streak = 0usize;
-
-        while (iters as usize) < self.opts.max_iters {
-            iters += 1;
-            // 0. gap-safe refresh on the dot-product budget
-            if let Some(s) = screen.as_deref_mut() {
-                if s.due() {
-                    dots += s.screen_with_state(prob, state, delta);
-                }
-            }
-            // effective dimension and sample size on the surviving set
-            let pool_len = match &screen {
-                Some(s) => s.alive_len(),
-                None => p,
-            };
-            let kappa = match &screen {
-                Some(_) => self.strategy.kappa(pool_len),
-                None => kappa_full,
-            };
-            // 1. sample S — O(κ) epoch-stamped Floyd sampler
-            if kappa == pool_len {
-                // deterministic sweep (avoid shuffling cost)
-                match &screen {
-                    Some(s) => {
-                        self.sample.clear();
-                        self.sample.extend_from_slice(s.alive());
-                    }
-                    None => {
-                        if self.sample.len() != p {
-                            self.sample = (0..p).collect();
-                        }
-                    }
-                }
-            } else {
-                // keep one sampler for the whole run and resize it in
-                // place when screening shrinks the pool — no per-pass
-                // reallocation of the p-sized mark array
-                if self.sampler.is_none() {
-                    self.sampler = Some(crate::util::rng::SubsetSampler::new(pool_len));
-                }
-                let sampler = self.sampler.as_mut().unwrap();
-                if sampler.len() != pool_len {
-                    sampler.resize(pool_len);
-                }
-                sampler.sample(&mut self.rng, kappa, &mut self.sample);
-                if let Some(s) = &screen {
-                    // map positions in the surviving set to column indices
-                    let alive = s.alive();
-                    for v in self.sample.iter_mut() {
-                        *v = alive[*v];
-                    }
-                }
-            }
-            // 2. vertex search (κ dot products)
-            let (i_star, g_i) = self.backend.select_vertex(prob, state, &self.sample);
-            dots += kappa as u64;
-            if let Some(s) = screen.as_deref_mut() {
-                s.note_iteration(kappa as u64, kappa_full.saturating_sub(kappa) as u64);
-            }
-            // 3–4. line search + rank-1 update
-            let info = state.step(prob, delta, i_star, g_i);
-            if info.small(self.opts.eps) {
-                small_streak += 1;
-                if small_streak >= self.opts.patience.max(1) {
-                    converged = true;
-                    break;
-                }
-            } else {
-                small_streak = 0;
-            }
-        }
-
-        RunResult {
-            iters,
-            dots,
-            converged,
-            objective: state.objective(prob),
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::linalg::{ColumnCache, DenseMatrix, Design};
     use crate::solvers::proj::project_l1;
+    use crate::solvers::sampling::SamplingStrategy;
+    use crate::solvers::SolveOptions;
     use crate::util::rng::Xoshiro256;
 
     /// Brute-force reference: projected gradient descent to high accuracy.

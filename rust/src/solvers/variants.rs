@@ -1,0 +1,805 @@
+//! Away-step and pairwise variants of the stochastic Frank-Wolfe
+//! iteration, the adaptive-κ schedule, and the shared step engine that
+//! drives all three solvers (DESIGN.md §11).
+//!
+//! ## Why variants
+//!
+//! Plain FW zig-zags on correlated designs: once the iterate sits between
+//! two correlated vertices, every forward step overshoots and the next
+//! step corrects back, giving the well-known sublinear `O(1/k)` crawl.
+//! The classical cure (Guélat & Marcotte; Lacoste-Julien & Jaggi 2015;
+//! surveyed in Bomze et al., *Frank-Wolfe and friends*) is to let the
+//! iteration also move **away** from the worst atom of the iterate's
+//! atomic decomposition:
+//!
+//! * **ASFW** (away-step): per iteration choose the better of the forward
+//!   direction `v − α` and the away direction `α − a`, where `a` is the
+//!   active atom most aligned with the gradient.
+//! * **PFW** (pairwise): move weight *directly* from `a` to `v`
+//!   (`d = v − a`), touching only two coordinates and leaving the scale
+//!   factor `c` untouched.
+//!
+//! Over the δ-scaled ℓ1-ball the atomic decomposition is implied by the
+//! signed support (see [`AwayAtom`]), so the away-vertex search is an
+//! argmax of `δ·sign(αⱼ)·∇ⱼ` over the support — `‖α‖₀` dot products
+//! through the same blocked multi-column engine as everything else
+//! ([`FwState::grad_multi`]), serial because the support is small. The
+//! FW vertex still comes from the paper's sampled search through the
+//! pluggable [`FwBackend`], so Native ≡ Parallel bit-identity is
+//! inherited unchanged.
+//!
+//! ## One engine, three solvers
+//!
+//! [`StochasticFw`] (which lives here; `solvers::sfw` re-exports it)
+//! carries a [`FwVariant`] tag, and `run_with_screen` is the single
+//! iteration body — sampling, screening cadence, adaptive κ, certificate
+//! passes and convergence bookkeeping are shared; only the step rule
+//! branches. `FwVariant::Standard` reproduces the pre-variant solver
+//! exactly (same RNG stream, same dot accounting — conformance-tested).
+//!
+//! ## Adaptive κ ([`SamplingStrategy::Adaptive`])
+//!
+//! The sampled FW gap `ĝ = αᵀ∇ + δ·maxᵢ∈S|∇ᵢ|` is free per iteration
+//! (`αᵀ∇ = S − F`). When ĝ stalls for `stall_tol` iterations the sample
+//! grows by `growth`×, saturating at the pool size — from which point the
+//! iteration **is** the deterministic full sweep, bit-identical to
+//! [`crate::solvers::fw::FrankWolfe`] (property-tested).
+//!
+//! ## Certificates ([`crate::solvers::certify`])
+//!
+//! The engine records every exact duality gap it comes across — free when
+//! κ = pool (the sweep's max *is* `‖∇‖∞`), free when a gap-safe screening
+//! pass runs, and from dedicated full-gradient passes on a dot budget
+//! when [`SolveOptions::gap_tol`] asks for certified termination.
+
+use super::certify::{CertSchedule, GapEnvelope};
+use super::linesearch::{AwayAtom, FwState, StepInfo};
+use super::sampling::{AdaptiveKappa, SamplingStrategy};
+use super::sfw::{FwBackend, NativeBackend};
+use super::{Problem, RunResult, SolveOptions};
+use crate::linalg::{KernelScratch, Storage};
+use crate::screening::Screener;
+use crate::util::rng::{SubsetSampler, Xoshiro256};
+
+/// Which step rule the shared engine applies.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FwVariant {
+    /// the paper's Algorithm 2: forward steps only
+    Standard,
+    /// away-step SFW: per iteration the better of forward and away
+    Away,
+    /// pairwise SFW: weight moves directly from the away atom to the
+    /// sampled FW vertex
+    Pairwise,
+}
+
+impl FwVariant {
+    /// Report tag (`FW` / `ASFW` / `PFW`) combined with the sampling
+    /// strategy by [`SamplingStrategy::label_with`].
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FwVariant::Standard => "FW",
+            FwVariant::Away => "ASFW",
+            FwVariant::Pairwise => "PFW",
+        }
+    }
+}
+
+/// Stochastic FW solver (holds RNG + scratch so path runs don't allocate
+/// per regularization value). One type drives all three [`FwVariant`]s.
+pub struct StochasticFw<B: FwBackend = NativeBackend> {
+    /// how κ = |S| is chosen each iteration (paper §4.5 + adaptive)
+    pub strategy: SamplingStrategy,
+    /// shared solver knobs (tolerance, cap, seed, patience, gap_tol)
+    pub opts: SolveOptions,
+    variant: FwVariant,
+    rng: Xoshiro256,
+    sample: Vec<usize>,
+    sampler: Option<SubsetSampler>,
+    backend: B,
+    /// away-search scratch: current support and its gradient
+    support: Vec<usize>,
+    support_grad: Vec<f64>,
+    /// certificate-pass gradient buffer (pool-sized)
+    cert_grad: Vec<f64>,
+    /// kernel-engine arena for the away search and certificate passes
+    scratch: KernelScratch,
+}
+
+impl StochasticFw<NativeBackend> {
+    /// Standard SFW with the default native (pure-Rust) backend.
+    pub fn new(strategy: SamplingStrategy, opts: SolveOptions) -> Self {
+        Self::with_backend(strategy, opts, NativeBackend::new())
+    }
+
+    /// Away-step SFW (native backend).
+    pub fn away(strategy: SamplingStrategy, opts: SolveOptions) -> Self {
+        Self::with_variant(FwVariant::Away, strategy, opts, NativeBackend::new())
+    }
+
+    /// Pairwise SFW (native backend).
+    pub fn pairwise(strategy: SamplingStrategy, opts: SolveOptions) -> Self {
+        Self::with_variant(FwVariant::Pairwise, strategy, opts, NativeBackend::new())
+    }
+}
+
+impl<B: FwBackend> StochasticFw<B> {
+    /// Standard SFW with an explicit backend (e.g.
+    /// [`crate::parallel::ParallelBackend`] or the XLA-artifact executor).
+    pub fn with_backend(strategy: SamplingStrategy, opts: SolveOptions, backend: B) -> Self {
+        Self::with_variant(FwVariant::Standard, strategy, opts, backend)
+    }
+
+    /// Any variant with an explicit backend. The sampled vertex search
+    /// runs through `backend` for every variant; the away search is
+    /// support-restricted and serial (shared arithmetic path), so
+    /// Native ≡ Parallel bit-identity carries over to ASFW/PFW unchanged.
+    pub fn with_variant(
+        variant: FwVariant,
+        strategy: SamplingStrategy,
+        opts: SolveOptions,
+        backend: B,
+    ) -> Self {
+        Self {
+            strategy,
+            opts,
+            variant,
+            rng: Xoshiro256::seed_from_u64(opts.seed),
+            sample: Vec::new(),
+            sampler: None,
+            backend,
+            support: Vec::new(),
+            support_grad: Vec::new(),
+            cert_grad: Vec::new(),
+            scratch: KernelScratch::new(),
+        }
+    }
+
+    /// The step rule this solver applies.
+    pub fn variant(&self) -> FwVariant {
+        self.variant
+    }
+
+    /// Reseed (per path-point averaging runs).
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Xoshiro256::seed_from_u64(seed);
+    }
+
+    /// Solve `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ` starting from `state`
+    /// (already warm-started/rescaled by the caller). Stops when
+    /// `‖α_new − α_old‖∞ ≤ eps` (paper §5), when a certified gap reaches
+    /// [`SolveOptions::gap_tol`], or at `max_iters`.
+    pub fn run(&mut self, prob: &Problem<'_>, state: &mut FwState, delta: f64) -> RunResult {
+        self.run_with_screen(prob, state, delta, None)
+    }
+
+    /// [`Self::run`] with optional gap-safe screening: the κ-subset is
+    /// drawn from the screener's surviving columns only (so both
+    /// [`NativeBackend`] and [`crate::parallel::ParallelBackend`] scan an
+    /// excised sample), κ is re-derived from the surviving count, and the
+    /// screener re-runs its sphere test on its dot-product cadence
+    /// (`Screener::due`). Screening-pass dots are included in the returned
+    /// [`RunResult::dots`] — as are the away-search, pairwise cross-term
+    /// and certificate-pass dots of the variants.
+    ///
+    /// This is the **shared step engine**: the single iteration body of
+    /// standard, away-step and pairwise SFW (module docs).
+    pub fn run_with_screen(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &mut FwState,
+        delta: f64,
+        mut screen: Option<&mut Screener>,
+    ) -> RunResult {
+        let p = prob.p();
+        let kappa_full = self.strategy.kappa(p);
+        let mut adaptive = match self.strategy {
+            SamplingStrategy::Adaptive { kappa0, growth, stall_tol } => {
+                Some(AdaptiveKappa::new(kappa0.clamp(1, p), growth, stall_tol))
+            }
+            _ => None,
+        };
+        let gap_tol = self.opts.gap_tol;
+        let mut envelope = GapEnvelope::new();
+        let mut cert = CertSchedule::new();
+        let mut dots = 0u64;
+        let mut iters = 0u64;
+        let mut converged = false;
+        let mut small_streak = 0usize;
+        let mut kappa_last = None;
+
+        while (iters as usize) < self.opts.max_iters {
+            iters += 1;
+            // 0. gap-safe refresh on the dot-product budget; its sphere
+            // pass computes the exact restricted gap — a free certificate
+            if let Some(s) = screen.as_deref_mut() {
+                if s.due() {
+                    dots += s.screen_with_state(prob, state, delta);
+                    if let Some(g) = s.last_gap() {
+                        envelope.record(g);
+                        cert.reset();
+                    }
+                    if envelope.reached(gap_tol) {
+                        // no vertex was sampled, no step taken: this is
+                        // not an iteration in the paper's accounting
+                        iters -= 1;
+                        converged = true;
+                        break;
+                    }
+                }
+            }
+            // effective dimension and sample size on the surviving set
+            let pool_len = match &screen {
+                Some(s) => s.alive_len(),
+                None => p,
+            };
+            let kappa = match (&adaptive, &screen) {
+                (Some(a), _) => a.kappa(pool_len),
+                (None, Some(_)) => self.strategy.kappa(pool_len),
+                (None, None) => kappa_full,
+            };
+            kappa_last = Some(kappa);
+            // 1. sample S — O(κ) epoch-stamped Floyd sampler
+            if kappa == pool_len {
+                // deterministic sweep (avoid shuffling cost)
+                match &screen {
+                    Some(s) => {
+                        self.sample.clear();
+                        self.sample.extend_from_slice(s.alive());
+                    }
+                    None => {
+                        if self.sample.len() != p {
+                            self.sample = (0..p).collect();
+                        }
+                    }
+                }
+            } else {
+                // keep one sampler for the whole run and resize it in
+                // place when screening shrinks the pool — no per-pass
+                // reallocation of the p-sized mark array
+                if self.sampler.is_none() {
+                    self.sampler = Some(SubsetSampler::new(pool_len));
+                }
+                let sampler = self.sampler.as_mut().unwrap();
+                if sampler.len() != pool_len {
+                    sampler.resize(pool_len);
+                }
+                sampler.sample(&mut self.rng, kappa, &mut self.sample);
+                if let Some(s) = &screen {
+                    // map positions in the surviving set to column indices
+                    let alive = s.alive();
+                    for v in self.sample.iter_mut() {
+                        *v = alive[*v];
+                    }
+                }
+            }
+            // 2. vertex search (κ dot products)
+            let (i_star, g_i) = self.backend.select_vertex(prob, state, &self.sample);
+            dots += kappa as u64;
+            let mut spent = kappa as u64;
+            // sampled FW gap ĝ = αᵀ∇ + δ·maxᵢ∈S|∇ᵢ| — free (αᵀ∇ = S − F).
+            // When κ = pool the max runs over the whole pool, so ĝ is the
+            // exact gap — but only certify it when the sweep was f64-exact
+            // (the dense sub-p screened scan ranks in f32; its argmax can
+            // sit one ulp under the true ‖∇‖∞, which would under-certify).
+            let sampled_gap = state.alpha_grad_dot() + delta * g_i.abs();
+            let exact_sweep = kappa == pool_len
+                && (pool_len == p || !matches!(prob.x.storage(), Storage::Dense(_)));
+            if exact_sweep {
+                envelope.record(sampled_gap);
+                cert.reset();
+            } else if let Some(a) = adaptive.as_mut() {
+                a.observe(sampled_gap, pool_len);
+            }
+            // dedicated full-gradient certificate pass on the dot budget
+            if gap_tol.is_some() && !exact_sweep && cert.due(pool_len) {
+                let gmax = self.certificate_gmax(prob, state, screen.as_deref());
+                dots += pool_len as u64;
+                spent += pool_len as u64;
+                envelope.record(state.alpha_grad_dot() + delta * gmax);
+                cert.reset();
+            }
+            if envelope.reached(gap_tol) {
+                if let Some(s) = screen.as_deref_mut() {
+                    s.note_iteration(spent, kappa_full.saturating_sub(kappa) as u64);
+                }
+                converged = true;
+                break;
+            }
+            // 3. the variant step rule (may spend away-search dots)
+            let (info, extra) = self.apply_step(prob, state, delta, i_star, g_i, sampled_gap);
+            dots += extra;
+            spent += extra;
+            cert.note(spent);
+            if let Some(s) = screen.as_deref_mut() {
+                s.note_iteration(spent, kappa_full.saturating_sub(kappa) as u64);
+            }
+            // 4. convergence streak
+            if info.small(self.opts.eps) {
+                small_streak += 1;
+                if small_streak >= self.opts.patience.max(1) {
+                    converged = true;
+                    break;
+                }
+            } else {
+                small_streak = 0;
+            }
+        }
+
+        RunResult {
+            iters,
+            dots,
+            converged,
+            objective: state.objective(prob),
+            certified_gap: envelope.best(),
+            kappa_final: kappa_last,
+        }
+    }
+
+    /// One step of the active [`FwVariant`] toward/away from the sampled
+    /// FW vertex `(i_star, g_i)`. Returns the step info plus the extra
+    /// dot products spent (away search `‖α‖₀`, pairwise cross term 1).
+    fn apply_step(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &mut FwState,
+        delta: f64,
+        i_star: usize,
+        g_i: f64,
+        sampled_gap: f64,
+    ) -> (StepInfo, u64) {
+        if self.variant == FwVariant::Standard {
+            return (state.step(prob, delta, i_star, g_i), 0);
+        }
+        let (away, mut extra) = self.away_search(prob, state, delta);
+        let Some(found) = away else {
+            // degenerate (δ = 0 slack with empty support): forward step
+            return (state.step(prob, delta, i_star, g_i), extra);
+        };
+        let AwayFound { atom, weight, score } = found;
+        match self.variant {
+            FwVariant::Away => {
+                // forward gap ⟨∇, α − v⟩ vs away gap ⟨∇, a − α⟩
+                let g_away = score - state.alpha_grad_dot();
+                if sampled_gap >= g_away || weight >= 1.0 {
+                    (state.step(prob, delta, i_star, g_i), extra)
+                } else {
+                    let gamma_max = weight / (1.0 - weight);
+                    (state.step_away(prob, delta, atom, gamma_max), extra)
+                }
+            }
+            FwVariant::Pairwise => {
+                let zij = match atom {
+                    AwayAtom::Coord { j, .. } if j != i_star => {
+                        extra += 1; // one column–column dot product
+                        prob.x.col_dot_col(i_star, j)
+                    }
+                    _ => 0.0,
+                };
+                (
+                    state.step_pairwise(prob, delta, i_star, g_i, atom, weight, zij),
+                    extra,
+                )
+            }
+            FwVariant::Standard => unreachable!("handled above"),
+        }
+    }
+
+    /// Away-vertex search over the signed support: argmax of
+    /// `⟨∇, a⟩ = δ·sign(αⱼ)·∇ⱼ` over the support atoms, plus the origin
+    /// pseudo-atom (score 0) when the iterate is strictly inside the
+    /// ball. Costs (and returns) `‖α‖₀` dot products through the blocked
+    /// multi-column engine. First maximum in support order wins;
+    /// coordinate atoms win ties against the origin (dropping a real atom
+    /// is the useful move). Returns `None` only in the degenerate
+    /// empty-support-on-the-boundary case (δ = 0).
+    fn away_search(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        delta: f64,
+    ) -> (Option<AwayFound>, u64) {
+        self.support.clear();
+        for &j in state.active() {
+            if state.alpha_coord(j) != 0.0 {
+                self.support.push(j);
+            }
+        }
+        let l1 = state.l1_norm();
+        let slack = 1.0 - l1 / delta; // origin weight λ₀
+        if self.support.is_empty() {
+            if slack > 0.0 {
+                return (
+                    Some(AwayFound { atom: AwayAtom::Origin, weight: slack, score: 0.0 }),
+                    0,
+                );
+            }
+            return (None, 0);
+        }
+        self.support_grad.resize(self.support.len(), 0.0);
+        state.grad_multi(prob, &self.support, &mut self.support_grad, &mut self.scratch);
+        let dots = self.support.len() as u64;
+
+        let mut best_k = 0usize;
+        let mut best_score = f64::NEG_INFINITY;
+        for (k, (&j, &g)) in self.support.iter().zip(self.support_grad.iter()).enumerate() {
+            let score = delta * state.alpha_coord(j).signum() * g;
+            if score > best_score {
+                best_score = score;
+                best_k = k;
+            }
+        }
+        if slack > 0.0 && 0.0 > best_score {
+            return (
+                Some(AwayFound { atom: AwayAtom::Origin, weight: slack, score: 0.0 }),
+                dots,
+            );
+        }
+        let j = self.support[best_k];
+        (
+            Some(AwayFound {
+                atom: AwayAtom::Coord { j, grad_j: self.support_grad[best_k] },
+                weight: state.alpha_coord(j).abs() / delta,
+                score: best_score,
+            }),
+            dots,
+        )
+    }
+
+    /// Dedicated certificate pass: `‖∇f(α)‖∞` over the surviving pool
+    /// (exact f64 through the blocked multi-column engine). The caller
+    /// charges `pool` dots.
+    fn certificate_gmax(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        screen: Option<&Screener>,
+    ) -> f64 {
+        match screen {
+            Some(s) => {
+                self.cert_grad.resize(s.alive_len(), 0.0);
+                state.grad_multi(prob, s.alive(), &mut self.cert_grad, &mut self.scratch);
+            }
+            None => {
+                self.cert_grad.resize(prob.p(), 0.0);
+                state.grad_multi_all(prob, &mut self.cert_grad, &mut self.scratch);
+            }
+        }
+        self.cert_grad.iter().fold(0.0f64, |acc, g| acc.max(g.abs()))
+    }
+}
+
+/// Result of one away-vertex search.
+struct AwayFound {
+    atom: AwayAtom,
+    /// the atom's weight in the decomposition (`|αⱼ|/δ` or the slack λ₀)
+    weight: f64,
+    /// `⟨∇, a⟩` (drives the forward-vs-away decision of ASFW)
+    score: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{ColumnCache, DenseMatrix, Design};
+    use crate::solvers::proj::project_l1;
+    use crate::util::rng::Xoshiro256;
+
+    /// Correlated design: latent factors mixed into many columns — the
+    /// shape on which plain FW zig-zags.
+    fn correlated_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let factors: Vec<Vec<f64>> = (0..4)
+            .map(|_| (0..m).map(|_| rng.gaussian()).collect())
+            .collect();
+        let x = DenseMatrix::from_fn(m, p, |i, j| {
+            0.9 * factors[j % 4][i] + 0.4 * rng.gaussian()
+        });
+        let mut beta = vec![0.0; p];
+        beta[0] = 2.0;
+        beta[1] = -1.5;
+        let mut y = vec![0.0; m];
+        x.matvec(&beta, &mut y);
+        for v in y.iter_mut() {
+            *v += 0.01 * rng.gaussian();
+        }
+        (Design::dense(x), y)
+    }
+
+    fn reference_solution(prob: &Problem<'_>, delta: f64, iters: usize) -> Vec<f64> {
+        let l = prob.x.spectral_norm_sq(100, 42).max(1e-12);
+        let (m, p) = (prob.m(), prob.p());
+        let mut alpha = vec![0.0; p];
+        let mut q = vec![0.0; m];
+        let mut grad = vec![0.0; p];
+        for _ in 0..iters {
+            prob.x.matvec(&alpha, &mut q);
+            let resid: Vec<f64> =
+                q.iter().zip(prob.y.iter()).map(|(a, b)| a - b).collect();
+            prob.x.tr_matvec(&resid, &mut grad);
+            for j in 0..p {
+                alpha[j] -= grad[j] / l;
+            }
+            project_l1(&mut alpha, delta);
+        }
+        alpha
+    }
+
+    fn run_variant(
+        variant: FwVariant,
+        prob: &Problem<'_>,
+        delta: f64,
+        opts: SolveOptions,
+    ) -> (RunResult, FwState) {
+        let mut solver = StochasticFw::with_variant(
+            variant,
+            SamplingStrategy::Fraction(0.4),
+            opts,
+            NativeBackend::new(),
+        );
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let res = solver.run_with_screen(prob, &mut st, delta, None);
+        (res, st)
+    }
+
+    #[test]
+    fn variants_stay_feasible_and_consistent() {
+        let (x, y) = correlated_problem(3, 40, 24);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 2.0;
+        for variant in [FwVariant::Standard, FwVariant::Away, FwVariant::Pairwise] {
+            let (res, st) = run_variant(
+                variant,
+                &prob,
+                delta,
+                SolveOptions { eps: 0.0, max_iters: 400, seed: 5, ..Default::default() },
+            );
+            assert!(
+                st.l1_norm() <= delta * (1.0 + 1e-9),
+                "{variant:?}: infeasible ‖α‖₁ = {}",
+                st.l1_norm()
+            );
+            // tracked objective must agree with a direct evaluation
+            let direct = prob.objective(&st.alpha());
+            assert!(
+                (direct - res.objective).abs() <= 1e-6 * (1.0 + direct.abs()),
+                "{variant:?}: tracked {} vs direct {direct}",
+                res.objective
+            );
+        }
+    }
+
+    #[test]
+    fn variants_descend_monotonically() {
+        let (x, y) = correlated_problem(7, 30, 16);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 1.5;
+        for variant in [FwVariant::Away, FwVariant::Pairwise] {
+            let mut solver = StochasticFw::with_variant(
+                variant,
+                SamplingStrategy::Fraction(0.5),
+                SolveOptions { eps: 0.0, max_iters: 1, seed: 11, ..Default::default() },
+                NativeBackend::new(),
+            );
+            let mut st = FwState::zero(prob.p(), prob.m());
+            let mut last = st.objective(&prob);
+            for k in 0..150 {
+                solver.run(&prob, &mut st, delta);
+                let f = st.objective(&prob);
+                assert!(
+                    f <= last + 1e-10,
+                    "{variant:?}: objective rose at step {k}: {last} → {f}"
+                );
+                last = f;
+            }
+        }
+    }
+
+    #[test]
+    fn variants_reach_reference_objective() {
+        let (x, y) = correlated_problem(13, 50, 32);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 2.5;
+        let reference = reference_solution(&prob, delta, 4_000);
+        let f_ref = prob.objective(&reference);
+        let f0 = 0.5 * cache.yty;
+        for variant in [FwVariant::Away, FwVariant::Pairwise] {
+            let (res, _st) = run_variant(
+                variant,
+                &prob,
+                delta,
+                SolveOptions {
+                    eps: 1e-7,
+                    max_iters: 20_000,
+                    seed: 9,
+                    ..Default::default()
+                },
+            );
+            let shortfall = (res.objective - f_ref) / (f0 - f_ref).max(1e-12);
+            assert!(
+                shortfall <= 0.01,
+                "{variant:?}: objective {} vs reference {f_ref} (shortfall {shortfall:.4})",
+                res.objective
+            );
+        }
+    }
+
+    #[test]
+    fn pairwise_drop_step_zeroes_the_atom_exactly() {
+        // Identity design, hand-computable: from α = (1, 1, 0), y =
+        // (10, 0, 0), δ = 2 the pairwise direction moves mass from atom
+        // +2e₁ (weight λ₁ = 0.5) onto the FW vertex +2e₀; the unclipped
+        // γ* = 2.5 exceeds γ_max = λ₁ = 0.5, so the step is a **drop**:
+        // α₁ must become exactly 0 and leave the support.
+        let x = Design::dense(DenseMatrix::from_fn(3, 3, |i, j| f64::from(i == j)));
+        let y = vec![10.0, 0.0, 0.0];
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::from_alpha(&prob, &[1.0, 1.0, 0.0]);
+        let delta = 2.0;
+        let grad_0 = st.grad_coord(&prob, 0); // α₀ − y₀ = −9
+        assert_eq!(grad_0, -9.0);
+        let grad_1 = st.grad_coord(&prob, 1); // α₁ − y₁ = 1
+        let info = st.step_pairwise(
+            &prob,
+            delta,
+            0,
+            grad_0,
+            AwayAtom::Coord { j: 1, grad_j: grad_1 },
+            0.5, // λ₁ = |α₁|/δ
+            0.0, // z₀ᵀz₁ = 0 on the identity design
+        );
+        assert_eq!(info.lambda, 0.5, "γ must clip at the drop boundary");
+        let alpha = st.alpha();
+        assert_eq!(alpha[1], 0.0, "dropped atom not exactly zero");
+        assert!(!st.active().contains(&1), "dropped atom still tracked");
+        assert_eq!(alpha[0], 2.0);
+        assert!(st.l1_norm() <= delta + 1e-12);
+        // tracked S/F stay consistent with the moved iterate
+        let direct = prob.objective(&alpha);
+        assert!((direct - st.objective(&prob)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn away_drop_step_zeroes_the_atom_exactly() {
+        // From α = (1.5, 0.1, 0) with y = (10, −5, 0), δ = 2 the away
+        // search picks atom +2e₁ (score δ·s₁·∇₁ = 10.2, beating the
+        // origin's 0): the unclipped γ* ≈ 3.8 exceeds
+        // γ_max = λ₁/(1−λ₁) = 0.05/0.95, so the away step drops the atom.
+        let x = Design::dense(DenseMatrix::from_fn(3, 3, |i, j| f64::from(i == j)));
+        let y = vec![10.0, -5.0, 0.0];
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut st = FwState::from_alpha(&prob, &[1.5, 0.1, 0.0]);
+        let delta = 2.0;
+        let grad_1 = st.grad_coord(&prob, 1); // 0.1 + 5 = 5.1
+        assert!((grad_1 - 5.1).abs() < 1e-12);
+        let weight = 0.1 / delta; // λ₁ = 0.05
+        let gamma_max = weight / (1.0 - weight);
+        let info = st.step_away(
+            &prob,
+            delta,
+            AwayAtom::Coord { j: 1, grad_j: grad_1 },
+            gamma_max,
+        );
+        assert_eq!(info.lambda, gamma_max, "γ must clip at the drop boundary");
+        let alpha = st.alpha();
+        assert_eq!(alpha[1], 0.0, "dropped atom not exactly zero");
+        assert!(!st.active().contains(&1), "dropped atom still tracked");
+        // the rest of the iterate scaled up by (1 + γ)
+        assert!((alpha[0] - 1.5 * (1.0 + gamma_max)).abs() < 1e-12);
+        let direct = prob.objective(&alpha);
+        assert!((direct - st.objective(&prob)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn variants_converge_to_projection_on_identity_design() {
+        // min ½‖α − y‖² s.t. ‖α‖₁ ≤ δ on the identity design has the
+        // ℓ1-ball projection of y as its exact optimum.
+        let x = DenseMatrix::from_fn(6, 6, |i, j| f64::from(i == j));
+        let y = vec![10.0, 4.0, 0.5, 0.1, 0.0, 0.0];
+        let x = Design::dense(x);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 5.0;
+        let mut proj = y.clone();
+        project_l1(&mut proj, delta);
+        for variant in [FwVariant::Away, FwVariant::Pairwise] {
+            let mut solver = StochasticFw::with_variant(
+                variant,
+                SamplingStrategy::Full,
+                SolveOptions { eps: 0.0, max_iters: 500, seed: 1, ..Default::default() },
+                NativeBackend::new(),
+            );
+            let mut st = FwState::zero(6, 6);
+            solver.run(&prob, &mut st, delta);
+            let alpha = st.alpha();
+            for (j, (&a, &pj)) in alpha.iter().zip(proj.iter()).enumerate() {
+                assert!(
+                    (a - pj).abs() < 1e-6,
+                    "{variant:?}: α[{j}] = {a} vs projection {pj}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn away_and_pairwise_beat_standard_on_correlated_design() {
+        // The zig-zag claim, in miniature: at an equal (generous) dot
+        // budget the variants reach an objective at least as good as
+        // standard SFW on a correlated design.
+        let (x, y) = correlated_problem(21, 60, 40);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 3.0;
+        let opts =
+            SolveOptions { eps: 0.0, max_iters: 2_000, seed: 3, ..Default::default() };
+        let (std_res, _) = run_variant(FwVariant::Standard, &prob, delta, opts);
+        for variant in [FwVariant::Away, FwVariant::Pairwise] {
+            let (res, _) = run_variant(variant, &prob, delta, opts);
+            assert!(
+                res.objective <= std_res.objective * (1.0 + 1e-6) + 1e-9,
+                "{variant:?}: {} vs standard {}",
+                res.objective,
+                std_res.objective
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_kappa_saturates_and_reports() {
+        let (x, y) = correlated_problem(31, 40, 30);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let mut solver = StochasticFw::new(
+            SamplingStrategy::Adaptive { kappa0: 2, growth: 2.0, stall_tol: 2 },
+            SolveOptions { eps: 0.0, max_iters: 3_000, seed: 17, ..Default::default() },
+        );
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let res = solver.run(&prob, &mut st, 2.0);
+        assert_eq!(
+            res.kappa_final,
+            Some(prob.p()),
+            "adaptive κ did not saturate at p"
+        );
+    }
+
+    #[test]
+    fn gap_certified_stop_standard_and_variants() {
+        let (x, y) = correlated_problem(41, 40, 24);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let delta = 2.0;
+        let tol = 1e-3;
+        for variant in [FwVariant::Standard, FwVariant::Away, FwVariant::Pairwise] {
+            let mut solver = StochasticFw::with_variant(
+                variant,
+                SamplingStrategy::Fraction(0.5),
+                SolveOptions {
+                    eps: 0.0,
+                    max_iters: 200_000,
+                    seed: 23,
+                    gap_tol: Some(tol),
+                    ..Default::default()
+                },
+                NativeBackend::new(),
+            );
+            let mut st = FwState::zero(prob.p(), prob.m());
+            let res = solver.run(&prob, &mut st, delta);
+            assert!(res.converged, "{variant:?}: never reached gap_tol");
+            let cert = res.certified_gap.expect("certificate missing");
+            assert!(cert <= tol, "{variant:?}: certified {cert} > tol {tol}");
+            // the certificate really bounds the primal error
+            let reference = reference_solution(&prob, delta, 6_000);
+            let f_ref = prob.objective(&reference);
+            assert!(
+                res.objective - f_ref <= tol * 1.01 + 1e-12,
+                "{variant:?}: primal error {} exceeds certificate {cert}",
+                res.objective - f_ref
+            );
+        }
+    }
+}

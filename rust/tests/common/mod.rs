@@ -1,0 +1,253 @@
+//! Shared test harness for the integration/property suites: synth
+//! problems, path configs, the solver matrix, and cross-run comparison
+//! helpers. Each `tests/*.rs` binary includes this with `mod common;`;
+//! helpers unused by a given suite are expected (`allow(dead_code)`).
+
+#![allow(dead_code)]
+
+use sfw_lasso::data::{load, synth, Dataset, Named};
+use sfw_lasso::linalg::{CscBuilder, CscMatrix, DenseMatrix, Design};
+use sfw_lasso::path::{PathConfig, PathResult, SolverKind};
+use sfw_lasso::screening::ScreenMode;
+use sfw_lasso::solvers::proj::project_l1;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::util::rng::Xoshiro256;
+
+// ---------------------------------------------------------------- datasets
+
+/// The standard small dataset of the suites: p = 100, m = 200 train
+/// (m > p ⇒ strictly convex ⇒ unique optimum, which keeps support
+/// comparisons well-posed). 32 relevant features.
+pub fn small_ds() -> Dataset {
+    load(Named::Synth10k { relevant: 32 }, 0.01, 3)
+}
+
+/// Like [`small_ds`] but with few relevant features, so δ_max stays
+/// modest and the FW O(1/k) tail fits a unit-test budget.
+pub fn easy_ds() -> Dataset {
+    load(Named::Synth10k { relevant: 8 }, 0.01, 3)
+}
+
+/// A correlated dense design (latent-factor mixture, the shape on which
+/// plain FW zig-zags) with a planted 2-sparse signal.
+pub fn correlated_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+    let d = synth::make_correlated_regression(
+        &synth::SynthSpec {
+            n_samples: m,
+            n_features: p,
+            n_informative: 2.min(p),
+            noise: 0.01,
+            seed,
+        },
+        0.8,
+        4,
+    );
+    (d.x, d.y)
+}
+
+/// An i.i.d. gaussian dense design with a planted sparse signal — the
+/// problem shape the solver unit tests use.
+pub fn dense_problem(seed: u64, m: usize, p: usize) -> (Design, Vec<f64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+    let mut beta = vec![0.0; p];
+    beta[1 % p] = 1.5;
+    beta[p / 2] = -2.0;
+    let mut y = vec![0.0; m];
+    x.matvec(&beta, &mut y);
+    for v in y.iter_mut() {
+        *v += 0.01 * rng.gaussian();
+    }
+    (Design::dense(x), y)
+}
+
+/// Sparse test matrix with scattered density, deliberate empty columns
+/// (every 7th) and an empty leading row block — the CSR-scan suites'
+/// adversarial shape.
+pub fn sparse_test_matrix(m: usize, p: usize, seed: u64) -> CscMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut b = CscBuilder::new(m, p);
+    for j in 0..p {
+        if j % 7 == 3 {
+            continue; // empty column
+        }
+        let step = 211 + (j % 17) * 53;
+        for i in ((j * 13) % step..m).step_by(step) {
+            if i >= 64 {
+                // rows 0..64 stay empty
+                b.push(i, j, rng.gaussian());
+            }
+        }
+    }
+    b.build()
+}
+
+/// Deterministic κ-subset of `{0..p-1}` (unsorted, duplicate-free).
+pub fn sample(p: usize, kappa: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut out = Vec::new();
+    rng.subset(p, kappa, &mut out);
+    out
+}
+
+// ------------------------------------------------------------- path config
+
+/// Standard path config of the suites (patience 3, tracking all of `p`).
+pub fn base_cfg(eps: f64, max_iters: usize, n_points: usize, p: usize) -> PathConfig {
+    PathConfig {
+        n_points,
+        opts: SolveOptions { eps, max_iters, patience: 3, ..Default::default() },
+        delta_max: None,
+        track: (0..p).collect(),
+        screen: ScreenMode::Off,
+    }
+}
+
+/// A copy of `cfg` with gap-safe screening switched to `mode`.
+pub fn screened(cfg: &PathConfig, mode: ScreenMode) -> PathConfig {
+    let mut c = cfg.clone();
+    c.screen = mode;
+    c
+}
+
+// ------------------------------------------------------------ solver matrix
+
+/// Every `SolverKind`, stochastic FW family at sampling fraction `frac` —
+/// the full 8-solver matrix (incl. the away-step and pairwise variants).
+pub fn all_solver_kinds(frac: f64) -> Vec<SolverKind> {
+    vec![
+        SolverKind::Cd,
+        SolverKind::Scd,
+        SolverKind::FistaReg,
+        SolverKind::ApgConst,
+        SolverKind::FwDet,
+        SolverKind::Sfw(SamplingStrategy::Fraction(frac)),
+        SolverKind::Asfw(SamplingStrategy::Fraction(frac)),
+        SolverKind::Pfw(SamplingStrategy::Fraction(frac)),
+    ]
+}
+
+/// The constrained stochastic-FW kinds only (standard + variants).
+pub fn fw_family_kinds(frac: f64) -> Vec<SolverKind> {
+    vec![
+        SolverKind::Sfw(SamplingStrategy::Fraction(frac)),
+        SolverKind::Asfw(SamplingStrategy::Fraction(frac)),
+        SolverKind::Pfw(SamplingStrategy::Fraction(frac)),
+    ]
+}
+
+// -------------------------------------------------------------- comparisons
+
+/// Per-point objective agreement within `rtol`, identical grids.
+pub fn assert_objectives_agree(base: &PathResult, scr: &PathResult, rtol: f64, label: &str) {
+    assert_eq!(base.points.len(), scr.points.len(), "{label}: point count");
+    for (a, b) in base.points.iter().zip(scr.points.iter()) {
+        assert_eq!(a.reg, b.reg, "{label}: grid mismatch");
+        assert!(
+            (a.train_mse - b.train_mse).abs() <= rtol * (1.0 + a.train_mse.abs()),
+            "{label} at reg={}: base mse {} vs other mse {}",
+            a.reg,
+            a.train_mse,
+            b.train_mse
+        );
+    }
+}
+
+/// Support agreement via a magnitude gap: no coefficient may be large
+/// (> `big`·‖α‖∞) in one run while essentially zero (< `tiny`·‖α‖∞) in the
+/// other — the signature of an unsafely eliminated feature. Transient
+/// small FW vertex visits between the thresholds are tolerated.
+pub fn assert_supports_agree(
+    base: &PathResult,
+    scr: &PathResult,
+    big: f64,
+    tiny: f64,
+    label: &str,
+) {
+    for (a, b) in base.points.iter().zip(scr.points.iter()) {
+        let amax = a
+            .tracked_coefs
+            .iter()
+            .chain(b.tracked_coefs.iter())
+            .fold(0.0f64, |acc, v| acc.max(v.abs()));
+        if amax == 0.0 {
+            continue;
+        }
+        for (j, (&va, &vb)) in
+            a.tracked_coefs.iter().zip(b.tracked_coefs.iter()).enumerate()
+        {
+            let gap_ab = va.abs() > big * amax && vb.abs() < tiny * amax;
+            let gap_ba = vb.abs() > big * amax && va.abs() < tiny * amax;
+            assert!(
+                !gap_ab && !gap_ba,
+                "{label} at reg={}: coef {j} is {va} in base vs {vb} in other",
+                a.reg
+            );
+        }
+    }
+}
+
+/// Bit-for-bit trajectory equality of two path runs: identical grids,
+/// iteration counts, dot counts, supports and coefficients (to the bit).
+/// The conformance contract of Sfw(κ = p) ≡ FwDet and of the adaptive-κ
+/// saturated tail.
+pub fn assert_paths_bit_identical(a: &PathResult, b: &PathResult, label: &str) {
+    assert_eq!(a.points.len(), b.points.len(), "{label}: point count");
+    assert_eq!(a.total_iters, b.total_iters, "{label}: total iters");
+    assert_eq!(a.total_dots, b.total_dots, "{label}: total dots");
+    for (x, y) in a.points.iter().zip(b.points.iter()) {
+        assert_eq!(x.reg.to_bits(), y.reg.to_bits(), "{label}: grid");
+        assert_eq!(x.iters, y.iters, "{label}: iters diverged at reg = {}", x.reg);
+        assert_eq!(x.dots, y.dots, "{label}: dots diverged at reg = {}", x.reg);
+        assert_eq!(x.active, y.active, "{label}: support size at reg = {}", x.reg);
+        assert_eq!(x.converged, y.converged, "{label}: converged at reg = {}", x.reg);
+        assert_eq!(
+            x.l1_norm.to_bits(),
+            y.l1_norm.to_bits(),
+            "{label}: ‖α‖₁ at reg = {}",
+            x.reg
+        );
+        assert_eq!(
+            x.train_mse.to_bits(),
+            y.train_mse.to_bits(),
+            "{label}: train MSE at reg = {}",
+            x.reg
+        );
+        assert_eq!(
+            x.tracked_coefs.len(),
+            y.tracked_coefs.len(),
+            "{label}: tracking length"
+        );
+        for (j, (u, v)) in x.tracked_coefs.iter().zip(y.tracked_coefs.iter()).enumerate() {
+            assert_eq!(
+                u.to_bits(),
+                v.to_bits(),
+                "{label}: coefficient {j} diverged at reg = {}: {u} vs {v}",
+                x.reg
+            );
+        }
+    }
+}
+
+// --------------------------------------------------------------- references
+
+/// High-precision projected-gradient reference for the constrained
+/// problem (PGD converges linearly on strictly convex instances).
+pub fn pgd_reference(prob: &Problem<'_>, delta: f64, iters: usize) -> Vec<f64> {
+    let l = prob.x.spectral_norm_sq(100, 42).max(1e-12);
+    let (m, p) = (prob.m(), prob.p());
+    let mut alpha = vec![0.0; p];
+    let mut q = vec![0.0; m];
+    let mut grad = vec![0.0; p];
+    for _ in 0..iters {
+        prob.x.matvec(&alpha, &mut q);
+        let resid: Vec<f64> = q.iter().zip(prob.y.iter()).map(|(a, b)| a - b).collect();
+        prob.x.tr_matvec(&resid, &mut grad);
+        for j in 0..p {
+            alpha[j] -= grad[j] / l;
+        }
+        project_l1(&mut alpha, delta);
+    }
+    alpha
+}

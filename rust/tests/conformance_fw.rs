@@ -1,9 +1,12 @@
 //! Solver conformance: the stochastic solver with κ = p must reproduce the
 //! deterministic Frank-Wolfe trajectory bit-for-bit along a warm-started
-//! path, and all six `SolverKind`s must reach comparable objectives on a
-//! small synthetic path.
+//! path, and all eight `SolverKind`s (incl. the away-step and pairwise
+//! variants) must reach comparable objectives on a small synthetic path.
 
-use sfw_lasso::data::{load, Named};
+mod common;
+
+use sfw_lasso::data::load;
+use sfw_lasso::data::Named;
 use sfw_lasso::path::{run_path, PathConfig, SolverKind};
 use sfw_lasso::solvers::sampling::SamplingStrategy;
 use sfw_lasso::solvers::SolveOptions;
@@ -25,40 +28,16 @@ fn sfw_full_sampling_matches_fwdet_trajectories_bit_for_bit() {
     };
     let fw = run_path(&ds, SolverKind::FwDet, &cfg);
     let sfw = run_path(&ds, SolverKind::Sfw(SamplingStrategy::Full), &cfg);
-    assert_eq!(fw.points.len(), sfw.points.len());
-    assert_eq!(fw.total_iters, sfw.total_iters);
     // κ = p ⇒ the sampled sweep degenerates to the full sweep: both count
     // p dots per iteration, pick the same vertex, take the same step.
-    assert_eq!(fw.total_dots, sfw.total_dots);
-    for (a, b) in fw.points.iter().zip(sfw.points.iter()) {
-        assert_eq!(a.reg.to_bits(), b.reg.to_bits());
-        assert_eq!(a.iters, b.iters, "iteration count diverged at δ = {}", a.reg);
-        assert_eq!(a.dots, b.dots);
-        assert_eq!(a.active, b.active);
-        assert_eq!(a.converged, b.converged);
-        assert_eq!(a.l1_norm.to_bits(), b.l1_norm.to_bits());
-        assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits());
-        assert_eq!(
-            a.tracked_coefs.len(),
-            b.tracked_coefs.len(),
-            "tracking length mismatch"
-        );
-        for (j, (x, y)) in a.tracked_coefs.iter().zip(b.tracked_coefs.iter()).enumerate() {
-            assert_eq!(
-                x.to_bits(),
-                y.to_bits(),
-                "coefficient {j} diverged at δ = {}: {x} vs {y}",
-                a.reg
-            );
-        }
-    }
+    common::assert_paths_bit_identical(&fw, &sfw, "Sfw(Full) vs FwDet");
 }
 
 #[test]
-fn all_six_solver_kinds_reach_comparable_objective() {
+fn all_eight_solver_kinds_reach_comparable_objective() {
     // Few relevant features keep δ_max modest so the FW O(1/k) tail fits a
     // unit-test budget (same rationale as the path-runner tests).
-    let ds = load(Named::Synth10k { relevant: 8 }, 0.01, 3); // p = 100
+    let ds = common::easy_ds(); // p = 100
     let cfg = PathConfig {
         n_points: 10,
         opts: SolveOptions {
@@ -71,14 +50,6 @@ fn all_six_solver_kinds_reach_comparable_objective() {
         track: vec![],
         ..Default::default()
     };
-    let kinds = [
-        SolverKind::Cd,
-        SolverKind::Scd,
-        SolverKind::FistaReg,
-        SolverKind::ApgConst,
-        SolverKind::FwDet,
-        SolverKind::Sfw(SamplingStrategy::Fraction(0.3)),
-    ];
     let best_mse = |kind: SolverKind| -> f64 {
         let pr = run_path(&ds, kind, &cfg);
         assert_eq!(pr.points.len(), 10, "{}", kind.label());
@@ -89,7 +60,7 @@ fn all_six_solver_kinds_reach_comparable_objective() {
     };
     let reference = best_mse(SolverKind::Cd);
     assert!(reference.is_finite() && reference >= 0.0);
-    for kind in kinds {
+    for kind in common::all_solver_kinds(0.3) {
         let b = best_mse(kind);
         assert!(
             b <= 2.0 * reference + 1e-6,

@@ -1,0 +1,242 @@
+//! Robustness of the I/O layer: the `.sfwbin` binary cache and the LIBSVM
+//! text parser must turn truncated, bit-flipped and header-mutated inputs
+//! into `Err(...)` — never a panic, never an unbounded allocation. Plus a
+//! cache round-trip through a `libsvm:<path>` file with CRLF endings.
+//!
+//! Table-driven: every mutation case runs through the same
+//! must-not-panic harness (the loaders return `Result`, so a panic —
+//! or an OOM abort — fails the whole suite by construction).
+
+use sfw_lasso::data::cache::{
+    load_libsvm, read_snapshot, snapshot_path, write_snapshot, MAGIC, VERSION,
+};
+use sfw_lasso::data::libsvm;
+use std::path::PathBuf;
+
+fn tmpdir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("sfw_robustness_test")
+        .join(format!("{name}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sample_snapshot_bytes(tag: &str) -> Vec<u8> {
+    let d = libsvm::parse(
+        "1.5 1:2.0 3:4.0\n-0.5 2:1.0\n2.25 1:-3.5 2:0.125 3:7\n4 4:1\n",
+        None,
+    )
+    .unwrap();
+    // per-test path: the suite's tests run on parallel threads
+    let dir = tmpdir(tag);
+    let path = dir.join("sample.sfwbin");
+    write_snapshot(&path, &d.x, &d.y).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+// ------------------------------------------------------------- .sfwbin
+
+#[test]
+fn snapshot_truncation_at_every_boundary_errors_cleanly() {
+    let good = sample_snapshot_bytes("trunc");
+    let dir = tmpdir("trunc");
+    let path = dir.join("t.sfwbin");
+    // every prefix length (all section boundaries included) must error,
+    // never panic — the full file must load
+    for len in 0..good.len() {
+        std::fs::write(&path, &good[..len]).unwrap();
+        let res = read_snapshot(&path);
+        assert!(res.is_err(), "truncated to {len} bytes unexpectedly parsed");
+    }
+    std::fs::write(&path, &good).unwrap();
+    assert!(read_snapshot(&path).is_ok());
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn snapshot_single_byte_flips_never_panic() {
+    // Flip every byte to 0xFF and to its complement: each read must
+    // return Ok (benign payload flip, e.g. inside a float) or Err
+    // (structural damage) — panics/OOMs fail the test process itself.
+    let good = sample_snapshot_bytes("flip");
+    let dir = tmpdir("flip");
+    let path = dir.join("f.sfwbin");
+    let mut rejected = 0usize;
+    for pos in 0..good.len() {
+        for val in [0xFFu8, !good[pos]] {
+            if val == good[pos] {
+                continue;
+            }
+            let mut bad = good.clone();
+            bad[pos] = val;
+            std::fs::write(&path, &bad).unwrap();
+            if read_snapshot(&path).is_err() {
+                rejected += 1;
+            }
+        }
+    }
+    // structural regions (magic/version/dims/col_ptr) must have tripped
+    assert!(rejected > 0, "no corruption was ever rejected");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn snapshot_header_mutations_error_cleanly() {
+    let good = sample_snapshot_bytes("header");
+    let dir = tmpdir("header");
+    let path = dir.join("h.sfwbin");
+    // (offset, 8-byte little-endian value) header mutations: huge or
+    // inconsistent dimensions must be rejected by the pre-allocation
+    // sanity checks, not by an allocator abort
+    let dim_cases: &[(usize, u64, &str)] = &[
+        (8, u64::MAX, "rows = u64::MAX"),
+        (16, u64::MAX, "cols = u64::MAX"),
+        (24, u64::MAX, "nnz = u64::MAX"),
+        (32, u64::MAX, "y_len = u64::MAX"),
+        (16, 1 << 40, "cols = 2^40 (col_ptr would be 8 TiB)"),
+        (24, (good.len() as u64) - 1, "nnz larger than plausible"),
+        (8, 0, "rows = 0 with nonzero row indices"),
+    ];
+    for &(off, val, what) in dim_cases {
+        let mut bad = good.clone();
+        bad[off..off + 8].copy_from_slice(&val.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        assert!(read_snapshot(&path).is_err(), "accepted corrupt header: {what}");
+    }
+    // bad magic / bad version
+    let mut bad = good.clone();
+    bad[..6].copy_from_slice(b"NOTSFW");
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).unwrap_err().contains("magic"));
+    let mut bad = good.clone();
+    bad[6..8].copy_from_slice(&(VERSION + 1).to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).unwrap_err().contains("version"));
+    // appended garbage (length mismatch) must be rejected too
+    let mut bad = good.clone();
+    bad.extend_from_slice(&[0u8; 8]);
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).is_err(), "accepted trailing garbage");
+    assert_eq!(&good[..6], MAGIC, "sanity: magic where expected");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn snapshot_colptr_corruption_is_rejected() {
+    let good = sample_snapshot_bytes("colptr");
+    let dir = tmpdir("colptr");
+    let path = dir.join("c.sfwbin");
+    const HEADER_LEN: usize = 40;
+    // non-monotone col_ptr (second entry beyond nnz)
+    let mut bad = good.clone();
+    bad[HEADER_LEN + 8..HEADER_LEN + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).is_err());
+    // first entry nonzero
+    let mut bad = good.clone();
+    bad[HEADER_LEN..HEADER_LEN + 8].copy_from_slice(&1u64.to_le_bytes());
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).is_err());
+    std::fs::remove_file(&path).ok();
+}
+
+// ------------------------------------------------------------- LIBSVM text
+
+#[test]
+fn libsvm_malformed_inputs_error_cleanly() {
+    // table of malformed payloads: every case must Err (never panic)
+    let cases: &[(&str, &str)] = &[
+        ("1 0:2\n", "0-based index"),
+        ("x 1:2\n", "unparsable label"),
+        ("1 a:2\n", "unparsable index"),
+        ("1 1:z\n", "unparsable value"),
+        ("1 1\n", "missing colon"),
+        ("1 :5\n", "empty index"),
+        ("1 5:\n", "empty value"),
+        ("1 1:2:3\n", "double colon value"),
+        ("1 99999999999999999999:1\n", "index overflows usize"),
+        ("1 4294967296:1\n", "index exceeds u32 (silent-truncation guard)"),
+        ("1 4294967295:1\n", "boundary index u32::MAX (pre-allocation guard)"),
+        ("1 -3:1\n", "negative index"),
+    ];
+    for &(txt, what) in cases {
+        assert!(libsvm::parse(txt, None).is_err(), "accepted {what}: {txt:?}");
+    }
+    // declared-p violation
+    assert!(libsvm::parse("1 5:1\n", Some(3)).is_err());
+}
+
+#[test]
+fn libsvm_byte_flips_never_panic() {
+    // mutate every byte of a valid file through a few characters; the
+    // parser must always return Ok or Err without panicking, and any Ok
+    // result must hold finite-dimension matrices
+    let base = b"1.5 1:2.0 3:4.0\n-0.5 2:1.0\n2.25 1:-3.5 2:0.125 3:7\n".to_vec();
+    for pos in 0..base.len() {
+        for &b in &[b'9', b':', b'\n', b' ', 0xFFu8, b'-'] {
+            let mut bad = base.clone();
+            bad[pos] = b;
+            if let Ok(d) = libsvm::parse_bytes(&bad, None) {
+                assert!(d.x.cols() <= u32::MAX as usize);
+                assert_eq!(d.x.rows(), d.y.len());
+            }
+        }
+    }
+}
+
+#[test]
+fn libsvm_non_utf8_and_binary_noise_error_or_parse() {
+    // raw binary noise: must not panic (UTF-8 errors surface as Err)
+    let noise: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+    let _ = libsvm::parse_bytes(&noise, None);
+    // embedded NUL and invalid UTF-8 in tokens
+    assert!(libsvm::parse_bytes(b"1 \xFF\xFE:1\n", None).is_err());
+}
+
+// --------------------------------------------- cache round-trip with CRLF
+
+#[test]
+fn cache_round_trip_through_crlf_libsvm_file() {
+    let dir = tmpdir("crlf");
+    let src = dir.join("crlf.svm");
+    // CRLF endings, trailing whitespace, indented comment, final line
+    // without terminator — the forms Windows-edited exports contain
+    let txt = "1.5 1:2.0 3:4.0 \t\r\n  # comment \r\n-0.5 2:1.0\t \r\n2.5 1:1";
+    std::fs::write(&src, txt).unwrap();
+    let snap = snapshot_path(&src);
+    std::fs::remove_file(&snap).ok();
+
+    // parse + write snapshot
+    let (parsed, from_cache) = load_libsvm(&src, true).unwrap();
+    assert!(!from_cache);
+    assert!(snap.exists(), "snapshot not written");
+    // reload from the snapshot: identical data, bit-for-bit values
+    let (cached, from_cache) = load_libsvm(&src, true).unwrap();
+    assert!(from_cache);
+    assert_eq!(parsed.y, cached.y);
+    assert_eq!(parsed.x.rows(), cached.x.rows());
+    assert_eq!(parsed.x.cols(), cached.x.cols());
+    assert_eq!(parsed.x.nnz(), cached.x.nnz());
+    for j in 0..parsed.x.cols() {
+        let (ra, va) = parsed.x.col(j);
+        let (rb, vb) = cached.x.col(j);
+        assert_eq!(ra, rb, "row indices of col {j}");
+        for (a, b) in va.iter().zip(vb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "values of col {j}");
+        }
+    }
+    // a corrupted snapshot degrades to re-parse, never to failure
+    let mut bytes = std::fs::read(&snap).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    bytes.truncate(last);
+    std::fs::write(&snap, &bytes).unwrap();
+    // make the corrupt snapshot look fresh (mtime ≥ source)
+    let (reparsed, from_cache) = load_libsvm(&src, true).unwrap();
+    assert!(!from_cache, "corrupt snapshot must fall back to text parse");
+    assert_eq!(reparsed.y, parsed.y);
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&snap).ok();
+}

@@ -1,0 +1,219 @@
+//! Golden-trace regression suite: for every `SolverKind` (including the
+//! away-step and pairwise variants), run a short warm-started path on a
+//! small deterministic synth problem and snapshot the trajectory —
+//! objective/ℓ1/certified-gap **bit patterns**, support sizes, iteration
+//! and dot counts, κ_final — against a checked-in fixture. Any kernel,
+//! scan or solver refactor that silently changes results fails loudly
+//! here.
+//!
+//! Fixture: `tests/fixtures/golden_traces.json`.
+//!
+//! * Missing fixture (or `SFW_BLESS=1`) ⇒ the suite computes the trace
+//!   twice (asserting bit-determinism), writes the fixture, and passes
+//!   with a notice. CI's kernels job blesses under the default
+//!   environment first, then re-runs the suite under `SFW_FORCE_SCALAR=1`
+//!   and `SFW_NO_MIRROR=1` against that just-blessed fixture — proving
+//!   the three kernel environments produce **identical snapshots**.
+//! * Present fixture ⇒ strict bit-for-bit comparison with a labelled
+//!   diff; regenerate deliberately with `SFW_BLESS=1 cargo test --test
+//!   golden_traces`.
+//!
+//! Caveat: the synth *data generation* draws gaussians through libm
+//! (`ln`, `sin_cos`), whose bits can differ across libc implementations —
+//! the fixture is therefore toolchain-family-specific and is meant to be
+//! blessed by the same CI image that checks it. The solver arithmetic
+//! itself uses only IEEE-exact operations.
+
+mod common;
+
+use sfw_lasso::path::{run_path, PathConfig, PathResult, SolverKind};
+use sfw_lasso::screening::ScreenMode;
+use sfw_lasso::solvers::SolveOptions;
+use sfw_lasso::util::json::Json;
+use std::path::PathBuf;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/fixtures/golden_traces.json")
+}
+
+fn hex(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+/// The golden problem + config: small, deterministic, fast.
+fn golden_runs() -> Vec<(String, PathResult)> {
+    let ds = common::easy_ds(); // p = 100, deterministic seed
+    let mut out = Vec::new();
+    for screen in [ScreenMode::Off, ScreenMode::Gap] {
+        let cfg = PathConfig {
+            n_points: 3,
+            opts: SolveOptions {
+                eps: 1e-3,
+                max_iters: 600,
+                patience: 2,
+                seed: 0x601D,
+                ..Default::default()
+            },
+            delta_max: Some(2.0),
+            track: vec![],
+            screen,
+        };
+        for kind in common::all_solver_kinds(0.25) {
+            let label = format!("{}/{}", kind.label(), screen.label());
+            out.push((label, run_path(&ds, kind, &cfg)));
+        }
+        // the adaptive schedule is part of the golden surface too
+        let adaptive = SolverKind::Sfw(
+            sfw_lasso::solvers::sampling::SamplingStrategy::Adaptive {
+                kappa0: 4,
+                growth: 2.0,
+                stall_tol: 4,
+            },
+        );
+        out.push((
+            format!("{}/{}", adaptive.label(), screen.label()),
+            run_path(&ds, adaptive, &cfg),
+        ));
+    }
+    out
+}
+
+fn trace_json(runs: &[(String, PathResult)]) -> Json {
+    Json::Arr(
+        runs.iter()
+            .map(|(label, pr)| {
+                Json::obj(vec![
+                    ("solver", Json::Str(label.clone())),
+                    ("total_iters", Json::Num(pr.total_iters as f64)),
+                    ("total_dots", Json::Num(pr.total_dots as f64)),
+                    (
+                        "points",
+                        Json::Arr(
+                            pr.points
+                                .iter()
+                                .map(|pt| {
+                                    Json::obj(vec![
+                                        ("reg", Json::Str(hex(pt.reg))),
+                                        ("l1", Json::Str(hex(pt.l1_norm))),
+                                        ("mse", Json::Str(hex(pt.train_mse))),
+                                        ("active", Json::Num(pt.active as f64)),
+                                        ("iters", Json::Num(pt.iters as f64)),
+                                        ("dots", Json::Num(pt.dots as f64)),
+                                        (
+                                            "certified_gap",
+                                            match pt.certified_gap {
+                                                Some(g) => Json::Str(hex(g)),
+                                                None => Json::Null,
+                                            },
+                                        ),
+                                        (
+                                            "kappa_final",
+                                            match pt.kappa_final {
+                                                Some(k) => Json::Num(k as f64),
+                                                None => Json::Null,
+                                            },
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[test]
+fn golden_traces_match_fixture() {
+    let runs = golden_runs();
+    let current = trace_json(&runs).pretty();
+
+    let path = fixture_path();
+    let bless = std::env::var("SFW_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        // determinism gate before blessing: a second run must reproduce
+        // the first bit-for-bit
+        let again = trace_json(&golden_runs()).pretty();
+        assert_eq!(
+            current, again,
+            "trace is nondeterministic — refusing to bless"
+        );
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, &current).unwrap();
+        println!(
+            "golden_traces: blessed fixture at {} ({} solvers)",
+            path.display(),
+            runs.len()
+        );
+        return;
+    }
+
+    let expected = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read fixture {}: {e}", path.display()));
+    if current == expected {
+        return;
+    }
+    // structured diff: point to the first diverging solver/point/field
+    let cur = Json::parse(&current).unwrap();
+    let exp = Json::parse(&expected).expect("fixture is not valid JSON");
+    let (cur, exp) = (cur.as_arr().unwrap(), exp.as_arr().unwrap());
+    assert_eq!(
+        cur.len(),
+        exp.len(),
+        "solver count changed: {} now vs {} in fixture — \
+         rerun with SFW_BLESS=1 if intentional",
+        cur.len(),
+        exp.len()
+    );
+    for (c, e) in cur.iter().zip(exp.iter()) {
+        let solver = c.get("solver").as_str().unwrap_or("?").to_string();
+        assert_eq!(
+            e.get("solver").as_str(),
+            Some(solver.as_str()),
+            "solver order changed at '{solver}'"
+        );
+        for field in ["total_iters", "total_dots"] {
+            assert_eq!(
+                c.get(field).as_f64(),
+                e.get(field).as_f64(),
+                "{solver}: {field} diverged — a refactor changed results; \
+                 verify intentionality, then SFW_BLESS=1"
+            );
+        }
+        let (cp, ep) = (
+            c.get("points").as_arr().unwrap(),
+            e.get("points").as_arr().unwrap(),
+        );
+        assert_eq!(cp.len(), ep.len(), "{solver}: point count");
+        for (k, (p_cur, p_exp)) in cp.iter().zip(ep.iter()).enumerate() {
+            for field in ["reg", "l1", "mse", "certified_gap"] {
+                assert_eq!(
+                    p_cur.get(field).as_str(),
+                    p_exp.get(field).as_str(),
+                    "{solver} point {k}: {field} bits diverged — \
+                     a refactor changed numerics; verify, then SFW_BLESS=1"
+                );
+            }
+            for field in ["active", "iters", "dots", "kappa_final"] {
+                assert_eq!(
+                    p_cur.get(field).as_f64(),
+                    p_exp.get(field).as_f64(),
+                    "{solver} point {k}: {field} diverged"
+                );
+            }
+        }
+    }
+    // fall through only if the diff was pure formatting (shouldn't happen)
+    panic!("golden trace differs from fixture only in formatting — rebless with SFW_BLESS=1");
+}
+
+#[test]
+fn golden_runs_are_deterministic_within_process() {
+    // Cheap standalone determinism check (also guards the bless path):
+    // identical back-to-back runs, bit-for-bit.
+    let a = trace_json(&golden_runs()).pretty();
+    let b = trace_json(&golden_runs()).pretty();
+    assert_eq!(a, b);
+}

@@ -18,36 +18,19 @@
 //! and `SFW_NO_MIRROR=1`; every assertion is written to hold in all three
 //! environments (the env-sensitive expectations branch on the env).
 
+mod common;
+
+use common::{sample, sparse_test_matrix as test_matrix};
 use sfw_lasso::linalg::csr::{mirror_disabled, CsrMirror};
 use sfw_lasso::linalg::kernel::scan::{mirror_multi_dot, multi_dot_sparse, Cols};
 use sfw_lasso::linalg::kernel::{KernelScratch, ROW_TILE};
-use sfw_lasso::linalg::{ColumnCache, CscBuilder, CscMatrix, Design, Storage};
+use sfw_lasso::linalg::{ColumnCache, CscMatrix, Design, Storage};
 use sfw_lasso::parallel::{mirror_multi_dot_sharded, MirrorShardScratch, ParallelBackend};
 use sfw_lasso::solvers::linesearch::FwState;
 use sfw_lasso::solvers::sampling::SamplingStrategy;
 use sfw_lasso::solvers::sfw::{FwBackend, NativeBackend, StochasticFw};
 use sfw_lasso::solvers::{Problem, SolveOptions};
 use sfw_lasso::util::rng::Xoshiro256;
-
-/// Sparse test matrix with scattered density, deliberate empty columns
-/// (every 7th) and an empty leading row block.
-fn test_matrix(m: usize, p: usize, seed: u64) -> CscMatrix {
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let mut b = CscBuilder::new(m, p);
-    for j in 0..p {
-        if j % 7 == 3 {
-            continue; // empty column
-        }
-        let step = 211 + (j % 17) * 53;
-        for i in ((j * 13) % step..m).step_by(step) {
-            if i >= 64 {
-                // rows 0..64 stay empty
-                b.push(i, j, rng.gaussian());
-            }
-        }
-    }
-    b.build()
-}
 
 /// Independent oracle of the sparse scan contract: per column, per
 /// `ROW_TILE` tile, sequential f64 accumulation in ascending row order;
@@ -73,13 +56,6 @@ fn reference_dots(x: &CscMatrix, cols: &[usize], v: &[f64]) -> Vec<f64> {
             out
         })
         .collect()
-}
-
-fn sample(p: usize, kappa: usize, seed: u64) -> Vec<usize> {
-    let mut rng = Xoshiro256::seed_from_u64(seed);
-    let mut out = Vec::new();
-    rng.subset(p, kappa, &mut out);
-    out
 }
 
 #[test]

@@ -2,6 +2,10 @@
 //! bit-identical to the serial reference for any thread count, across
 //! random shapes, storages, sample sizes, and warm states; and a full
 //! solver run through [`ParallelBackend`] is thread-count invariant.
+//! (Thread-count invariance of the away-step/pairwise variants is in
+//! `prop_variants.rs`.)
+
+mod common;
 
 use sfw_lasso::linalg::{ColumnCache, CscMatrix, DenseMatrix, Design};
 use sfw_lasso::parallel::ParallelBackend;
@@ -107,10 +111,8 @@ fn solve_with_threads(
 /// for any `--threads` value.
 #[test]
 fn parallel_solver_run_is_thread_count_invariant() {
-    let mut rng = Xoshiro256::seed_from_u64(99);
     let (m, p) = (60, 400);
-    let x = Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()));
-    let y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+    let (x, y) = common::dense_problem(99, m, p);
     let cache = ColumnCache::build(&x, &y);
     let prob = Problem::new(&x, &y, &cache);
 

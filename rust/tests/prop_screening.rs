@@ -8,82 +8,24 @@
 //! may be essentially absent in the other). The deterministic solvers are
 //! additionally checked at high precision, and the sphere test itself is
 //! checked against an independently computed reference optimum.
+//!
+//! Synth problems, configs and the agreement assertions live in the
+//! shared harness (`tests/common`).
 
-use sfw_lasso::data::{load, Dataset, Named};
+mod common;
+
+use common::{
+    assert_objectives_agree, assert_supports_agree, base_cfg, pgd_reference, screened,
+    small_ds,
+};
 use sfw_lasso::linalg::ColumnCache;
-use sfw_lasso::path::{run_path, run_path_parallel, PathConfig, PathResult, SolverKind};
+use sfw_lasso::path::{run_path, run_path_parallel, SolverKind};
 use sfw_lasso::screening::{ScreenMode, Screener};
 use sfw_lasso::solvers::cd::CoordinateDescent;
 use sfw_lasso::solvers::fw::FrankWolfe;
 use sfw_lasso::solvers::linesearch::FwState;
-use sfw_lasso::solvers::proj::project_l1;
 use sfw_lasso::solvers::sampling::SamplingStrategy;
 use sfw_lasso::solvers::{Problem, SolveOptions};
-
-fn small_ds() -> Dataset {
-    // p = 100, m = 200 train (m > p ⇒ strictly convex ⇒ unique optimum,
-    // which makes the support comparison below well-posed)
-    load(Named::Synth10k { relevant: 8 }, 0.01, 3)
-}
-
-fn base_cfg(eps: f64, max_iters: usize, n_points: usize, p: usize) -> PathConfig {
-    PathConfig {
-        n_points,
-        opts: SolveOptions { eps, max_iters, patience: 3, ..Default::default() },
-        delta_max: None,
-        track: (0..p).collect(),
-        screen: ScreenMode::Off,
-    }
-}
-
-/// Per-point objective agreement within `rtol`, identical grids.
-fn assert_objectives_agree(base: &PathResult, scr: &PathResult, rtol: f64, label: &str) {
-    assert_eq!(base.points.len(), scr.points.len(), "{label}: point count");
-    for (a, b) in base.points.iter().zip(scr.points.iter()) {
-        assert_eq!(a.reg, b.reg, "{label}: grid mismatch");
-        assert!(
-            (a.train_mse - b.train_mse).abs() <= rtol * (1.0 + a.train_mse.abs()),
-            "{label} at reg={}: unscreened mse {} vs screened mse {}",
-            a.reg,
-            a.train_mse,
-            b.train_mse
-        );
-    }
-}
-
-/// Support agreement via a magnitude gap: no coefficient may be large
-/// (> `big`·‖α‖∞) in one run while essentially zero (< `tiny`·‖α‖∞) in the
-/// other — the signature of an unsafely eliminated feature. Transient
-/// small FW vertex visits between the thresholds are tolerated.
-fn assert_supports_agree(base: &PathResult, scr: &PathResult, big: f64, tiny: f64, label: &str) {
-    for (a, b) in base.points.iter().zip(scr.points.iter()) {
-        let amax = a
-            .tracked_coefs
-            .iter()
-            .chain(b.tracked_coefs.iter())
-            .fold(0.0f64, |acc, v| acc.max(v.abs()));
-        if amax == 0.0 {
-            continue;
-        }
-        for (j, (&va, &vb)) in
-            a.tracked_coefs.iter().zip(b.tracked_coefs.iter()).enumerate()
-        {
-            let gap_ab = va.abs() > big * amax && vb.abs() < tiny * amax;
-            let gap_ba = vb.abs() > big * amax && va.abs() < tiny * amax;
-            assert!(
-                !gap_ab && !gap_ba,
-                "{label} at reg={}: coef {j} is {va} unscreened vs {vb} screened",
-                a.reg
-            );
-        }
-    }
-}
-
-fn screened(cfg: &PathConfig, mode: ScreenMode) -> PathConfig {
-    let mut c = cfg.clone();
-    c.screen = mode;
-    c
-}
 
 #[test]
 fn screened_cd_matches_unscreened_at_high_precision() {
@@ -136,7 +78,9 @@ fn screened_constrained_kinds_match_unscreened() {
     // FW-family solvers stop on ‖Δα‖∞ with an O(1/k) tail, so both runs
     // carry stopping slack; agreement is asserted at solver accuracy while
     // the exactness of the sphere test itself is covered by the reference
-    // test below and the unit tests in `screening::tests`.
+    // test below and the unit tests in `screening::tests`. The away-step
+    // and pairwise variants ride the same contract (their supports live
+    // inside the surviving set too) — see also `prop_variants.rs`.
     let ds = small_ds();
     let mut cfg = base_cfg(1e-3, 4_000, 6, ds.cols());
     cfg.delta_max = Some(3.0);
@@ -158,8 +102,8 @@ fn screened_constrained_kinds_match_unscreened() {
 
 #[test]
 fn screened_parallel_paths_agree_across_thread_counts() {
-    // The ISSUE contract: screened paths stay correct (and deterministic)
-    // under --threads 1/2/4/8. Each thread count is compared against the
+    // Screened paths stay correct (and deterministic) under
+    // --threads 1/2/4/8. Each thread count is compared against the
     // unscreened run at the same thread count (warm-start chunking is
     // thread-count-dependent, so that is the apples-to-apples pairing).
     let ds = small_ds();
@@ -183,26 +127,6 @@ fn screened_parallel_paths_agree_across_thread_counts() {
             assert_eq!(x.active, y.active, "{label}");
         }
     }
-}
-
-/// High-precision projected-gradient reference for the constrained
-/// problem (m > p ⇒ unique optimum; PGD converges linearly here).
-fn pgd_reference(prob: &Problem<'_>, delta: f64, iters: usize) -> Vec<f64> {
-    let l = prob.x.spectral_norm_sq(100, 42).max(1e-12);
-    let (m, p) = (prob.m(), prob.p());
-    let mut alpha = vec![0.0; p];
-    let mut q = vec![0.0; m];
-    let mut grad = vec![0.0; p];
-    for _ in 0..iters {
-        prob.x.matvec(&alpha, &mut q);
-        let resid: Vec<f64> = q.iter().zip(prob.y.iter()).map(|(a, b)| a - b).collect();
-        prob.x.tr_matvec(&resid, &mut grad);
-        for j in 0..p {
-            alpha[j] -= grad[j] / l;
-        }
-        project_l1(&mut alpha, delta);
-    }
-    alpha
 }
 
 #[test]
@@ -293,6 +217,14 @@ fn penalized_sphere_keeps_kkt_support_and_objective() {
         scr.screened_fraction() > 0.5,
         "only {:.2} screened at the optimum",
         scr.screened_fraction()
+    );
+    // ... and the pass's exposed certificate is that near-zero gap
+    // (scale-relative: the objective is O(10⁴) on this synth data)
+    let cert = scr.last_gap().expect("pass recorded no gap");
+    assert!(
+        cert <= 1e-6 * (1.0 + base.objective),
+        "gap at the optimum should be ~0, got {cert} (objective {})",
+        base.objective
     );
 
     let mut cd2 = CoordinateDescent::new(opts);

@@ -1,0 +1,305 @@
+//! Properties of the away-step/pairwise FW variants, the adaptive-κ
+//! schedule, and the gap-certificate engine (DESIGN.md §11):
+//!
+//! * adaptive-κ SFW with κ saturated at p is **bit-identical** to
+//!   deterministic FW from the saturation iteration on (saturated-from-
+//!   start runs compare whole warm-started paths bit-for-bit);
+//! * ASFW/PFW are thread-count invariant (1/2/4/8) and
+//!   screened ≡ unscreened in objective + support;
+//! * the certified-gap envelope is monotone nonincreasing along a run's
+//!   prefixes, and the certificate upper-bounds the true primal gap on an
+//!   exactly solvable orthogonal design.
+
+mod common;
+
+use sfw_lasso::linalg::{ColumnCache, DenseMatrix, Design};
+use sfw_lasso::parallel::ParallelBackend;
+use sfw_lasso::path::{run_path, SolverKind};
+use sfw_lasso::screening::ScreenMode;
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::proj::project_l1;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::NativeBackend;
+use sfw_lasso::solvers::variants::{FwVariant, StochasticFw};
+use sfw_lasso::solvers::SolveOptions;
+use sfw_lasso::solvers::Problem;
+
+// ------------------------------------------------- adaptive-κ ≡ FwDet
+
+#[test]
+fn adaptive_kappa_saturated_is_bit_identical_to_fwdet() {
+    // κ₀ ≥ p saturates the schedule at iteration 0, so the whole
+    // warm-started path — every grid point, every iteration — must be the
+    // deterministic-FW trajectory bit-for-bit. Combined with
+    // `adaptive_kappa_is_monotone_and_saturates` (κ only ever grows and
+    // reaches p), this pins the "tail ≡ FwDet from the saturation
+    // iteration on" contract: once κ = p, an adaptive iteration IS this
+    // deterministic sweep.
+    let ds = common::small_ds();
+    let mut cfg = common::base_cfg(1e-3, 2_000, 10, ds.cols());
+    cfg.delta_max = Some(3.0);
+    let fw = run_path(&ds, SolverKind::FwDet, &cfg);
+    for kappa0 in [ds.cols(), 10 * ds.cols()] {
+        let adaptive = run_path(
+            &ds,
+            SolverKind::Sfw(SamplingStrategy::Adaptive {
+                kappa0,
+                growth: 2.0,
+                stall_tol: 4,
+            }),
+            &cfg,
+        );
+        common::assert_paths_bit_identical(
+            &fw,
+            &adaptive,
+            &format!("Adaptive(κ₀={kappa0}) vs FwDet"),
+        );
+        for pt in &adaptive.points {
+            assert_eq!(pt.kappa_final, Some(ds.cols()), "κ must report saturated");
+        }
+    }
+}
+
+#[test]
+fn adaptive_kappa_is_monotone_and_saturates() {
+    // Aggressive growth on a correlated design must drive κ to the pool
+    // size; κ_final is reported through RunResult/PathPoint.
+    let (x, y) = common::correlated_problem(51, 60, 40);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let mut solver = StochasticFw::new(
+        SamplingStrategy::Adaptive { kappa0: 1, growth: 2.0, stall_tol: 1 },
+        SolveOptions { eps: 0.0, max_iters: 2_000, seed: 3, ..Default::default() },
+    );
+    let mut st = FwState::zero(prob.p(), prob.m());
+    let res = solver.run(&prob, &mut st, 2.0);
+    assert_eq!(res.kappa_final, Some(prob.p()), "κ did not saturate");
+    // the κ=p tail certifies for free: a gap-certified run stops
+    let mut certified = StochasticFw::new(
+        SamplingStrategy::Adaptive { kappa0: 1, growth: 2.0, stall_tol: 1 },
+        SolveOptions {
+            eps: 0.0,
+            max_iters: 200_000,
+            seed: 3,
+            gap_tol: Some(1e-4),
+            ..Default::default()
+        },
+    );
+    let mut st2 = FwState::zero(prob.p(), prob.m());
+    let res2 = certified.run(&prob, &mut st2, 2.0);
+    assert!(res2.converged, "certified stop never fired");
+    assert!(res2.certified_gap.unwrap() <= 1e-4);
+}
+
+// ------------------------------------- thread-count invariance of variants
+
+#[test]
+fn variants_are_thread_count_invariant() {
+    let (m, p) = (50, 300);
+    let (x, y) = common::dense_problem(77, m, p);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let opts = SolveOptions { eps: 0.0, max_iters: 120, seed: 42, ..Default::default() };
+    for variant in [FwVariant::Away, FwVariant::Pairwise] {
+        let reference = {
+            let mut solver = StochasticFw::with_variant(
+                variant,
+                SamplingStrategy::Fraction(0.25),
+                opts,
+                NativeBackend::new(),
+            );
+            let mut st = FwState::zero(p, m);
+            let res = solver.run(&prob, &mut st, 2.0);
+            (res.iters, res.dots, res.objective, st.alpha())
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let mut solver = StochasticFw::with_variant(
+                variant,
+                SamplingStrategy::Fraction(0.25),
+                opts,
+                ParallelBackend::new(threads).with_grain(1),
+            );
+            let mut st = FwState::zero(p, m);
+            let res = solver.run(&prob, &mut st, 2.0);
+            assert_eq!(res.iters, reference.0, "{variant:?} iters at {threads} threads");
+            assert_eq!(res.dots, reference.1, "{variant:?} dots at {threads} threads");
+            assert_eq!(
+                res.objective.to_bits(),
+                reference.2.to_bits(),
+                "{variant:?} objective at {threads} threads"
+            );
+            let alpha = st.alpha();
+            for (j, (a, b)) in alpha.iter().zip(reference.3.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{variant:?} α[{j}] at {threads} threads"
+                );
+            }
+        }
+    }
+}
+
+// --------------------------------------- screened ≡ unscreened for variants
+
+#[test]
+fn screened_variants_match_unscreened() {
+    let ds = common::small_ds();
+    let mut cfg = common::base_cfg(1e-3, 4_000, 6, ds.cols());
+    cfg.delta_max = Some(3.0);
+    for kind in [
+        SolverKind::Asfw(SamplingStrategy::Fraction(0.3)),
+        SolverKind::Pfw(SamplingStrategy::Fraction(0.3)),
+    ] {
+        let base = run_path(&ds, kind, &cfg);
+        for mode in [ScreenMode::Gap, ScreenMode::Aggressive] {
+            let scr = run_path(&ds, kind, &common::screened(&cfg, mode));
+            let label = format!("{}/{}", kind.label(), mode.label());
+            common::assert_objectives_agree(&base, &scr, 1e-1, &label);
+            common::assert_supports_agree(&base, &scr, 1e-1, 1e-4, &label);
+            assert!(scr.screen_passes > 0, "{label}: never screened");
+        }
+    }
+}
+
+// ----------------------------------------------------- certificate envelope
+
+#[test]
+fn certified_gap_envelope_is_monotone_over_prefixes() {
+    // Same seed ⇒ a run with a larger iteration cap extends the same
+    // trajectory, so the reported envelope must be nonincreasing in the
+    // cap — for deterministic FW (free certificates every iteration) and
+    // for the stochastic family (budgeted certificate passes).
+    let (x, y) = common::correlated_problem(61, 40, 24);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let delta = 2.0;
+
+    let fwdet_cert = |iters: usize| -> f64 {
+        let fw = sfw_lasso::solvers::fw::FrankWolfe::new(SolveOptions {
+            eps: 0.0,
+            max_iters: iters,
+            ..Default::default()
+        });
+        let mut st = FwState::zero(prob.p(), prob.m());
+        fw.run(&prob, &mut st, delta).certified_gap.expect("free certificate")
+    };
+    let mut prev = f64::INFINITY;
+    for iters in [1usize, 2, 5, 10, 30, 100, 300] {
+        let c = fwdet_cert(iters);
+        assert!(c <= prev, "FwDet envelope rose: {prev} → {c} at {iters} iters");
+        assert!(c >= 0.0);
+        prev = c;
+    }
+
+    for variant in [FwVariant::Standard, FwVariant::Away, FwVariant::Pairwise] {
+        let cert_at = |iters: usize| -> f64 {
+            let mut solver = StochasticFw::with_variant(
+                variant,
+                SamplingStrategy::Fraction(0.5),
+                SolveOptions {
+                    eps: 0.0,
+                    max_iters: iters,
+                    seed: 7,
+                    // −∞ keeps cert passes on but can never stop the
+                    // run (an exact-0 gap would reach a 0.0 tolerance)
+                    gap_tol: Some(f64::NEG_INFINITY),
+                    ..Default::default()
+                },
+                NativeBackend::new(),
+            );
+            let mut st = FwState::zero(prob.p(), prob.m());
+            let res = solver.run(&prob, &mut st, delta);
+            res.certified_gap.unwrap_or(f64::INFINITY)
+        };
+        let mut prev = f64::INFINITY;
+        for iters in [50usize, 100, 200, 400, 800] {
+            let c = cert_at(iters);
+            assert!(
+                c <= prev,
+                "{variant:?} envelope rose: {prev} → {c} at {iters} iters"
+            );
+            prev = c;
+        }
+        assert!(prev.is_finite(), "{variant:?}: no certificate ever recorded");
+    }
+}
+
+#[test]
+fn certificate_upper_bounds_true_gap_on_orthogonal_design() {
+    // Identity design ⇒ the constrained optimum is the ℓ1-ball projection
+    // of y, computable exactly — so the certificate can be checked against
+    // the true primal gap f(α) − f*.
+    let p = 8;
+    let x = DenseMatrix::from_fn(p, p, |i, j| f64::from(i == j));
+    let y = vec![9.0, -7.0, 5.5, 3.0, -2.0, 1.0, 0.5, 0.0];
+    let x = Design::dense(x);
+    let cache = ColumnCache::build(&x, &y);
+    let prob = Problem::new(&x, &y, &cache);
+    let delta = 6.0;
+    let mut proj = y.clone();
+    project_l1(&mut proj, delta);
+    let f_star = prob.objective(&proj);
+
+    for variant in [FwVariant::Standard, FwVariant::Away, FwVariant::Pairwise] {
+        for max_iters in [3usize, 10, 50, 400] {
+            let mut solver = StochasticFw::with_variant(
+                variant,
+                SamplingStrategy::Fraction(0.6),
+                SolveOptions {
+                    eps: 0.0,
+                    max_iters,
+                    seed: 11,
+                    // −∞: certificate passes on, stop unreachable
+                    gap_tol: Some(f64::NEG_INFINITY),
+                    ..Default::default()
+                },
+                NativeBackend::new(),
+            );
+            let mut st = FwState::zero(p, p);
+            let res = solver.run(&prob, &mut st, delta);
+            if let Some(cert) = res.certified_gap {
+                let true_gap = res.objective - f_star;
+                assert!(
+                    cert >= true_gap - 1e-10,
+                    "{variant:?}@{max_iters}: certificate {cert} < true gap {true_gap}"
+                );
+            }
+        }
+        // deterministic FW: certificate present from iteration 1
+        let fw = sfw_lasso::solvers::fw::FrankWolfe::new(SolveOptions {
+            eps: 0.0,
+            max_iters: 200,
+            ..Default::default()
+        });
+        let mut st = FwState::zero(p, p);
+        let res = fw.run(&prob, &mut st, delta);
+        let cert = res.certified_gap.expect("free certificate");
+        let true_gap = res.objective - f_star;
+        assert!(
+            cert >= true_gap - 1e-10,
+            "FwDet: certificate {cert} < true gap {true_gap}"
+        );
+    }
+}
+
+// ------------------------------------------- variants on the solver matrix
+
+#[test]
+fn variant_paths_cover_grid_and_report_kappa() {
+    let ds = common::easy_ds();
+    let mut cfg = common::base_cfg(1e-3, 3_000, 6, 0);
+    cfg.delta_max = Some(2.0);
+    for kind in [
+        SolverKind::Asfw(SamplingStrategy::Fraction(0.3)),
+        SolverKind::Pfw(SamplingStrategy::Fraction(0.3)),
+    ] {
+        let pr = run_path(&ds, kind, &cfg);
+        assert_eq!(pr.points.len(), 6, "{}", kind.label());
+        for pt in &pr.points {
+            assert!(pt.train_mse.is_finite());
+            assert!(pt.l1_norm <= pt.reg * (1.0 + 1e-6), "{}", kind.label());
+            assert_eq!(pt.kappa_final, Some(30), "{}", kind.label());
+        }
+    }
+}
