@@ -196,6 +196,28 @@ pub fn parse_thread_count(s: &str) -> Result<usize, String> {
     Ok(if n == 0 { crate::parallel::available_threads() } else { n })
 }
 
+/// Parse a byte-size value like `8m`, `512k`, `1g`, or a bare byte count
+/// (binary suffixes: k = 1024, m = 1024², g = 1024³; case-insensitive).
+/// Used by the server's `--max-body` limit.
+pub fn parse_byte_size(s: &str) -> Result<usize, String> {
+    let t = s.trim();
+    if t.is_empty() {
+        return Err("empty byte size".to_string());
+    }
+    let (digits, mult) = match t.as_bytes()[t.len() - 1].to_ascii_lowercase() {
+        b'k' => (&t[..t.len() - 1], 1usize << 10),
+        b'm' => (&t[..t.len() - 1], 1usize << 20),
+        b'g' => (&t[..t.len() - 1], 1usize << 30),
+        _ => (t, 1usize),
+    };
+    let n: usize = digits
+        .trim()
+        .parse()
+        .map_err(|e| format!("invalid byte size '{s}': {e}"))?;
+    n.checked_mul(mult)
+        .ok_or_else(|| format!("byte size '{s}' overflows"))
+}
+
 /// Parse a `--screen` value into a [`crate::screening::ScreenMode`].
 pub fn parse_screen_mode(s: &str) -> Result<crate::screening::ScreenMode, String> {
     crate::screening::ScreenMode::parse(s)
@@ -448,6 +470,19 @@ mod tests {
         assert!(parse_thread_count("0").unwrap() >= 1); // all cores
         assert!(parse_thread_count("abc").is_err());
         assert!(parse_thread_count("-1").is_err());
+    }
+
+    #[test]
+    fn byte_size_parsing() {
+        assert_eq!(parse_byte_size("1024").unwrap(), 1024);
+        assert_eq!(parse_byte_size("8m").unwrap(), 8 << 20);
+        assert_eq!(parse_byte_size("512K").unwrap(), 512 << 10);
+        assert_eq!(parse_byte_size("1g").unwrap(), 1 << 30);
+        assert_eq!(parse_byte_size(" 2 m ").unwrap(), 2 << 20);
+        assert!(parse_byte_size("").is_err());
+        assert!(parse_byte_size("m").is_err());
+        assert!(parse_byte_size("abc").is_err());
+        assert!(parse_byte_size("99999999999999999999g").is_err());
     }
 
     #[test]

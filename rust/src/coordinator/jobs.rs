@@ -59,27 +59,50 @@ impl Experiment {
     }
 }
 
-fn is_stochastic(kind: SolverKind) -> bool {
+/// Whether a solver kind has run-to-run variance (and therefore benefits
+/// from repetition averaging). Deterministic kinds run one cell.
+pub fn is_stochastic(kind: SolverKind) -> bool {
     matches!(
         kind,
         SolverKind::Scd | SolverKind::Sfw(_) | SolverKind::Asfw(_) | SolverKind::Pfw(_)
     )
 }
 
-/// Run all cells; results come back in cell order.
-pub fn run_experiment(exp: &Experiment) -> Vec<PathResult> {
-    crate::parallel::run_tasks(exp.threads.max(1), exp.cells.len(), |idx| {
-        let cell = &exp.cells[idx];
-        let ds = &exp.datasets[cell.dataset_idx];
-        let mut cfg = exp.config.clone();
-        // decorrelate stochastic repetitions
-        cfg.opts.seed = cfg
-            .opts
-            .seed
-            .wrapping_add(cell.rep as u64)
-            .wrapping_mul(0x9E3779B97F4A7C15 | 1);
+/// Run a slice of cells against shared datasets on the worker pool;
+/// results come back in cell order. This is the fan-out primitive shared
+/// by [`run_experiment`] and the solve server's `path` jobs.
+///
+/// Seed discipline: repetition 0 runs with the configured seed
+/// *untouched*, so a single-rep cell is bit-identical to a direct
+/// [`run_path`] call with the same `PathConfig` (the CLI ≡ server
+/// determinism contract). Repetitions ≥ 1 decorrelate by mixing the rep
+/// index into the seed.
+pub fn run_cells(
+    datasets: &[&Dataset],
+    cells: &[Cell],
+    config: &PathConfig,
+    threads: usize,
+) -> Vec<PathResult> {
+    crate::parallel::run_tasks(threads.max(1), cells.len(), |idx| {
+        let cell = &cells[idx];
+        let ds = datasets[cell.dataset_idx];
+        let mut cfg = config.clone();
+        if cell.rep > 0 {
+            // decorrelate stochastic repetitions (rep 0 keeps the seed)
+            cfg.opts.seed = cfg
+                .opts
+                .seed
+                .wrapping_add(cell.rep as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15 | 1);
+        }
         run_path(ds, cell.kind, &cfg)
     })
+}
+
+/// Run all cells of an experiment; results come back in cell order.
+pub fn run_experiment(exp: &Experiment) -> Vec<PathResult> {
+    let refs: Vec<&Dataset> = exp.datasets.iter().collect();
+    run_cells(&refs, &exp.cells, &exp.config, exp.threads)
 }
 
 /// Average the repeated runs of a stochastic solver into one summary

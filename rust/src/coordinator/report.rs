@@ -162,6 +162,52 @@ pub fn summary_json(results: &[&PathResult]) -> Json {
     )
 }
 
+/// Full JSON object for one grid point — every [`PathPoint`] field, with
+/// absent options as `null` and `tracked_coefs` only when non-empty.
+/// Floats pass through [`Json::Num`], whose writer is shortest-round-trip:
+/// a client re-parsing the wire value recovers the exact bit pattern the
+/// solver produced (the server's bit-for-bit contract).
+pub fn path_point_json(pt: &PathPoint) -> Json {
+    let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    let mut pairs = vec![
+        ("reg", Json::Num(pt.reg)),
+        ("l1_norm", Json::Num(pt.l1_norm)),
+        ("active", Json::Num(pt.active as f64)),
+        ("train_mse", Json::Num(pt.train_mse)),
+        ("test_mse", opt_num(pt.test_mse)),
+        ("iters", Json::Num(pt.iters as f64)),
+        ("dots", Json::Num(pt.dots as f64)),
+        ("converged", Json::Bool(pt.converged)),
+        ("screened_frac", Json::Num(pt.screened_frac)),
+        ("certified_gap", opt_num(pt.certified_gap)),
+        ("kappa_final", opt_num(pt.kappa_final.map(|k| k as f64))),
+    ];
+    if !pt.tracked_coefs.is_empty() {
+        pairs.push(("tracked_coefs", Json::arr_f64(&pt.tracked_coefs)));
+    }
+    Json::obj(pairs)
+}
+
+/// Full JSON object for one path run: the [`summary_json`] aggregates plus
+/// the complete per-point series via [`path_point_json`]. This is the
+/// result body the solve server returns and `path --json` writes.
+pub fn path_result_json(r: &PathResult) -> Json {
+    Json::obj(vec![
+        ("solver", Json::Str(r.solver.clone())),
+        ("dataset", Json::Str(r.dataset.clone())),
+        ("seconds", Json::Num(r.seconds)),
+        ("total_iters", Json::Num(r.total_iters as f64)),
+        ("total_dots", Json::Num(r.total_dots as f64)),
+        ("screen_passes", Json::Num(r.screen_passes as f64)),
+        ("screen_dots", Json::Num(r.screen_dots as f64)),
+        ("screen_saved_dots", Json::Num(r.screen_saved_dots as f64)),
+        (
+            "points",
+            Json::Arr(r.points.iter().map(path_point_json).collect()),
+        ),
+    ])
+}
+
 /// Write a string to `results/<name>` (creating the directory).
 pub fn write_results_file(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = results_dir();
@@ -317,6 +363,26 @@ mod tests {
             parsed.as_arr().unwrap()[0].get("solver").as_str(),
             Some("CD")
         );
+    }
+
+    #[test]
+    fn path_result_json_roundtrips_points() {
+        let r = fake_result("CD", 1.0);
+        let j = path_result_json(&r);
+        let parsed = crate::util::json::Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("solver").as_str(), Some("CD"));
+        let pts = parsed.get("points").as_arr().unwrap();
+        assert_eq!(pts.len(), r.points.len());
+        // floats survive the wire bit-for-bit
+        assert_eq!(
+            pts[2].get("train_mse").as_f64().unwrap().to_bits(),
+            r.points[2].train_mse.to_bits()
+        );
+        assert_eq!(pts[0].get("converged").as_bool(), Some(true));
+        // no certificate recorded → null on the wire
+        assert_eq!(pts[0].get("certified_gap"), &crate::util::json::Json::Null);
+        // tracked coefficients present (fake_result tracks one per point)
+        assert_eq!(pts[1].get("tracked_coefs").as_arr().unwrap().len(), 1);
     }
 
     #[test]

@@ -230,6 +230,28 @@ pub fn load_libsvm(path: &Path, use_cache: bool) -> Result<(LibsvmData, bool), S
     Ok((data, false))
 }
 
+/// Load a LIBSVM file straight into an assembled [`crate::data::Dataset`]
+/// (all rows train, no test split — real files carry no ground truth),
+/// optionally through the `.sfwbin` snapshot. Returns the dataset and
+/// whether it came from the binary snapshot. Shared by the CLI
+/// `libsvm:<path>` spec and the solve server's dataset cache.
+pub fn load_dataset(
+    path: &Path,
+    use_cache: bool,
+) -> Result<(crate::data::Dataset, bool), String> {
+    let (d, from_snapshot) = load_libsvm(path, use_cache)?;
+    let rows = d.x.rows();
+    let name = format!("libsvm:{}", path.display());
+    let ds = crate::data::assemble(
+        &name,
+        crate::linalg::Design::sparse(d.x),
+        d.y,
+        rows,
+        None,
+    );
+    Ok((ds, from_snapshot))
+}
+
 /// Whether the snapshot exists and is at least as new as the source
 /// (any metadata error counts as stale).
 fn snapshot_fresh(source: &Path, snap: &Path) -> bool {

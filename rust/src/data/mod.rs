@@ -10,3 +10,28 @@ pub mod synth;
 pub mod textgen;
 
 pub use dataset::{assemble, load, Dataset, Named};
+
+/// Resolve a dataset spec string — the shared grammar of the CLI
+/// `--dataset` flag and the server's `"dataset"` request field:
+/// `libsvm:<path>` loads a LIBSVM file (optionally via its `.sfwbin`
+/// snapshot when `use_cache`; `scale` is ignored — files load whole),
+/// anything else must be a [`Named`] generated problem built at
+/// (`scale`, `seed`). Returns the dataset and whether it came from a
+/// binary snapshot (always `false` for generated problems).
+pub fn resolve_spec(
+    spec: &str,
+    scale: f64,
+    seed: u64,
+    use_cache: bool,
+) -> Result<(Dataset, bool), String> {
+    if let Some(path) = spec.strip_prefix("libsvm:") {
+        return cache::load_dataset(std::path::Path::new(path), use_cache);
+    }
+    let named = Named::parse(spec).ok_or_else(|| {
+        format!(
+            "unknown dataset '{spec}'; available: {} (or libsvm:<path>)",
+            Named::all_names().join(", ")
+        )
+    })?;
+    Ok((load(named, scale, seed), false))
+}

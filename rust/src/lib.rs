@@ -43,6 +43,12 @@
 //! (`SFW_NO_MIRROR=1` opts out) and row-tile-sharded by the parallel
 //! backend.
 //!
+//! Lasso-as-a-service lives in [`server`]: a zero-dependency HTTP 1.1
+//! front end (`sfw-lasso serve`) that validates JSON solve/path jobs into
+//! [`solvers::SolveOptions`]/[`path::PathConfig`], executes them on a
+//! bounded job queue over the [`parallel`] pool, and keeps datasets
+//! resident in a keyed cache (DESIGN.md §12, ADR-005).
+//!
 //! See `DESIGN.md` for the full system inventory and experiment index, and
 //! `docs/adr/ADR-001-gap-safe-screening.md` for why gap-safe spheres were
 //! chosen over strong-rule-style heuristics.
@@ -63,6 +69,7 @@ pub mod path;
 #[allow(missing_docs)]
 pub mod runtime;
 pub mod screening;
+pub mod server;
 pub mod solvers;
 #[allow(missing_docs)]
 pub mod testing;

@@ -64,7 +64,62 @@ pub enum SolverKind {
     Pfw(SamplingStrategy),
 }
 
+/// Default sampling fraction when `sfw`/`asfw`/`pfw` is given with no
+/// explicit `:<frac>` suffix (paper's 2% working point).
+pub const DEFAULT_SFW_FRACTION: f64 = 0.02;
+
 impl SolverKind {
+    /// Parse a solver spec string — the shared grammar of the CLI
+    /// `--solver` flag and the server's `"solver"` request field:
+    /// `cd | scd | fista | apg | fw | sfw[:<frac>] | asfw[:<frac>] | pfw[:<frac>]`.
+    pub fn parse(s: &str) -> Result<SolverKind, String> {
+        let sampled = |tag: &str| -> Option<Result<SamplingStrategy, String>> {
+            if s == tag {
+                return Some(Ok(SamplingStrategy::Fraction(DEFAULT_SFW_FRACTION)));
+            }
+            let frac = s.strip_prefix(tag)?.strip_prefix(':')?;
+            Some(match frac.parse::<f64>() {
+                Ok(f) if f > 0.0 && f <= 1.0 => Ok(SamplingStrategy::Fraction(f)),
+                Ok(f) => Err(format!("sampling fraction {f} outside (0, 1]")),
+                Err(e) => Err(format!("bad sampling fraction '{frac}': {e}")),
+            })
+        };
+        Ok(match s {
+            "cd" => SolverKind::Cd,
+            "scd" => SolverKind::Scd,
+            "fista" => SolverKind::FistaReg,
+            "apg" => SolverKind::ApgConst,
+            "fw" => SolverKind::FwDet,
+            _ => {
+                if let Some(st) = sampled("asfw") {
+                    SolverKind::Asfw(st?)
+                } else if let Some(st) = sampled("pfw") {
+                    SolverKind::Pfw(st?)
+                } else if let Some(st) = sampled("sfw") {
+                    SolverKind::Sfw(st?)
+                } else {
+                    return Err(format!(
+                        "unknown solver '{s}' (cd|scd|fista|apg|fw|sfw[:<frac>]|asfw[:<frac>]|pfw[:<frac>])"
+                    ));
+                }
+            }
+        })
+    }
+
+    /// Swap the sampling strategy of a stochastic FW kind for the adaptive
+    /// κ schedule seeded at the strategy's resolved κ on a `p`-column
+    /// problem (doubling on sampled-gap stall, saturating at the pool —
+    /// DESIGN.md §11). Non-FW kinds pass through unchanged.
+    pub fn with_adaptive(self, p: usize) -> SolverKind {
+        let adapt = |s: SamplingStrategy| SamplingStrategy::adaptive_default(s.kappa(p));
+        match self {
+            SolverKind::Sfw(s) => SolverKind::Sfw(adapt(s)),
+            SolverKind::Asfw(s) => SolverKind::Asfw(adapt(s)),
+            SolverKind::Pfw(s) => SolverKind::Pfw(adapt(s)),
+            other => other,
+        }
+    }
+
     /// Human-readable label (report column headers).
     pub fn label(&self) -> String {
         match self {

@@ -1,0 +1,601 @@
+//! Request validation and job execution: JSON bodies → the crate's
+//! existing option structs → the same solve/path code paths the CLI runs.
+//!
+//! The validation layer is strict — unknown fields are a 400, not a
+//! silent ignore — so a typo'd `"max_iter"` fails loudly instead of
+//! running a 100k-iteration default. Field defaults mirror the CLI flag
+//! defaults (`solve`) and the library defaults (`path`; note the CLI
+//! `path` command overrides `patience` to 2 while the library default is
+//! [`SolveOptions::default`]'s value — requests wanting CLI-equal output
+//! pass `"patience"` explicitly).
+//!
+//! Execution contract (the acceptance bar of this subsystem): a `path`
+//! job with `reps = 1` returns per-λ results **bit-identical** to
+//! [`crate::path::run_path`] with the same inputs — [`jobs::run_cells`]
+//! leaves the rep-0 seed untouched and the JSON writer round-trips every
+//! finite f64 exactly.
+
+use super::cache::DatasetCache;
+use crate::coordinator::{jobs, report};
+use crate::data::Dataset;
+use crate::linalg::ColumnCache;
+use crate::path::{PathConfig, PathResult, SolverKind};
+use crate::screening::ScreenMode;
+use crate::solvers::linesearch::FwState;
+use crate::solvers::sampling::SamplingStrategy;
+use crate::solvers::sfw::{NativeBackend, StochasticFw};
+use crate::solvers::variants::FwVariant;
+use crate::solvers::{Problem, SolveOptions};
+use crate::util::json::{Json, JsonError};
+use std::sync::Arc;
+
+/// A typed request failure: HTTP status, machine-readable kind, human
+/// message, and (for JSON parse failures) the byte offset of the error.
+#[derive(Debug, Clone)]
+pub struct ApiError {
+    /// HTTP status code to respond with.
+    pub status: u16,
+    /// Stable machine-readable error class (`"bad_request"`, `"timeout"`…).
+    pub kind: String,
+    /// Human-readable detail.
+    pub message: String,
+    /// Byte offset into the request body, for JSON syntax errors.
+    pub offset: Option<usize>,
+}
+
+impl ApiError {
+    /// Plain error with no offset.
+    pub fn new(status: u16, kind: &str, message: &str) -> ApiError {
+        ApiError {
+            status,
+            kind: kind.to_string(),
+            message: message.to_string(),
+            offset: None,
+        }
+    }
+
+    /// 400 with the parse failure's byte offset attached.
+    pub fn from_json(e: JsonError) -> ApiError {
+        ApiError {
+            status: 400,
+            kind: "invalid_json".to_string(),
+            message: e.msg,
+            offset: Some(e.offset),
+        }
+    }
+
+    /// 400 for a semantically invalid (but well-formed) request body.
+    pub fn bad_request(message: String) -> ApiError {
+        ApiError { status: 400, kind: "bad_request".to_string(), message, offset: None }
+    }
+
+    /// The structured JSON error envelope every failure responds with.
+    pub fn envelope(&self) -> Json {
+        let mut err = vec![
+            ("code", Json::Num(self.status as f64)),
+            ("kind", Json::Str(self.kind.clone())),
+            ("message", Json::Str(self.message.clone())),
+        ];
+        if let Some(off) = self.offset {
+            err.push(("offset", Json::Num(off as f64)));
+        }
+        Json::obj(vec![("error", Json::obj(err))])
+    }
+}
+
+// ---------------------------------------------------------------- field access
+
+/// Strict field reader over a request object: typed accessors with
+/// defaults, and a final unknown-key sweep.
+struct Fields<'a> {
+    obj: &'a std::collections::BTreeMap<String, Json>,
+    known: Vec<&'static str>,
+}
+
+impl<'a> Fields<'a> {
+    fn new(body: &'a Json) -> Result<Fields<'a>, ApiError> {
+        let obj = body
+            .as_obj()
+            .ok_or_else(|| ApiError::bad_request("request body must be a JSON object".into()))?;
+        Ok(Fields { obj, known: Vec::new() })
+    }
+
+    fn get(&mut self, name: &'static str) -> Option<&'a Json> {
+        self.known.push(name);
+        self.obj.get(name)
+    }
+
+    fn f64(&mut self, name: &'static str, default: f64) -> Result<f64, ApiError> {
+        match self.get(name) {
+            None | Some(Json::Null) => Ok(default),
+            Some(v) => v
+                .as_f64()
+                .ok_or_else(|| ApiError::bad_request(format!("field '{name}' must be a number"))),
+        }
+    }
+
+    fn usize(&mut self, name: &'static str, default: usize) -> Result<usize, ApiError> {
+        match self.get(name) {
+            None | Some(Json::Null) => Ok(default),
+            Some(v) => v.as_usize().ok_or_else(|| {
+                ApiError::bad_request(format!("field '{name}' must be a non-negative integer"))
+            }),
+        }
+    }
+
+    fn u64(&mut self, name: &'static str, default: u64) -> Result<u64, ApiError> {
+        let v = self.f64(name, default as f64)?;
+        if v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64 {
+            Ok(v as u64)
+        } else {
+            Err(ApiError::bad_request(format!(
+                "field '{name}' must be a non-negative integer"
+            )))
+        }
+    }
+
+    fn bool(&mut self, name: &'static str, default: bool) -> Result<bool, ApiError> {
+        match self.get(name) {
+            None | Some(Json::Null) => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| ApiError::bad_request(format!("field '{name}' must be a boolean"))),
+        }
+    }
+
+    fn str(&mut self, name: &'static str, default: &str) -> Result<String, ApiError> {
+        match self.get(name) {
+            None | Some(Json::Null) => Ok(default.to_string()),
+            Some(v) => v
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| ApiError::bad_request(format!("field '{name}' must be a string"))),
+        }
+    }
+
+    fn opt_f64(&mut self, name: &'static str) -> Result<Option<f64>, ApiError> {
+        match self.get(name) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| ApiError::bad_request(format!("field '{name}' must be a number"))),
+        }
+    }
+
+    fn usize_arr(&mut self, name: &'static str) -> Result<Vec<usize>, ApiError> {
+        match self.get(name) {
+            None | Some(Json::Null) => Ok(Vec::new()),
+            Some(v) => {
+                let arr = v.as_arr().ok_or_else(|| {
+                    ApiError::bad_request(format!("field '{name}' must be an array of integers"))
+                })?;
+                arr.iter()
+                    .map(|x| {
+                        x.as_usize().ok_or_else(|| {
+                            ApiError::bad_request(format!(
+                                "field '{name}' must contain non-negative integers"
+                            ))
+                        })
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Reject any field not consumed by a typed accessor.
+    fn finish(self) -> Result<(), ApiError> {
+        for key in self.obj.keys() {
+            if !self.known.contains(&key.as_str()) {
+                return Err(ApiError::bad_request(format!(
+                    "unknown field '{key}' (known: {})",
+                    self.known.join(", ")
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+// ------------------------------------------------------------- shared pieces
+
+/// Dataset coordinates shared by both request kinds.
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    /// Dataset spec string (named problem or `libsvm:<path>`).
+    pub spec: String,
+    /// Generator scale (ignored for `libsvm:` files).
+    pub scale: f64,
+    /// Generator seed (also the solver seed default).
+    pub seed: u64,
+    /// Whether `libsvm:` loads may use the on-disk `.sfwbin` snapshot.
+    pub use_cache: bool,
+}
+
+fn parse_dataset(f: &mut Fields<'_>, allow_files: bool) -> Result<DatasetSpec, ApiError> {
+    let spec = f.str("dataset", "synth-10000-100")?;
+    if spec.starts_with("libsvm:") && !allow_files {
+        return Err(ApiError::new(
+            403,
+            "files_disabled",
+            "libsvm:<path> specs are disabled; start the server with --allow-files",
+        ));
+    }
+    Ok(DatasetSpec {
+        spec,
+        scale: f.f64("scale", 0.05)?,
+        seed: f.u64("seed", 42)?,
+        use_cache: f.bool("use_cache", false)?,
+    })
+}
+
+fn parse_screen(f: &mut Fields<'_>) -> Result<ScreenMode, ApiError> {
+    let s = f.str("screen", "off")?;
+    ScreenMode::parse(&s).ok_or_else(|| {
+        ApiError::bad_request(format!("invalid screen mode '{s}' (off | gap | aggressive)"))
+    })
+}
+
+fn parse_threads(f: &mut Fields<'_>, default: usize) -> Result<usize, ApiError> {
+    let t = f.usize("threads", default)?;
+    Ok(if t == 0 { crate::parallel::available_threads() } else { t })
+}
+
+// ------------------------------------------------------------- solve requests
+
+/// A validated `solve` request: one constrained Lasso instance with a
+/// stochastic-FW variant, mirroring the CLI `solve` command.
+#[derive(Debug, Clone)]
+pub struct SolveRequest {
+    /// Dataset coordinates.
+    pub dataset: DatasetSpec,
+    /// ℓ1 budget δ.
+    pub delta: f64,
+    /// FW variant (standard / away-step / pairwise).
+    pub variant: FwVariant,
+    /// Sampling fraction |S|/p.
+    pub sample: f64,
+    /// Adaptive κ schedule (DESIGN.md §11).
+    pub adaptive: bool,
+    /// Solver options (eps/max_iters/seed/gap_tol).
+    pub opts: SolveOptions,
+    /// Vertex-search worker threads (1 = native backend).
+    pub threads: usize,
+    /// Gap-safe screening policy.
+    pub screen: ScreenMode,
+}
+
+/// Validate a `solve` body. Defaults mirror the CLI `solve` flags.
+pub fn parse_solve(body: &Json, allow_files: bool) -> Result<SolveRequest, ApiError> {
+    let mut f = Fields::new(body)?;
+    let dataset = parse_dataset(&mut f, allow_files)?;
+    let variant = match f.str("solver", "sfw")?.as_str() {
+        "sfw" => FwVariant::Standard,
+        "asfw" => FwVariant::Away,
+        "pfw" => FwVariant::Pairwise,
+        other => {
+            return Err(ApiError::bad_request(format!(
+                "unknown solve variant '{other}' (sfw|asfw|pfw)"
+            )))
+        }
+    };
+    let sample = f.f64("sample", 0.02)?;
+    if !(sample > 0.0 && sample <= 1.0) {
+        return Err(ApiError::bad_request(format!(
+            "field 'sample' must be in (0, 1], got {sample}"
+        )));
+    }
+    let delta = f.f64("delta", 1.0)?;
+    if !(delta.is_finite() && delta > 0.0) {
+        return Err(ApiError::bad_request(format!(
+            "field 'delta' must be a positive number, got {delta}"
+        )));
+    }
+    let opts = SolveOptions {
+        eps: f.f64("eps", 1e-3)?,
+        max_iters: f.usize("max_iters", 100_000)?,
+        seed: f.u64("solver_seed", dataset.seed)?,
+        gap_tol: f.opt_f64("gap_tol")?,
+        ..Default::default()
+    };
+    let req = SolveRequest {
+        delta,
+        variant,
+        sample,
+        adaptive: f.bool("adaptive", false)?,
+        opts,
+        threads: parse_threads(&mut f, 1)?,
+        screen: parse_screen(&mut f)?,
+        dataset,
+    };
+    f.finish()?;
+    Ok(req)
+}
+
+/// Execute a validated solve against a resident dataset — the exact
+/// sequence of the CLI `solve` command, so results are bit-identical to
+/// a local run with the same inputs.
+pub fn run_solve(req: &SolveRequest, ds: &Dataset, cached: bool) -> Result<Json, ApiError> {
+    let cache = ColumnCache::build(&ds.x, &ds.y);
+    let prob = Problem::new(&ds.x, &ds.y, &cache);
+    let strategy = if req.adaptive {
+        SamplingStrategy::adaptive_default(SamplingStrategy::Fraction(req.sample).kappa(prob.p()))
+    } else {
+        SamplingStrategy::Fraction(req.sample)
+    };
+    let mut state = FwState::zero(prob.p(), prob.m());
+    let mut screener = req.screen.screener(prob.p());
+    let sw = crate::util::timer::Stopwatch::started();
+    let res = if req.threads > 1 {
+        let backend = crate::parallel::ParallelBackend::new(req.threads);
+        let mut solver = StochasticFw::with_variant(req.variant, strategy, req.opts, backend);
+        solver.run_with_screen(&prob, &mut state, req.delta, screener.as_mut())
+    } else {
+        let mut solver =
+            StochasticFw::with_variant(req.variant, strategy, req.opts, NativeBackend::new());
+        solver.run_with_screen(&prob, &mut state, req.delta, screener.as_mut())
+    };
+    let seconds = sw.elapsed_secs();
+    let alpha = state.alpha();
+    let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
+    Ok(Json::obj(vec![
+        ("kind", Json::Str("solve".into())),
+        ("dataset", Json::Str(ds.name.clone())),
+        ("cached", Json::Bool(cached)),
+        ("solver", Json::Str(req.variant.tag().to_string())),
+        ("delta", Json::Num(req.delta)),
+        ("objective", Json::Num(res.objective)),
+        (
+            "train_mse",
+            Json::Num(2.0 * res.objective / prob.m() as f64),
+        ),
+        ("l1_norm", Json::Num(state.l1_norm())),
+        (
+            "active",
+            Json::Num(crate::linalg::ops::nnz(&alpha) as f64),
+        ),
+        ("iters", Json::Num(res.iters as f64)),
+        ("dots", Json::Num(res.dots as f64)),
+        ("converged", Json::Bool(res.converged)),
+        ("certified_gap", opt_num(res.certified_gap)),
+        (
+            "kappa_final",
+            opt_num(res.kappa_final.map(|k| k as f64)),
+        ),
+        ("seconds", Json::Num(seconds)),
+    ]))
+}
+
+// -------------------------------------------------------------- path requests
+
+/// A validated `path` request: a full regularization path, mirroring the
+/// CLI `path` command plus repetition averaging for stochastic solvers.
+#[derive(Debug, Clone)]
+pub struct PathRequest {
+    /// Dataset coordinates.
+    pub dataset: DatasetSpec,
+    /// Solver spec (full [`SolverKind::parse`] grammar).
+    pub solver: String,
+    /// Adaptive κ schedule for stochastic FW kinds.
+    pub adaptive: bool,
+    /// Path configuration (grid size, per-point options, screening…).
+    pub cfg: PathConfig,
+    /// Repetitions to average for stochastic solvers (deterministic kinds
+    /// always run once).
+    pub reps: usize,
+    /// Worker-pool width for the cell fan-out.
+    pub threads: usize,
+}
+
+/// Validate a `path` body. Solver options default to the library
+/// [`SolveOptions::default`] values except where a field is given.
+pub fn parse_path(body: &Json, allow_files: bool) -> Result<PathRequest, ApiError> {
+    let mut f = Fields::new(body)?;
+    let dataset = parse_dataset(&mut f, allow_files)?;
+    let solver = f.str("solver", "sfw:0.02")?;
+    SolverKind::parse(&solver).map_err(ApiError::bad_request)?; // validate now, use later
+    let defaults = SolveOptions::default();
+    let opts = SolveOptions {
+        eps: f.f64("eps", 1e-3)?,
+        max_iters: f.usize("max_iters", 20_000)?,
+        seed: f.u64("solver_seed", dataset.seed)?,
+        patience: f.usize("patience", defaults.patience)?,
+        gap_tol: f.opt_f64("gap_tol")?,
+        ..defaults
+    };
+    let n_points = f.usize("points", 100)?;
+    if n_points == 0 || n_points > 10_000 {
+        return Err(ApiError::bad_request(format!(
+            "field 'points' must be in 1..=10000, got {n_points}"
+        )));
+    }
+    let reps = f.usize("reps", 1)?;
+    if reps == 0 || reps > 100 {
+        return Err(ApiError::bad_request(format!(
+            "field 'reps' must be in 1..=100, got {reps}"
+        )));
+    }
+    let cfg = PathConfig {
+        n_points,
+        opts,
+        delta_max: f.opt_f64("delta_max")?,
+        track: f.usize_arr("track")?,
+        screen: parse_screen(&mut f)?,
+    };
+    let req = PathRequest {
+        solver,
+        adaptive: f.bool("adaptive", false)?,
+        cfg,
+        reps,
+        threads: parse_threads(&mut f, 0)?,
+        dataset,
+    };
+    f.finish()?;
+    Ok(req)
+}
+
+/// Execute a validated path job: build the repetition cells, fan them out
+/// through [`jobs::run_cells`] on the worker pool, and average stochastic
+/// repetitions into one [`PathResult`].
+pub fn run_path_job(req: &PathRequest, ds: &Dataset, cached: bool) -> Result<Json, ApiError> {
+    // track indices must address real columns
+    for &j in &req.cfg.track {
+        if j >= ds.cols() {
+            return Err(ApiError::bad_request(format!(
+                "track index {j} out of range for {} columns",
+                ds.cols()
+            )));
+        }
+    }
+    let kind = SolverKind::parse(&req.solver).map_err(ApiError::bad_request)?;
+    let kind = if req.adaptive { kind.with_adaptive(ds.cols()) } else { kind };
+    let reps = if jobs::is_stochastic(kind) { req.reps } else { 1 };
+    let cells: Vec<jobs::Cell> = (0..reps)
+        .map(|rep| jobs::Cell { dataset_idx: 0, kind, rep })
+        .collect();
+    let runs = jobs::run_cells(&[ds], &cells, &req.cfg, req.threads);
+    let result: PathResult = jobs::average_reps(runs);
+    Ok(Json::obj(vec![
+        ("kind", Json::Str("path".into())),
+        ("dataset", Json::Str(ds.name.clone())),
+        ("cached", Json::Bool(cached)),
+        ("reps", Json::Num(reps as f64)),
+        (
+            "results",
+            Json::Arr(vec![report::path_result_json(&result)]),
+        ),
+    ]))
+}
+
+/// Resolve the request's dataset through the server cache and run the
+/// job closure against it. Shared tail of both endpoints.
+pub fn with_dataset<F>(
+    cache: &Arc<DatasetCache>,
+    spec: &DatasetSpec,
+    run: F,
+) -> Result<Json, ApiError>
+where
+    F: FnOnce(&Dataset, bool) -> Result<Json, ApiError>,
+{
+    let hit = cache
+        .fetch(&spec.spec, spec.scale, spec.seed, spec.use_cache)
+        .map_err(|e| ApiError::new(400, "dataset_error", &e))?;
+    run(&hit.dataset, hit.cached)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(body: &str) -> Json {
+        Json::parse(body).unwrap()
+    }
+
+    #[test]
+    fn solve_defaults_mirror_cli() {
+        let r = parse_solve(&parse("{}"), false).unwrap();
+        assert_eq!(r.dataset.spec, "synth-10000-100");
+        assert_eq!(r.dataset.scale, 0.05);
+        assert_eq!(r.dataset.seed, 42);
+        assert_eq!(r.delta, 1.0);
+        assert_eq!(r.sample, 0.02);
+        assert_eq!(r.opts.eps, 1e-3);
+        assert_eq!(r.opts.max_iters, 100_000);
+        assert_eq!(r.opts.seed, 42);
+        assert_eq!(r.threads, 1);
+        assert_eq!(r.variant, FwVariant::Standard);
+    }
+
+    #[test]
+    fn unknown_fields_are_rejected() {
+        let e = parse_solve(&parse(r#"{"max_iter": 10}"#), false).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.message.contains("max_iter"), "{}", e.message);
+    }
+
+    #[test]
+    fn bad_field_types_are_rejected() {
+        for body in [
+            r#"{"delta": "one"}"#,
+            r#"{"seed": -3}"#,
+            r#"{"seed": 1.5}"#,
+            r#"{"adaptive": 1}"#,
+            r#"{"sample": 0}"#,
+            r#"{"sample": 1.5}"#,
+            r#"{"solver": "cd"}"#,
+            r#"{"screen": "strong"}"#,
+        ] {
+            assert!(parse_solve(&parse(body), false).is_err(), "should reject {body}");
+        }
+        assert!(parse_solve(&Json::Arr(vec![]), false).is_err());
+    }
+
+    #[test]
+    fn libsvm_specs_gated_on_allow_files() {
+        let body = parse(r#"{"dataset": "libsvm:/tmp/x.svm"}"#);
+        let e = parse_solve(&body, false).unwrap_err();
+        assert_eq!(e.status, 403);
+        assert!(parse_solve(&body, true).is_ok());
+    }
+
+    #[test]
+    fn path_defaults_use_library_options() {
+        let r = parse_path(&parse("{}"), false).unwrap();
+        assert_eq!(r.solver, "sfw:0.02");
+        assert_eq!(r.cfg.n_points, 100);
+        assert_eq!(r.cfg.opts.max_iters, 20_000);
+        assert_eq!(r.cfg.opts.patience, SolveOptions::default().patience);
+        assert_eq!(r.reps, 1);
+        assert!(r.cfg.track.is_empty());
+        assert!(r.cfg.delta_max.is_none());
+    }
+
+    #[test]
+    fn path_validates_solver_and_ranges() {
+        assert!(parse_path(&parse(r#"{"solver": "sgd"}"#), false).is_err());
+        assert!(parse_path(&parse(r#"{"points": 0}"#), false).is_err());
+        assert!(parse_path(&parse(r#"{"reps": 0}"#), false).is_err());
+        assert!(parse_path(&parse(r#"{"track": [1, -2]}"#), false).is_err());
+        assert!(parse_path(&parse(r#"{"track": [0, 5]}"#), false).is_ok());
+    }
+
+    #[test]
+    fn error_envelope_shape() {
+        let e = ApiError::from_json(JsonError { msg: "bad".into(), offset: 17 });
+        let env = e.envelope();
+        assert_eq!(env.get("error").get("code").as_f64(), Some(400.0));
+        assert_eq!(env.get("error").get("kind").as_str(), Some("invalid_json"));
+        assert_eq!(env.get("error").get("offset").as_usize(), Some(17));
+        // no offset → field absent
+        let env2 = ApiError::new(503, "overloaded", "full").envelope();
+        assert_eq!(env2.get("error").get("offset"), &Json::Null);
+    }
+
+    #[test]
+    fn solve_runs_bit_identical_to_direct_call() {
+        let ds = crate::data::load(crate::data::Named::Synth10k { relevant: 8 }, 0.005, 3);
+        let body = parse(
+            r#"{"dataset": "synth-10000-100", "scale": 0.005, "seed": 3,
+                "delta": 2.0, "sample": 0.5, "eps": 1e-3, "max_iters": 2000}"#,
+        );
+        let req = parse_solve(&body, false).unwrap();
+        let out = run_solve(&req, &ds, false).unwrap();
+        // direct reference run with identical inputs
+        let cache = ColumnCache::build(&ds.x, &ds.y);
+        let prob = Problem::new(&ds.x, &ds.y, &cache);
+        let mut state = FwState::zero(prob.p(), prob.m());
+        let mut solver = StochasticFw::with_variant(
+            FwVariant::Standard,
+            SamplingStrategy::Fraction(0.5),
+            SolveOptions { eps: 1e-3, max_iters: 2000, seed: 3, ..Default::default() },
+            NativeBackend::new(),
+        );
+        let res = solver.run_with_screen(&prob, &mut state, 2.0, None);
+        assert_eq!(
+            out.get("objective").as_f64().unwrap().to_bits(),
+            res.objective.to_bits()
+        );
+        assert_eq!(out.get("iters").as_f64(), Some(res.iters as f64));
+        assert_eq!(out.get("dots").as_f64(), Some(res.dots as f64));
+    }
+}

@@ -1,0 +1,170 @@
+//! Resident dataset cache: the second request for a dataset pays zero
+//! parse cost.
+//!
+//! Keyed by the full resolution inputs `(spec, scale, seed)` — two
+//! requests naming the same generated problem at different scales are
+//! different datasets, so they get different entries (ADR-005 keying).
+//! Each entry holds an `Arc<Dataset>` shared by every concurrent job
+//! touching it; [`crate::data::Dataset`] is immutable after assembly, so
+//! sharing is free.
+//!
+//! Loads are single-flight: the map stores a per-key `OnceLock`, so the
+//! first requester builds (generator run or `.sfwbin`-backed LIBSVM load
+//! via [`crate::data::resolve_spec`]) while concurrent requesters for the
+//! same key block on the same cell instead of duplicating the work.
+//! Failed loads are evicted so a later request retries (a missing file
+//! may appear) instead of caching the error forever. The CSR mirror of a
+//! sparse design is pre-built at load time so the first solve does not
+//! absorb the O(nnz) build.
+
+use crate::data::Dataset;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Key → shared dataset map with single-flight loading.
+pub struct DatasetCache {
+    entries: Mutex<HashMap<String, Arc<OnceLock<Result<Arc<Dataset>, String>>>>>,
+}
+
+/// A cache lookup: the dataset plus whether this request found it already
+/// resident (the `"cached"` field of server responses).
+pub struct CacheHit {
+    /// The shared dataset.
+    pub dataset: Arc<Dataset>,
+    /// `true` when the entry was already loaded before this request.
+    pub cached: bool,
+}
+
+impl Default for DatasetCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DatasetCache {
+    /// Empty cache.
+    pub fn new() -> DatasetCache {
+        DatasetCache { entries: Mutex::new(HashMap::new()) }
+    }
+
+    /// Cache key for a request's dataset coordinates.
+    fn key(spec: &str, scale: f64, seed: u64) -> String {
+        format!("{spec}|{scale}|{seed}")
+    }
+
+    /// Fetch or load the dataset for `(spec, scale, seed)`. `use_cache`
+    /// enables the on-disk `.sfwbin` snapshot for `libsvm:` specs (the
+    /// in-memory cache here is always on).
+    pub fn fetch(
+        &self,
+        spec: &str,
+        scale: f64,
+        seed: u64,
+        use_cache: bool,
+    ) -> Result<CacheHit, String> {
+        let key = Self::key(spec, scale, seed);
+        let (cell, existed) = {
+            let mut map = self.entries.lock().unwrap();
+            match map.get(&key) {
+                Some(cell) => (Arc::clone(cell), true),
+                None => {
+                    let cell = Arc::new(OnceLock::new());
+                    map.insert(key.clone(), Arc::clone(&cell));
+                    (cell, false)
+                }
+            }
+        };
+        // `cached` means "was already fully loaded": an entry created by a
+        // concurrent in-flight request counts only once it has initialized.
+        let cached = existed && cell.get().is_some();
+        let result = cell.get_or_init(|| {
+            let (ds, _from_snapshot) = crate::data::resolve_spec(spec, scale, seed, use_cache)?;
+            // pre-build the CSR mirror (no-op for dense designs) so the
+            // first solve on this dataset starts at steady-state speed
+            let _ = ds.x.mirror();
+            Ok(Arc::new(ds))
+        });
+        match result {
+            Ok(ds) => Ok(CacheHit { dataset: Arc::clone(ds), cached }),
+            Err(e) => {
+                // evict so the next request retries instead of replaying
+                // the cached failure forever
+                let mut map = self.entries.lock().unwrap();
+                if let Some(cur) = map.get(&key) {
+                    if Arc::ptr_eq(cur, &cell) {
+                        map.remove(&key);
+                    }
+                }
+                Err(e.clone())
+            }
+        }
+    }
+
+    /// Number of resident (successfully loaded) datasets.
+    pub fn len(&self) -> usize {
+        self.entries
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|c| matches!(c.get(), Some(Ok(_))))
+            .count()
+    }
+
+    /// Whether no datasets are resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn second_fetch_is_cached_and_shares_storage() {
+        let cache = DatasetCache::new();
+        let a = cache.fetch("synth-10000-100", 0.005, 1, false).unwrap();
+        assert!(!a.cached);
+        let b = cache.fetch("synth-10000-100", 0.005, 1, false).unwrap();
+        assert!(b.cached);
+        assert!(Arc::ptr_eq(&a.dataset, &b.dataset));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn different_coordinates_are_different_entries() {
+        let cache = DatasetCache::new();
+        let a = cache.fetch("synth-10000-100", 0.005, 1, false).unwrap();
+        let b = cache.fetch("synth-10000-100", 0.005, 2, false).unwrap();
+        assert!(!Arc::ptr_eq(&a.dataset, &b.dataset));
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn failed_loads_are_not_cached() {
+        let cache = DatasetCache::new();
+        assert!(cache.fetch("no-such-dataset", 1.0, 1, false).is_err());
+        assert!(cache.is_empty());
+        // the retry takes the load path again (still an error, but not a
+        // poisoned permanent entry)
+        assert!(cache.fetch("no-such-dataset", 1.0, 1, false).is_err());
+    }
+
+    #[test]
+    fn concurrent_fetches_load_once() {
+        let cache = Arc::new(DatasetCache::new());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let cache = Arc::clone(&cache);
+                std::thread::spawn(move || {
+                    cache.fetch("synth-10000-100", 0.005, 7, false).unwrap().dataset
+                })
+            })
+            .collect();
+        let datasets: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        for ds in &datasets[1..] {
+            assert!(Arc::ptr_eq(&datasets[0], ds), "all threads share one load");
+        }
+        assert_eq!(cache.len(), 1);
+    }
+}

@@ -1,0 +1,350 @@
+//! Minimal HTTP/1.1 request/response handling over `std::net` — just the
+//! subset the solve server needs (ADR-005: no framework in the zero-dep
+//! crate set).
+//!
+//! Supported: request line + headers up to [`MAX_HEAD`] bytes,
+//! `Content-Length` bodies bounded by the configured limit,
+//! `Expect: 100-continue` (curl sends it for bodies over 1 KiB),
+//! HTTP/1.1 keep-alive with `Connection: close` opt-out. Not supported
+//! (rejected with a clear status, never a hang): `Transfer-Encoding`
+//! bodies (501) and oversized heads (431).
+//!
+//! Reads poll with a short timeout so a blocked connection notices the
+//! server's shutdown flag within ~200 ms instead of pinning its worker
+//! forever.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Hard cap on the request head (request line + headers). A head that
+/// does not terminate within this many bytes is a 431.
+pub const MAX_HEAD: usize = 16 * 1024;
+
+/// Deadline for receiving a complete head/body once a request starts
+/// arriving (408 past it).
+const IO_DEADLINE: Duration = Duration::from_secs(30);
+
+/// Poll interval for the read loop (bounds shutdown latency).
+const POLL: Duration = Duration::from_millis(200);
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    /// Method verb, upper-case as received (`GET`, `POST`, …).
+    pub method: String,
+    /// Request target path (query string included verbatim, if any).
+    pub path: String,
+    /// Header lines as `(lower-case name, value)` pairs, in arrival order.
+    pub headers: Vec<(String, String)>,
+    /// Request body (empty when no `Content-Length`).
+    pub body: Vec<u8>,
+    /// Whether the connection should be kept open after the response.
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// First header value with the given lower-case name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Outcome of reading one request off a connection.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete request arrived.
+    Request(Request),
+    /// The peer closed (or the server is shutting down) before a request
+    /// started — not an error, just end-of-connection.
+    Closed,
+    /// A malformed or over-limit request: respond with `(status, kind,
+    /// message)` and close.
+    Fail(u16, &'static str, String),
+}
+
+/// Parse a complete request head (everything before the blank line).
+/// Pure function — unit-testable without sockets.
+pub fn parse_head(head: &str) -> Result<Request, String> {
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && !p.is_empty() => (m, p, v),
+        _ => return Err(format!("malformed request line {request_line:?}")),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(format!("unsupported protocol {version:?}"));
+    }
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| format!("malformed header line {line:?}"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    // HTTP/1.1 defaults to keep-alive; 1.0 defaults to close.
+    let mut keep_alive = version == "HTTP/1.1";
+    if let Some((_, v)) = headers.iter().find(|(n, _)| n == "connection") {
+        if v.eq_ignore_ascii_case("close") {
+            keep_alive = false;
+        } else if v.eq_ignore_ascii_case("keep-alive") {
+            keep_alive = true;
+        }
+    }
+    Ok(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body: Vec::new(),
+        keep_alive,
+    })
+}
+
+/// Read one request from `stream`. `max_body` bounds the declared
+/// `Content-Length` (413 past it, before the body is read). `shutdown`
+/// turns a blocked read into [`ReadOutcome::Closed`].
+pub fn read_request(
+    stream: &mut TcpStream,
+    max_body: usize,
+    shutdown: &AtomicBool,
+) -> ReadOutcome {
+    stream.set_read_timeout(Some(POLL)).ok();
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut head_end = None;
+    let mut started = None::<Instant>;
+    // ----- head: scan for the \r\n\r\n terminator
+    while head_end.is_none() {
+        if shutdown.load(Ordering::SeqCst) && started.is_none() {
+            return ReadOutcome::Closed;
+        }
+        if let Some(t0) = started {
+            if t0.elapsed() > IO_DEADLINE {
+                return ReadOutcome::Fail(408, "timeout", "request head timed out".into());
+            }
+        }
+        let mut chunk = [0u8; 4096];
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return if buf.is_empty() {
+                    ReadOutcome::Closed
+                } else {
+                    ReadOutcome::Fail(400, "bad_request", "connection closed mid-head".into())
+                };
+            }
+            Ok(n) => {
+                if started.is_none() {
+                    started = Some(Instant::now());
+                }
+                buf.extend_from_slice(&chunk[..n]);
+                head_end = find_head_end(&buf);
+                if head_end.is_none() && buf.len() > MAX_HEAD {
+                    return ReadOutcome::Fail(
+                        431,
+                        "head_too_large",
+                        format!("request head exceeds {MAX_HEAD} bytes"),
+                    );
+                }
+            }
+            Err(e) if would_block(&e) => continue,
+            Err(e) => {
+                return if buf.is_empty() {
+                    ReadOutcome::Closed
+                } else {
+                    ReadOutcome::Fail(400, "bad_request", format!("read error: {e}"))
+                };
+            }
+        }
+    }
+    let head_end = head_end.unwrap();
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => {
+            return ReadOutcome::Fail(400, "bad_request", "request head is not UTF-8".into())
+        }
+    };
+    let mut req = match parse_head(head) {
+        Ok(r) => r,
+        Err(e) => return ReadOutcome::Fail(400, "bad_request", e),
+    };
+    // ----- body framing
+    if req.header("transfer-encoding").is_some() {
+        return ReadOutcome::Fail(
+            501,
+            "not_implemented",
+            "Transfer-Encoding bodies are not supported; send Content-Length".into(),
+        );
+    }
+    let content_length = match req.header("content-length") {
+        None => 0usize,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => {
+                return ReadOutcome::Fail(
+                    400,
+                    "bad_request",
+                    format!("invalid Content-Length {v:?}"),
+                )
+            }
+        },
+    };
+    if content_length > max_body {
+        // reject before reading the body; the connection closes so the
+        // unread bytes are discarded with it
+        return ReadOutcome::Fail(
+            413,
+            "body_too_large",
+            format!("body of {content_length} bytes exceeds limit of {max_body}"),
+        );
+    }
+    // `Expect: 100-continue`: the client is waiting for permission before
+    // sending the body (curl does this above ~1 KiB).
+    if let Some(v) = req.header("expect") {
+        if v.eq_ignore_ascii_case("100-continue")
+            && stream
+                .write_all(b"HTTP/1.1 100 Continue\r\n\r\n")
+                .is_err()
+        {
+            return ReadOutcome::Closed;
+        }
+    }
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    let t0 = Instant::now();
+    while body.len() < content_length {
+        if t0.elapsed() > IO_DEADLINE {
+            return ReadOutcome::Fail(408, "timeout", "request body timed out".into());
+        }
+        let mut chunk = [0u8; 16 * 1024];
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                return ReadOutcome::Fail(
+                    400,
+                    "bad_request",
+                    "connection closed mid-body".into(),
+                )
+            }
+            Ok(n) => body.extend_from_slice(&chunk[..n]),
+            Err(e) if would_block(&e) => continue,
+            Err(e) => {
+                return ReadOutcome::Fail(400, "bad_request", format!("read error: {e}"))
+            }
+        }
+    }
+    body.truncate(content_length); // drop any pipelined bytes past the body
+    req.body = body;
+    ReadOutcome::Request(req)
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+fn would_block(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+/// Write a full response: status line, minimal headers, JSON body.
+/// Returns `Err` only on transport failure (caller drops the connection).
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status,
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+/// Reason phrase for the status codes this server emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_get() {
+        let r = parse_head("GET /healthz HTTP/1.1\r\nHost: x\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/healthz");
+        assert!(r.keep_alive); // 1.1 default
+        assert_eq!(r.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn header_names_are_case_insensitive() {
+        let r = parse_head("POST /v1/solve HTTP/1.1\r\nCoNtEnT-LeNgTh: 12\r\n").unwrap();
+        assert_eq!(r.header("content-length"), Some("12"));
+    }
+
+    #[test]
+    fn connection_close_disables_keep_alive() {
+        let r = parse_head("GET / HTTP/1.1\r\nConnection: close\r\n").unwrap();
+        assert!(!r.keep_alive);
+        let r = parse_head("GET / HTTP/1.0\r\n").unwrap();
+        assert!(!r.keep_alive); // 1.0 default
+        let r = parse_head("GET / HTTP/1.0\r\nConnection: keep-alive\r\n").unwrap();
+        assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn rejects_malformed_request_lines() {
+        for head in [
+            "",
+            "GET",
+            "GET /x",
+            "GET  HTTP/1.1",
+            "GET /x HTTP/2.0",
+            "GET /x HTTP/1.1 extra",
+        ] {
+            assert!(parse_head(head).is_err(), "should reject {head:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_headers() {
+        assert!(parse_head("GET / HTTP/1.1\r\nno-colon-here\r\n").is_err());
+    }
+
+    #[test]
+    fn reason_phrases_cover_emitted_codes() {
+        for code in [200, 400, 403, 404, 405, 408, 413, 431, 500, 501, 503, 504] {
+            assert_ne!(reason(code), "Unknown", "missing phrase for {code}");
+        }
+        assert_eq!(reason(418), "Unknown");
+    }
+}

@@ -1,0 +1,288 @@
+//! Lasso-as-a-service: a zero-dependency, std-only HTTP 1.1 front end for
+//! the solve engine (`sfw-lasso serve`, DESIGN.md §12, ADR-005).
+//!
+//! ```text
+//!            accept thread          conn workers            job workers
+//!  TcpListener ──────────▶ channel ──────────▶ parse/route ──▶ bounded
+//!   (one, blocking)        (bounded)     HTTP + validation     JobQueue
+//!                                        (cheap, on conn       (solves,
+//!                                         worker)               503 full,
+//!                                                               504 slow)
+//! ```
+//!
+//! * **Requests** are JSON `solve`/`path` jobs validated into the crate's
+//!   existing [`crate::solvers::SolveOptions`]/[`crate::path::PathConfig`]
+//!   by [`api`]; responses are the same result objects the CLI writes
+//!   (including `certified_gap`/`kappa_final`), bit-for-bit.
+//! * **Datasets** stay resident in a keyed [`cache::DatasetCache`] — the
+//!   second request for a dataset pays zero parse cost.
+//! * **Degradation** is structured, never a panic: malformed JSON → 400
+//!   with byte offset, oversized body → 413, full queue → 503, slow job →
+//!   504, worker panic → 500; every failure is a JSON error envelope.
+//! * **Shutdown** is drain-clean: stop accepting, finish in-flight
+//!   requests, then join the pools.
+
+pub mod api;
+pub mod cache;
+pub mod http;
+pub mod queue;
+
+use api::ApiError;
+use cache::DatasetCache;
+use http::ReadOutcome;
+use queue::JobQueue;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Server configuration (CLI `serve` flags map 1:1 onto these fields).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address, `host:port` (port 0 binds an ephemeral port).
+    pub addr: String,
+    /// Job-worker threads: how many solves run concurrently.
+    pub threads: usize,
+    /// Request body limit in bytes (413 past it).
+    pub max_body: usize,
+    /// Bounded queue depth for jobs waiting on a worker (503 when full).
+    pub queue_cap: usize,
+    /// Per-request solve deadline (504 past it).
+    pub timeout: Duration,
+    /// Connection-handler threads (HTTP parsing + response writing).
+    pub conn_threads: usize,
+    /// Allow `libsvm:<path>` dataset specs (reads server-local files).
+    pub allow_files: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            threads: 1,
+            max_body: 8 << 20,
+            queue_cap: 32,
+            timeout: Duration::from_secs(300),
+            conn_threads: 4,
+            allow_files: false,
+        }
+    }
+}
+
+/// State shared by every server thread.
+struct Shared {
+    shutdown: AtomicBool,
+    cache: Arc<DatasetCache>,
+    queue: JobQueue,
+    cfg: ServeConfig,
+}
+
+/// A running server. Obtain via [`spawn`]; stop via [`ServerHandle::shutdown`]
+/// then [`ServerHandle::wait`] (or just `wait` to serve until the process
+/// is killed).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl ServerHandle {
+    /// The bound listen address (resolves port 0 to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Shared dataset cache (observability / tests).
+    pub fn cache(&self) -> &Arc<DatasetCache> {
+        &self.shared.cache
+    }
+
+    /// Signal shutdown: stop accepting connections and let in-flight
+    /// requests finish. Idempotent; returns immediately — follow with
+    /// [`ServerHandle::wait`] to block until drained.
+    pub fn shutdown(&self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // the accept loop blocks in accept(): poke it awake
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+    }
+
+    /// Block until the server has fully drained: accept loop exited, all
+    /// connections handled, all queued jobs finished, workers joined.
+    pub fn wait(&self) {
+        let handles: Vec<JoinHandle<()>> =
+            std::mem::take(&mut *self.threads.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // conn workers are gone: no new jobs can arrive. Draining the job
+        // queue is handled by JobQueue::drop when the last Shared drops;
+        // in-flight jobs already completed because each conn worker blocks
+        // on its reply before exiting its connection loop.
+    }
+}
+
+/// Bind the listener and start the accept/connection/job threads.
+/// Returns once the socket is bound — the handle's `addr()` is live.
+pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle, String> {
+    let listener =
+        TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr().map_err(|e| e.to_string())?;
+    let shared = Arc::new(Shared {
+        shutdown: AtomicBool::new(false),
+        cache: Arc::new(DatasetCache::new()),
+        queue: JobQueue::start(cfg.threads, cfg.queue_cap),
+        cfg: cfg.clone(),
+    });
+
+    // bounded hand-off: accepted connections wait here for a conn worker;
+    // a full backlog applies TCP backpressure instead of unbounded memory
+    let (conn_tx, conn_rx) = sync_channel::<TcpStream>(cfg.conn_threads.max(1) * 2);
+    let conn_rx = Arc::new(Mutex::new(conn_rx));
+
+    let mut threads = Vec::new();
+    for i in 0..cfg.conn_threads.max(1) {
+        let rx = Arc::clone(&conn_rx);
+        let shared = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("sfw-conn-{i}"))
+                .spawn(move || conn_worker(&rx, &shared))
+                .map_err(|e| format!("spawn conn worker: {e}"))?,
+        );
+    }
+    {
+        let shared = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("sfw-accept".to_string())
+                .spawn(move || accept_loop(&listener, &conn_tx, &shared))
+                .map_err(|e| format!("spawn accept loop: {e}"))?,
+        );
+    }
+    Ok(ServerHandle { addr, shared, threads: Mutex::new(threads) })
+}
+
+fn accept_loop(listener: &TcpListener, conn_tx: &SyncSender<TcpStream>, shared: &Shared) {
+    for stream in listener.incoming() {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break; // the wake-up connection (or any racer) lands here
+        }
+        match stream {
+            Ok(s) => {
+                // blocking send: a full backlog slows accepting, which is
+                // exactly the backpressure we want under overload
+                if conn_tx.send(s).is_err() {
+                    break;
+                }
+            }
+            Err(_) => continue,
+        }
+    }
+    // dropping conn_tx (by returning) tells conn workers to exit once
+    // they drain the backlog
+}
+
+fn conn_worker(rx: &Arc<Mutex<Receiver<TcpStream>>>, shared: &Shared) {
+    loop {
+        let stream = match rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return, // accept loop gone and backlog drained
+        };
+        // a handler bug must cost one connection, not a pool slot
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            handle_connection(stream, shared)
+        }));
+    }
+}
+
+/// Serve one connection: keep-alive loop of read → route → respond.
+fn handle_connection(mut stream: TcpStream, shared: &Shared) {
+    stream.set_nodelay(true).ok();
+    loop {
+        match http::read_request(&mut stream, shared.cfg.max_body, &shared.shutdown) {
+            ReadOutcome::Closed => return,
+            ReadOutcome::Fail(status, kind, message) => {
+                let body = ApiError::new(status, kind, &message).envelope().dump();
+                let _ = http::write_response(&mut stream, status, &body, false);
+                return;
+            }
+            ReadOutcome::Request(req) => {
+                let keep_alive = req.keep_alive && !shared.shutdown.load(Ordering::SeqCst);
+                let (status, body) = route(shared, &req);
+                if http::write_response(&mut stream, status, &body.dump(), keep_alive)
+                    .is_err()
+                    || !keep_alive
+                {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Dispatch one request to its endpoint. Returns `(status, response body)`.
+fn route(shared: &Shared, req: &http::Request) -> (u16, crate::util::json::Json) {
+    use crate::util::json::Json;
+    let result: Result<Json, ApiError> = match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Ok(Json::obj(vec![
+            ("status", Json::Str("ok".into())),
+            ("datasets", Json::Num(shared.cache.len() as f64)),
+        ])),
+        ("POST", "/v1/solve") => dispatch(shared, &req.body, |body, allow| {
+            let parsed = api::parse_solve(body, allow)?;
+            Ok(Box::new(move |cache: Arc<DatasetCache>| {
+                api::with_dataset(&cache, &parsed.dataset, |ds, cached| {
+                    api::run_solve(&parsed, ds, cached)
+                })
+            }))
+        }),
+        ("POST", "/v1/path") => dispatch(shared, &req.body, |body, allow| {
+            let parsed = api::parse_path(body, allow)?;
+            Ok(Box::new(move |cache: Arc<DatasetCache>| {
+                api::with_dataset(&cache, &parsed.dataset, |ds, cached| {
+                    api::run_path_job(&parsed, ds, cached)
+                })
+            }))
+        }),
+        ("GET" | "POST", "/healthz" | "/v1/solve" | "/v1/path") => Err(ApiError::new(
+            405,
+            "method_not_allowed",
+            &format!("{} is not supported on {}", req.method, req.path),
+        )),
+        _ => Err(ApiError::new(
+            404,
+            "not_found",
+            &format!("no such endpoint {}", req.path),
+        )),
+    };
+    match result {
+        Ok(body) => (200, body),
+        Err(e) => (e.status, e.envelope()),
+    }
+}
+
+/// The job closure type: validated request → response JSON, executed on a
+/// job worker with the dataset cache in hand.
+type JobFn = Box<dyn FnOnce(Arc<DatasetCache>) -> Result<crate::util::json::Json, ApiError> + Send>;
+
+/// Shared endpoint tail: parse + validate on the connection worker
+/// (cheap, keeps garbage out of the queue), then run the validated job on
+/// the bounded worker pool with the per-request deadline.
+fn dispatch(
+    shared: &Shared,
+    body: &[u8],
+    build: impl FnOnce(&crate::util::json::Json, bool) -> Result<JobFn, ApiError>,
+) -> Result<crate::util::json::Json, ApiError> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| ApiError::bad_request("request body is not UTF-8".into()))?;
+    let parsed = crate::util::json::Json::parse(text).map_err(ApiError::from_json)?;
+    let job = build(&parsed, shared.cfg.allow_files)?;
+    let cache = Arc::clone(&shared.cache);
+    shared
+        .queue
+        .run(shared.cfg.timeout, Box::new(move || job(cache)))
+}

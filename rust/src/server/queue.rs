@@ -1,0 +1,244 @@
+//! Bounded job queue: solve work runs on a fixed pool of worker threads
+//! behind a `sync_channel`, so the server degrades gracefully under
+//! overload (503 when the queue is full) instead of spawning unbounded
+//! threads or buffering unbounded work.
+//!
+//! Each job is a boxed closure producing the response JSON (or a typed
+//! [`ApiError`]); the connection handler waits on a per-job reply channel
+//! with a deadline (504 past it — the worker's eventual result is dropped
+//! harmlessly into the closed channel). Worker panics are caught and
+//! surfaced as a 500 envelope: a hostile or buggy request can never kill
+//! the server process.
+
+use super::api::ApiError;
+use crate::util::json::Json;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// The work item: the closure to run and where to send its result.
+struct Job {
+    run: Box<dyn FnOnce() -> Result<Json, ApiError> + Send>,
+    reply: std::sync::mpsc::Sender<Result<Json, ApiError>>,
+}
+
+/// Fixed worker pool draining a bounded queue.
+pub struct JobQueue {
+    tx: Option<SyncSender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl JobQueue {
+    /// Start `workers` threads behind a queue holding at most `capacity`
+    /// pending jobs (in-flight jobs are in worker hands, not the queue).
+    pub fn start(workers: usize, capacity: usize) -> JobQueue {
+        let (tx, rx) = sync_channel::<Job>(capacity.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..workers.max(1))
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("sfw-job-{i}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn job worker")
+            })
+            .collect();
+        JobQueue { tx: Some(tx), workers }
+    }
+
+    /// Submit a job and wait up to `timeout` for its result.
+    ///
+    /// * queue full → `Err(503)` immediately (graceful overload),
+    /// * timeout elapsed → `Err(504)`; the job still runs to completion on
+    ///   its worker but the result is dropped,
+    /// * worker panic → `Err(500)`.
+    pub fn run(
+        &self,
+        timeout: Duration,
+        job: Box<dyn FnOnce() -> Result<Json, ApiError> + Send>,
+    ) -> Result<Json, ApiError> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let item = Job { run: job, reply: reply_tx };
+        let tx = self.tx.as_ref().expect("queue used after shutdown");
+        match tx.try_send(item) {
+            Ok(()) => {}
+            Err(TrySendError::Full(_)) => {
+                return Err(ApiError::new(
+                    503,
+                    "overloaded",
+                    "job queue is full; retry later",
+                ))
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(ApiError::new(503, "shutting_down", "server is shutting down"))
+            }
+        }
+        match reply_rx.recv_timeout(timeout) {
+            Ok(res) => res,
+            Err(_) => Err(ApiError::new(
+                504,
+                "timeout",
+                &format!("job exceeded the {}s limit", timeout.as_secs()),
+            )),
+        }
+    }
+
+    /// Stop accepting jobs and join the workers. Pending queued jobs are
+    /// drained first (clean shutdown finishes in-flight work).
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // closes the channel; workers exit after draining
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for JobQueue {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(rx: &Arc<Mutex<Receiver<Job>>>) {
+    loop {
+        // Hold the lock only while waiting for dispatch; the guard is a
+        // statement temporary, so execution below runs unlocked and jobs
+        // proceed in parallel across workers.
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // channel closed and drained: shut down
+        };
+        let result = match catch_unwind(AssertUnwindSafe(job.run)) {
+            Ok(r) => r,
+            Err(_) => Err(ApiError::new(
+                500,
+                "internal",
+                "job panicked; see server logs",
+            )),
+        };
+        // The receiver may have timed out and gone: ignore send failure.
+        let _ = job.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_jobs_and_returns_results() {
+        let q = JobQueue::start(2, 4);
+        let r = q
+            .run(Duration::from_secs(5), Box::new(|| Ok(Json::Num(42.0))))
+            .unwrap();
+        assert_eq!(r.as_f64(), Some(42.0));
+    }
+
+    #[test]
+    fn propagates_api_errors() {
+        let q = JobQueue::start(1, 4);
+        let e = q
+            .run(
+                Duration::from_secs(5),
+                Box::new(|| Err(ApiError::new(400, "bad", "nope"))),
+            )
+            .unwrap_err();
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn panic_becomes_500_and_pool_survives() {
+        let q = JobQueue::start(1, 4);
+        let e = q
+            .run(Duration::from_secs(5), Box::new(|| panic!("boom")))
+            .unwrap_err();
+        assert_eq!(e.status, 500);
+        // the worker is still alive for the next job
+        let r = q
+            .run(Duration::from_secs(5), Box::new(|| Ok(Json::Bool(true))))
+            .unwrap();
+        assert_eq!(r.as_bool(), Some(true));
+    }
+
+    #[test]
+    fn timeout_yields_504() {
+        let q = JobQueue::start(1, 4);
+        let e = q
+            .run(
+                Duration::from_millis(50),
+                Box::new(|| {
+                    std::thread::sleep(Duration::from_millis(500));
+                    Ok(Json::Null)
+                }),
+            )
+            .unwrap_err();
+        assert_eq!(e.status, 504);
+    }
+
+    #[test]
+    fn full_queue_yields_503() {
+        // one worker occupied + capacity-1 queue: the 3rd submission from
+        // a helper thread, issued while the first blocks, gets 503.
+        let q = Arc::new(JobQueue::start(1, 1));
+        let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+        let hold_rx = Arc::new(Mutex::new(hold_rx));
+        let slow = {
+            let q = Arc::clone(&q);
+            let hold_rx = Arc::clone(&hold_rx);
+            std::thread::spawn(move || {
+                q.run(
+                    Duration::from_secs(5),
+                    Box::new(move || {
+                        hold_rx.lock().unwrap().recv().ok();
+                        Ok(Json::Null)
+                    }),
+                )
+            })
+        };
+        // wait for the slow job to occupy the worker
+        std::thread::sleep(Duration::from_millis(100));
+        // fills the queue slot
+        let queued = {
+            let q = Arc::clone(&q);
+            std::thread::spawn(move || {
+                q.run(Duration::from_secs(5), Box::new(|| Ok(Json::Null)))
+            })
+        };
+        std::thread::sleep(Duration::from_millis(100));
+        // queue is now full
+        let e = q
+            .run(Duration::from_secs(5), Box::new(|| Ok(Json::Null)))
+            .unwrap_err();
+        assert_eq!(e.status, 503);
+        hold_tx.send(()).ok();
+        hold_tx.send(()).ok();
+        assert!(slow.join().unwrap().is_ok());
+        assert!(queued.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs() {
+        let mut q = JobQueue::start(1, 8);
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..4 {
+            let tx = tx.clone();
+            // fire-and-forget submissions via zero-timeout runs would 504;
+            // instead verify drain through side effects with a generous
+            // timeout from helper threads is overkill — submit directly and
+            // only check the side-effect channel after shutdown.
+            let _ = q.run(
+                Duration::from_secs(5),
+                Box::new(move || {
+                    tx.send(i).ok();
+                    Ok(Json::Null)
+                }),
+            );
+        }
+        q.shutdown();
+        drop(tx);
+        let done: Vec<i32> = rx.iter().collect();
+        assert_eq!(done.len(), 4);
+    }
+}

@@ -4,13 +4,33 @@
 //! ([`Json::parse`]) and a compact/pretty writer. Used for:
 //! * reading `artifacts/manifest.json` (shapes of the AOT artifacts),
 //! * reading experiment config files,
+//! * parsing request bodies of the solve server ([`crate::server`]) —
+//!   i.e. untrusted network input,
 //! * writing machine-readable results next to the text tables.
 //!
 //! Numbers are stored as `f64` (sufficient for configs/metrics; the
-//! manifest only carries shapes well below 2^53).
+//! manifest only carries shapes well below 2^53). Parsed floats
+//! round-trip bit-exactly through the writer: Rust's `{}` float
+//! formatting is shortest-round-trip, so `parse(dump(x)) == x` at the
+//! bit level for every finite `f64` except `-0.0` (written as `0`, a
+//! documented lossy case alongside NaN/±∞ → `null`).
+//!
+//! Because the parser faces hostile input, it is hardened to fail with a
+//! [`JsonError`] — never a panic or a stack overflow — on any byte
+//! sequence: nesting is capped at [`MAX_DEPTH`], surrogate escapes are
+//! range-checked, and the number scanner accepts exactly the RFC 8259
+//! grammar (so anything accepted re-emits spec-clean).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
+
+/// Maximum nesting depth the parser accepts (arrays + objects combined).
+///
+/// The recursive-descent parser uses one call frame per nesting level, so
+/// unbounded depth lets a few kilobytes of `[[[[…` overflow the stack and
+/// kill the process. 128 is far beyond any document this crate reads or
+/// writes while keeping worst-case stack usage trivially small.
+pub const MAX_DEPTH: usize = 128;
 
 /// A JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -43,7 +63,7 @@ impl Json {
     // ---------------------------------------------------------------- parse
 
     pub fn parse(src: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { src: src.as_bytes(), pos: 0 };
+        let mut p = Parser { src: src.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -221,6 +241,8 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     src: &'a [u8],
     pos: usize,
+    /// Current nesting depth; bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -265,6 +287,16 @@ impl<'a> Parser<'a> {
     }
 
     fn value(&mut self) -> Result<Json, JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err(&format!("nesting depth exceeds {MAX_DEPTH}")));
+        }
+        let v = self.value_inner();
+        self.depth -= 1;
+        v
+    }
+
+    fn value_inner(&mut self) -> Result<Json, JsonError> {
         self.skip_ws();
         match self.peek() {
             Some(b'{') => self.object(),
@@ -360,7 +392,12 @@ impl<'a> Parser<'a> {
                                     .ok_or_else(|| self.err("bad hex in \\u"))?;
                                 low = low * 16 + d;
                             }
+                            if !(0xDC00..0xE000).contains(&low) {
+                                return Err(self.err("invalid low surrogate"));
+                            }
                             code = 0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                        } else if (0xDC00..0xE000).contains(&code) {
+                            return Err(self.err("lone low surrogate"));
                         }
                         s.push(char::from_u32(code).ok_or_else(|| self.err("bad codepoint"))?);
                     }
@@ -389,16 +426,36 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Strict RFC 8259 number grammar: `-?(0|[1-9][0-9]*)(\.[0-9]+)?([eE][+-]?[0-9]+)?`.
+    ///
+    /// The loose pre-hardening scanner delegated validation to
+    /// `f64::parse`, which accepts non-JSON forms (`01`, `1.`, `-.5`,
+    /// trailing `1e`); anything accepted here re-emits spec-clean.
     fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
-            self.pos += 1;
+        // Integer part: a single 0, or a nonzero digit followed by digits.
+        match self.peek() {
+            Some(b'0') => {
+                self.pos += 1;
+                if matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    return Err(self.err("leading zeros are not allowed"));
+                }
+            }
+            Some(c) if c.is_ascii_digit() => {
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            _ => return Err(self.err("expected digit")),
         }
         if self.peek() == Some(b'.') {
             self.pos += 1;
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected digit after decimal point"));
+            }
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
             }
@@ -407,6 +464,9 @@ impl<'a> Parser<'a> {
             self.pos += 1;
             if matches!(self.peek(), Some(b'+' | b'-')) {
                 self.pos += 1;
+            }
+            if !matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                return Err(self.err("expected digit in exponent"));
             }
             while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
                 self.pos += 1;
@@ -488,5 +548,115 @@ mod tests {
         assert_eq!(Json::Num(3.0).as_usize(), Some(3));
         assert_eq!(Json::Num(3.5).as_usize(), None);
         assert_eq!(Json::Num(-1.0).as_usize(), None);
+    }
+
+    // ------------------------------------------------ hostile-input hardening
+
+    #[test]
+    fn depth_limit_rejects_deep_arrays() {
+        // 10k-deep array: must error cleanly, not overflow the stack.
+        let mut src = String::new();
+        for _ in 0..10_000 {
+            src.push('[');
+        }
+        for _ in 0..10_000 {
+            src.push(']');
+        }
+        let err = Json::parse(&src).unwrap_err();
+        assert!(err.msg.contains("depth"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn depth_limit_rejects_deep_objects() {
+        let mut src = String::new();
+        for _ in 0..1_000 {
+            src.push_str("{\"a\":");
+        }
+        src.push('0');
+        for _ in 0..1_000 {
+            src.push('}');
+        }
+        let err = Json::parse(&src).unwrap_err();
+        assert!(err.msg.contains("depth"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn depth_limit_allows_reasonable_nesting() {
+        // MAX_DEPTH itself must still parse; only deeper input errors.
+        let mut src = String::new();
+        for _ in 0..MAX_DEPTH {
+            src.push('[');
+        }
+        for _ in 0..MAX_DEPTH {
+            src.push(']');
+        }
+        assert!(Json::parse(&src).is_ok());
+        assert!(Json::parse(&format!("[{src}]")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_surrogate_pairs() {
+        // High surrogate followed by a non-escape.
+        assert!(Json::parse(r#""\ud800A""#).is_err());
+        // High surrogate followed by a \u escape that is not a low surrogate
+        // (pre-fix: unchecked `low - 0xDC00` underflow at the pair compute).
+        assert!(Json::parse(r#""\ud800\u0041""#).is_err());
+        // High surrogate followed by another high surrogate.
+        assert!(Json::parse(r#""\ud800\ud800""#).is_err());
+        // Lone low surrogate.
+        assert!(Json::parse(r#""\udc00""#).is_err());
+        // Truncated pair.
+        assert!(Json::parse(r#""\ud800""#).is_err());
+    }
+
+    #[test]
+    fn valid_surrogate_pair_roundtrips() {
+        // 😀 is U+1F600: escaped as the surrogate pair D83D/DE00.
+        let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "😀");
+        // Literal UTF-8 form parses to the same value and round-trips.
+        assert_eq!(Json::parse(r#""😀""#).unwrap(), v);
+        let v2 = Json::parse(&v.dump()).unwrap();
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn rejects_nonstandard_numbers() {
+        for src in [
+            "01", "-01", "007", // leading zeros
+            "1.", "-2.", // bare trailing point
+            ".5", "-.5", // bare leading point
+            "1e", "1e+", "1E-", // exponent with no digits
+            "-", "+1", "1.e3",
+        ] {
+            assert!(Json::parse(src).is_err(), "should reject {src:?}");
+        }
+    }
+
+    #[test]
+    fn accepts_standard_numbers() {
+        for (src, want) in [
+            ("0", 0.0),
+            ("-0", -0.0),
+            ("0.5", 0.5),
+            ("10", 10.0),
+            ("1e3", 1000.0),
+            ("1.5e-2", 0.015),
+            ("-1.25E+2", -125.0),
+            ("0e0", 0.0),
+        ] {
+            let v = Json::parse(src).unwrap();
+            assert_eq!(v.as_f64().unwrap(), want, "parse {src:?}");
+        }
+    }
+
+    #[test]
+    fn float_roundtrip_is_bit_exact() {
+        // The server relies on parse(dump(x)) == x at the bit level for
+        // finite nonzero floats (Rust `{}` is shortest-round-trip).
+        for x in [0.1, 1.0 / 3.0, 6.02214076e23, -1e-300, f64::MIN_POSITIVE] {
+            let v = Json::parse(&Json::Num(x).dump()).unwrap();
+            assert_eq!(v.as_f64().unwrap().to_bits(), x.to_bits());
+        }
     }
 }
