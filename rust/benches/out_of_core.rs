@@ -1,0 +1,242 @@
+//! §Perf: out-of-core tile streaming vs. the in-core CSR mirror
+//! (DESIGN.md §13, `docs/adr/ADR-006-out-of-core-tiles.md`).
+//!
+//! Workload: a multi-tile E2006-like sparse design spilled to a chunked
+//! `.sfwbin` v2 container, then the full sweep (κ = p — the deterministic
+//! FW / screening / `Xᵀv` shape, the worst case for streaming because it
+//! touches every tile every scan) timed four ways:
+//!
+//! 1. in-core `CsrMirror` stream — the §10 baseline the store must match,
+//! 2. file-backed with an unbounded budget — every tile resident after
+//!    the warm-up pass, isolating the LRU bookkeeping overhead,
+//! 3. file-backed under a scan-and-drop budget (1 byte) — every pass
+//!    re-reads, re-checksums and re-decodes every chunk, serial,
+//! 4. the same starvation budget with the double-buffered prefetch
+//!    pipeline — measuring how much of the I/O+decode cost overlaps
+//!    compute,
+//!
+//! plus a half-footprint LRU point between the extremes. All four paths
+//! are bit-identical by the §10 scan contract; the bench asserts it on a
+//! sampled-κ spot check.
+//!
+//! Emits machine-readable `BENCH_out_of_core.json` (override with
+//! `SFW_BENCH_JSON`) with the headline `slowdown_streamed_vs_mirror` and
+//! `speedup_prefetch_vs_serial` — the acceptance artifact uploaded by
+//! the CI `bench-artifacts` job.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::bench::bench;
+use sfw_lasso::data::cache::{open_tiles, write_snapshot};
+use sfw_lasso::linalg::csr::CsrMirror;
+use sfw_lasso::linalg::kernel::scan::{mirror_multi_dot, Cols};
+use sfw_lasso::linalg::kernel::{KernelScratch, ROW_TILE};
+use sfw_lasso::linalg::tiles::{scan_multi_dot, scan_multi_dot_prefetch, FileTiles};
+use sfw_lasso::linalg::CscMatrix;
+use sfw_lasso::util::json::Json;
+use sfw_lasso::util::rng::{SubsetSampler, Xoshiro256};
+use sfw_lasso::util::timer::Stopwatch;
+
+/// E2006-like tall sparse design: light Zipf-ish columns (~2.6 nnz/col
+/// average) over enough rows for several row tiles, built directly in
+/// CSC order.
+fn tall_sparse(m: usize, p: usize, seed: u64) -> CscMatrix {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let mut col_ptr = Vec::with_capacity(p + 1);
+    let mut row_idx: Vec<u32> = Vec::new();
+    let mut vals: Vec<f32> = Vec::new();
+    col_ptr.push(0usize);
+    let head = (p / 1000).max(1);
+    let mut rows_buf: Vec<u32> = Vec::new();
+    for j in 0..p {
+        let k = if j < head { m / 50 } else { 1 + (rng.next_u64() % 4) as usize };
+        rows_buf.clear();
+        for _ in 0..k {
+            rows_buf.push(rng.below(m) as u32);
+        }
+        rows_buf.sort_unstable();
+        rows_buf.dedup();
+        for &r in rows_buf.iter() {
+            row_idx.push(r);
+            vals.push((1.0 + rng.next_f64() * 4.0).ln() as f32);
+        }
+        col_ptr.push(row_idx.len());
+    }
+    CscMatrix::from_parts(m, p, col_ptr, row_idx, vals)
+}
+
+fn full_sweep(
+    ft: &FileTiles,
+    p: usize,
+    q: &[f64],
+    out: &mut [f64],
+    scratch: &mut KernelScratch,
+    prefetch: bool,
+) -> f64 {
+    let r = if prefetch {
+        scan_multi_dot_prefetch(ft, Cols::All(p), q, out, scratch)
+    } else {
+        scan_multi_dot(ft, Cols::All(p), q, out, scratch)
+    };
+    r.expect("clean container must scan");
+    out[0]
+}
+
+fn main() {
+    common::banner(
+        "out_of_core",
+        "file-backed tile streaming vs in-core CSR mirror (DESIGN.md §13)",
+    );
+    let mut rng = Xoshiro256::seed_from_u64(common::seed());
+
+    // enough rows for several tiles; columns scale with SFW_BENCH_SCALE
+    let tiles_target = ((common::scale() * 40.0).round() as usize).clamp(3, 24);
+    let m = tiles_target * ROW_TILE + 37;
+    let p = ((200_000.0 * common::scale()) as usize).clamp(4_000, 200_000);
+    let x = tall_sparse(m, p, 42);
+    let nnz = x.nnz();
+    let y: Vec<f64> = (0..m).map(|i| (i as f64 * 0.13).sin()).collect();
+    println!(
+        "m={m} p={p} nnz={nnz} (~{:.2} nnz/col, {tiles_target}+ row tiles)",
+        nnz as f64 / p as f64
+    );
+
+    // spill once (amortized over a whole path run), then stream back
+    let snap =
+        std::env::temp_dir().join(format!("sfw-bench-ooc-{}.sfwbin", std::process::id()));
+    let sw = Stopwatch::started();
+    write_snapshot(&snap, &x, &y).expect("spill v2 container");
+    let write_secs = sw.elapsed_secs();
+    let snapshot_bytes = std::fs::metadata(&snap).map(|md| md.len()).unwrap_or(0);
+    println!("v2 spill: {write_secs:.4}s ({snapshot_bytes} bytes on disk)\n");
+
+    let sw = Stopwatch::started();
+    let mirror = CsrMirror::build(&x);
+    let build_secs = sw.elapsed_secs();
+    println!("in-core mirror build: {build_secs:.4}s ({} entries)\n", mirror.nnz());
+
+    let q: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+    let mut full = vec![0.0; p];
+    let mut scratch = KernelScratch::new();
+    let (w, r) = (1usize, 6usize.max(common::reps()));
+
+    // --- 1. in-core mirror baseline ---
+    let in_core = bench(w, r, || {
+        mirror_multi_dot(&mirror, Cols::All(p), &q, &mut full, &mut scratch);
+        full[0]
+    });
+    println!("{}", in_core.row("full sweep, in-core CSR mirror (§10 baseline)"));
+
+    // --- 2. file-backed, everything resident ---
+    let ft_all = open_tiles(&snap, usize::MAX, None).expect("open v2");
+    let resident = bench(w, r, || full_sweep(&ft_all, p, &q, &mut full, &mut scratch, false));
+    let decoded_bytes = ft_all.stats().resident_bytes;
+    println!(
+        "{}",
+        resident.row(&format!(
+            "full sweep, file-backed, unbounded budget ({decoded_bytes} decoded bytes resident, \
+             {:.2}× vs mirror)",
+            resident.mean / in_core.mean
+        ))
+    );
+
+    // --- 3./4. starvation budget: re-stream every pass, serial vs prefetch ---
+    let ft_min = open_tiles(&snap, 1, None).expect("open v2");
+    let streamed_serial =
+        bench(w, r, || full_sweep(&ft_min, p, &q, &mut full, &mut scratch, false));
+    println!(
+        "{}",
+        streamed_serial.row(&format!(
+            "full sweep, streamed (budget=1, serial, {:.2}× vs mirror)",
+            streamed_serial.mean / in_core.mean
+        ))
+    );
+    let streamed_prefetch =
+        bench(w, r, || full_sweep(&ft_min, p, &q, &mut full, &mut scratch, true));
+    println!(
+        "{}",
+        streamed_prefetch.row(&format!(
+            "full sweep, streamed (budget=1, prefetch, {:.2}× vs serial)",
+            streamed_prefetch.speedup_over(&streamed_serial)
+        ))
+    );
+    let min_stats = ft_min.stats();
+
+    // --- LRU sweep point: half the decoded footprint ---
+    let ft_half = open_tiles(&snap, (decoded_bytes / 2).max(1) as usize, None).expect("open v2");
+    let half = bench(w, r, || full_sweep(&ft_half, p, &q, &mut full, &mut scratch, true));
+    let half_stats = ft_half.stats();
+    println!(
+        "{}",
+        half.row(&format!(
+            "full sweep, streamed (budget=50% footprint, prefetch, \
+             hits={} misses={} evictions={})",
+            half_stats.hits, half_stats.misses, half_stats.evictions
+        ))
+    );
+
+    let slowdown_streamed = streamed_prefetch.mean / in_core.mean;
+    let prefetch_speedup = streamed_prefetch.speedup_over(&streamed_serial);
+    println!(
+        "\nheadline: streamed-prefetch vs in-core mirror {slowdown_streamed:.2}× slower; \
+         prefetch vs serial under starvation {prefetch_speedup:.2}× faster"
+    );
+
+    // correctness spot-check on a sampled κ (bit-identical paths)
+    {
+        let kappa = (p / 50).max(64).min(p);
+        let mut sampler = SubsetSampler::new(p);
+        let mut s = Vec::new();
+        sampler.sample(&mut rng, kappa, &mut s);
+        let mut a = vec![0.0; kappa];
+        let mut b = vec![0.0; kappa];
+        let mut c = vec![0.0; kappa];
+        mirror_multi_dot(&mirror, Cols::Idx(&s), &q, &mut a, &mut scratch);
+        scan_multi_dot(&ft_min, Cols::Idx(&s), &q, &mut b, &mut scratch).unwrap();
+        scan_multi_dot_prefetch(&ft_half, Cols::Idx(&s), &q, &mut c, &mut scratch).unwrap();
+        assert!(
+            a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+                && a.iter().zip(c.iter()).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "streamed scans diverged from the in-core mirror"
+        );
+        println!("streamed scans bit-identical to the mirror on the spot-check sample ✓");
+    }
+
+    let report = Json::obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("p", Json::Num(p as f64)),
+        ("nnz", Json::Num(nnz as f64)),
+        ("n_tiles", Json::Num(ft_all.n_tiles() as f64)),
+        ("row_tile", Json::Num(ROW_TILE as f64)),
+        ("snapshot_bytes", Json::Num(snapshot_bytes as f64)),
+        ("decoded_bytes", Json::Num(decoded_bytes as f64)),
+        ("spill_write_secs", Json::Num(write_secs)),
+        ("mirror_build_secs", Json::Num(build_secs)),
+        ("in_core_mirror_secs", Json::Num(in_core.mean)),
+        ("file_resident_secs", Json::Num(resident.mean)),
+        ("streamed_serial_secs", Json::Num(streamed_serial.mean)),
+        ("streamed_prefetch_secs", Json::Num(streamed_prefetch.mean)),
+        ("half_budget_prefetch_secs", Json::Num(half.mean)),
+        (
+            "overhead_resident_vs_mirror",
+            Json::Num(resident.mean / in_core.mean),
+        ),
+        ("slowdown_streamed_vs_mirror", Json::Num(slowdown_streamed)),
+        ("speedup_prefetch_vs_serial", Json::Num(prefetch_speedup)),
+        (
+            "streamed_bytes_read_per_pass",
+            Json::Num(min_stats.bytes_read as f64 / (2 * (w + r)) as f64),
+        ),
+        ("half_budget_hits", Json::Num(half_stats.hits as f64)),
+        ("half_budget_misses", Json::Num(half_stats.misses as f64)),
+        ("half_budget_evictions", Json::Num(half_stats.evictions as f64)),
+    ]);
+    let path =
+        std::env::var("SFW_BENCH_JSON").unwrap_or_else(|_| "BENCH_out_of_core.json".into());
+    match std::fs::write(&path, report.pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+    }
+    let _ = std::fs::remove_file(&snap);
+}

@@ -1,5 +1,6 @@
 //! Binary dataset snapshots (`.sfwbin`) — O(bytes) reloads of parsed
-//! LIBSVM files.
+//! LIBSVM files, and (since v2) the chunked tile container behind the
+//! out-of-core scan engine ([`crate::linalg::tiles`], DESIGN.md §13).
 //!
 //! Text parsing is the wall-clock floor of repeated experiments on
 //! E2006-scale files: every `solve`/`path` invocation re-tokenizes
@@ -10,35 +11,62 @@
 //! straight into [`CscMatrix::from_parts`] — no tokenizing, no triplet
 //! sort, no per-entry branching.
 //!
-//! ## Format (version 1, little-endian)
+//! ## Format (version 2, little-endian)
 //!
 //! ```text
 //! [ 0.. 8)  magic  b"SFWBIN" + u16 version
-//! [ 8..40)  u64 rows, u64 cols, u64 nnz, u64 y_len
-//! [40.. )   col_ptr  (cols+1) × u64        (8-aligned)
+//! [ 8..56)  u64 rows, cols, nnz, y_len, tile_rows (= ROW_TILE), n_tiles
+//! [56.. )   col_ptr  (cols+1) × u64        (8-aligned)
 //!           row_idx  nnz × u32, padded to 8 bytes
 //!           vals     nnz × f32, padded to 8 bytes
 //!           y        y_len × f64
+//!           tile directory: n_tiles × {u64 offset, byte_len, nnz, fnv1a64}
+//!           tile chunks, contiguous in tile order, each 8-aligned:
+//!             rel_row_off (rows_t+1) × u32, padded to 8 bytes
+//!             entries     nnz_t × (u32 col, f32 val)
 //! ```
 //!
-//! Every section starts 8-byte-aligned, so a future zero-copy (mmap)
-//! loader can cast sections in place; the current loader copies into
-//! owned `Vec`s in one pass. Snapshots are invalidated by a version bump
-//! or by a source file newer than the snapshot (mtime) — both fall back
-//! to re-parsing and rewriting, never to an error.
+//! The CSC sections are byte-compatible with version 1 (which ended after
+//! `y`); v1 snapshots still load and are transparently rewritten as v2 so
+//! the tile directory exists the first time `--mem-budget` asks for it.
+//! The tile chunks duplicate the nonzeros **row-major** — the on-disk
+//! twin of the [`crate::linalg::CsrMirror`] — so the scan engine can
+//! stream checksummed [`crate::linalg::kernel::ROW_TILE`] blocks through
+//! a byte-capped LRU instead of holding a second in-RAM copy.
+//!
+//! Every section and chunk starts 8-byte-aligned, so a future zero-copy
+//! (mmap) loader can cast sections in place; the current loader copies
+//! into owned `Vec`s in one pass. Snapshots are invalidated by a version
+//! bump, a [`ROW_TILE`] geometry change, or a source file newer than the
+//! snapshot (mtime) — all fall back to re-parsing and rewriting, never to
+//! an error.
 
 use super::libsvm::{self, LibsvmData};
+use crate::linalg::csr::CsrMirror;
+use crate::linalg::kernel::ROW_TILE;
+use crate::linalg::tiles::{
+    self, chunk_len, fnv1a64, n_tiles_for, ChunkReader, FileTiles, FsReader, TileMeta,
+};
 use crate::linalg::CscMatrix;
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Magic prefix of a snapshot file.
 pub const MAGIC: &[u8; 6] = b"SFWBIN";
 
 /// Current snapshot format version (bump on any layout change).
-pub const VERSION: u16 = 1;
+pub const VERSION: u16 = 2;
 
-const HEADER_LEN: usize = 40;
+/// v2 header: magic + version + six u64 dimensions.
+const HEADER_LEN: usize = 56;
+
+/// v1 header: magic + version + four u64 dimensions.
+const HEADER_LEN_V1: usize = 40;
+
+/// Bytes per tile-directory row: offset, byte_len, nnz, checksum.
+const TILE_DIR_ENTRY: usize = 32;
 
 /// Conventional snapshot location: the source path with `.sfwbin`
 /// appended (`data/e2006.svm` → `data/e2006.svm.sfwbin`).
@@ -50,6 +78,11 @@ pub fn snapshot_path(source: &Path) -> PathBuf {
 
 fn pad8(n: usize) -> usize {
     (8 - n % 8) % 8
+}
+
+/// Byte length of the v2 CSC sections (col_ptr through y).
+fn sections_len(cols: usize, nnz: usize, y_len: usize) -> usize {
+    (cols + 1) * 8 + nnz * 4 + pad8(nnz * 4) + nnz * 4 + pad8(nnz * 4) + y_len * 8
 }
 
 /// Serialize a parsed dataset to `path`. The bytes go to a sibling
@@ -71,8 +104,43 @@ pub fn write_snapshot(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), Strin
     result
 }
 
+/// Encode tile `t` of the mirror as a v2 chunk (relative row offsets +
+/// row-major entries).
+fn encode_tile(mirror: &CsrMirror, t: usize) -> Result<Vec<u8>, String> {
+    let (lo, hi) = mirror.tile_rows(t);
+    let row_ptr = mirror.row_ptr();
+    let base = row_ptr[lo];
+    let nnz_t = row_ptr[hi] - base;
+    if nnz_t > u32::MAX as usize {
+        return Err(format!("tile {t} holds {nnz_t} nonzeros (exceeds the u32 chunk limit)"));
+    }
+    let row_off: Vec<u32> = row_ptr[lo..=hi].iter().map(|&r| (r - base) as u32).collect();
+    Ok(tiles::TileData::encode_chunk(&row_off, &mirror.entries()[base..row_ptr[hi]]))
+}
+
 fn write_snapshot_to(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), String> {
     let (col_ptr, row_idx, vals) = x.parts();
+    let (rows, cols, nnz) = (x.rows(), x.cols(), x.nnz());
+    // Row-major tiles are sliced straight out of the CSR mirror (O(nnz)
+    // build, transient — dropped when the writer returns). Chunks are
+    // encoded twice: once here for lengths + checksums so the directory
+    // can precede them in the file, once below to stream the bytes.
+    let mirror = CsrMirror::build(x);
+    let n_tiles = mirror.n_tiles();
+    debug_assert_eq!(n_tiles, n_tiles_for(rows));
+    let mut metas: Vec<TileMeta> = Vec::with_capacity(n_tiles);
+    let mut offset =
+        (HEADER_LEN + sections_len(cols, nnz, y.len()) + n_tiles * TILE_DIR_ENTRY) as u64;
+    for t in 0..n_tiles {
+        let chunk = encode_tile(&mirror, t)?;
+        metas.push(TileMeta {
+            offset,
+            byte_len: chunk.len() as u64,
+            nnz: mirror.tile_nnz(t) as u64,
+            checksum: fnv1a64(&chunk),
+        });
+        offset += chunk.len() as u64;
+    }
     let f = std::fs::File::create(path).map_err(|e| format!("create {path:?}: {e}"))?;
     let mut w = std::io::BufWriter::with_capacity(1 << 20, f);
     let mut put = |bytes: &[u8]| {
@@ -80,7 +148,7 @@ fn write_snapshot_to(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), String
     };
     put(MAGIC)?;
     put(&VERSION.to_le_bytes())?;
-    for dim in [x.rows(), x.cols(), x.nnz(), y.len()] {
+    for dim in [rows, cols, nnz, y.len(), ROW_TILE, n_tiles] {
         put(&(dim as u64).to_le_bytes())?;
     }
     for &o in col_ptr {
@@ -96,6 +164,14 @@ fn write_snapshot_to(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), String
     put(&[0u8; 8][..pad8(vals.len() * 4)])?;
     for &v in y {
         put(&v.to_le_bytes())?;
+    }
+    for m in &metas {
+        for field in [m.offset, m.byte_len, m.nnz, m.checksum] {
+            put(&field.to_le_bytes())?;
+        }
+    }
+    for t in 0..n_tiles {
+        put(&encode_tile(&mirror, t)?)?;
     }
     w.flush().map_err(|e| format!("flush {path:?}: {e}"))
 }
@@ -127,21 +203,84 @@ impl<'a> Sections<'a> {
     }
 }
 
-/// Load a snapshot written by [`write_snapshot`]. One `fs::read` plus one
-/// linear conversion pass per section, then [`CscMatrix::from_parts`].
-pub fn read_snapshot(path: &Path) -> Result<LibsvmData, String> {
+/// Parse a raw tile-directory region into metas.
+fn parse_tile_directory(dir: &[u8]) -> Vec<TileMeta> {
+    dir.chunks_exact(TILE_DIR_ENTRY)
+        .map(|e| {
+            let f = |i: usize| u64::from_le_bytes(e[8 * i..8 * i + 8].try_into().unwrap());
+            TileMeta { offset: f(0), byte_len: f(1), nnz: f(2), checksum: f(3) }
+        })
+        .collect()
+}
+
+/// Validate a v2 tile directory against the header dimensions: chunks
+/// contiguous in tile order starting at `chunks_start`, each byte length
+/// matching its tile geometry, nonzeros summing to `nnz`, and (when the
+/// container length is known) the last chunk ending exactly at EOF.
+fn validate_tile_directory(
+    metas: &[TileMeta],
+    rows: usize,
+    nnz: usize,
+    chunks_start: u64,
+    total_len: Option<u64>,
+) -> Result<(), String> {
+    if metas.len() != n_tiles_for(rows) {
+        return Err(format!(
+            "tile directory has {} entries, expected {} for {rows} rows",
+            metas.len(),
+            n_tiles_for(rows)
+        ));
+    }
+    let mut cursor = chunks_start;
+    let mut total_nnz = 0u64;
+    for (t, m) in metas.iter().enumerate() {
+        let rows_t = ((t + 1) * ROW_TILE).min(rows) - t * ROW_TILE;
+        if m.nnz > nnz as u64
+            || m.offset != cursor
+            || m.byte_len != chunk_len(rows_t, m.nnz as usize) as u64
+        {
+            return Err(format!("tile {t} directory entry inconsistent with its geometry"));
+        }
+        cursor += m.byte_len;
+        total_nnz += m.nnz;
+    }
+    if total_nnz != nnz as u64 {
+        return Err(format!("tile directory nonzeros {total_nnz} != header nnz {nnz}"));
+    }
+    if let Some(len) = total_len {
+        if cursor != len {
+            return Err(format!(
+                "snapshot length {len} does not match header (expected {cursor})"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Load a snapshot written by [`write_snapshot`] (either layout version),
+/// returning the data and the on-disk version so callers can upgrade v1
+/// files in place. One `fs::read` plus one linear conversion pass per
+/// section, then [`CscMatrix::from_parts`].
+pub fn read_snapshot_versioned(path: &Path) -> Result<(LibsvmData, u16), String> {
     let bytes = std::fs::read(path).map_err(|e| format!("read {path:?}: {e}"))?;
-    if bytes.len() < HEADER_LEN {
+    if bytes.len() < HEADER_LEN_V1 {
         return Err(format!("{path:?}: snapshot shorter than header"));
     }
     if &bytes[..6] != MAGIC {
         return Err(format!("{path:?}: not an .sfwbin snapshot (bad magic)"));
     }
     let version = u16::from_le_bytes([bytes[6], bytes[7]]);
-    if version != VERSION {
-        return Err(format!(
-            "{path:?}: snapshot version {version} (expected {VERSION})"
-        ));
+    let header_len = match version {
+        1 => HEADER_LEN_V1,
+        2 => HEADER_LEN,
+        _ => {
+            return Err(format!(
+                "{path:?}: snapshot version {version} (expected ≤ {VERSION})"
+            ))
+        }
+    };
+    if bytes.len() < header_len {
+        return Err(format!("{path:?}: snapshot shorter than header"));
     }
     let mut s = Sections { bytes: &bytes, pos: 8 };
     let dims = s.u64s(4)?;
@@ -153,19 +292,38 @@ pub fn read_snapshot(path: &Path) -> Result<LibsvmData, String> {
     }
     let (rows, cols, nnz, y_len) =
         (dims[0] as usize, dims[1] as usize, dims[2] as usize, dims[3] as usize);
-    // section sizes must reproduce the file length exactly
-    let expect = HEADER_LEN
-        + (cols + 1) * 8
-        + nnz * 4
-        + pad8(nnz * 4)
-        + nnz * 4
-        + pad8(nnz * 4)
-        + y_len * 8;
-    if bytes.len() != expect {
-        return Err(format!(
-            "{path:?}: snapshot length {} does not match header (expected {expect})",
-            bytes.len()
-        ));
+    let sec_len = sections_len(cols, nnz, y_len);
+    if version == 1 {
+        // v1 ends after the y section; exact-length check
+        if bytes.len() != HEADER_LEN_V1 + sec_len {
+            return Err(format!(
+                "{path:?}: snapshot length {} does not match header (expected {})",
+                bytes.len(),
+                HEADER_LEN_V1 + sec_len
+            ));
+        }
+    } else {
+        let geom = s.u64s(2)?;
+        if geom[0] != ROW_TILE as u64 || geom[1] != n_tiles_for(rows) as u64 {
+            return Err(format!(
+                "{path:?}: snapshot tile geometry ({} rows/tile, {} tiles) does not \
+                 match this build ({ROW_TILE} rows/tile, {} tiles)",
+                geom[0],
+                geom[1],
+                n_tiles_for(rows)
+            ));
+        }
+        let n_tiles = geom[1] as usize;
+        let dir_start = HEADER_LEN + sec_len;
+        let dir_end = dir_start + n_tiles * TILE_DIR_ENTRY;
+        if dir_end > bytes.len() {
+            return Err(format!("{path:?}: snapshot truncated inside the tile directory"));
+        }
+        // chunk payloads themselves are validated lazily, per tile, by
+        // checksum when the store is opened with `open_tiles`
+        let metas = parse_tile_directory(&bytes[dir_start..dir_end]);
+        validate_tile_directory(&metas, rows, nnz, dir_end as u64, Some(bytes.len() as u64))
+            .map_err(|e| format!("{path:?}: {e}"))?;
     }
     let col_ptr: Vec<usize> = s.u64s(cols + 1)?.into_iter().map(|v| v as usize).collect();
     if col_ptr.first().copied() != Some(0)
@@ -202,22 +360,197 @@ pub fn read_snapshot(path: &Path) -> Result<LibsvmData, String> {
             return Err(format!("{path:?}: column {j} rows not strictly ascending"));
         }
     }
-    Ok(LibsvmData { x: CscMatrix::from_parts(rows, cols, col_ptr, row_idx, vals), y })
+    Ok((
+        LibsvmData { x: CscMatrix::from_parts(rows, cols, col_ptr, row_idx, vals), y },
+        version,
+    ))
+}
+
+/// [`read_snapshot_versioned`] without the version (the common caller).
+pub fn read_snapshot(path: &Path) -> Result<LibsvmData, String> {
+    read_snapshot_versioned(path).map(|(d, _)| d)
+}
+
+/// Open the tile chunks of a v2 snapshot as a [`FileTiles`] store
+/// without loading the CSC sections — the out-of-core entry point.
+/// `col_scale`, when present, is applied at decode time (see
+/// [`attach_out_of_core`] for why snapshots hold raw values). v1
+/// snapshots (no tile directory) are an error; callers fall back to
+/// spilling or to the in-core mirror.
+pub fn open_tiles(
+    path: &Path,
+    mem_budget: usize,
+    col_scale: Option<Arc<Vec<f64>>>,
+) -> Result<FileTiles, String> {
+    let reader = FsReader::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
+    open_tiles_from(Box::new(reader), mem_budget, col_scale)
+        .map_err(|e| format!("{path:?}: {e}"))
+}
+
+/// [`open_tiles`] over any [`ChunkReader`] — the seam the fault-injection
+/// suite uses to wrap the container in `testing::faulty_store::
+/// FaultyReader` before the store ever reads a byte.
+pub fn open_tiles_from(
+    reader: Box<dyn ChunkReader>,
+    mem_budget: usize,
+    col_scale: Option<Arc<Vec<f64>>>,
+) -> Result<FileTiles, String> {
+    let io = |e: tiles::TileError| format!("snapshot header: {e}");
+    let retries = AtomicU64::new(0);
+    let mut head = [0u8; HEADER_LEN];
+    tiles::read_exact_at(reader.as_ref(), 0, &mut head, 0, &retries).map_err(io)?;
+    if &head[..6] != MAGIC {
+        return Err("not an .sfwbin snapshot (bad magic)".into());
+    }
+    let version = u16::from_le_bytes([head[6], head[7]]);
+    if version != VERSION {
+        return Err(format!(
+            "snapshot version {version} has no tile directory (expected {VERSION})"
+        ));
+    }
+    let dim = |i: usize| u64::from_le_bytes(head[8 * (i + 1)..8 * (i + 2)].try_into().unwrap());
+    let total_len = reader.len();
+    // every stored element is ≥ 4 bytes, so legitimate counts are bounded
+    // by the container size (or a generous ceiling when it is unknown) —
+    // a hostile header cannot force oversized allocations below
+    let bound = total_len.unwrap_or(1 << 48);
+    if (0..4).any(|i| dim(i) > bound) {
+        return Err("snapshot header dimensions exceed file size".into());
+    }
+    let (rows, cols, nnz, y_len) =
+        (dim(0) as usize, dim(1) as usize, dim(2) as usize, dim(3) as usize);
+    if dim(4) != ROW_TILE as u64 || dim(5) != n_tiles_for(rows) as u64 {
+        return Err(format!(
+            "snapshot tile geometry ({} rows/tile, {} tiles) does not match this \
+             build ({ROW_TILE} rows/tile, {} tiles)",
+            dim(4),
+            dim(5),
+            n_tiles_for(rows)
+        ));
+    }
+    let n_tiles = dim(5) as usize;
+    let dir_start = HEADER_LEN + sections_len(cols, nnz, y_len);
+    let mut dir = vec![0u8; n_tiles * TILE_DIR_ENTRY];
+    tiles::read_exact_at(reader.as_ref(), dir_start as u64, &mut dir, 0, &retries)
+        .map_err(io)?;
+    let metas = parse_tile_directory(&dir);
+    validate_tile_directory(
+        &metas,
+        rows,
+        nnz,
+        (dir_start + n_tiles * TILE_DIR_ENTRY) as u64,
+        total_len,
+    )?;
+    FileTiles::new(rows, cols, nnz, metas, reader, mem_budget, col_scale)
+}
+
+/// Monotone suffix for spill file names (several datasets may spill in
+/// one process).
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Put an assembled dataset's sparse design behind a file-backed tile
+/// store capped at `mem_budget` bytes of resident decoded tiles
+/// (`--mem-budget`). Returns whether tiles were attached (`false` for
+/// dense or all-zero designs, which have nothing to stream).
+///
+/// Two sources, tried in order:
+///
+/// 1. **`snapshot`** — a v2 `.sfwbin` written at parse time. Snapshots
+///    hold *raw* parsed values (standardization happens at assembly,
+///    after the snapshot exists), so the per-column standardization
+///    scales are applied at tile-decode time with the exact
+///    [`crate::linalg::Design::scale_col`] formula — decoded tiles
+///    bit-match the in-core mirror of the standardized design.
+/// 2. **Spill** — the standardized design is written to a private v2
+///    container in the temp dir and streamed back from there (no scaling
+///    needed). On Unix the spill file is unlinked as soon as it is open,
+///    so it can never outlive the process.
+///
+/// A mismatched or unreadable snapshot degrades to the spill path with a
+/// warning; only a failed spill is an error.
+pub fn attach_out_of_core(
+    ds: &mut crate::data::Dataset,
+    mem_budget: usize,
+    snapshot: Option<&Path>,
+) -> Result<bool, String> {
+    use crate::linalg::Storage;
+    let (rows, cols, nnz) = {
+        let Storage::Sparse(x) = ds.x.storage() else { return Ok(false) };
+        if x.nnz() == 0 {
+            return Ok(false);
+        }
+        (x.rows(), x.cols(), x.nnz())
+    };
+    if let Some(snap) = snapshot {
+        let scale = Arc::new(ds.standardization.col_scale.clone());
+        match open_tiles(snap, mem_budget, Some(scale)) {
+            Ok(ft) if (ft.rows(), ft.cols(), ft.nnz()) == (rows, cols, nnz) => {
+                ds.x.attach_tiles(Arc::new(ft))?;
+                return Ok(true);
+            }
+            Ok(ft) => eprintln!(
+                "warning: snapshot tile geometry {}×{} ({} nnz) does not match the \
+                 assembled design {rows}×{cols} ({nnz} nnz); spilling instead",
+                ft.rows(),
+                ft.cols(),
+                ft.nnz()
+            ),
+            Err(e) => {
+                eprintln!("warning: cannot stream snapshot tiles ({e}); spilling instead")
+            }
+        }
+    }
+    let tmp = std::env::temp_dir().join(format!(
+        "sfw-spill-{}-{}.sfwbin",
+        std::process::id(),
+        SPILL_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    {
+        let Storage::Sparse(x) = ds.x.storage() else { unreachable!() };
+        write_snapshot(&tmp, x, &ds.y)?;
+    }
+    let opened = open_tiles(&tmp, mem_budget, None);
+    // the open fd keeps the bytes readable; on non-Unix the temp cleaner
+    // reaps the file after the process exits
+    #[cfg(unix)]
+    std::fs::remove_file(&tmp).ok();
+    match opened {
+        Ok(ft) => {
+            ds.x.attach_tiles(Arc::new(ft))?;
+            Ok(true)
+        }
+        Err(e) => {
+            #[cfg(not(unix))]
+            std::fs::remove_file(&tmp).ok();
+            Err(format!("spill container: {e}"))
+        }
+    }
 }
 
 /// Load a LIBSVM text file, optionally through the snapshot cache.
 ///
 /// With `use_cache`: a fresh snapshot (same-or-newer mtime than the
 /// source) is loaded in O(bytes); otherwise the text is parsed and the
-/// snapshot (re)written best-effort. Returns the data plus whether the
+/// snapshot (re)written best-effort. A fresh **v1** snapshot still loads
+/// and is transparently rewritten in the v2 layout so the tile directory
+/// exists for out-of-core opens. Returns the data plus whether the
 /// snapshot served the load. Snapshot read/write failures degrade to a
 /// plain parse with a warning on stderr — the cache can never make a run
 /// fail.
 pub fn load_libsvm(path: &Path, use_cache: bool) -> Result<(LibsvmData, bool), String> {
     let snap = snapshot_path(path);
     if use_cache && snapshot_fresh(path, &snap) {
-        match read_snapshot(&snap) {
-            Ok(d) => return Ok((d, true)),
+        match read_snapshot_versioned(&snap) {
+            Ok((d, version)) => {
+                if version < VERSION {
+                    if let Err(e) = write_snapshot(&snap, &d.x, &d.y) {
+                        eprintln!(
+                            "warning: could not upgrade cache to v{VERSION}: {e}"
+                        );
+                    }
+                }
+                return Ok((d, true));
+            }
             Err(e) => eprintln!("warning: ignoring stale cache: {e}"),
         }
     }
@@ -265,6 +598,8 @@ fn snapshot_fresh(source: &Path, snap: &Path) -> bool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::kernel::scan::{multi_dot_sparse, Cols};
+    use crate::linalg::KernelScratch;
 
     fn tmpdir(name: &str) -> PathBuf {
         let dir = std::env::temp_dir().join("sfw_cache_test").join(name);
@@ -275,6 +610,32 @@ mod tests {
     fn sample_data() -> LibsvmData {
         libsvm::parse("1.5 1:2.0 3:4.0\n-0.5 2:1.0\n2.25 1:-3.5 2:0.125 3:7\n", None)
             .unwrap()
+    }
+
+    /// Hand-rolled v1 writer (the retired layout) for migration tests.
+    fn write_v1_snapshot(path: &Path, x: &CscMatrix, y: &[f64]) {
+        let (col_ptr, row_idx, vals) = x.parts();
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.extend_from_slice(&1u16.to_le_bytes());
+        for dim in [x.rows(), x.cols(), x.nnz(), y.len()] {
+            b.extend_from_slice(&(dim as u64).to_le_bytes());
+        }
+        for &o in col_ptr {
+            b.extend_from_slice(&(o as u64).to_le_bytes());
+        }
+        for &r in row_idx {
+            b.extend_from_slice(&r.to_le_bytes());
+        }
+        b.extend_from_slice(&[0u8; 8][..pad8(row_idx.len() * 4)]);
+        for &v in vals {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.extend_from_slice(&[0u8; 8][..pad8(vals.len() * 4)]);
+        for &v in y {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, b).unwrap();
     }
 
     #[test]
@@ -361,6 +722,85 @@ mod tests {
         let r = read_snapshot(&path).unwrap();
         assert_eq!(r.x.nnz(), 0);
         assert!(r.y.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_snapshot_loads_and_upgrades_to_v2() {
+        let dir = tmpdir("upgrade");
+        let src = dir.join("e.svm");
+        std::fs::write(&src, "1 1:0.5 4:2\n2 2:-1\n3 1:3 2:4 3:5 4:6\n").unwrap();
+        let d = libsvm::parse(&std::fs::read_to_string(&src).unwrap(), None).unwrap();
+        let snap = snapshot_path(&src);
+        write_v1_snapshot(&snap, &d.x, &d.y);
+        // a v1 snapshot is detected by its version header and still loads
+        let (r, version) = read_snapshot_versioned(&snap).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(r.y, d.y);
+        // …but has no tile directory to stream from
+        assert!(open_tiles(&snap, 1 << 20, None).unwrap_err().contains("version 1"));
+        // load_libsvm serves it as a cache hit and rewrites it as v2
+        let (b, from_cache) = load_libsvm(&src, true).unwrap();
+        assert!(from_cache);
+        assert_eq!(b.y, d.y);
+        let (r2, version) = read_snapshot_versioned(&snap).unwrap();
+        assert_eq!(version, VERSION);
+        assert_eq!(r2.y, d.y);
+        for j in 0..d.x.cols() {
+            assert_eq!(r2.x.col(j), d.x.col(j));
+        }
+        // and the upgraded snapshot streams
+        let ft = open_tiles(&snap, 1 << 20, None).unwrap();
+        assert_eq!((ft.rows(), ft.cols(), ft.nnz()), (d.x.rows(), d.x.cols(), d.x.nnz()));
+        std::fs::remove_file(&src).ok();
+        std::fs::remove_file(&snap).ok();
+    }
+
+    #[test]
+    fn open_tiles_scans_bit_identical_to_gather() {
+        let dir = tmpdir("tiles");
+        let path = dir.join("f.sfwbin");
+        let d = sample_data();
+        write_snapshot(&path, &d.x, &d.y).unwrap();
+        let ft = open_tiles(&path, 1 << 20, None).unwrap();
+        let m = d.x.rows();
+        let v: Vec<f64> = (0..m).map(|i| 0.5 + i as f64).collect();
+        let cols: Vec<usize> = (0..d.x.cols()).collect();
+        let mut scratch = KernelScratch::new();
+        let mut want = vec![0.0; cols.len()];
+        let mut got = vec![0.0; cols.len()];
+        multi_dot_sparse(&d.x, Cols::Idx(&cols), &v, &mut want, &mut scratch);
+        crate::linalg::tiles::scan_multi_dot(&ft, Cols::Idx(&cols), &v, &mut got, &mut scratch)
+            .unwrap();
+        for j in 0..cols.len() {
+            assert_eq!(want[j].to_bits(), got[j].to_bits(), "col {j}");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_tiles_rejects_directory_and_chunk_corruption() {
+        let dir = tmpdir("tilereject");
+        let path = dir.join("g.sfwbin");
+        let d = sample_data();
+        write_snapshot(&path, &d.x, &d.y).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let dir_start = HEADER_LEN + sections_len(d.x.cols(), d.x.nnz(), d.y.len());
+        // corrupt the directory offset → rejected at open
+        let mut bad = good.clone();
+        bad[dir_start] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        assert!(open_tiles(&path, 1 << 20, None).unwrap_err().contains("inconsistent"));
+        // corrupt one chunk byte → open succeeds, tile read fails checksum
+        let mut bad = good.clone();
+        let chunk_start = dir_start + TILE_DIR_ENTRY;
+        bad[chunk_start + 4] ^= 0x01;
+        std::fs::write(&path, &bad).unwrap();
+        let ft = open_tiles(&path, 1 << 20, None).unwrap();
+        match ft.tile(0) {
+            Err(crate::linalg::TileError::Corrupt { tile: 0, .. }) => {}
+            other => panic!("expected checksum failure, got {other:?}"),
+        }
         std::fs::remove_file(&path).ok();
     }
 }

@@ -35,3 +35,28 @@ pub fn resolve_spec(
     })?;
     Ok((load(named, scale, seed), false))
 }
+
+/// [`resolve_spec`] plus the out-of-core attach: when `mem_budget` is set
+/// (`--mem-budget`), the assembled sparse design streams its row-major
+/// tiles from a v2 `.sfwbin` container — the file's own snapshot when the
+/// spec is a cached `libsvm:` path, a temp-dir spill otherwise — through
+/// an LRU capped at that many bytes, instead of holding the in-RAM CSR
+/// mirror (DESIGN.md §13). Dense and empty designs ignore the budget.
+/// Results are bit-identical with or without a budget.
+pub fn resolve_spec_budgeted(
+    spec: &str,
+    scale: f64,
+    seed: u64,
+    use_cache: bool,
+    mem_budget: Option<usize>,
+) -> Result<(Dataset, bool), String> {
+    let (mut ds, from_snapshot) = resolve_spec(spec, scale, seed, use_cache)?;
+    if let Some(budget) = mem_budget {
+        let snap = spec
+            .strip_prefix("libsvm:")
+            .filter(|_| use_cache)
+            .map(|p| cache::snapshot_path(std::path::Path::new(p)));
+        cache::attach_out_of_core(&mut ds, budget, snap.as_deref())?;
+    }
+    Ok((ds, from_snapshot))
+}

@@ -11,7 +11,8 @@ use super::kernel::scan::{mirror_multi_dot, multi_dot_dense, multi_dot_sparse, C
 use super::kernel::KernelScratch;
 use super::ops;
 use super::sparse::CscMatrix;
-use std::sync::OnceLock;
+use super::tiles::{scan_multi_dot, FileTiles};
+use std::sync::{Arc, OnceLock};
 
 /// Storage for a design matrix.
 #[derive(Clone, Debug)]
@@ -30,19 +31,38 @@ pub enum Storage {
 /// invalidated by any mutation ([`Self::scale_col`] /
 /// [`Self::storage_mut`]); numerics are identical either way (the sparse
 /// scan contract in [`crate::linalg::kernel::scan`]).
+///
+/// Under `--mem-budget` an out-of-core [`FileTiles`] store replaces the
+/// in-RAM mirror (DESIGN.md §13): the same row-major tiles stream from
+/// disk through a byte-capped LRU instead of costing a second nnz-sized
+/// copy. Scans through the tiles are bit-identical to the mirror and the
+/// gather path; on any I/O failure the store is poisoned and every scan
+/// permanently falls back to the always-resident CSC gather path — same
+/// bits, degraded speed, never a wrong answer.
 #[derive(Debug)]
 pub struct Design {
     storage: Storage,
     /// `None` inside = mirror unavailable (dense storage, empty matrix,
-    /// or `SFW_NO_MIRROR=1`); unset = not yet requested.
+    /// `SFW_NO_MIRROR=1`, or an attached tile store); unset = not yet
+    /// requested.
     mirror: OnceLock<Option<CsrMirror>>,
+    /// Out-of-core tile store ([`Self::attach_tiles`]); replaces the
+    /// mirror while attached.
+    tiles: Option<Arc<FileTiles>>,
 }
 
 impl Clone for Design {
     /// Clones the storage only; the clone rebuilds its mirror lazily on
-    /// first use (keeps a clone at 1× nnz until it actually scans).
+    /// first use (keeps a clone at 1× nnz until it actually scans). An
+    /// attached tile store is shared (`Arc`) — both clones stream through
+    /// the same LRU, which cannot affect results (scan bits are
+    /// cache-state-independent by the tile-order reduction contract).
     fn clone(&self) -> Self {
-        Self { storage: self.storage.clone(), mirror: OnceLock::new() }
+        Self {
+            storage: self.storage.clone(),
+            mirror: OnceLock::new(),
+            tiles: self.tiles.clone(),
+        }
     }
 }
 
@@ -62,11 +82,11 @@ pub const GATHER_NNZ_COST: f64 = 3.0;
 
 impl Design {
     pub fn dense(x: DenseMatrix) -> Self {
-        Self { storage: Storage::Dense(x), mirror: OnceLock::new() }
+        Self { storage: Storage::Dense(x), mirror: OnceLock::new(), tiles: None }
     }
 
     pub fn sparse(x: CscMatrix) -> Self {
-        Self { storage: Storage::Sparse(x), mirror: OnceLock::new() }
+        Self { storage: Storage::Sparse(x), mirror: OnceLock::new(), tiles: None }
     }
 
     #[inline]
@@ -74,27 +94,70 @@ impl Design {
         &self.storage
     }
 
-    /// Mutable storage access. Drops the CSR mirror (if built): the
-    /// mirror is a read-only derivative of the nonzeros and is rebuilt
-    /// lazily after any mutation.
+    /// Mutable storage access. Drops the CSR mirror (if built) and any
+    /// attached tile store: both are read-only derivatives of the
+    /// nonzeros and go stale on any mutation (the mirror is rebuilt
+    /// lazily; tiles must be re-attached from a fresh container).
     #[inline]
     pub fn storage_mut(&mut self) -> &mut Storage {
         let _ = self.mirror.take();
+        self.tiles = None;
         &mut self.storage
     }
 
     /// The row-major mirror of a sparse design, built on first call
     /// (O(nnz), one counting + one fill pass). `None` for dense storage,
-    /// empty matrices, and under `SFW_NO_MIRROR=1`.
+    /// empty matrices, under `SFW_NO_MIRROR=1`, and while a tile store is
+    /// attached (the store *is* the mirror, disk-resident — building the
+    /// in-RAM copy too would defeat the memory budget, even after a
+    /// poison-triggered fallback).
     pub fn mirror(&self) -> Option<&CsrMirror> {
         self.mirror
             .get_or_init(|| match &self.storage {
-                Storage::Sparse(x) if x.nnz() > 0 && !mirror_disabled() => {
+                Storage::Sparse(x)
+                    if x.nnz() > 0 && self.tiles.is_none() && !mirror_disabled() =>
+                {
                     Some(CsrMirror::build(x))
                 }
                 _ => None,
             })
             .as_ref()
+    }
+
+    /// Attach an out-of-core tile store; subsequent multi-column scans
+    /// stream it instead of the in-RAM mirror (which is dropped). The
+    /// store must describe exactly this design's sparse nonzeros.
+    pub fn attach_tiles(&mut self, tiles: Arc<FileTiles>) -> Result<(), String> {
+        let Storage::Sparse(x) = &self.storage else {
+            return Err("tile stores require sparse storage".into());
+        };
+        if (tiles.rows(), tiles.cols(), tiles.nnz()) != (x.rows(), x.cols(), x.nnz()) {
+            return Err(format!(
+                "tile store geometry {}×{} ({} nnz) does not match the design {}×{} \
+                 ({} nnz)",
+                tiles.rows(),
+                tiles.cols(),
+                tiles.nnz(),
+                x.rows(),
+                x.cols(),
+                x.nnz()
+            ));
+        }
+        let _ = self.mirror.take();
+        self.tiles = Some(tiles);
+        Ok(())
+    }
+
+    /// The attached tile store, when it is usable for scans: present, not
+    /// poisoned by an earlier I/O failure, and not opted out via
+    /// `SFW_NO_MIRROR=1` (which pins **every** sparse scan — mirror or
+    /// tiles — to the per-column gather path).
+    pub fn file_tiles(&self) -> Option<Arc<FileTiles>> {
+        let ft = self.tiles.as_ref()?;
+        if ft.is_poisoned() || mirror_disabled() {
+            return None;
+        }
+        Some(Arc::clone(ft))
     }
 
     /// κ-crossover of the sparse scan engine: whether streaming the whole
@@ -260,7 +323,15 @@ impl Design {
             Storage::Dense(x) => multi_dot_dense(x, Cols::Idx(cols), v, out),
             Storage::Sparse(x) => {
                 if self.mirror_profitable(cols.len()) {
-                    if let Some(m) = self.mirror() {
+                    if let Some(ft) = self.file_tiles() {
+                        match scan_multi_dot(&ft, Cols::Idx(cols), v, out, scratch) {
+                            Ok(()) => return,
+                            // poison + fall through: the gather path
+                            // recomputes the identical bits from the
+                            // always-resident CSC
+                            Err(e) => ft.poison(&e),
+                        }
+                    } else if let Some(m) = self.mirror() {
                         return mirror_multi_dot(m, Cols::Idx(cols), v, out, scratch);
                     }
                 }
@@ -279,7 +350,12 @@ impl Design {
             Storage::Sparse(x) => {
                 let p = x.cols();
                 if self.mirror_profitable(p) {
-                    if let Some(m) = self.mirror() {
+                    if let Some(ft) = self.file_tiles() {
+                        match scan_multi_dot(&ft, Cols::All(p), v, out, scratch) {
+                            Ok(()) => return,
+                            Err(e) => ft.poison(&e),
+                        }
+                    } else if let Some(m) = self.mirror() {
                         return mirror_multi_dot(m, Cols::All(p), v, out, scratch);
                     }
                 }
@@ -300,9 +376,12 @@ impl Design {
     /// [`CscMatrix::scale_col`]: widen to f64 exactly, one f64 multiply,
     /// one rounding back to f32. Invalidates the CSR mirror (rebuilt
     /// lazily — standardization runs before any scan, so in practice the
-    /// mirror is built exactly once, after the last scale pass).
+    /// mirror is built exactly once, after the last scale pass) and drops
+    /// any attached tile store (stale after mutation; tiles are attached
+    /// after standardization precisely so this never fires in practice).
     pub fn scale_col(&mut self, j: usize, s: f64) {
         let _ = self.mirror.take();
+        self.tiles = None;
         match &mut self.storage {
             Storage::Dense(x) => {
                 if s == 1.0 {
@@ -514,6 +593,87 @@ mod tests {
             .ceil() as usize;
         assert!(!x.mirror_profitable(threshold.saturating_sub(1)));
         assert!(x.mirror_profitable(threshold + 1));
+    }
+
+    #[test]
+    fn tile_store_lifecycle_and_poison_fallback() {
+        use crate::linalg::tiles::{
+            fnv1a64, FileTiles, MemReader, TileData, TileError, TileMeta,
+        };
+
+        fn mem_tiles(x: &CscMatrix) -> FileTiles {
+            let mirror = CsrMirror::build(x);
+            let mut bytes = Vec::new();
+            let mut metas = Vec::new();
+            for t in 0..mirror.n_tiles() {
+                let (lo, hi) = mirror.tile_rows(t);
+                let row_ptr = mirror.row_ptr();
+                let base = row_ptr[lo];
+                let row_off: Vec<u32> =
+                    row_ptr[lo..=hi].iter().map(|&r| (r - base) as u32).collect();
+                let entries = &mirror.entries()[row_ptr[lo]..row_ptr[hi]];
+                let chunk = TileData::encode_chunk(&row_off, entries);
+                metas.push(TileMeta {
+                    offset: bytes.len() as u64,
+                    byte_len: chunk.len() as u64,
+                    nnz: entries.len() as u64,
+                    checksum: fnv1a64(&chunk),
+                });
+                bytes.extend_from_slice(&chunk);
+            }
+            FileTiles::new(
+                x.rows(),
+                x.cols(),
+                x.nnz(),
+                metas,
+                Box::new(MemReader(bytes)),
+                usize::MAX,
+                None,
+            )
+            .unwrap()
+        }
+
+        let (_, mut xs) = dense_and_sparse_pair(40, 30, 7);
+        let Storage::Sparse(csc) = xs.storage() else { panic!() };
+        let csc = csc.clone();
+        let ft = std::sync::Arc::new(mem_tiles(&csc));
+        // geometry mismatch is rejected
+        let (_, mut other) = dense_and_sparse_pair(41, 30, 7);
+        assert!(other.attach_tiles(std::sync::Arc::clone(&ft)).is_err());
+        xs.attach_tiles(std::sync::Arc::clone(&ft)).unwrap();
+        // the in-RAM mirror never builds while tiles are attached
+        assert!(xs.mirror().is_none());
+
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let v: Vec<f64> = (0..40).map(|_| rng.gaussian()).collect();
+        let cols: Vec<usize> = (0..30).collect();
+        let mut scratch = KernelScratch::new();
+        let mut gather = vec![0.0; cols.len()];
+        multi_dot_sparse(&csc, Cols::Idx(&cols), &v, &mut gather, &mut scratch);
+
+        let mut via_tiles = vec![0.0; cols.len()];
+        xs.multi_col_dot(&cols, &v, &mut via_tiles, &mut scratch);
+        for (a, b) in via_tiles.iter().zip(gather.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        if crate::linalg::csr::mirror_disabled() {
+            // SFW_NO_MIRROR pins every scan to the gather path
+            assert!(xs.file_tiles().is_none());
+            return;
+        }
+        assert!(xs.file_tiles().is_some());
+        assert!(ft.stats().misses > 0, "the scan must actually stream tiles");
+        // poisoning routes scans to the gather path, identical bits
+        ft.poison(&TileError::Truncated { tile: 0 });
+        assert!(xs.file_tiles().is_none());
+        let mut after = vec![0.0; cols.len()];
+        xs.multi_col_dot(&cols, &v, &mut after, &mut scratch);
+        for (a, b) in after.iter().zip(gather.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // mutation drops the store entirely
+        xs.scale_col(0, 2.0);
+        assert!(xs.file_tiles().is_none());
     }
 
     #[test]

@@ -8,6 +8,7 @@ pub mod kernel;
 pub mod ops;
 pub mod sparse;
 pub mod standardize;
+pub mod tiles;
 
 pub use csr::CsrMirror;
 pub use dense::DenseMatrix;
@@ -15,3 +16,4 @@ pub use design::{ColumnCache, Design, Storage};
 pub use kernel::{KernelOps, KernelScratch};
 pub use sparse::{CscBuilder, CscMatrix};
 pub use standardize::{standardize, Standardization};
+pub use tiles::{FileTiles, TileError};

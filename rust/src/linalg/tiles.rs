@@ -1,0 +1,1128 @@
+//! Out-of-core tile store: the file-backed twin of the CSR mirror
+//! (DESIGN.md §13, `docs/adr/ADR-006-out-of-core-tiles.md`).
+//!
+//! [`crate::linalg::CsrMirror`] costs a second in-RAM copy of the
+//! nonzeros. For designs near or beyond physical RAM that copy is the
+//! difference between running and thrashing, so the chunked `.sfwbin` v2
+//! snapshot (`crate::data::cache`) stores the same row-major
+//! [`ROW_TILE`]-tiles on disk and this module streams them back on
+//! demand: a byte-capped LRU of decoded tiles ([`FileTiles`]), explicit
+//! checksummed reads through a [`ChunkReader`] (fault-injectable — see
+//! `crate::testing::faulty_store`), and a double-buffered prefetch
+//! pipeline so the scan of tile `t` overlaps the read+decode of tile
+//! `t+1`.
+//!
+//! ## Determinism
+//!
+//! The sparse scan contract ([`crate::linalg::kernel::scan`]) fixes the
+//! result of every multi-column scan as per-tile f64 partials reduced in
+//! global tile order, one rounding per multiply and per add, no FMA.
+//! [`scan_multi_dot`] performs exactly that sequence — the decoded tile
+//! holds the identical `(col, val)` entries in the identical row-major
+//! order as the in-core mirror, and partials are merged in ascending
+//! tile order regardless of which tiles were cached, evicted, or
+//! prefetched. File-backed scans are therefore **bit-identical** to
+//! [`mirror_multi_dot`][crate::linalg::kernel::scan::mirror_multi_dot]
+//! and to the per-column gather path, a property enforced by
+//! `rust/tests/golden_traces.rs` and `rust/tests/fault_injection.rs`.
+//!
+//! ## Failure model
+//!
+//! I/O never panics and never silently corrupts a result: every failure
+//! surfaces as a typed [`TileError`]. Transient (`EINTR`-style)
+//! interruptions are retried up to [`TRANSIENT_RETRY_CAP`] times;
+//! truncated or checksum-failing chunks are rejected before any byte is
+//! interpreted. Callers above the store ([`crate::linalg::Design`])
+//! poison the store on first error and fall back to the always-resident
+//! CSC gather path — same bits, degraded speed.
+
+use super::kernel::scan::{mirror_clear_slots, mirror_prepare_slots, Cols, Slots};
+use super::kernel::{KernelScratch, ROW_TILE};
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Prefetch pipeline depth: the I/O thread stays at most this many
+/// decoded tiles ahead of the scan (double buffering — one tile being
+/// scanned, one in flight).
+pub const PREFETCH_DEPTH: usize = 2;
+
+/// How many consecutive transient (`ErrorKind::Interrupted`) read errors
+/// are retried before a read gives up with
+/// [`TileError::TransientExhausted`].
+pub const TRANSIENT_RETRY_CAP: u32 = 100;
+
+/// Typed failure of a tile read — the error contract of the fault
+/// injection suite: every injected fault must surface as one of these,
+/// never as a panic and never as a silently wrong scan result.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TileError {
+    /// The underlying reader failed with a non-transient I/O error.
+    Io {
+        /// Tile index being read.
+        tile: usize,
+        /// Stringified `std::io::Error`.
+        msg: String,
+    },
+    /// End of file inside a tile chunk (the snapshot was truncated after
+    /// its directory was written, or the medium lost data).
+    Truncated {
+        /// Tile index being read.
+        tile: usize,
+    },
+    /// The chunk bytes fail validation: checksum mismatch, malformed row
+    /// offsets, or an out-of-range column index.
+    Corrupt {
+        /// Tile index being read.
+        tile: usize,
+        /// What failed to validate.
+        msg: String,
+    },
+    /// More than [`TRANSIENT_RETRY_CAP`] consecutive `EINTR`-style
+    /// interruptions on one read.
+    TransientExhausted {
+        /// Tile index being read.
+        tile: usize,
+        /// Number of transient errors absorbed before giving up.
+        retries: u32,
+    },
+}
+
+impl std::fmt::Display for TileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TileError::Io { tile, msg } => write!(f, "tile {tile}: I/O error: {msg}"),
+            TileError::Truncated { tile } => write!(f, "tile {tile}: chunk truncated"),
+            TileError::Corrupt { tile, msg } => write!(f, "tile {tile}: corrupt chunk: {msg}"),
+            TileError::TransientExhausted { tile, retries } => {
+                write!(f, "tile {tile}: gave up after {retries} transient I/O errors")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TileError {}
+
+/// Positioned reads over a tile container. The one seam the fault
+/// injection layer wraps: `crate::testing::faulty_store::FaultyReader`
+/// decorates any `ChunkReader` with short reads, truncation, transient
+/// errors and corruption.
+///
+/// Implementations may return fewer bytes than requested (short read);
+/// the store loops. Returning `Ok(0)` with `buf` non-empty means end of
+/// container.
+pub trait ChunkReader: Send + Sync {
+    /// Read up to `buf.len()` bytes starting at absolute `offset`,
+    /// returning how many were read.
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<usize>;
+
+    /// Total container length in bytes, when the backing store knows it
+    /// (files and memory buffers do). `None` disables whole-container
+    /// length validation at open time; truncation then surfaces lazily
+    /// as [`TileError::Truncated`] on the first affected read.
+    fn len(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// [`ChunkReader`] over an open file (portable seek+read under a mutex;
+/// the prefetch pipeline has a single I/O thread, so the lock is
+/// uncontended in steady state).
+pub struct FsReader {
+    file: Mutex<std::fs::File>,
+}
+
+impl FsReader {
+    /// Open `path` for positioned reads.
+    pub fn open(path: &std::path::Path) -> std::io::Result<FsReader> {
+        Ok(FsReader { file: Mutex::new(std::fs::File::open(path)?) })
+    }
+}
+
+impl ChunkReader for FsReader {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<usize> {
+        let mut f = self.file.lock().unwrap();
+        f.seek(SeekFrom::Start(offset))?;
+        f.read(buf)
+    }
+
+    fn len(&self) -> Option<u64> {
+        self.file.lock().unwrap().metadata().ok().map(|m| m.len())
+    }
+}
+
+/// [`ChunkReader`] over an in-memory byte buffer — unit tests, the fault
+/// injection suite, and the page-cache-resident arm of the out-of-core
+/// bench.
+pub struct MemReader(
+    /// The container bytes.
+    pub Vec<u8>,
+);
+
+impl ChunkReader for MemReader {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<usize> {
+        let len = self.0.len() as u64;
+        if offset >= len {
+            return Ok(0);
+        }
+        let start = offset as usize;
+        let n = buf.len().min(self.0.len() - start);
+        buf[..n].copy_from_slice(&self.0[start..start + n]);
+        Ok(n)
+    }
+
+    fn len(&self) -> Option<u64> {
+        Some(self.0.len() as u64)
+    }
+}
+
+/// Fill `buf` from `reader` at `offset`, absorbing short reads and up to
+/// [`TRANSIENT_RETRY_CAP`] consecutive transient interruptions
+/// (`retries` counts every absorbed interruption, for the stats line).
+pub(crate) fn read_exact_at(
+    reader: &dyn ChunkReader,
+    mut offset: u64,
+    buf: &mut [u8],
+    tile: usize,
+    retries: &AtomicU64,
+) -> Result<(), TileError> {
+    let mut pos = 0usize;
+    let mut transient = 0u32;
+    while pos < buf.len() {
+        match reader.read_at(offset, &mut buf[pos..]) {
+            Ok(0) => return Err(TileError::Truncated { tile }),
+            Ok(k) => {
+                pos += k;
+                offset += k as u64;
+                transient = 0;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {
+                transient += 1;
+                retries.fetch_add(1, Ordering::Relaxed);
+                if transient > TRANSIENT_RETRY_CAP {
+                    return Err(TileError::TransientExhausted { tile, retries: transient });
+                }
+            }
+            Err(e) => return Err(TileError::Io { tile, msg: e.to_string() }),
+        }
+    }
+    Ok(())
+}
+
+/// FNV-1a 64-bit hash — the chunk checksum of the `.sfwbin` v2 layout.
+/// Not cryptographic; it catches the bit-rot / torn-write / truncation
+/// class of faults the robustness suite injects, at streaming speed with
+/// zero dependencies.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// One row in the snapshot's tile directory: where tile `t`'s chunk
+/// lives and how to validate it before decoding.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TileMeta {
+    /// Absolute byte offset of the chunk in the container.
+    pub offset: u64,
+    /// Chunk length in bytes (must equal [`chunk_len`] for the tile's
+    /// geometry).
+    pub byte_len: u64,
+    /// Nonzeros in the tile.
+    pub nnz: u64,
+    /// [`fnv1a64`] over the raw chunk bytes.
+    pub checksum: u64,
+}
+
+/// 8-byte alignment padding used by every `.sfwbin` section and chunk.
+#[inline]
+pub(crate) fn align8(n: usize) -> usize {
+    (n + 7) & !7
+}
+
+/// Encoded byte length of a tile chunk covering `rows_t` rows with
+/// `nnz_t` nonzeros: relative row offsets (`(rows_t+1) × u32`, padded to
+/// 8 bytes) followed by interleaved `(u32 col, f32 val)` entries.
+#[inline]
+pub fn chunk_len(rows_t: usize, nnz_t: usize) -> usize {
+    align8(4 * (rows_t + 1)) + 8 * nnz_t
+}
+
+/// Number of [`ROW_TILE`] tiles covering `rows` rows (0 for an empty
+/// matrix — mirrors `CsrMirror::n_tiles`).
+#[inline]
+pub fn n_tiles_for(rows: usize) -> usize {
+    if rows == 0 {
+        0
+    } else {
+        (rows + ROW_TILE - 1) / ROW_TILE
+    }
+}
+
+/// A decoded row-tile: the same row-major `(u32 col, f32 val)` entries
+/// the in-core mirror holds for rows `[first_row, first_row + rows_t)`,
+/// with row offsets relative to the tile start.
+pub struct TileData {
+    /// Absolute index of the tile's first row.
+    first_row: usize,
+    /// `row_off[i]..row_off[i+1]` indexes `entries` for relative row `i`;
+    /// len = rows_t + 1, `row_off[0] == 0`, last == nnz of the tile.
+    row_off: Vec<u32>,
+    /// Interleaved `(column, value)` pairs, row-major, ascending column
+    /// within each row (inherited from the CSC-built mirror).
+    entries: Vec<(u32, f32)>,
+}
+
+impl TileData {
+    /// Serialize a tile chunk: `row_off` (already relative, len rows_t+1)
+    /// then entries, 8-aligned between sections. Inverse of
+    /// [`TileData::decode`] with no scaling.
+    pub(crate) fn encode_chunk(row_off: &[u32], entries: &[(u32, f32)]) -> Vec<u8> {
+        let off_bytes = 4 * row_off.len();
+        let mut buf = Vec::with_capacity(align8(off_bytes) + 8 * entries.len());
+        for &o in row_off {
+            buf.extend_from_slice(&o.to_le_bytes());
+        }
+        buf.resize(align8(off_bytes), 0);
+        for &(c, x) in entries {
+            buf.extend_from_slice(&c.to_le_bytes());
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        buf
+    }
+
+    /// Decode and validate one chunk. `scale`, when present, applies the
+    /// standardization column scales with the exact `scale_col` formula —
+    /// widen to f64, one multiply, one rounding back to f32, `s == 1.0`
+    /// skipped — so decoded tiles bit-match a mirror built *after*
+    /// standardization from a snapshot written *before* it.
+    ///
+    /// Every column index is bounds-checked against `cols` here; the
+    /// scan's `get_unchecked` scatter relies on that.
+    pub(crate) fn decode(
+        buf: &[u8],
+        first_row: usize,
+        rows_t: usize,
+        nnz_t: usize,
+        cols: usize,
+        scale: Option<&[f64]>,
+    ) -> Result<TileData, String> {
+        let expected = chunk_len(rows_t, nnz_t);
+        if buf.len() != expected {
+            return Err(format!("chunk is {} bytes, expected {expected}", buf.len()));
+        }
+        let mut row_off = Vec::with_capacity(rows_t + 1);
+        for i in 0..=rows_t {
+            let b: [u8; 4] = buf[4 * i..4 * i + 4].try_into().unwrap();
+            row_off.push(u32::from_le_bytes(b));
+        }
+        if row_off[0] != 0 {
+            return Err("row offsets do not start at 0".into());
+        }
+        if row_off.windows(2).any(|w| w[1] < w[0]) {
+            return Err("row offsets not monotone".into());
+        }
+        if row_off[rows_t] as usize != nnz_t {
+            return Err(format!(
+                "row offsets end at {} but directory says {nnz_t} nonzeros",
+                row_off[rows_t]
+            ));
+        }
+        let base = align8(4 * (rows_t + 1));
+        let mut entries = Vec::with_capacity(nnz_t);
+        for k in 0..nnz_t {
+            let o = base + 8 * k;
+            let c = u32::from_le_bytes(buf[o..o + 4].try_into().unwrap());
+            if c as usize >= cols {
+                return Err(format!("entry column {c} out of range (p = {cols})"));
+            }
+            let x = f32::from_le_bytes(buf[o + 4..o + 8].try_into().unwrap());
+            let x = match scale {
+                Some(s) => {
+                    let sc = s[c as usize];
+                    if sc == 1.0 {
+                        x
+                    } else {
+                        (x as f64 * sc) as f32
+                    }
+                }
+                None => x,
+            };
+            entries.push((c, x));
+        }
+        Ok(TileData { first_row, row_off, entries })
+    }
+
+    /// Resident-size estimate charged against the LRU byte budget.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<TileData>() + 4 * self.row_off.len() + 8 * self.entries.len()
+    }
+
+    /// Nonzeros in the tile.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+}
+
+/// Counters of one [`FileTiles`] store, snapshot via
+/// [`FileTiles::stats`] (bench artifacts, LRU tests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileStats {
+    /// Tile requests served from the LRU.
+    pub hits: u64,
+    /// Tile requests that went to the reader.
+    pub misses: u64,
+    /// Tiles evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Transient read errors absorbed by retry.
+    pub retries: u64,
+    /// Raw chunk bytes read from the container.
+    pub bytes_read: u64,
+    /// Decoded bytes currently resident in the LRU.
+    pub resident_bytes: u64,
+    /// Tiles currently resident in the LRU.
+    pub resident_tiles: u64,
+}
+
+#[derive(Default)]
+struct StatCounters {
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    retries: AtomicU64,
+    bytes_read: AtomicU64,
+}
+
+struct Lru {
+    /// tile index → (decoded tile, last-touch tick)
+    map: HashMap<usize, (Arc<TileData>, u64)>,
+    /// Σ `approx_bytes` of resident tiles.
+    bytes: usize,
+    /// Monotone touch counter (exact LRU ordering).
+    tick: u64,
+}
+
+/// File-backed tile store: the disk-resident twin of
+/// [`CsrMirror`][crate::linalg::CsrMirror], holding at most
+/// `mem_budget` bytes of decoded tiles in an LRU (the most recently
+/// touched tile is always kept, so the budget can be smaller than one
+/// tile and the store still streams).
+///
+/// Cheap to share (`Arc<FileTiles>` lives inside
+/// [`crate::linalg::Design`]); all methods take `&self` and are
+/// thread-safe.
+pub struct FileTiles {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    metas: Vec<TileMeta>,
+    reader: Box<dyn ChunkReader>,
+    /// Standardization column scales applied at decode time (`None` when
+    /// the container already holds standardized values).
+    col_scale: Option<Arc<Vec<f64>>>,
+    budget: usize,
+    cache: Mutex<Lru>,
+    stats: StatCounters,
+    /// Set on first I/O error by [`FileTiles::poison`]; the owning
+    /// `Design` then routes every scan to the in-RAM gather path.
+    poisoned: AtomicBool,
+}
+
+impl std::fmt::Debug for FileTiles {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FileTiles")
+            .field("rows", &self.rows)
+            .field("cols", &self.cols)
+            .field("nnz", &self.nnz)
+            .field("n_tiles", &self.metas.len())
+            .field("budget", &self.budget)
+            .field("poisoned", &self.poisoned.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl FileTiles {
+    /// Assemble a store over `reader`. `metas` must cover
+    /// [`n_tiles_for`]`(rows)` tiles whose nonzero counts sum to `nnz`;
+    /// `col_scale`, when present, must have one entry per column.
+    pub fn new(
+        rows: usize,
+        cols: usize,
+        nnz: usize,
+        metas: Vec<TileMeta>,
+        reader: Box<dyn ChunkReader>,
+        mem_budget: usize,
+        col_scale: Option<Arc<Vec<f64>>>,
+    ) -> Result<FileTiles, String> {
+        if metas.len() != n_tiles_for(rows) {
+            return Err(format!(
+                "tile directory has {} entries, expected {} for {rows} rows",
+                metas.len(),
+                n_tiles_for(rows)
+            ));
+        }
+        let total: u64 = metas.iter().map(|m| m.nnz).sum();
+        if total != nnz as u64 {
+            return Err(format!("tile directory nnz {total} != matrix nnz {nnz}"));
+        }
+        for (t, m) in metas.iter().enumerate() {
+            let rows_t = ((t + 1) * ROW_TILE).min(rows) - t * ROW_TILE;
+            if m.nnz > nnz as u64 || m.byte_len != chunk_len(rows_t, m.nnz as usize) as u64 {
+                return Err(format!(
+                    "tile {t} directory entry is inconsistent with its geometry \
+                     ({rows_t} rows, {} nnz, {} bytes)",
+                    m.nnz, m.byte_len
+                ));
+            }
+        }
+        if let Some(s) = &col_scale {
+            if s.len() != cols {
+                return Err(format!("col_scale has {} entries, expected {cols}", s.len()));
+            }
+        }
+        Ok(FileTiles {
+            rows,
+            cols,
+            nnz,
+            metas,
+            reader,
+            col_scale,
+            budget: mem_budget.max(1),
+            cache: Mutex::new(Lru { map: HashMap::new(), bytes: 0, tick: 0 }),
+            stats: StatCounters::default(),
+            poisoned: AtomicBool::new(false),
+        })
+    }
+
+    /// Number of rows m.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns p.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total nonzeros.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Number of [`ROW_TILE`] row blocks.
+    #[inline]
+    pub fn n_tiles(&self) -> usize {
+        self.metas.len()
+    }
+
+    /// Row range `[lo, hi)` of tile `t`.
+    #[inline]
+    pub fn tile_rows(&self, t: usize) -> (usize, usize) {
+        (t * ROW_TILE, ((t + 1) * ROW_TILE).min(self.rows))
+    }
+
+    /// The LRU byte cap this store was opened with.
+    #[inline]
+    pub fn mem_budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Whether a scan through this store has failed (see
+    /// [`FileTiles::poison`]).
+    pub fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::Relaxed)
+    }
+
+    /// Mark the store failed after `err`, warning once on stderr. The
+    /// owning [`crate::linalg::Design`] checks [`Self::is_poisoned`] and
+    /// permanently falls back to the in-RAM gather path — which computes
+    /// the identical bits, so a mid-run fallback never changes results.
+    pub fn poison(&self, err: &TileError) {
+        if !self.poisoned.swap(true, Ordering::Relaxed) {
+            eprintln!(
+                "warning: out-of-core tile store disabled after I/O failure \
+                 (scans fall back to the in-memory gather path): {err}"
+            );
+        }
+    }
+
+    /// Counter snapshot (plus current LRU residency).
+    pub fn stats(&self) -> TileStats {
+        let lru = self.cache.lock().unwrap();
+        TileStats {
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            retries: self.stats.retries.load(Ordering::Relaxed),
+            bytes_read: self.stats.bytes_read.load(Ordering::Relaxed),
+            resident_bytes: lru.bytes as u64,
+            resident_tiles: lru.map.len() as u64,
+        }
+    }
+
+    /// Fetch tile `t`: LRU hit, or read + checksum + decode + insert
+    /// (evicting least-recently-touched tiles, never `t` itself, until
+    /// the byte budget holds). The returned `Arc` stays valid after
+    /// eviction — eviction only drops the cache's reference.
+    pub fn tile(&self, t: usize) -> Result<Arc<TileData>, TileError> {
+        {
+            let mut lru = self.cache.lock().unwrap();
+            lru.tick += 1;
+            let tick = lru.tick;
+            if let Some(entry) = lru.map.get_mut(&t) {
+                entry.1 = tick;
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&entry.0));
+            }
+        }
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        let meta = self.metas[t];
+        let mut buf = vec![0u8; meta.byte_len as usize];
+        read_exact_at(self.reader.as_ref(), meta.offset, &mut buf, t, &self.stats.retries)?;
+        self.stats.bytes_read.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        if fnv1a64(&buf) != meta.checksum {
+            return Err(TileError::Corrupt { tile: t, msg: "chunk checksum mismatch".into() });
+        }
+        let (lo, hi) = self.tile_rows(t);
+        let scale = self.col_scale.as_ref().map(|s| s.as_slice());
+        let td = TileData::decode(&buf, lo, hi - lo, meta.nnz as usize, self.cols, scale)
+            .map_err(|msg| TileError::Corrupt { tile: t, msg })?;
+        let td = Arc::new(td);
+        let sz = td.approx_bytes();
+        let mut lru = self.cache.lock().unwrap();
+        lru.tick += 1;
+        let tick = lru.tick;
+        if lru.map.insert(t, (Arc::clone(&td), tick)).is_none() {
+            lru.bytes += sz;
+        }
+        while lru.bytes > self.budget && lru.map.len() > 1 {
+            let victim = lru
+                .map
+                .iter()
+                .filter(|&(&k, _)| k != t)
+                .min_by_key(|(_, e)| e.1)
+                .map(|(&k, _)| k);
+            let Some(k) = victim else { break };
+            if let Some((old, _)) = lru.map.remove(&k) {
+                lru.bytes = lru.bytes.saturating_sub(old.approx_bytes());
+                self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        Ok(td)
+    }
+}
+
+/// Scatter-accumulate one decoded tile into `acc` — the file-backed
+/// replica of `mirror_scan_tile`, instruction-for-instruction: rows in
+/// order, `q[i]` loaded once per row, empty rows and `q[i] == 0` rows
+/// skipped (bit-safe), one f64 multiply + add per entry.
+fn scan_tile_data(td: &TileData, slots: Slots<'_>, v: &[f64], acc: &mut [f64]) {
+    let rows_t = td.row_off.len() - 1;
+    match slots {
+        Slots::Identity => {
+            for ri in 0..rows_t {
+                let (a, b) = (td.row_off[ri] as usize, td.row_off[ri + 1] as usize);
+                if a == b {
+                    continue;
+                }
+                let qi = v[td.first_row + ri];
+                if qi == 0.0 {
+                    continue;
+                }
+                for &(c, x) in &td.entries[a..b] {
+                    // safety: c < cols == acc.len(), validated at decode
+                    unsafe {
+                        *acc.get_unchecked_mut(c as usize) += x as f64 * qi;
+                    }
+                }
+            }
+        }
+        Slots::Map { map, bits } => {
+            for ri in 0..rows_t {
+                let (a, b) = (td.row_off[ri] as usize, td.row_off[ri + 1] as usize);
+                if a == b {
+                    continue;
+                }
+                let qi = v[td.first_row + ri];
+                if qi == 0.0 {
+                    continue;
+                }
+                for &(c, x) in &td.entries[a..b] {
+                    let c = c as usize;
+                    // safety: c < cols ≤ 64·bits.len() == map.len() bound
+                    // (prepare_slots sizes both to p; decode bounds c)
+                    let w = unsafe { *bits.get_unchecked(c >> 6) };
+                    if (w >> (c & 63)) & 1 != 0 {
+                        let s = unsafe { *map.get_unchecked(c) } as usize;
+                        unsafe {
+                            *acc.get_unchecked_mut(s) += x as f64 * qi;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Sparse multi-dot through the file-backed tile store:
+/// `out[k] = colsₖ · v`, bit-identical to
+/// [`mirror_multi_dot`][crate::linalg::kernel::scan::mirror_multi_dot]
+/// on the same matrix (per-slot tile partials reduced into `out` in tile
+/// order). Tiles are fetched serially through the LRU; on any
+/// [`TileError`] the partially-written `out` must be discarded by the
+/// caller (the `Design` fallback recomputes it on the gather path).
+pub fn scan_multi_dot(
+    ft: &FileTiles,
+    cols: Cols<'_>,
+    v: &[f64],
+    out: &mut [f64],
+    scratch: &mut KernelScratch,
+) -> Result<(), TileError> {
+    scan_multi_dot_impl(ft, cols, v, out, scratch, false)
+}
+
+/// [`scan_multi_dot`] with the double-buffered prefetch pipeline: a
+/// scoped I/O thread reads + checksums + decodes tiles up to
+/// [`PREFETCH_DEPTH`] ahead while the calling thread scans, so compute
+/// overlaps I/O. The reduction still happens on the calling thread in
+/// ascending tile order — results are bit-identical to the serial form.
+pub fn scan_multi_dot_prefetch(
+    ft: &FileTiles,
+    cols: Cols<'_>,
+    v: &[f64],
+    out: &mut [f64],
+    scratch: &mut KernelScratch,
+) -> Result<(), TileError> {
+    scan_multi_dot_impl(ft, cols, v, out, scratch, true)
+}
+
+fn scan_multi_dot_impl(
+    ft: &FileTiles,
+    cols: Cols<'_>,
+    v: &[f64],
+    out: &mut [f64],
+    scratch: &mut KernelScratch,
+    prefetch: bool,
+) -> Result<(), TileError> {
+    let n = cols.len();
+    debug_assert_eq!(out.len(), n);
+    debug_assert_eq!(v.len(), ft.rows());
+    out.fill(0.0);
+    if n == 0 || ft.nnz() == 0 {
+        return Ok(());
+    }
+    let idx: Option<&[usize]> = match cols {
+        Cols::All(p) => {
+            debug_assert_eq!(p, ft.cols());
+            None
+        }
+        Cols::Idx(s) => Some(s),
+    };
+    if let Some(s) = idx {
+        mirror_prepare_slots(s, ft.cols(), scratch);
+    }
+    let mut tile_acc = std::mem::take(&mut scratch.tile_acc);
+    tile_acc.clear();
+    tile_acc.resize(n, 0.0);
+    let slots = match idx {
+        None => Slots::Identity,
+        Some(_) => Slots::Map { map: &scratch.slot_map, bits: &scratch.slot_bits },
+    };
+    let result = if prefetch && ft.n_tiles() > 1 {
+        scan_tiles_prefetched(ft, slots, v, out, &mut tile_acc)
+    } else {
+        scan_tiles_serial(ft, slots, v, out, &mut tile_acc)
+    };
+    scratch.tile_acc = tile_acc;
+    if let Some(s) = idx {
+        mirror_clear_slots(s, scratch);
+    }
+    result
+}
+
+fn scan_tiles_serial(
+    ft: &FileTiles,
+    slots: Slots<'_>,
+    v: &[f64],
+    out: &mut [f64],
+    tile_acc: &mut [f64],
+) -> Result<(), TileError> {
+    for t in 0..ft.n_tiles() {
+        let td = ft.tile(t)?;
+        scan_tile_data(&td, slots, v, tile_acc);
+        for (o, a) in out.iter_mut().zip(tile_acc.iter_mut()) {
+            *o += *a;
+            *a = 0.0;
+        }
+    }
+    Ok(())
+}
+
+fn scan_tiles_prefetched(
+    ft: &FileTiles,
+    slots: Slots<'_>,
+    v: &[f64],
+    out: &mut [f64],
+    tile_acc: &mut [f64],
+) -> Result<(), TileError> {
+    std::thread::scope(|scope| {
+        let (tx, rx) =
+            std::sync::mpsc::sync_channel::<Result<Arc<TileData>, TileError>>(PREFETCH_DEPTH);
+        scope.spawn(move || {
+            for t in 0..ft.n_tiles() {
+                let r = ft.tile(t);
+                let stop = r.is_err();
+                if tx.send(r).is_err() || stop {
+                    return;
+                }
+            }
+        });
+        // single producer ⇒ the channel delivers tiles in ascending
+        // order, so this reduction is the contract's global tile order
+        for r in rx.iter() {
+            let td = r?;
+            scan_tile_data(&td, slots, v, tile_acc);
+            for (o, a) in out.iter_mut().zip(tile_acc.iter_mut()) {
+                *o += *a;
+                *a = 0.0;
+            }
+        }
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::csr::CsrMirror;
+    use crate::linalg::kernel::scan::{mirror_multi_dot, multi_dot_sparse};
+    use crate::linalg::sparse::{CscBuilder, CscMatrix};
+    use crate::util::rng::Xoshiro256;
+
+    /// Build an in-memory v2-style tile container straight from a mirror
+    /// (the data-layer writer in `data::cache` produces the same chunks
+    /// inside the full snapshot container).
+    fn mem_tiles(x: &CscMatrix, budget: usize) -> FileTiles {
+        let mirror = CsrMirror::build(x);
+        let mut bytes = Vec::new();
+        let mut metas = Vec::new();
+        for t in 0..mirror.n_tiles() {
+            let (lo, hi) = mirror.tile_rows(t);
+            let row_ptr = mirror.row_ptr();
+            let base = row_ptr[lo];
+            let row_off: Vec<u32> =
+                row_ptr[lo..=hi].iter().map(|&r| (r - base) as u32).collect();
+            let entries = &mirror.entries()[row_ptr[lo]..row_ptr[hi]];
+            let chunk = TileData::encode_chunk(&row_off, entries);
+            metas.push(TileMeta {
+                offset: bytes.len() as u64,
+                byte_len: chunk.len() as u64,
+                nnz: entries.len() as u64,
+                checksum: fnv1a64(&chunk),
+            });
+            bytes.extend_from_slice(&chunk);
+        }
+        FileTiles::new(
+            x.rows(),
+            x.cols(),
+            x.nnz(),
+            metas,
+            Box::new(MemReader(bytes)),
+            budget,
+            None,
+        )
+        .unwrap()
+    }
+
+    fn random_csc(m: usize, p: usize, seed: u64) -> CscMatrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut b = CscBuilder::new(m, p);
+        for j in 0..p {
+            for i in 0..m {
+                if rng.next_f64() < 0.01 || (i + 3 * j) % 1009 == 0 {
+                    b.push(i, j, rng.gaussian());
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn file_scan_is_bit_identical_to_mirror_and_gather() {
+        for m in [60usize, ROW_TILE + 101, 3 * ROW_TILE + 7] {
+            let p = 19;
+            let x = random_csc(m, p, 5);
+            let mirror = CsrMirror::build(&x);
+            let ft = mem_tiles(&x, usize::MAX);
+            let mut rng = Xoshiro256::seed_from_u64(9);
+            let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+            let mut scratch = KernelScratch::new();
+            for cols in [&[3usize][..], &[7, 0, 18, 2][..]] {
+                let mut a = vec![0.0; cols.len()];
+                let mut b = vec![0.0; cols.len()];
+                let mut c = vec![0.0; cols.len()];
+                let mut d = vec![0.0; cols.len()];
+                multi_dot_sparse(&x, Cols::Idx(cols), &v, &mut a, &mut scratch);
+                mirror_multi_dot(&mirror, Cols::Idx(cols), &v, &mut b, &mut scratch);
+                scan_multi_dot(&ft, Cols::Idx(cols), &v, &mut c, &mut scratch).unwrap();
+                scan_multi_dot_prefetch(&ft, Cols::Idx(cols), &v, &mut d, &mut scratch)
+                    .unwrap();
+                for k in 0..cols.len() {
+                    assert_eq!(a[k].to_bits(), b[k].to_bits(), "m={m} mirror k={k}");
+                    assert_eq!(a[k].to_bits(), c[k].to_bits(), "m={m} file k={k}");
+                    assert_eq!(a[k].to_bits(), d[k].to_bits(), "m={m} prefetch k={k}");
+                }
+            }
+            // full sweep through Cols::All
+            let mut a = vec![0.0; p];
+            let mut c = vec![0.0; p];
+            multi_dot_sparse(&x, Cols::All(p), &v, &mut a, &mut scratch);
+            scan_multi_dot(&ft, Cols::All(p), &v, &mut c, &mut scratch).unwrap();
+            for j in 0..p {
+                assert_eq!(a[j].to_bits(), c[j].to_bits(), "m={m} All col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_budget_streams_with_evictions_and_same_bits() {
+        let m = 3 * ROW_TILE + 7;
+        let x = random_csc(m, 11, 13);
+        // budget ≈ 1.5 tiles ⇒ the 4-tile sweep must evict every pass
+        let full = mem_tiles(&x, usize::MAX);
+        let one_tile = full.tile(0).unwrap().approx_bytes();
+        let ft = mem_tiles(&x, one_tile * 3 / 2);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cols: Vec<usize> = (0..11).collect();
+        let mut scratch = KernelScratch::new();
+        let mut want = vec![0.0; 11];
+        let mut got = vec![0.0; 11];
+        scan_multi_dot(&full, Cols::Idx(&cols), &v, &mut want, &mut scratch).unwrap();
+        for _ in 0..3 {
+            scan_multi_dot(&ft, Cols::Idx(&cols), &v, &mut got, &mut scratch).unwrap();
+            for j in 0..11 {
+                assert_eq!(want[j].to_bits(), got[j].to_bits());
+            }
+        }
+        let s = ft.stats();
+        assert!(s.evictions > 0, "tiny budget must evict: {s:?}");
+        assert!(s.resident_bytes <= ft.mem_budget() as u64, "budget respected: {s:?}");
+        // the unconstrained store re-reads nothing after the first sweep
+        scan_multi_dot(&full, Cols::Idx(&cols), &v, &mut got, &mut scratch).unwrap();
+        let sf = full.stats();
+        assert_eq!(sf.evictions, 0);
+        assert_eq!(sf.misses, 4);
+        assert!(sf.hits >= 4);
+    }
+
+    #[test]
+    fn checksum_and_decode_validation_reject_corruption() {
+        let x = random_csc(200, 7, 3);
+        let mirror = CsrMirror::build(&x);
+        let row_off: Vec<u32> = mirror.row_ptr().iter().map(|&r| r as u32).collect();
+        let chunk = TileData::encode_chunk(&row_off, mirror.entries());
+        // checksum mismatch
+        let meta = TileMeta {
+            offset: 0,
+            byte_len: chunk.len() as u64,
+            nnz: mirror.nnz() as u64,
+            checksum: fnv1a64(&chunk) ^ 1,
+        };
+        let ft = FileTiles::new(
+            200,
+            7,
+            mirror.nnz(),
+            vec![meta],
+            Box::new(MemReader(chunk.clone())),
+            usize::MAX,
+            None,
+        )
+        .unwrap();
+        match ft.tile(0) {
+            Err(TileError::Corrupt { tile: 0, .. }) => {}
+            other => panic!("expected checksum rejection, got {other:?}"),
+        }
+        // out-of-range column index (valid checksum)
+        let mut bad = chunk.clone();
+        let base = align8(4 * row_off.len());
+        bad[base..base + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let meta = TileMeta {
+            offset: 0,
+            byte_len: bad.len() as u64,
+            nnz: mirror.nnz() as u64,
+            checksum: fnv1a64(&bad),
+        };
+        let ft = FileTiles::new(
+            200,
+            7,
+            mirror.nnz(),
+            vec![meta],
+            Box::new(MemReader(bad)),
+            usize::MAX,
+            None,
+        )
+        .unwrap();
+        match ft.tile(0) {
+            Err(TileError::Corrupt { tile: 0, msg }) => {
+                assert!(msg.contains("out of range"), "{msg}");
+            }
+            other => panic!("expected decode rejection, got {other:?}"),
+        }
+        // truncated container
+        let meta = TileMeta {
+            offset: 0,
+            byte_len: chunk.len() as u64,
+            nnz: mirror.nnz() as u64,
+            checksum: fnv1a64(&chunk),
+        };
+        let ft = FileTiles::new(
+            200,
+            7,
+            mirror.nnz(),
+            vec![meta],
+            Box::new(MemReader(chunk[..chunk.len() / 2].to_vec())),
+            usize::MAX,
+            None,
+        )
+        .unwrap();
+        assert_eq!(ft.tile(0).unwrap_err(), TileError::Truncated { tile: 0 });
+    }
+
+    #[test]
+    fn decode_time_scaling_matches_scale_col_bits() {
+        let m = 300;
+        let p = 9;
+        let x = random_csc(m, p, 21);
+        // standardize a copy the in-core way
+        let mut scaled = x.clone();
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let scales: Vec<f64> =
+            (0..p).map(|j| if j % 3 == 0 { 1.0 } else { 0.25 + rng.next_f64() }).collect();
+        for (j, &s) in scales.iter().enumerate() {
+            scaled.scale_col(j, s);
+        }
+        let mirror = CsrMirror::build(&scaled);
+        // file tiles hold RAW values + decode-time scales
+        let raw_mirror = CsrMirror::build(&x);
+        let row_off: Vec<u32> = raw_mirror.row_ptr().iter().map(|&r| r as u32).collect();
+        let chunk = TileData::encode_chunk(&row_off, raw_mirror.entries());
+        let meta = TileMeta {
+            offset: 0,
+            byte_len: chunk.len() as u64,
+            nnz: raw_mirror.nnz() as u64,
+            checksum: fnv1a64(&chunk),
+        };
+        let ft = FileTiles::new(
+            m,
+            p,
+            x.nnz(),
+            vec![meta],
+            Box::new(MemReader(chunk)),
+            usize::MAX,
+            Some(Arc::new(scales)),
+        )
+        .unwrap();
+        let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cols: Vec<usize> = (0..p).collect();
+        let mut scratch = KernelScratch::new();
+        let mut want = vec![0.0; p];
+        let mut got = vec![0.0; p];
+        mirror_multi_dot(&mirror, Cols::Idx(&cols), &v, &mut want, &mut scratch);
+        scan_multi_dot(&ft, Cols::Idx(&cols), &v, &mut got, &mut scratch).unwrap();
+        for j in 0..p {
+            assert_eq!(want[j].to_bits(), got[j].to_bits(), "col {j}");
+        }
+    }
+
+    #[test]
+    fn transient_interruptions_are_retried_to_identical_bits() {
+        struct Flaky {
+            inner: MemReader,
+            calls: AtomicU64,
+        }
+        impl ChunkReader for Flaky {
+            fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<usize> {
+                let n = self.calls.fetch_add(1, Ordering::Relaxed);
+                if n % 3 == 1 {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::Interrupted,
+                        "injected EINTR",
+                    ));
+                }
+                // short read: at most 64 bytes per call
+                let cap = buf.len().min(64);
+                self.inner.read_at(offset, &mut buf[..cap])
+            }
+        }
+        let m = 2 * ROW_TILE + 5;
+        let x = random_csc(m, 6, 8);
+        let clean = mem_tiles(&x, usize::MAX);
+        let mirror = CsrMirror::build(&x);
+        let mut bytes = Vec::new();
+        let mut metas = Vec::new();
+        for t in 0..mirror.n_tiles() {
+            let (lo, hi) = mirror.tile_rows(t);
+            let row_ptr = mirror.row_ptr();
+            let base = row_ptr[lo];
+            let row_off: Vec<u32> =
+                row_ptr[lo..=hi].iter().map(|&r| (r - base) as u32).collect();
+            let entries = &mirror.entries()[row_ptr[lo]..row_ptr[hi]];
+            let chunk = TileData::encode_chunk(&row_off, entries);
+            metas.push(TileMeta {
+                offset: bytes.len() as u64,
+                byte_len: chunk.len() as u64,
+                nnz: entries.len() as u64,
+                checksum: fnv1a64(&chunk),
+            });
+            bytes.extend_from_slice(&chunk);
+        }
+        let flaky = FileTiles::new(
+            m,
+            6,
+            x.nnz(),
+            metas,
+            Box::new(Flaky { inner: MemReader(bytes), calls: AtomicU64::new(0) }),
+            1, // smaller than any tile: re-read (and re-fault) every sweep
+            None,
+        )
+        .unwrap();
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        let v: Vec<f64> = (0..m).map(|_| rng.gaussian()).collect();
+        let cols = [0usize, 2, 5];
+        let mut scratch = KernelScratch::new();
+        let mut want = vec![0.0; 3];
+        let mut got = vec![0.0; 3];
+        scan_multi_dot(&clean, Cols::Idx(&cols), &v, &mut want, &mut scratch).unwrap();
+        scan_multi_dot(&flaky, Cols::Idx(&cols), &v, &mut got, &mut scratch).unwrap();
+        for k in 0..3 {
+            assert_eq!(want[k].to_bits(), got[k].to_bits(), "k={k}");
+        }
+        assert!(flaky.stats().retries > 0, "faults must actually have fired");
+    }
+
+    #[test]
+    fn empty_and_degenerate_cases() {
+        let x = CscBuilder::new(500, 4).build(); // nnz = 0
+        let ft = mem_tiles(&x, usize::MAX);
+        let v = vec![1.0; 500];
+        let mut out = vec![9.0; 4];
+        let mut scratch = KernelScratch::new();
+        scan_multi_dot(&ft, Cols::Idx(&[0, 1, 2, 3]), &v, &mut out, &mut scratch).unwrap();
+        assert_eq!(out, vec![0.0; 4]);
+        // zero-row matrix: no tiles at all
+        let x0 = CscBuilder::new(0, 2).build();
+        let ft0 = mem_tiles(&x0, 16);
+        assert_eq!(ft0.n_tiles(), 0);
+        let mut out0 = vec![1.0; 2];
+        scan_multi_dot(&ft0, Cols::Idx(&[0, 1]), &[], &mut out0, &mut scratch).unwrap();
+        assert_eq!(out0, vec![0.0; 2]);
+    }
+}

@@ -32,7 +32,8 @@ use crate::linalg::kernel::scan::{
     Slots,
 };
 use crate::linalg::kernel::scan::mirror_multi_dot;
-use crate::linalg::{KernelScratch, Storage};
+use crate::linalg::tiles::scan_multi_dot_prefetch;
+use crate::linalg::{FileTiles, KernelScratch, Storage};
 use crate::solvers::linesearch::FwState;
 use crate::solvers::sfw::{FwBackend, NativeBackend};
 use crate::solvers::Problem;
@@ -267,6 +268,48 @@ impl ParallelBackend {
         (sample[best_k], best_g)
     }
 
+    /// Out-of-core sparse vertex search (DESIGN.md §13): the sampled dots
+    /// stream the file-backed tile store with double-buffered prefetch —
+    /// this thread scans+reduces tile `t` while the I/O thread
+    /// reads+checksums+decodes `t+1` — then the same
+    /// `∇ᵢ = −σᵢ + c·(zᵢ·q̂)` transform and in-order first-max as
+    /// [`NativeBackend`]. The reduction still merges per-tile partials in
+    /// global tile order, so the selected vertex is bit-identical to the
+    /// in-core mirror and gather paths. On any tile I/O failure the store
+    /// is poisoned (warn-once) and the search delegates to the serial
+    /// reference, which recomputes the identical bits from the
+    /// always-resident CSC.
+    fn select_vertex_tiles(
+        &mut self,
+        prob: &Problem<'_>,
+        state: &FwState,
+        sample: &[usize],
+        ft: &FileTiles,
+    ) -> (usize, f64) {
+        let mut g = std::mem::take(&mut self.mirror_scratch.slots.grad);
+        g.resize(sample.len(), 0.0);
+        let scan = scan_multi_dot_prefetch(
+            ft,
+            Cols::Idx(sample),
+            state.q_hat_raw(),
+            &mut g,
+            &mut self.mirror_scratch.slots,
+        );
+        match scan {
+            Ok(()) => {
+                state.apply_grad_transform(prob, sample, &mut g);
+                let (best_k, best_g) = crate::solvers::sfw::first_max_abs(&g);
+                self.mirror_scratch.slots.grad = g;
+                (sample[best_k], best_g)
+            }
+            Err(e) => {
+                ft.poison(&e);
+                self.mirror_scratch.slots.grad = g;
+                self.native.select_vertex(prob, state, sample)
+            }
+        }
+    }
+
     /// Override the minimum per-shard sample count (testing / tuning).
     pub fn with_grain(mut self, grain: usize) -> Self {
         self.grain = grain.max(1);
@@ -297,6 +340,11 @@ impl FwBackend for ParallelBackend {
         if matches!(prob.x.storage(), Storage::Sparse(_))
             && prob.x.mirror_profitable(sample.len())
         {
+            // out-of-core designs stream file tiles (prefetch overlaps
+            // compute with I/O) instead of an in-RAM mirror
+            if let Some(ft) = prob.x.file_tiles() {
+                return self.select_vertex_tiles(prob, state, sample, &ft);
+            }
             if let Some(mirror) = prob.x.mirror() {
                 if self.threads > 1 && mirror.n_tiles() > 1 {
                     return self.select_vertex_mirror(prob, state, sample, mirror);

@@ -24,6 +24,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 /// Key → shared dataset map with single-flight loading.
 pub struct DatasetCache {
     entries: Mutex<HashMap<String, Arc<OnceLock<Result<Arc<Dataset>, String>>>>>,
+    // out-of-core byte budget applied to every load (ServeConfig.mem_budget)
+    mem_budget: Option<usize>,
 }
 
 /// A cache lookup: the dataset plus whether this request found it already
@@ -42,9 +44,16 @@ impl Default for DatasetCache {
 }
 
 impl DatasetCache {
-    /// Empty cache.
+    /// Empty cache, fully in-core loads.
     pub fn new() -> DatasetCache {
-        DatasetCache { entries: Mutex::new(HashMap::new()) }
+        Self::with_mem_budget(None)
+    }
+
+    /// Empty cache; when `mem_budget` is set, every sparse design loaded
+    /// through this cache streams its tiles from disk under that byte
+    /// budget ([`crate::data::resolve_spec_budgeted`], DESIGN.md §13).
+    pub fn with_mem_budget(mem_budget: Option<usize>) -> DatasetCache {
+        DatasetCache { entries: Mutex::new(HashMap::new()), mem_budget }
     }
 
     /// Cache key for a request's dataset coordinates.
@@ -78,9 +87,15 @@ impl DatasetCache {
         // concurrent in-flight request counts only once it has initialized.
         let cached = existed && cell.get().is_some();
         let result = cell.get_or_init(|| {
-            let (ds, _from_snapshot) = crate::data::resolve_spec(spec, scale, seed, use_cache)?;
-            // pre-build the CSR mirror (no-op for dense designs) so the
-            // first solve on this dataset starts at steady-state speed
+            let (ds, _from_snapshot) = crate::data::resolve_spec_budgeted(
+                spec,
+                scale,
+                seed,
+                use_cache,
+                self.mem_budget,
+            )?;
+            // pre-build the CSR mirror (no-op for dense or tile-backed
+            // designs) so the first solve starts at steady-state speed
             let _ = ds.x.mirror();
             Ok(Arc::new(ds))
         });
@@ -148,6 +163,24 @@ mod tests {
         // the retry takes the load path again (still an error, but not a
         // poisoned permanent entry)
         assert!(cache.fetch("no-such-dataset", 1.0, 1, false).is_err());
+    }
+
+    #[test]
+    fn mem_budget_streams_sparse_designs_from_disk() {
+        let cache = DatasetCache::with_mem_budget(Some(1 << 16));
+        let hit = cache.fetch("e2006-tfidf", 0.01, 5, false).unwrap();
+        if crate::linalg::csr::mirror_disabled() {
+            assert!(hit.dataset.x.file_tiles().is_none());
+            return;
+        }
+        assert!(
+            hit.dataset.x.file_tiles().is_some(),
+            "sparse design should be tile-backed under a mem budget"
+        );
+        assert!(
+            hit.dataset.x.mirror().is_none(),
+            "the in-RAM mirror must not coexist with the tile store"
+        );
     }
 
     #[test]

@@ -55,6 +55,10 @@ pub struct ServeConfig {
     pub conn_threads: usize,
     /// Allow `libsvm:<path>` dataset specs (reads server-local files).
     pub allow_files: bool,
+    /// Out-of-core byte budget: when set, sparse designs stream their
+    /// tiles from disk through an LRU capped at this many bytes instead
+    /// of holding the in-RAM CSR mirror (bit-identical results).
+    pub mem_budget: Option<usize>,
 }
 
 impl Default for ServeConfig {
@@ -67,6 +71,7 @@ impl Default for ServeConfig {
             timeout: Duration::from_secs(300),
             conn_threads: 4,
             allow_files: false,
+            mem_budget: None,
         }
     }
 }
@@ -133,7 +138,7 @@ pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle, String> {
     let addr = listener.local_addr().map_err(|e| e.to_string())?;
     let shared = Arc::new(Shared {
         shutdown: AtomicBool::new(false),
-        cache: Arc::new(DatasetCache::new()),
+        cache: Arc::new(DatasetCache::with_mem_budget(cfg.mem_budget)),
         queue: JobQueue::start(cfg.threads, cfg.queue_cap),
         cfg: cfg.clone(),
     });

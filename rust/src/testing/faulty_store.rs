@@ -1,0 +1,234 @@
+//! Fault injection for the out-of-core tile store.
+//!
+//! [`FaultyReader`] decorates any [`ChunkReader`] — the one I/O seam of
+//! [`crate::linalg::FileTiles`] — with deterministic, composable faults:
+//! short reads, `EINTR`-style transient interruptions, truncation,
+//! single-byte corruption, and permanent failure. The fault-injection
+//! suite (`rust/tests/fault_injection.rs`) drives the store through a
+//! [`FaultPlan`] and asserts the error contract of
+//! [`crate::linalg::TileError`]: recoverable faults are absorbed with
+//! bit-identical results, unrecoverable ones surface as clean typed
+//! errors — never a panic, never a silently wrong scan.
+//!
+//! Faults model *read-time* failures behind a successfully opened
+//! container (a file truncated under a live descriptor, bit rot beneath
+//! a valid directory, a flaky NFS mount), so [`ChunkReader::len`]
+//! delegates honestly to the inner reader; open-time rejection of bad
+//! headers and directories is covered by `rust/tests/data_robustness.rs`
+//! on the raw bytes instead.
+
+use crate::linalg::tiles::ChunkReader;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Which faults to inject. All fields compose; [`Default`] injects
+/// nothing (the wrapper is then a transparent pass-through).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// Every Nth `read_at` call returns at most half the requested
+    /// bytes (exercises the store's short-read loop).
+    pub short_read_every: Option<u64>,
+    /// Every Nth `read_at` call fails with
+    /// [`std::io::ErrorKind::Interrupted`] (`EINTR`); the store retries.
+    pub transient_every: Option<u64>,
+    /// Reads behave as if the container ends at this byte offset
+    /// (mid-tile truncation after a valid open).
+    pub truncate_at: Option<u64>,
+    /// The byte at this absolute offset is flipped (`^ 0xFF`) as it is
+    /// read (caught by the chunk checksum, never by the scan).
+    pub corrupt_at: Option<u64>,
+    /// `read_at` calls after the Nth fail permanently with a
+    /// non-transient I/O error.
+    pub fail_after: Option<u64>,
+}
+
+impl FaultPlan {
+    /// Short reads on every `every`-th call.
+    pub fn short_reads(every: u64) -> FaultPlan {
+        FaultPlan { short_read_every: Some(every), ..FaultPlan::default() }
+    }
+
+    /// Transient `EINTR` on every `every`-th call.
+    pub fn transient(every: u64) -> FaultPlan {
+        FaultPlan { transient_every: Some(every), ..FaultPlan::default() }
+    }
+
+    /// Container appears to end at byte `offset`.
+    pub fn truncated(offset: u64) -> FaultPlan {
+        FaultPlan { truncate_at: Some(offset), ..FaultPlan::default() }
+    }
+
+    /// Flip the byte at absolute `offset`.
+    pub fn corrupt(offset: u64) -> FaultPlan {
+        FaultPlan { corrupt_at: Some(offset), ..FaultPlan::default() }
+    }
+
+    /// Permanent failure after `calls` successful-ish calls.
+    pub fn permanent_after(calls: u64) -> FaultPlan {
+        FaultPlan { fail_after: Some(calls), ..FaultPlan::default() }
+    }
+}
+
+/// A [`ChunkReader`] decorator that injects the faults of a
+/// [`FaultPlan`] deterministically (keyed on a call counter and
+/// absolute offsets, so runs replay exactly).
+pub struct FaultyReader {
+    inner: Box<dyn ChunkReader>,
+    plan: FaultPlan,
+    calls: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl FaultyReader {
+    /// Wrap `inner`, injecting per `plan`.
+    pub fn new(inner: Box<dyn ChunkReader>, plan: FaultPlan) -> FaultyReader {
+        FaultyReader { inner, plan, calls: AtomicU64::new(0), injected: AtomicU64::new(0) }
+    }
+
+    /// Total `read_at` calls observed.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::Relaxed)
+    }
+
+    /// Faults actually injected (a test asserting recovery should also
+    /// assert this is nonzero, or it proved nothing).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    fn inject(&self) -> u64 {
+        self.injected.fetch_add(1, Ordering::Relaxed) + 1
+    }
+}
+
+impl ChunkReader for FaultyReader {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<usize> {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some(cap) = self.plan.fail_after {
+            if call > cap {
+                self.inject();
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Other,
+                    "injected permanent I/O failure",
+                ));
+            }
+        }
+        if let Some(every) = self.plan.transient_every {
+            if every > 0 && call % every == 0 {
+                self.inject();
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected EINTR",
+                ));
+            }
+        }
+        let mut want = buf.len();
+        if let Some(every) = self.plan.short_read_every {
+            if every > 0 && call % every == 0 && want > 1 {
+                self.inject();
+                want /= 2;
+            }
+        }
+        if let Some(cut) = self.plan.truncate_at {
+            if offset >= cut {
+                self.inject();
+                return Ok(0); // premature end-of-container
+            }
+            want = want.min((cut - offset) as usize);
+        }
+        let n = self.inner.read_at(offset, &mut buf[..want])?;
+        if let Some(at) = self.plan.corrupt_at {
+            if at >= offset && at < offset + n as u64 {
+                self.inject();
+                buf[(at - offset) as usize] ^= 0xFF;
+            }
+        }
+        Ok(n)
+    }
+
+    fn len(&self) -> Option<u64> {
+        self.inner.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::tiles::{read_exact_at, MemReader, TileError};
+    use std::sync::atomic::AtomicU64;
+
+    fn payload() -> Vec<u8> {
+        (0..251u32).map(|i| (i.wrapping_mul(37) % 256) as u8).collect()
+    }
+
+    fn read_all(reader: &dyn ChunkReader, len: usize) -> Result<Vec<u8>, TileError> {
+        let mut buf = vec![0u8; len];
+        let retries = AtomicU64::new(0);
+        read_exact_at(reader, 0, &mut buf, 0, &retries)?;
+        Ok(buf)
+    }
+
+    #[test]
+    fn default_plan_is_transparent() {
+        let data = payload();
+        let r = FaultyReader::new(Box::new(MemReader(data.clone())), FaultPlan::default());
+        assert_eq!(read_all(&r, data.len()).unwrap(), data);
+        assert_eq!(r.injected(), 0);
+        assert_eq!(r.len(), Some(data.len() as u64));
+    }
+
+    #[test]
+    fn short_and_transient_faults_are_absorbed_bit_identically() {
+        let data = payload();
+        let plan = FaultPlan {
+            short_read_every: Some(2),
+            transient_every: Some(3),
+            ..FaultPlan::default()
+        };
+        let r = FaultyReader::new(Box::new(MemReader(data.clone())), plan);
+        assert_eq!(read_all(&r, data.len()).unwrap(), data);
+        assert!(r.injected() > 0, "plan never fired");
+    }
+
+    #[test]
+    fn truncation_surfaces_as_truncated() {
+        let data = payload();
+        let r = FaultyReader::new(
+            Box::new(MemReader(data.clone())),
+            FaultPlan::truncated(data.len() as u64 / 2),
+        );
+        assert_eq!(read_all(&r, data.len()), Err(TileError::Truncated { tile: 0 }));
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_byte() {
+        let data = payload();
+        let r = FaultyReader::new(Box::new(MemReader(data.clone())), FaultPlan::corrupt(7));
+        let got = read_all(&r, data.len()).unwrap();
+        let diff: Vec<usize> =
+            (0..data.len()).filter(|&i| got[i] != data[i]).collect();
+        assert_eq!(diff, vec![7]);
+        assert_eq!(got[7], data[7] ^ 0xFF);
+    }
+
+    #[test]
+    fn permanent_failure_surfaces_as_io() {
+        let data = payload();
+        let r = FaultyReader::new(Box::new(MemReader(data.clone())), FaultPlan::permanent_after(0));
+        match read_all(&r, data.len()) {
+            Err(TileError::Io { tile: 0, msg }) => {
+                assert!(msg.contains("injected"), "msg: {msg}")
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn endless_transients_exhaust_the_retry_cap() {
+        let data = payload();
+        let r = FaultyReader::new(Box::new(MemReader(data)), FaultPlan::transient(1));
+        match read_all(&r, 8) {
+            Err(TileError::TransientExhausted { tile: 0, .. }) => {}
+            other => panic!("expected TransientExhausted, got {other:?}"),
+        }
+    }
+}

@@ -5,6 +5,8 @@
 //! greedy shrinking for failures. Used by `rust/tests/prop_*.rs` to check
 //! coordinator/solver invariants (line-search optimality, residual-update
 //! consistency, projection correctness, sparse/dense agreement, …).
+//! [`faulty_store`] adds the fault-injection decorator for the
+//! out-of-core tile store (`rust/tests/fault_injection.rs`).
 //!
 //! ```no_run
 //! use sfw_lasso::testing::{Prop, gen};
@@ -15,6 +17,8 @@
 //!         assert!(x.abs() >= 0.0);
 //!     });
 //! ```
+
+pub mod faulty_store;
 
 use crate::util::rng::Xoshiro256;
 

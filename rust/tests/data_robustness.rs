@@ -8,10 +8,18 @@
 //! or an OOM abort — fails the whole suite by construction).
 
 use sfw_lasso::data::cache::{
-    load_libsvm, read_snapshot, snapshot_path, write_snapshot, MAGIC, VERSION,
+    load_libsvm, open_tiles, read_snapshot, read_snapshot_versioned, snapshot_path,
+    write_snapshot, MAGIC, VERSION,
 };
 use sfw_lasso::data::libsvm;
 use std::path::PathBuf;
+
+/// v2 header length: magic + version + six u64 dims (v1 had four).
+const HEADER_LEN: usize = 56;
+
+/// The sample LIBSVM payload behind every snapshot in this suite:
+/// 4 rows, 4 columns, 7 nonzeros — a single row tile.
+const SAMPLE_TEXT: &str = "1.5 1:2.0 3:4.0\n-0.5 2:1.0\n2.25 1:-3.5 2:0.125 3:7\n4 4:1\n";
 
 fn tmpdir(name: &str) -> PathBuf {
     let dir = std::env::temp_dir()
@@ -22,11 +30,7 @@ fn tmpdir(name: &str) -> PathBuf {
 }
 
 fn sample_snapshot_bytes(tag: &str) -> Vec<u8> {
-    let d = libsvm::parse(
-        "1.5 1:2.0 3:4.0\n-0.5 2:1.0\n2.25 1:-3.5 2:0.125 3:7\n4 4:1\n",
-        None,
-    )
-    .unwrap();
+    let d = libsvm::parse(SAMPLE_TEXT, None).unwrap();
     // per-test path: the suite's tests run on parallel threads
     let dir = tmpdir(tag);
     let path = dir.join("sample.sfwbin");
@@ -98,6 +102,8 @@ fn snapshot_header_mutations_error_cleanly() {
         (16, 1 << 40, "cols = 2^40 (col_ptr would be 8 TiB)"),
         (24, (good.len() as u64) - 1, "nnz larger than plausible"),
         (8, 0, "rows = 0 with nonzero row indices"),
+        (40, 12345, "tile_rows is not this build's ROW_TILE"),
+        (48, 77, "n_tiles inconsistent with rows"),
     ];
     for &(off, val, what) in dim_cases {
         let mut bad = good.clone();
@@ -128,7 +134,6 @@ fn snapshot_colptr_corruption_is_rejected() {
     let good = sample_snapshot_bytes("colptr");
     let dir = tmpdir("colptr");
     let path = dir.join("c.sfwbin");
-    const HEADER_LEN: usize = 40;
     // non-monotone col_ptr (second entry beyond nnz)
     let mut bad = good.clone();
     bad[HEADER_LEN + 8..HEADER_LEN + 16].copy_from_slice(&u64::MAX.to_le_bytes());
@@ -140,6 +145,110 @@ fn snapshot_colptr_corruption_is_rejected() {
     std::fs::write(&path, &bad).unwrap();
     assert!(read_snapshot(&path).is_err());
     std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn v2_tile_directory_and_chunk_corruption_are_contained() {
+    use sfw_lasso::linalg::tiles::{chunk_len, n_tiles_for};
+    let good = sample_snapshot_bytes("tiledir");
+    let d = libsvm::parse(SAMPLE_TEXT, None).unwrap();
+    let (rows, nnz) = (d.x.rows(), d.x.nnz());
+    assert_eq!(n_tiles_for(rows), 1, "sample must stay single-tile");
+    // layout: header | CSC sections | directory (32 B/tile) | chunks
+    let dir_start = good.len() - 32 - chunk_len(rows, nnz);
+    let dir = tmpdir("tiledir");
+    let path = dir.join("d.sfwbin");
+
+    // a) directory geometry corruption: rejected by both readers
+    let mut bad = good.clone();
+    bad[dir_start] ^= 0xFF; // tile 0 offset field
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).is_err(), "CSC reader accepted a bad directory");
+    assert!(open_tiles(&path, 1, None).is_err(), "tile reader accepted a bad directory");
+
+    // b) checksum-field corruption: the directory still parses, so opens
+    //    succeed — the mismatch is caught at first tile read, typed
+    let mut bad = good.clone();
+    bad[dir_start + 24] ^= 0xFF; // tile 0 checksum field
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).is_ok(), "CSC sections are independent of checksums");
+    let ft = open_tiles(&path, 1, None).unwrap();
+    assert!(ft.tile(0).is_err(), "checksum mismatch must fail the tile read");
+
+    // c) chunk payload corruption: invisible to the CSC reader (chunks
+    //    are verified lazily, per tile) but never silently scanned
+    let mut bad = good.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0xFF;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(read_snapshot(&path).is_ok());
+    let ft = open_tiles(&path, 1, None).unwrap();
+    assert!(ft.tile(0).is_err(), "corrupt chunk must fail its checksum");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------- v1 migration
+
+fn pad8(n: usize) -> usize {
+    (8 - n % 8) % 8
+}
+
+/// Hand-rolled v1 layout (magic + version=1 + four dims + CSC sections),
+/// byte-for-byte what PR 3's writer produced — the migration fixture.
+fn write_v1_snapshot(path: &std::path::Path, x: &sfw_lasso::linalg::CscMatrix, y: &[f64]) {
+    let (col_ptr, row_idx, vals) = x.parts();
+    let mut b = Vec::new();
+    b.extend_from_slice(MAGIC);
+    b.extend_from_slice(&1u16.to_le_bytes());
+    for dim in [x.rows(), x.cols(), x.nnz(), y.len()] {
+        b.extend_from_slice(&(dim as u64).to_le_bytes());
+    }
+    for &o in col_ptr {
+        b.extend_from_slice(&(o as u64).to_le_bytes());
+    }
+    for &r in row_idx {
+        b.extend_from_slice(&r.to_le_bytes());
+    }
+    b.extend_from_slice(&[0u8; 8][..pad8(row_idx.len() * 4)]);
+    for &v in vals {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    b.extend_from_slice(&[0u8; 8][..pad8(vals.len() * 4)]);
+    for &v in y {
+        b.extend_from_slice(&v.to_le_bytes());
+    }
+    std::fs::write(path, b).unwrap();
+}
+
+#[test]
+fn v1_snapshot_loads_and_is_upgraded_to_v2() {
+    let dir = tmpdir("v1migrate");
+    let src = dir.join("v1.svm");
+    std::fs::write(&src, SAMPLE_TEXT).unwrap();
+    let parsed = libsvm::parse(SAMPLE_TEXT, None).unwrap();
+    let snap = snapshot_path(&src);
+    std::fs::remove_file(&snap).ok();
+    write_v1_snapshot(&snap, &parsed.x, &parsed.y);
+    // sanity: detected as v1, and v1 has no tile directory to stream
+    let (_, version) = read_snapshot_versioned(&snap).unwrap();
+    assert_eq!(version, 1);
+    assert!(open_tiles(&snap, 1, None).unwrap_err().contains("version 1"));
+    // a fresh v1 snapshot serves the load and is rewritten in place as v2
+    let (loaded, from_cache) = load_libsvm(&src, true).unwrap();
+    assert!(from_cache, "fresh v1 snapshot must serve the load");
+    assert_eq!(loaded.y, parsed.y);
+    let (reread, version) = read_snapshot_versioned(&snap).unwrap();
+    assert_eq!(version, 2, "v1 snapshot must be transparently upgraded");
+    assert_eq!(reread.y, parsed.y);
+    // the upgraded container streams tile-by-tile
+    let ft = open_tiles(&snap, 1, None).unwrap();
+    assert_eq!(
+        (ft.rows(), ft.cols(), ft.nnz()),
+        (parsed.x.rows(), parsed.x.cols(), parsed.x.nnz())
+    );
+    assert!(ft.tile(0).is_ok());
+    std::fs::remove_file(&src).ok();
+    std::fs::remove_file(&snap).ok();
 }
 
 // ------------------------------------------------------------- LIBSVM text

@@ -1,0 +1,381 @@
+//! Fault-injection suite for the out-of-core tile store (DESIGN.md §13,
+//! ADR-006): wrap the store's one I/O seam
+//! ([`sfw_lasso::linalg::tiles::ChunkReader`]) in
+//! [`sfw_lasso::testing::faulty_store::FaultyReader`] and prove the
+//! error contract on a real multi-tile snapshot:
+//!
+//! * **Recoverable faults** (short reads, `EINTR`-style transient
+//!   interruptions) are absorbed invisibly — scans stay bit-identical
+//!   to the in-core gather path and the store is never poisoned.
+//! * **Unrecoverable faults** (mid-tile truncation, chunk corruption,
+//!   permanent I/O failure, endless transients) surface as the matching
+//!   typed [`sfw_lasso::linalg::TileError`] — never a panic, never a
+//!   silently wrong result.
+//! * **Above the store**, [`sfw_lasso::linalg::Design`] poisons a failed
+//!   store and recomputes on the always-resident CSC gather path, so a
+//!   whole solve over a failing store still produces bit-identical
+//!   coefficients.
+//!
+//! CI runs this suite under the default dispatch, `SFW_FORCE_SCALAR=1`
+//! and `SFW_NO_MIRROR=1` (where `Design` never touches the store — the
+//! assertions that need the tile path branch on the env), and once more
+//! inside the `out-of-core` job under `ulimit -v` with
+//! `SFW_OOC_STRESS=1` enabling the larger-than-budget end-to-end run.
+
+mod common;
+
+use common::{sample, sparse_test_matrix};
+use sfw_lasso::data::cache::{open_tiles_from, write_snapshot};
+use sfw_lasso::linalg::csr::mirror_disabled;
+use sfw_lasso::linalg::kernel::scan::{multi_dot_sparse, Cols};
+use sfw_lasso::linalg::kernel::{KernelScratch, ROW_TILE};
+use sfw_lasso::linalg::tiles::{
+    chunk_len, n_tiles_for, scan_multi_dot, scan_multi_dot_prefetch, ChunkReader, FileTiles,
+    MemReader,
+};
+use sfw_lasso::linalg::{CscMatrix, ColumnCache, Design, TileError};
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::sfw::StochasticFw;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::testing::faulty_store::{FaultPlan, FaultyReader};
+use sfw_lasso::testing::{gen, Prop};
+use std::sync::Arc;
+
+// ------------------------------------------------------------------ harness
+
+/// The suite's design: 3 row tiles, scattered density, empty columns and
+/// an empty leading row block.
+fn multi_tile_matrix(seed: u64) -> CscMatrix {
+    sparse_test_matrix(2 * ROW_TILE + 37, 96, seed)
+}
+
+/// Serialize `x` (plus a throwaway response) into v2 `.sfwbin` bytes.
+fn snapshot_bytes(x: &CscMatrix) -> Vec<u8> {
+    let y = vec![0.5; x.rows()];
+    let tmp = std::env::temp_dir().join(format!(
+        "sfw-fault-injection-{}-{:x}.sfwbin",
+        std::process::id(),
+        x as *const _ as usize
+    ));
+    write_snapshot(&tmp, x, &y).expect("write snapshot");
+    let bytes = std::fs::read(&tmp).expect("read snapshot back");
+    std::fs::remove_file(&tmp).ok();
+    bytes
+}
+
+/// Shared handle so tests keep fault counters after the store takes
+/// ownership of the reader.
+struct Shared(Arc<FaultyReader>);
+
+impl ChunkReader for Shared {
+    fn read_at(&self, offset: u64, buf: &mut [u8]) -> std::io::Result<usize> {
+        self.0.read_at(offset, buf)
+    }
+
+    fn len(&self) -> Option<u64> {
+        self.0.len()
+    }
+}
+
+/// Open the snapshot bytes as a tile store behind a fault plan,
+/// returning the store and the shared fault counters.
+fn open_faulty(
+    bytes: &[u8],
+    plan: FaultPlan,
+    mem_budget: usize,
+) -> (FileTiles, Arc<FaultyReader>) {
+    let faulty = Arc::new(FaultyReader::new(Box::new(MemReader(bytes.to_vec())), plan));
+    let ft = open_tiles_from(Box::new(Shared(Arc::clone(&faulty))), mem_budget, None)
+        .expect("open through fault plan");
+    (ft, faulty)
+}
+
+/// Byte length of the chunks region (the file's tail): per-tile row
+/// offsets sum over fixed tile heights, entry bytes sum to `8·nnz`.
+fn chunks_region_len(rows: usize, nnz: usize) -> usize {
+    let mut total = 8 * nnz;
+    for t in 0..n_tiles_for(rows) {
+        let lo = t * ROW_TILE;
+        let hi = (lo + ROW_TILE).min(rows);
+        total += chunk_len(hi - lo, 0);
+    }
+    total
+}
+
+/// The in-core reference: the per-column CSC gather path, which the
+/// pinned scan contract makes bit-identical to every tile scan.
+fn gather_reference(x: &CscMatrix, cols: &[usize], v: &[f64]) -> Vec<f64> {
+    let mut out = vec![0.0; cols.len()];
+    let mut scratch = KernelScratch::new();
+    multi_dot_sparse(x, Cols::Idx(cols), v, &mut out, &mut scratch);
+    out
+}
+
+fn test_vector(m: usize) -> Vec<f64> {
+    (0..m).map(|i| ((i as f64) * 0.37).sin()).collect()
+}
+
+fn assert_bits_eq(a: &[f64], b: &[f64], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length");
+    for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: slot {j}: {x} vs {y}");
+    }
+}
+
+// ------------------------------------------------------- recoverable faults
+
+#[test]
+fn clean_store_streams_bit_identical_under_tile_sized_budget() {
+    let x = multi_tile_matrix(11);
+    let bytes = snapshot_bytes(&x);
+    let v = test_vector(x.rows());
+    let cols = sample(x.cols(), 48, 7);
+    let expect = gather_reference(&x, &cols, &v);
+
+    // budget of 1 byte: the LRU keeps only the tile in hand, so every
+    // pass re-reads — maximal eviction traffic, identical bits
+    let (ft, faulty) = open_faulty(&bytes, FaultPlan::default(), 1);
+    let mut scratch = KernelScratch::new();
+    let mut out = vec![0.0; cols.len()];
+    for pass in 0..3 {
+        scan_multi_dot(&ft, Cols::Idx(&cols), &v, &mut out, &mut scratch).unwrap();
+        assert_bits_eq(&out, &expect, &format!("serial pass {pass}"));
+        scan_multi_dot_prefetch(&ft, Cols::Idx(&cols), &v, &mut out, &mut scratch).unwrap();
+        assert_bits_eq(&out, &expect, &format!("prefetch pass {pass}"));
+    }
+    let stats = ft.stats();
+    assert!(stats.evictions > 0, "a 1-byte budget must evict: {stats:?}");
+    assert!(stats.misses > stats.hits, "budget too small to hit: {stats:?}");
+    assert_eq!(faulty.injected(), 0);
+}
+
+#[test]
+fn short_reads_and_transients_are_absorbed_bit_identically() {
+    let x = multi_tile_matrix(23);
+    let bytes = snapshot_bytes(&x);
+    let v = test_vector(x.rows());
+    let cols = sample(x.cols(), 40, 9);
+    let expect = gather_reference(&x, &cols, &v);
+
+    let plans = [
+        FaultPlan::short_reads(2),
+        FaultPlan::transient(3),
+        FaultPlan { short_read_every: Some(2), transient_every: Some(3), ..FaultPlan::default() },
+    ];
+    for (i, plan) in plans.into_iter().enumerate() {
+        let (ft, faulty) = open_faulty(&bytes, plan, 1);
+        let mut scratch = KernelScratch::new();
+        let mut out = vec![0.0; cols.len()];
+        scan_multi_dot(&ft, Cols::Idx(&cols), &v, &mut out, &mut scratch)
+            .unwrap_or_else(|e| panic!("plan {i} must be recoverable, got {e}"));
+        assert_bits_eq(&out, &expect, &format!("plan {i} serial"));
+        scan_multi_dot_prefetch(&ft, Cols::Idx(&cols), &v, &mut out, &mut scratch)
+            .unwrap_or_else(|e| panic!("plan {i} must be recoverable, got {e}"));
+        assert_bits_eq(&out, &expect, &format!("plan {i} prefetch"));
+        assert!(faulty.injected() > 0, "plan {i} never fired");
+        assert!(!ft.is_poisoned(), "recoverable faults must not poison");
+        if plan.transient_every.is_some() {
+            assert!(ft.stats().retries > 0, "plan {i}: transient retries unseen");
+        }
+    }
+}
+
+// ----------------------------------------------------- unrecoverable faults
+
+#[test]
+fn mid_tile_truncation_is_a_clean_typed_error() {
+    let x = multi_tile_matrix(31);
+    let bytes = snapshot_bytes(&x);
+    // cut inside the last chunk: header, directory and earlier tiles
+    // stay readable, the final tile hits end-of-container mid-read
+    let cut = bytes.len() as u64 - 9;
+    let (ft, faulty) = open_faulty(&bytes, FaultPlan::truncated(cut), 1);
+    let last = ft.n_tiles() - 1;
+    for t in 0..last {
+        if let Err(e) = ft.tile(t) {
+            panic!("tile {t} precedes the cut: {e}");
+        }
+    }
+    match ft.tile(last) {
+        Err(e) => assert_eq!(e, TileError::Truncated { tile: last }),
+        Ok(_) => panic!("truncated tile {last} must not decode"),
+    }
+    let v = test_vector(x.rows());
+    let mut scratch = KernelScratch::new();
+    let mut out = vec![0.0; 8];
+    let cols = sample(x.cols(), 8, 3);
+    let err = scan_multi_dot(&ft, Cols::Idx(&cols), &v, &mut out, &mut scratch).unwrap_err();
+    assert_eq!(err, TileError::Truncated { tile: last });
+    assert!(faulty.injected() > 0);
+}
+
+#[test]
+fn chunk_corruption_is_always_caught_by_the_checksum() {
+    let x = multi_tile_matrix(47);
+    let bytes = snapshot_bytes(&x);
+    let chunks_start = bytes.len() - chunks_region_len(x.rows(), x.nnz());
+    let v = test_vector(x.rows());
+    let cols = sample(x.cols(), 32, 5);
+    Prop::new("single-byte chunk corruption yields TileError::Corrupt")
+        .cases(24)
+        .run(|rng| {
+            let at = gen::usize_range(rng, chunks_start, bytes.len()) as u64;
+            let (ft, _faulty) = open_faulty(&bytes, FaultPlan::corrupt(at), 1);
+            let mut scratch = KernelScratch::new();
+            let mut out = vec![0.0; cols.len()];
+            let err = scan_multi_dot(&ft, Cols::Idx(&cols), &v, &mut out, &mut scratch)
+                .expect_err("corruption inside a chunk must not verify");
+            assert!(
+                matches!(err, TileError::Corrupt { .. }),
+                "expected Corrupt, got {err:?} for byte {at}"
+            );
+        });
+}
+
+#[test]
+fn permanent_failure_and_retry_exhaustion_are_typed() {
+    let x = multi_tile_matrix(59);
+    let bytes = snapshot_bytes(&x);
+    // open_tiles_from consumes exactly two reads (header + directory);
+    // every read after that fails permanently
+    let (ft, _) = open_faulty(&bytes, FaultPlan::permanent_after(2), 1);
+    match ft.tile(0) {
+        Err(TileError::Io { tile: 0, msg }) => assert!(msg.contains("injected"), "{msg}"),
+        Err(e) => panic!("expected Io, got {e:?}"),
+        Ok(_) => panic!("expected Io, got a decoded tile"),
+    }
+    // endless EINTR exhausts the bounded retry loop instead of spinning
+    let faulty = Arc::new(FaultyReader::new(
+        Box::new(MemReader(bytes.clone())),
+        FaultPlan::transient(1),
+    ));
+    let err = open_tiles_from(Box::new(Shared(faulty)), 1, None)
+        .expect_err("the header read itself must exhaust retries");
+    assert!(err.contains("transient"), "unexpected error: {err}");
+}
+
+// -------------------------------------------------- fallback above the store
+
+#[test]
+fn design_poisons_a_failing_store_and_stays_bit_identical() {
+    let x = multi_tile_matrix(71);
+    let bytes = snapshot_bytes(&x);
+    let v = test_vector(x.rows());
+    let reference = Design::sparse(x.clone());
+    let mut attached = Design::sparse(x.clone());
+    let (ft, _) = open_faulty(&bytes, FaultPlan::permanent_after(2), 1);
+    let ft = Arc::new(ft);
+    attached.attach_tiles(Arc::clone(&ft)).unwrap();
+
+    let mut scratch = KernelScratch::new();
+    let cols = sample(x.cols(), 48, 13);
+    let mut expect = vec![0.0; cols.len()];
+    let mut got = vec![0.0; cols.len()];
+    reference.multi_col_dot(&cols, &v, &mut expect, &mut scratch);
+    attached.multi_col_dot(&cols, &v, &mut got, &mut scratch);
+    assert_bits_eq(&got, &expect, "poison fallback");
+    if mirror_disabled() {
+        // SFW_NO_MIRROR pins every scan to the gather path; the store is
+        // never touched, so there is nothing to poison
+        assert!(!ft.is_poisoned());
+    } else {
+        assert!(ft.is_poisoned(), "the failing store must be poisoned");
+        assert!(attached.file_tiles().is_none(), "poisoned stores are detached");
+        // and the fallback keeps answering with identical bits
+        attached.multi_col_dot(&cols, &v, &mut got, &mut scratch);
+        assert_bits_eq(&got, &expect, "post-poison steady state");
+    }
+}
+
+#[test]
+fn solver_over_transient_faults_matches_the_in_core_run_bit_for_bit() {
+    let x = multi_tile_matrix(83);
+    let bytes = snapshot_bytes(&x);
+    let m = x.rows();
+    let mut rng = sfw_lasso::util::rng::Xoshiro256::seed_from_u64(0xFA17);
+    let mut y = test_vector(m);
+    for v in y.iter_mut() {
+        *v += 0.01 * rng.gaussian();
+    }
+
+    let in_core = Design::sparse(x.clone());
+    let cache = ColumnCache::build(&in_core, &y);
+    let prob = Problem::new(&in_core, &y, &cache);
+    let opts = SolveOptions { eps: 0.0, max_iters: 20, seed: 29, ..Default::default() };
+    let strategy = SamplingStrategy::Fraction(0.5);
+    let mut reference = StochasticFw::new(strategy, opts);
+    let mut st_ref = FwState::zero(prob.p(), prob.m());
+    let res_ref = reference.run(&prob, &mut st_ref, 2.0);
+
+    let mut streamed = Design::sparse(x.clone());
+    let (ft, faulty) = open_faulty(&bytes, FaultPlan::transient(5), 1);
+    let ft = Arc::new(ft);
+    streamed.attach_tiles(Arc::clone(&ft)).unwrap();
+    let cache2 = ColumnCache::build(&streamed, &y);
+    let prob2 = Problem::new(&streamed, &y, &cache2);
+    for backend_threads in [0usize, 4] {
+        let mut st = FwState::zero(prob2.p(), prob2.m());
+        let res = if backend_threads == 0 {
+            let mut solver = StochasticFw::new(strategy, opts);
+            solver.run(&prob2, &mut st, 2.0)
+        } else {
+            let backend = sfw_lasso::parallel::ParallelBackend::new(backend_threads);
+            let mut solver = StochasticFw::with_backend(strategy, opts, backend);
+            solver.run(&prob2, &mut st, 2.0)
+        };
+        assert_eq!(res.iters, res_ref.iters, "threads={backend_threads}");
+        assert_eq!(res.dots, res_ref.dots, "threads={backend_threads}");
+        assert_bits_eq(
+            &st.alpha(),
+            &st_ref.alpha(),
+            &format!("solver coefficients (threads={backend_threads})"),
+        );
+    }
+    if !mirror_disabled() {
+        assert!(!ft.is_poisoned(), "transient faults must stay invisible");
+        assert!(faulty.injected() > 0, "the fault plan never fired");
+    }
+}
+
+// ----------------------------------------------------- out-of-core stress
+
+/// Larger-than-budget end-to-end run for the CI `out-of-core` job, which
+/// executes this suite under `ulimit -v` with `SFW_OOC_STRESS=1`: a full
+/// regularization path over a spilled multi-tile design streamed under a
+/// budget far below one tile, bit-identical to the in-core path.
+#[test]
+fn stress_full_path_larger_than_budget_matches_in_core() {
+    if std::env::var("SFW_OOC_STRESS").map(|v| v == "1").unwrap_or(false) {
+        let (in_core, streamed) = stress_datasets();
+        let cfg = common::base_cfg(1e-3, 400, 3, in_core.x.cols());
+        for kind in [
+            sfw_lasso::path::SolverKind::FwDet,
+            sfw_lasso::path::SolverKind::Sfw(SamplingStrategy::Fraction(0.25)),
+        ] {
+            let base = sfw_lasso::path::run_path(&in_core, kind, &cfg);
+            let ooc = sfw_lasso::path::run_path(&streamed, kind, &cfg);
+            common::assert_paths_bit_identical(&base, &ooc, kind.label());
+        }
+    } else {
+        println!("stress run skipped (set SFW_OOC_STRESS=1 to enable)");
+    }
+}
+
+/// Assemble the same multi-tile problem twice: fully in-core, and
+/// spill-attached under a 64 KiB budget (well below the total decoded
+/// tile footprint, so the path run must evict and re-stream).
+fn stress_datasets() -> (sfw_lasso::data::Dataset, sfw_lasso::data::Dataset) {
+    let build = || {
+        let m_all = 4 * ROW_TILE + 113;
+        let x = sparse_test_matrix(m_all, 160, 0x57E55);
+        let y = test_vector(m_all);
+        sfw_lasso::data::assemble("ooc-stress", Design::sparse(x), y, m_all - 200, None)
+    };
+    let in_core = build();
+    let mut streamed = build();
+    let attached =
+        sfw_lasso::data::cache::attach_out_of_core(&mut streamed, 64 << 10, None).unwrap();
+    assert!(attached, "sparse design must attach");
+    (in_core, streamed)
+}

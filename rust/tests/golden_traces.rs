@@ -26,7 +26,12 @@
 
 mod common;
 
-use sfw_lasso::path::{run_path, PathConfig, PathResult, SolverKind};
+use sfw_lasso::data::cache::attach_out_of_core;
+use sfw_lasso::data::Dataset;
+use sfw_lasso::linalg::csr::mirror_disabled;
+use sfw_lasso::linalg::kernel::ROW_TILE;
+use sfw_lasso::linalg::Design;
+use sfw_lasso::path::{run_path, run_path_parallel, PathConfig, PathResult, SolverKind};
 use sfw_lasso::screening::ScreenMode;
 use sfw_lasso::solvers::SolveOptions;
 use sfw_lasso::util::json::Json;
@@ -207,6 +212,61 @@ fn golden_traces_match_fixture() {
     }
     // fall through only if the diff was pure formatting (shouldn't happen)
     panic!("golden trace differs from fixture only in formatting — rebless with SFW_BLESS=1");
+}
+
+// ----------------------------------------------- out-of-core parity (§13)
+
+/// Sparse multi-tile golden problem (3 row tiles after the train split)
+/// for the file-backed parity runs.
+fn ooc_dataset() -> Dataset {
+    let m_all = 2 * ROW_TILE + 537;
+    let x = common::sparse_test_matrix(m_all, 120, 0xD15C);
+    let y: Vec<f64> = (0..m_all).map(|i| (i as f64 * 0.29).cos()).collect();
+    sfw_lasso::data::assemble("ooc-golden", Design::sparse(x), y, m_all - 500, None)
+}
+
+/// [`ooc_dataset`] with its design spilled to a v2 container and
+/// streamed back under `budget` bytes of resident decoded tiles.
+fn ooc_streamed(budget: usize) -> Dataset {
+    let mut ds = ooc_dataset();
+    let attached = attach_out_of_core(&mut ds, budget, None).expect("spill-attach");
+    assert!(attached, "a sparse design must attach a tile store");
+    ds
+}
+
+/// The full solver matrix replayed against file-backed tiles under a
+/// sub-tile LRU budget, across thread counts — every trajectory must be
+/// bit-for-bit the in-core one (per thread count; grid sharding makes
+/// different thread counts legitimately different runs). CI repeats
+/// this under `SFW_FORCE_SCALAR=1` and `SFW_NO_MIRROR=1`; in the latter
+/// the store is attached but never consulted, which must also be
+/// invisible.
+#[test]
+fn file_backed_solver_matrix_is_bit_identical_to_in_core() {
+    let base_ds = ooc_dataset();
+    // ~40 KiB keeps at most one decoded tile of three resident
+    let ooc_ds = ooc_streamed(40 << 10);
+    let cfg = common::base_cfg(1e-3, 200, 3, base_ds.x.cols());
+    for threads in [1usize, 2, 4, 8] {
+        for kind in common::all_solver_kinds(0.25) {
+            let base = run_path_parallel(&base_ds, kind, &cfg, threads);
+            let ooc = run_path_parallel(&ooc_ds, kind, &cfg, threads);
+            common::assert_paths_bit_identical(
+                &base,
+                &ooc,
+                &format!("file-backed {} (threads={threads})", kind.label()),
+            );
+        }
+    }
+    if !mirror_disabled() {
+        let ft = ooc_ds.x.file_tiles().expect("store attached and healthy");
+        let stats = ft.stats();
+        assert!(!ft.is_poisoned(), "parity runs must not poison the store");
+        assert!(
+            stats.misses > 0 && stats.evictions > 0,
+            "a sub-tile budget must stream and evict: {stats:?}"
+        );
+    }
 }
 
 #[test]
