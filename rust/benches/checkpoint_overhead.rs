@@ -1,0 +1,213 @@
+//! §Robustness: what does crash safety cost? (DESIGN.md §14,
+//! `docs/adr/ADR-007-checkpoint-resume.md`)
+//!
+//! Workload: a synthetic regularization path (FW, deterministic — the
+//! paper's workhorse) timed four ways:
+//!
+//! 1. `run_path_parallel` — the plain runner, no control plane at all,
+//! 2. `run_path_resilient` with a control but **no** checkpoint path —
+//!    isolates the cancellation/heartbeat hook cost in the solver loop,
+//! 3. resilient + checkpoint at the default cadence (time-based, which a
+//!    long run would amortize to near zero; forced here to one write per
+//!    run via the boundary latch at segment exit),
+//! 4. resilient + a checkpoint written at **every** grid-point boundary
+//!    (`set_checkpoint_every_dots(1)`) — the worst case: serialize +
+//!    fsync + rename once per point.
+//!
+//! Plus the recovery headline: kill the run at the midpoint boundary and
+//! time the resume-to-complete leg — crash recovery should cost roughly
+//! the *remaining* half of the path, not a rerun.
+//!
+//! All variants must be bit-identical to the baseline (asserted, not
+//! assumed). Emits machine-readable `BENCH_checkpoint.json` (override
+//! with `SFW_BENCH_JSON`) with the headline `overhead_every_boundary`
+//! and `resume_fraction_of_full` — the acceptance artifact uploaded by
+//! the CI `bench-artifacts` job.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::bench::bench;
+use sfw_lasso::data::{load, Named};
+use sfw_lasso::path::{
+    run_path_parallel, run_path_resilient, PathConfig, ResilientOptions, SolverKind,
+};
+use sfw_lasso::testing::chaos::{assert_points_bit_identical, run_to_kill};
+use sfw_lasso::util::ckpt::RunControl;
+use sfw_lasso::util::timer::Stopwatch;
+use std::path::PathBuf;
+
+fn resilient(
+    ds: &sfw_lasso::data::Dataset,
+    cfg: &PathConfig,
+    threads: usize,
+    ckpt: Option<&PathBuf>,
+    every_boundary: bool,
+) -> sfw_lasso::path::PathRunOutcome {
+    let control = RunControl::new();
+    if every_boundary {
+        // any positive dot cadence latches before each boundary check, so
+        // this forces one snapshot write per completed grid point
+        control.set_checkpoint_every_dots(1);
+    }
+    run_path_resilient(
+        ds,
+        SolverKind::FwDet,
+        cfg,
+        threads,
+        &ResilientOptions {
+            checkpoint: ckpt.cloned(),
+            resume: false,
+            control,
+        },
+    )
+}
+
+fn main() {
+    common::banner(
+        "checkpoint_overhead",
+        "crash-safe checkpointing cost vs the plain path runner (DESIGN.md §14)",
+    );
+    // moderate shape: large enough that a solve dominates a file write,
+    // small enough for bench turnaround; scales with SFW_BENCH_SCALE
+    let scale = (common::scale() * 0.5).clamp(0.01, 1.0);
+    let ds = load(Named::Synth10k { relevant: 32 }, scale, common::seed());
+    let mut cfg = common::path_config();
+    cfg.n_points = common::points().clamp(8, 40);
+    let threads = 4usize;
+    println!(
+        "dataset {} ({} × {}), {} grid points, {threads} blocks\n",
+        ds.name,
+        ds.rows(),
+        ds.cols(),
+        cfg.n_points
+    );
+
+    let ckpt = std::env::temp_dir()
+        .join(format!("sfw-bench-ckpt-{}.sfwckpt", std::process::id()));
+    let clean = |p: &PathBuf| {
+        std::fs::remove_file(p).ok();
+        std::fs::remove_file(sfw_lasso::util::ckpt::prev_path(p)).ok();
+    };
+    let (w, r) = (1usize, 5usize.max(common::reps()));
+
+    // --- 1. plain runner baseline ---
+    let baseline_pts = run_path_parallel(&ds, SolverKind::FwDet, &cfg, threads).points;
+    let plain = bench(w, r, || {
+        run_path_parallel(&ds, SolverKind::FwDet, &cfg, threads).points.len()
+    });
+    println!("{}", plain.row("path, plain runner (no control plane)"));
+
+    // --- 2. control plane only: tick/heartbeat hooks, no I/O ---
+    let control_only = bench(w, r, || {
+        resilient(&ds, &cfg, threads, None, false).result.points.len()
+    });
+    println!(
+        "{}",
+        control_only.row(&format!(
+            "path, resilient, control only ({:.3}× vs plain)",
+            control_only.mean / plain.mean
+        ))
+    );
+
+    // --- 3. checkpoint at segment-exit cadence (one write per block) ---
+    let exit_only = bench(w, r, || {
+        clean(&ckpt);
+        resilient(&ds, &cfg, threads, Some(&ckpt), false).result.points.len()
+    });
+    println!(
+        "{}",
+        exit_only.row(&format!(
+            "path, resilient, final-flush checkpoints ({:.3}× vs plain)",
+            exit_only.mean / plain.mean
+        ))
+    );
+
+    // --- 4. worst case: snapshot + fsync + rename at every boundary ---
+    let every = bench(w, r, || {
+        clean(&ckpt);
+        resilient(&ds, &cfg, threads, Some(&ckpt), true).result.points.len()
+    });
+    println!(
+        "{}",
+        every.row(&format!(
+            "path, resilient, checkpoint every boundary ({:.3}× vs plain)",
+            every.mean / plain.mean
+        ))
+    );
+    let snapshot_bytes = std::fs::metadata(&ckpt).map(|md| md.len()).unwrap_or(0);
+
+    // correctness: every resilient variant reproduced the baseline bits
+    for (label, every_boundary, with_ckpt) in
+        [("control-only", false, false), ("every-boundary", true, true)]
+    {
+        clean(&ckpt);
+        let ckpt_opt = if with_ckpt { Some(&ckpt) } else { None };
+        let out = resilient(&ds, &cfg, threads, ckpt_opt, every_boundary);
+        assert!(out.complete);
+        assert_points_bit_identical(&out.result.points, &baseline_pts);
+        println!("{label} run bit-identical to the plain runner ✓");
+    }
+
+    // --- recovery headline: kill at the midpoint, time the resume leg ---
+    clean(&ckpt);
+    let kill_at = (cfg.n_points / 2) as u64;
+    run_to_kill(&ds, SolverKind::FwDet, &cfg, threads, &ckpt, kill_at);
+    let sw = Stopwatch::started();
+    let resumed = run_path_resilient(
+        &ds,
+        SolverKind::FwDet,
+        &cfg,
+        threads,
+        &ResilientOptions {
+            checkpoint: Some(ckpt.clone()),
+            resume: true,
+            control: RunControl::new(),
+        },
+    );
+    let resume_secs = sw.elapsed_secs();
+    assert!(resumed.complete, "midpoint resume must finish the path");
+    assert!(resumed.resumed_points >= kill_at as usize);
+    assert_points_bit_identical(&resumed.result.points, &baseline_pts);
+    let resume_fraction = resume_secs / plain.mean;
+    println!(
+        "\nresume after a midpoint kill: {resume_secs:.4}s = {:.0}% of a full run \
+         ({} of {} points restored from the snapshot)",
+        resume_fraction * 100.0,
+        resumed.resumed_points,
+        cfg.n_points
+    );
+
+    let overhead_control = control_only.mean / plain.mean;
+    let overhead_exit = exit_only.mean / plain.mean;
+    let overhead_every = every.mean / plain.mean;
+    println!(
+        "\nheadline: control plane {overhead_control:.3}×, final-flush {overhead_exit:.3}×, \
+         every-boundary {overhead_every:.3}× vs the plain runner"
+    );
+
+    let report = sfw_lasso::util::json::Json::obj(vec![
+        ("dataset", sfw_lasso::util::json::Json::Str(ds.name.clone())),
+        ("rows", sfw_lasso::util::json::Json::Num(ds.rows() as f64)),
+        ("cols", sfw_lasso::util::json::Json::Num(ds.cols() as f64)),
+        ("n_points", sfw_lasso::util::json::Json::Num(cfg.n_points as f64)),
+        ("threads", sfw_lasso::util::json::Json::Num(threads as f64)),
+        ("snapshot_bytes", sfw_lasso::util::json::Json::Num(snapshot_bytes as f64)),
+        ("plain_secs", sfw_lasso::util::json::Json::Num(plain.mean)),
+        ("control_only_secs", sfw_lasso::util::json::Json::Num(control_only.mean)),
+        ("final_flush_secs", sfw_lasso::util::json::Json::Num(exit_only.mean)),
+        ("every_boundary_secs", sfw_lasso::util::json::Json::Num(every.mean)),
+        ("resume_secs", sfw_lasso::util::json::Json::Num(resume_secs)),
+        ("overhead_control_only", sfw_lasso::util::json::Json::Num(overhead_control)),
+        ("overhead_final_flush", sfw_lasso::util::json::Json::Num(overhead_exit)),
+        ("overhead_every_boundary", sfw_lasso::util::json::Json::Num(overhead_every)),
+        ("resume_fraction_of_full", sfw_lasso::util::json::Json::Num(resume_fraction)),
+    ]);
+    let path =
+        std::env::var("SFW_BENCH_JSON").unwrap_or_else(|_| "BENCH_checkpoint.json".into());
+    match std::fs::write(&path, report.pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+    }
+    clean(&ckpt);
+}

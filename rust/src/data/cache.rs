@@ -86,9 +86,13 @@ fn sections_len(cols: usize, nnz: usize, y_len: usize) -> usize {
 }
 
 /// Serialize a parsed dataset to `path`. The bytes go to a sibling
-/// temporary file first and are renamed into place, so a crashed or
-/// concurrent writer can never leave a right-length-but-corrupt snapshot
-/// at the final path (rename is atomic on POSIX).
+/// temporary file first, are `fsync`ed, and only then renamed into
+/// place, so neither a crashed writer nor a power cut mid-write can
+/// leave a right-named-but-torn snapshot at the final path (rename is
+/// atomic on POSIX; the fsync keeps the rename from landing before the
+/// data blocks are durable). The v1→v2 upgrade rewrite in
+/// [`load_libsvm`] goes through this same discipline, so an interrupted
+/// upgrade leaves the old v1 snapshot intact rather than a torn v2.
 pub fn write_snapshot(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), String> {
     let tmp = {
         let mut os = path.as_os_str().to_os_string();
@@ -173,7 +177,15 @@ fn write_snapshot_to(path: &Path, x: &CscMatrix, y: &[f64]) -> Result<(), String
     for t in 0..n_tiles {
         put(&encode_tile(&mirror, t)?)?;
     }
-    w.flush().map_err(|e| format!("flush {path:?}: {e}"))
+    w.flush().map_err(|e| format!("flush {path:?}: {e}"))?;
+    // fsync before the caller renames into place: without it the rename
+    // can land while the data blocks are still dirty, and a power cut
+    // leaves a right-named torn snapshot that defeats the temp+rename
+    // atomicity in `write_snapshot`.
+    w.into_inner()
+        .map_err(|e| format!("flush {path:?}: {e}"))?
+        .sync_all()
+        .map_err(|e| format!("fsync {path:?}: {e}"))
 }
 
 /// Fixed-width little-endian section reader over the snapshot bytes.

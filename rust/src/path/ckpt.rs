@@ -1,0 +1,1069 @@
+//! Crash-safe path checkpointing (`.sfwckpt`) and the resilient runner.
+//!
+//! A regularization-path run is a chain of warm-started solves; the unit
+//! of recovery is the **grid-point boundary** — the instant point *i* has
+//! been evaluated and the solver state is exactly the warm-start input of
+//! point *i + 1*. At every boundary the runner records (in memory) the
+//! finished [`PathPoint`], the block's cost accumulators, and a
+//! [`SolverResume`] capture of the cross-point solver state; on a latched
+//! checkpoint-due signal (dot cadence, wall-clock cadence, deadline,
+//! cancellation or shutdown — see [`crate::util::ckpt::RunControl`]) the
+//! whole snapshot is serialized and atomically replaced on disk.
+//!
+//! **Bit-identical resume.** A run killed at any point and resumed via
+//! [`run_path_resilient`] produces the same bit patterns (per-point reg,
+//! ℓ1 norm, MSEs, certified gaps, supports, κ) as an uninterrupted run.
+//! That property dictates what is captured:
+//!
+//! * the FW family snapshots the `(c, S, F, active, α̂, q̂)` iterate
+//!   ([`crate::solvers::linesearch::FwSnapshot`]) **and** the raw
+//!   Xoshiro256 state — re-seeding would replay a different sample
+//!   sequence, and rebuilding `q = Xα` from α rounds differently than the
+//!   incrementally maintained values;
+//! * CD/SCD capture α **and** the maintained residual bit-for-bit
+//!   (rebuilding `R = y − Xα` from scratch is *not* bit-identical to the
+//!   incrementally updated buffer), SCD additionally its RNG;
+//! * APG/FISTA capture α only — both rebuild all momentum state from α
+//!   at the start of every solve, so nothing else survives a boundary.
+//!
+//! Per-point state (adaptive-κ schedule, gap envelope, certificate
+//! cadence, screener) is deliberately *not* captured: the runner
+//! constructs it fresh at every grid point, so replaying the in-progress
+//! point from its boundary reproduces it exactly.
+//!
+//! **Snapshot layout** (`.sfwckpt`, all integers little-endian):
+//!
+//! ```text
+//! magic  b"SFWCKP" | u16 version (= 1)
+//! meta section     | fingerprint u64, n_blocks u64
+//! n_blocks × block section
+//! ```
+//!
+//! Every section is framed `u64 len | body | u64 fnv1a64(body)` — the
+//! same FNV-1a64 discipline as the `.sfwbin` tile cache
+//! ([`crate::linalg::tiles`]). A torn or bit-flipped file fails the
+//! length or checksum check and the loader degrades to the `.prev`
+//! generation kept by [`crate::util::ckpt::atomic_write_file`], then to a
+//! fresh start — never a panic, never a silently wrong resume. The meta
+//! fingerprint hashes everything that defines the run (solver label,
+//! dataset, grid bit patterns, tolerances, seed, block count), so a stale
+//! snapshot from a different configuration is rejected as a whole.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use super::metrics::{PathPoint, PathResult};
+use super::runner::{plan_grid, run_segment, PathConfig, Segment, SolverKind};
+use crate::data::Dataset;
+use crate::linalg::tiles::fnv1a64;
+use crate::linalg::ColumnCache;
+use crate::screening::{ScreenMode, ScreenStats};
+use crate::solvers::linesearch::FwSnapshot;
+use crate::util::ckpt::{
+    atomic_write_file, note_checkpoint_resumed, note_checkpoint_written, prev_path, ByteReader,
+    ByteWriter, RunControl,
+};
+use crate::util::timer::Stopwatch;
+
+const MAGIC: &[u8; 6] = b"SFWCKP";
+const VERSION: u16 = 1;
+/// Decode-time sanity caps (reject absurd sizes before any allocation).
+const MAX_BLOCKS: usize = 4096;
+const MAX_POINTS: usize = 1 << 20;
+const MAX_VEC: usize = 1 << 28;
+const MAX_SECTION: usize = 1 << 30;
+
+// ------------------------------------------------------- captured state
+
+/// Cross-grid-point solver state captured at a boundary — exactly what a
+/// resumed segment needs to continue bit-identically (module docs).
+#[derive(Clone, Debug)]
+pub enum SolverResume {
+    /// FW family: the sparse iterate plus (for the stochastic variants)
+    /// the raw sampling-RNG state.
+    Fw {
+        /// `(c, S, F, active, α̂, q̂)` iterate snapshot
+        snap: FwSnapshot,
+        /// Xoshiro256 `(state, gaussian spare)`; `None` for the
+        /// deterministic solver
+        rng: Option<([u64; 4], Option<f64>)>,
+    },
+    /// Dense-α solvers (CD / SCD / APG / FISTA).
+    Dense {
+        /// full-length coefficient vector
+        alpha: Vec<f64>,
+        /// maintained residual `R = y − Xα` (CD/SCD; `None` for the
+        /// accelerated-gradient solvers, which rebuild from α)
+        residual: Option<Vec<f64>>,
+        /// Xoshiro256 state (SCD only)
+        rng: Option<([u64; 4], Option<f64>)>,
+    },
+}
+
+/// Persistent state of one contiguous grid block.
+#[derive(Clone, Debug, Default)]
+pub struct BlockCkpt {
+    /// completed points, in sweep order (resume never recomputes them)
+    pub points: Vec<PathPoint>,
+    /// solver iterations accumulated by this block
+    pub iters: u64,
+    /// dot products accumulated by this block
+    pub dots: u64,
+    /// solver wall-clock accumulated by this block
+    pub seconds: f64,
+    /// cumulative gap-safe screening counters
+    pub screen: ScreenStats,
+    /// warm-start capture for the next point (`None` before the first
+    /// boundary — a fresh block)
+    pub resume: Option<SolverResume>,
+}
+
+/// A decoded `.sfwckpt` snapshot.
+#[derive(Clone, Debug)]
+pub struct PathCkpt {
+    /// run-configuration fingerprint (staleness check)
+    pub fingerprint: u64,
+    /// one entry per grid block, in block order
+    pub blocks: Vec<BlockCkpt>,
+}
+
+// ------------------------------------------------------------- encoding
+
+fn put_section(out: &mut Vec<u8>, body: &[u8]) {
+    out.extend_from_slice(&(body.len() as u64).to_le_bytes());
+    out.extend_from_slice(body);
+    out.extend_from_slice(&fnv1a64(body).to_le_bytes());
+}
+
+fn take_section<'a>(r: &mut ByteReader<'a>, what: &str) -> Result<&'a [u8], String> {
+    let len = r.usize_capped(MAX_SECTION, &format!("{what} section length"))?;
+    let body = r.take(len)?;
+    let sum = r.u64()?;
+    if fnv1a64(body) != sum {
+        return Err(format!("{what} section checksum mismatch"));
+    }
+    Ok(body)
+}
+
+fn put_f64s(w: &mut ByteWriter, v: &[f64]) {
+    w.put_usize(v.len());
+    for &x in v {
+        w.put_f64(x);
+    }
+}
+
+fn get_f64s(r: &mut ByteReader<'_>, what: &str) -> Result<Vec<f64>, String> {
+    let n = r.usize_capped(MAX_VEC, what)?;
+    let mut out = Vec::with_capacity(n.min(r.remaining() / 8 + 1));
+    for _ in 0..n {
+        out.push(r.f64()?);
+    }
+    Ok(out)
+}
+
+fn put_opt_f64(w: &mut ByteWriter, v: Option<f64>) {
+    match v {
+        Some(x) => {
+            w.put_u64(1);
+            w.put_f64(x);
+        }
+        None => w.put_u64(0),
+    }
+}
+
+fn get_opt_f64(r: &mut ByteReader<'_>) -> Result<Option<f64>, String> {
+    match r.u64()? {
+        0 => Ok(None),
+        1 => Ok(Some(r.f64()?)),
+        t => Err(format!("bad option tag {t}")),
+    }
+}
+
+fn put_rng(w: &mut ByteWriter, rng: &Option<([u64; 4], Option<f64>)>) {
+    match rng {
+        Some((s, cache)) => {
+            w.put_u64(1);
+            for &x in s {
+                w.put_u64(x);
+            }
+            put_opt_f64(w, *cache);
+        }
+        None => w.put_u64(0),
+    }
+}
+
+fn get_rng(r: &mut ByteReader<'_>) -> Result<Option<([u64; 4], Option<f64>)>, String> {
+    match r.u64()? {
+        0 => Ok(None),
+        1 => {
+            let s = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+            Ok(Some((s, get_opt_f64(r)?)))
+        }
+        t => Err(format!("bad rng tag {t}")),
+    }
+}
+
+fn put_point(w: &mut ByteWriter, pt: &PathPoint) {
+    w.put_f64(pt.reg);
+    w.put_f64(pt.l1_norm);
+    w.put_usize(pt.active);
+    w.put_f64(pt.train_mse);
+    put_opt_f64(w, pt.test_mse);
+    w.put_u64(pt.iters);
+    w.put_u64(pt.dots);
+    w.put_u64(u64::from(pt.converged));
+    w.put_f64(pt.screened_frac);
+    put_opt_f64(w, pt.certified_gap);
+    match pt.kappa_final {
+        Some(k) => {
+            w.put_u64(1);
+            w.put_usize(k);
+        }
+        None => w.put_u64(0),
+    }
+    put_f64s(w, &pt.tracked_coefs);
+}
+
+fn get_point(r: &mut ByteReader<'_>) -> Result<PathPoint, String> {
+    Ok(PathPoint {
+        reg: r.f64()?,
+        l1_norm: r.f64()?,
+        active: r.usize_capped(MAX_VEC, "point active")?,
+        train_mse: r.f64()?,
+        test_mse: get_opt_f64(r)?,
+        iters: r.u64()?,
+        dots: r.u64()?,
+        converged: r.u64()? != 0,
+        screened_frac: r.f64()?,
+        certified_gap: get_opt_f64(r)?,
+        kappa_final: match r.u64()? {
+            0 => None,
+            1 => Some(r.usize_capped(MAX_VEC, "point kappa")?),
+            t => return Err(format!("bad kappa tag {t}")),
+        },
+        tracked_coefs: get_f64s(r, "point tracked")?,
+    })
+}
+
+fn put_resume(w: &mut ByteWriter, resume: &Option<SolverResume>) {
+    match resume {
+        None => w.put_u64(0),
+        Some(SolverResume::Fw { snap, rng }) => {
+            w.put_u64(1);
+            w.put_f64(snap.c);
+            w.put_f64(snap.s);
+            w.put_f64(snap.f);
+            w.put_usize(snap.active.len());
+            for &j in &snap.active {
+                w.put_usize(j);
+            }
+            put_f64s(w, &snap.alpha_hat);
+            put_f64s(w, &snap.q_hat);
+            put_rng(w, rng);
+        }
+        Some(SolverResume::Dense { alpha, residual, rng }) => {
+            w.put_u64(2);
+            put_f64s(w, alpha);
+            match residual {
+                Some(res) => {
+                    w.put_u64(1);
+                    put_f64s(w, res);
+                }
+                None => w.put_u64(0),
+            }
+            put_rng(w, rng);
+        }
+    }
+}
+
+fn get_resume(r: &mut ByteReader<'_>) -> Result<Option<SolverResume>, String> {
+    match r.u64()? {
+        0 => Ok(None),
+        1 => {
+            let c = r.f64()?;
+            let s = r.f64()?;
+            let f = r.f64()?;
+            let n = r.usize_capped(MAX_VEC, "fw active")?;
+            let mut active = Vec::with_capacity(n.min(r.remaining() / 8 + 1));
+            for _ in 0..n {
+                active.push(r.usize_capped(MAX_VEC, "fw index")?);
+            }
+            let alpha_hat = get_f64s(r, "fw alpha_hat")?;
+            let q_hat = get_f64s(r, "fw q_hat")?;
+            let rng = get_rng(r)?;
+            Ok(Some(SolverResume::Fw {
+                snap: FwSnapshot { c, s, f, active, alpha_hat, q_hat },
+                rng,
+            }))
+        }
+        2 => {
+            let alpha = get_f64s(r, "dense alpha")?;
+            let residual = match r.u64()? {
+                0 => None,
+                1 => Some(get_f64s(r, "dense residual")?),
+                t => return Err(format!("bad residual tag {t}")),
+            };
+            let rng = get_rng(r)?;
+            Ok(Some(SolverResume::Dense { alpha, residual, rng }))
+        }
+        t => Err(format!("bad resume tag {t}")),
+    }
+}
+
+fn encode_block(blk: &BlockCkpt, idx: usize) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_usize(idx);
+    w.put_usize(blk.points.len());
+    for pt in &blk.points {
+        put_point(&mut w, pt);
+    }
+    w.put_u64(blk.iters);
+    w.put_u64(blk.dots);
+    w.put_f64(blk.seconds);
+    w.put_u64(blk.screen.passes);
+    w.put_u64(blk.screen.screen_dots);
+    w.put_u64(blk.screen.saved_dots);
+    put_resume(&mut w, &blk.resume);
+    w.into_bytes()
+}
+
+fn decode_block(bytes: &[u8], expect_idx: usize) -> Result<BlockCkpt, String> {
+    let mut r = ByteReader::new(bytes);
+    let idx = r.usize_capped(MAX_BLOCKS, "block index")?;
+    if idx != expect_idx {
+        return Err(format!("block index {idx}, expected {expect_idx}"));
+    }
+    let n = r.usize_capped(MAX_POINTS, "block point count")?;
+    let mut points = Vec::with_capacity(n);
+    for _ in 0..n {
+        points.push(get_point(&mut r)?);
+    }
+    let iters = r.u64()?;
+    let dots = r.u64()?;
+    let seconds = r.f64()?;
+    let screen = ScreenStats {
+        passes: r.u64()?,
+        screen_dots: r.u64()?,
+        saved_dots: r.u64()?,
+    };
+    let resume = get_resume(&mut r)?;
+    if r.remaining() != 0 {
+        return Err(format!("{} trailing bytes in block {expect_idx}", r.remaining()));
+    }
+    Ok(BlockCkpt { points, iters, dots, seconds, screen, resume })
+}
+
+impl PathCkpt {
+    /// Serialize to `.sfwckpt` bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        let mut meta = ByteWriter::new();
+        meta.put_u64(self.fingerprint);
+        meta.put_usize(self.blocks.len());
+        put_section(&mut out, &meta.into_bytes());
+        for (i, blk) in self.blocks.iter().enumerate() {
+            put_section(&mut out, &encode_block(blk, i));
+        }
+        out
+    }
+
+    /// Decode `.sfwckpt` bytes. Any torn, truncated, bit-flipped or
+    /// hostile input yields `Err`, never a panic.
+    pub fn decode(bytes: &[u8]) -> Result<PathCkpt, String> {
+        let mut r = ByteReader::new(bytes);
+        if r.take(MAGIC.len())? != MAGIC {
+            return Err("bad magic (not a .sfwckpt file)".into());
+        }
+        let ver = u16::from_le_bytes(r.take(2)?.try_into().unwrap());
+        if ver != VERSION {
+            return Err(format!("unsupported checkpoint version {ver}"));
+        }
+        let meta = take_section(&mut r, "meta")?;
+        let mut mr = ByteReader::new(meta);
+        let fingerprint = mr.u64()?;
+        let n_blocks = mr.usize_capped(MAX_BLOCKS, "n_blocks")?;
+        if mr.remaining() != 0 {
+            return Err("trailing bytes in meta section".into());
+        }
+        let mut blocks = Vec::with_capacity(n_blocks);
+        for i in 0..n_blocks {
+            blocks.push(decode_block(take_section(&mut r, "block")?, i)?);
+        }
+        if r.remaining() != 0 {
+            return Err(format!("{} trailing bytes after last block", r.remaining()));
+        }
+        Ok(PathCkpt { fingerprint, blocks })
+    }
+}
+
+// ---------------------------------------------------------- fingerprint
+
+/// Hash everything that defines the run: a snapshot written under any
+/// other configuration (different grid, tolerances, seed, thread/block
+/// layout, dataset, solver) must be rejected as stale rather than
+/// resumed into a silently wrong answer.
+fn config_fingerprint(
+    kind: SolverKind,
+    ds_name: &str,
+    cfg: &PathConfig,
+    grid: &[f64],
+    n_blocks: usize,
+) -> u64 {
+    let mut w = ByteWriter::new();
+    let label = kind.label();
+    w.put_usize(label.len());
+    w.put_bytes(label.as_bytes());
+    w.put_usize(ds_name.len());
+    w.put_bytes(ds_name.as_bytes());
+    w.put_usize(cfg.n_points);
+    w.put_f64(cfg.opts.eps);
+    w.put_usize(cfg.opts.max_iters);
+    w.put_u64(cfg.opts.seed);
+    w.put_usize(cfg.opts.patience);
+    put_opt_f64(&mut w, cfg.opts.gap_tol);
+    w.put_u64(match cfg.screen {
+        ScreenMode::Off => 0,
+        ScreenMode::Gap => 1,
+        ScreenMode::Aggressive => 2,
+    });
+    w.put_usize(cfg.track.len());
+    for &t in &cfg.track {
+        w.put_usize(t);
+    }
+    w.put_usize(n_blocks);
+    w.put_usize(grid.len());
+    for &g in grid {
+        w.put_f64(g);
+    }
+    fnv1a64(&w.into_bytes())
+}
+
+// -------------------------------------------------------------- recorder
+
+struct Slot {
+    /// accumulators restored from the loaded snapshot (fixed)
+    base: BlockCkpt,
+    /// this process's live contribution (points append; accumulators are
+    /// segment-so-far totals, replaced at every boundary)
+    live: BlockCkpt,
+}
+
+impl Slot {
+    fn merged(&self) -> BlockCkpt {
+        let mut points =
+            Vec::with_capacity(self.base.points.len() + self.live.points.len());
+        points.extend(self.base.points.iter().cloned());
+        points.extend(self.live.points.iter().cloned());
+        let mut screen = self.base.screen;
+        screen.add(self.live.screen);
+        BlockCkpt {
+            points,
+            iters: self.base.iters + self.live.iters,
+            dots: self.base.dots + self.live.dots,
+            seconds: self.base.seconds + self.live.seconds,
+            screen,
+            resume: self.live.resume.clone().or_else(|| self.base.resume.clone()),
+        }
+    }
+}
+
+/// Thread-shared checkpoint recorder: one slot per grid block, updated
+/// in memory at every boundary and flushed atomically on demand. Shared
+/// across the parallel runner's worker threads behind a mutex (boundary
+/// updates are tiny; the encode-and-write happens under the same lock so
+/// concurrent flushes serialize instead of racing on the temp file).
+pub struct CkptRecorder {
+    path: PathBuf,
+    fingerprint: u64,
+    slots: Mutex<Vec<Slot>>,
+}
+
+impl CkptRecorder {
+    /// Recorder for `n_blocks` blocks, seeded with the per-block state
+    /// restored from a loaded snapshot (`Default` bases for a fresh run).
+    pub fn new(path: PathBuf, fingerprint: u64, bases: Vec<BlockCkpt>) -> Self {
+        let slots = bases
+            .into_iter()
+            .map(|base| Slot { base, live: BlockCkpt::default() })
+            .collect();
+        CkptRecorder { path, fingerprint, slots: Mutex::new(slots) }
+    }
+
+    /// Record a finished grid point for `block`: append the point, replace
+    /// the block's live accumulators with the segment-so-far totals, and
+    /// stash the warm-start capture for the next point.
+    #[allow(clippy::too_many_arguments)]
+    pub fn note_boundary_state(
+        &self,
+        block: usize,
+        point: PathPoint,
+        live_iters: u64,
+        live_dots: u64,
+        live_seconds: f64,
+        live_screen: ScreenStats,
+        resume: Option<SolverResume>,
+    ) {
+        let mut slots = self.slots.lock().unwrap();
+        let s = &mut slots[block];
+        s.live.points.push(point);
+        s.live.iters = live_iters;
+        s.live.dots = live_dots;
+        s.live.seconds = live_seconds;
+        s.live.screen = live_screen;
+        s.live.resume = resume;
+    }
+
+    /// Serialize every block and atomically replace the snapshot file.
+    pub fn write(&self) -> Result<(), String> {
+        let slots = self.slots.lock().unwrap();
+        let ck = PathCkpt {
+            fingerprint: self.fingerprint,
+            blocks: slots.iter().map(Slot::merged).collect(),
+        };
+        let bytes = ck.encode();
+        drop(slots);
+        atomic_write_file(&self.path, &bytes)?;
+        note_checkpoint_written();
+        Ok(())
+    }
+}
+
+// ----------------------------------------------------------- the loader
+
+fn resume_shapes_ok(resume: &SolverResume, p: usize, m: usize) -> bool {
+    match resume {
+        SolverResume::Fw { snap, .. } => {
+            snap.active.len() == snap.alpha_hat.len()
+                && snap.q_hat.len() == m
+                && snap.active.iter().all(|&j| j < p)
+        }
+        SolverResume::Dense { alpha, residual, .. } => {
+            alpha.len() == p && residual.as_ref().map(|r| r.len() == m).unwrap_or(true)
+        }
+    }
+}
+
+fn validate_ckpt(
+    ck: &PathCkpt,
+    fingerprint: u64,
+    blocks: &[(usize, usize)],
+    p: usize,
+    m: usize,
+) -> Result<(), String> {
+    if ck.fingerprint != fingerprint {
+        return Err(format!(
+            "stale snapshot: fingerprint {:#018x} != {:#018x} (configuration changed)",
+            ck.fingerprint, fingerprint
+        ));
+    }
+    if ck.blocks.len() != blocks.len() {
+        return Err(format!(
+            "snapshot has {} blocks, run has {}",
+            ck.blocks.len(),
+            blocks.len()
+        ));
+    }
+    for (b, (blk, &(lo, hi))) in ck.blocks.iter().zip(blocks).enumerate() {
+        if blk.points.len() > hi - lo {
+            return Err(format!(
+                "block {b} has {} points for a {}-point block",
+                blk.points.len(),
+                hi - lo
+            ));
+        }
+        if !blk.points.is_empty() && blk.points.len() < hi - lo {
+            match &blk.resume {
+                Some(r) if resume_shapes_ok(r, p, m) => {}
+                Some(_) => return Err(format!("block {b} resume state has wrong shape")),
+                None => return Err(format!("block {b} has points but no resume state")),
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load and validate a snapshot for this run configuration, degrading
+/// through the generations: the final path first, then the `.prev`
+/// sibling, then `None` (fresh start). Every failure is reported on
+/// stderr and degraded past — torn, corrupt, stale or missing snapshots
+/// never panic and never resume into a wrong answer.
+fn load_checkpoint(
+    path: &Path,
+    fingerprint: u64,
+    blocks: &[(usize, usize)],
+    p: usize,
+    m: usize,
+) -> Option<PathCkpt> {
+    for candidate in [path.to_path_buf(), prev_path(path)] {
+        let bytes = match std::fs::read(&candidate) {
+            Ok(b) => b,
+            Err(_) => continue,
+        };
+        match PathCkpt::decode(&bytes)
+            .and_then(|ck| validate_ckpt(&ck, fingerprint, blocks, p, m).map(|()| ck))
+        {
+            Ok(ck) => return Some(ck),
+            Err(e) => {
+                eprintln!("warning: ignoring checkpoint {candidate:?}: {e}");
+            }
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------- segment-side hooks
+
+/// Per-segment handle threaded into the segment runner: the shared run
+/// control, the (optional) recorder, this segment's block index, and the
+/// warm-start capture to restore before the first point.
+pub struct SegmentCtl {
+    /// shared cancellation / deadline / cadence handle
+    pub control: RunControl,
+    /// shared snapshot recorder (`None` = control without checkpointing,
+    /// e.g. a server job with a deadline but no checkpoint path)
+    pub recorder: Option<Arc<CkptRecorder>>,
+    /// index of this segment's block in the recorder
+    pub block_idx: usize,
+    /// solver state to restore before the first grid point
+    pub resume: Option<SolverResume>,
+}
+
+impl SegmentCtl {
+    /// Control-only handle (no checkpointing): block 0, nothing to resume.
+    pub fn control_only(control: RunControl) -> Self {
+        SegmentCtl { control, recorder: None, block_idx: 0, resume: None }
+    }
+
+    /// Flush the recorder (segment exit — the final state of a complete
+    /// or interrupted block). Write failures degrade to a warning: the
+    /// run's in-memory result is unaffected.
+    pub fn final_flush(&self) {
+        if let Some(rec) = &self.recorder {
+            if let Err(e) = rec.write() {
+                eprintln!("warning: final checkpoint write failed: {e}");
+            }
+        }
+    }
+}
+
+/// Grid-point boundary hook, called by the segment runner right after a
+/// point is pushed: record the boundary state in memory, flush to disk
+/// if a checkpoint is due (cadence latch, stop, or graceful shutdown),
+/// and report whether the segment should stop. `capture` is only invoked
+/// when a recorder is attached.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn segment_boundary<F>(
+    ctl: &SegmentCtl,
+    last: &PathPoint,
+    iters: u64,
+    dots: u64,
+    seconds: f64,
+    screen: ScreenStats,
+    capture: F,
+) -> bool
+where
+    F: FnOnce() -> Option<SolverResume>,
+{
+    // count the boundary first: the chaos kill-after trigger fires *at*
+    // boundary n, and the write below then persists exactly n points
+    ctl.control.note_boundary();
+    let stopping = ctl.control.stopped();
+    let shutdown = ctl.control.shutdown_requested();
+    let due = ctl.control.take_checkpoint_due() || stopping || shutdown;
+    if let Some(rec) = &ctl.recorder {
+        rec.note_boundary_state(
+            ctl.block_idx,
+            last.clone(),
+            iters,
+            dots,
+            seconds,
+            screen,
+            capture(),
+        );
+        if due {
+            if let Err(e) = rec.write() {
+                eprintln!("warning: checkpoint write failed: {e}");
+            }
+        }
+    }
+    stopping || shutdown
+}
+
+// ------------------------------------------------------ resilient runner
+
+/// Options for [`run_path_resilient`].
+#[derive(Default)]
+pub struct ResilientOptions {
+    /// snapshot path (`None` = run under control but never checkpoint)
+    pub checkpoint: Option<PathBuf>,
+    /// attempt to restore a snapshot before running
+    pub resume: bool,
+    /// shared cancellation / deadline / cadence handle (arm cadences and
+    /// deadlines on it before calling)
+    pub control: RunControl,
+}
+
+/// Outcome of a resilient path run.
+pub struct PathRunOutcome {
+    /// the (possibly partial) path result, points in grid order
+    pub result: PathResult,
+    /// whether every grid point completed (false = interrupted; the
+    /// checkpoint holds the frontier and a later `resume` run continues)
+    pub complete: bool,
+    /// grid points restored from the checkpoint rather than recomputed
+    pub resumed_points: usize,
+}
+
+/// Crash-safe, cancellable variant of
+/// [`run_path_parallel`](super::runner::run_path_parallel): the same
+/// block decomposition and bit-identical results, plus checkpoint /
+/// resume / cooperative-stop support via [`ResilientOptions`].
+///
+/// An uninterrupted run with `threads` blocks produces byte-for-byte the
+/// points of `run_path_parallel(ds, kind, cfg, threads)`; a run killed
+/// at any moment and resumed (same configuration, same `threads`)
+/// converges to that same result, recomputing at most the in-progress
+/// point of each block. Thread count participates in the snapshot
+/// fingerprint — a snapshot taken under a different block layout is
+/// rejected as stale (the warm-start chunking differs, so its points
+/// would not be comparable).
+pub fn run_path_resilient(
+    ds: &Dataset,
+    kind: SolverKind,
+    cfg: &PathConfig,
+    threads: usize,
+    opts: &ResilientOptions,
+) -> PathRunOutcome {
+    let threads = threads.max(1);
+    let mut sw = Stopwatch::started();
+    let cache = ColumnCache::build(&ds.x, &ds.y);
+    let grid = plan_grid(ds, &cache, kind, cfg, &mut sw);
+    let values = grid.values();
+    let p = ds.cols();
+    let m = ds.rows();
+    let mut total_dots = p as u64; // σ setup, counted once
+    let lipschitz = match kind {
+        SolverKind::ApgConst | SolverKind::FistaReg => {
+            total_dots += 60 * p as u64;
+            Some(ds.x.spectral_norm_sq(30, cfg.opts.seed))
+        }
+        _ => None,
+    };
+    let blocks = crate::parallel::shard_bounds(values.len(), threads);
+    let fingerprint = config_fingerprint(kind, &ds.name, cfg, values, blocks.len());
+    sw.stop();
+
+    // restore the frontier (resume) and seed the recorder with it
+    let mut bases: Vec<BlockCkpt> = vec![BlockCkpt::default(); blocks.len()];
+    let mut resumed_points = 0usize;
+    if opts.resume {
+        if let Some(path) = &opts.checkpoint {
+            if let Some(ck) = load_checkpoint(path, fingerprint, &blocks, p, m) {
+                resumed_points = ck.blocks.iter().map(|b| b.points.len()).sum();
+                bases = ck.blocks;
+                note_checkpoint_resumed();
+            }
+        }
+    }
+    let recorder = opts
+        .checkpoint
+        .as_ref()
+        .map(|path| Arc::new(CkptRecorder::new(path.clone(), fingerprint, bases.clone())));
+
+    let segs: Vec<Option<Segment>> =
+        crate::parallel::run_tasks(threads, blocks.len(), |b| {
+            let (lo, hi) = blocks[b];
+            let done = bases[b].points.len();
+            if lo + done >= hi {
+                return None; // block already complete in the snapshot
+            }
+            let ctl = SegmentCtl {
+                control: opts.control.clone(),
+                recorder: recorder.clone(),
+                block_idx: b,
+                resume: bases[b].resume.clone(),
+            };
+            Some(run_segment(
+                ds,
+                &cache,
+                kind,
+                cfg,
+                &values[lo + done..hi],
+                lipschitz,
+                Some(&ctl),
+            ))
+        });
+
+    let mut points: Vec<PathPoint> = Vec::with_capacity(values.len());
+    let mut total_iters = 0u64;
+    let mut critical_path = 0.0f64;
+    let mut screen = ScreenStats::default();
+    let mut complete = true;
+    for (b, seg) in segs.into_iter().enumerate() {
+        let (lo, hi) = blocks[b];
+        let base = std::mem::take(&mut bases[b]);
+        let mut n_points = base.points.len();
+        points.extend(base.points);
+        total_iters += base.iters;
+        total_dots += base.dots;
+        screen.add(base.screen);
+        let mut seconds = base.seconds;
+        if let Some(seg) = seg {
+            n_points += seg.points.len();
+            points.extend(seg.points);
+            total_iters += seg.iters;
+            total_dots += seg.dots;
+            screen.add(seg.screen);
+            seconds += seg.seconds;
+        }
+        critical_path = critical_path.max(seconds);
+        if n_points < hi - lo {
+            complete = false;
+        }
+    }
+
+    PathRunOutcome {
+        result: PathResult {
+            solver: kind.label(),
+            dataset: ds.name.clone(),
+            points,
+            seconds: sw.elapsed_secs() + critical_path,
+            total_iters,
+            total_dots,
+            screen_passes: screen.passes,
+            screen_dots: screen.screen_dots,
+            screen_saved_dots: screen.saved_dots,
+        },
+        complete,
+        resumed_points,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{load, Named};
+    use crate::solvers::sampling::SamplingStrategy;
+    use crate::solvers::SolveOptions;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("sfw_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{tag}.sfwckpt"))
+    }
+
+    fn sample_ckpt() -> PathCkpt {
+        let pt = PathPoint {
+            reg: 0.5,
+            l1_norm: 1.25,
+            active: 3,
+            train_mse: 0.01,
+            test_mse: Some(0.02),
+            iters: 42,
+            dots: 4200,
+            converged: true,
+            screened_frac: 0.5,
+            certified_gap: Some(1e-6),
+            kappa_final: Some(17),
+            tracked_coefs: vec![0.1, -0.2],
+        };
+        let fw = SolverResume::Fw {
+            snap: FwSnapshot {
+                c: 1.5,
+                s: 2.5,
+                f: -3.5,
+                active: vec![0, 4],
+                alpha_hat: vec![0.25, -0.75],
+                q_hat: vec![0.0; 6],
+            },
+            rng: Some(([1, 2, 3, 4], Some(-0.5))),
+        };
+        let dense = SolverResume::Dense {
+            alpha: vec![0.0, 1.0, 0.0, -2.0, 0.0],
+            residual: Some(vec![0.5; 6]),
+            rng: None,
+        };
+        PathCkpt {
+            fingerprint: 0xDEAD_BEEF_CAFE_F00D,
+            blocks: vec![
+                BlockCkpt {
+                    points: vec![pt.clone(), pt],
+                    iters: 84,
+                    dots: 8400,
+                    seconds: 1.5,
+                    screen: ScreenStats { passes: 2, screen_dots: 10, saved_dots: 20 },
+                    resume: Some(fw),
+                },
+                BlockCkpt { resume: Some(dense), ..Default::default() },
+            ],
+        }
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let ck = sample_ckpt();
+        let bytes = ck.encode();
+        let back = PathCkpt::decode(&bytes).unwrap();
+        assert_eq!(back.fingerprint, ck.fingerprint);
+        assert_eq!(back.blocks.len(), 2);
+        let b0 = &back.blocks[0];
+        assert_eq!(b0.points.len(), 2);
+        assert_eq!(b0.points[0].reg.to_bits(), 0.5f64.to_bits());
+        assert_eq!(b0.points[0].kappa_final, Some(17));
+        assert_eq!(b0.iters, 84);
+        assert_eq!(b0.screen.saved_dots, 20);
+        match b0.resume.as_ref().unwrap() {
+            SolverResume::Fw { snap, rng } => {
+                assert_eq!(snap.active, vec![0, 4]);
+                assert_eq!(snap.alpha_hat[1].to_bits(), (-0.75f64).to_bits());
+                assert_eq!(*rng, Some(([1, 2, 3, 4], Some(-0.5))));
+            }
+            other => panic!("wrong resume variant: {other:?}"),
+        }
+        match back.blocks[1].resume.as_ref().unwrap() {
+            SolverResume::Dense { alpha, residual, rng } => {
+                assert_eq!(alpha.len(), 5);
+                assert_eq!(residual.as_ref().unwrap().len(), 6);
+                assert!(rng.is_none());
+            }
+            other => panic!("wrong resume variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn every_truncation_detected() {
+        let bytes = sample_ckpt().encode();
+        for cut in 0..bytes.len() {
+            assert!(
+                PathCkpt::decode(&bytes[..cut]).is_err(),
+                "truncation at {cut}/{} accepted",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn every_single_bit_flip_detected_or_harmless() {
+        // flip one bit in every byte: the decode must either fail (the
+        // checksum catches it) or — never — change decoded content
+        // silently while still matching the checksum (FNV is not crypto,
+        // but a single flip always changes the hash)
+        let bytes = sample_ckpt().encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x10;
+            if let Ok(ck) = PathCkpt::decode(&bad) {
+                // flips confined to the magic/version/framing always
+                // error; a surviving decode is impossible for body bytes
+                // because each section is checksummed
+                panic!("bit flip at byte {i} decoded silently: {:#x}", ck.fingerprint);
+            }
+        }
+    }
+
+    #[test]
+    fn loader_degrades_to_prev_then_fresh() {
+        let path = tmp_path("degrade");
+        let ck = sample_ckpt();
+        let blocks = vec![(0usize, 4usize), (4, 8)];
+        // generation 1 lands, then generation 2; torn final → prev wins
+        atomic_write_file(&path, &ck.encode()).unwrap();
+        let mut ck2 = ck.clone();
+        ck2.blocks[0].iters = 999;
+        atomic_write_file(&path, &ck2.encode()).unwrap();
+        std::fs::write(&path, &ck2.encode()[..10]).unwrap(); // tear the final
+        let got = load_checkpoint(&path, ck.fingerprint, &blocks, 5, 6).unwrap();
+        assert_eq!(got.blocks[0].iters, 84, "fell back to the .prev generation");
+        // both torn → fresh
+        std::fs::write(prev_path(&path), b"junk").unwrap();
+        assert!(load_checkpoint(&path, ck.fingerprint, &blocks, 5, 6).is_none());
+        // stale fingerprint → fresh
+        std::fs::remove_file(&path).ok();
+        atomic_write_file(&path, &ck.encode()).unwrap();
+        assert!(load_checkpoint(&path, ck.fingerprint ^ 1, &blocks, 5, 6).is_none());
+        // wrong shapes (p/m mismatch) → fresh
+        assert!(load_checkpoint(&path, ck.fingerprint, &blocks, 5, 7).is_none());
+    }
+
+    #[test]
+    fn resilient_matches_parallel_uninterrupted() {
+        let ds = load(Named::Synth10k { relevant: 8 }, 0.01, 5);
+        let cfg = PathConfig {
+            n_points: 8,
+            opts: SolveOptions { eps: 1e-3, max_iters: 2_000, ..Default::default() },
+            delta_max: Some(2.0),
+            ..Default::default()
+        };
+        let kind = SolverKind::Sfw(SamplingStrategy::Fraction(0.3));
+        for threads in [1usize, 3] {
+            let base = super::super::runner::run_path_parallel(&ds, kind, &cfg, threads);
+            let out = run_path_resilient(&ds, kind, &cfg, threads, &ResilientOptions::default());
+            assert!(out.complete);
+            assert_eq!(out.resumed_points, 0);
+            assert_eq!(out.result.points.len(), base.points.len());
+            for (a, b) in out.result.points.iter().zip(base.points.iter()) {
+                assert_eq!(a.reg.to_bits(), b.reg.to_bits());
+                assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits());
+                assert_eq!(a.l1_norm.to_bits(), b.l1_norm.to_bits());
+                assert_eq!(a.active, b.active);
+                assert_eq!(a.iters, b.iters);
+            }
+            assert_eq!(out.result.total_dots, base.total_dots);
+            assert_eq!(out.result.total_iters, base.total_iters);
+        }
+    }
+
+    #[test]
+    fn kill_and_resume_is_bit_identical() {
+        let ds = load(Named::Synth10k { relevant: 8 }, 0.01, 5);
+        let cfg = PathConfig {
+            n_points: 6,
+            opts: SolveOptions { eps: 1e-3, max_iters: 2_000, ..Default::default() },
+            delta_max: Some(2.0),
+            ..Default::default()
+        };
+        let kind = SolverKind::Sfw(SamplingStrategy::Fraction(0.3));
+        let base = run_path_resilient(&ds, kind, &cfg, 1, &ResilientOptions::default());
+        assert!(base.complete);
+
+        let path = tmp_path("kill_resume");
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(prev_path(&path)).ok();
+        // kill after 2 boundaries, then resume to completion
+        let ctrl = RunControl::new();
+        ctrl.kill_after_boundaries(2);
+        let first = run_path_resilient(
+            &ds,
+            kind,
+            &cfg,
+            1,
+            &ResilientOptions { checkpoint: Some(path.clone()), resume: false, control: ctrl },
+        );
+        assert!(!first.complete);
+        assert_eq!(first.result.points.len(), 2);
+        let second = run_path_resilient(
+            &ds,
+            kind,
+            &cfg,
+            1,
+            &ResilientOptions {
+                checkpoint: Some(path.clone()),
+                resume: true,
+                control: RunControl::new(),
+            },
+        );
+        assert!(second.complete);
+        assert_eq!(second.resumed_points, 2);
+        assert_eq!(second.result.points.len(), base.result.points.len());
+        for (a, b) in second.result.points.iter().zip(base.result.points.iter()) {
+            assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits());
+            assert_eq!(a.l1_norm.to_bits(), b.l1_norm.to_bits());
+            assert_eq!(a.certified_gap.map(f64::to_bits), b.certified_gap.map(f64::to_bits));
+            assert_eq!(a.active, b.active);
+            assert_eq!(a.kappa_final, b.kappa_final);
+        }
+        assert_eq!(second.result.total_iters, base.result.total_iters);
+    }
+}

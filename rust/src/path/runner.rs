@@ -27,6 +27,7 @@
 //! first grid point and the steady-state sweep performs no per-iteration
 //! allocation.
 
+use super::ckpt::{self, SegmentCtl, SolverResume};
 use super::grid::{delta_grid, lambda_grid, LogGrid};
 use super::metrics::{evaluate_point, PathPoint, PathResult};
 use crate::data::Dataset;
@@ -222,14 +223,14 @@ pub fn plan_delta_max(ds: &Dataset, cache: &ColumnCache, n_points: usize) -> (f6
 }
 
 /// Output of one contiguous grid segment.
-struct Segment {
-    points: Vec<PathPoint>,
-    iters: u64,
-    dots: u64,
+pub(super) struct Segment {
+    pub(super) points: Vec<PathPoint>,
+    pub(super) iters: u64,
+    pub(super) dots: u64,
     /// solver wall-clock (metric evaluation excluded, setup included)
-    seconds: f64,
+    pub(super) seconds: f64,
     /// cumulative gap-safe screening counters (zero when off)
-    screen: ScreenStats,
+    pub(super) screen: ScreenStats,
 }
 
 /// Plan the full grid for `(ds, kind, cfg)`. Grid planning (the paper's
@@ -237,7 +238,7 @@ struct Segment {
 /// experimental setup, not solver work: it is excluded from time and dot
 /// accounting, exactly as Table 5 does — `sw` is paused around it. Benches
 /// plan once per dataset and pass `delta_max` explicitly.
-fn plan_grid(
+pub(super) fn plan_grid(
     ds: &Dataset,
     cache: &ColumnCache,
     kind: SolverKind,
@@ -290,6 +291,43 @@ fn push_point(
     sw.start();
 }
 
+/// Per-point cooperative stop check (heartbeat refresh included); false
+/// when the segment runs without a control.
+fn stop_tick(ctl: Option<&SegmentCtl>) -> bool {
+    ctl.map(|c| c.control.tick()).unwrap_or(false)
+}
+
+/// Grid-point boundary hook: pause the solver clock, hand the boundary
+/// state to the checkpoint layer, and report whether the segment should
+/// stop (cancellation, deadline, or graceful shutdown).
+fn boundary<F>(
+    ctl: Option<&SegmentCtl>,
+    sw: &mut Stopwatch,
+    points: &[PathPoint],
+    iters: u64,
+    dots: u64,
+    screener: &Option<Screener>,
+    capture: F,
+) -> bool
+where
+    F: FnOnce() -> Option<SolverResume>,
+{
+    let Some(c) = ctl else { return false };
+    sw.stop();
+    let stats = screener.as_ref().map(|s| s.stats()).unwrap_or_default();
+    let stop = ckpt::segment_boundary(
+        c,
+        points.last().expect("boundary hook runs after a push"),
+        iters,
+        dots,
+        sw.elapsed_secs(),
+        stats,
+        capture,
+    );
+    sw.start();
+    stop
+}
+
 /// Run one contiguous block of grid values with warm starts inside the
 /// block. `grid` must carry λ values for penalized kinds and δ values for
 /// constrained kinds (as produced by [`plan_grid`]). `lipschitz` is an
@@ -297,13 +335,20 @@ fn push_point(
 /// computes (and dot-counts) it inside the segment, exactly like the
 /// sequential sweep; the parallel runner computes it once and shares it so
 /// per-block setup is neither repeated nor double-counted.
-fn run_segment(
+///
+/// `ctl` attaches the crash-safety layer (`path::ckpt`): restore the
+/// segment's warm-start capture before the first point, check the shared
+/// [`crate::util::ckpt::RunControl`] at every grid point (and, for the
+/// FW family, every solver iteration), and record/flush boundary
+/// snapshots. `None` is the plain uncontrolled sweep — zero overhead.
+pub(super) fn run_segment(
     ds: &Dataset,
     cache: &ColumnCache,
     kind: SolverKind,
     cfg: &PathConfig,
     grid: &[f64],
     lipschitz: Option<f64>,
+    ctl: Option<&SegmentCtl>,
 ) -> Segment {
     let prob = Problem::new(&ds.x, &ds.y, cache);
     let p = prob.p();
@@ -326,7 +371,19 @@ fn run_segment(
             };
             let mut apg = Apg::new(cfg.opts, l);
             let mut alpha = vec![0.0; p];
+            // APG rebuilds all momentum state from α at every solve, so a
+            // boundary capture is α alone (ckpt.rs module docs)
+            if let Some(SolverResume::Dense { alpha: a, .. }) =
+                ctl.and_then(|c| c.resume.as_ref())
+            {
+                if a.len() == p {
+                    alpha.copy_from_slice(a);
+                }
+            }
             for &delta in grid {
+                if stop_tick(ctl) {
+                    break;
+                }
                 let mut entry = 0u64;
                 if let Some(s) = screener.as_mut() {
                     // δ is ascending, so the warm start is feasible here
@@ -340,6 +397,15 @@ fn run_segment(
                     &mut points, ds, &mut sw, &alpha, delta, &res, entry, &screener,
                     &cfg.track,
                 );
+                if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
+                    Some(SolverResume::Dense {
+                        alpha: alpha.clone(),
+                        residual: None,
+                        rng: None,
+                    })
+                }) {
+                    break;
+                }
             }
         }
         SolverKind::FwDet | SolverKind::Sfw(_) | SolverKind::Asfw(_) | SolverKind::Pfw(_) => {
@@ -353,8 +419,29 @@ fn run_segment(
                     crate::solvers::sfw::NativeBackend::new(),
                 )
             });
-            let fw = FrankWolfe::new(cfg.opts);
+            let mut fw = FrankWolfe::new(cfg.opts);
+            if let Some(c) = ctl {
+                // bit-identical resume: restore the exact iterate *and*
+                // the sampling-RNG stream captured at the boundary —
+                // re-deriving either replays a different trajectory
+                if let Some(SolverResume::Fw { snap, rng }) = &c.resume {
+                    match FwState::from_snapshot(p, snap) {
+                        Ok(st) => state = st,
+                        Err(e) => eprintln!("warning: ignoring FW resume snapshot: {e}"),
+                    }
+                    if let (Some(s), Some((rs, cache))) = (sfw.as_mut(), rng) {
+                        s.set_rng_state(*rs, *cache);
+                    }
+                }
+                fw.set_control(c.control.clone());
+                if let Some(s) = sfw.as_mut() {
+                    s.set_control(c.control.clone());
+                }
+            }
             for &delta in grid {
+                if stop_tick(ctl) {
+                    break;
+                }
                 // §5 warm-start heuristic: scale the previous solution
                 // onto the new boundary
                 state.rescale_to_radius(delta);
@@ -367,6 +454,12 @@ fn run_segment(
                     Some(s) => s.run_with_screen(&prob, &mut state, delta, screener.as_mut()),
                     None => fw.run_with_screen(&prob, &mut state, delta, screener.as_mut()),
                 };
+                // a controlled solver may have stopped mid-solve: the
+                // point is partial, so discard it — resume replays it in
+                // full from the last boundary capture
+                if ctl.map(|c| c.control.stopped()).unwrap_or(false) {
+                    break;
+                }
                 iters += res.iters;
                 dots += res.dots + entry;
                 sw.stop();
@@ -376,13 +469,42 @@ fn run_segment(
                     &mut points, ds, &mut sw, &alpha_buf, delta, &res, entry, &screener,
                     &cfg.track,
                 );
+                if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
+                    Some(SolverResume::Fw {
+                        snap: state.snapshot(),
+                        rng: sfw.as_ref().map(|s| s.rng_state()),
+                    })
+                }) {
+                    break;
+                }
             }
         }
         SolverKind::Cd => {
             let mut cd = CoordinateDescent::new(cfg.opts);
             let mut alpha = vec![0.0; p];
-            cd.reset_residual(&prob, &alpha);
+            let mut restored = false;
+            // the maintained residual must round-trip bit-for-bit —
+            // rebuilding it from α rounds differently (ckpt.rs docs)
+            if let Some(SolverResume::Dense { alpha: a, residual, .. }) =
+                ctl.and_then(|c| c.resume.as_ref())
+            {
+                if a.len() == p {
+                    alpha.copy_from_slice(a);
+                    if let Some(r) = residual {
+                        if r.len() == prob.m() {
+                            cd.set_residual(r);
+                            restored = true;
+                        }
+                    }
+                }
+            }
+            if !restored {
+                cd.reset_residual(&prob, &alpha);
+            }
             for &lam in grid {
+                if stop_tick(ctl) {
+                    break;
+                }
                 let mut entry = 0u64;
                 if let Some(s) = screener.as_mut() {
                     s.reset_full();
@@ -395,13 +517,46 @@ fn run_segment(
                     &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
                     &cfg.track,
                 );
+                if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
+                    Some(SolverResume::Dense {
+                        alpha: alpha.clone(),
+                        residual: Some(cd.residual().to_vec()),
+                        rng: None,
+                    })
+                }) {
+                    break;
+                }
             }
         }
         SolverKind::Scd => {
             let mut scd = StochasticCd::new(cfg.opts);
             let mut alpha = vec![0.0; p];
-            scd.reset_residual(&prob, &alpha);
+            let mut restored = false;
+            if let Some(SolverResume::Dense { alpha: a, residual, rng }) =
+                ctl.and_then(|c| c.resume.as_ref())
+            {
+                if a.len() == p {
+                    alpha.copy_from_slice(a);
+                    if let Some(r) = residual {
+                        if r.len() == prob.m() {
+                            scd.set_residual(r);
+                            restored = true;
+                        }
+                    }
+                    // the coordinate-draw stream continues where it left
+                    // off — reseeding would draw a different sequence
+                    if let Some((rs, cache)) = rng {
+                        scd.set_rng_state(*rs, *cache);
+                    }
+                }
+            }
+            if !restored {
+                scd.reset_residual(&prob, &alpha);
+            }
             for &lam in grid {
+                if stop_tick(ctl) {
+                    break;
+                }
                 let mut entry = 0u64;
                 if let Some(s) = screener.as_mut() {
                     s.reset_full();
@@ -414,6 +569,15 @@ fn run_segment(
                     &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
                     &cfg.track,
                 );
+                if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
+                    Some(SolverResume::Dense {
+                        alpha: alpha.clone(),
+                        residual: Some(scd.residual().to_vec()),
+                        rng: Some(scd.rng_state()),
+                    })
+                }) {
+                    break;
+                }
             }
         }
         SolverKind::FistaReg => {
@@ -427,7 +591,18 @@ fn run_segment(
             let mut fista = Fista::new(cfg.opts, l);
             let mut alpha = vec![0.0; p];
             let mut rbuf = vec![0.0; prob.m()];
+            // FISTA, like APG, rebuilds momentum state from α per solve
+            if let Some(SolverResume::Dense { alpha: a, .. }) =
+                ctl.and_then(|c| c.resume.as_ref())
+            {
+                if a.len() == p {
+                    alpha.copy_from_slice(a);
+                }
+            }
             for &lam in grid {
+                if stop_tick(ctl) {
+                    break;
+                }
                 let mut entry = 0u64;
                 if let Some(s) = screener.as_mut() {
                     // FISTA keeps no residual between runs: rebuild y − Xα
@@ -447,11 +622,26 @@ fn run_segment(
                     &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
                     &cfg.track,
                 );
+                if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
+                    Some(SolverResume::Dense {
+                        alpha: alpha.clone(),
+                        residual: None,
+                        rng: None,
+                    })
+                }) {
+                    break;
+                }
             }
         }
     }
 
     sw.stop();
+    // flush the final frontier: a complete block's snapshot marks it
+    // done, an interrupted block's snapshot is the resume point even if
+    // the last boundary missed its cadence window
+    if let Some(c) = ctl {
+        c.final_flush();
+    }
     let screen = screener.map(|s| s.stats()).unwrap_or_default();
     Segment { points, iters, dots, seconds: sw.elapsed_secs(), screen }
 }
@@ -462,7 +652,7 @@ pub fn run_path(ds: &Dataset, kind: SolverKind, cfg: &PathConfig) -> PathResult 
     let cache = ColumnCache::build(&ds.x, &ds.y);
     let grid = plan_grid(ds, &cache, kind, cfg, &mut sw);
     sw.stop();
-    let seg = run_segment(ds, &cache, kind, cfg, grid.values(), None);
+    let seg = run_segment(ds, &cache, kind, cfg, grid.values(), None, None);
     // setup cost: σ = Xᵀy is p dot products (paper counts it once per path)
     let p = ds.cols() as u64;
     PathResult {
@@ -522,7 +712,7 @@ pub fn run_path_parallel(
     let blocks = crate::parallel::shard_bounds(values.len(), threads);
     let segs = crate::parallel::run_tasks(threads, blocks.len(), |b| {
         let (lo, hi) = blocks[b];
-        run_segment(ds, &cache, kind, cfg, &values[lo..hi], lipschitz)
+        run_segment(ds, &cache, kind, cfg, &values[lo..hi], lipschitz, None)
     });
 
     let mut points: Vec<PathPoint> = Vec::with_capacity(values.len());

@@ -19,14 +19,16 @@ use super::cache::DatasetCache;
 use crate::coordinator::{jobs, report};
 use crate::data::Dataset;
 use crate::linalg::ColumnCache;
-use crate::path::{PathConfig, PathResult, SolverKind};
+use crate::path::{run_path_resilient, PathConfig, PathResult, ResilientOptions, SolverKind};
 use crate::screening::ScreenMode;
 use crate::solvers::linesearch::FwState;
 use crate::solvers::sampling::SamplingStrategy;
 use crate::solvers::sfw::{NativeBackend, StochasticFw};
 use crate::solvers::variants::FwVariant;
 use crate::solvers::{Problem, SolveOptions};
+use crate::util::ckpt::RunControl;
 use crate::util::json::{Json, JsonError};
+use std::path::PathBuf;
 use std::sync::Arc;
 
 /// A typed request failure: HTTP status, machine-readable kind, human
@@ -314,8 +316,16 @@ pub fn parse_solve(body: &Json, allow_files: bool) -> Result<SolveRequest, ApiEr
 
 /// Execute a validated solve against a resident dataset — the exact
 /// sequence of the CLI `solve` command, so results are bit-identical to
-/// a local run with the same inputs.
-pub fn run_solve(req: &SolveRequest, ds: &Dataset, cached: bool) -> Result<Json, ApiError> {
+/// a local run with the same inputs. The job's [`RunControl`] is
+/// attached to the solver: it heartbeats every iteration (watchdog
+/// liveness) and stops at the next iteration once the request deadline
+/// passes or the connection handler cancels it.
+pub fn run_solve(
+    req: &SolveRequest,
+    ds: &Dataset,
+    cached: bool,
+    ctrl: &RunControl,
+) -> Result<Json, ApiError> {
     let cache = ColumnCache::build(&ds.x, &ds.y);
     let prob = Problem::new(&ds.x, &ds.y, &cache);
     let strategy = if req.adaptive {
@@ -329,10 +339,12 @@ pub fn run_solve(req: &SolveRequest, ds: &Dataset, cached: bool) -> Result<Json,
     let res = if req.threads > 1 {
         let backend = crate::parallel::ParallelBackend::new(req.threads);
         let mut solver = StochasticFw::with_variant(req.variant, strategy, req.opts, backend);
+        solver.set_control(ctrl.clone());
         solver.run_with_screen(&prob, &mut state, req.delta, screener.as_mut())
     } else {
         let mut solver =
             StochasticFw::with_variant(req.variant, strategy, req.opts, NativeBackend::new());
+        solver.set_control(ctrl.clone());
         solver.run_with_screen(&prob, &mut state, req.delta, screener.as_mut())
     };
     let seconds = sw.elapsed_secs();
@@ -385,6 +397,11 @@ pub struct PathRequest {
     pub reps: usize,
     /// Worker-pool width for the cell fan-out.
     pub threads: usize,
+    /// Server-local `.sfwckpt` snapshot path (requires `--allow-files`
+    /// and `reps = 1`).
+    pub checkpoint: Option<PathBuf>,
+    /// Resume from the checkpoint instead of starting fresh.
+    pub resume: bool,
 }
 
 /// Validate a `path` body. Solver options default to the library
@@ -422,22 +439,55 @@ pub fn parse_path(body: &Json, allow_files: bool) -> Result<PathRequest, ApiErro
         track: f.usize_arr("track")?,
         screen: parse_screen(&mut f)?,
     };
+    let ckpt = f.str("checkpoint", "")?;
+    let resume = f.bool("resume", false)?;
+    if !ckpt.is_empty() && !allow_files {
+        return Err(ApiError::new(
+            403,
+            "files_disabled",
+            "checkpoint paths write server-local files; start the server with --allow-files",
+        ));
+    }
+    if resume && ckpt.is_empty() {
+        return Err(ApiError::bad_request(
+            "field 'resume' requires a 'checkpoint' path".into(),
+        ));
+    }
+    if !ckpt.is_empty() && reps != 1 {
+        return Err(ApiError::bad_request(format!(
+            "field 'checkpoint' requires reps = 1 (one snapshot per run), got reps = {reps}"
+        )));
+    }
     let req = PathRequest {
         solver,
         adaptive: f.bool("adaptive", false)?,
         cfg,
         reps,
         threads: parse_threads(&mut f, 0)?,
+        checkpoint: if ckpt.is_empty() { None } else { Some(PathBuf::from(ckpt)) },
+        resume,
         dataset,
     };
     f.finish()?;
     Ok(req)
 }
 
-/// Execute a validated path job: build the repetition cells, fan them out
-/// through [`jobs::run_cells`] on the worker pool, and average stochastic
-/// repetitions into one [`PathResult`].
-pub fn run_path_job(req: &PathRequest, ds: &Dataset, cached: bool) -> Result<Json, ApiError> {
+/// Execute a validated path job.
+///
+/// `reps = 1` runs through [`run_path_resilient`] under the job's
+/// [`RunControl`] — bit-identical to [`crate::path::run_path`] when the
+/// run completes, and additionally cancellable (deadline/504), drainable
+/// (graceful shutdown writes a final checkpoint at the next grid-point
+/// boundary) and checkpointable (the request's `checkpoint`/`resume`
+/// fields). `reps > 1` keeps the repetition fan-out through
+/// [`jobs::run_cells`]; each rep is an independent short run, so the
+/// deadline is enforced between reps by the queue, not mid-solve.
+pub fn run_path_job(
+    req: &PathRequest,
+    ds: &Dataset,
+    cached: bool,
+    ctrl: &RunControl,
+) -> Result<Json, ApiError> {
     // track indices must address real columns
     for &j in &req.cfg.track {
         if j >= ds.cols() {
@@ -450,16 +500,29 @@ pub fn run_path_job(req: &PathRequest, ds: &Dataset, cached: bool) -> Result<Jso
     let kind = SolverKind::parse(&req.solver).map_err(ApiError::bad_request)?;
     let kind = if req.adaptive { kind.with_adaptive(ds.cols()) } else { kind };
     let reps = if jobs::is_stochastic(kind) { req.reps } else { 1 };
-    let cells: Vec<jobs::Cell> = (0..reps)
-        .map(|rep| jobs::Cell { dataset_idx: 0, kind, rep })
-        .collect();
-    let runs = jobs::run_cells(&[ds], &cells, &req.cfg, req.threads);
-    let result: PathResult = jobs::average_reps(runs);
+    let (result, complete, resumed_points) = if reps == 1 {
+        let opts = ResilientOptions {
+            checkpoint: req.checkpoint.clone(),
+            resume: req.resume,
+            control: ctrl.clone(),
+        };
+        let outcome = run_path_resilient(ds, kind, &req.cfg, 1, &opts);
+        (outcome.result, outcome.complete, outcome.resumed_points)
+    } else {
+        let cells: Vec<jobs::Cell> = (0..reps)
+            .map(|rep| jobs::Cell { dataset_idx: 0, kind, rep })
+            .collect();
+        let runs = jobs::run_cells(&[ds], &cells, &req.cfg, req.threads);
+        let result: PathResult = jobs::average_reps(runs);
+        (result, true, 0)
+    };
     Ok(Json::obj(vec![
         ("kind", Json::Str("path".into())),
         ("dataset", Json::Str(ds.name.clone())),
         ("cached", Json::Bool(cached)),
         ("reps", Json::Num(reps as f64)),
+        ("complete", Json::Bool(complete)),
+        ("resumed_points", Json::Num(resumed_points as f64)),
         (
             "results",
             Json::Arr(vec![report::path_result_json(&result)]),
@@ -560,6 +623,29 @@ mod tests {
     }
 
     #[test]
+    fn path_checkpoint_gated_on_allow_files() {
+        let body = parse(r#"{"checkpoint": "/tmp/x.sfwckpt"}"#);
+        let e = parse_path(&body, false).unwrap_err();
+        assert_eq!(e.status, 403);
+        let r = parse_path(&body, true).unwrap();
+        assert_eq!(r.checkpoint.as_deref(), Some(std::path::Path::new("/tmp/x.sfwckpt")));
+        assert!(!r.resume);
+        // resume without a checkpoint path is a 400
+        let e = parse_path(&parse(r#"{"resume": true}"#), true).unwrap_err();
+        assert_eq!(e.status, 400);
+        // checkpointing a multi-rep average is a 400 (one snapshot per run)
+        let e = parse_path(
+            &parse(r#"{"checkpoint": "/tmp/x.sfwckpt", "reps": 3}"#),
+            true,
+        )
+        .unwrap_err();
+        assert_eq!(e.status, 400);
+        // an empty checkpoint string means "no checkpoint"
+        let r = parse_path(&parse(r#"{"checkpoint": ""}"#), false).unwrap();
+        assert!(r.checkpoint.is_none());
+    }
+
+    #[test]
     fn error_envelope_shape() {
         let e = ApiError::from_json(JsonError { msg: "bad".into(), offset: 17 });
         let env = e.envelope();
@@ -579,7 +665,7 @@ mod tests {
                 "delta": 2.0, "sample": 0.5, "eps": 1e-3, "max_iters": 2000}"#,
         );
         let req = parse_solve(&body, false).unwrap();
-        let out = run_solve(&req, &ds, false).unwrap();
+        let out = run_solve(&req, &ds, false, &RunControl::new()).unwrap();
         // direct reference run with identical inputs
         let cache = ColumnCache::build(&ds.x, &ds.y);
         let prob = Problem::new(&ds.x, &ds.y, &cache);

@@ -129,6 +129,27 @@ impl DatasetCache {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Number of resident datasets whose on-disk tile store has been
+    /// poisoned by an I/O failure (scans fall back to the in-core
+    /// mirror; surfaced by the server's `GET /v1/status`).
+    pub fn poisoned_tiles(&self) -> usize {
+        self.entries
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|c| {
+                matches!(
+                    c.get(),
+                    Some(Ok(ds)) if ds
+                        .x
+                        .file_tiles()
+                        .map(|ft| ft.is_poisoned())
+                        .unwrap_or(false)
+                )
+            })
+            .count()
+    }
 }
 
 #[cfg(test)]

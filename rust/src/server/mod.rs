@@ -17,10 +17,19 @@
 //! * **Datasets** stay resident in a keyed [`cache::DatasetCache`] — the
 //!   second request for a dataset pays zero parse cost.
 //! * **Degradation** is structured, never a panic: malformed JSON → 400
-//!   with byte offset, oversized body → 413, full queue → 503, slow job →
-//!   504, worker panic → 500; every failure is a JSON error envelope.
+//!   with byte offset, oversized body → 413, full queue → 503 (with a
+//!   `Retry-After` hint), slow job → 504 with the in-flight work
+//!   cancelled through its [`crate::util::ckpt::RunControl`], worker
+//!   panic → 500; every failure is a JSON error envelope.
+//! * **Resilience** is observable: `GET /v1/status` reports queue depth,
+//!   in-flight jobs with heartbeat ages, watchdog stall flags, resident
+//!   datasets (and poisoned tile stores), and the process-wide
+//!   checkpoint written/resumed counters.
 //! * **Shutdown** is drain-clean: stop accepting, finish in-flight
-//!   requests, then join the pools.
+//!   requests, then join the pools. The shutdown flag rides along on
+//!   every job's control, so checkpointed path jobs write a final
+//!   snapshot and stop at their next grid-point boundary instead of
+//!   running to completion.
 
 pub mod api;
 pub mod cache;
@@ -29,6 +38,7 @@ pub mod queue;
 
 use api::ApiError;
 use cache::DatasetCache;
+use crate::util::ckpt::RunControl;
 use http::ReadOutcome;
 use queue::JobQueue;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -76,9 +86,11 @@ impl Default for ServeConfig {
     }
 }
 
-/// State shared by every server thread.
+/// State shared by every server thread. The shutdown flag is an `Arc`
+/// so it can ride along on each job's [`RunControl`] (graceful drain:
+/// checkpointed path jobs snapshot and stop at their next boundary).
 struct Shared {
-    shutdown: AtomicBool,
+    shutdown: Arc<AtomicBool>,
     cache: Arc<DatasetCache>,
     queue: JobQueue,
     cfg: ServeConfig,
@@ -137,7 +149,7 @@ pub fn spawn(cfg: ServeConfig) -> Result<ServerHandle, String> {
         TcpListener::bind(&cfg.addr).map_err(|e| format!("bind {}: {e}", cfg.addr))?;
     let addr = listener.local_addr().map_err(|e| e.to_string())?;
     let shared = Arc::new(Shared {
-        shutdown: AtomicBool::new(false),
+        shutdown: Arc::new(AtomicBool::new(false)),
         cache: Arc::new(DatasetCache::with_mem_budget(cfg.mem_budget)),
         queue: JobQueue::start(cfg.threads, cfg.queue_cap),
         cfg: cfg.clone(),
@@ -212,14 +224,13 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
             ReadOutcome::Closed => return,
             ReadOutcome::Fail(status, kind, message) => {
                 let body = ApiError::new(status, kind, &message).envelope().dump();
-                let _ = http::write_response(&mut stream, status, &body, false);
+                let _ = respond(&mut stream, status, &body, false);
                 return;
             }
             ReadOutcome::Request(req) => {
                 let keep_alive = req.keep_alive && !shared.shutdown.load(Ordering::SeqCst);
                 let (status, body) = route(shared, &req);
-                if http::write_response(&mut stream, status, &body.dump(), keep_alive)
-                    .is_err()
+                if respond(&mut stream, status, &body.dump(), keep_alive).is_err()
                     || !keep_alive
                 {
                     return;
@@ -227,6 +238,20 @@ fn handle_connection(mut stream: TcpStream, shared: &Shared) {
             }
         }
     }
+}
+
+/// Write one response, attaching overload retry guidance: 503s carry a
+/// `Retry-After` header (clients should add jitter on top — see the
+/// server README).
+fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    body: &str,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let extra: &[(&str, &str)] =
+        if status == 503 { &[("Retry-After", "1")] } else { &[] };
+    http::write_response_with(stream, status, body, keep_alive, extra)
 }
 
 /// Dispatch one request to its endpoint. Returns `(status, response body)`.
@@ -237,23 +262,24 @@ fn route(shared: &Shared, req: &http::Request) -> (u16, crate::util::json::Json)
             ("status", Json::Str("ok".into())),
             ("datasets", Json::Num(shared.cache.len() as f64)),
         ])),
-        ("POST", "/v1/solve") => dispatch(shared, &req.body, |body, allow| {
+        ("GET", "/v1/status") => Ok(status_json(shared)),
+        ("POST", "/v1/solve") => dispatch(shared, "solve", &req.body, |body, allow| {
             let parsed = api::parse_solve(body, allow)?;
-            Ok(Box::new(move |cache: Arc<DatasetCache>| {
+            Ok(Box::new(move |cache: Arc<DatasetCache>, ctrl: &RunControl| {
                 api::with_dataset(&cache, &parsed.dataset, |ds, cached| {
-                    api::run_solve(&parsed, ds, cached)
+                    api::run_solve(&parsed, ds, cached, ctrl)
                 })
             }))
         }),
-        ("POST", "/v1/path") => dispatch(shared, &req.body, |body, allow| {
+        ("POST", "/v1/path") => dispatch(shared, "path", &req.body, |body, allow| {
             let parsed = api::parse_path(body, allow)?;
-            Ok(Box::new(move |cache: Arc<DatasetCache>| {
+            Ok(Box::new(move |cache: Arc<DatasetCache>, ctrl: &RunControl| {
                 api::with_dataset(&cache, &parsed.dataset, |ds, cached| {
-                    api::run_path_job(&parsed, ds, cached)
+                    api::run_path_job(&parsed, ds, cached, ctrl)
                 })
             }))
         }),
-        ("GET" | "POST", "/healthz" | "/v1/solve" | "/v1/path") => Err(ApiError::new(
+        ("GET" | "POST", "/healthz" | "/v1/status" | "/v1/solve" | "/v1/path") => Err(ApiError::new(
             405,
             "method_not_allowed",
             &format!("{} is not supported on {}", req.method, req.path),
@@ -270,15 +296,76 @@ fn route(shared: &Shared, req: &http::Request) -> (u16, crate::util::json::Json)
     }
 }
 
+/// Assemble the `GET /v1/status` body: queue + watchdog + cache +
+/// checkpoint observability in one zero-dep JSON object.
+fn status_json(shared: &Shared) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let q = shared.queue.status();
+    let (written, resumed) = crate::util::ckpt::checkpoint_counters();
+    let in_flight: Vec<Json> = q
+        .in_flight
+        .iter()
+        .map(|j| {
+            Json::obj(vec![
+                ("label", Json::Str(j.label.clone())),
+                ("running_ms", Json::Num(j.running_ms as f64)),
+                ("heartbeat_age_ms", Json::Num(j.heartbeat_age_ms as f64)),
+                ("stalled", Json::Bool(j.stalled)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        (
+            "status",
+            Json::Str(
+                if shared.shutdown.load(Ordering::SeqCst) { "draining" } else { "ok" }
+                    .to_string(),
+            ),
+        ),
+        (
+            "queue",
+            Json::obj(vec![
+                ("depth", Json::Num(q.depth as f64)),
+                ("capacity", Json::Num(shared.cfg.queue_cap as f64)),
+                ("workers", Json::Num(q.workers as f64)),
+            ]),
+        ),
+        ("in_flight", Json::Arr(in_flight)),
+        ("watchdog", Json::obj(vec![("stalls", Json::Num(q.stalls as f64))])),
+        (
+            "datasets",
+            Json::obj(vec![
+                ("resident", Json::Num(shared.cache.len() as f64)),
+                (
+                    "poisoned_tiles",
+                    Json::Num(shared.cache.poisoned_tiles() as f64),
+                ),
+            ]),
+        ),
+        (
+            "checkpoints",
+            Json::obj(vec![
+                ("written", Json::Num(written as f64)),
+                ("resumed", Json::Num(resumed as f64)),
+            ]),
+        ),
+    ])
+}
+
 /// The job closure type: validated request → response JSON, executed on a
-/// job worker with the dataset cache in hand.
-type JobFn = Box<dyn FnOnce(Arc<DatasetCache>) -> Result<crate::util::json::Json, ApiError> + Send>;
+/// job worker with the dataset cache and the job's run control in hand.
+type JobFn = Box<
+    dyn FnOnce(Arc<DatasetCache>, &RunControl) -> Result<crate::util::json::Json, ApiError>
+        + Send,
+>;
 
 /// Shared endpoint tail: parse + validate on the connection worker
 /// (cheap, keeps garbage out of the queue), then run the validated job on
-/// the bounded worker pool with the per-request deadline.
+/// the bounded worker pool with the per-request deadline armed on its
+/// [`RunControl`] and the server's drain flag attached.
 fn dispatch(
     shared: &Shared,
+    label: &'static str,
     body: &[u8],
     build: impl FnOnce(&crate::util::json::Json, bool) -> Result<JobFn, ApiError>,
 ) -> Result<crate::util::json::Json, ApiError> {
@@ -287,7 +374,10 @@ fn dispatch(
     let parsed = crate::util::json::Json::parse(text).map_err(ApiError::from_json)?;
     let job = build(&parsed, shared.cfg.allow_files)?;
     let cache = Arc::clone(&shared.cache);
-    shared
-        .queue
-        .run(shared.cfg.timeout, Box::new(move || job(cache)))
+    shared.queue.run(
+        shared.cfg.timeout,
+        label,
+        Some(Arc::clone(&shared.shutdown)),
+        Box::new(move |ctrl| job(cache, ctrl)),
+    )
 }

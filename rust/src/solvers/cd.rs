@@ -38,6 +38,16 @@ impl CoordinateDescent {
         &self.resid
     }
 
+    /// Restore a previously captured residual bit-for-bit (checkpoint
+    /// resume). Rebuilding via [`Self::reset_residual`] is *not*
+    /// bit-identical to the maintained residual — incremental axpy updates
+    /// accumulate different rounding — so resume must restore the exact
+    /// buffer to reproduce an uninterrupted run.
+    pub fn set_residual(&mut self, resid: &[f64]) {
+        self.resid.clear();
+        self.resid.extend_from_slice(resid);
+    }
+
     /// Initialize the residual for a fresh/warm α. Costs ‖α‖₀ axpys.
     pub fn reset_residual(&mut self, prob: &Problem<'_>, alpha: &[f64]) {
         self.resid.clear();

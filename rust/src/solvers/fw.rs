@@ -8,6 +8,7 @@ use super::certify::GapEnvelope;
 use super::linesearch::FwState;
 use super::{Problem, RunResult, SolveOptions};
 use crate::screening::Screener;
+use crate::util::ckpt::RunControl;
 
 /// Deterministic FW solver for `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ`.
 pub struct FrankWolfe {
@@ -20,19 +21,29 @@ pub struct FrankWolfe {
     /// [`RunResult::certified_gap`] is always populated here (the full
     /// vertex search makes the certificate free).
     pub gap_tol: Option<f64>,
+    /// optional cooperative cancellation / checkpoint-cadence handle
+    /// (ticked at the top of every iteration; absent = zero overhead)
+    control: Option<RunControl>,
 }
 
 impl FrankWolfe {
     /// Solver stopping on the paper's ‖Δα‖∞ criterion (plus
     /// [`SolveOptions::gap_tol`] when set).
     pub fn new(opts: SolveOptions) -> Self {
-        Self { opts, gap_tol: None }
+        Self { opts, gap_tol: None, control: None }
     }
 
     /// Solver that additionally stops once the duality gap `g(α)` (free
     /// with the full vertex search) drops below `gap_tol`.
     pub fn with_gap_tol(opts: SolveOptions, gap_tol: f64) -> Self {
-        Self { opts, gap_tol: Some(gap_tol) }
+        Self { opts, gap_tol: Some(gap_tol), control: None }
+    }
+
+    /// Attach a [`RunControl`] for cooperative cancellation / deadlines.
+    /// Checked once per iteration, before any state mutation, so an
+    /// interrupted run always stops on an iteration boundary.
+    pub fn set_control(&mut self, control: RunControl) {
+        self.control = Some(control);
     }
 
     /// Run from `state`. Each iteration costs exactly p dot products.
@@ -72,6 +83,13 @@ impl FrankWolfe {
         let mut grad = std::mem::take(&mut scratch.grad);
 
         while (iters as usize) < self.opts.max_iters {
+            // cooperative stop check before any mutation: an interrupted
+            // run leaves the iterate exactly on an iteration boundary
+            if let Some(c) = &self.control {
+                if c.tick() {
+                    break;
+                }
+            }
             iters += 1;
             // vertex search over the surviving columns (all p when off):
             // one blocked multi-column scan, then a scalar argmax+gap pass
@@ -105,6 +123,9 @@ impl FrankWolfe {
                 }
             }
             dots += pool_len as u64;
+            if let Some(c) = &self.control {
+                c.note_dots(pool_len as u64);
+            }
 
             // duality gap g(α) = αᵀ∇f + δ‖∇f‖∞ — free with the full
             // sweep; recorded into the monotone certificate envelope

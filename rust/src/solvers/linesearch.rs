@@ -44,6 +44,27 @@ pub struct FwState {
     scratch: KernelScratch,
 }
 
+/// Serializable image of a [`FwState`] — the exact live scaled
+/// representation, captured by [`FwState::snapshot`] and rebuilt by
+/// [`FwState::from_snapshot`]. All fields are plain data so the
+/// checkpoint layer ([`crate::path::ckpt`]) can encode them as f64/u64
+/// bit patterns with no loss.
+#[derive(Clone, Debug)]
+pub struct FwSnapshot {
+    /// shared scale factor `c`
+    pub c: f64,
+    /// `S = ‖Xα‖²`
+    pub s: f64,
+    /// `F = (Xα)ᵀy`
+    pub f: f64,
+    /// active list in live **insertion order**
+    pub active: Vec<usize>,
+    /// `α̂` values aligned with `active` (off-list entries are exactly 0)
+    pub alpha_hat: Vec<f64>,
+    /// full scaled fitted values `q̂` (length m)
+    pub q_hat: Vec<f64>,
+}
+
 /// The atom selected by the away-vertex search of the FW variants
 /// (DESIGN.md §11). The ℓ1-ball iterate has a *unique* minimal atomic
 /// decomposition — signed support atoms `δ·sign(αⱼ)·eⱼ` with weight
@@ -234,6 +255,66 @@ impl FwState {
     #[inline]
     pub fn objective(&self, prob: &Problem<'_>) -> f64 {
         0.5 * prob.cache.yty + 0.5 * self.s - self.f
+    }
+
+    /// Exact snapshot of the live scaled representation, for bit-identical
+    /// checkpoint/resume.
+    ///
+    /// [`Self::from_alpha`] is **not** usable here: it rebuilds `q̂` with
+    /// different floating-point rounding (fresh axpys instead of the
+    /// incrementally accumulated vector) and pushes the active list in
+    /// index order, while the live list is in *insertion* order — and the
+    /// insertion order fixes the accumulation sequence of
+    /// [`Self::l1_norm`]/[`Self::alpha`], so both differences change bits
+    /// downstream. The snapshot therefore captures the raw
+    /// `(c, S, F, active, α̂|_active, q̂)` tuple verbatim; `α̂` entries off
+    /// the active list are exactly 0.0 by invariant (drop steps zero them)
+    /// and are not stored.
+    pub fn snapshot(&self) -> FwSnapshot {
+        FwSnapshot {
+            c: self.c,
+            s: self.s,
+            f: self.f,
+            active: self.active.clone(),
+            alpha_hat: self.active.iter().map(|&j| self.alpha_hat[j]).collect(),
+            q_hat: self.q_hat.clone(),
+        }
+    }
+
+    /// Rebuild the exact iterate a [`Self::snapshot`] captured, on a
+    /// `p`-column problem. Validates the snapshot's internal consistency
+    /// (index range, duplicate-free active list, matching lengths) and
+    /// fails cleanly on violations — corrupt checkpoint sections must
+    /// never materialize as a silently wrong iterate.
+    pub fn from_snapshot(p: usize, snap: &FwSnapshot) -> Result<Self, String> {
+        if snap.active.len() != snap.alpha_hat.len() {
+            return Err(format!(
+                "snapshot active/α̂ length mismatch: {} vs {}",
+                snap.active.len(),
+                snap.alpha_hat.len()
+            ));
+        }
+        if !(snap.c.is_finite() && snap.s.is_finite() && snap.f.is_finite()) {
+            return Err("snapshot scalars (c, S, F) must be finite".to_string());
+        }
+        let mut st = Self::zero(p, snap.q_hat.len());
+        let mut seen = vec![false; p];
+        for (&j, &a) in snap.active.iter().zip(snap.alpha_hat.iter()) {
+            if j >= p {
+                return Err(format!("snapshot active index {j} out of range (p = {p})"));
+            }
+            if seen[j] {
+                return Err(format!("snapshot active index {j} duplicated"));
+            }
+            seen[j] = true;
+            st.alpha_hat[j] = a;
+        }
+        st.active = snap.active.clone();
+        st.q_hat = snap.q_hat.clone();
+        st.c = snap.c;
+        st.s = snap.s;
+        st.f = snap.f;
+        Ok(st)
     }
 
     /// Materialize α (dense copy).

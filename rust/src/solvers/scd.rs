@@ -39,6 +39,24 @@ impl StochasticCd {
         &self.resid
     }
 
+    /// Restore a previously captured residual bit-for-bit (checkpoint
+    /// resume; see [`super::cd::CoordinateDescent::set_residual`]).
+    pub fn set_residual(&mut self, resid: &[f64]) {
+        self.resid.clear();
+        self.resid.extend_from_slice(resid);
+    }
+
+    /// Snapshot the coordinate-drawing RNG (checkpoint capture).
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore the coordinate-drawing RNG from a snapshot, so a resumed
+    /// run draws the same coordinate sequence an uninterrupted run would.
+    pub fn set_rng_state(&mut self, s: [u64; 4], gauss_cache: Option<f64>) {
+        self.rng = Xoshiro256::from_state(s, gauss_cache);
+    }
+
     /// Rebuild the residual for the current α (‖α‖₀ axpys).
     pub fn reset_residual(&mut self, prob: &Problem<'_>, alpha: &[f64]) {
         self.resid.clear();

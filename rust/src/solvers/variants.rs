@@ -59,6 +59,7 @@ use super::sfw::{FwBackend, NativeBackend};
 use super::{Problem, RunResult, SolveOptions};
 use crate::linalg::{KernelScratch, Storage};
 use crate::screening::Screener;
+use crate::util::ckpt::RunControl;
 use crate::util::rng::{SubsetSampler, Xoshiro256};
 
 /// Which step rule the shared engine applies.
@@ -104,6 +105,9 @@ pub struct StochasticFw<B: FwBackend = NativeBackend> {
     cert_grad: Vec<f64>,
     /// kernel-engine arena for the away search and certificate passes
     scratch: KernelScratch,
+    /// optional cooperative cancellation / checkpoint-cadence handle
+    /// (checked at the top of every iteration; absent = zero overhead)
+    control: Option<RunControl>,
 }
 
 impl StochasticFw<NativeBackend> {
@@ -152,6 +156,7 @@ impl<B: FwBackend> StochasticFw<B> {
             support_grad: Vec::new(),
             cert_grad: Vec::new(),
             scratch: KernelScratch::new(),
+            control: None,
         }
     }
 
@@ -163,6 +168,35 @@ impl<B: FwBackend> StochasticFw<B> {
     /// Reseed (per path-point averaging runs).
     pub fn reseed(&mut self, seed: u64) {
         self.rng = Xoshiro256::seed_from_u64(seed);
+    }
+
+    /// Attach a [`RunControl`]: the engine ticks it at the top of every
+    /// iteration (heartbeat + stop check, *before* any state mutation, so
+    /// an interrupted run always stops on an iteration boundary) and
+    /// accounts each iteration's dot products toward its checkpoint
+    /// cadence.
+    pub fn set_control(&mut self, control: RunControl) {
+        self.control = Some(control);
+    }
+
+    /// Detach the [`RunControl`] (uncontrolled runs are zero-overhead).
+    pub fn clear_control(&mut self) {
+        self.control = None;
+    }
+
+    /// The sampling RNG's serializable state
+    /// ([`Xoshiro256::state`] — checkpoint boundaries capture this).
+    pub fn rng_state(&self) -> ([u64; 4], Option<f64>) {
+        self.rng.state()
+    }
+
+    /// Restore the sampling RNG from [`Self::rng_state`] output and drop
+    /// the subset sampler so it rebuilds fresh (a fresh sampler is
+    /// draw-for-draw identical to a used one given the same RNG stream —
+    /// the epoch-stamped marks carry no cross-draw state).
+    pub fn set_rng_state(&mut self, s: [u64; 4], gauss_cache: Option<f64>) {
+        self.rng = Xoshiro256::from_state(s, gauss_cache);
+        self.sampler = None;
     }
 
     /// Solve `min ½‖Xα−y‖² s.t. ‖α‖₁ ≤ δ` starting from `state`
@@ -209,6 +243,13 @@ impl<B: FwBackend> StochasticFw<B> {
         let mut kappa_last = None;
 
         while (iters as usize) < self.opts.max_iters {
+            // cooperative stop check before any mutation: an interrupted
+            // run leaves the iterate exactly on an iteration boundary
+            if let Some(c) = &self.control {
+                if c.tick() {
+                    break;
+                }
+            }
             iters += 1;
             // 0. gap-safe refresh on the dot-product budget; its sphere
             // pass computes the exact restricted gap — a free certificate
@@ -311,6 +352,9 @@ impl<B: FwBackend> StochasticFw<B> {
             dots += extra;
             spent += extra;
             cert.note(spent);
+            if let Some(c) = &self.control {
+                c.note_dots(spent);
+            }
             if let Some(s) = screen.as_deref_mut() {
                 s.note_iteration(spent, kappa_full.saturating_sub(kappa) as u64);
             }

@@ -1,0 +1,232 @@
+//! Chaos harness for the crash-safe checkpoint/resume layer.
+//!
+//! Three families of helpers, all deterministic so failures reproduce:
+//!
+//! * **kill/resume drivers** — run a resilient path job under a
+//!   [`RunControl`] armed to cancel after N grid-point boundaries
+//!   ([`run_to_kill`]), then resume the snapshot to completion
+//!   ([`resume_until_complete`]), possibly through further injected
+//!   kills ([`resume_to_kill`]). The acceptance bar
+//!   (`rust/tests/chaos_resume.rs`): a run killed at **any** boundary
+//!   and resumed is bit-identical to an uninterrupted run.
+//! * **snapshot vandals** — [`truncate_file`] (torn write) and
+//!   [`flip_byte`] (silent corruption) mutate a `.sfwckpt` (or any
+//!   snapshot) in place; the loader must detect both, degrade to the
+//!   `.prev` generation or a fresh start, and never panic.
+//! * **bitwise comparators** — [`assert_points_bit_identical`] compares
+//!   two path-point sequences by f64 **bit pattern** (not tolerance):
+//!   resume correctness here means replaying the identical float
+//!   trajectory, and a tolerance would hide divergence bugs.
+
+use crate::data::Dataset;
+use crate::path::{
+    run_path_resilient, PathConfig, PathPoint, PathRunOutcome, ResilientOptions, SolverKind,
+};
+use crate::util::ckpt::RunControl;
+use std::path::Path;
+
+/// Start a fresh resilient run that checkpoints to `ckpt` and is killed
+/// (cooperatively cancelled) once `kill_after` grid-point boundaries
+/// have completed across all blocks. The returned outcome is the
+/// interrupted run; the snapshot on disk holds exactly the state needed
+/// to resume it.
+pub fn run_to_kill(
+    ds: &Dataset,
+    kind: SolverKind,
+    cfg: &PathConfig,
+    threads: usize,
+    ckpt: &Path,
+    kill_after: u64,
+) -> PathRunOutcome {
+    let control = RunControl::new();
+    control.kill_after_boundaries(kill_after);
+    run_path_resilient(
+        ds,
+        kind,
+        cfg,
+        threads,
+        &ResilientOptions {
+            checkpoint: Some(ckpt.to_path_buf()),
+            resume: false,
+            control,
+        },
+    )
+}
+
+/// Resume the snapshot at `ckpt` and kill the run again after
+/// `kill_after` further boundaries (crash-during-recovery chaos).
+pub fn resume_to_kill(
+    ds: &Dataset,
+    kind: SolverKind,
+    cfg: &PathConfig,
+    threads: usize,
+    ckpt: &Path,
+    kill_after: u64,
+) -> PathRunOutcome {
+    let control = RunControl::new();
+    control.kill_after_boundaries(kill_after);
+    run_path_resilient(
+        ds,
+        kind,
+        cfg,
+        threads,
+        &ResilientOptions {
+            checkpoint: Some(ckpt.to_path_buf()),
+            resume: true,
+            control,
+        },
+    )
+}
+
+/// Resume the snapshot at `ckpt` repeatedly (fresh control each round,
+/// no kill trigger) until the path completes. Panics after `max_rounds`
+/// resumes — a resume that makes no progress is a bug, not a retry
+/// candidate.
+pub fn resume_until_complete(
+    ds: &Dataset,
+    kind: SolverKind,
+    cfg: &PathConfig,
+    threads: usize,
+    ckpt: &Path,
+    max_rounds: usize,
+) -> PathRunOutcome {
+    for _ in 0..max_rounds {
+        let out = run_path_resilient(
+            ds,
+            kind,
+            cfg,
+            threads,
+            &ResilientOptions {
+                checkpoint: Some(ckpt.to_path_buf()),
+                resume: true,
+                control: RunControl::new(),
+            },
+        );
+        if out.complete {
+            return out;
+        }
+    }
+    panic!("path did not complete within {max_rounds} resume rounds");
+}
+
+/// Torn-write injector: truncate the file at `path` to its first `keep`
+/// bytes (no-op if it is already shorter). Models a crash mid-write on
+/// a filesystem without the atomic-rename discipline.
+pub fn truncate_file(path: &Path, keep: usize) {
+    let bytes = std::fs::read(path).expect("read snapshot for truncation");
+    let keep = keep.min(bytes.len());
+    std::fs::write(path, &bytes[..keep]).expect("write truncated snapshot");
+}
+
+/// Silent-corruption injector: XOR the byte at `offset` with `mask`
+/// (`mask` must be nonzero to actually change it). Models bit rot or a
+/// buggy writer; every section checksum must catch it.
+pub fn flip_byte(path: &Path, offset: usize, mask: u8) {
+    assert!(mask != 0, "mask 0 would be a no-op corruption");
+    let mut bytes = std::fs::read(path).expect("read snapshot for corruption");
+    assert!(offset < bytes.len(), "corruption offset past EOF");
+    bytes[offset] ^= mask;
+    std::fs::write(path, &bytes).expect("write corrupted snapshot");
+}
+
+/// Current size of the file at `path` in bytes.
+pub fn file_len(path: &Path) -> usize {
+    std::fs::metadata(path).expect("stat snapshot").len() as usize
+}
+
+/// Assert two path-point sequences are **bit-identical**: every f64 by
+/// bit pattern, every count exactly. This is the resume-correctness
+/// bar — tolerances would mask replay divergence.
+pub fn assert_points_bit_identical(a: &[PathPoint], b: &[PathPoint]) {
+    assert_eq!(a.len(), b.len(), "point count differs: {} vs {}", a.len(), b.len());
+    let bits = |v: f64| v.to_bits();
+    let opt_bits = |v: Option<f64>| v.map(|x| x.to_bits());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(bits(x.reg), bits(y.reg), "reg bits differ at point {i}");
+        assert_eq!(bits(x.l1_norm), bits(y.l1_norm), "l1_norm bits differ at point {i}");
+        assert_eq!(x.active, y.active, "active count differs at point {i}");
+        assert_eq!(
+            bits(x.train_mse),
+            bits(y.train_mse),
+            "train_mse bits differ at point {i}"
+        );
+        assert_eq!(
+            opt_bits(x.test_mse),
+            opt_bits(y.test_mse),
+            "test_mse bits differ at point {i}"
+        );
+        assert_eq!(x.iters, y.iters, "iters differ at point {i}");
+        assert_eq!(x.dots, y.dots, "dots differ at point {i}");
+        assert_eq!(x.converged, y.converged, "converged differs at point {i}");
+        assert_eq!(
+            bits(x.screened_frac),
+            bits(y.screened_frac),
+            "screened_frac bits differ at point {i}"
+        );
+        assert_eq!(
+            opt_bits(x.certified_gap),
+            opt_bits(y.certified_gap),
+            "certified_gap bits differ at point {i}"
+        );
+        assert_eq!(x.kappa_final, y.kappa_final, "kappa_final differs at point {i}");
+        assert_eq!(
+            x.tracked_coefs.len(),
+            y.tracked_coefs.len(),
+            "tracked_coefs length differs at point {i}"
+        );
+        for (j, (&p, &q)) in x.tracked_coefs.iter().zip(y.tracked_coefs.iter()).enumerate() {
+            assert_eq!(
+                bits(p),
+                bits(q),
+                "tracked coef {j} bits differ at point {i}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn injectors_mutate_files_as_advertised() {
+        let dir = std::env::temp_dir().join(format!("sfw_chaos_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("victim.bin");
+        std::fs::write(&path, [1u8, 2, 3, 4, 5]).unwrap();
+        assert_eq!(file_len(&path), 5);
+        flip_byte(&path, 2, 0xFF);
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2, 3 ^ 0xFF, 4, 5]);
+        truncate_file(&path, 2);
+        assert_eq!(std::fs::read(&path).unwrap(), vec![1, 2]);
+        truncate_file(&path, 10); // longer than the file: no-op
+        assert_eq!(file_len(&path), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bit_identity_comparator_rejects_one_ulp() {
+        let mk = |mse: f64| PathPoint {
+            reg: 1.0,
+            l1_norm: 0.5,
+            active: 3,
+            train_mse: mse,
+            test_mse: None,
+            iters: 10,
+            dots: 100,
+            converged: true,
+            screened_frac: 0.0,
+            certified_gap: None,
+            kappa_final: None,
+            tracked_coefs: Vec::new(),
+        };
+        assert_points_bit_identical(&[mk(0.25)], &[mk(0.25)]);
+        let r = std::panic::catch_unwind(|| {
+            assert_points_bit_identical(
+                &[mk(0.25)],
+                &[mk(f64::from_bits(0.25f64.to_bits() + 1))],
+            )
+        });
+        assert!(r.is_err(), "one-ulp drift must fail the comparator");
+    }
+}

@@ -6,7 +6,9 @@
 //! coordinator/solver invariants (line-search optimality, residual-update
 //! consistency, projection correctness, sparse/dense agreement, …).
 //! [`faulty_store`] adds the fault-injection decorator for the
-//! out-of-core tile store (`rust/tests/fault_injection.rs`).
+//! out-of-core tile store (`rust/tests/fault_injection.rs`), and
+//! [`chaos`] the kill/torn/corrupt injectors for the checkpoint/resume
+//! layer (`rust/tests/chaos_resume.rs`).
 //!
 //! ```no_run
 //! use sfw_lasso::testing::{Prop, gen};
@@ -18,6 +20,7 @@
 //!     });
 //! ```
 
+pub mod chaos;
 pub mod faulty_store;
 
 use crate::util::rng::Xoshiro256;

@@ -1,0 +1,514 @@
+//! Crash-safety substrate: cooperative run control and atomic snapshot IO.
+//!
+//! Two independent pieces live here because every layer above needs both:
+//!
+//! * [`RunControl`] — a cheap, cloneable handle threaded through the
+//!   solver step engines ([`crate::solvers::sfw::StochasticFw`]) and the
+//!   path runner ([`crate::path::run_path_resilient`]). It carries
+//!   cooperative cancellation, a monotonic deadline, a checkpoint-due
+//!   signal on a dot-count cadence, a heartbeat for the server watchdog,
+//!   and a kill-after-N-boundaries trigger for the chaos harness
+//!   ([`crate::testing::chaos`]). Solvers check it once per iteration at
+//!   the **top** of the loop, before any state mutation, so an
+//!   interrupted run never leaves a half-applied step behind — resume
+//!   restarts the in-progress grid point from its recorded boundary
+//!   state and replays it bit-identically.
+//! * Atomic file replacement ([`atomic_write_file`]) with a
+//!   two-generation rotation: bytes go to a sibling temp file, are
+//!   `fsync`ed, the previous snapshot is rotated to a `.prev` sibling,
+//!   and the temp file is renamed into place. A crash at **any** byte
+//!   offset leaves either the old snapshot, the `.prev` generation, or
+//!   the complete new one — never a torn file at the final path.
+//!
+//! The process-wide written/resumed counters feed the server's
+//! `GET /v1/status` health output (and are equally visible to the CLI).
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+// ------------------------------------------------------------ run control
+
+/// Shared state behind a [`RunControl`] handle (one per logical run; all
+/// clones — across solver, runner and watchdog threads — see the same
+/// flags).
+struct CtrlInner {
+    /// monotonic time origin for the deadline and heartbeat clocks
+    epoch: Instant,
+    /// cooperative cancellation flag (sticky once set)
+    cancel: AtomicBool,
+    /// deadline in ms since `epoch`; `u64::MAX` = no deadline
+    deadline_ms: AtomicU64,
+    /// last heartbeat in ms since `epoch` (written by the solver tick)
+    heartbeat_ms: AtomicU64,
+    /// checkpoint cadence in dot products; 0 = no dot cadence
+    every_dots: AtomicU64,
+    /// dots accumulated since the last checkpoint-due trigger
+    dots_since: AtomicU64,
+    /// checkpoint cadence in wall-clock ms; 0 = no time cadence
+    every_ms: AtomicU64,
+    /// ms-since-epoch of the last time-cadence trigger
+    last_ckpt_ms: AtomicU64,
+    /// latched checkpoint-due signal (consumed at grid-point boundaries)
+    ckpt_due: AtomicBool,
+    /// chaos trigger: cancel once this many boundaries completed;
+    /// `u64::MAX` = disabled
+    kill_after: AtomicU64,
+    /// grid-point boundaries completed under this control
+    boundaries: AtomicU64,
+    /// optional external shutdown flag (the server's drain signal):
+    /// requests a final checkpoint without cancelling the run
+    shutdown: Mutex<Option<Arc<AtomicBool>>>,
+}
+
+/// Cooperative cancellation / deadline / checkpoint-cadence handle.
+///
+/// Cloning is cheap (an `Arc` bump); every clone observes and mutates the
+/// same underlying flags. The two call sites with timing obligations:
+///
+/// * **once per solver iteration**, at the top of the loop:
+///   [`RunControl::tick`] (refreshes the heartbeat, answers "stop now?")
+///   and, after the iteration's dot products are known,
+///   [`RunControl::note_dots`];
+/// * **once per grid-point boundary**, in the path runner:
+///   [`RunControl::take_checkpoint_due`] +
+///   [`RunControl::note_boundary`].
+pub struct RunControl {
+    inner: Arc<CtrlInner>,
+}
+
+impl Clone for RunControl {
+    fn clone(&self) -> Self {
+        RunControl { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl Default for RunControl {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RunControl {
+    /// Fresh control: no deadline, no cadence, not cancelled.
+    pub fn new() -> Self {
+        RunControl {
+            inner: Arc::new(CtrlInner {
+                epoch: Instant::now(),
+                cancel: AtomicBool::new(false),
+                deadline_ms: AtomicU64::new(u64::MAX),
+                heartbeat_ms: AtomicU64::new(0),
+                every_dots: AtomicU64::new(0),
+                dots_since: AtomicU64::new(0),
+                every_ms: AtomicU64::new(0),
+                last_ckpt_ms: AtomicU64::new(0),
+                ckpt_due: AtomicBool::new(false),
+                kill_after: AtomicU64::new(u64::MAX),
+                boundaries: AtomicU64::new(0),
+                shutdown: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Milliseconds elapsed since this control was created.
+    fn ms_now(&self) -> u64 {
+        self.inner.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Arm a monotonic deadline `timeout` from now. Once it passes,
+    /// [`RunControl::stopped`] reports true and controlled solvers stop
+    /// at their next iteration check.
+    pub fn set_deadline(&self, timeout: Duration) {
+        let at = self.ms_now().saturating_add(timeout.as_millis() as u64);
+        self.inner.deadline_ms.store(at, Ordering::Relaxed);
+    }
+
+    /// Arm the dot-count checkpoint cadence: every `dots` dot products,
+    /// the next grid-point boundary sees a latched checkpoint-due signal.
+    /// `0` disables the cadence.
+    pub fn set_checkpoint_every_dots(&self, dots: u64) {
+        self.inner.every_dots.store(dots, Ordering::Relaxed);
+    }
+
+    /// Arm the wall-clock checkpoint cadence: once `period` has elapsed
+    /// since the last trigger, the next grid-point boundary sees a
+    /// latched checkpoint-due signal. A zero period disables the time
+    /// cadence. Checked by [`RunControl::tick`], so it costs nothing
+    /// beyond the heartbeat the tick already refreshes.
+    pub fn set_checkpoint_every_secs(&self, period: Duration) {
+        self.inner
+            .every_ms
+            .store(period.as_millis() as u64, Ordering::Relaxed);
+        self.inner.last_ckpt_ms.store(self.ms_now(), Ordering::Relaxed);
+    }
+
+    /// Attach the server's shutdown flag. A set flag requests a **final
+    /// checkpoint** at the next boundary (graceful drain) — it does not
+    /// cancel the run.
+    pub fn set_shutdown_flag(&self, flag: Arc<AtomicBool>) {
+        *self.inner.shutdown.lock().unwrap() = Some(flag);
+    }
+
+    /// Chaos trigger: cancel the run as soon as `n` grid-point
+    /// boundaries have completed (counted across all blocks sharing this
+    /// control). The boundary state is checkpointed before the trigger
+    /// fires, so resume continues from exactly boundary `n`.
+    pub fn kill_after_boundaries(&self, n: u64) {
+        self.inner.kill_after.store(n, Ordering::Relaxed);
+    }
+
+    /// Request cooperative cancellation (sticky).
+    pub fn cancel(&self) {
+        self.inner.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the run should stop: cancelled, or past the deadline.
+    pub fn stopped(&self) -> bool {
+        self.inner.cancel.load(Ordering::Relaxed)
+            || self.ms_now() >= self.inner.deadline_ms.load(Ordering::Relaxed)
+    }
+
+    /// Per-iteration check: refresh the heartbeat and report whether the
+    /// run should stop. Called at the top of the solver loop, before any
+    /// state mutation, so a `true` answer leaves the iterate exactly at
+    /// an iteration boundary.
+    pub fn tick(&self) -> bool {
+        let now = self.ms_now();
+        self.inner.heartbeat_ms.store(now, Ordering::Relaxed);
+        let every_ms = self.inner.every_ms.load(Ordering::Relaxed);
+        if every_ms > 0
+            && now.saturating_sub(self.inner.last_ckpt_ms.load(Ordering::Relaxed)) >= every_ms
+        {
+            self.inner.last_ckpt_ms.store(now, Ordering::Relaxed);
+            self.inner.ckpt_due.store(true, Ordering::Relaxed);
+        }
+        self.stopped()
+    }
+
+    /// Account `n` dot products toward the checkpoint cadence; latches
+    /// the checkpoint-due signal when the cadence budget is exhausted.
+    pub fn note_dots(&self, n: u64) {
+        let every = self.inner.every_dots.load(Ordering::Relaxed);
+        if every == 0 {
+            return;
+        }
+        let seen = self.inner.dots_since.fetch_add(n, Ordering::Relaxed) + n;
+        if seen >= every {
+            self.inner.dots_since.store(0, Ordering::Relaxed);
+            self.inner.ckpt_due.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Consume the latched checkpoint-due signal (grid-point boundaries).
+    pub fn take_checkpoint_due(&self) -> bool {
+        self.inner.ckpt_due.swap(false, Ordering::Relaxed)
+    }
+
+    /// Record one completed grid-point boundary; fires the chaos
+    /// kill-after trigger when armed.
+    pub fn note_boundary(&self) {
+        let done = self.inner.boundaries.fetch_add(1, Ordering::Relaxed) + 1;
+        if done >= self.inner.kill_after.load(Ordering::Relaxed) {
+            self.cancel();
+        }
+    }
+
+    /// Grid-point boundaries completed so far.
+    pub fn boundaries(&self) -> u64 {
+        self.inner.boundaries.load(Ordering::Relaxed)
+    }
+
+    /// Whether the attached shutdown flag (if any) is set — i.e. a
+    /// graceful drain wants a final checkpoint at the next boundary.
+    pub fn shutdown_requested(&self) -> bool {
+        self.inner
+            .shutdown
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|f| f.load(Ordering::Relaxed))
+            .unwrap_or(false)
+    }
+
+    /// Milliseconds since the last solver heartbeat (or since creation
+    /// if no controlled solver has ticked yet). The server watchdog's
+    /// stall signal.
+    pub fn heartbeat_age_ms(&self) -> u64 {
+        self.ms_now()
+            .saturating_sub(self.inner.heartbeat_ms.load(Ordering::Relaxed))
+    }
+}
+
+// ----------------------------------------------- checkpoint I/O counters
+
+static CKPT_WRITTEN: AtomicU64 = AtomicU64::new(0);
+static CKPT_RESUMED: AtomicU64 = AtomicU64::new(0);
+
+/// Record one checkpoint snapshot written (process-wide counter).
+pub fn note_checkpoint_written() {
+    CKPT_WRITTEN.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record one run resumed from a checkpoint (process-wide counter).
+pub fn note_checkpoint_resumed() {
+    CKPT_RESUMED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// `(written, resumed)` checkpoint counters since process start —
+/// surfaced by the server's `GET /v1/status`.
+pub fn checkpoint_counters() -> (u64, u64) {
+    (CKPT_WRITTEN.load(Ordering::Relaxed), CKPT_RESUMED.load(Ordering::Relaxed))
+}
+
+// ---------------------------------------------------- atomic file writes
+
+/// The `.prev` sibling a snapshot at `path` rotates to before each
+/// replacement (the second generation the loader degrades to).
+pub fn prev_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".prev");
+    PathBuf::from(os)
+}
+
+/// Replace the file at `path` with `bytes`, crash-safely:
+/// temp sibling → `write` → `fsync` → rotate old snapshot to
+/// [`prev_path`] → rename into place. A crash at any point leaves the
+/// final path holding either the old complete snapshot or the new
+/// complete one (or, between the two renames, only the `.prev`
+/// generation — which the loader falls back to).
+pub fn atomic_write_file(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    use std::io::Write;
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(&format!(".tmp.{}", std::process::id()));
+        PathBuf::from(os)
+    };
+    let write = (|| -> Result<(), String> {
+        let mut f = std::fs::File::create(&tmp).map_err(|e| format!("create {tmp:?}: {e}"))?;
+        f.write_all(bytes).map_err(|e| format!("write {tmp:?}: {e}"))?;
+        // fsync before rename: otherwise the rename can land while the
+        // data blocks are still dirty, and a power cut yields a
+        // right-named-but-torn file — exactly what this layer exists to
+        // rule out
+        f.sync_all().map_err(|e| format!("fsync {tmp:?}: {e}"))
+    })();
+    if let Err(e) = write {
+        std::fs::remove_file(&tmp).ok();
+        return Err(e);
+    }
+    if path.exists() {
+        // best-effort rotation: losing the .prev generation is harmless
+        // (the new snapshot lands right after), a torn final path is not
+        std::fs::rename(path, prev_path(path)).ok();
+    }
+    std::fs::rename(&tmp, path).map_err(|e| {
+        std::fs::remove_file(&tmp).ok();
+        format!("rename {tmp:?} → {path:?}: {e}")
+    })
+}
+
+// -------------------------------------------------- little-endian byte IO
+
+/// Append-only little-endian byte buffer (checkpoint encoding).
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append a `u64` (little-endian).
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `usize` as `u64`.
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    /// Append an `f64` by bit pattern (exact round-trip).
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append raw bytes.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Consume the writer, yielding the buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    /// Bytes written so far.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Whether nothing has been written yet.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Length-checked little-endian reader over untrusted snapshot bytes —
+/// every take is bounds-checked, so hostile or torn input yields `Err`,
+/// never a panic.
+pub struct ByteReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Reader over `bytes` starting at offset 0.
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Take `len` raw bytes.
+    pub fn take(&mut self, len: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| {
+                format!(
+                    "truncated: need {len} bytes at offset {}, have {}",
+                    self.pos,
+                    self.bytes.len().saturating_sub(self.pos)
+                )
+            })?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    /// Take one little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Take one `u64` and narrow it to `usize` under a sanity `cap`
+    /// (rejects absurd section lengths before any allocation).
+    pub fn usize_capped(&mut self, cap: usize, what: &str) -> Result<usize, String> {
+        let v = self.u64()?;
+        if v > cap as u64 {
+            return Err(format!("{what} = {v} exceeds cap {cap}"));
+        }
+        Ok(v as usize)
+    }
+
+    /// Take one `f64` by bit pattern.
+    pub fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_deadline_and_cancel() {
+        let c = RunControl::new();
+        assert!(!c.stopped());
+        c.set_deadline(Duration::from_secs(3600));
+        assert!(!c.tick());
+        c.cancel();
+        assert!(c.stopped() && c.tick());
+
+        let d = RunControl::new();
+        d.set_deadline(Duration::from_millis(0));
+        assert!(d.stopped(), "zero deadline expires immediately");
+    }
+
+    #[test]
+    fn control_dot_cadence_latches_and_drains() {
+        let c = RunControl::new();
+        c.note_dots(1_000_000);
+        assert!(!c.take_checkpoint_due(), "cadence disabled by default");
+        c.set_checkpoint_every_dots(100);
+        c.note_dots(60);
+        assert!(!c.take_checkpoint_due());
+        c.note_dots(60);
+        assert!(c.take_checkpoint_due());
+        assert!(!c.take_checkpoint_due(), "signal is consumed");
+    }
+
+    #[test]
+    fn control_time_cadence_latches_on_tick() {
+        let c = RunControl::new();
+        c.set_checkpoint_every_secs(Duration::from_millis(0));
+        c.tick();
+        assert!(!c.take_checkpoint_due(), "zero period disables the time cadence");
+        let d = RunControl::new();
+        d.set_checkpoint_every_secs(Duration::from_millis(1));
+        std::thread::sleep(Duration::from_millis(5));
+        d.tick();
+        assert!(d.take_checkpoint_due());
+        assert!(!d.take_checkpoint_due(), "signal is consumed");
+    }
+
+    #[test]
+    fn control_kill_after_boundaries() {
+        let c = RunControl::new();
+        c.kill_after_boundaries(2);
+        c.note_boundary();
+        assert!(!c.stopped());
+        c.note_boundary();
+        assert!(c.stopped());
+        assert_eq!(c.boundaries(), 2);
+    }
+
+    #[test]
+    fn control_shutdown_flag_requests_not_cancels() {
+        let c = RunControl::new();
+        let flag = Arc::new(AtomicBool::new(false));
+        c.set_shutdown_flag(Arc::clone(&flag));
+        assert!(!c.shutdown_requested());
+        flag.store(true, Ordering::Relaxed);
+        assert!(c.shutdown_requested());
+        assert!(!c.stopped(), "shutdown drains, it does not cancel");
+    }
+
+    #[test]
+    fn byte_io_round_trip_and_truncation() {
+        let mut w = ByteWriter::new();
+        w.put_u64(42);
+        w.put_f64(-0.1);
+        w.put_bytes(b"xyz");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.u64().unwrap(), 42);
+        assert_eq!(r.f64().unwrap().to_bits(), (-0.1f64).to_bits());
+        assert_eq!(r.take(3).unwrap(), b"xyz");
+        assert_eq!(r.remaining(), 0);
+        assert!(r.u64().is_err(), "reads past the end fail cleanly");
+    }
+
+    #[test]
+    fn atomic_write_rotates_previous_generation() {
+        let dir = std::env::temp_dir().join(format!("sfw_ckpt_util_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.bin");
+        atomic_write_file(&path, b"gen1").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"gen1");
+        assert!(!prev_path(&path).exists());
+        atomic_write_file(&path, b"gen2").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"gen2");
+        assert_eq!(std::fs::read(prev_path(&path)).unwrap(), b"gen1");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

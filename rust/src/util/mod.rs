@@ -1,5 +1,6 @@
-//! Utility substrates: RNG, JSON, timing, logging.
+//! Utility substrates: RNG, JSON, timing, logging, crash-safety.
 
+pub mod ckpt;
 pub mod json;
 pub mod log;
 pub mod rng;

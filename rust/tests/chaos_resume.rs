@@ -1,0 +1,330 @@
+//! Chaos end-to-end suite for crash-safe checkpoint/resume (ISSUE 8
+//! acceptance): a path run killed at **any** grid-point boundary and
+//! resumed must be bit-identical (reg, ℓ1, MSEs, supports, certified
+//! gaps, κ — by f64 bit pattern) to an uninterrupted run, for thread
+//! counts {1, 2, 4, 8}; and a torn or bit-flipped `.sfwckpt` must always
+//! be detected, degrade to the `.prev` generation or a fresh start, and
+//! never panic.
+//!
+//! Drivers and injectors come from `sfw_lasso::testing::chaos`; the
+//! baseline is `run_path_parallel`, which `run_path_resilient` promises
+//! to reproduce byte-for-byte.
+
+use sfw_lasso::data::{load, Dataset, Named};
+use sfw_lasso::path::{
+    run_path_parallel, run_path_resilient, PathConfig, ResilientOptions, SolverKind,
+};
+use sfw_lasso::solvers::sampling::SamplingStrategy;
+use sfw_lasso::solvers::SolveOptions;
+use sfw_lasso::testing::chaos::{
+    assert_points_bit_identical, file_len, flip_byte, resume_to_kill, resume_until_complete,
+    run_to_kill, truncate_file,
+};
+use sfw_lasso::util::ckpt::{prev_path, RunControl};
+use std::path::PathBuf;
+
+fn cfg(points: usize) -> PathConfig {
+    PathConfig {
+        n_points: points,
+        opts: SolveOptions {
+            eps: 1e-3,
+            max_iters: 5_000,
+            patience: 2,
+            ..Default::default()
+        },
+        delta_max: None,
+        track: vec![],
+        ..Default::default()
+    }
+}
+
+fn small_ds(seed: u64) -> Dataset {
+    // 50 features, 200 train + 200 test rows — solves in milliseconds
+    load(Named::Synth10k { relevant: 16 }, 0.005, seed)
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sfw_chaos_e2e_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(format!("{tag}.sfwckpt"))
+}
+
+fn clean(path: &PathBuf) {
+    std::fs::remove_file(path).ok();
+    std::fs::remove_file(prev_path(path)).ok();
+}
+
+// ------------------------------------------------ kill/resume bit-identity
+
+#[test]
+fn killed_at_every_boundary_resumes_bit_identically() {
+    let ds = small_ds(1);
+    let c = cfg(6);
+    for kind in [SolverKind::FwDet, SolverKind::Cd] {
+        for threads in [1usize, 2, 4, 8] {
+            let baseline = run_path_parallel(&ds, kind, &c, threads);
+            for kill_after in 1..=c.n_points as u64 {
+                let path = ckpt_path(&format!(
+                    "every_{}_{threads}_{kill_after}",
+                    kind.label().replace(&[' ', '%'][..], "_")
+                ));
+                clean(&path);
+                let killed = run_to_kill(&ds, kind, &c, threads, &path, kill_after);
+                assert!(
+                    killed.result.points.len() >= kill_after as usize,
+                    "kill at boundary {kill_after} persisted only {} points",
+                    killed.result.points.len()
+                );
+                let resumed = resume_until_complete(&ds, kind, &c, threads, &path, 8);
+                assert!(resumed.complete);
+                assert!(
+                    resumed.resumed_points >= killed.result.points.len(),
+                    "resume dropped checkpointed points"
+                );
+                assert_points_bit_identical(&resumed.result.points, &baseline.points);
+                clean(&path);
+            }
+        }
+    }
+}
+
+#[test]
+fn stochastic_kinds_survive_mid_path_kills() {
+    // The RNG-carrying solvers are where naive re-seeding would diverge:
+    // SFW's column sampler and SCD's coordinate sampler must continue
+    // from the serialized Xoshiro256 state, not replay from the seed.
+    let ds = small_ds(2);
+    let c = cfg(6);
+    let kinds = [
+        SolverKind::Sfw(SamplingStrategy::Fraction(0.2)),
+        SolverKind::Scd,
+    ];
+    for kind in kinds {
+        for threads in [1usize, 2] {
+            let baseline = run_path_parallel(&ds, kind, &c, threads);
+            for kill_after in [1u64, 3, 5] {
+                let path = ckpt_path(&format!(
+                    "stoch_{}_{threads}_{kill_after}",
+                    kind.label().replace(&[' ', '%'][..], "_")
+                ));
+                clean(&path);
+                run_to_kill(&ds, kind, &c, threads, &path, kill_after);
+                let resumed = resume_until_complete(&ds, kind, &c, threads, &path, 8);
+                assert_points_bit_identical(&resumed.result.points, &baseline.points);
+                clean(&path);
+            }
+        }
+    }
+}
+
+#[test]
+fn resilient_uninterrupted_matches_parallel_for_every_kind() {
+    let ds = small_ds(3);
+    let c = cfg(5);
+    let kinds = [
+        SolverKind::Cd,
+        SolverKind::Scd,
+        SolverKind::FistaReg,
+        SolverKind::ApgConst,
+        SolverKind::FwDet,
+        SolverKind::Sfw(SamplingStrategy::Fraction(0.1)),
+    ];
+    for kind in kinds {
+        for threads in [2usize, 8] {
+            let baseline = run_path_parallel(&ds, kind, &c, threads);
+            let out = run_path_resilient(
+                &ds,
+                kind,
+                &c,
+                threads,
+                &ResilientOptions {
+                    checkpoint: None, // control-only: no snapshot I/O either
+                    resume: false,
+                    control: RunControl::new(),
+                },
+            );
+            assert!(out.complete);
+            assert_eq!(out.resumed_points, 0);
+            assert_points_bit_identical(&out.result.points, &baseline.points);
+        }
+    }
+}
+
+#[test]
+fn chained_kills_and_resumes_converge_bit_identically() {
+    // crash-during-recovery: every resume is itself killed until the path
+    // finally completes; the frontier must only ever move forward
+    let ds = small_ds(4);
+    let c = cfg(6);
+    let baseline = run_path_parallel(&ds, SolverKind::FwDet, &c, 1);
+    let path = ckpt_path("chained");
+    clean(&path);
+    let first = run_to_kill(&ds, SolverKind::FwDet, &c, 1, &path, 2);
+    assert!(!first.complete);
+    let mut frontier = first.result.points.len();
+    let mut rounds = 0;
+    loop {
+        let out = resume_to_kill(&ds, SolverKind::FwDet, &c, 1, &path, 2);
+        assert!(
+            out.result.points.len() >= frontier,
+            "resume lost progress: {} < {frontier}",
+            out.result.points.len()
+        );
+        frontier = out.result.points.len();
+        rounds += 1;
+        assert!(rounds <= 8, "chained kills never converged");
+        if out.complete {
+            assert_points_bit_identical(&out.result.points, &baseline.points);
+            break;
+        }
+    }
+    clean(&path);
+}
+
+// --------------------------------------------- torn / corrupt snapshots
+
+#[test]
+fn torn_snapshot_truncated_at_every_offset_degrades_cleanly() {
+    // tiny problem: the snapshot is ~1 KiB, so "every truncation offset →
+    // fresh start → full run" stays inside a unit-test budget
+    let ds = load(Named::Synth10k { relevant: 8 }, 0.002, 5);
+    let c = cfg(3);
+    let baseline = run_path_parallel(&ds, SolverKind::Cd, &c, 1);
+    let path = ckpt_path("torn");
+    clean(&path);
+    run_to_kill(&ds, SolverKind::Cd, &c, 1, &path, 1);
+    let good = std::fs::read(&path).unwrap();
+    assert!(good.len() > 64, "sanity: snapshot has real content");
+    for keep in 0..good.len() {
+        std::fs::write(&path, &good).unwrap();
+        truncate_file(&path, keep);
+        std::fs::remove_file(prev_path(&path)).ok(); // no fallback generation
+        let out = resume_until_complete(&ds, SolverKind::Cd, &c, 1, &path, 2);
+        assert_eq!(
+            out.resumed_points, 0,
+            "a {keep}-byte torn prefix of a {}-byte snapshot was accepted",
+            good.len()
+        );
+        assert_points_bit_identical(&out.result.points, &baseline.points);
+    }
+    // the untruncated file still resumes (the loop above proved rejection,
+    // this proves we were rejecting damage rather than everything)
+    std::fs::write(&path, &good).unwrap();
+    std::fs::remove_file(prev_path(&path)).ok();
+    let out = resume_until_complete(&ds, SolverKind::Cd, &c, 1, &path, 2);
+    assert!(out.resumed_points > 0, "intact snapshot must actually resume");
+    assert_points_bit_identical(&out.result.points, &baseline.points);
+    clean(&path);
+}
+
+#[test]
+fn corrupt_snapshot_falls_back_to_prev_generation() {
+    // a complete run leaves a full snapshot; plant it as `.prev`, then
+    // bit-flip the final path — every flip must be caught by a section
+    // checksum and the loader must restore the `.prev` generation whole
+    let ds = load(Named::Synth10k { relevant: 8 }, 0.002, 6);
+    let c = cfg(3);
+    let baseline = run_path_parallel(&ds, SolverKind::Cd, &c, 1);
+    let path = ckpt_path("bitflip");
+    clean(&path);
+    let full = run_path_resilient(
+        &ds,
+        SolverKind::Cd,
+        &c,
+        1,
+        &ResilientOptions {
+            checkpoint: Some(path.clone()),
+            resume: false,
+            control: RunControl::new(),
+        },
+    );
+    assert!(full.complete);
+    let good = std::fs::read(&path).unwrap();
+    let stride = (good.len() / 97).max(1); // ~100 probe offsets across the file
+    for offset in (0..good.len()).step_by(stride) {
+        for mask in [0xFFu8, 0x01] {
+            std::fs::write(&path, &good).unwrap();
+            std::fs::write(prev_path(&path), &good).unwrap();
+            flip_byte(&path, offset, mask);
+            let out = resume_until_complete(&ds, SolverKind::Cd, &c, 1, &path, 2);
+            assert_eq!(
+                out.resumed_points,
+                c.n_points,
+                "flip at offset {offset} (mask {mask:#04x}) did not fall back \
+                 to the intact .prev generation"
+            );
+            assert!(out.complete);
+            assert_points_bit_identical(&out.result.points, &baseline.points);
+        }
+    }
+    clean(&path);
+}
+
+#[test]
+fn stale_snapshot_from_other_configuration_is_rejected() {
+    // same path, different run shape (thread count and grid length feed
+    // the fingerprint): resume must start fresh, not mix frontiers
+    let ds = small_ds(7);
+    let path = ckpt_path("stale");
+    clean(&path);
+    let c6 = cfg(6);
+    run_to_kill(&ds, SolverKind::Cd, &c6, 2, &path, 3);
+    assert!(file_len(&path) > 0);
+    // (a) different thread count
+    let out = resume_until_complete(&ds, SolverKind::Cd, &c6, 4, &path, 2);
+    assert_eq!(out.resumed_points, 0, "cross-thread-count resume must be rejected");
+    assert_points_bit_identical(
+        &out.result.points,
+        &run_path_parallel(&ds, SolverKind::Cd, &c6, 4).points,
+    );
+    // (b) different grid
+    clean(&path);
+    run_to_kill(&ds, SolverKind::Cd, &c6, 1, &path, 3);
+    let c4 = cfg(4);
+    let out = resume_until_complete(&ds, SolverKind::Cd, &c4, 1, &path, 2);
+    assert_eq!(out.resumed_points, 0, "cross-grid resume must be rejected");
+    // (c) different solver
+    clean(&path);
+    run_to_kill(&ds, SolverKind::Cd, &c6, 1, &path, 3);
+    let out = resume_until_complete(&ds, SolverKind::FwDet, &c6, 1, &path, 2);
+    assert_eq!(out.resumed_points, 0, "cross-solver resume must be rejected");
+    assert_points_bit_identical(
+        &out.result.points,
+        &run_path_parallel(&ds, SolverKind::FwDet, &c6, 1).points,
+    );
+    clean(&path);
+}
+
+#[test]
+fn graceful_shutdown_writes_a_resumable_final_checkpoint() {
+    // the server drain path: a shutdown flag (not a cancel) asks the run
+    // to checkpoint and stop at the next boundary; the snapshot must then
+    // resume to the bit-identical full path
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+    let ds = small_ds(8);
+    let c = cfg(6);
+    let baseline = run_path_parallel(&ds, SolverKind::FwDet, &c, 2);
+    let path = ckpt_path("drain");
+    clean(&path);
+    let flag = Arc::new(AtomicBool::new(true)); // already draining at start
+    let control = RunControl::new();
+    control.set_shutdown_flag(Arc::clone(&flag));
+    let out = run_path_resilient(
+        &ds,
+        SolverKind::FwDet,
+        &c,
+        2,
+        &ResilientOptions {
+            checkpoint: Some(path.clone()),
+            resume: false,
+            control,
+        },
+    );
+    assert!(!out.complete, "a draining run must stop at the first boundary");
+    assert!(file_len(&path) > 0, "drain must leave a final checkpoint");
+    flag.store(false, Ordering::SeqCst);
+    let resumed = resume_until_complete(&ds, SolverKind::FwDet, &c, 2, &path, 8);
+    assert_points_bit_identical(&resumed.result.points, &baseline.points);
+    clean(&path);
+}

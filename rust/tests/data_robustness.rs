@@ -87,6 +87,41 @@ fn snapshot_single_byte_flips_never_panic() {
 }
 
 #[test]
+fn interrupted_snapshot_rewrite_never_tears_the_final_path() {
+    // The writer's contract (write_snapshot): bytes land in a sibling
+    // `.tmp.<pid>` file, get fsynced, and are renamed into place — so a
+    // crash at ANY byte offset of the write leaves either the previous
+    // generation or nothing at the final path, never a torn snapshot.
+    let d = libsvm::parse(SAMPLE_TEXT, None).unwrap();
+    let dir = tmpdir("atomic");
+    let path = dir.join("a.sfwbin");
+    write_snapshot(&path, &d.x, &d.y).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // a stale temp file from a crashed writer (same pid suffix the live
+    // writer would pick) must be invisible to readers and harmlessly
+    // overwritten by the next successful write
+    let tmp = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(&format!(".tmp.{}", std::process::id()));
+        PathBuf::from(os)
+    };
+    std::fs::write(&tmp, b"torn garbage from a crashed writer").unwrap();
+    assert!(read_snapshot(&path).is_ok(), "stale temp must not affect reads");
+    write_snapshot(&path, &d.x, &d.y).unwrap();
+    assert!(!tmp.exists(), "successful write must consume the temp file");
+    assert_eq!(std::fs::read(&path).unwrap(), good, "rewrite is byte-stable");
+
+    // a failed write (unreachable temp location) must error without
+    // touching the existing generation at the final path
+    let bad_path = dir.join("no_such_subdir").join("b.sfwbin");
+    assert!(write_snapshot(&bad_path, &d.x, &d.y).is_err());
+    assert!(!bad_path.exists(), "failed write must leave nothing behind");
+    assert_eq!(std::fs::read(&path).unwrap(), good, "bystander untouched");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
 fn snapshot_header_mutations_error_cleanly() {
     let good = sample_snapshot_bytes("header");
     let dir = tmpdir("header");

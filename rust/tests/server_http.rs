@@ -34,12 +34,14 @@ fn test_server() -> ServerHandle {
         timeout: Duration::from_secs(120),
         conn_threads: 4,
         allow_files: false,
+        ..Default::default()
     })
     .expect("server spawns")
 }
 
 struct Response {
     status: u16,
+    headers: Vec<(String, String)>,
     body: String,
 }
 
@@ -47,6 +49,13 @@ impl Response {
     fn json(&self) -> Json {
         Json::parse(&self.body)
             .unwrap_or_else(|e| panic!("unparseable body {:?}: {e:?}", self.body))
+    }
+
+    fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(n, _)| n.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
     }
 }
 
@@ -75,18 +84,20 @@ fn read_response(stream: &mut TcpStream) -> Response {
         .and_then(|s| s.parse().ok())
         .unwrap_or_else(|| panic!("bad status line {status_line:?}"));
     let mut content_length = 0usize;
+    let mut headers = Vec::new();
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             if name.trim().eq_ignore_ascii_case("content-length") {
                 content_length = value.trim().parse().expect("numeric Content-Length");
             }
+            headers.push((name.trim().to_string(), value.trim().to_string()));
         }
     }
     // interim 1xx responses (100 Continue) carry no body; read the real one
     if (100..200).contains(&status) {
         // the interim head has no body: drop it and parse the next response
         buf.drain(..head_end + 4);
-        let mut rest = Response { status, body: String::new() };
+        let mut rest = Response { status, headers: Vec::new(), body: String::new() };
         if buf.is_empty() {
             return read_response(stream);
         }
@@ -111,7 +122,7 @@ fn read_response(stream: &mut TcpStream) -> Response {
         body.extend_from_slice(&chunk[..n]);
     }
     body.truncate(content_length);
-    Response { status, body: String::from_utf8(body).expect("UTF-8 body") }
+    Response { status, headers, body: String::from_utf8(body).expect("UTF-8 body") }
 }
 
 fn send_request(addr: SocketAddr, raw: &[u8]) -> Response {
@@ -454,6 +465,193 @@ fn keep_alive_serves_sequential_requests_on_one_connection() {
     drop(stream);
     srv.shutdown();
     srv.wait();
+}
+
+// ------------------------------------------------------ resilience / chaos
+
+#[test]
+fn status_endpoint_reports_queue_and_checkpoint_state() {
+    let srv = test_server();
+    let r = get(srv.addr(), "/v1/status");
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    let s = r.json();
+    assert_eq!(s.get("status").as_str(), Some("ok"));
+    assert_eq!(s.get("queue").get("capacity").as_f64(), Some(8.0));
+    assert_eq!(s.get("queue").get("workers").as_f64(), Some(2.0));
+    assert_eq!(s.get("queue").get("depth").as_f64(), Some(0.0));
+    assert_eq!(s.get("in_flight").as_arr().map(|a| a.len()), Some(0));
+    assert_eq!(s.get("watchdog").get("stalls").as_f64(), Some(0.0));
+    assert_eq!(s.get("datasets").get("resident").as_f64(), Some(0.0));
+    assert_eq!(s.get("datasets").get("poisoned_tiles").as_f64(), Some(0.0));
+    // process-wide counters: other tests in this binary may have bumped
+    // them, so presence (not zero) is the contract here
+    assert!(s.get("checkpoints").get("written").as_f64().is_some());
+    assert!(s.get("checkpoints").get("resumed").as_f64().is_some());
+
+    // after a request the gauges return to idle
+    let ok = post(
+        srv.addr(),
+        "/v1/solve",
+        r#"{"dataset": "synth-10000-32", "scale": 0.005, "seed": 31,
+            "delta": 1.0, "sample": 0.5, "max_iters": 200}"#,
+    );
+    assert_eq!(ok.status, 200, "body: {}", ok.body);
+    let s = get(srv.addr(), "/v1/status").json();
+    assert_eq!(s.get("queue").get("depth").as_f64(), Some(0.0));
+    assert_eq!(s.get("in_flight").as_arr().map(|a| a.len()), Some(0));
+    assert_eq!(s.get("datasets").get("resident").as_f64(), Some(1.0));
+    srv.shutdown();
+    srv.wait();
+}
+
+#[test]
+fn overload_503_carries_retry_after_guidance() {
+    let srv = spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        queue_cap: 1,
+        timeout: Duration::from_secs(120),
+        ..Default::default()
+    })
+    .expect("server spawns");
+    let addr = srv.addr();
+    // a long solve pins the single worker; the burst behind it overflows
+    // the one-slot queue
+    let handles: Vec<_> = (0..6)
+        .map(|_| {
+            std::thread::spawn(move || {
+                post(
+                    addr,
+                    "/v1/solve",
+                    r#"{"dataset": "synth-10000-32", "scale": 0.005, "seed": 37,
+                        "delta": 2.0, "sample": 0.5, "eps": 1e-9, "max_iters": 50000}"#,
+                )
+            })
+        })
+        .collect();
+    let mut rejected = 0;
+    for h in handles {
+        let r = h.join().unwrap();
+        if r.status == 503 {
+            rejected += 1;
+            assert_eq!(
+                r.header("Retry-After"),
+                Some("1"),
+                "503 must tell clients when to retry; headers: {:?}",
+                r.headers
+            );
+        }
+    }
+    assert!(rejected >= 1, "burst of 6 on a 1+1 server must shed load");
+    srv.shutdown();
+    srv.wait();
+}
+
+#[test]
+fn connection_dropped_mid_body_leaves_server_healthy() {
+    let srv = test_server();
+    let addr = srv.addr();
+    for _ in 0..4 {
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        // declare 1000 body bytes, deliver 10, vanish
+        stream
+            .write_all(
+                b"POST /v1/solve HTTP/1.1\r\nHost: t\r\nContent-Length: 1000\r\n\r\n{\"dataset\"",
+            )
+            .expect("write partial request");
+        drop(stream); // TCP FIN mid-body
+    }
+    // dropped uploads must not wedge conn workers or kill the accept loop
+    let r = get(addr, "/healthz");
+    assert_eq!(r.status, 200);
+    let s = get(addr, "/v1/status").json();
+    assert_eq!(s.get("in_flight").as_arr().map(|a| a.len()), Some(0));
+    srv.shutdown();
+    srv.wait();
+}
+
+#[test]
+fn slow_loris_header_dribble_is_capped_at_431() {
+    use sfw_lasso::server::http::MAX_HEAD;
+    let srv = test_server();
+    let addr = srv.addr();
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.write_all(b"GET /healthz HTTP/1.1\r\nHost: t\r\n").unwrap();
+    // dribble filler headers in 1 KiB slices well past the head cap; the
+    // server must cut the parade off at MAX_HEAD, not buffer forever
+    let filler = format!("X-Pad: {}\r\n", "a".repeat(1017));
+    let mut sent = 0usize;
+    while sent < MAX_HEAD + 8 * 1024 {
+        if stream.write_all(filler.as_bytes()).is_err() {
+            break; // server already responded and closed: that's the point
+        }
+        sent += filler.len();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let r = read_response(&mut stream);
+    assert_eq!(r.status, 431, "unbounded header dribble must yield 431");
+    drop(stream);
+    // and the server is unharmed
+    let r = get(addr, "/healthz");
+    assert_eq!(r.status, 200);
+    srv.shutdown();
+    srv.wait();
+}
+
+#[test]
+fn deadline_expiry_yields_504_and_retains_partial_checkpoint() {
+    let dir = std::env::temp_dir().join(format!("sfw_server_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let ckpt = dir.join("deadline.sfwckpt");
+    std::fs::remove_file(&ckpt).ok();
+    let srv = spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        timeout: Duration::from_millis(400),
+        allow_files: true, // checkpoint paths write server-local files
+        ..Default::default()
+    })
+    .expect("server spawns");
+    let addr = srv.addr();
+    // a path job that cannot finish in 400 ms: the deadline must cancel
+    // it (504), and the cancelled job must leave its boundary checkpoint
+    // behind so a retry with "resume": true loses at most one point
+    let body = format!(
+        r#"{{"dataset": "synth-10000-100", "scale": 0.05, "seed": 9,
+            "solver": "fw", "points": 16, "eps": 1e-12,
+            "max_iters": 500000, "threads": 1,
+            "checkpoint": {:?}}}"#,
+        ckpt.to_str().expect("utf-8 temp path")
+    );
+    let r = post(addr, "/v1/path", &body);
+    assert_eq!(r.status, 504, "body: {}", r.body);
+    assert_eq!(error_kind(&r), "timeout");
+    // the 504 is sent while the worker is still winding down; the final
+    // checkpoint flush lands at the job's next boundary — poll for it
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    while !ckpt.exists() && std::time::Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(ckpt.exists(), "cancelled path job must leave its checkpoint");
+    assert!(std::fs::metadata(&ckpt).unwrap().len() > 0);
+    // the abandoned job drains from the in-flight table (no slot leak)
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        let s = get(addr, "/v1/status").json();
+        if s.get("in_flight").as_arr().map(|a| a.len()) == Some(0) {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "cancelled job never left the in-flight table"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let r = get(addr, "/healthz");
+    assert_eq!(r.status, 200, "server must outlive its deadline kills");
+    srv.shutdown();
+    srv.wait();
+    std::fs::remove_file(&ckpt).ok();
 }
 
 #[test]
