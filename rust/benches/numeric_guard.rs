@@ -1,0 +1,172 @@
+//! §Robustness: what does numerical health cost on the clean path?
+//! (DESIGN.md §15, `docs/adr/ADR-008-numerical-health.md`)
+//!
+//! The health layer has two cost centers:
+//!
+//! 1. **ingress scans** — every batch of values entering the system
+//!    (LIBSVM parse, `.sfwbin` decode, tile decode) is checked finite.
+//!    Measured here as raw scan throughput (`first_nonfinite_*`) and as
+//!    the guarded LIBSVM parse throughput, so the scan can be compared
+//!    against the parse work it rides on;
+//! 2. **in-loop tripwires** — one `is_finite` test per solver check
+//!    cadence. The bench measures the per-check cost in isolation, counts
+//!    the checks a real path run performs (≤ its iteration count), and
+//!    reports the product as a *fraction of the measured path time* — an
+//!    upper bound on what the tripwires can possibly cost, independent of
+//!    measurement noise between two full runs.
+//!
+//! Acceptance (ISSUE 9): clean-path overhead ≤ 2%. The headline
+//! `tripwire_fraction_upper_bound` is asserted under 0.02 and the scan
+//! fraction of parse is reported alongside. Emits machine-readable
+//! `BENCH_numeric_guard.json` (override with `SFW_BENCH_JSON`) — the
+//! acceptance artifact uploaded by the CI `bench-artifacts` job.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::bench::bench;
+use sfw_lasso::data::{libsvm, load, Named};
+use sfw_lasso::numerics::{first_nonfinite_f32, first_nonfinite_f64, HealthPolicy};
+use sfw_lasso::path::{run_path, SolverKind};
+use sfw_lasso::util::json::Json;
+use std::hint::black_box;
+
+fn main() {
+    common::banner(
+        "numeric_guard",
+        "clean-path cost of the numerical-health layer (DESIGN.md §15)",
+    );
+    let scale = (common::scale() * 0.5).clamp(0.01, 1.0);
+    let ds = load(Named::Synth10k { relevant: 32 }, scale, common::seed());
+    let mut cfg = common::path_config();
+    cfg.n_points = common::points().clamp(8, 40);
+    println!(
+        "dataset {} ({} × {}), {} grid points\n",
+        ds.name,
+        ds.rows(),
+        ds.cols(),
+        cfg.n_points
+    );
+    let (w, r) = (1usize, 5usize.max(common::reps()));
+
+    // --- 1. raw finite-scan throughput (the ingress cost primitive) ---
+    let n_scan = 4_000_000usize;
+    let vals32: Vec<f32> = (0..n_scan).map(|i| (i as f32).sin()).collect();
+    let vals64: Vec<f64> = (0..n_scan).map(|i| (i as f64).cos()).collect();
+    let scan32 = bench(w, r, || black_box(first_nonfinite_f32(black_box(&vals32))));
+    let scan64 = bench(w, r, || black_box(first_nonfinite_f64(black_box(&vals64))));
+    let scan32_gb = (n_scan * 4) as f64 / scan32.mean / 1e9;
+    let scan64_gb = (n_scan * 8) as f64 / scan64.mean / 1e9;
+    println!("{}", scan32.row(&format!("finite scan f32, {n_scan} elems ({scan32_gb:.1} GB/s)")));
+    println!("{}", scan64.row(&format!("finite scan f64, {n_scan} elems ({scan64_gb:.1} GB/s)")));
+
+    // --- 2. guarded LIBSVM parse (scan folded into tokenization) ---
+    let mut text = String::new();
+    for i in 0..20_000usize {
+        let v = (i as f64 * 0.37).sin();
+        text.push_str(&format!("{v:.6} 1:{:.5} 7:{:.5} 19:{:.5}\n", v * 0.5, v * v, 1.0 - v));
+    }
+    let bytes = text.as_bytes();
+    let parse = bench(w, r, || {
+        libsvm::parse_bytes_with(black_box(bytes), None, HealthPolicy::Reject)
+            .expect("clean parse")
+            .0
+            .y
+            .len()
+    });
+    let parse_mb = bytes.len() as f64 / parse.mean / 1e6;
+    println!("{}", parse.row(&format!("LIBSVM parse under Reject ({parse_mb:.0} MB/s)")));
+    // how much of the parse could the scan possibly be: one f64 scan of
+    // every parsed value (target + 3 features per row) at measured speed
+    let parsed_vals = (20_000 * 4) as f64;
+    let scan_secs_per_parse = parsed_vals * (scan64.mean / n_scan as f64);
+    let scan_fraction_of_parse = scan_secs_per_parse / parse.mean;
+    println!(
+        "  → value-scan share of the parse ≤ {:.3}%\n",
+        scan_fraction_of_parse * 100.0
+    );
+
+    // --- 3. tripwire upper bound on a real path run ---
+    // per-check cost: a dependent is_finite chain over f64s, measured in
+    // isolation (pessimistic — in the solver the test hides in the sweep)
+    let n_checks = 1_000_000usize;
+    let check = bench(w, r, || {
+        let mut bad = 0u64;
+        for v in vals64.iter().take(n_checks) {
+            if !black_box(*v).is_finite() {
+                bad += 1;
+            }
+        }
+        black_box(bad)
+    });
+    let ns_per_check = check.mean / n_checks as f64 * 1e9;
+    println!("{}", check.row(&format!("tripwire test in isolation ({ns_per_check:.2} ns/check)")));
+
+    let mut report_fields: Vec<(&str, Json)> = vec![
+        ("dataset", Json::Str(ds.name.clone())),
+        ("rows", Json::Num(ds.rows() as f64)),
+        ("cols", Json::Num(ds.cols() as f64)),
+        ("n_points", Json::Num(cfg.n_points as f64)),
+        ("scan_f32_gb_per_s", Json::Num(scan32_gb)),
+        ("scan_f64_gb_per_s", Json::Num(scan64_gb)),
+        ("parse_mb_per_s", Json::Num(parse_mb)),
+        ("scan_fraction_of_parse", Json::Num(scan_fraction_of_parse)),
+        ("tripwire_ns_per_check", Json::Num(ns_per_check)),
+    ];
+
+    let mut worst_fraction = 0.0f64;
+    for (tag, spec) in [("cd", "cd"), ("sfw", "sfw:0.02")] {
+        let kind = SolverKind::parse(spec).expect("kind parses");
+        let path = bench(w, r, || run_path(&ds, kind, &cfg).total_iters);
+        let pr = run_path(&ds, kind, &cfg);
+        // every solver checks at most once per counted iteration (cd/scd
+        // per sweep/epoch, the rest per iteration), so iters bounds the
+        // check count; the product with the isolated per-check cost
+        // bounds the tripwire share of the measured path time
+        let checks = pr.total_iters as f64;
+        let fraction = checks * (ns_per_check / 1e9) / path.mean;
+        worst_fraction = worst_fraction.max(fraction);
+        println!(
+            "{}",
+            path.row(&format!(
+                "path {tag}: {} iters → tripwire share ≤ {:.4}%",
+                pr.total_iters,
+                fraction * 100.0
+            ))
+        );
+        report_fields.push((
+            match tag {
+                "cd" => "path_cd_secs",
+                _ => "path_sfw_secs",
+            },
+            Json::Num(path.mean),
+        ));
+        report_fields.push((
+            match tag {
+                "cd" => "tripwire_fraction_cd",
+                _ => "tripwire_fraction_sfw",
+            },
+            Json::Num(fraction),
+        ));
+    }
+    report_fields.push(("tripwire_fraction_upper_bound", Json::Num(worst_fraction)));
+
+    println!(
+        "\nheadline: tripwire share ≤ {:.4}% of path time, value-scan share ≤ {:.3}% of parse",
+        worst_fraction * 100.0,
+        scan_fraction_of_parse * 100.0
+    );
+    // the ISSUE 9 acceptance bar: ≤ 2% clean-path overhead
+    assert!(
+        worst_fraction < 0.02,
+        "tripwire upper bound {worst_fraction:.4} breaches the 2% acceptance bar"
+    );
+
+    let report = Json::obj(report_fields);
+    let path =
+        std::env::var("SFW_BENCH_JSON").unwrap_or_else(|_| "BENCH_numeric_guard.json".into());
+    match std::fs::write(&path, report.pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+    }
+}

@@ -90,12 +90,14 @@ pub fn render_speedup_row(baseline_seconds: f64, results: &[&PathResult]) -> Str
 
 /// CSV of per-point series: one row per grid point.
 /// Columns: reg, l1_norm, active, train_mse, test_mse, iters, dots,
-/// screened_frac, certified_gap, kappa_final[, tracked...]
+/// screened_frac, certified_gap, kappa_final, numeric_error[, tracked...]
 /// (`certified_gap`/`kappa_final` cells are empty when the solver
-/// recorded none — non-certified runs, non-stochastic solvers.)
+/// recorded none — non-certified runs, non-stochastic solvers; the
+/// `numeric_error` cell is the stable `E_*` code of a tripped point and
+/// empty for a healthy one, so degraded rows stay machine-matchable.)
 pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
     let mut s = String::from(
-        "reg,l1_norm,active,train_mse,test_mse,iters,dots,screened_frac,certified_gap,kappa_final",
+        "reg,l1_norm,active,train_mse,test_mse,iters,dots,screened_frac,certified_gap,kappa_final,numeric_error",
     );
     for name in tracked_names {
         let _ = write!(s, ",{name}");
@@ -104,7 +106,7 @@ pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
     for pt in &r.points {
         let _ = write!(
             s,
-            "{},{},{},{},{},{},{},{},{},{}",
+            "{},{},{},{},{},{},{},{},{},{},{}",
             pt.reg,
             pt.l1_norm,
             pt.active,
@@ -114,7 +116,8 @@ pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
             pt.dots,
             pt.screened_frac,
             pt.certified_gap.map(|v| v.to_string()).unwrap_or_default(),
-            pt.kappa_final.map(|v| v.to_string()).unwrap_or_default()
+            pt.kappa_final.map(|v| v.to_string()).unwrap_or_default(),
+            pt.numeric_error.as_ref().map(|e| e.code()).unwrap_or_default()
         );
         for c in &pt.tracked_coefs {
             let _ = write!(s, ",{c}");
@@ -181,6 +184,18 @@ pub fn path_point_json(pt: &PathPoint) -> Json {
         ("screened_frac", Json::Num(pt.screened_frac)),
         ("certified_gap", opt_num(pt.certified_gap)),
         ("kappa_final", opt_num(pt.kappa_final.map(|k| k as f64))),
+        // degraded ≠ missing: a healthy point carries an explicit `null`,
+        // a tripped one a structured {code, message} object (DESIGN.md §15)
+        (
+            "numeric_error",
+            match &pt.numeric_error {
+                Some(e) => Json::obj(vec![
+                    ("code", Json::Str(e.code().to_string())),
+                    ("message", Json::Str(e.to_string())),
+                ]),
+                None => Json::Null,
+            },
+        ),
     ];
     if !pt.tracked_coefs.is_empty() {
         pairs.push(("tracked_coefs", Json::arr_f64(&pt.tracked_coefs)));
@@ -192,9 +207,16 @@ pub fn path_point_json(pt: &PathPoint) -> Json {
 /// the complete per-point series via [`path_point_json`]. This is the
 /// result body the solve server returns and `path --json` writes.
 pub fn path_result_json(r: &PathResult) -> Json {
+    let degraded = r.points.iter().any(|p| p.numeric_error.is_some());
     Json::obj(vec![
         ("solver", Json::Str(r.solver.clone())),
         ("dataset", Json::Str(r.dataset.clone())),
+        // run-level health verdict: "degraded" iff any point tripped a
+        // numerical tripwire (its own object says which and why)
+        (
+            "health",
+            Json::Str(if degraded { "degraded" } else { "ok" }.to_string()),
+        ),
         ("seconds", Json::Num(r.seconds)),
         ("total_iters", Json::Num(r.total_iters as f64)),
         ("total_dots", Json::Num(r.total_dots as f64)),
@@ -273,6 +295,7 @@ mod tests {
                     certified_gap: None,
                     kappa_final: None,
                     tracked_coefs: vec![0.1 * k as f64],
+                    numeric_error: None,
                 })
                 .collect(),
             seconds: secs,
@@ -308,7 +331,8 @@ mod tests {
         assert!(lines[0].contains("screened_frac"));
         assert!(lines[0].contains("certified_gap"));
         assert!(lines[0].contains("kappa_final"));
-        assert_eq!(lines[1].split(',').count(), 11);
+        assert!(lines[0].contains("numeric_error"));
+        assert_eq!(lines[1].split(',').count(), 12);
         // empty cells for un-certified, non-stochastic runs
         assert!(lines[1].contains(",,"));
     }
@@ -319,14 +343,14 @@ mod tests {
         for (k, pt) in r.points.iter_mut().enumerate() {
             pt.certified_gap = Some(1e-4 / (k + 1) as f64);
             pt.kappa_final = Some(64 * (k + 1));
-            pt.tracked_coefs.clear(); // kappa_final is the row's last cell
+            pt.tracked_coefs.clear(); // numeric_error (empty) ends the row
         }
         let t = render_table("ds", &[&r]);
         assert!(t.contains("Cert. gap (end)"), "{t}");
         assert!(t.contains("2.00e-5"), "{t}");
         let csv = path_csv(&r, &[]);
         let last = csv.lines().last().unwrap();
-        assert!(last.ends_with(",320"), "{last}");
+        assert!(last.ends_with(",320,"), "{last}");
         // JSON carries the final certificate
         let j = summary_json(&[&r]);
         let parsed = crate::util::json::Json::parse(&j.pretty()).unwrap();
@@ -383,6 +407,30 @@ mod tests {
         assert_eq!(pts[0].get("certified_gap"), &crate::util::json::Json::Null);
         // tracked coefficients present (fake_result tracks one per point)
         assert_eq!(pts[1].get("tracked_coefs").as_arr().unwrap().len(), 1);
+        // healthy run: explicit ok verdict, explicit null per point
+        assert_eq!(parsed.get("health").as_str(), Some("ok"));
+        assert_eq!(pts[0].get("numeric_error"), &crate::util::json::Json::Null);
+    }
+
+    #[test]
+    fn poisoned_point_is_degraded_not_missing() {
+        let mut r = fake_result("SFW 1%", 1.0);
+        r.points[3].numeric_error =
+            Some(crate::numerics::NumericError::state("sfw", 17, "sampled gap"));
+        // CSV: the E_* code lands in the numeric_error cell, healthy rows empty
+        let csv = path_csv(&r, &["coef0".into()]);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert!(lines[4].contains("E_NONFINITE_STATE"), "{}", lines[4]);
+        assert!(!lines[1].contains("E_NONFINITE_STATE"), "{}", lines[1]);
+        assert_eq!(lines[4].split(',').count(), 12);
+        // JSON: run degraded, poisoned point carries {code, message}
+        let parsed = crate::util::json::Json::parse(&path_result_json(&r).dump()).unwrap();
+        assert_eq!(parsed.get("health").as_str(), Some("degraded"));
+        let pts = parsed.get("points").as_arr().unwrap();
+        let err = pts[3].get("numeric_error");
+        assert_eq!(err.get("code").as_str(), Some("E_NONFINITE_STATE"));
+        assert!(err.get("message").as_str().unwrap().contains("sfw"));
+        assert_eq!(pts[2].get("numeric_error"), &crate::util::json::Json::Null);
     }
 
     #[test]

@@ -364,6 +364,28 @@ pub fn read_snapshot_versioned(path: &Path) -> Result<(LibsvmData, u16), String>
     if row_idx.iter().any(|&r| r as usize >= rows) {
         return Err(format!("{path:?}: row index out of range"));
     }
+    // numerical-health scan (DESIGN.md §15): snapshots are written from
+    // already-validated parses, so a non-finite value here is corruption
+    // — always reject (no scrub policy at this ingress). The message
+    // carries the stable E_NONFINITE_DATA code with coordinates.
+    if let Some(i) = crate::numerics::first_nonfinite_f64(&y) {
+        return Err(format!(
+            "{path:?}: {}",
+            crate::numerics::NumericError::NonFiniteData {
+                col: crate::numerics::TARGET_COL,
+                row: i,
+            }
+        ));
+    }
+    if let Some(k) = crate::numerics::first_nonfinite_f32(&vals) {
+        // invert CSC: entry k lives in the column whose pointer range
+        // contains it (col_ptr is a validated monotone prefix sum)
+        let col = col_ptr.partition_point(|&c| c <= k).saturating_sub(1);
+        return Err(format!(
+            "{path:?}: {}",
+            crate::numerics::NumericError::NonFiniteData { col, row: row_idx[k] as usize }
+        ));
+    }
     // CSC validity the scan engine depends on (`partition_point` tile
     // splits, the mirror build): rows strictly ascending within a column.
     for j in 0..cols {
@@ -550,6 +572,21 @@ pub fn attach_out_of_core(
 /// plain parse with a warning on stderr — the cache can never make a run
 /// fail.
 pub fn load_libsvm(path: &Path, use_cache: bool) -> Result<(LibsvmData, bool), String> {
+    load_libsvm_with(path, use_cache, crate::numerics::HealthPolicy::Reject)
+        .map(|(d, from_cache, _)| (d, from_cache))
+}
+
+/// [`load_libsvm`] under an explicit [`crate::numerics::HealthPolicy`]
+/// for the text-parse path (`--nonfinite`). Returns the data, whether
+/// the snapshot served the load, and how many non-finite values were
+/// scrubbed to zero (always 0 under `Reject` and on snapshot hits —
+/// snapshots hold already-validated values, and a non-finite value
+/// found inside one is corruption, rejected regardless of policy).
+pub fn load_libsvm_with(
+    path: &Path,
+    use_cache: bool,
+    policy: crate::numerics::HealthPolicy,
+) -> Result<(LibsvmData, bool, usize), String> {
     let snap = snapshot_path(path);
     if use_cache && snapshot_fresh(path, &snap) {
         match read_snapshot_versioned(&snap) {
@@ -561,18 +598,18 @@ pub fn load_libsvm(path: &Path, use_cache: bool) -> Result<(LibsvmData, bool), S
                         );
                     }
                 }
-                return Ok((d, true));
+                return Ok((d, true, 0));
             }
             Err(e) => eprintln!("warning: ignoring stale cache: {e}"),
         }
     }
-    let data = libsvm::read(path, None)?;
+    let (data, scrubbed) = libsvm::read_with(path, None, policy)?;
     if use_cache {
         if let Err(e) = write_snapshot(&snap, &data.x, &data.y) {
             eprintln!("warning: could not write cache: {e}");
         }
     }
-    Ok((data, false))
+    Ok((data, false, scrubbed))
 }
 
 /// Load a LIBSVM file straight into an assembled [`crate::data::Dataset`]
@@ -584,7 +621,21 @@ pub fn load_dataset(
     path: &Path,
     use_cache: bool,
 ) -> Result<(crate::data::Dataset, bool), String> {
-    let (d, from_snapshot) = load_libsvm(path, use_cache)?;
+    load_dataset_with(path, use_cache, crate::numerics::HealthPolicy::Reject)
+}
+
+/// [`load_dataset`] under an explicit [`crate::numerics::HealthPolicy`]
+/// (`--nonfinite`): `Scrub` zeroes non-finite design entries at parse
+/// time (with a stderr note counting the repairs) instead of rejecting.
+pub fn load_dataset_with(
+    path: &Path,
+    use_cache: bool,
+    policy: crate::numerics::HealthPolicy,
+) -> Result<(crate::data::Dataset, bool), String> {
+    let (d, from_snapshot, scrubbed) = load_libsvm_with(path, use_cache, policy)?;
+    if scrubbed > 0 {
+        eprintln!("note: scrubbed {scrubbed} non-finite value(s) to 0 (--nonfinite scrub)");
+    }
     let rows = d.x.rows();
     let name = format!("libsvm:{}", path.display());
     let ds = crate::data::assemble(
@@ -695,6 +746,32 @@ mod tests {
         bad[HEADER_LEN + 8] = 0xFF; // col_ptr[1] low byte → 255 > nnz
         std::fs::write(&path, &bad).unwrap();
         assert!(read_snapshot(&path).unwrap_err().contains("monotone"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn snapshot_rejects_nonfinite_payload() {
+        let dir = tmpdir("nonfinite");
+        let path = dir.join("nf.sfwbin");
+        let d = sample_data();
+        write_snapshot(&path, &d.x, &d.y).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        let vals_start =
+            HEADER_LEN + (d.x.cols() + 1) * 8 + d.x.nnz() * 4 + pad8(d.x.nnz() * 4);
+        // NaN into the first design value → E_NONFINITE_DATA with coordinates
+        let mut bad = good.clone();
+        bad[vals_start..vals_start + 4].copy_from_slice(&f32::NAN.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let e = read_snapshot(&path).unwrap_err();
+        assert!(e.contains("E_NONFINITE_DATA"), "{e}");
+        assert!(e.contains("column 0"), "{e}");
+        // +Inf into y[1] → E_NONFINITE_DATA on the target
+        let y_start = vals_start + d.x.nnz() * 4 + pad8(d.x.nnz() * 4);
+        let mut bad = good.clone();
+        bad[y_start + 8..y_start + 16].copy_from_slice(&f64::INFINITY.to_le_bytes());
+        std::fs::write(&path, &bad).unwrap();
+        let e = read_snapshot(&path).unwrap_err();
+        assert!(e.contains("E_NONFINITE_DATA") && e.contains("y[1]"), "{e}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -21,6 +21,7 @@
 //! trailing whitespace are accepted everywhere.
 
 use crate::linalg::CscMatrix;
+use crate::numerics::HealthPolicy;
 use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::path::Path;
 
@@ -47,6 +48,12 @@ struct Parser {
     y: Vec<f64>,
     triplets: Vec<(u32, u32, f32)>,
     max_feat: usize,
+    /// Non-finite token handling: `Reject` (default) errors with the
+    /// line + byte offset; `Scrub` substitutes exact zero and counts.
+    policy: HealthPolicy,
+    /// Number of non-finite tokens scrubbed to zero (always 0 under
+    /// `Reject`).
+    scrubbed: usize,
 }
 
 /// Trim ASCII whitespace (space, tab, `\r`, …) from both ends without
@@ -70,11 +77,33 @@ fn trim_ascii_ws(mut s: &[u8]) -> &[u8] {
 }
 
 /// Parse an f64 from a borrowed byte sub-slice (no allocation; full
-/// `str::parse` syntax so exponents/infinities behave exactly as before).
+/// `str::parse` exponent syntax). NOTE: `str::parse::<f64>` also accepts
+/// `nan`/`inf`/`-inf` spellings — callers must check `is_finite()` and
+/// route the token through the active [`HealthPolicy`]; forwarding a
+/// non-finite token into the matrix poisons every downstream dot
+/// (DESIGN.md §15).
 fn parse_f64(tok: &[u8]) -> Result<f64, String> {
     std::str::from_utf8(tok)
         .map_err(|_| "invalid utf-8".to_string())
         .and_then(|s| s.parse::<f64>().map_err(|e| e.to_string()))
+}
+
+/// Build the reject-path diagnostic for a non-finite token: 1-based line
+/// plus the token's byte offset within that line, carrying the stable
+/// `E_NONFINITE_DATA` code.
+fn nonfinite_err(
+    lineno: usize,
+    raw: &[u8],
+    tok_start_in_trimmed: usize,
+    kind: &str,
+    tok: &[u8],
+) -> String {
+    let lead = raw.iter().take_while(|b| b.is_ascii_whitespace()).count();
+    format!(
+        "line {lineno}, byte {}: non-finite {kind} '{}' (E_NONFINITE_DATA)",
+        lead + tok_start_in_trimmed,
+        lossy(tok)
+    )
 }
 
 fn parse_usize(tok: &[u8]) -> Result<usize, String> {
@@ -121,6 +150,18 @@ impl Parser {
                 let label = parse_f64(tok).map_err(|e| {
                     format!("line {lineno}: bad label '{}': {e}", lossy(tok))
                 })?;
+                if !label.is_finite() {
+                    match self.policy {
+                        HealthPolicy::Reject => {
+                            return Err(nonfinite_err(lineno, raw, start, "label", tok));
+                        }
+                        HealthPolicy::Scrub => {
+                            self.scrubbed += 1;
+                            self.y.push(0.0);
+                            continue;
+                        }
+                    }
+                }
                 self.y.push(label);
                 continue;
             }
@@ -144,6 +185,29 @@ impl Parser {
                 format!("line {lineno}: bad value '{}': {e}", lossy(val_b))
             })?;
             self.max_feat = self.max_feat.max(idx);
+            // values are stored as f32: a finite-but-huge f64 (e.g.
+            // 1e300) would overflow the narrowing cast to ±inf, so the
+            // check runs on the value as stored
+            if !val.is_finite() || !(val as f32).is_finite() {
+                match self.policy {
+                    HealthPolicy::Reject => {
+                        return Err(nonfinite_err(
+                            lineno,
+                            raw,
+                            start + colon + 1,
+                            "value",
+                            val_b,
+                        ));
+                    }
+                    HealthPolicy::Scrub => {
+                        // scrub = exact zero: a sparse zero is simply no
+                        // stored triplet (the column itself stays known
+                        // through max_feat above)
+                        self.scrubbed += 1;
+                        continue;
+                    }
+                }
+            }
             if val != 0.0 {
                 self.triplets.push((row as u32, (idx - 1) as u32, val as f32));
             }
@@ -177,10 +241,17 @@ impl Parser {
     }
 }
 
-/// Parse LIBSVM content from a byte slice. `num_features`: pad/validate
-/// to a fixed p (None → max index seen).
-pub fn parse_bytes(bytes: &[u8], num_features: Option<usize>) -> Result<LibsvmData, String> {
-    let mut parser = Parser::default();
+/// Parse LIBSVM content from a byte slice under an explicit
+/// [`HealthPolicy`]. Returns the parsed data plus the number of
+/// non-finite tokens scrubbed to zero (always 0 under `Reject`, which
+/// errors instead). `num_features`: pad/validate to a fixed p (None →
+/// max index seen).
+pub fn parse_bytes_with(
+    bytes: &[u8],
+    num_features: Option<usize>,
+    policy: HealthPolicy,
+) -> Result<(LibsvmData, usize), String> {
+    let mut parser = Parser { policy, ..Parser::default() };
     let mut lineno = 0usize;
     let mut rest = bytes;
     while !rest.is_empty() {
@@ -192,7 +263,24 @@ pub fn parse_bytes(bytes: &[u8], num_features: Option<usize>) -> Result<LibsvmDa
         parser.line(line, lineno)?;
         rest = tail;
     }
-    parser.finish(num_features)
+    let scrubbed = parser.scrubbed;
+    parser.finish(num_features).map(|d| (d, scrubbed))
+}
+
+/// Parse LIBSVM content from a byte slice, rejecting non-finite tokens.
+/// `num_features`: pad/validate to a fixed p (None → max index seen).
+pub fn parse_bytes(bytes: &[u8], num_features: Option<usize>) -> Result<LibsvmData, String> {
+    parse_bytes_with(bytes, num_features, HealthPolicy::Reject).map(|(d, _)| d)
+}
+
+/// Parse LIBSVM text under an explicit [`HealthPolicy`] (thin wrapper
+/// over [`parse_bytes_with`]).
+pub fn parse_with(
+    text: &str,
+    num_features: Option<usize>,
+    policy: HealthPolicy,
+) -> Result<(LibsvmData, usize), String> {
+    parse_bytes_with(text.as_bytes(), num_features, policy)
 }
 
 /// Parse LIBSVM text (thin wrapper over [`parse_bytes`]).
@@ -200,12 +288,17 @@ pub fn parse(text: &str, num_features: Option<usize>) -> Result<LibsvmData, Stri
     parse_bytes(text.as_bytes(), num_features)
 }
 
-/// Read from a file path, streaming line-by-line through a reused buffer
-/// (the file is never materialized whole in memory).
-pub fn read(path: &Path, num_features: Option<usize>) -> Result<LibsvmData, String> {
+/// Read from a file path under an explicit [`HealthPolicy`], streaming
+/// line-by-line through a reused buffer (the file is never materialized
+/// whole in memory). Returns the data plus the scrub count.
+pub fn read_with(
+    path: &Path,
+    num_features: Option<usize>,
+    policy: HealthPolicy,
+) -> Result<(LibsvmData, usize), String> {
     let f = std::fs::File::open(path).map_err(|e| format!("open {path:?}: {e}"))?;
     let mut reader = BufReader::with_capacity(1 << 20, f);
-    let mut parser = Parser::default();
+    let mut parser = Parser { policy, ..Parser::default() };
     let mut buf: Vec<u8> = Vec::with_capacity(4096);
     let mut lineno = 0usize;
     loop {
@@ -219,7 +312,13 @@ pub fn read(path: &Path, num_features: Option<usize>) -> Result<LibsvmData, Stri
         lineno += 1;
         parser.line(&buf, lineno)?;
     }
-    parser.finish(num_features)
+    let scrubbed = parser.scrubbed;
+    parser.finish(num_features).map(|d| (d, scrubbed))
+}
+
+/// Read from a file path, rejecting non-finite tokens (see [`read_with`]).
+pub fn read(path: &Path, num_features: Option<usize>) -> Result<LibsvmData, String> {
+    read_with(path, num_features, HealthPolicy::Reject).map(|(d, _)| d)
 }
 
 /// Write a sparse dataset in LIBSVM format.
@@ -283,6 +382,52 @@ mod tests {
         assert!(parse("1 1:z", None).is_err()); // bad value
         assert!(parse("1 1", None).is_err()); // missing colon
         assert!(parse("1 5:1", Some(3)).is_err()); // index out of declared range
+    }
+
+    #[test]
+    fn parse_rejects_nonfinite_tokens_with_byte_offsets() {
+        // str::parse::<f64> accepts these spellings — the parser must not
+        for txt in ["nan 1:2\n", "inf 1:2\n", "-inf 1:2\n", "NaN 1:2\n", "Infinity 1:2\n"] {
+            let err = parse(txt, None).unwrap_err();
+            assert!(err.contains("non-finite label"), "{txt:?}: {err}");
+            assert!(err.contains("E_NONFINITE_DATA"), "{txt:?}: {err}");
+            assert!(err.contains("line 1, byte 0"), "{txt:?}: {err}");
+        }
+        for txt in ["1 1:nan\n", "1 1:inf\n", "1 1:-inf\n", "1 2:1 3:NaN\n"] {
+            let err = parse(txt, None).unwrap_err();
+            assert!(err.contains("non-finite value"), "{txt:?}: {err}");
+            assert!(err.contains("E_NONFINITE_DATA"), "{txt:?}: {err}");
+        }
+        // the byte offset points at the value token, not the pair
+        let err = parse("1 1:2 7:inf\n", None).unwrap_err();
+        assert!(err.contains("line 1, byte 8"), "{err}");
+        // finite in f64 but ±inf once narrowed to the f32 storage
+        let err = parse("1 1:1e300\n", None).unwrap_err();
+        assert!(err.contains("non-finite value"), "{err}");
+        // leading whitespace shifts the reported offset accordingly
+        let err = parse("  nan 1:2\n", None).unwrap_err();
+        assert!(err.contains("line 1, byte 2"), "{err}");
+    }
+
+    #[test]
+    fn scrub_policy_zeroes_nonfinite_tokens_and_counts() {
+        use crate::numerics::HealthPolicy;
+        let txt = "nan 1:2\n1 1:inf 2:3\n2 3:nan\n";
+        let (d, scrubbed) = parse_with(txt, None, HealthPolicy::Scrub).unwrap();
+        assert_eq!(scrubbed, 3); // one label + two values
+        assert_eq!(d.y, vec![0.0, 1.0, 2.0]);
+        // scrubbed values are exact sparse zeros; finite entries survive
+        assert_eq!(d.x.cols(), 3);
+        assert_eq!(d.x.col_dot(0, &[1.0, 1.0, 1.0]), 2.0);
+        assert_eq!(d.x.col_dot(1, &[0.0, 1.0, 0.0]), 3.0);
+        assert_eq!(d.x.col_dot(2, &[1.0, 1.0, 1.0]), 0.0);
+        for j in 0..d.x.cols() {
+            assert!(d.x.col(j).1.iter().all(|v| v.is_finite()));
+        }
+        // clean input scrubs nothing and matches the reject-path parse
+        let (clean, n) = parse_with("1 1:2\n", None, HealthPolicy::Scrub).unwrap();
+        assert_eq!(n, 0);
+        assert_eq!(clean.y, parse("1 1:2\n", None).unwrap().y);
     }
 
     #[test]

@@ -24,9 +24,26 @@ pub fn resolve_spec(
     seed: u64,
     use_cache: bool,
 ) -> Result<(Dataset, bool), String> {
+    resolve_spec_with(spec, scale, seed, use_cache, crate::numerics::HealthPolicy::Reject)
+}
+
+/// [`resolve_spec`] under an explicit [`crate::numerics::HealthPolicy`]
+/// (`--nonfinite`): the policy governs non-finite tokens on the LIBSVM
+/// text-parse path (`Scrub` zeroes them, `Reject` fails with a typed
+/// coordinate error). Generated problems additionally validate `scale`
+/// here — a NaN/Inf/non-positive scale would otherwise produce a
+/// degenerate or poisoned design before any solver tripwire can fire.
+pub fn resolve_spec_with(
+    spec: &str,
+    scale: f64,
+    seed: u64,
+    use_cache: bool,
+    policy: crate::numerics::HealthPolicy,
+) -> Result<(Dataset, bool), String> {
     if let Some(path) = spec.strip_prefix("libsvm:") {
-        return cache::load_dataset(std::path::Path::new(path), use_cache);
+        return cache::load_dataset_with(std::path::Path::new(path), use_cache, policy);
     }
+    crate::numerics::require_finite_pos("scale", scale).map_err(|e| e.to_string())?;
     let named = Named::parse(spec).ok_or_else(|| {
         format!(
             "unknown dataset '{spec}'; available: {} (or libsvm:<path>)",
@@ -50,7 +67,28 @@ pub fn resolve_spec_budgeted(
     use_cache: bool,
     mem_budget: Option<usize>,
 ) -> Result<(Dataset, bool), String> {
-    let (mut ds, from_snapshot) = resolve_spec(spec, scale, seed, use_cache)?;
+    resolve_spec_budgeted_with(
+        spec,
+        scale,
+        seed,
+        use_cache,
+        mem_budget,
+        crate::numerics::HealthPolicy::Reject,
+    )
+}
+
+/// [`resolve_spec_budgeted`] under an explicit
+/// [`crate::numerics::HealthPolicy`] — the full CLI ingress: policy-aware
+/// parse, then the optional out-of-core attach.
+pub fn resolve_spec_budgeted_with(
+    spec: &str,
+    scale: f64,
+    seed: u64,
+    use_cache: bool,
+    mem_budget: Option<usize>,
+    policy: crate::numerics::HealthPolicy,
+) -> Result<(Dataset, bool), String> {
+    let (mut ds, from_snapshot) = resolve_spec_with(spec, scale, seed, use_cache, policy)?;
     if let Some(budget) = mem_budget {
         let snap = spec
             .strip_prefix("libsvm:")

@@ -22,6 +22,15 @@ pub struct SynthSpec {
     pub seed: u64,
 }
 
+impl SynthSpec {
+    /// Validate the generator configuration (DESIGN.md §15): `noise`
+    /// must be finite and ≥ 0 — a NaN noise level would poison every
+    /// target value before any solver tripwire could fire.
+    pub fn validate(&self) -> Result<(), crate::numerics::NumericError> {
+        crate::numerics::require_finite_nonneg("noise", self.noise)
+    }
+}
+
 /// Generated problem with its ground truth.
 pub struct SynthData {
     pub x: Design,
@@ -32,6 +41,7 @@ pub struct SynthData {
 
 /// Generate a dense synthetic regression problem.
 pub fn make_regression(spec: &SynthSpec) -> SynthData {
+    spec.validate().unwrap_or_else(|e| panic!("{e}"));
     let &SynthSpec { n_samples: n, n_features: p, n_informative, noise, seed } = spec;
     assert!(n_informative <= p, "n_informative must be ≤ n_features");
     let mut rng = Xoshiro256::seed_from_u64(seed);
@@ -76,8 +86,10 @@ pub fn make_correlated_regression(
     rho: f64,
     n_factors: usize,
 ) -> SynthData {
+    spec.validate().unwrap_or_else(|e| panic!("{e}"));
     let &SynthSpec { n_samples: n, n_features: p, n_informative, noise, seed } = spec;
     assert!(n_informative <= p, "n_informative must be ≤ n_features");
+    // the range check also excludes NaN: `contains` is false for it
     assert!((0.0..1.0).contains(&rho), "rho must be in [0, 1), got {rho}");
     let n_factors = n_factors.max(1);
     let mut rng = Xoshiro256::seed_from_u64(seed);
@@ -125,6 +137,17 @@ mod tests {
 
     fn spec(n: usize, p: usize, inf: usize, noise: f64) -> SynthSpec {
         SynthSpec { n_samples: n, n_features: p, n_informative: inf, noise, seed: 42 }
+    }
+
+    #[test]
+    fn nonfinite_noise_is_rejected_by_validate() {
+        assert!(spec(10, 10, 2, 0.0).validate().is_ok());
+        for bad in [f64::NAN, f64::INFINITY, -1.0] {
+            let e = spec(10, 10, 2, bad).validate().unwrap_err();
+            assert_eq!(e.code(), "E_DEGENERATE_CONFIG");
+        }
+        let r = std::panic::catch_unwind(|| make_regression(&spec(10, 10, 2, f64::NAN)));
+        assert!(r.is_err(), "generator must refuse a NaN noise level");
     }
 
     #[test]

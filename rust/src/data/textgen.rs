@@ -59,6 +59,16 @@ impl TextSpec {
         }
     }
 
+    /// Validate the generator configuration (DESIGN.md §15): the Zipf
+    /// exponent must be finite and > 0 (the frequency table divides by
+    /// `rank^exponent`) and `noise` finite and ≥ 0 — non-finite values
+    /// here would poison the whole design/target before any solver
+    /// tripwire could fire.
+    pub fn validate(&self) -> Result<(), crate::numerics::NumericError> {
+        crate::numerics::require_finite_pos("zipf_exponent", self.zipf_exponent)?;
+        crate::numerics::require_finite_nonneg("noise", self.noise)
+    }
+
     /// E2006-log1p-shaped (p = 4 272 227 at scale 1.0).
     pub fn e2006_log1p(scale: f64, seed: u64) -> Self {
         Self {
@@ -84,6 +94,7 @@ pub struct TextData {
 
 /// Generate the sparse doc-term design plus planted response.
 pub fn generate(spec: &TextSpec) -> TextData {
+    spec.validate().unwrap_or_else(|e| panic!("{e}"));
     let mut rng = Xoshiro256::seed_from_u64(spec.seed);
     let zipf = ZipfTable::new(spec.n_terms, spec.zipf_exponent);
 
@@ -159,6 +170,17 @@ mod tests {
             noise: 0.05,
             seed: 17,
         }
+    }
+
+    #[test]
+    fn degenerate_spec_is_rejected_by_validate() {
+        assert!(small_spec(TermWeighting::Log1p).validate().is_ok());
+        let mut s = small_spec(TermWeighting::Log1p);
+        s.zipf_exponent = f64::NAN;
+        assert_eq!(s.validate().unwrap_err().code(), "E_DEGENERATE_CONFIG");
+        let mut s = small_spec(TermWeighting::Log1p);
+        s.noise = f64::INFINITY;
+        assert_eq!(s.validate().unwrap_err().code(), "E_DEGENERATE_CONFIG");
     }
 
     #[test]

@@ -43,6 +43,13 @@
 //! (`SFW_NO_MIRROR=1` opts out) and row-tile-sharded by the parallel
 //! backend.
 //!
+//! Numerical health lives in [`numerics`]: a typed `NumericError` plus a
+//! `reject`/`scrub` [`numerics::HealthPolicy`] enforced at every data
+//! ingress (LIBSVM parse, `.sfwbin` decode, tile chunks, generators,
+//! standardization), with cheap in-loop solver tripwires that abort on
+//! non-finite state instead of burning `max_iters` on NaN comparisons
+//! (DESIGN.md §15, ADR-008).
+//!
 //! Lasso-as-a-service lives in [`server`]: a zero-dependency HTTP 1.1
 //! front end (`sfw-lasso serve`) that validates JSON solve/path jobs into
 //! [`solvers::SolveOptions`]/[`path::PathConfig`], executes them on a
@@ -64,6 +71,7 @@ pub mod coordinator;
 pub mod data;
 #[allow(missing_docs)]
 pub mod linalg;
+pub mod numerics;
 pub mod parallel;
 pub mod path;
 #[allow(missing_docs)]

@@ -395,6 +395,20 @@ impl Design {
         }
     }
 
+    /// Zero every entry of column j — the `HealthPolicy::Scrub` repair
+    /// for a poisoned column. An explicit fill rather than
+    /// `scale_col(j, 0.0)`, because `NaN * 0.0 = NaN` would leave the
+    /// poison in place. Invalidates the CSR mirror and any attached tile
+    /// store, exactly like [`Design::scale_col`].
+    pub fn zero_col(&mut self, j: usize) {
+        let _ = self.mirror.take();
+        self.tiles = None;
+        match &mut self.storage {
+            Storage::Dense(x) => x.col_mut(j).fill(0.0),
+            Storage::Sparse(x) => x.zero_col(j),
+        }
+    }
+
     /// Largest squared singular value ‖X‖₂² via power iteration — the
     /// Lipschitz constant used by FISTA/APG step sizes.
     pub fn spectral_norm_sq(&self, iters: usize, seed: u64) -> f64 {

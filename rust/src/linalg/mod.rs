@@ -15,5 +15,5 @@ pub use dense::DenseMatrix;
 pub use design::{ColumnCache, Design, Storage};
 pub use kernel::{KernelOps, KernelScratch};
 pub use sparse::{CscBuilder, CscMatrix};
-pub use standardize::{standardize, Standardization};
+pub use standardize::{standardize, standardize_checked, Standardization};
 pub use tiles::{FileTiles, TileError};

@@ -184,6 +184,15 @@ impl CscMatrix {
         }
     }
 
+    /// Zero every stored value of column j (structure unchanged). This is
+    /// the `HealthPolicy::Scrub` repair for a poisoned column: an explicit
+    /// fill, because `scale_col(j, 0.0)` would compute `NaN * 0.0 = NaN`
+    /// and leave the poison in place.
+    pub fn zero_col(&mut self, j: usize) {
+        let (a, b) = (self.col_ptr[j], self.col_ptr[j + 1]);
+        self.vals[a..b].fill(0.0);
+    }
+
     /// out = X·α.
     pub fn matvec(&self, alpha: &[f64], out: &mut [f64]) {
         assert_eq!(alpha.len(), self.cols);

@@ -15,6 +15,7 @@
 //! can be mapped back to the original feature space.
 
 use super::design::{Design, Storage};
+use crate::numerics::{HealthPolicy, NumericError, TARGET_COL};
 
 /// Record of the applied transform (per-column mean/scale, y mean).
 #[derive(Clone, Debug)]
@@ -48,9 +49,58 @@ impl Standardization {
 }
 
 /// Standardize `x` and `y` in place; returns the transform record.
+///
+/// # Panics
+///
+/// Panics on non-finite input (defense-in-depth: every data ingress
+/// rejects or scrubs poison before it can reach this point — see
+/// DESIGN.md §15). Use [`standardize_checked`] where a typed error is
+/// needed.
 pub fn standardize(x: &mut Design, y: &mut [f64]) -> Standardization {
+    match standardize_checked(x, y, HealthPolicy::Reject) {
+        Ok((st, _)) => st,
+        Err(e) => panic!("standardize: {e} (route ingress through standardize_checked)"),
+    }
+}
+
+/// Standardize `x` and `y` in place under an explicit [`HealthPolicy`].
+///
+/// A column containing a non-finite entry has NaN/∞ norm; the historical
+/// code's `norm > 0.0` test was false for NaN, so the column was left
+/// unscaled and poisoned every downstream dot. Here the poison is caught:
+///
+/// * `Reject` — returns [`NumericError::NonFiniteData`] with the column
+///   and the first offending row (column [`TARGET_COL`] means `y`);
+/// * `Scrub` — zeroes the whole offending column (exact sparse/dense
+///   zeros, `col_scale` stays 1) or the offending `y` entry, and counts
+///   each repair in the returned scrub count.
+///
+/// A column whose norm is so small that `1/norm` overflows (subnormal
+/// norms) is left unscaled like a zero column — scaling it would
+/// manufacture ±∞ entries. On finite input with normal norms the
+/// arithmetic is bit-identical to [`standardize`]'s historical behavior.
+pub fn standardize_checked(
+    x: &mut Design,
+    y: &mut [f64],
+    policy: HealthPolicy,
+) -> Result<(Standardization, usize), NumericError> {
     let (m, p) = (x.rows(), x.cols());
     assert_eq!(y.len(), m);
+    let mut scrubbed = 0usize;
+
+    // the target first: a poisoned y entry would make y_mean non-finite
+    // and poison every centered response
+    while let Some(i) = crate::numerics::first_nonfinite_f64(y) {
+        match policy {
+            HealthPolicy::Reject => {
+                return Err(NumericError::NonFiniteData { col: TARGET_COL, row: i });
+            }
+            HealthPolicy::Scrub => {
+                y[i] = 0.0;
+                scrubbed += 1;
+            }
+        }
+    }
     let y_mean = if m > 0 { y.iter().sum::<f64>() / m as f64 } else { 0.0 };
     for v in y.iter_mut() {
         *v -= y_mean;
@@ -62,19 +112,71 @@ pub fn standardize(x: &mut Design, y: &mut [f64]) -> Standardization {
     let dense = matches!(x.storage(), Storage::Dense(_));
     for j in 0..p {
         if dense {
-            // center
+            // a non-finite mean means the column is poisoned: handle it
+            // BEFORE centering would smear NaN over every entry
             let mean = col_sum(x, j) / m as f64;
+            if !mean.is_finite() {
+                match policy {
+                    HealthPolicy::Reject => {
+                        return Err(NumericError::NonFiniteData {
+                            col: j,
+                            row: first_bad_row(x, j),
+                        });
+                    }
+                    HealthPolicy::Scrub => {
+                        x.zero_col(j);
+                        scrubbed += 1;
+                        continue;
+                    }
+                }
+            }
             col_mean[j] = mean;
             add_to_col(x, j, -mean);
         }
         let norm = x.col_norm_sq(j).sqrt();
-        if norm > 0.0 {
+        if !norm.is_finite() {
+            match policy {
+                HealthPolicy::Reject => {
+                    return Err(NumericError::NonFiniteData {
+                        col: j,
+                        row: first_bad_row(x, j),
+                    });
+                }
+                HealthPolicy::Scrub => {
+                    // NaN * 0.0 = NaN, so scrub must be an explicit zero
+                    // fill, never scale_col(j, 0.0)
+                    x.zero_col(j);
+                    col_mean[j] = 0.0;
+                    scrubbed += 1;
+                    continue;
+                }
+            }
+        }
+        if norm > 0.0 && (1.0 / norm).is_finite() {
             col_scale[j] = 1.0 / norm;
             x.scale_col(j, 1.0 / norm);
         }
     }
 
-    Standardization { col_mean, col_scale, y_mean }
+    Ok((Standardization { col_mean, col_scale, y_mean }, scrubbed))
+}
+
+/// First row of column `j` holding a non-finite value (0 if the norm
+/// overflowed without any single entry being non-finite — unreachable
+/// with the f64 accumulation of `col_norm_sq`, kept as a total fallback).
+fn first_bad_row(x: &Design, j: usize) -> usize {
+    match x.storage() {
+        Storage::Dense(d) => {
+            d.col(j).iter().position(|v| !v.is_finite()).unwrap_or(0)
+        }
+        Storage::Sparse(s) => {
+            let (rows, vals) = s.col(j);
+            vals.iter()
+                .position(|v| !v.is_finite())
+                .map(|k| rows[k] as usize)
+                .unwrap_or(0)
+        }
+    }
 }
 
 fn col_sum(x: &Design, j: usize) -> f64 {
@@ -178,6 +280,110 @@ mod tests {
                 "col {j} rescaled by {}",
                 st2.col_scale[j]
             );
+        }
+    }
+
+    #[test]
+    fn checked_rejects_poisoned_columns_with_coordinates() {
+        use crate::numerics::{HealthPolicy, NumericError, TARGET_COL};
+        // dense: NaN at (2, 1)
+        let mut x = Design::dense(DenseMatrix::from_fn(4, 3, |i, j| {
+            if (i, j) == (2, 1) { f64::NAN } else { (i + j + 1) as f64 }
+        }));
+        let mut y = vec![1.0; 4];
+        let err = standardize_checked(&mut x, &mut y, HealthPolicy::Reject).unwrap_err();
+        assert_eq!(err, NumericError::NonFiniteData { col: 1, row: 2 });
+        // sparse: inf at (3, 0)
+        let mut b = CscBuilder::new(5, 2);
+        b.push(1, 0, 2.0);
+        b.push(3, 0, f64::INFINITY);
+        b.push(0, 1, 1.0);
+        let mut x = Design::sparse(b.build());
+        let mut y = vec![0.5; 5];
+        let err = standardize_checked(&mut x, &mut y, HealthPolicy::Reject).unwrap_err();
+        assert_eq!(err, NumericError::NonFiniteData { col: 0, row: 3 });
+        // target poison reports the sentinel column
+        let mut x = Design::dense(DenseMatrix::from_fn(3, 1, |i, _| i as f64 + 1.0));
+        let mut y = vec![1.0, f64::NAN, 3.0];
+        let err = standardize_checked(&mut x, &mut y, HealthPolicy::Reject).unwrap_err();
+        assert_eq!(err, NumericError::NonFiniteData { col: TARGET_COL, row: 1 });
+    }
+
+    #[test]
+    fn checked_scrub_zeroes_poisoned_columns_and_counts() {
+        use crate::numerics::HealthPolicy;
+        let mut b = CscBuilder::new(4, 3);
+        b.push(0, 0, 3.0);
+        b.push(1, 0, 4.0);
+        b.push(2, 1, f64::NAN);
+        b.push(3, 1, 5.0);
+        b.push(0, 2, 2.0);
+        let mut x = Design::sparse(b.build());
+        let mut y = vec![1.0, f64::INFINITY, 3.0, 5.0];
+        let (st, scrubbed) =
+            standardize_checked(&mut x, &mut y, HealthPolicy::Scrub).unwrap();
+        // one y entry + one whole column
+        assert_eq!(scrubbed, 2);
+        // poisoned column is exactly zero, scale stays 1
+        assert_eq!(x.col_norm_sq(1), 0.0);
+        assert_eq!(st.col_scale[1], 1.0);
+        // clean columns standardized as usual
+        assert!((x.col_norm_sq(0) - 1.0).abs() < 1e-6);
+        assert!((x.col_norm_sq(2) - 1.0).abs() < 1e-6);
+        // scrubbed y entry became 0 before centering: mean of {1,0,3,5}
+        assert!((st.y_mean - 2.25).abs() < 1e-12);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn checked_is_identical_to_unchecked_on_clean_input() {
+        use crate::numerics::HealthPolicy;
+        let mk = || {
+            let mut b = CscBuilder::new(6, 3);
+            b.push(0, 0, 3.0);
+            b.push(4, 0, -4.0);
+            b.push(2, 1, 0.25);
+            b.push(5, 2, 7.5);
+            Design::sparse(b.build())
+        };
+        let mut xa = mk();
+        let mut ya = vec![1.0, -2.0, 3.0, 0.0, 4.0, -1.0];
+        let sta = standardize(&mut xa, &mut ya);
+        let mut xb = mk();
+        let mut yb = vec![1.0, -2.0, 3.0, 0.0, 4.0, -1.0];
+        let (stb, scrubbed) =
+            standardize_checked(&mut xb, &mut yb, HealthPolicy::Scrub).unwrap();
+        assert_eq!(scrubbed, 0);
+        for (a, b) in ya.iter().zip(yb.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for j in 0..3 {
+            assert_eq!(sta.col_scale[j].to_bits(), stb.col_scale[j].to_bits());
+            assert_eq!(xa.col_norm_sq(j).to_bits(), xb.col_norm_sq(j).to_bits());
+        }
+    }
+
+    #[test]
+    fn subnormal_and_underflowing_columns_stay_finite() {
+        use crate::numerics::HealthPolicy;
+        let mut b = CscBuilder::new(2, 2);
+        // col 0: underflows the f32 storage to an exact zero column
+        b.push(0, 0, 1e-320);
+        // col 1: a genuine f32 subnormal — must scale to a finite value
+        b.push(1, 1, 1e-45);
+        let mut x = Design::sparse(b.build());
+        let mut y = vec![1.0, 2.0];
+        let (st, scrubbed) =
+            standardize_checked(&mut x, &mut y, HealthPolicy::Reject).unwrap();
+        assert_eq!(scrubbed, 0);
+        assert_eq!(st.col_scale[0], 1.0, "zero column left unscaled");
+        assert!(st.col_scale[1].is_finite());
+        for j in 0..2 {
+            let (_, vals) = match x.storage() {
+                Storage::Sparse(s) => s.col(j),
+                _ => unreachable!(),
+            };
+            assert!(vals.iter().all(|v| v.is_finite()), "col {j}");
         }
     }
 

@@ -341,6 +341,15 @@ impl TileData {
                 return Err(format!("entry column {c} out of range (p = {cols})"));
             }
             let x = f32::from_le_bytes(buf[o + 4..o + 8].try_into().unwrap());
+            // numerical-health check at the decode boundary (DESIGN.md
+            // §15): a non-finite stored value survived the checksum, so
+            // the writer was fed poisoned data — reject the tile before
+            // the scan kernels can propagate NaN into every dot product
+            if !x.is_finite() {
+                return Err(format!(
+                    "entry {k} value {x} is not finite (E_NONFINITE_DATA, column {c})"
+                ));
+            }
             let x = match scale {
                 Some(s) => {
                     let sc = s[c as usize];
@@ -994,6 +1003,32 @@ mod tests {
         )
         .unwrap();
         assert_eq!(ft.tile(0).unwrap_err(), TileError::Truncated { tile: 0 });
+        // non-finite stored value (valid checksum) → typed rejection
+        let mut bad = chunk.clone();
+        let base = align8(4 * row_off.len());
+        bad[base + 4..base + 8].copy_from_slice(&f32::NAN.to_le_bytes());
+        let meta = TileMeta {
+            offset: 0,
+            byte_len: bad.len() as u64,
+            nnz: mirror.nnz() as u64,
+            checksum: fnv1a64(&bad),
+        };
+        let ft = FileTiles::new(
+            200,
+            7,
+            mirror.nnz(),
+            vec![meta],
+            Box::new(MemReader(bad)),
+            usize::MAX,
+            None,
+        )
+        .unwrap();
+        match ft.tile(0) {
+            Err(TileError::Corrupt { tile: 0, msg }) => {
+                assert!(msg.contains("E_NONFINITE_DATA"), "{msg}");
+            }
+            other => panic!("expected non-finite rejection, got {other:?}"),
+        }
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! Crate-wide numerical health: typed containment of non-finite values
+//! from data load to server response (DESIGN.md §15,
+//! `docs/adr/ADR-008-numerical-health.md`).
+//!
+//! A single `nan`/`inf` entering the pipeline used to poison everything
+//! silently: `parse::<f64>()` forwarded non-finite tokens into the
+//! design, `standardize` left a NaN-norm column unscaled (`norm > 0.0`
+//! is false for NaN), NaN duality gaps made every stopping rule a no-op
+//! (solvers burned their full `max_iters` budget on comparisons that are
+//! all false), and the JSON writer masked the garbage as `null` in a 200
+//! response. This module supplies the shared vocabulary for rejecting or
+//! scrubbing that poison at every ingress:
+//!
+//! * [`NumericError`] — the typed failure, with stable `E_*` codes that
+//!   survive into error messages, CSV cells, JSON envelopes and
+//!   `.sfwckpt` snapshots;
+//! * [`HealthPolicy`] — `reject` (default: fail loud with coordinates)
+//!   vs `scrub` (replace with zero, count the repairs) — the CLI
+//!   `--nonfinite` flag; the server is always `reject`;
+//! * config validators shared by `main.rs` and `server::api` so the CLI
+//!   and the HTTP surface agree on what a degenerate grid/δ/tolerance
+//!   is;
+//! * slice scanners used by the `.sfwbin` snapshot reader and the tile
+//!   decoder.
+//!
+//! Solver loops carry the cheap in-loop tripwire themselves (a
+//! NaN-propagating sum accumulator checked once per sweep/epoch/
+//! certificate window — see ADR-008 for why the checks ride the existing
+//! cadence instead of every iteration); on trip they surface
+//! [`NumericError::NonFiniteState`] through `RunResult::numeric_error`.
+
+use std::fmt;
+
+/// Sentinel column index meaning "the target vector `y`", used by
+/// [`NumericError::NonFiniteData`] when the poison is in the response
+/// rather than the design matrix.
+pub const TARGET_COL: usize = usize::MAX;
+
+/// A typed numerical-health failure. Every variant renders with a stable
+/// machine-matchable code (see [`NumericError::code`]) so errors keep
+/// their identity across text, CSV, JSON and checkpoint round-trips.
+#[derive(Clone, Debug, PartialEq)]
+pub enum NumericError {
+    /// A non-finite (or norm-overflowing) entry in loaded/generated data:
+    /// design entry at (`row`, `col`), or `y[row]` when
+    /// `col == `[`TARGET_COL`].
+    NonFiniteData {
+        /// Column of the poisoned entry ([`TARGET_COL`] for the target).
+        col: usize,
+        /// Row of the poisoned entry.
+        row: usize,
+    },
+    /// A solver's in-loop tripwire caught non-finite iterate state
+    /// (objective, gap, or step) at iteration `iter`.
+    NonFiniteState {
+        /// Solver label (`fw`, `sfw`, `cd`, ...).
+        solver: String,
+        /// Iteration (sweep/epoch for coordinate methods) at the trip.
+        iter: u64,
+        /// Which quantity tripped (`gap`, `step`, `objective`, ...).
+        what: String,
+    },
+    /// A configuration field is non-finite or out of its valid range
+    /// (grid bounds, δ, tolerances, scale, ...).
+    DegenerateConfig {
+        /// Name of the offending field, optionally with the bad value.
+        field: String,
+    },
+}
+
+impl NumericError {
+    /// Stable machine-matchable code for this error class.
+    pub fn code(&self) -> &'static str {
+        match self {
+            NumericError::NonFiniteData { .. } => "E_NONFINITE_DATA",
+            NumericError::NonFiniteState { .. } => "E_NONFINITE_STATE",
+            NumericError::DegenerateConfig { .. } => "E_DEGENERATE_CONFIG",
+        }
+    }
+
+    /// Shorthand constructor for the solver tripwire.
+    pub fn state(solver: &str, iter: u64, what: &str) -> Self {
+        NumericError::NonFiniteState {
+            solver: solver.to_string(),
+            iter,
+            what: what.to_string(),
+        }
+    }
+
+    /// Shorthand constructor for a degenerate config field.
+    pub fn config(field: impl Into<String>) -> Self {
+        NumericError::DegenerateConfig { field: field.into() }
+    }
+}
+
+impl fmt::Display for NumericError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NumericError::NonFiniteData { col, row } => {
+                if *col == TARGET_COL {
+                    write!(f, "{}: non-finite target y[{row}]", self.code())
+                } else {
+                    write!(
+                        f,
+                        "{}: non-finite design entry at row {row}, column {col}",
+                        self.code()
+                    )
+                }
+            }
+            NumericError::NonFiniteState { solver, iter, what } => write!(
+                f,
+                "{}: solver '{solver}' hit a non-finite {what} at iteration {iter}",
+                self.code()
+            ),
+            NumericError::DegenerateConfig { field } => {
+                write!(f, "{}: degenerate configuration: {field}", self.code())
+            }
+        }
+    }
+}
+
+/// What to do with non-finite values found at a data ingress.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HealthPolicy {
+    /// Fail loudly with a typed [`NumericError`] carrying coordinates.
+    #[default]
+    Reject,
+    /// Replace the poisoned value (or whole poisoned column, at the
+    /// standardization stage) with exact zero and count the repairs.
+    Scrub,
+}
+
+impl HealthPolicy {
+    /// Parse the CLI `--nonfinite` spelling (`reject` | `scrub`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "reject" => Some(HealthPolicy::Reject),
+            "scrub" => Some(HealthPolicy::Scrub),
+            _ => None,
+        }
+    }
+}
+
+// ------------------------------------------------------ config validators
+
+/// Require a finite config value; `field` names it in the error.
+pub fn require_finite(field: &str, v: f64) -> Result<(), NumericError> {
+    if v.is_finite() {
+        Ok(())
+    } else {
+        Err(NumericError::config(format!("{field} must be finite (got {v})")))
+    }
+}
+
+/// Require a finite, strictly positive config value.
+pub fn require_finite_pos(field: &str, v: f64) -> Result<(), NumericError> {
+    if v.is_finite() && v > 0.0 {
+        Ok(())
+    } else {
+        Err(NumericError::config(format!("{field} must be finite and > 0 (got {v})")))
+    }
+}
+
+/// Require a finite, non-negative config value.
+pub fn require_finite_nonneg(field: &str, v: f64) -> Result<(), NumericError> {
+    if v.is_finite() && v >= 0.0 {
+        Ok(())
+    } else {
+        Err(NumericError::config(format!("{field} must be finite and ≥ 0 (got {v})")))
+    }
+}
+
+// ----------------------------------------------------------- slice scans
+
+/// Index of the first non-finite value in an f32 slice, if any.
+pub fn first_nonfinite_f32(vals: &[f32]) -> Option<usize> {
+    vals.iter().position(|v| !v.is_finite())
+}
+
+/// Index of the first non-finite value in an f64 slice, if any.
+pub fn first_nonfinite_f64(vals: &[f64]) -> Option<usize> {
+    vals.iter().position(|v| !v.is_finite())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_displayed() {
+        let d = NumericError::NonFiniteData { col: 3, row: 7 };
+        assert_eq!(d.code(), "E_NONFINITE_DATA");
+        let msg = d.to_string();
+        assert!(msg.contains("E_NONFINITE_DATA") && msg.contains("row 7"), "{msg}");
+        let y = NumericError::NonFiniteData { col: TARGET_COL, row: 2 };
+        assert!(y.to_string().contains("y[2]"), "{y}");
+        let s = NumericError::state("sfw", 41, "gap");
+        assert_eq!(s.code(), "E_NONFINITE_STATE");
+        assert!(s.to_string().contains("'sfw'") && s.to_string().contains("41"));
+        let c = NumericError::config("delta must be finite");
+        assert!(c.to_string().contains("E_DEGENERATE_CONFIG"), "{c}");
+    }
+
+    #[test]
+    fn policy_parses_and_defaults_to_reject() {
+        assert_eq!(HealthPolicy::parse("reject"), Some(HealthPolicy::Reject));
+        assert_eq!(HealthPolicy::parse("scrub"), Some(HealthPolicy::Scrub));
+        assert_eq!(HealthPolicy::parse("ignore"), None);
+        assert_eq!(HealthPolicy::default(), HealthPolicy::Reject);
+    }
+
+    #[test]
+    fn validators_reject_nan_inf_and_range_violations() {
+        assert!(require_finite("a", 1.0).is_ok());
+        assert!(require_finite("a", f64::NAN).is_err());
+        assert!(require_finite("a", f64::INFINITY).is_err());
+        assert!(require_finite_pos("b", 1e-9).is_ok());
+        assert!(require_finite_pos("b", 0.0).is_err());
+        assert!(require_finite_pos("b", f64::NAN).is_err());
+        assert!(require_finite_nonneg("c", 0.0).is_ok());
+        assert!(require_finite_nonneg("c", -1.0).is_err());
+        // the error message names the field
+        let e = require_finite_pos("gap_tol", f64::NEG_INFINITY).unwrap_err();
+        assert!(e.to_string().contains("gap_tol"), "{e}");
+    }
+
+    #[test]
+    fn scanners_find_first_poison() {
+        assert_eq!(first_nonfinite_f32(&[1.0, 2.0]), None);
+        assert_eq!(first_nonfinite_f32(&[1.0, f32::NAN, f32::INFINITY]), Some(1));
+        assert_eq!(first_nonfinite_f64(&[]), None);
+        assert_eq!(first_nonfinite_f64(&[f64::NEG_INFINITY]), Some(0));
+        // subnormals are finite: they pass the scan
+        assert_eq!(first_nonfinite_f64(&[f64::MIN_POSITIVE / 2.0]), None);
+    }
+}

@@ -34,7 +34,7 @@
 //! **Snapshot layout** (`.sfwckpt`, all integers little-endian):
 //!
 //! ```text
-//! magic  b"SFWCKP" | u16 version (= 1)
+//! magic  b"SFWCKP" | u16 version (= 2)
 //! meta section     | fingerprint u64, n_blocks u64
 //! n_blocks × block section
 //! ```
@@ -66,7 +66,10 @@ use crate::util::ckpt::{
 use crate::util::timer::Stopwatch;
 
 const MAGIC: &[u8; 6] = b"SFWCKP";
-const VERSION: u16 = 1;
+/// Version 2 added the per-point `numeric_error` tag (DESIGN.md §15).
+/// Version-1 snapshots are rejected at decode, which the resilient runner
+/// degrades to a clean fresh start — the same path as a torn file.
+const VERSION: u16 = 2;
 /// Decode-time sanity caps (reject absurd sizes before any allocation).
 const MAX_BLOCKS: usize = 4096;
 const MAX_POINTS: usize = 1 << 20;
@@ -222,6 +225,64 @@ fn put_point(w: &mut ByteWriter, pt: &PathPoint) {
         None => w.put_u64(0),
     }
     put_f64s(w, &pt.tracked_coefs);
+    put_numeric_error(w, &pt.numeric_error);
+}
+
+fn put_str(w: &mut ByteWriter, s: &str) {
+    w.put_usize(s.len());
+    w.put_bytes(s.as_bytes());
+}
+
+fn get_str(r: &mut ByteReader<'_>, what: &str) -> Result<String, String> {
+    let n = r.usize_capped(MAX_VEC, what)?;
+    Ok(String::from_utf8_lossy(r.take(n)?).into_owned())
+}
+
+/// Tag codec for [`crate::numerics::NumericError`]: 0 = healthy, then one
+/// tag per variant. Round-trips the coordinates/strings so a resumed run
+/// reports the same degraded point an uninterrupted run would.
+fn put_numeric_error(w: &mut ByteWriter, e: &Option<crate::numerics::NumericError>) {
+    use crate::numerics::NumericError as NE;
+    match e {
+        None => w.put_u64(0),
+        Some(NE::NonFiniteData { col, row }) => {
+            w.put_u64(1);
+            w.put_usize(*col);
+            w.put_usize(*row);
+        }
+        Some(NE::NonFiniteState { solver, iter, what }) => {
+            w.put_u64(2);
+            put_str(w, solver);
+            w.put_u64(*iter);
+            put_str(w, what);
+        }
+        Some(NE::DegenerateConfig { field }) => {
+            w.put_u64(3);
+            put_str(w, field);
+        }
+    }
+}
+
+fn get_numeric_error(
+    r: &mut ByteReader<'_>,
+) -> Result<Option<crate::numerics::NumericError>, String> {
+    use crate::numerics::NumericError as NE;
+    Ok(match r.u64()? {
+        0 => None,
+        1 => Some(NE::NonFiniteData {
+            // usize::MAX is the TARGET_COL sentinel, so no cap here: any
+            // u64 that fits usize round-trips
+            col: r.u64()? as usize,
+            row: r.u64()? as usize,
+        }),
+        2 => Some(NE::NonFiniteState {
+            solver: get_str(r, "error solver")?,
+            iter: r.u64()?,
+            what: get_str(r, "error what")?,
+        }),
+        3 => Some(NE::DegenerateConfig { field: get_str(r, "error field")? }),
+        t => return Err(format!("bad numeric_error tag {t}")),
+    })
 }
 
 fn get_point(r: &mut ByteReader<'_>) -> Result<PathPoint, String> {
@@ -242,6 +303,7 @@ fn get_point(r: &mut ByteReader<'_>) -> Result<PathPoint, String> {
             t => return Err(format!("bad kappa tag {t}")),
         },
         tracked_coefs: get_f64s(r, "point tracked")?,
+        numeric_error: get_numeric_error(r)?,
     })
 }
 
@@ -868,6 +930,7 @@ mod tests {
             certified_gap: Some(1e-6),
             kappa_final: Some(17),
             tracked_coefs: vec![0.1, -0.2],
+            numeric_error: Some(crate::numerics::NumericError::state("sfw", 41, "sampled gap")),
         };
         let fw = SolverResume::Fw {
             snap: FwSnapshot {
@@ -912,6 +975,10 @@ mod tests {
         assert_eq!(b0.points.len(), 2);
         assert_eq!(b0.points[0].reg.to_bits(), 0.5f64.to_bits());
         assert_eq!(b0.points[0].kappa_final, Some(17));
+        assert_eq!(
+            b0.points[0].numeric_error,
+            Some(crate::numerics::NumericError::state("sfw", 41, "sampled gap"))
+        );
         assert_eq!(b0.iters, 84);
         assert_eq!(b0.screen.saved_dots, 20);
         match b0.resume.as_ref().unwrap() {

@@ -37,6 +37,12 @@ pub struct PathPoint {
     /// coefficients of selected features, if the caller asked to track
     /// specific indices (Figs 1–2)
     pub tracked_coefs: Vec<f64>,
+    /// numerical-health verdict for this point: `None` = healthy, `Some`
+    /// = the solve tripped a non-finite-state tripwire and aborted early
+    /// (the point's metrics describe the poisoned iterate — degraded is
+    /// distinct from missing; DESIGN.md §15). A poisoned point is never
+    /// used as a warm start by the resilient path runner.
+    pub numeric_error: Option<crate::numerics::NumericError>,
 }
 
 /// Aggregate over a full regularization path.
@@ -133,6 +139,7 @@ pub fn evaluate_point(
         certified_gap: None,
         kappa_final: None,
         tracked_coefs: tracked.iter().map(|&j| alpha[j]).collect(),
+        numeric_error: None,
     }
 }
 

@@ -196,7 +196,7 @@ impl Default for PathConfig {
 /// sweep (the paper uses Glmnet at ε = 1e-8). Returns (δ_max, dots spent).
 pub fn plan_delta_max(ds: &Dataset, cache: &ColumnCache, n_points: usize) -> (f64, u64) {
     let prob = Problem::new(&ds.x, &ds.y, cache);
-    let lmax = lambda_max(&prob);
+    let lmax = safe_anchor(lambda_max(&prob));
     // coarse warm-up grid (10 points) then high precision at λ_min
     let coarse = LogGrid::descending(lmax, lmax / 100.0, n_points.min(10).max(2));
     let mut cd = CoordinateDescent::new(SolveOptions {
@@ -219,7 +219,23 @@ pub fn plan_delta_max(ds: &Dataset, cache: &ColumnCache, n_points: usize) -> (f6
     cd_hp.reset_residual(&prob, &alpha);
     dots += cd_hp.run(&prob, &mut alpha, lmax / 100.0).dots;
     let delta_max: f64 = alpha.iter().map(|a| a.abs()).sum();
-    (delta_max.max(1e-12), dots)
+    (safe_anchor(delta_max.max(1e-12)), dots)
+}
+
+/// Clamp a data-driven grid anchor (`λ_max = ‖Xᵀy‖∞` or
+/// `δ_max = ‖α(λ_min)‖₁`) to a usable positive finite value. Poisoned
+/// input that slipped past the ingress checks (e.g. finite-but-huge
+/// entries whose dot products overflow to ∞) would otherwise make the
+/// anchor NaN/∞/0 and panic the `LogGrid` construction assert before any
+/// solver tripwire can raise a typed error (DESIGN.md §15). The unit
+/// fallback keeps the sweep well-formed; the solvers then abort it with
+/// `E_NONFINITE_STATE` within one check cadence.
+fn safe_anchor(v: f64) -> f64 {
+    if v.is_finite() && v > 0.0 {
+        v
+    } else {
+        1.0
+    }
 }
 
 /// Output of one contiguous grid segment.
@@ -255,10 +271,10 @@ pub(super) fn plan_grid(
                 d
             }
         };
-        delta_grid(delta_max, cfg.n_points)
+        delta_grid(safe_anchor(delta_max), cfg.n_points)
     } else {
         let prob = Problem::new(&ds.x, &ds.y, cache);
-        lambda_grid(lambda_max(&prob), cfg.n_points)
+        lambda_grid(safe_anchor(lambda_max(&prob)), cfg.n_points)
     }
 }
 
@@ -284,6 +300,7 @@ fn push_point(
     );
     pt.certified_gap = res.certified_gap;
     pt.kappa_final = res.kappa_final;
+    pt.numeric_error = res.numeric_error.clone();
     if let Some(s) = screener {
         pt.screened_frac = s.screened_fraction();
     }
@@ -397,6 +414,11 @@ pub(super) fn run_segment(
                     &mut points, ds, &mut sw, &alpha, delta, &res, entry, &screener,
                     &cfg.track,
                 );
+                // a tripped point must never seed the next warm start or a
+                // checkpoint capture: abort the segment before `boundary`
+                if res.numeric_error.is_some() {
+                    break;
+                }
                 if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
                     Some(SolverResume::Dense {
                         alpha: alpha.clone(),
@@ -469,6 +491,10 @@ pub(super) fn run_segment(
                     &mut points, ds, &mut sw, &alpha_buf, delta, &res, entry, &screener,
                     &cfg.track,
                 );
+                // never checkpoint or warm-start from a tripped point
+                if res.numeric_error.is_some() {
+                    break;
+                }
                 if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
                     Some(SolverResume::Fw {
                         snap: state.snapshot(),
@@ -517,6 +543,10 @@ pub(super) fn run_segment(
                     &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
                     &cfg.track,
                 );
+                // never checkpoint or warm-start from a tripped point
+                if res.numeric_error.is_some() {
+                    break;
+                }
                 if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
                     Some(SolverResume::Dense {
                         alpha: alpha.clone(),
@@ -569,6 +599,10 @@ pub(super) fn run_segment(
                     &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
                     &cfg.track,
                 );
+                // never checkpoint or warm-start from a tripped point
+                if res.numeric_error.is_some() {
+                    break;
+                }
                 if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
                     Some(SolverResume::Dense {
                         alpha: alpha.clone(),
@@ -622,6 +656,10 @@ pub(super) fn run_segment(
                     &mut points, ds, &mut sw, &alpha, lam, &res, entry, &screener,
                     &cfg.track,
                 );
+                // never checkpoint or warm-start from a tripped point
+                if res.numeric_error.is_some() {
+                    break;
+                }
                 if boundary(ctl, &mut sw, &points, iters, dots, &screener, || {
                     Some(SolverResume::Dense {
                         alpha: alpha.clone(),

@@ -149,6 +149,7 @@ impl XlaSfw {
             objective: state.objective(prob),
             certified_gap: None,
             kappa_final: None,
+            numeric_error: None,
         })
     }
 }

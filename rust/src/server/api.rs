@@ -71,6 +71,19 @@ impl ApiError {
         ApiError { status: 400, kind: "bad_request".to_string(), message, offset: None }
     }
 
+    /// Map a numerical-health error to its HTTP class (DESIGN.md §15): a
+    /// degenerate request configuration is the caller's mistake (400,
+    /// kind `degenerate_config`); non-finite data or solver state makes
+    /// the run unprocessable (422, kind `numeric_error`). The message
+    /// carries the stable `E_*` code, so clients can match on either.
+    pub fn from_numeric(e: &crate::numerics::NumericError) -> ApiError {
+        let (status, kind) = match e {
+            crate::numerics::NumericError::DegenerateConfig { .. } => (400, "degenerate_config"),
+            _ => (422, "numeric_error"),
+        };
+        ApiError { status, kind: kind.to_string(), message: e.to_string(), offset: None }
+    }
+
     /// The structured JSON error envelope every failure responds with.
     pub fn envelope(&self) -> Json {
         let mut err = vec![
@@ -223,12 +236,26 @@ fn parse_dataset(f: &mut Fields<'_>, allow_files: bool) -> Result<DatasetSpec, A
             "libsvm:<path> specs are disabled; start the server with --allow-files",
         ));
     }
+    let scale = f.f64("scale", 0.05)?;
+    crate::numerics::require_finite_pos("scale", scale).map_err(|e| ApiError::from_numeric(&e))?;
     Ok(DatasetSpec {
         spec,
-        scale: f.f64("scale", 0.05)?,
+        scale,
         seed: f.u64("seed", 42)?,
         use_cache: f.bool("use_cache", false)?,
     })
+}
+
+/// Reject non-finite / degenerate solver tolerances before they reach a
+/// solver loop (a NaN `eps` makes every convergence comparison false and
+/// burns the full iteration budget; JSON happily parses `1e999` → Inf).
+fn validate_opts(opts: &SolveOptions) -> Result<(), ApiError> {
+    crate::numerics::require_finite_pos("eps", opts.eps).map_err(|e| ApiError::from_numeric(&e))?;
+    if let Some(g) = opts.gap_tol {
+        crate::numerics::require_finite_pos("gap_tol", g)
+            .map_err(|e| ApiError::from_numeric(&e))?;
+    }
+    Ok(())
 }
 
 fn parse_screen(f: &mut Fields<'_>) -> Result<ScreenMode, ApiError> {
@@ -300,6 +327,7 @@ pub fn parse_solve(body: &Json, allow_files: bool) -> Result<SolveRequest, ApiEr
         gap_tol: f.opt_f64("gap_tol")?,
         ..Default::default()
     };
+    validate_opts(&opts)?;
     let req = SolveRequest {
         delta,
         variant,
@@ -348,10 +376,24 @@ pub fn run_solve(
         solver.run_with_screen(&prob, &mut state, req.delta, screener.as_mut())
     };
     let seconds = sw.elapsed_secs();
+    // numerical-health gate: a tripped run (or any non-finite headline
+    // metric — write_num would mask it to `null`) is a 422, never a 200
+    if let Some(e) = &res.numeric_error {
+        return Err(ApiError::from_numeric(e));
+    }
+    let l1 = state.l1_norm();
+    if !(res.objective.is_finite() && l1.is_finite()) {
+        return Err(ApiError::from_numeric(&crate::numerics::NumericError::state(
+            req.variant.tag(),
+            res.iters,
+            "final objective",
+        )));
+    }
     let alpha = state.alpha();
     let opt_num = |v: Option<f64>| v.map(Json::Num).unwrap_or(Json::Null);
     Ok(Json::obj(vec![
         ("kind", Json::Str("solve".into())),
+        ("health", Json::Str("ok".into())),
         ("dataset", Json::Str(ds.name.clone())),
         ("cached", Json::Bool(cached)),
         ("solver", Json::Str(req.variant.tag().to_string())),
@@ -361,7 +403,7 @@ pub fn run_solve(
             "train_mse",
             Json::Num(2.0 * res.objective / prob.m() as f64),
         ),
-        ("l1_norm", Json::Num(state.l1_norm())),
+        ("l1_norm", Json::Num(l1)),
         (
             "active",
             Json::Num(crate::linalg::ops::nnz(&alpha) as f64),
@@ -420,6 +462,7 @@ pub fn parse_path(body: &Json, allow_files: bool) -> Result<PathRequest, ApiErro
         gap_tol: f.opt_f64("gap_tol")?,
         ..defaults
     };
+    validate_opts(&opts)?;
     let n_points = f.usize("points", 100)?;
     if n_points == 0 || n_points > 10_000 {
         return Err(ApiError::bad_request(format!(
@@ -432,10 +475,15 @@ pub fn parse_path(body: &Json, allow_files: bool) -> Result<PathRequest, ApiErro
             "field 'reps' must be in 1..=100, got {reps}"
         )));
     }
+    let delta_max = f.opt_f64("delta_max")?;
+    if let Some(d) = delta_max {
+        crate::numerics::require_finite_pos("delta_max", d)
+            .map_err(|e| ApiError::from_numeric(&e))?;
+    }
     let cfg = PathConfig {
         n_points,
         opts,
-        delta_max: f.opt_f64("delta_max")?,
+        delta_max,
         track: f.usize_arr("track")?,
         screen: parse_screen(&mut f)?,
     };
@@ -513,11 +561,35 @@ pub fn run_path_job(
             .map(|rep| jobs::Cell { dataset_idx: 0, kind, rep })
             .collect();
         let runs = jobs::run_cells(&[ds], &cells, &req.cfg, req.threads);
+        // a tripped rep stops early, so rep point counts can disagree —
+        // surface the typed error before averaging would index past the
+        // shorter run (and before poisoned metrics could dilute the mean)
+        if let Some(pt) = runs
+            .iter()
+            .flat_map(|r| r.points.iter())
+            .find(|p| p.numeric_error.is_some())
+        {
+            let e = pt.numeric_error.as_ref().expect("filtered on is_some");
+            let mut api = ApiError::from_numeric(e);
+            api.message = format!("path degraded at reg = {}: {}", pt.reg, api.message);
+            return Err(api);
+        }
         let result: PathResult = jobs::average_reps(runs);
         (result, true, 0)
     };
+    // numerical-health gate: a path with any tripped point never returns
+    // 200 — the poisoned metrics would be null-masked by the JSON writer.
+    // The envelope names the first tripped grid point so the client knows
+    // how far the sweep got before degrading.
+    if let Some(pt) = result.points.iter().find(|p| p.numeric_error.is_some()) {
+        let e = pt.numeric_error.as_ref().expect("filtered on is_some");
+        let mut api = ApiError::from_numeric(e);
+        api.message = format!("path degraded at reg = {}: {}", pt.reg, api.message);
+        return Err(api);
+    }
     Ok(Json::obj(vec![
         ("kind", Json::Str("path".into())),
+        ("health", Json::Str("ok".into())),
         ("dataset", Json::Str(ds.name.clone())),
         ("cached", Json::Bool(cached)),
         ("reps", Json::Num(reps as f64)),
@@ -542,7 +614,18 @@ where
 {
     let hit = cache
         .fetch(&spec.spec, spec.scale, spec.seed, spec.use_cache)
-        .map_err(|e| ApiError::new(400, "dataset_error", &e))?;
+        .map_err(|e| {
+            // loads that failed the numerical-health scan (the message
+            // carries an E_* code) are unprocessable content, not a
+            // malformed request: 422, same kind as in-solver trips
+            if e.contains("E_NONFINITE") {
+                ApiError::new(422, "numeric_error", &e)
+            } else if e.contains("E_DEGENERATE") {
+                ApiError::new(400, "degenerate_config", &e)
+            } else {
+                ApiError::new(400, "dataset_error", &e)
+            }
+        })?;
     run(&hit.dataset, hit.cached)
 }
 
@@ -643,6 +726,40 @@ mod tests {
         // an empty checkpoint string means "no checkpoint"
         let r = parse_path(&parse(r#"{"checkpoint": ""}"#), false).unwrap();
         assert!(r.checkpoint.is_none());
+    }
+
+    #[test]
+    fn nonfinite_config_is_rejected_as_degenerate() {
+        // the JSON parser accepts 1e999 and yields +Inf — the validation
+        // layer must catch it before any solver sees the value
+        for body in [
+            r#"{"eps": 1e999}"#,
+            r#"{"gap_tol": -1}"#,
+            r#"{"scale": 1e999}"#,
+            r#"{"scale": 0}"#,
+        ] {
+            let e = parse_solve(&parse(body), false).unwrap_err();
+            assert_eq!(e.status, 400, "{body}");
+            assert_eq!(e.kind, "degenerate_config", "{body}");
+            assert!(e.message.contains("E_DEGENERATE_CONFIG"), "{}", e.message);
+        }
+        for body in [r#"{"eps": 1e999}"#, r#"{"delta_max": 1e999}"#, r#"{"gap_tol": 0}"#] {
+            let e = parse_path(&parse(body), false).unwrap_err();
+            assert_eq!(e.status, 400, "{body}");
+            assert_eq!(e.kind, "degenerate_config", "{body}");
+        }
+    }
+
+    #[test]
+    fn numeric_errors_map_to_http_classes() {
+        use crate::numerics::NumericError;
+        let e = ApiError::from_numeric(&NumericError::state("sfw", 7, "sampled gap"));
+        assert_eq!((e.status, e.kind.as_str()), (422, "numeric_error"));
+        assert!(e.message.contains("E_NONFINITE_STATE"));
+        let e = ApiError::from_numeric(&NumericError::NonFiniteData { col: 3, row: 1 });
+        assert_eq!((e.status, e.kind.as_str()), (422, "numeric_error"));
+        let e = ApiError::from_numeric(&NumericError::config("eps must be finite"));
+        assert_eq!((e.status, e.kind.as_str()), (400, "degenerate_config"));
     }
 
     #[test]

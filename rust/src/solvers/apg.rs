@@ -78,6 +78,7 @@ impl Apg {
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
         // momentum makes APG non-monotone in f, so the certificate
         // reported is the *last* screening pass's gap (solvers::certify)
         let mut envelope = GapEnvelope::new();
@@ -110,9 +111,20 @@ impl Apg {
                 }
             }
 
-            // projected step from w
+            // projected step from w. Tripwire BEFORE the projection: the
+            // Duchi pivot loop of `project_l1` assumes finite input (a NaN
+            // makes its `l1 <= delta` early-out false and the pivot search
+            // meaningless), so the NaN-propagating step sum must catch the
+            // poison first (DESIGN.md §15).
+            let mut step_sum = 0.0f64;
             for j in 0..p {
                 alpha[j] = self.w[j] - self.grad[j] / l;
+                step_sum += alpha[j];
+            }
+            if !step_sum.is_finite() {
+                numeric_error =
+                    Some(crate::numerics::NumericError::state("apg", iters, "projected step"));
+                break;
             }
             project_l1(alpha, delta);
             let max_delta = ops::inf_norm_diff(alpha, &self.alpha_prev);
@@ -175,6 +187,7 @@ impl Apg {
             objective: prob.objective(alpha),
             certified_gap: envelope.last(),
             kappa_final: None,
+            numeric_error,
         }
     }
 }

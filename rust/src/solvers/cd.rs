@@ -107,6 +107,7 @@ impl CoordinateDescent {
         let mut dots = 0u64;
         let mut sweeps = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
         // CD descends monotonically (exact coordinate minimization), so
         // the screening passes' P − D gaps form a valid monotone
         // certificate envelope (solvers::certify, DESIGN.md §11)
@@ -122,6 +123,11 @@ impl CoordinateDescent {
             // ---- full sweep (over the surviving columns when screening)
             sweeps += 1;
             let mut max_delta = 0.0f64;
+            // NaN tripwire: `max` DROPS NaN (f64::max(NaN, x) == x), so the
+            // convergence test alone would spin for the full `max_iters`
+            // budget on a poisoned iterate. The sum accumulator propagates
+            // NaN/±Inf and is checked once per sweep (DESIGN.md §15).
+            let mut delta_sum = 0.0f64;
             let mut alpha_inf = 0.0f64;
             let mut active_changed = false;
             let pool_len = match &screen {
@@ -137,11 +143,17 @@ impl CoordinateDescent {
                 let d = self.update_coord(prob, alpha, j, lambda);
                 dots += 1;
                 max_delta = max_delta.max(d);
+                delta_sum += d;
                 alpha_inf = alpha_inf.max(alpha[j].abs());
                 if was_zero && alpha[j] != 0.0 {
                     active.push(j);
                     active_changed = true;
                 }
+            }
+            if !delta_sum.is_finite() {
+                numeric_error =
+                    Some(crate::numerics::NumericError::state("cd", sweeps, "coordinate step"));
+                break 'outer;
             }
             if let Some(s) = screen.as_deref_mut() {
                 s.note_iteration(pool_len as u64, (p - pool_len) as u64);
@@ -167,12 +179,22 @@ impl CoordinateDescent {
             while (sweeps as usize) < self.opts.max_iters {
                 sweeps += 1;
                 let mut max_delta_a = 0.0f64;
+                let mut delta_sum_a = 0.0f64; // NaN-propagating (see above)
                 let mut alpha_inf_a = 0.0f64;
                 for &j in &active {
                     let d = self.update_coord(prob, alpha, j, lambda);
                     dots += 1;
                     max_delta_a = max_delta_a.max(d);
+                    delta_sum_a += d;
                     alpha_inf_a = alpha_inf_a.max(alpha[j].abs());
+                }
+                if !delta_sum_a.is_finite() {
+                    numeric_error = Some(crate::numerics::NumericError::state(
+                        "cd",
+                        sweeps,
+                        "coordinate step",
+                    ));
+                    break 'outer;
                 }
                 if max_delta_a <= self.opts.eps * alpha_inf_a.max(1.0) {
                     break;
@@ -187,6 +209,7 @@ impl CoordinateDescent {
             objective: self.objective(prob, alpha, lambda),
             certified_gap: envelope.best(),
             kappa_final: None,
+            numeric_error,
         }
     }
 

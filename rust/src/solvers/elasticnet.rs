@@ -75,10 +75,14 @@ impl ElasticNetCd {
         let mut dots = 0u64;
         let mut sweeps = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
 
         while (sweeps as usize) < self.opts.max_iters {
             sweeps += 1;
             let mut max_delta = 0.0f64;
+            // NaN tripwire: `max` drops NaN, the sum propagates it, checked
+            // once per sweep (DESIGN.md §15)
+            let mut delta_sum = 0.0f64;
             let mut alpha_inf = 0.0f64;
             for j in 0..p {
                 let znorm = prob.cache.norm_sq[j];
@@ -93,8 +97,17 @@ impl ElasticNetCd {
                     prob.x.col_axpy(j, old - new, &mut self.resid);
                     alpha[j] = new;
                     max_delta = max_delta.max((new - old).abs());
+                    delta_sum += (new - old).abs();
                 }
                 alpha_inf = alpha_inf.max(alpha[j].abs());
+            }
+            if !delta_sum.is_finite() {
+                numeric_error = Some(crate::numerics::NumericError::state(
+                    "encd",
+                    sweeps,
+                    "coordinate step",
+                ));
+                break;
             }
             if max_delta <= self.opts.eps * alpha_inf.max(1.0) {
                 converged = true;
@@ -112,6 +125,7 @@ impl ElasticNetCd {
             objective: 0.5 * rss + pen.l1 * l1 + 0.5 * pen.l2 * l2sq,
             certified_gap: None,
             kappa_final: None,
+            numeric_error,
         }
     }
 }
@@ -170,6 +184,7 @@ impl ElasticNetSfw {
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
         let mut small_streak = 0usize;
 
         while (iters as usize) < self.opts.max_iters {
@@ -230,6 +245,16 @@ impl ElasticNetSfw {
                 + 2.0 * delta_signed * lambda * one_m * alpha_i
                 + delta_signed * delta_signed * lambda * lambda;
 
+            // tripwire: the S/F/T recursions are NaN-propagating sums over
+            // the sampled gradient, σᵢ and the iterate, so any poison in
+            // data or state lands here within one iteration — checked
+            // before `apply_step` commits the recursion (DESIGN.md §15)
+            if !(s_new.is_finite() && f_new.is_finite() && self.t.is_finite()) {
+                numeric_error =
+                    Some(crate::numerics::NumericError::state("ensfw", iters, "S/F/T recursion"));
+                break;
+            }
+
             let info = state.apply_step(prob, i, lambda, delta_signed, s_new, f_new);
             if info.small(self.opts.eps) {
                 small_streak += 1;
@@ -249,6 +274,7 @@ impl ElasticNetSfw {
             objective: self.objective(prob, state),
             certified_gap: None,
             kappa_final: None,
+            numeric_error,
         }
     }
 }

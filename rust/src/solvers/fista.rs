@@ -81,6 +81,7 @@ impl Fista {
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
         let mut f_prev = f64::INFINITY;
         // momentum makes FISTA non-monotone in f, so the certificate
         // reported is the *last* screening pass's gap, not the envelope
@@ -116,13 +117,24 @@ impl Fista {
                 }
             }
 
-            // proximal step from w
+            // proximal step from w. The sum accumulator is the NaN
+            // tripwire: `max` drops NaN, so the convergence test alone
+            // would let a poisoned iterate spin to `max_iters`; the sum
+            // propagates NaN/±Inf and is checked once per iteration
+            // (DESIGN.md §15).
             let mut max_delta = 0.0f64;
+            let mut delta_sum = 0.0f64;
             for j in 0..p {
                 let cand = soft_threshold(self.w[j] - self.grad[j] / l, lambda / l);
                 let d = (cand - self.alpha_prev[j]).abs();
                 max_delta = max_delta.max(d);
+                delta_sum += d;
                 alpha[j] = cand;
+            }
+            if !delta_sum.is_finite() {
+                numeric_error =
+                    Some(crate::numerics::NumericError::state("fista", iters, "proximal step"));
+                break;
             }
 
             // objective for restart test (reuses q = Xw − y? need Xα − y;
@@ -202,6 +214,7 @@ impl Fista {
                 + lambda * alpha.iter().map(|a| a.abs()).sum::<f64>(),
             certified_gap: envelope.last(),
             kappa_final: None,
+            numeric_error,
         }
     }
 }

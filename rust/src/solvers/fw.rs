@@ -76,6 +76,7 @@ impl FrankWolfe {
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
         let mut small_streak = 0usize;
         // take the arena so it can be used alongside `&state` borrows;
         // restored before every return
@@ -128,8 +129,18 @@ impl FrankWolfe {
             }
 
             // duality gap g(α) = αᵀ∇f + δ‖∇f‖∞ — free with the full
-            // sweep; recorded into the monotone certificate envelope
+            // sweep; recorded into the monotone certificate envelope.
+            // Tripwire first: the gap is a NaN-propagating sum over every
+            // active coordinate plus the argmax gradient, so any poison in
+            // the iterate or gradient surfaces here within one iteration
+            // (DESIGN.md §15). Checked before `envelope.record` so the
+            // monotone envelope never ingests a non-finite value.
             let gap = gap_acc + delta * best_abs;
+            if !gap.is_finite() {
+                numeric_error =
+                    Some(crate::numerics::NumericError::state("fw", iters, "duality gap"));
+                break;
+            }
             envelope.record(gap);
             if envelope.reached(gap_tol) {
                 converged = true;
@@ -165,6 +176,7 @@ impl FrankWolfe {
             objective: state.objective(prob),
             certified_gap: envelope.best(),
             kappa_final: None,
+            numeric_error,
         }
     }
 }

@@ -124,6 +124,11 @@ pub struct RunResult {
     /// last per-iteration sample size κ (stochastic FW family only — the
     /// adaptive κ schedule makes this differ from the initial κ)
     pub kappa_final: Option<usize>,
+    /// set when an in-loop tripwire caught a non-finite solver state
+    /// (NaN/±Inf gap, step, or residual accumulator); the run aborted at
+    /// `iters` instead of burning the full iteration budget on NaN
+    /// comparisons ([`crate::numerics::NumericError`], DESIGN.md §15)
+    pub numeric_error: Option<crate::numerics::NumericError>,
 }
 
 /// Common knobs shared by all solvers.

@@ -91,6 +91,7 @@ impl StochasticCd {
         let mut dots = 0u64;
         let mut epochs = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
         // SCD descends monotonically (exact coordinate minimization), so
         // the screening passes' gaps form a valid monotone envelope
         let mut envelope = GapEnvelope::new();
@@ -98,6 +99,9 @@ impl StochasticCd {
         while (epochs as usize) < self.opts.max_iters {
             epochs += 1;
             let mut max_delta = 0.0f64;
+            // NaN tripwire: `max` drops NaN, so a poisoned iterate would
+            // spin to `max_iters`; the sum propagates it (DESIGN.md §15)
+            let mut delta_sum = 0.0f64;
             let mut alpha_inf = 0.0f64;
             let pool_len = match &screen {
                 Some(s) => s.alive_len(),
@@ -121,8 +125,14 @@ impl StochasticCd {
                     prob.x.col_axpy(j, old - new, &mut self.resid);
                     alpha[j] = new;
                     max_delta = max_delta.max((new - old).abs());
+                    delta_sum += (new - old).abs();
                 }
                 alpha_inf = alpha_inf.max(alpha[j].abs());
+            }
+            if !delta_sum.is_finite() {
+                numeric_error =
+                    Some(crate::numerics::NumericError::state("scd", epochs, "coordinate step"));
+                break;
             }
             if let Some(s) = screen.as_deref_mut() {
                 s.note_iteration(pool_len as u64, (p - pool_len) as u64);
@@ -152,6 +162,7 @@ impl StochasticCd {
             objective: 0.5 * rss + lambda * alpha.iter().map(|a| a.abs()).sum::<f64>(),
             certified_gap: envelope.best(),
             kappa_final: None,
+            numeric_error,
         }
     }
 }

@@ -239,6 +239,7 @@ impl<B: FwBackend> StochasticFw<B> {
         let mut dots = 0u64;
         let mut iters = 0u64;
         let mut converged = false;
+        let mut numeric_error = None;
         let mut small_streak = 0usize;
         let mut kappa_last = None;
 
@@ -324,6 +325,21 @@ impl<B: FwBackend> StochasticFw<B> {
             // (the dense sub-p screened scan ranks in f32; its argmax can
             // sit one ulp under the true ‖∇‖∞, which would under-certify).
             let sampled_gap = state.alpha_grad_dot() + delta * g_i.abs();
+            // tripwire: ĝ sums the S/F recursions (αᵀ∇ = S − F) with the
+            // sampled argmax, so any NaN/±Inf in the iterate, residual
+            // recursion or sampled gradient propagates into it — caught
+            // here within one iteration instead of burning `max_iters` on
+            // comparisons that are all false for NaN (DESIGN.md §15)
+            if !sampled_gap.is_finite() {
+                let label = match self.variant {
+                    FwVariant::Standard => "sfw",
+                    FwVariant::Away => "asfw",
+                    FwVariant::Pairwise => "pfw",
+                };
+                numeric_error =
+                    Some(crate::numerics::NumericError::state(label, iters, "sampled gap"));
+                break;
+            }
             let exact_sweep = kappa == pool_len
                 && (pool_len == p || !matches!(prob.x.storage(), Storage::Dense(_)));
             if exact_sweep {
@@ -377,6 +393,7 @@ impl<B: FwBackend> StochasticFw<B> {
             objective: state.objective(prob),
             certified_gap: envelope.best(),
             kappa_final: kappa_last,
+            numeric_error,
         }
     }
 

@@ -219,6 +219,7 @@ mod tests {
             certified_gap: None,
             kappa_final: None,
             tracked_coefs: Vec::new(),
+            numeric_error: None,
         };
         assert_points_bit_identical(&[mk(0.25)], &[mk(0.25)]);
         let r = std::panic::catch_unwind(|| {

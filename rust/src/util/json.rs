@@ -659,4 +659,32 @@ mod tests {
             assert_eq!(v.as_f64().unwrap().to_bits(), x.to_bits());
         }
     }
+
+    #[test]
+    fn write_num_pins_nonfinite_to_null() {
+        // JSON has no NaN/Inf: the writer masks them to `null`. This is
+        // exactly why the numerical-health layer (DESIGN.md §15) must trip
+        // BEFORE serialization — a `null` on the wire is indistinguishable
+        // from "metric not recorded". Pin the masking so a future writer
+        // change can't silently start emitting invalid JSON instead.
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).dump(), "null");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).dump(), "null");
+    }
+
+    #[test]
+    fn write_num_pins_integral_and_edge_forms() {
+        // Integral magnitudes below 1e15 serialize via i64 (no ".0" suffix);
+        // note -0.0 loses its sign bit through that path — pinned as the
+        // documented wire format, not an accident.
+        assert_eq!(Json::Num(3.0).dump(), "3");
+        assert_eq!(Json::Num(-7.0).dump(), "-7");
+        assert_eq!(Json::Num(0.0).dump(), "0");
+        assert_eq!(Json::Num(-0.0).dump(), "0");
+        assert_eq!(Json::Num(2.5).dump(), "2.5");
+        // smallest subnormal survives the wire bit-for-bit
+        let tiny = f64::from_bits(1);
+        let v = Json::parse(&Json::Num(tiny).dump()).unwrap();
+        assert_eq!(v.as_f64().unwrap().to_bits(), tiny.to_bits());
+    }
 }

@@ -304,6 +304,16 @@ fn libsvm_malformed_inputs_error_cleanly() {
         ("1 4294967296:1\n", "index exceeds u32 (silent-truncation guard)"),
         ("1 4294967295:1\n", "boundary index u32::MAX (pre-allocation guard)"),
         ("1 -3:1\n", "negative index"),
+        // non-finite tokens: str::parse::<f64> accepts these spellings,
+        // the parser must not forward them into the matrix (ISSUE 9)
+        ("nan 1:2\n", "NaN label"),
+        ("inf 1:2\n", "inf label"),
+        ("-inf 1:2\n", "-inf label"),
+        ("1 1:nan\n", "NaN value"),
+        ("1 1:inf\n", "inf value"),
+        ("1 1:-inf\n", "-inf value"),
+        ("1 1:1e309\n", "value overflows f64 to inf"),
+        ("1 1:1e300\n", "value overflows the f32 storage to inf"),
     ];
     for &(txt, what) in cases {
         assert!(libsvm::parse(txt, None).is_err(), "accepted {what}: {txt:?}");

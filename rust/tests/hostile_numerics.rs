@@ -1,0 +1,320 @@
+//! Hostile-input matrix for the numerical-health layer (DESIGN.md §15).
+//!
+//! Poisons solver input with NaN / ±∞ / huge / subnormal values and drives
+//! every solver kind through the path runner — sequentially and in
+//! parallel, with and without gap-safe screening. The acceptance bar:
+//! no panic anywhere, no `max_iters` burn (tripwires abort within one
+//! check cadence), a typed `E_NONFINITE_STATE` on every tripped point,
+//! typed HTTP errors over a real server socket, and a finite no-op proof
+//! that clean and merely-extreme-but-finite runs are never flagged.
+
+use sfw_lasso::coordinator::report;
+use sfw_lasso::data::{assemble, synth, Dataset};
+use sfw_lasso::path::{run_path, run_path_parallel, PathConfig, SolverKind};
+use sfw_lasso::screening::ScreenMode;
+use sfw_lasso::server::{spawn, ServeConfig};
+use sfw_lasso::solvers::SolveOptions;
+use sfw_lasso::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+// --------------------------------------------------------------- fixtures
+
+/// Small dense problem: big enough that every solver does real work,
+/// small enough that the full 96-run matrix stays fast.
+fn clean_dataset() -> Dataset {
+    let spec = synth::SynthSpec {
+        n_samples: 80,
+        n_features: 30,
+        n_informative: 5,
+        noise: 0.1,
+        seed: 7,
+    };
+    let d = synth::make_regression(&spec);
+    assemble("hostile", d.x, d.y, 80, Some(d.ground_truth))
+}
+
+/// Clean dataset with every target overwritten by `v` *after* assembly —
+/// models state poisoned past the ingress checks, which is exactly the
+/// scenario the in-loop tripwires exist for.
+fn poisoned(v: f64) -> Dataset {
+    let mut ds = clean_dataset();
+    for y in ds.y.iter_mut() {
+        *y = v;
+    }
+    ds
+}
+
+/// All 8 solver kinds through the public spec grammar.
+fn all_kinds() -> Vec<SolverKind> {
+    ["cd", "scd", "fista", "apg", "fw", "sfw:0.5", "asfw:0.5", "pfw:0.5"]
+        .iter()
+        .map(|s| SolverKind::parse(s).expect("kind parses"))
+        .collect()
+}
+
+/// Path config with a deliberately huge per-point iteration cap: if a
+/// tripwire ever regresses into a silent NaN grind, the burn-guard
+/// assertion below catches it. `delta_max` is pinned so constrained kinds
+/// skip the `plan_delta_max` reference run (exercised separately).
+fn cfg(screen: ScreenMode) -> PathConfig {
+    PathConfig {
+        n_points: 8,
+        opts: SolveOptions { eps: 1e-4, max_iters: 50_000, seed: 1, ..Default::default() },
+        delta_max: Some(1.0),
+        screen,
+        ..Default::default()
+    }
+}
+
+// ------------------------------------------------------------ trip matrix
+
+#[test]
+fn nonfinite_poison_trips_every_solver_without_burning_iters() {
+    for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+        for kind in all_kinds() {
+            for screen in [ScreenMode::Off, ScreenMode::Gap] {
+                for threads in [1usize, 4] {
+                    let ds = poisoned(poison);
+                    let c = cfg(screen);
+                    let pr = run_path_parallel(&ds, kind, &c, threads);
+                    let ctx = format!(
+                        "kind={kind:?} poison={poison} screen={screen:?} threads={threads}"
+                    );
+                    let tripped: Vec<_> = pr
+                        .points
+                        .iter()
+                        .filter(|p| p.numeric_error.is_some())
+                        .collect();
+                    assert!(!tripped.is_empty(), "no tripwire fired: {ctx}");
+                    for p in &tripped {
+                        let e = p.numeric_error.as_ref().expect("filtered on is_some");
+                        assert_eq!(e.code(), "E_NONFINITE_STATE", "{ctx}: {e}");
+                    }
+                    // burn guard: the cap allows 8 × 50 000 iterations; a
+                    // tripwire must abort within one cadence window per
+                    // sweep block instead of grinding NaN comparisons
+                    assert!(
+                        pr.total_iters < 2_000,
+                        "max_iters burn ({} iters): {ctx}",
+                        pr.total_iters
+                    );
+                    // containment: a tripped sweep stops — no healthy
+                    // points are manufactured after the poisoned one
+                    // (per block when parallel)
+                    assert!(
+                        pr.points.len() <= threads.max(1) * 2,
+                        "{} points after trip: {ctx}",
+                        pr.points.len()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn poisoned_grid_planning_falls_back_without_panicking() {
+    // no pinned delta_max: plan_delta_max runs its internal CD reference
+    // sweep on the poisoned problem; the CD tripwire aborts it, the
+    // poisoned anchor falls back to the unit grid, and the real solver
+    // then reports the typed error — never an assert panic in LogGrid
+    for poison in [f64::NAN, f64::INFINITY] {
+        let ds = poisoned(poison);
+        let mut c = cfg(ScreenMode::Off);
+        c.delta_max = None;
+        let pr = run_path(&ds, SolverKind::parse("sfw:0.5").unwrap(), &c);
+        assert!(
+            pr.points.iter().any(|p| p.numeric_error.is_some()),
+            "poison={poison}: no typed error after grid fallback"
+        );
+        // penalized side: λ_max = ‖Xᵀy‖∞ is poisoned the same way
+        let pr = run_path(&ds, SolverKind::Cd, &c);
+        assert!(
+            pr.points.iter().any(|p| p.numeric_error.is_some()),
+            "poison={poison}: cd grid fallback lost the typed error"
+        );
+    }
+}
+
+// ----------------------------------------------- finite extremes (probes)
+
+#[test]
+fn subnormal_targets_are_finite_and_never_flagged() {
+    // subnormals are unusual but *finite*: flagging them would be a false
+    // positive. Scale the clean targets down into the subnormal range.
+    for kind in all_kinds() {
+        let mut ds = clean_dataset();
+        for y in ds.y.iter_mut() {
+            *y *= 1e-310;
+        }
+        let mut c = cfg(ScreenMode::Off);
+        c.opts.max_iters = 200; // tiny gradients converge immediately
+        let pr = run_path(&ds, kind, &c);
+        assert_eq!(pr.points.len(), 8, "kind={kind:?} lost points");
+        for p in &pr.points {
+            assert!(
+                p.numeric_error.is_none(),
+                "kind={kind:?}: subnormal input falsely flagged: {:?}",
+                p.numeric_error
+            );
+        }
+    }
+}
+
+#[test]
+fn huge_finite_targets_never_panic_and_errors_stay_typed() {
+    // 1e300 passes every ingress check (it is finite); squares and some
+    // products overflow to ∞ inside the solvers. Either outcome is legal —
+    // a clean finish or a typed E_NONFINITE_STATE — but never a panic and
+    // never an untyped flag.
+    for kind in all_kinds() {
+        let mut ds = clean_dataset();
+        for y in ds.y.iter_mut() {
+            *y = y.signum() * 1e300;
+        }
+        let mut c = cfg(ScreenMode::Off);
+        c.opts.max_iters = 200; // probe: bound runtime, not convergence
+        let pr = run_path(&ds, kind, &c);
+        assert!(!pr.points.is_empty(), "kind={kind:?} produced no points");
+        for p in &pr.points {
+            if let Some(e) = &p.numeric_error {
+                assert_eq!(e.code(), "E_NONFINITE_STATE", "kind={kind:?}: {e}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------- finite no-op proof
+
+#[test]
+fn clean_runs_are_untouched_by_the_health_layer() {
+    let mut last = None;
+    for kind in all_kinds() {
+        let ds = clean_dataset();
+        let pr = run_path(&ds, kind, &cfg(ScreenMode::Off));
+        assert_eq!(pr.points.len(), 8, "kind={kind:?} lost points");
+        for p in &pr.points {
+            assert!(p.numeric_error.is_none(), "kind={kind:?} falsely flagged");
+            assert!(p.l1_norm.is_finite() && p.train_mse.is_finite());
+        }
+        last = Some(pr);
+    }
+    // and the report layer agrees: health "ok", empty numeric_error cells
+    let pr = last.expect("ran at least one kind");
+    let j = report::path_result_json(&pr);
+    assert_eq!(j.get("health").as_str(), Some("ok"));
+    let csv = report::path_csv(&pr, &[]);
+    for row in csv.lines().skip(1) {
+        assert!(row.ends_with(','), "healthy CSV row must end empty: {row}");
+    }
+}
+
+// --------------------------------------------------------- server socket
+
+/// Read one HTTP response off a `Connection: close` stream.
+fn read_response(stream: &mut TcpStream) -> (u16, String) {
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).expect("read response");
+    let text = String::from_utf8(buf).expect("UTF-8 response");
+    let head_end = text.find("\r\n\r\n").expect("response head");
+    let status: u16 = text
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .expect("status code");
+    (status, text[head_end + 4..].to_string())
+}
+
+fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream
+        .write_all(
+            format!(
+                "POST {path} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+                body.len()
+            )
+            .as_bytes(),
+        )
+        .expect("write request");
+    read_response(&mut stream)
+}
+
+fn error_kind(body: &str) -> String {
+    Json::parse(body)
+        .unwrap_or_else(|e| panic!("unparseable body {body:?}: {e:?}"))
+        .get("error")
+        .get("kind")
+        .as_str()
+        .unwrap_or_else(|| panic!("no error.kind in {body:?}"))
+        .to_string()
+}
+
+#[test]
+fn hostile_inputs_over_the_wire_get_typed_http_errors() {
+    let dir = std::env::temp_dir().join(format!("sfw_hostile_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("temp dir");
+    let svm = dir.join("hostile.svm");
+    std::fs::write(&svm, "1.0 1:0.5 2:inf\n-1.0 1:0.25 2:0.75\n").expect("write svm");
+
+    let srv = spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 1,
+        timeout: Duration::from_secs(120),
+        allow_files: true,
+        ..Default::default()
+    })
+    .expect("server spawns");
+    let addr = srv.addr();
+
+    // non-finite token in a data file → 422 with the stable data code;
+    // the error names the poisoned location, not a generic parse failure
+    let body = format!(
+        r#"{{"dataset": "libsvm:{}", "delta": 1.0, "max_iters": 50}}"#,
+        svm.display()
+    );
+    let (status, body) = post(addr, "/v1/solve", &body);
+    assert_eq!(status, 422, "body: {body}");
+    assert_eq!(error_kind(&body), "numeric_error");
+    assert!(body.contains("E_NONFINITE_DATA"), "body: {body}");
+
+    // non-finite scalar in the request config → 400 degenerate_config
+    // (1e999 overflows to ∞ at JSON parse; validation rejects it)
+    let (status, body) = post(
+        addr,
+        "/v1/solve",
+        r#"{"dataset": "synth-10000-32", "scale": 0.005, "seed": 1,
+            "delta": 1.0, "eps": 1e999, "max_iters": 50}"#,
+    );
+    assert_eq!(status, 400, "body: {body}");
+    assert_eq!(error_kind(&body), "degenerate_config");
+    assert!(body.contains("E_DEGENERATE_CONFIG"), "body: {body}");
+
+    // same class of rejection for path jobs
+    let (status, body) = post(
+        addr,
+        "/v1/path",
+        r#"{"dataset": "synth-10000-32", "scale": 0.005, "seed": 1,
+            "solver": "fw", "points": 4, "delta_max": 1e999}"#,
+    );
+    assert_eq!(status, 400, "body: {body}");
+    assert_eq!(error_kind(&body), "degenerate_config");
+
+    // a clean request on the same server still succeeds, declares its
+    // health explicitly, and carries a real finite objective — degraded
+    // results are typed errors, never a 200 with nulls where numbers go
+    let (status, body) = post(
+        addr,
+        "/v1/solve",
+        r#"{"dataset": "synth-10000-32", "scale": 0.005, "seed": 3,
+            "delta": 2.0, "sample": 0.5, "eps": 1e-3, "max_iters": 2000}"#,
+    );
+    assert_eq!(status, 200, "body: {body}");
+    let out = Json::parse(&body).expect("valid JSON");
+    assert_eq!(out.get("health").as_str(), Some("ok"));
+    let obj = out.get("objective").as_f64().expect("objective present");
+    assert!(obj.is_finite(), "200 must never carry a masked objective");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
