@@ -1,0 +1,186 @@
+//! §Serving: what does a λ-query cost once the index is warm?
+//! (DESIGN.md §16, `docs/adr/ADR-009-warm-start-serving.md`)
+//!
+//! Workload: a FW-det query index over a Table-1 synthetic, then one
+//! off-grid λ answered four ways:
+//!
+//! 1. **cold** — building the index itself (the one-time sweep every
+//!    later query amortizes),
+//! 2. **from scratch** — solving the query λ with a fresh zero-started
+//!    gap-certified FW run, no index (what a server without the warm
+//!    layer pays per request),
+//! 3. **warm refined** — through the index with a tight tolerance: a
+//!    warm-started solve from the nearest certified anchor,
+//! 4. **zero-dot** — through the index with the tolerance the a-priori
+//!    interpolation bound already meets: no solver dots at all,
+//!
+//! plus a grid-hit lookup and a sweep over every between-points midpoint
+//! to measure the dots-per-query ratio against from-scratch serving.
+//! Emits machine-readable `BENCH_query.json` (override with
+//! `SFW_BENCH_JSON`) — the acceptance artifact uploaded by the CI
+//! `bench-artifacts` job.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use sfw_lasso::bench::bench;
+use sfw_lasso::data::{load, Named};
+use sfw_lasso::linalg::ColumnCache;
+use sfw_lasso::path::{PathConfig, PathIndex, QuerySource};
+use sfw_lasso::solvers::fw::FrankWolfe;
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::util::json::Json;
+use std::sync::Arc;
+
+fn main() {
+    common::banner(
+        "query_serving",
+        "warm-start λ-query serving: cold vs warm vs zero-dot (DESIGN.md §16)",
+    );
+    let scale = (common::scale() * 0.5).clamp(0.01, 1.0);
+    let ds = Arc::new(load(Named::Synth10k { relevant: 32 }, scale, common::seed()));
+    let cfg = PathConfig {
+        n_points: common::points().clamp(8, 24),
+        opts: SolveOptions {
+            eps: 1e-3,
+            max_iters: 20_000,
+            seed: common::seed(),
+            ..Default::default()
+        },
+        // pin the grid so the cold number is the sweep, not CD planning
+        delta_max: Some(3.0),
+        track: vec![],
+        ..Default::default()
+    };
+    println!(
+        "dataset {} ({} × {}), {} grid points\n",
+        ds.name,
+        ds.rows(),
+        ds.cols(),
+        cfg.n_points
+    );
+    let (w, r) = (1usize, 3usize.max(common::reps()));
+    let gap_tol = 1e-4;
+
+    // --- 1. cold: the index build (one-time, amortized by every query) ---
+    let cold = bench(w, r, || {
+        PathIndex::build(Arc::clone(&ds), &cfg, 0, None).expect("index build").len()
+    });
+    println!("{}", cold.row("index build (cold, one-time)"));
+
+    // budget 0 keeps the refined tier side-effect-free, so each timed rep
+    // repeats identical work instead of hitting its own densified point
+    let mut index = PathIndex::build(Arc::clone(&ds), &cfg, 0, None).expect("index build");
+    let regs: Vec<f64> = index.stored_points().map(|p| p.reg).collect();
+    let mids: Vec<f64> = regs.windows(2).map(|w| (w[0] * w[1]).sqrt()).collect();
+    let mid = mids[mids.len() / 2];
+
+    // --- 2. from scratch: the same λ without any index ---
+    let cache = ColumnCache::build(&ds.x, &ds.y);
+    let prob = Problem::new(&ds.x, &ds.y, &cache);
+    let mut scratch_dots = 0u64;
+    let scratch = bench(w, r, || {
+        let mut st = FwState::zero(prob.p(), prob.m());
+        let fw = FrankWolfe::with_gap_tol(cfg.opts, gap_tol);
+        let res = fw.run(&prob, &mut st, mid);
+        scratch_dots = res.dots;
+        res.iters
+    });
+    println!("{}", scratch.row("off-grid λ, from-scratch certified solve"));
+
+    // --- 3. warm refined: warm-started from the nearest certified anchor ---
+    let mut warm_dots = 0u64;
+    let warm = bench(w, r, || {
+        let ans = index.query(mid, gap_tol, None).expect("refined query");
+        assert_eq!(ans.source, QuerySource::Refined);
+        warm_dots = ans.dots;
+        ans.point.iters
+    });
+    println!(
+        "{}",
+        warm.row(&format!(
+            "off-grid λ, warm refined ({:.3}× scratch time, {:.3}× scratch dots)",
+            warm.mean / scratch.mean,
+            warm_dots as f64 / scratch_dots.max(1) as f64
+        ))
+    );
+
+    // --- 4. zero-dot: the interpolation bound answers by itself ---
+    let loose_tol = (index.apriori_bound(mid) * 1.5).max(1e-9);
+    let zero = bench(w, r, || {
+        let ans = index.query(mid, loose_tol, None).expect("zero-dot query");
+        assert_eq!(ans.dots, 0, "zero-dot tier must not touch the solver");
+        ans.point.active
+    });
+    println!(
+        "{}",
+        zero.row(&format!(
+            "off-grid λ, zero-dot certified ({:.0}× faster than scratch)",
+            scratch.mean / zero.mean
+        ))
+    );
+
+    // --- grid hit: stored-point lookup ---
+    let on_grid = regs[regs.len() / 2];
+    let grid = bench(w, r, || {
+        index.query(on_grid, gap_tol, None).expect("grid query").point.active
+    });
+    println!("{}", grid.row("on-grid λ, stored-point hit"));
+
+    // --- sweep: every midpoint once, with densification enabled ---
+    let mut sweep_index =
+        PathIndex::build(Arc::clone(&ds), &cfg, mids.len(), None).expect("index build");
+    let mut sweep_dots = 0u64;
+    for &dq in &mids {
+        sweep_dots += sweep_index.query(dq, gap_tol, None).expect("sweep query").dots;
+    }
+    let c = sweep_index.counters();
+    let dots_per_query = sweep_dots as f64 / mids.len().max(1) as f64;
+    let dots_ratio = dots_per_query / scratch_dots.max(1) as f64;
+    println!(
+        "\nsweep of {} midpoints at gap_tol {gap_tol:.0e}: {} zero-dot, {} refined \
+         ({} densified) — {dots_per_query:.0} dots/query = {:.3}× from-scratch",
+        mids.len(),
+        c.zero_dot,
+        c.refined,
+        c.inserted,
+        dots_ratio
+    );
+    println!(
+        "headline: zero-dot answers are free ({:.0}× faster than scratch); warm \
+         refinement pays {:.3}× the scratch dots",
+        scratch.mean / zero.mean,
+        warm_dots as f64 / scratch_dots.max(1) as f64
+    );
+
+    let report = Json::obj(vec![
+        ("dataset", Json::Str(ds.name.clone())),
+        ("rows", Json::Num(ds.rows() as f64)),
+        ("cols", Json::Num(ds.cols() as f64)),
+        ("n_points", Json::Num(cfg.n_points as f64)),
+        ("gap_tol", Json::Num(gap_tol)),
+        ("cold_build_secs", Json::Num(cold.mean)),
+        ("build_dots", Json::Num(index.build_dots() as f64)),
+        ("cert_dots", Json::Num(index.cert_dots() as f64)),
+        ("scratch_secs", Json::Num(scratch.mean)),
+        ("scratch_dots", Json::Num(scratch_dots as f64)),
+        ("warm_refined_secs", Json::Num(warm.mean)),
+        ("warm_refined_dots", Json::Num(warm_dots as f64)),
+        ("zero_dot_secs", Json::Num(zero.mean)),
+        ("grid_hit_secs", Json::Num(grid.mean)),
+        ("sweep_queries", Json::Num(c.queries as f64)),
+        ("sweep_zero_dot", Json::Num(c.zero_dot as f64)),
+        ("sweep_refined", Json::Num(c.refined as f64)),
+        ("sweep_inserted", Json::Num(c.inserted as f64)),
+        ("dots_per_query", Json::Num(dots_per_query)),
+        ("dots_ratio_vs_scratch", Json::Num(dots_ratio)),
+        ("zero_dot_speedup_vs_scratch", Json::Num(scratch.mean / zero.mean)),
+    ]);
+    let path =
+        std::env::var("SFW_BENCH_JSON").unwrap_or_else(|_| "BENCH_query.json".into());
+    match std::fs::write(&path, report.pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nWARNING: could not write {path}: {e}"),
+    }
+}

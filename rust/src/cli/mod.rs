@@ -198,7 +198,14 @@ pub fn parse_thread_count(s: &str) -> Result<usize, String> {
 
 /// Parse a byte-size value like `8m`, `512k`, `1g`, or a bare byte count
 /// (binary suffixes: k = 1024, m = 1024², g = 1024³; case-insensitive).
-/// Used by the server's `--max-body` limit.
+/// Used by the server's `--max-body` limit and the tile cache's
+/// `--mem-budget`.
+///
+/// `0` is rejected here, in the one place every byte-size option funnels
+/// through: downstream consumers disagreed about what it meant (a
+/// zero-budget tile LRU starves, while the dataset cache read it as
+/// "unlimited"), so a zero budget is a configuration error — omit the
+/// option (e.g. leave `--mem-budget` unset) to mean unlimited.
 pub fn parse_byte_size(s: &str) -> Result<usize, String> {
     let t = s.trim();
     if t.is_empty() {
@@ -214,6 +221,13 @@ pub fn parse_byte_size(s: &str) -> Result<usize, String> {
         .trim()
         .parse()
         .map_err(|e| format!("invalid byte size '{s}': {e}"))?;
+    if n == 0 {
+        return Err(format!(
+            "byte size '{s}' is zero: a 0 budget is ambiguous \
+             (starved cache vs unlimited) — omit the option \
+             (e.g. --mem-budget) for unlimited"
+        ));
+    }
     n.checked_mul(mult)
         .ok_or_else(|| format!("byte size '{s}' overflows"))
 }
@@ -483,6 +497,14 @@ mod tests {
         assert!(parse_byte_size("m").is_err());
         assert!(parse_byte_size("abc").is_err());
         assert!(parse_byte_size("99999999999999999999g").is_err());
+        // the 0 boundary: ambiguous downstream (starved LRU vs unlimited),
+        // so it is an error in this single validation point — and the
+        // message tells the operator how to ask for "unlimited"
+        for zero in ["0", "0k", "0m", "0g", " 0 "] {
+            let err = parse_byte_size(zero).unwrap_err();
+            assert!(err.contains("omit"), "{zero}: {err}");
+        }
+        assert_eq!(parse_byte_size("1").unwrap(), 1); // smallest valid
     }
 
     #[test]

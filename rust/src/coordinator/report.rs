@@ -3,7 +3,7 @@
 //! Every bench prints a table shaped like the paper's (so the comparison is
 //! eyeball-able) and writes the raw series to `results/*.csv` for plotting.
 
-use crate::path::{PathPoint, PathResult};
+use crate::path::{PathIndex, PathPoint, PathResult, QueryAnswer};
 use crate::util::json::Json;
 use std::fmt::Write as _;
 use std::path::Path;
@@ -88,6 +88,29 @@ pub fn render_speedup_row(baseline_seconds: f64, results: &[&PathResult]) -> Str
     s
 }
 
+/// RFC-4180 escaping for one CSV cell: a cell containing a comma, a double
+/// quote, or a line break is wrapped in quotes with internal quotes doubled;
+/// anything else passes through byte-for-byte. Plain alphanumeric names
+/// (every header the repo itself generates) stay unquoted, so downstream
+/// `split(',')` consumers of our own output are unaffected — the quoting
+/// only kicks in for hostile/user-supplied labels that would otherwise
+/// silently corrupt the column structure.
+pub fn csv_escape(cell: &str) -> std::borrow::Cow<'_, str> {
+    if !cell.contains([',', '"', '\n', '\r']) {
+        return std::borrow::Cow::Borrowed(cell);
+    }
+    let mut out = String::with_capacity(cell.len() + 2);
+    out.push('"');
+    for ch in cell.chars() {
+        if ch == '"' {
+            out.push('"');
+        }
+        out.push(ch);
+    }
+    out.push('"');
+    std::borrow::Cow::Owned(out)
+}
+
 /// CSV of per-point series: one row per grid point.
 /// Columns: reg, l1_norm, active, train_mse, test_mse, iters, dots,
 /// screened_frac, certified_gap, kappa_final, numeric_error[, tracked...]
@@ -100,7 +123,7 @@ pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
         "reg,l1_norm,active,train_mse,test_mse,iters,dots,screened_frac,certified_gap,kappa_final,numeric_error",
     );
     for name in tracked_names {
-        let _ = write!(s, ",{name}");
+        let _ = write!(s, ",{}", csv_escape(name));
     }
     s.push('\n');
     for pt in &r.points {
@@ -117,7 +140,7 @@ pub fn path_csv(r: &PathResult, tracked_names: &[String]) -> String {
             pt.screened_frac,
             pt.certified_gap.map(|v| v.to_string()).unwrap_or_default(),
             pt.kappa_final.map(|v| v.to_string()).unwrap_or_default(),
-            pt.numeric_error.as_ref().map(|e| e.code()).unwrap_or_default()
+            csv_escape(pt.numeric_error.as_ref().map(|e| e.code()).unwrap_or_default())
         );
         for c in &pt.tracked_coefs {
             let _ = write!(s, ",{c}");
@@ -230,6 +253,52 @@ pub fn path_result_json(r: &PathResult) -> Json {
     ])
 }
 
+/// Full JSON object for one λ-query answer (DESIGN.md §16): how the
+/// answer was produced (`source`: `grid` / `zero_dot` / `refined`), the
+/// a-priori interpolation bound and the anchor it came from, the solver
+/// cost actually paid, densification state, and the answered point itself
+/// via [`path_point_json`] — so a grid-hit response is byte-identical to
+/// the same point in a `/v1/path` body. This is the `/v1/query` response
+/// and the `sfw-lasso query` output.
+pub fn query_json(ans: &QueryAnswer, gap_tol: f64, cached: bool, index: &PathIndex) -> Json {
+    let degraded = ans.point.numeric_error.is_some();
+    Json::obj(vec![
+        ("kind", Json::Str("query".to_string())),
+        ("dataset", Json::Str(index.dataset().to_string())),
+        (
+            "health",
+            Json::Str(if degraded { "degraded" } else { "ok" }.to_string()),
+        ),
+        ("cached", Json::Bool(cached)),
+        ("reg", Json::Num(ans.point.reg)),
+        ("gap_tol", Json::Num(gap_tol)),
+        ("source", Json::Str(ans.source.label().to_string())),
+        (
+            "bound",
+            if ans.bound.is_finite() { Json::Num(ans.bound) } else { Json::Null },
+        ),
+        // 0.0 is the zero anchor (α = 0), a valid warm-start origin
+        ("anchor_reg", Json::Num(ans.anchor_reg)),
+        ("dots", Json::Num(ans.dots as f64)),
+        ("inserted", Json::Bool(ans.inserted)),
+        (
+            "index",
+            Json::obj(vec![
+                ("points", Json::Num(index.len() as f64)),
+                ("extra_used", Json::Num(index.extra_used() as f64)),
+                (
+                    "max_extra_points",
+                    Json::Num(index.max_extra_points() as f64),
+                ),
+                ("build_dots", Json::Num(index.build_dots() as f64)),
+                ("cert_dots", Json::Num(index.cert_dots() as f64)),
+                ("build_seconds", Json::Num(index.build_seconds())),
+            ]),
+        ),
+        ("point", path_point_json(&ans.point)),
+    ])
+}
+
 /// Write a string to `results/<name>` (creating the directory).
 pub fn write_results_file(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
     let dir = results_dir();
@@ -335,6 +404,88 @@ mod tests {
         assert_eq!(lines[1].split(',').count(), 12);
         // empty cells for un-certified, non-stochastic runs
         assert!(lines[1].contains(",,"));
+    }
+
+    /// Minimal RFC-4180 row splitter (tests only): honours quoted cells and
+    /// doubled quotes, so the round-trip below actually exercises the
+    /// escaping rather than assuming it.
+    fn split_csv_row(row: &str) -> Vec<String> {
+        let mut cells = Vec::new();
+        let mut cur = String::new();
+        let mut chars = row.chars().peekable();
+        let mut quoted = false;
+        while let Some(ch) = chars.next() {
+            if quoted {
+                if ch == '"' {
+                    if chars.peek() == Some(&'"') {
+                        cur.push('"');
+                        chars.next();
+                    } else {
+                        quoted = false;
+                    }
+                } else {
+                    cur.push(ch);
+                }
+            } else {
+                match ch {
+                    '"' => quoted = true,
+                    ',' => cells.push(std::mem::take(&mut cur)),
+                    _ => cur.push(ch),
+                }
+            }
+        }
+        cells.push(cur);
+        cells
+    }
+
+    #[test]
+    fn hostile_tracked_names_round_trip_through_csv() {
+        let r = fake_result("CD", 1.0);
+        // names carrying the three RFC-4180 special shapes: comma, quote,
+        // and an embedded newline — each would shift/clip columns unescaped
+        let names: Vec<String> = vec![
+            "beta,1".into(),
+            "x\"y".into(),
+            "multi\nline".into(),
+            "plain".into(),
+        ];
+        // fake_result tracks one coef per point; pad to match the header
+        let mut r = r;
+        for pt in r.points.iter_mut() {
+            pt.tracked_coefs = vec![0.1, 0.2, 0.3, 0.4];
+        }
+        let csv = path_csv(&r, &names);
+        // the embedded newline must stay inside its quoted cell: the file
+        // still has exactly header + 5 rows when split quote-aware — a naive
+        // lines() split would see 7
+        let header_end = {
+            // find the end of the (possibly multi-line) header record
+            let mut in_q = false;
+            let mut idx = 0;
+            for (i, ch) in csv.char_indices() {
+                match ch {
+                    '"' => in_q = !in_q,
+                    '\n' if !in_q => {
+                        idx = i;
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            idx
+        };
+        let header = &csv[..header_end];
+        let cells = split_csv_row(header);
+        assert_eq!(cells.len(), 11 + names.len(), "{header:?}");
+        // round-trip: the parsed trailing cells are the original names
+        assert_eq!(&cells[11..], names.as_slice());
+        // simple names stay bare — no gratuitous quoting of our own output
+        assert!(header.ends_with(",plain"), "{header:?}");
+        assert!(header.contains("\"beta,1\""), "{header:?}");
+        assert!(header.contains("\"x\"\"y\""), "{header:?}");
+        // data rows keep their column count too
+        let first_row = csv[header_end + 1..].lines().next().unwrap();
+        assert_eq!(split_csv_row(first_row).len(), 11 + names.len());
     }
 
     #[test]

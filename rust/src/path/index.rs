@@ -1,0 +1,665 @@
+//! Warm-start λ-query serving (DESIGN.md §16, ADR-009).
+//!
+//! A computed regularization path is a *reusable asset*, not a throwaway
+//! artifact: [`PathIndex`] wraps a full §5 sweep into a δ-keyed,
+//! certificate-annotated structure whose [`PathIndex::query`] answers an
+//! arbitrary off-grid radius `δ_q` in one of three escalating tiers:
+//!
+//! 1. **grid hit** — `δ_q` equals a stored grid value bit-for-bit: the
+//!    stored [`PathPoint`] is returned verbatim, zero solver dots;
+//! 2. **zero-dot interpolation** — the a-priori bound of
+//!    [`interpolation_bound`] (anchored at the nearest certified grid
+//!    points, §5's rescale-onto-the-boundary heuristic) already meets
+//!    `gap_tol`: the rescaled anchor is materialized and certified
+//!    without a single solver dot;
+//! 3. **warm-started refinement** — the bound is too loose: a
+//!    gap-certified deterministic FW solve runs from the rescaled
+//!    anchor, and **adaptive densification** inserts the refined point
+//!    (with a fresh certificate) as a new grid point — bounded by a
+//!    `max_extra_points` budget — so the regions where query-time gaps
+//!    are worst grow anchors exactly where the demand is.
+//!
+//! The build sweep replicates [`super::runner::run_segment`]'s
+//! deterministic-FW arm arithmetic exactly (same warm-start rescale, same
+//! solver, same accounting), so the stored points are **bit-identical** to
+//! a [`super::runner::run_path`] run with [`SolverKind::FwDet`] and the
+//! same [`PathConfig`]. The per-point certificate pass (one full gradient,
+//! `p` dots) is index-build overhead tracked separately — it never leaks
+//! into the stored points' dot counts.
+//!
+//! Poisoned points (non-finite tripwire, DESIGN.md §15) follow the
+//! degraded-not-missing convention: they are stored (a grid hit returns
+//! them verbatim) but never carry a certificate, never anchor a warm
+//! start, and a refinement that trips is never inserted.
+
+use super::metrics::{evaluate_point, PathPoint};
+use super::runner::{plan_grid, PathConfig, SolverKind};
+use crate::data::Dataset;
+use crate::linalg::{ops, ColumnCache, KernelScratch};
+use crate::solvers::certify::interpolation_bound;
+use crate::solvers::fw::FrankWolfe;
+use crate::solvers::linesearch::{FwSnapshot, FwState};
+use crate::solvers::Problem;
+use crate::util::ckpt::RunControl;
+use crate::util::timer::Stopwatch;
+use std::sync::Arc;
+
+/// Certificate attached to a healthy stored point: everything
+/// [`interpolation_bound`] needs, plus the exact iterate for warm starts.
+struct Cert {
+    /// bit-exact iterate image (the anchor of warm-started queries)
+    snap: FwSnapshot,
+    /// `‖α‖₁` of the anchor (its effective radius)
+    l1: f64,
+    /// `S = ‖Xα‖²`
+    s: f64,
+    /// `F = (Xα)ᵀy`
+    f: f64,
+    /// `‖∇f(α)‖∞` from the dedicated full-gradient pass
+    ginf: f64,
+}
+
+impl Cert {
+    /// Exact duality gap at the anchor: `(S − F) + δ·ginf`.
+    fn gap(&self, delta: f64) -> f64 {
+        ((self.s - self.f) + delta * self.ginf).max(0.0)
+    }
+}
+
+/// One stored grid point: the public metrics plus the private certificate.
+struct Entry {
+    point: PathPoint,
+    /// `None` for poisoned points (degraded-not-missing: served on a grid
+    /// hit, never used as an anchor)
+    cert: Option<Cert>,
+}
+
+/// How a query was answered (cheapest tier that met `gap_tol`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuerySource {
+    /// δ matched a stored grid value bit-for-bit
+    Grid,
+    /// the a-priori interpolation bound met `gap_tol` — no solver dots
+    ZeroDot,
+    /// warm-started gap-certified FW refinement
+    Refined,
+}
+
+impl QuerySource {
+    /// Wire label (server/CLI JSON).
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuerySource::Grid => "grid",
+            QuerySource::ZeroDot => "zero_dot",
+            QuerySource::Refined => "refined",
+        }
+    }
+}
+
+/// The answer to one λ-query.
+#[derive(Clone, Debug)]
+pub struct QueryAnswer {
+    /// full per-point metrics (same shape as a path point)
+    pub point: PathPoint,
+    /// which tier answered
+    pub source: QuerySource,
+    /// the a-priori interpolation bound at `δ_q` (for a grid hit: the
+    /// stored point's exact certificate gap)
+    pub bound: f64,
+    /// radius of the anchor grid point (0 for the zero anchor)
+    pub anchor_reg: f64,
+    /// solver dot products spent answering (0 for grid/zero-dot tiers)
+    pub dots: u64,
+    /// whether densification inserted this answer as a new grid point
+    pub inserted: bool,
+}
+
+/// Monotone query-traffic counters (status gauges).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct QueryCounters {
+    /// total queries answered
+    pub queries: u64,
+    /// tier-1 answers (exact grid hits)
+    pub grid_hits: u64,
+    /// tier-2 answers (bound met `gap_tol`, zero solver dots)
+    pub zero_dot: u64,
+    /// tier-3 answers (warm-started refinement solves)
+    pub refined: u64,
+    /// densification insertions performed
+    pub inserted: u64,
+}
+
+/// A λ-keyed, certificate-annotated index over a completed path sweep.
+pub struct PathIndex {
+    ds: Arc<Dataset>,
+    cache: ColumnCache,
+    /// per-point solver options (refinements inherit eps/max_iters/seed)
+    opts: crate::solvers::SolveOptions,
+    track: Vec<usize>,
+    /// `‖Xᵀy‖∞` — the zero anchor's gradient sup-norm, free from σ
+    sigma_inf: f64,
+    /// stored grid points, ascending in `reg`
+    entries: Vec<Entry>,
+    /// densification budget (extra points beyond the build grid)
+    max_extra_points: usize,
+    extra_used: usize,
+    /// dots spent by the build sweep (solver + σ setup, run_path parity)
+    build_dots: u64,
+    /// dots spent on dedicated certificate passes (build overhead,
+    /// excluded from the stored points so they stay run_path-identical)
+    cert_dots: u64,
+    build_seconds: f64,
+    counters: QueryCounters,
+}
+
+impl PathIndex {
+    /// Run the deterministic-FW build sweep and assemble the index.
+    ///
+    /// The sweep is arithmetic-identical to
+    /// `run_path(ds, SolverKind::FwDet, cfg)` — same grid planning, same
+    /// §5 warm-start rescale, same solver and dot accounting — with one
+    /// addition per healthy point: a dedicated full-gradient certificate
+    /// pass (`p` dots, tracked separately) capturing the exact iterate
+    /// and its `‖∇f(α)‖∞` for the interpolation bound.
+    ///
+    /// `ctrl` makes the build cancellable at every grid point and solver
+    /// iteration, exactly like a controlled path job.
+    pub fn build(
+        ds: Arc<Dataset>,
+        cfg: &PathConfig,
+        max_extra_points: usize,
+        ctrl: Option<&RunControl>,
+    ) -> Result<PathIndex, String> {
+        if cfg.n_points < 2 {
+            return Err(format!(
+                "query index needs at least 2 grid points (got {})",
+                cfg.n_points
+            ));
+        }
+        let mut sw = Stopwatch::started();
+        let cache = ColumnCache::build(&ds.x, &ds.y);
+        let grid = plan_grid(&ds, &cache, SolverKind::FwDet, cfg, &mut sw);
+        let sigma_inf = cache.sigma.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+
+        let prob = Problem::new(&ds.x, &ds.y, &cache);
+        let p = prob.p();
+        let mut state = FwState::zero(p, prob.m());
+        let mut alpha_buf = vec![0.0; p];
+        let mut fw = FrankWolfe::new(cfg.opts);
+        if let Some(c) = ctrl {
+            fw.set_control(c.clone());
+        }
+        let mut screener = cfg.screen.screener(p);
+        let mut scratch = KernelScratch::new();
+        let mut grad_buf = vec![0.0; p];
+        let mut entries: Vec<Entry> = Vec::with_capacity(grid.len());
+        // run_path parity: σ setup is p dots, counted once per path
+        let mut build_dots = p as u64;
+        let mut cert_dots = 0u64;
+
+        for &delta in grid.values() {
+            if ctrl.map(|c| c.tick()).unwrap_or(false) {
+                return Err("query index build cancelled".to_string());
+            }
+            // §5 warm-start heuristic, exactly as run_segment's FW arm
+            state.rescale_to_radius(delta);
+            let mut entry = 0u64;
+            if let Some(s) = screener.as_mut() {
+                s.reset_full();
+                entry = s.screen_with_state(&prob, &state, delta);
+            }
+            let res = fw.run_with_screen(&prob, &mut state, delta, screener.as_mut());
+            if ctrl.map(|c| c.stopped()).unwrap_or(false) {
+                return Err("query index build cancelled".to_string());
+            }
+            build_dots += res.dots + entry;
+            sw.stop();
+            state.write_alpha(&mut alpha_buf);
+            let mut pt = evaluate_point(
+                &ds, &alpha_buf, delta, res.iters, res.dots + entry, res.converged,
+                &cfg.track,
+            );
+            pt.certified_gap = res.certified_gap;
+            pt.kappa_final = res.kappa_final;
+            pt.numeric_error = res.numeric_error.clone();
+            if let Some(s) = &screener {
+                pt.screened_frac = s.screened_fraction();
+            }
+            let poisoned = pt.numeric_error.is_some();
+            let cert = if poisoned {
+                None
+            } else {
+                // dedicated certificate pass: p dots of index overhead
+                // (grad_multi_all reads the iterate, never mutates it)
+                state.grad_multi_all(&prob, &mut grad_buf, &mut scratch);
+                cert_dots += p as u64;
+                let ginf = ops::nrm_inf(&grad_buf);
+                let l1 = state.l1_norm();
+                (ginf.is_finite() && l1.is_finite() && state.s.is_finite()
+                    && state.f.is_finite())
+                .then(|| Cert {
+                    snap: state.snapshot(),
+                    l1,
+                    s: state.s,
+                    f: state.f,
+                    ginf,
+                })
+            };
+            sw.start();
+            entries.push(Entry { point: pt, cert });
+            // never warm-start past a tripped point (run_segment parity)
+            if poisoned {
+                break;
+            }
+        }
+        sw.stop();
+
+        Ok(PathIndex {
+            ds,
+            cache,
+            opts: cfg.opts,
+            track: cfg.track.clone(),
+            sigma_inf,
+            entries,
+            max_extra_points,
+            extra_used: 0,
+            build_dots,
+            cert_dots,
+            build_seconds: sw.elapsed_secs(),
+            counters: QueryCounters::default(),
+        })
+    }
+
+    /// Answer one query at radius `delta_q` with target certificate
+    /// `gap_tol` (see module docs for the three tiers). `ctrl` makes a
+    /// tier-3 refinement solve cancellable like any path job.
+    pub fn query(
+        &mut self,
+        delta_q: f64,
+        gap_tol: f64,
+        ctrl: Option<&RunControl>,
+    ) -> Result<QueryAnswer, String> {
+        if !(delta_q.is_finite() && delta_q > 0.0) {
+            return Err(format!("query radius must be finite and positive (got {delta_q})"));
+        }
+        if !(gap_tol.is_finite() && gap_tol > 0.0) {
+            return Err(format!("gap_tol must be finite and positive (got {gap_tol})"));
+        }
+        self.counters.queries += 1;
+
+        // tier 1: exact grid hit — the stored point, verbatim
+        if let Some(e) = self
+            .entries
+            .iter()
+            .find(|e| e.point.reg.to_bits() == delta_q.to_bits())
+        {
+            self.counters.grid_hits += 1;
+            let bound = match &e.cert {
+                Some(c) => c.gap(delta_q),
+                None => f64::INFINITY, // poisoned point: served, uncertified
+            };
+            return Ok(QueryAnswer {
+                point: e.point.clone(),
+                source: QuerySource::Grid,
+                bound,
+                anchor_reg: delta_q,
+                dots: 0,
+                inserted: false,
+            });
+        }
+
+        let (anchor, bound) = self.best_anchor(delta_q);
+        let anchor_reg = anchor.map(|i| self.entries[i].point.reg).unwrap_or(0.0);
+
+        // tier 2: the a-priori bound already certifies the rescaled anchor
+        if bound <= gap_tol {
+            let mut alpha = vec![0.0; self.ds.cols()];
+            self.materialize(anchor, delta_q, &mut alpha)?;
+            let mut pt =
+                evaluate_point(&self.ds, &alpha, delta_q, 0, 0, true, &self.track);
+            pt.certified_gap = Some(bound);
+            self.counters.zero_dot += 1;
+            return Ok(QueryAnswer {
+                point: pt,
+                source: QuerySource::ZeroDot,
+                bound,
+                anchor_reg,
+                dots: 0,
+                inserted: false,
+            });
+        }
+
+        // tier 3: warm-started gap-certified refinement
+        let prob = Problem::new(&self.ds.x, &self.ds.y, &self.cache);
+        let p = prob.p();
+        let mut state = match anchor.and_then(|i| self.entries[i].cert.as_ref()) {
+            Some(c) => FwState::from_snapshot(p, &c.snap)?,
+            None => FwState::zero(p, prob.m()),
+        };
+        state.rescale_to_radius(delta_q);
+        let mut fw = FrankWolfe::with_gap_tol(self.opts, gap_tol);
+        if let Some(c) = ctrl {
+            fw.set_control(c.clone());
+        }
+        let res = fw.run(&prob, &mut state, delta_q);
+        if ctrl.map(|c| c.stopped()).unwrap_or(false) {
+            return Err("query solve cancelled".to_string());
+        }
+        if let Some(e) = &res.numeric_error {
+            // a tripped refinement is an error answer, never an insertion
+            return Err(e.to_string());
+        }
+        let mut dots = res.dots;
+        let mut alpha = vec![0.0; p];
+        state.write_alpha(&mut alpha);
+        let mut pt = evaluate_point(
+            &self.ds, &alpha, delta_q, res.iters, res.dots, res.converged, &self.track,
+        );
+        pt.certified_gap = res.certified_gap;
+        self.counters.refined += 1;
+
+        // adaptive densification: make this query's neighborhood cheap
+        // for the next one, within the extra-points budget
+        let mut inserted = false;
+        if self.extra_used < self.max_extra_points {
+            let mut scratch = KernelScratch::new();
+            let mut grad = vec![0.0; p];
+            state.grad_multi_all(&prob, &mut grad, &mut scratch);
+            dots += p as u64; // the certificate pass is real serving work
+            let ginf = ops::nrm_inf(&grad);
+            let l1 = state.l1_norm();
+            if ginf.is_finite() && l1.is_finite() {
+                let cert = Cert {
+                    snap: state.snapshot(),
+                    l1,
+                    s: state.s,
+                    f: state.f,
+                    ginf,
+                };
+                let pos = self
+                    .entries
+                    .partition_point(|e| e.point.reg < delta_q);
+                self.entries
+                    .insert(pos, Entry { point: pt.clone(), cert: Some(cert) });
+                self.extra_used += 1;
+                self.counters.inserted += 1;
+                inserted = true;
+            }
+        }
+
+        Ok(QueryAnswer {
+            point: pt,
+            source: QuerySource::Refined,
+            bound,
+            anchor_reg,
+            dots,
+            inserted,
+        })
+    }
+
+    /// The a-priori interpolation bound at `delta_q` — the best over the
+    /// nearest certified grid points (test surface for the soundness
+    /// property; [`Self::query`] uses exactly this value for tier 2).
+    pub fn apriori_bound(&self, delta_q: f64) -> f64 {
+        self.best_anchor(delta_q).1
+    }
+
+    /// Materialize the tier-2 zero-dot answer's coefficients at `delta_q`
+    /// regardless of any tolerance (test surface: the soundness property
+    /// measures this vector's true gap with a dedicated certificate pass
+    /// and compares it against [`Self::apriori_bound`]).
+    pub fn zero_dot_alpha(&self, delta_q: f64) -> Result<Vec<f64>, String> {
+        let (anchor, _) = self.best_anchor(delta_q);
+        let mut alpha = vec![0.0; self.ds.cols()];
+        self.materialize(anchor, delta_q, &mut alpha)?;
+        Ok(alpha)
+    }
+
+    /// Best anchor for `delta_q`: the certified neighbor below and above
+    /// by radius, scored by the interpolation bound; the zero anchor
+    /// (`bound = δ_q·σ∞`, exact) is the always-available fallback.
+    fn best_anchor(&self, delta_q: f64) -> (Option<usize>, f64) {
+        let mut best: (Option<usize>, f64) =
+            (None, interpolation_bound(delta_q, 0.0, 0.0, 0.0, 0.0, self.sigma_inf));
+        let lower = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.cert.is_some() && e.point.reg <= delta_q)
+            .max_by(|(_, a), (_, b)| a.point.reg.total_cmp(&b.point.reg))
+            .map(|(i, _)| i);
+        let upper = self
+            .entries
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.cert.is_some() && e.point.reg >= delta_q)
+            .min_by(|(_, a), (_, b)| a.point.reg.total_cmp(&b.point.reg))
+            .map(|(i, _)| i);
+        for i in [lower, upper].into_iter().flatten() {
+            let c = self.entries[i].cert.as_ref().expect("filtered on cert");
+            let b = interpolation_bound(delta_q, c.l1, c.s, c.f, c.ginf, self.sigma_inf);
+            if b < best.1 {
+                best = (Some(i), b);
+            }
+        }
+        best
+    }
+
+    /// Write the §5-rescaled anchor coefficients at `delta_q` into `out`
+    /// (the zero anchor writes zeros).
+    fn materialize(
+        &self,
+        anchor: Option<usize>,
+        delta_q: f64,
+        out: &mut [f64],
+    ) -> Result<(), String> {
+        match anchor.and_then(|i| self.entries[i].cert.as_ref()) {
+            Some(c) => {
+                let mut st = FwState::from_snapshot(self.ds.cols(), &c.snap)?;
+                st.rescale_to_radius(delta_q);
+                st.write_alpha(out);
+            }
+            None => out.fill(0.0),
+        }
+        Ok(())
+    }
+
+    /// Stored grid points (build grid plus densification insertions),
+    /// ascending in radius.
+    pub fn stored_points(&self) -> impl Iterator<Item = &PathPoint> {
+        self.entries.iter().map(|e| &e.point)
+    }
+
+    /// Number of stored grid points.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the index holds no points (an aborted build).
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Densification insertions performed so far.
+    pub fn extra_used(&self) -> usize {
+        self.extra_used
+    }
+
+    /// Densification budget.
+    pub fn max_extra_points(&self) -> usize {
+        self.max_extra_points
+    }
+
+    /// Dots spent by the build sweep (σ setup included, run_path parity).
+    pub fn build_dots(&self) -> u64 {
+        self.build_dots
+    }
+
+    /// Dots spent on dedicated build-time certificate passes (overhead on
+    /// top of [`Self::build_dots`]).
+    pub fn cert_dots(&self) -> u64 {
+        self.cert_dots
+    }
+
+    /// Build wall-clock seconds (metric evaluation excluded, run_path
+    /// accounting).
+    pub fn build_seconds(&self) -> f64 {
+        self.build_seconds
+    }
+
+    /// Query-traffic counters.
+    pub fn counters(&self) -> QueryCounters {
+        self.counters
+    }
+
+    /// Dataset name (report labels).
+    pub fn dataset(&self) -> &str {
+        &self.ds.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{load, Named};
+    use crate::path::runner::run_path;
+    use crate::solvers::SolveOptions;
+
+    fn small_ds() -> Arc<Dataset> {
+        Arc::new(load(Named::Synth10k { relevant: 8 }, 0.01, 5)) // p = 100
+    }
+
+    fn cfg(n: usize) -> PathConfig {
+        PathConfig {
+            n_points: n,
+            opts: SolveOptions { eps: 1e-3, max_iters: 5_000, ..Default::default() },
+            delta_max: Some(3.0),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn build_is_bit_identical_to_run_path_fwdet() {
+        let ds = small_ds();
+        let cfg = cfg(8);
+        let pr = run_path(&ds, SolverKind::FwDet, &cfg);
+        let idx = PathIndex::build(ds, &cfg, 4, None).unwrap();
+        assert_eq!(idx.len(), pr.points.len());
+        for (a, b) in idx.stored_points().zip(pr.points.iter()) {
+            assert_eq!(a.reg.to_bits(), b.reg.to_bits());
+            assert_eq!(a.l1_norm.to_bits(), b.l1_norm.to_bits());
+            assert_eq!(a.train_mse.to_bits(), b.train_mse.to_bits());
+            assert_eq!(a.iters, b.iters);
+            assert_eq!(a.dots, b.dots);
+            assert_eq!(a.active, b.active);
+        }
+        // σ setup + per-point dots match run_path's total exactly
+        assert_eq!(idx.build_dots(), pr.total_dots);
+        assert!(idx.cert_dots() > 0);
+    }
+
+    #[test]
+    fn grid_hit_serves_stored_point_with_zero_dots() {
+        let ds = small_ds();
+        let mut idx = PathIndex::build(ds, &cfg(6), 2, None).unwrap();
+        let reg = idx.stored_points().nth(3).unwrap().reg;
+        let stored_mse = idx.stored_points().nth(3).unwrap().train_mse;
+        let ans = idx.query(reg, 1e-9, None).unwrap();
+        assert_eq!(ans.source, QuerySource::Grid);
+        assert_eq!(ans.dots, 0);
+        assert!(!ans.inserted);
+        assert_eq!(ans.point.train_mse.to_bits(), stored_mse.to_bits());
+        assert_eq!(idx.counters().grid_hits, 1);
+    }
+
+    #[test]
+    fn loose_tolerance_answers_off_grid_with_zero_dots() {
+        let ds = small_ds();
+        let mut idx = PathIndex::build(ds, &cfg(8), 2, None).unwrap();
+        let (a, b) = {
+            let mut it = idx.stored_points();
+            (it.next().unwrap().reg, it.nth(0).unwrap().reg)
+        };
+        let dq = 0.5 * (a + b); // strictly between two grid points
+        let bound = idx.apriori_bound(dq);
+        assert!(bound.is_finite() && bound > 0.0);
+        let ans = idx.query(dq, bound * 1.01, None).unwrap();
+        assert_eq!(ans.source, QuerySource::ZeroDot);
+        assert_eq!(ans.dots, 0);
+        assert_eq!(ans.point.certified_gap, Some(bound));
+        // feasibility: the rescale lands exactly on the δ_q boundary
+        assert!(ans.point.l1_norm <= dq * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn tight_tolerance_refines_then_densifies_into_a_grid_hit() {
+        let ds = small_ds();
+        let mut idx = PathIndex::build(ds, &cfg(8), 2, None).unwrap();
+        let (a, b) = {
+            let mut it = idx.stored_points();
+            let a = it.nth(4).unwrap().reg;
+            (a, it.next().unwrap().reg)
+        };
+        let dq = (a * b).sqrt();
+        let tol = 1e-5;
+        assert!(idx.apriori_bound(dq) > tol, "bound too tight to exercise tier 3");
+        let n0 = idx.len();
+        let ans = idx.query(dq, tol, None).unwrap();
+        assert_eq!(ans.source, QuerySource::Refined);
+        assert!(ans.dots > 0);
+        assert!(ans.inserted);
+        assert_eq!(idx.len(), n0 + 1);
+        assert_eq!(idx.extra_used(), 1);
+        let gap = ans.point.certified_gap.expect("refined answers carry a cert");
+        assert!(gap <= ans.bound * (1.0 + 1e-9), "gap {gap} vs bound {}", ans.bound);
+        // the same query again is now a grid hit: zero dots, same bits
+        let again = idx.query(dq, tol, None).unwrap();
+        assert_eq!(again.source, QuerySource::Grid);
+        assert_eq!(again.dots, 0);
+        assert_eq!(
+            again.point.train_mse.to_bits(),
+            ans.point.train_mse.to_bits()
+        );
+    }
+
+    #[test]
+    fn densification_respects_the_budget() {
+        let ds = small_ds();
+        let mut idx = PathIndex::build(ds, &cfg(6), 1, None).unwrap();
+        let regs: Vec<f64> = idx.stored_points().map(|p| p.reg).collect();
+        let mut refined = 0;
+        for w in regs.windows(2) {
+            let dq = (w[0] * w[1]).sqrt();
+            let ans = idx.query(dq, 1e-6, None).unwrap();
+            if ans.source == QuerySource::Refined {
+                refined += 1;
+                assert!(ans.inserted == (refined <= 1), "budget exceeded");
+            }
+        }
+        assert!(refined >= 2, "expected several refinements, got {refined}");
+        assert_eq!(idx.extra_used(), 1);
+    }
+
+    #[test]
+    fn cancelled_control_aborts_refinement_and_build() {
+        let ds = small_ds();
+        let ctrl = RunControl::new();
+        ctrl.cancel();
+        assert!(PathIndex::build(ds.clone(), &cfg(6), 2, Some(&ctrl)).is_err());
+        let mut idx = PathIndex::build(ds, &cfg(6), 2, None).unwrap();
+        let regs: Vec<f64> = idx.stored_points().map(|p| p.reg).collect();
+        let dq = (regs[2] * regs[3]).sqrt();
+        let err = idx.query(dq, 1e-9, Some(&ctrl)).unwrap_err();
+        assert!(err.contains("cancel"), "{err}");
+    }
+
+    #[test]
+    fn invalid_query_inputs_are_rejected() {
+        let ds = small_ds();
+        let mut idx = PathIndex::build(ds, &cfg(6), 2, None).unwrap();
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(idx.query(bad, 1e-3, None).is_err(), "radius {bad}");
+            assert!(idx.query(1.0, bad, None).is_err(), "tol {bad}");
+        }
+    }
+}

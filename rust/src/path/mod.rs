@@ -1,14 +1,18 @@
 //! Regularization-path layer: grids, per-point metrics, and the warm-start
 //! path runner (paper §5 conventions), with optional gap-safe screening
 //! ([`crate::screening`]) re-armed at every grid point. The [`ckpt`]
-//! module adds crash-safe checkpoint/resume on top of the same runner.
+//! module adds crash-safe checkpoint/resume on top of the same runner,
+//! and [`index`] turns a completed sweep into a certificate-annotated
+//! λ-query serving structure (DESIGN.md §16).
 
 pub mod ckpt;
 pub mod grid;
+pub mod index;
 pub mod metrics;
 pub mod runner;
 
 pub use ckpt::{run_path_resilient, PathRunOutcome, ResilientOptions};
 pub use grid::{delta_grid, lambda_grid, LogGrid};
+pub use index::{PathIndex, QueryAnswer, QueryCounters, QuerySource};
 pub use metrics::{evaluate_point, PathPoint, PathResult};
 pub use runner::{plan_delta_max, run_path, run_path_parallel, PathConfig, SolverKind};

@@ -602,8 +602,138 @@ pub fn run_path_job(
     ]))
 }
 
+// ------------------------------------------------------------- query requests
+
+/// A validated `query` request: one λ-query against the warm-start
+/// serving index (DESIGN.md §16). The `cfg` knobs shape the index build
+/// on a cold cache; requests agreeing on them share one resident index.
+#[derive(Debug, Clone)]
+pub struct QueryRequest {
+    /// Dataset coordinates.
+    pub dataset: DatasetSpec,
+    /// The query radius δ (constrained form; required).
+    pub reg: f64,
+    /// Target certificate: answers are certified to a duality gap ≤ this.
+    pub gap_tol: f64,
+    /// Index build configuration (grid size, per-point options, δ_max).
+    pub cfg: PathConfig,
+    /// Densification budget (extra grid points inserted by refinements).
+    pub max_extra_points: usize,
+}
+
+/// Validate a `query` body. The grid defaults to 33 points — a third of a
+/// full path sweep; the interpolation bound plus densification covers the
+/// gaps — and `gap_tol` defaults to 1e-3.
+pub fn parse_query(body: &Json, allow_files: bool) -> Result<QueryRequest, ApiError> {
+    let mut f = Fields::new(body)?;
+    let dataset = parse_dataset(&mut f, allow_files)?;
+    let reg = f.opt_f64("reg")?.ok_or_else(|| {
+        ApiError::bad_request("field 'reg' (the query radius δ) is required".into())
+    })?;
+    if !(reg.is_finite() && reg > 0.0) {
+        return Err(ApiError::bad_request(format!(
+            "field 'reg' must be a positive finite number, got {reg}"
+        )));
+    }
+    let gap_tol = f.f64("gap_tol", 1e-3)?;
+    crate::numerics::require_finite_pos("gap_tol", gap_tol)
+        .map_err(|e| ApiError::from_numeric(&e))?;
+    let n_points = f.usize("points", 33)?;
+    if !(2..=10_000).contains(&n_points) {
+        return Err(ApiError::bad_request(format!(
+            "field 'points' must be in 2..=10000, got {n_points}"
+        )));
+    }
+    let max_extra_points = f.usize("max_extra_points", 16)?;
+    if max_extra_points > 10_000 {
+        return Err(ApiError::bad_request(format!(
+            "field 'max_extra_points' must be at most 10000, got {max_extra_points}"
+        )));
+    }
+    let opts = SolveOptions {
+        eps: f.f64("eps", 1e-3)?,
+        max_iters: f.usize("max_iters", 20_000)?,
+        seed: f.u64("solver_seed", dataset.seed)?,
+        ..Default::default()
+    };
+    validate_opts(&opts)?;
+    let delta_max = f.opt_f64("delta_max")?;
+    if let Some(d) = delta_max {
+        crate::numerics::require_finite_pos("delta_max", d)
+            .map_err(|e| ApiError::from_numeric(&e))?;
+    }
+    let req = QueryRequest {
+        dataset,
+        reg,
+        gap_tol,
+        cfg: PathConfig {
+            n_points,
+            opts,
+            delta_max,
+            track: Vec::new(),
+            screen: ScreenMode::Off,
+        },
+        max_extra_points,
+    };
+    f.finish()?;
+    Ok(req)
+}
+
+/// Execute a validated query: fetch (or single-flight build) the resident
+/// [`crate::path::PathIndex`] for the request's coordinates, answer
+/// through its three-tier ladder, and record the hit/miss gauges. Both
+/// the cold-cache build sweep and a tier-3 refinement run under the job's
+/// [`RunControl`], so the request deadline cancels them like any path job.
+pub fn run_query(
+    req: &QueryRequest,
+    cache: &Arc<DatasetCache>,
+    ctrl: &RunControl,
+) -> Result<Json, ApiError> {
+    let (idx, cached) = cache
+        .fetch_index(
+            &req.dataset.spec,
+            req.dataset.scale,
+            req.dataset.seed,
+            req.dataset.use_cache,
+            &req.cfg,
+            req.max_extra_points,
+            ctrl,
+        )
+        .map_err(|e| load_error(&e))?;
+    let mut index = idx.lock().unwrap();
+    let ans = index.query(req.reg, req.gap_tol, Some(ctrl)).map_err(|e| {
+        if e.contains("E_NONFINITE") {
+            ApiError::new(422, "numeric_error", &e)
+        } else if e.contains("cancelled") {
+            ApiError::new(503, "cancelled", &e)
+        } else {
+            ApiError::bad_request(e)
+        }
+    })?;
+    // hit = answered without solver dots (grid hit or zero-dot tier)
+    cache.note_query(ans.dots == 0);
+    Ok(report::query_json(&ans, req.gap_tol, cached, &index))
+}
+
+/// Map a dataset/index load failure to its HTTP class: loads that failed
+/// the numerical-health scan (the message carries an `E_*` code) are
+/// unprocessable content, not a malformed request — 422, same kind as
+/// in-solver trips. A cancelled single-flight index build surfaces as a
+/// 503 so the client retries after its deadline pressure clears.
+fn load_error(e: &str) -> ApiError {
+    if e.contains("E_NONFINITE") {
+        ApiError::new(422, "numeric_error", e)
+    } else if e.contains("E_DEGENERATE") {
+        ApiError::new(400, "degenerate_config", e)
+    } else if e.contains("cancelled") {
+        ApiError::new(503, "cancelled", e)
+    } else {
+        ApiError::new(400, "dataset_error", e)
+    }
+}
+
 /// Resolve the request's dataset through the server cache and run the
-/// job closure against it. Shared tail of both endpoints.
+/// job closure against it. Shared tail of the solve/path endpoints.
 pub fn with_dataset<F>(
     cache: &Arc<DatasetCache>,
     spec: &DatasetSpec,
@@ -614,18 +744,7 @@ where
 {
     let hit = cache
         .fetch(&spec.spec, spec.scale, spec.seed, spec.use_cache)
-        .map_err(|e| {
-            // loads that failed the numerical-health scan (the message
-            // carries an E_* code) are unprocessable content, not a
-            // malformed request: 422, same kind as in-solver trips
-            if e.contains("E_NONFINITE") {
-                ApiError::new(422, "numeric_error", &e)
-            } else if e.contains("E_DEGENERATE") {
-                ApiError::new(400, "degenerate_config", &e)
-            } else {
-                ApiError::new(400, "dataset_error", &e)
-            }
-        })?;
+        .map_err(|e| load_error(&e))?;
     run(&hit.dataset, hit.cached)
 }
 
@@ -726,6 +845,51 @@ mod tests {
         // an empty checkpoint string means "no checkpoint"
         let r = parse_path(&parse(r#"{"checkpoint": ""}"#), false).unwrap();
         assert!(r.checkpoint.is_none());
+    }
+
+    #[test]
+    fn query_defaults_and_required_reg() {
+        let r = parse_query(&parse(r#"{"reg": 1.5}"#), false).unwrap();
+        assert_eq!(r.reg, 1.5);
+        assert_eq!(r.gap_tol, 1e-3);
+        assert_eq!(r.cfg.n_points, 33);
+        assert_eq!(r.cfg.opts.eps, 1e-3);
+        assert_eq!(r.cfg.opts.max_iters, 20_000);
+        assert_eq!(r.cfg.opts.seed, r.dataset.seed);
+        assert_eq!(r.cfg.screen, ScreenMode::Off);
+        assert!(r.cfg.track.is_empty());
+        assert!(r.cfg.delta_max.is_none());
+        assert_eq!(r.max_extra_points, 16);
+        // reg is the one field with no default
+        let e = parse_query(&parse("{}"), false).unwrap_err();
+        assert_eq!(e.status, 400);
+        assert!(e.message.contains("reg"), "{}", e.message);
+    }
+
+    #[test]
+    fn query_validates_ranges() {
+        for body in [
+            r#"{"reg": 0}"#,
+            r#"{"reg": -1}"#,
+            r#"{"reg": 1e999}"#,
+            r#"{"reg": 1, "gap_tol": 0}"#,
+            r#"{"reg": 1, "points": 1}"#,
+            r#"{"reg": 1, "points": 10001}"#,
+            r#"{"reg": 1, "max_extra_points": 10001}"#,
+            r#"{"reg": 1, "delta_max": 0}"#,
+            r#"{"reg": 1, "eps": 1e999}"#,
+            r#"{"reg": 1, "lambda": 1}"#,
+        ] {
+            assert!(parse_query(&parse(body), false).is_err(), "should reject {body}");
+        }
+        let r = parse_query(
+            &parse(r#"{"reg": 0.7, "points": 5, "gap_tol": 0.05, "delta_max": 2.0}"#),
+            false,
+        )
+        .unwrap();
+        assert_eq!(r.cfg.n_points, 5);
+        assert_eq!(r.cfg.delta_max, Some(2.0));
+        assert_eq!(r.gap_tol, 0.05);
     }
 
     #[test]

@@ -18,12 +18,29 @@
 //! absorb the O(nnz) build.
 
 use crate::data::Dataset;
+use crate::path::{PathConfig, PathIndex};
+use crate::util::ckpt::RunControl;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+
+/// A resident warm-start query index (DESIGN.md §16). Densification
+/// mutates the index, so unlike the immutable datasets it lives behind a
+/// `Mutex`; queries on the same index serialize, queries on different
+/// indexes run concurrently.
+type IndexCell = Arc<OnceLock<Result<Arc<Mutex<PathIndex>>, String>>>;
 
 /// Key → shared dataset map with single-flight loading.
 pub struct DatasetCache {
     entries: Mutex<HashMap<String, Arc<OnceLock<Result<Arc<Dataset>, String>>>>>,
+    /// resident [`PathIndex`]es, keyed by dataset coordinates **plus** the
+    /// grid/solver knobs that shape the build (ADR-009): two queries
+    /// agreeing on those share one index and its densification state
+    indexes: Mutex<HashMap<String, IndexCell>>,
+    /// queries answered without solver dots (grid hits + zero-dot tier)
+    query_hits: AtomicU64,
+    /// queries that needed a warm-started refinement solve
+    query_misses: AtomicU64,
     // out-of-core byte budget applied to every load (ServeConfig.mem_budget)
     mem_budget: Option<usize>,
 }
@@ -53,7 +70,13 @@ impl DatasetCache {
     /// through this cache streams its tiles from disk under that byte
     /// budget ([`crate::data::resolve_spec_budgeted`], DESIGN.md §13).
     pub fn with_mem_budget(mem_budget: Option<usize>) -> DatasetCache {
-        DatasetCache { entries: Mutex::new(HashMap::new()), mem_budget }
+        DatasetCache {
+            entries: Mutex::new(HashMap::new()),
+            indexes: Mutex::new(HashMap::new()),
+            query_hits: AtomicU64::new(0),
+            query_misses: AtomicU64::new(0),
+            mem_budget,
+        }
     }
 
     /// Cache key for a request's dataset coordinates.
@@ -130,6 +153,107 @@ impl DatasetCache {
         self.len() == 0
     }
 
+    /// Cache key for a query index: the dataset coordinates plus every
+    /// knob that shapes the build sweep (grid size, solver tolerances,
+    /// δ_max override, densification budget).
+    fn index_key(
+        spec: &str,
+        scale: f64,
+        seed: u64,
+        cfg: &PathConfig,
+        max_extra_points: usize,
+    ) -> String {
+        format!(
+            "{}|q|{}|{}|{}|{:?}|{}",
+            Self::key(spec, scale, seed),
+            cfg.n_points,
+            cfg.opts.eps,
+            cfg.opts.max_iters,
+            cfg.delta_max,
+            max_extra_points,
+        )
+    }
+
+    /// Fetch or build the warm-start query index for the given dataset
+    /// coordinates and build knobs. Single-flight like [`Self::fetch`]:
+    /// the first requester runs the build sweep (cancellable through its
+    /// `ctrl` — a cancelled build fails all concurrent waiters, and the
+    /// entry is evicted so the next request retries); later requesters
+    /// share the resident index and its densification state. Returns the
+    /// index and whether it was already resident.
+    pub fn fetch_index(
+        &self,
+        spec: &str,
+        scale: f64,
+        seed: u64,
+        use_cache: bool,
+        cfg: &PathConfig,
+        max_extra_points: usize,
+        ctrl: &RunControl,
+    ) -> Result<(Arc<Mutex<PathIndex>>, bool), String> {
+        let key = Self::index_key(spec, scale, seed, cfg, max_extra_points);
+        let (cell, existed) = {
+            let mut map = self.indexes.lock().unwrap();
+            match map.get(&key) {
+                Some(cell) => (Arc::clone(cell), true),
+                None => {
+                    let cell: IndexCell = Arc::new(OnceLock::new());
+                    map.insert(key.clone(), Arc::clone(&cell));
+                    (cell, false)
+                }
+            }
+        };
+        let cached = existed && cell.get().is_some();
+        let result = cell.get_or_init(|| {
+            let hit = self.fetch(spec, scale, seed, use_cache)?;
+            let idx = PathIndex::build(hit.dataset, cfg, max_extra_points, Some(ctrl))?;
+            Ok(Arc::new(Mutex::new(idx)))
+        });
+        match result {
+            Ok(idx) => Ok((Arc::clone(idx), cached)),
+            Err(e) => {
+                let mut map = self.indexes.lock().unwrap();
+                if let Some(cur) = map.get(&key) {
+                    if Arc::ptr_eq(cur, &cell) {
+                        map.remove(&key);
+                    }
+                }
+                Err(e.clone())
+            }
+        }
+    }
+
+    /// Number of resident (successfully built) query indexes.
+    pub fn resident_indexes(&self) -> usize {
+        self.indexes
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|c| matches!(c.get(), Some(Ok(_))))
+            .count()
+    }
+
+    /// Record one answered query for the status gauges: a *hit* was served
+    /// without solver dots (grid hit or zero-dot interpolation), a *miss*
+    /// needed a refinement solve.
+    pub fn note_query(&self, hit: bool) {
+        if hit {
+            self.query_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.query_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Queries answered with zero solver dots since startup.
+    pub fn query_hits(&self) -> u64 {
+        self.query_hits.load(Ordering::Relaxed)
+    }
+
+    /// Queries that needed a refinement solve since startup.
+    pub fn query_misses(&self) -> u64 {
+        self.query_misses.load(Ordering::Relaxed)
+    }
+
     /// Number of resident datasets whose on-disk tile store has been
     /// poisoned by an I/O failure (scans fall back to the in-core
     /// mirror; surfaced by the server's `GET /v1/status`).
@@ -202,6 +326,45 @@ mod tests {
             hit.dataset.x.mirror().is_none(),
             "the in-RAM mirror must not coexist with the tile store"
         );
+    }
+
+    #[test]
+    fn query_index_is_shared_keyed_and_counted() {
+        let cache = DatasetCache::new();
+        let cfg = PathConfig {
+            n_points: 4,
+            opts: crate::solvers::SolveOptions {
+                eps: 1e-3,
+                max_iters: 500,
+                ..Default::default()
+            },
+            delta_max: Some(1.0),
+            ..Default::default()
+        };
+        let ctrl = RunControl::new();
+        let (a, cached_a) = cache
+            .fetch_index("synth-10000-100", 0.005, 1, false, &cfg, 2, &ctrl)
+            .unwrap();
+        assert!(!cached_a);
+        let (b, cached_b) = cache
+            .fetch_index("synth-10000-100", 0.005, 1, false, &cfg, 2, &ctrl)
+            .unwrap();
+        assert!(cached_b);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.resident_indexes(), 1);
+        assert_eq!(cache.len(), 1, "the dataset behind the index is resident too");
+        // different build knobs → a different index
+        let mut cfg2 = cfg.clone();
+        cfg2.n_points = 5;
+        let (c, _) = cache
+            .fetch_index("synth-10000-100", 0.005, 1, false, &cfg2, 2, &ctrl)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.resident_indexes(), 2);
+        cache.note_query(true);
+        cache.note_query(false);
+        assert_eq!(cache.query_hits(), 1);
+        assert_eq!(cache.query_misses(), 1);
     }
 
     #[test]

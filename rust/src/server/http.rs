@@ -182,18 +182,9 @@ pub fn read_request(
             "Transfer-Encoding bodies are not supported; send Content-Length".into(),
         );
     }
-    let content_length = match req.header("content-length") {
-        None => 0usize,
-        Some(v) => match v.parse::<usize>() {
-            Ok(n) => n,
-            Err(_) => {
-                return ReadOutcome::Fail(
-                    400,
-                    "bad_request",
-                    format!("invalid Content-Length {v:?}"),
-                )
-            }
-        },
+    let content_length = match declared_content_length(&req) {
+        Ok(n) => n,
+        Err(msg) => return ReadOutcome::Fail(400, "bad_request", msg),
     };
     if content_length > max_body {
         // reject before reading the body; the connection closes so the
@@ -240,6 +231,34 @@ pub fn read_request(
     body.truncate(content_length); // drop any pipelined bytes past the body
     req.body = body;
     ReadOutcome::Request(req)
+}
+
+/// Resolve the declared body length from the request's `Content-Length`
+/// headers. Duplicate headers with *conflicting* values are rejected —
+/// picking either one silently is the classic request-smuggling shape
+/// where a front proxy and this server frame the body differently.
+/// Duplicates that agree collapse to the shared value (RFC 9112 §6.3).
+/// Pure function — unit-testable without sockets.
+pub fn declared_content_length(req: &Request) -> Result<usize, String> {
+    let mut declared: Option<(usize, &str)> = None;
+    for (name, value) in &req.headers {
+        if name != "content-length" {
+            continue;
+        }
+        let n = value
+            .parse::<usize>()
+            .map_err(|_| format!("invalid Content-Length {value:?}"))?;
+        match declared {
+            None => declared = Some((n, value)),
+            Some((prev, prev_raw)) if prev != n => {
+                return Err(format!(
+                    "conflicting Content-Length headers ({prev_raw:?} vs {value:?})"
+                ));
+            }
+            Some(_) => {}
+        }
+    }
+    Ok(declared.map(|(n, _)| n).unwrap_or(0))
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -357,6 +376,42 @@ mod tests {
     #[test]
     fn rejects_malformed_headers() {
         assert!(parse_head("GET / HTTP/1.1\r\nno-colon-here\r\n").is_err());
+    }
+
+    #[test]
+    fn conflicting_duplicate_content_lengths_are_rejected() {
+        // the request-smuggling shape: two different declared lengths
+        let r = parse_head(
+            "POST /v1/solve HTTP/1.1\r\nContent-Length: 10\r\nContent-Length: 4\r\n",
+        )
+        .unwrap();
+        let err = declared_content_length(&r).unwrap_err();
+        assert!(err.contains("conflicting"), "got {err:?}");
+        // case-mixed duplicates normalize to the same name and still conflict
+        let r = parse_head(
+            "POST / HTTP/1.1\r\nContent-Length: 7\r\ncOnTeNt-LeNgTh: 8\r\n",
+        )
+        .unwrap();
+        assert!(declared_content_length(&r).is_err());
+    }
+
+    #[test]
+    fn agreeing_duplicate_content_lengths_collapse() {
+        let r = parse_head(
+            "POST / HTTP/1.1\r\nContent-Length: 12\r\nContent-Length: 12\r\n",
+        )
+        .unwrap();
+        assert_eq!(declared_content_length(&r).unwrap(), 12);
+    }
+
+    #[test]
+    fn content_length_single_and_absent() {
+        let r = parse_head("POST / HTTP/1.1\r\nContent-Length: 3\r\n").unwrap();
+        assert_eq!(declared_content_length(&r).unwrap(), 3);
+        let r = parse_head("GET / HTTP/1.1\r\n").unwrap();
+        assert_eq!(declared_content_length(&r).unwrap(), 0);
+        let r = parse_head("POST / HTTP/1.1\r\nContent-Length: -1\r\n").unwrap();
+        assert!(declared_content_length(&r).is_err());
     }
 
     #[test]

@@ -14,8 +14,12 @@
 //!   existing [`crate::solvers::SolveOptions`]/[`crate::path::PathConfig`]
 //!   by [`api`]; responses are the same result objects the CLI writes
 //!   (including `certified_gap`/`kappa_final`), bit-for-bit.
+//! * **Queries** (`GET`/`POST /v1/query`, DESIGN.md §16) answer arbitrary
+//!   off-grid λ from a resident [`crate::path::PathIndex`] — certified by
+//!   the interpolation bound, usually without a single solver dot product.
 //! * **Datasets** stay resident in a keyed [`cache::DatasetCache`] — the
-//!   second request for a dataset pays zero parse cost.
+//!   second request for a dataset pays zero parse cost; warm-start query
+//!   indexes share the same keyed single-flight residency.
 //! * **Degradation** is structured, never a panic: malformed JSON → 400
 //!   with byte offset, oversized body → 413, full queue → 503 (with a
 //!   `Retry-After` hint), slow job → 504 with the in-flight work
@@ -255,9 +259,15 @@ fn respond(
 }
 
 /// Dispatch one request to its endpoint. Returns `(status, response body)`.
+/// The query string (everything past `?`) is split off before matching, so
+/// `GET /v1/query?reg=1.5` routes like `/v1/query`.
 fn route(shared: &Shared, req: &http::Request) -> (u16, crate::util::json::Json) {
     use crate::util::json::Json;
-    let result: Result<Json, ApiError> = match (req.method.as_str(), req.path.as_str()) {
+    let (path, query) = match req.path.split_once('?') {
+        Some((p, q)) => (p, q),
+        None => (req.path.as_str(), ""),
+    };
+    let result: Result<Json, ApiError> = match (req.method.as_str(), path) {
         ("GET", "/healthz") => Ok(Json::obj(vec![
             ("status", Json::Str("ok".into())),
             ("datasets", Json::Num(shared.cache.len() as f64)),
@@ -279,6 +289,23 @@ fn route(shared: &Shared, req: &http::Request) -> (u16, crate::util::json::Json)
                 })
             }))
         }),
+        ("POST", "/v1/query") => dispatch(shared, "query", &req.body, |body, allow| {
+            let parsed = api::parse_query(body, allow)?;
+            Ok(Box::new(move |cache: Arc<DatasetCache>, ctrl: &RunControl| {
+                api::run_query(&parsed, &cache, ctrl)
+            }))
+        }),
+        ("GET", "/v1/query") => {
+            // GET shares the POST validation path: the query string is
+            // decoded into a JSON body and dispatched identically
+            let body = query_body(query).dump();
+            dispatch(shared, "query", body.as_bytes(), |body, allow| {
+                let parsed = api::parse_query(body, allow)?;
+                Ok(Box::new(move |cache: Arc<DatasetCache>, ctrl: &RunControl| {
+                    api::run_query(&parsed, &cache, ctrl)
+                }))
+            })
+        }
         ("GET" | "POST", "/healthz" | "/v1/status" | "/v1/solve" | "/v1/path") => Err(ApiError::new(
             405,
             "method_not_allowed",
@@ -294,6 +321,69 @@ fn route(shared: &Shared, req: &http::Request) -> (u16, crate::util::json::Json)
         Ok(body) => (200, body),
         Err(e) => (e.status, e.envelope()),
     }
+}
+
+/// Decode a URL query string into the JSON object body the validation
+/// layer expects, so `GET /v1/query?reg=1.5&gap_tol=0.01` takes the same
+/// strict-parse path as its POST twin. Values that parse as numbers
+/// become JSON numbers, `true`/`false` become booleans, everything else
+/// stays a string; `+` and `%XX` escapes are decoded first.
+fn query_body(query: &str) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    let mut map = std::collections::BTreeMap::new();
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        let (k, v) = (url_decode(k), url_decode(v));
+        let val = match v.as_str() {
+            "true" => Json::Bool(true),
+            "false" => Json::Bool(false),
+            _ => match v.parse::<f64>() {
+                Ok(n) => Json::Num(n),
+                Err(_) => Json::Str(v),
+            },
+        };
+        map.insert(k, val);
+    }
+    Json::Obj(map)
+}
+
+/// Minimal percent-decoding: `+` → space, `%XX` → byte; a malformed
+/// escape is passed through literally rather than rejected (the strict
+/// field validation downstream turns garbage into a typed 400).
+fn url_decode(s: &str) -> String {
+    fn hex(b: u8) -> Option<u8> {
+        match b {
+            b'0'..=b'9' => Some(b - b'0'),
+            b'a'..=b'f' => Some(b - b'a' + 10),
+            b'A'..=b'F' => Some(b - b'A' + 10),
+            _ => None,
+        }
+    }
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'+' {
+            out.push(b' ');
+            i += 1;
+        } else if bytes[i] == b'%' && i + 2 < bytes.len() {
+            // need two hex digits after the '%'
+            match (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                (Some(h), Some(l)) => {
+                    out.push(h << 4 | l);
+                    i += 3;
+                }
+                _ => {
+                    out.push(b'%');
+                    i += 1;
+                }
+            }
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
 }
 
 /// Assemble the `GET /v1/status` body: queue + watchdog + cache +
@@ -347,6 +437,14 @@ fn status_json(shared: &Shared) -> crate::util::json::Json {
             Json::obj(vec![
                 ("written", Json::Num(written as f64)),
                 ("resumed", Json::Num(resumed as f64)),
+            ]),
+        ),
+        (
+            "query_index",
+            Json::obj(vec![
+                ("resident", Json::Num(shared.cache.resident_indexes() as f64)),
+                ("hits", Json::Num(shared.cache.query_hits() as f64)),
+                ("misses", Json::Num(shared.cache.query_misses() as f64)),
             ]),
         ),
     ])

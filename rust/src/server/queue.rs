@@ -171,6 +171,10 @@ impl JobQueue {
         shutdown: Option<Arc<AtomicBool>>,
         job: JobBody,
     ) -> Result<Json, ApiError> {
+        // the submission instant is the single clock the deadline and the
+        // caller's wait share: everything below (channel setup, enqueue,
+        // queue wait, the job itself) spends from this one budget
+        let submitted = Instant::now();
         let ctrl = RunControl::new();
         ctrl.set_deadline(timeout);
         if let Some(flag) = shutdown {
@@ -199,7 +203,12 @@ impl JobQueue {
                 return Err(ApiError::new(503, "shutting_down", "server is shutting down"))
             }
         }
-        match reply_rx.recv_timeout(timeout) {
+        // Wait only for what is LEFT of the end-to-end budget, not a fresh
+        // full window: the deadline was armed at `submitted`, so granting
+        // `recv_timeout` the whole `timeout` again would let a job that
+        // spent time queued (or a slow enqueue path) overstay its deadline
+        // by up to one extra timeout window before the 504 fires.
+        match reply_rx.recv_timeout(timeout.saturating_sub(submitted.elapsed())) {
             Ok(res) => res,
             Err(_) => {
                 // cancel so the worker abandons the job at its next tick
@@ -421,6 +430,56 @@ mod tests {
             )
             .unwrap_err();
         assert_eq!(e.status, 504, "queue wait counts against the deadline");
+        hold_tx.send(()).ok();
+        assert!(slow.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn queued_job_504_lands_on_schedule_not_a_window_late() {
+        // A job stuck behind a busy worker must get its 504 at the
+        // end-to-end deadline measured from SUBMISSION — the caller's wait
+        // draws on the same budget the deadline armed, so queue wait can
+        // never buy the reply a second full timeout window.
+        let q = Arc::new(JobQueue::start(1, 2));
+        let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+        let hold_rx = Arc::new(Mutex::new(hold_rx));
+        let slow = {
+            let q = Arc::clone(&q);
+            let hold_rx = Arc::clone(&hold_rx);
+            std::thread::spawn(move || {
+                q.run(
+                    Duration::from_secs(30),
+                    "slow",
+                    None,
+                    Box::new(move |_| {
+                        hold_rx.lock().unwrap().recv().ok();
+                        Ok(Json::Null)
+                    }),
+                )
+            })
+        };
+        // wait until the slow job occupies the single worker
+        let t0 = Instant::now();
+        while q.status().in_flight.is_empty() && t0.elapsed() < Duration::from_secs(3) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let timeout = Duration::from_millis(400);
+        let submitted = Instant::now();
+        let e = q
+            .run(timeout, "queued", None, ok_job(Json::Null))
+            .unwrap_err();
+        let elapsed = submitted.elapsed();
+        assert_eq!(e.status, 504);
+        // on schedule: at the deadline (±CI scheduling slack), and well
+        // inside the pre-fix worst case of two full windows
+        assert!(
+            elapsed >= timeout - Duration::from_millis(50),
+            "504 fired early: {elapsed:?}"
+        );
+        assert!(
+            elapsed < timeout + Duration::from_millis(350),
+            "504 landed late: {elapsed:?} for a {timeout:?} deadline"
+        );
         hold_tx.send(()).ok();
         assert!(slow.join().unwrap().is_ok());
     }

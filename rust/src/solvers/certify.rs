@@ -132,6 +132,66 @@ impl CertSchedule {
     }
 }
 
+/// A-priori interpolation bound for warm-start λ-query serving
+/// (DESIGN.md §16): the duality gap of the *rescaled* anchor iterate at a
+/// new radius `δ_q`, bounded **before** spending a single solver dot.
+///
+/// The anchor is a converged grid-point iterate `α` with
+/// * `l1 = ‖α‖₁` (its own radius after the §5 boundary rescale),
+/// * `s = ‖Xα‖²`, `f = (Xα)ᵀy` (the S/F invariants, tracked exactly),
+/// * `ginf = ‖∇f(α)‖∞` from a dedicated full-gradient certificate pass,
+/// * `sigma_inf = ‖Xᵀy‖∞` (free from the σ precompute).
+///
+/// The query answer is the §5 rescale `α_q = r·α` with `r = δ_q/l1`. The
+/// gradient of the rescaled iterate is affine in `r`:
+///
+/// ```text
+/// ∇f(rα) = Xᵀ(rXα − y) = r·Xᵀ(Xα − y) + (r − 1)·(−Xᵀy)·(−1)
+///        = r·∇f(α) + (r − 1)·Xᵀy
+/// ⇒ ‖∇f(rα)‖∞ ≤ r·ginf + |r − 1|·σ∞
+/// ```
+///
+/// and the `αᵀ∇f` term is **exact** from the S/F scaling laws
+/// (`S → r²S`, `F → rF`):
+///
+/// ```text
+/// (rα)ᵀ∇f(rα) = r²·αᵀXᵀXα − r·αᵀXᵀy = r²S − rF.
+/// ```
+///
+/// Together:
+///
+/// ```text
+/// g(rα; δ_q) = (rα)ᵀ∇f(rα) + δ_q·‖∇f(rα)‖∞
+///           ≤ (r²S − rF) + δ_q·(r·ginf + |r − 1|·σ∞).
+/// ```
+///
+/// At `r = 1` the bound collapses to the anchor's exact gap
+/// `(S − F) + δ·ginf`; it degrades linearly in `|δ_q − δ_grid|` through
+/// the `|r − 1|·σ∞` term, which is what makes densification worthwhile
+/// where queries cluster far from the grid. A zero anchor (`l1 ≤ 0`,
+/// where [`super::linesearch::FwState::rescale_to_radius`] is a no-op)
+/// answers with `α_q = 0`, whose gap is exactly `δ_q·‖∇f(0)‖∞ = δ_q·σ∞`.
+///
+/// The result is clamped to `≥ 0` ([`GapEnvelope::record`]'s convention);
+/// non-finite inputs propagate so a poisoned anchor can never certify.
+pub fn interpolation_bound(
+    delta_q: f64,
+    l1: f64,
+    s: f64,
+    f: f64,
+    ginf: f64,
+    sigma_inf: f64,
+) -> f64 {
+    if !(l1 > 0.0) {
+        // zero anchor: exact, not just a bound
+        return delta_q * sigma_inf;
+    }
+    let r = delta_q / l1;
+    let curvature = r * r * s - r * f;
+    let grad_inf = r * ginf + (r - 1.0).abs() * sigma_inf;
+    (curvature + delta_q * grad_inf).max(0.0)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +231,72 @@ mod tests {
         assert!(e.reached(Some(0.5)));
         assert!(!e.reached(Some(0.4)));
         assert!(!e.reached(None));
+    }
+
+    #[test]
+    fn interpolation_bound_reduces_to_exact_gap_at_anchor() {
+        // r = 1: bound = (S − F) + δ·ginf = αᵀ∇f + δ‖∇f‖∞ exactly
+        let (l1, s, f, ginf, sigma_inf) = (2.0, 3.0, 1.25, 0.5, 4.0);
+        let b = interpolation_bound(l1, l1, s, f, ginf, sigma_inf);
+        assert!((b - ((s - f) + l1 * ginf)).abs() < 1e-15, "{b}");
+    }
+
+    #[test]
+    fn interpolation_bound_zero_anchor_is_sigma_inf_scaled() {
+        // l1 ≤ 0 ⇒ the query answer is α = 0 with exact gap δ_q·σ∞
+        assert_eq!(interpolation_bound(0.7, 0.0, 0.0, 0.0, 0.0, 3.0), 0.7 * 3.0);
+        assert_eq!(interpolation_bound(0.7, -1.0, 1.0, 1.0, 1.0, 3.0), 0.7 * 3.0);
+    }
+
+    #[test]
+    fn interpolation_bound_dominates_direct_gap_on_a_dense_problem() {
+        use crate::linalg::{ColumnCache, DenseMatrix, Design};
+        use crate::solvers::linesearch::FwState;
+        use crate::solvers::Problem;
+        use crate::util::rng::Xoshiro256;
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let (m, p) = (20, 12);
+        let x = DenseMatrix::from_fn(m, p, |_, _| rng.gaussian());
+        let y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+        let x = Design::dense(x);
+        let cache = ColumnCache::build(&x, &y);
+        let prob = Problem::new(&x, &y, &cache);
+        let sigma_inf = cache.sigma.iter().fold(0.0f64, |a, &v| a.max(v.abs()));
+
+        // anchor: a few FW steps, then measure (l1, S, F, ginf) exactly
+        let mut st = FwState::zero(p, m);
+        for _ in 0..25 {
+            let (mut bi, mut bg, mut ba) = (0usize, 0.0f64, -1.0f64);
+            for i in 0..p {
+                let g = st.grad_coord(&prob, i);
+                if g.abs() > ba {
+                    ba = g.abs();
+                    bg = g;
+                    bi = i;
+                }
+            }
+            st.step(&prob, 1.5, bi, bg);
+        }
+        let mut grad = vec![0.0; p];
+        let mut scratch = crate::linalg::KernelScratch::new();
+        st.grad_multi_all(&prob, &mut grad, &mut scratch);
+        let ginf = grad.iter().fold(0.0f64, |a, &g| a.max(g.abs()));
+        let (l1, s, f) = (st.l1_norm(), st.s, st.f);
+
+        // for a spread of query radii, the claimed bound must dominate
+        // the true gap of the rescaled iterate (measured directly)
+        for &dq in &[0.3, 0.9, 1.2, 1.5, 1.9, 3.0] {
+            let bound = interpolation_bound(dq, l1, s, f, ginf, sigma_inf);
+            let mut stq = FwState::from_alpha(&prob, &st.alpha());
+            stq.rescale_to_radius(dq);
+            let mut gq = vec![0.0; p];
+            stq.grad_multi_all(&prob, &mut gq, &mut scratch);
+            let true_gap = stq.duality_gap(dq, &gq);
+            assert!(
+                true_gap <= bound * (1.0 + 1e-9) + 1e-12,
+                "δ_q={dq}: true gap {true_gap} exceeds bound {bound}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Property tests for the warm-start λ-query layer (DESIGN.md §16).
+//!
+//! Two contracts hold the serving tier together:
+//!
+//! 1. **Soundness of the a-priori interpolation bound** — a zero-dot
+//!    answer's *true* duality gap (measured by a dedicated certificate
+//!    pass over the materialized iterate) never exceeds the bound the
+//!    index claimed before touching the solver. If this breaks, the
+//!    server hands out certificates it cannot honor.
+//! 2. **Bit-identity of grid hits** — querying a stored grid radius
+//!    returns exactly the point a direct [`run_path`] produces, to the
+//!    bit, for zero solver dots.
+//!
+//! Both run over random Gaussian designs via the in-tree `testing::Prop`
+//! harness (seeded, reproducible with `SFW_PROP_SEED`).
+
+use sfw_lasso::data::Dataset;
+use sfw_lasso::linalg::{standardize, ColumnCache, DenseMatrix, Design, KernelScratch};
+use sfw_lasso::path::{run_path, PathConfig, PathIndex, QuerySource, SolverKind};
+use sfw_lasso::screening::ScreenMode;
+use sfw_lasso::solvers::linesearch::FwState;
+use sfw_lasso::solvers::{Problem, SolveOptions};
+use sfw_lasso::testing::{gen, Prop};
+use sfw_lasso::util::rng::Xoshiro256;
+use std::sync::Arc;
+
+/// A standardized random dense problem wrapped as a [`Dataset`] (the
+/// index builds from datasets, not raw designs).
+fn random_dataset(rng: &mut Xoshiro256, m: usize, p: usize) -> Dataset {
+    let mut x = Design::dense(DenseMatrix::from_fn(m, p, |_, _| rng.gaussian()));
+    let mut y: Vec<f64> = (0..m).map(|_| rng.gaussian() * 2.0).collect();
+    let st = standardize(&mut x, &mut y);
+    Dataset {
+        name: "prop-random".to_string(),
+        x,
+        y,
+        x_test: None,
+        y_test: None,
+        standardization: st,
+        ground_truth: None,
+    }
+}
+
+fn cfg(n_points: usize, delta_max: f64) -> PathConfig {
+    PathConfig {
+        n_points,
+        opts: SolveOptions { eps: 1e-3, max_iters: 2_000, ..Default::default() },
+        delta_max: Some(delta_max),
+        track: Vec::new(),
+        screen: ScreenMode::Off,
+    }
+}
+
+#[test]
+fn interpolation_bound_is_sound_for_off_grid_queries() {
+    Prop::new("zero-dot answer's true duality gap ≤ the claimed a-priori bound")
+        .cases(25)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 10, 30);
+            let p = gen::usize_range(rng, 5, 16);
+            let ds = Arc::new(random_dataset(rng, m, p));
+            let delta_max = rng.uniform(1.0, 4.0);
+            let n_points = gen::usize_range(rng, 3, 7);
+            let index = PathIndex::build(Arc::clone(&ds), &cfg(n_points, delta_max), 0, None)
+                .expect("index build");
+
+            // the verification pass is independent of the index: rebuild
+            // the iterate from its raw coefficients and measure the gap
+            // with a fresh gradient sweep
+            let cache = ColumnCache::build(&ds.x, &ds.y);
+            let prob = Problem::new(&ds.x, &ds.y, &cache);
+            let mut scratch = KernelScratch::new();
+            for _ in 0..6 {
+                // probe inside, between, below, and beyond the grid
+                let dq = rng.uniform(delta_max / 150.0, delta_max * 1.2);
+                let bound = index.apriori_bound(dq);
+                assert!(bound.is_finite() && bound >= 0.0, "bound {bound} at δ={dq}");
+                let alpha = index.zero_dot_alpha(dq).expect("materialize");
+                let st = FwState::from_alpha(&prob, &alpha);
+                let mut grad = vec![0.0; p];
+                st.grad_multi_all(&prob, &mut grad, &mut scratch);
+                let gap = st.duality_gap(dq, &grad);
+                // FP slack only: the bound must dominate up to rounding in
+                // the independent re-measurement path
+                assert!(
+                    gap <= bound * (1.0 + 1e-9) + 1e-12,
+                    "true gap {gap} exceeds claimed bound {bound} at δ={dq} (m={m} p={p})"
+                );
+            }
+        });
+}
+
+#[test]
+fn grid_queries_are_bit_identical_to_the_stored_path() {
+    Prop::new("query(grid λ) == run_path(FwDet) point, bit for bit, zero dots")
+        .cases(10)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 10, 24);
+            let p = gen::usize_range(rng, 5, 12);
+            let ds = Arc::new(random_dataset(rng, m, p));
+            let c = cfg(5, rng.uniform(1.0, 3.0));
+            let pr = run_path(&ds, SolverKind::FwDet, &c);
+            let mut index =
+                PathIndex::build(Arc::clone(&ds), &c, 4, None).expect("index build");
+            assert_eq!(index.len(), pr.points.len());
+            for expect in &pr.points {
+                let ans = index.query(expect.reg, 1e-12, None).expect("grid query");
+                assert!(
+                    matches!(ans.source, QuerySource::Grid),
+                    "grid radius must be served from storage, got {:?}",
+                    ans.source
+                );
+                assert_eq!(ans.dots, 0, "grid hits are free");
+                assert_eq!(ans.point.reg.to_bits(), expect.reg.to_bits());
+                assert_eq!(ans.point.l1_norm.to_bits(), expect.l1_norm.to_bits());
+                assert_eq!(ans.point.train_mse.to_bits(), expect.train_mse.to_bits());
+                assert_eq!(
+                    ans.point.test_mse.map(f64::to_bits),
+                    expect.test_mse.map(f64::to_bits)
+                );
+                assert_eq!(ans.point.iters, expect.iters);
+                assert_eq!(ans.point.dots, expect.dots);
+                assert_eq!(ans.point.active, expect.active);
+                assert_eq!(ans.point.converged, expect.converged);
+            }
+        });
+}
+
+#[test]
+fn refinement_certificate_never_exceeds_the_apriori_bound() {
+    Prop::new("refined gap ≤ pre-refinement bound; the insert makes the repeat free")
+        .cases(8)
+        .run(|rng| {
+            let m = gen::usize_range(rng, 12, 24);
+            let p = gen::usize_range(rng, 6, 12);
+            let ds = Arc::new(random_dataset(rng, m, p));
+            let delta_max = rng.uniform(1.5, 3.0);
+            let mut index = PathIndex::build(Arc::clone(&ds), &cfg(4, delta_max), 8, None)
+                .expect("index build");
+            let dq = rng.uniform(delta_max * 0.2, delta_max * 0.8);
+            let before = index.apriori_bound(dq);
+            if before <= 1e-12 {
+                return; // anchor already exact here: nothing to refine
+            }
+            // a tolerance below the bound forces a tier-3 refinement at dq
+            let tol = (before * 1e-6).max(1e-12);
+            let ans = index.query(dq, tol, None).expect("refined query");
+            assert!(matches!(ans.source, QuerySource::Refined), "got {:?}", ans.source);
+            // the solve warm-starts from the bound's own anchor, so its
+            // first-iteration gap is the rescaled anchor's true gap ≤ the
+            // bound, and the certificate envelope only tightens from there
+            let gap = ans.point.certified_gap.expect("refined answers carry a gap");
+            assert!(
+                gap <= before * (1.0 + 1e-9) + 1e-12,
+                "measured gap {gap} exceeds the pre-refinement bound {before} at δ={dq}"
+            );
+            if !ans.inserted {
+                return; // non-finite cert after the solve: nothing more to check
+            }
+            // densified: the same radius is now a zero-cost grid hit with
+            // the identical stored point
+            let again = index.query(dq, tol, None).expect("repeat query");
+            assert!(matches!(again.source, QuerySource::Grid), "got {:?}", again.source);
+            assert_eq!(again.dots, 0);
+            assert_eq!(
+                again.point.certified_gap.map(f64::to_bits),
+                ans.point.certified_gap.map(f64::to_bits)
+            );
+        });
+}

@@ -345,6 +345,39 @@ fn malformed_request_line_gets_400() {
 }
 
 #[test]
+fn conflicting_duplicate_content_lengths_rejected_over_the_wire() {
+    let srv = test_server();
+    let addr = srv.addr();
+    // the request-smuggling shape: two Content-Length headers that
+    // disagree about where the body ends must die with a 400, never be
+    // framed by silently picking one of them
+    let raw = b"POST /v1/solve HTTP/1.1\r\nHost: t\r\nContent-Length: 2\r\n\
+                Content-Length: 9\r\nConnection: close\r\n\r\n{}junk...";
+    let r = send_request(addr, raw);
+    assert_eq!(r.status, 400, "body: {}", r.body);
+    assert!(
+        r.json()
+            .get("error")
+            .get("message")
+            .as_str()
+            .is_some_and(|m| m.contains("Content-Length")),
+        "error must name the conflicting header: {}",
+        r.body
+    );
+    // duplicates that agree collapse to the shared value (RFC 9112 §6.3):
+    // the request frames cleanly and reaches routing (405 on /healthz)
+    let raw = b"POST /healthz HTTP/1.1\r\nHost: t\r\nContent-Length: 2\r\n\
+                Content-Length: 2\r\nConnection: close\r\n\r\n{}";
+    let r = send_request(addr, raw);
+    assert_eq!(r.status, 405, "body: {}", r.body);
+    // and the server shrugged the smuggle attempt off
+    let r = get(addr, "/healthz");
+    assert_eq!(r.status, 200);
+    srv.shutdown();
+    srv.wait();
+}
+
+#[test]
 fn libsvm_specs_rejected_without_allow_files() {
     let srv = test_server();
     let r = post(srv.addr(), "/v1/solve", r#"{"dataset": "libsvm:/etc/passwd"}"#);
@@ -652,6 +685,133 @@ fn deadline_expiry_yields_504_and_retains_partial_checkpoint() {
     srv.shutdown();
     srv.wait();
     std::fs::remove_file(&ckpt).ok();
+}
+
+// ------------------------------------------------------ warm-start λ-queries
+
+/// Shared query-endpoint coordinates: a small FW-det index whose grid is
+/// pinned by `delta_max` (no CD planning run), cheap enough to build
+/// inside the request deadline.
+const QUERY_DS: &str = r#""dataset": "synth-10000-32", "scale": 0.005, "seed": 3,
+                           "points": 6, "eps": 1e-3, "max_iters": 3000,
+                           "delta_max": 3.0"#;
+
+#[test]
+fn query_grid_hit_is_bit_identical_to_the_path_response() {
+    let srv = test_server();
+    let addr = srv.addr();
+    // reference: the same grid served by the path endpoint
+    let path = post(
+        addr,
+        "/v1/path",
+        r#"{"dataset": "synth-10000-32", "scale": 0.005, "seed": 3,
+            "solver": "fw", "points": 6, "eps": 1e-3, "max_iters": 3000,
+            "delta_max": 3.0}"#,
+    );
+    assert_eq!(path.status, 200, "body: {}", path.body);
+    let points = path.json().get("results").as_arr().expect("results")[0]
+        .get("points")
+        .as_arr()
+        .expect("points array")
+        .to_vec();
+    // query the exact stored grid point: the answer must be the stored
+    // point verbatim — same JSON text ⇔ same f64 bits — at zero cost
+    let target = &points[3];
+    let body = format!(r#"{{{QUERY_DS}, "reg": {}}}"#, target.get("reg").dump());
+    let r = post(addr, "/v1/query", &body);
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    let out = r.json();
+    assert_eq!(out.get("kind").as_str(), Some("query"));
+    assert_eq!(out.get("source").as_str(), Some("grid"));
+    assert_eq!(out.get("dots").as_f64(), Some(0.0));
+    assert_eq!(
+        out.get("point").dump(),
+        target.dump(),
+        "a grid hit must serve the stored path point bit-for-bit"
+    );
+    srv.shutdown();
+    srv.wait();
+}
+
+#[test]
+fn query_off_grid_is_certified_within_the_apriori_bound() {
+    let srv = test_server();
+    let addr = srv.addr();
+    // land midway (geometric mean) between grid points 2 and 3 of the
+    // 6-point log grid over [0.03, 3]: reg = 0.03 * 100^((2.5)/5)
+    let reg = 0.03f64 * 100f64.powf(2.5 / 5.0);
+    // a generous tolerance: answered by rescaling a certified anchor,
+    // zero solver dots, certificate = the interpolation bound itself
+    let body = format!(r#"{{{QUERY_DS}, "reg": {reg}, "gap_tol": 1e9}}"#);
+    let r = post(addr, "/v1/query", &body);
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    let out = r.json();
+    assert_eq!(out.get("source").as_str(), Some("zero_dot"), "body: {}", r.body);
+    assert_eq!(out.get("dots").as_f64(), Some(0.0));
+    let bound = out.get("bound").as_f64().expect("bound");
+    assert_eq!(
+        out.get("point").get("certified_gap").as_f64().unwrap().to_bits(),
+        bound.to_bits(),
+        "zero-dot answers are certified by the bound itself"
+    );
+    // a tight tolerance: the same λ must now refine (solver dots > 0)
+    // and come back with a *measured* certificate within the bound
+    let body = format!(r#"{{{QUERY_DS}, "reg": {reg}, "gap_tol": 1e-5}}"#);
+    let r = post(addr, "/v1/query", &body);
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    let out = r.json();
+    assert_eq!(out.get("source").as_str(), Some("refined"));
+    assert!(out.get("dots").as_f64().unwrap() > 0.0);
+    let gap = out.get("point").get("certified_gap").as_f64().expect("gap");
+    let bound = out.get("bound").as_f64().expect("bound");
+    assert!(
+        gap <= bound * (1.0 + 1e-9) + 1e-12,
+        "measured gap {gap} must not exceed the a-priori bound {bound}"
+    );
+    assert_eq!(out.get("inserted").as_bool(), Some(true));
+    // densified: the same tight query is now a free grid hit
+    let r = post(addr, "/v1/query", &body);
+    assert_eq!(r.status, 200);
+    let again = r.json();
+    assert_eq!(again.get("source").as_str(), Some("grid"));
+    assert_eq!(again.get("dots").as_f64(), Some(0.0));
+    assert_eq!(again.get("point").dump(), out.get("point").dump());
+    srv.shutdown();
+    srv.wait();
+}
+
+#[test]
+fn query_get_form_and_status_gauges() {
+    let srv = test_server();
+    let addr = srv.addr();
+    let reg = 0.03f64 * 100f64.powf(2.5 / 5.0);
+    // GET twin of the POST body: query-string fields, same validation
+    let path = format!(
+        "/v1/query?dataset=synth-10000-32&scale=0.005&seed=3&points=6&eps=1e-3\
+         &max_iters=3000&delta_max=3.0&reg={reg}&gap_tol=1e9"
+    );
+    let r = get(addr, &path);
+    assert_eq!(r.status, 200, "body: {}", r.body);
+    assert_eq!(r.json().get("source").as_str(), Some("zero_dot"));
+    assert_eq!(r.json().get("cached").as_bool(), Some(false));
+    // second query reuses the resident index
+    let r = get(addr, &path);
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json().get("cached").as_bool(), Some(true));
+    // the status endpoint exposes index residency and traffic
+    let s = get(addr, "/v1/status").json();
+    assert_eq!(s.get("query_index").get("resident").as_f64(), Some(1.0));
+    assert_eq!(s.get("query_index").get("hits").as_f64(), Some(2.0));
+    assert_eq!(s.get("query_index").get("misses").as_f64(), Some(0.0));
+    // bad inputs keep the strict-validation contract
+    let r = get(addr, "/v1/query?reg=0");
+    assert_eq!(r.status, 400, "body: {}", r.body);
+    let r = get(addr, "/v1/query?points=6");
+    assert_eq!(r.status, 400, "reg is required; body: {}", r.body);
+    let r = post(addr, "/v1/query", r#"{"reg": 1.0, "lambda": 2}"#);
+    assert_eq!(r.status, 400, "unknown fields stay fatal; body: {}", r.body);
+    srv.shutdown();
+    srv.wait();
 }
 
 #[test]
